@@ -1,0 +1,50 @@
+//! Pareto explorer: the Fig. 5 design-space sweep over TP-ISA
+//! configurations (datapath width × MAC option × precision), printing
+//! the area/speedup scatter with the Pareto front highlighted and an
+//! ASCII rendering of the curve.
+//!
+//! Run: `cargo run --release --example pareto_explorer`
+//! Requires `make artifacts`.
+
+use anyhow::Result;
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::pareto::pareto_flags;
+use printed_bespoke::dse::report;
+
+fn main() -> Result<()> {
+    let ctx = EvalContext::load(6)?;
+    let fig5 = report::fig5(&ctx)?;
+    println!("{}", fig5.text);
+
+    // ASCII scatter: x = area (log-ish bins), y = speedup.
+    let points = &fig5.points;
+    let pareto = pareto_flags(
+        &points.iter().map(|p| (p.area_mm2, p.speedup_pct)).collect::<Vec<_>>(),
+    );
+    let (w, h) = (72usize, 20usize);
+    let max_area = points.iter().map(|p| p.area_mm2).fold(0.0, f64::max) * 1.05;
+    let mut grid = vec![vec![b' '; w]; h];
+    for (i, p) in points.iter().enumerate() {
+        let x = ((p.area_mm2 / max_area) * (w - 1) as f64) as usize;
+        let y = h - 1 - ((p.speedup_pct.max(0.0) / 100.0) * (h - 1) as f64) as usize;
+        grid[y][x] = if pareto[i] { b'*' } else { b'o' };
+    }
+    println!("speedup%                  (* = Pareto, o = dominated)");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            "100 |"
+        } else if i == h - 1 {
+            "  0 |"
+        } else {
+            "    |"
+        };
+        println!("{label}{}", String::from_utf8_lossy(row));
+    }
+    println!("    +{}", "-".repeat(w));
+    println!("     0{}area [mm²]{:>40.0}", " ".repeat(20), max_area);
+
+    // Table II call-out.
+    let t2 = report::table2(&ctx)?;
+    println!("\n{}", t2.text);
+    Ok(())
+}

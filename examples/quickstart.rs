@@ -1,0 +1,59 @@
+//! Quickstart: the bespoke design flow end to end on the public API.
+//!
+//! 1. Synthesise the baseline Zero-Riscy in the EGFET printed library.
+//! 2. Profile the §III-A workload suite on the ISS.
+//! 3. Apply the bespoke reduction and re-synthesise each Table-I variant.
+//! 4. Print the resulting area/power trade-offs.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (No artifacts needed — this example exercises only the hardware
+//! model, ISS, and reduction passes.)
+
+use anyhow::Result;
+use printed_bespoke::bespoke::profile::profile_suite;
+use printed_bespoke::bespoke::reduction::table1_variants;
+use printed_bespoke::hw::egfet::egfet;
+use printed_bespoke::hw::synth::{synthesize, zero_riscy};
+
+fn main() -> Result<()> {
+    let tech = egfet();
+
+    // 1. Baseline synthesis (paper Fig. 1: 67.53 cm², 291.21 mW).
+    let base = synthesize(&zero_riscy(), &tech);
+    println!(
+        "baseline {}: {:.2} cm², {:.2} mW, {:.0} Hz",
+        base.name,
+        base.area_cm2(),
+        base.power_mw,
+        base.fmax_hz
+    );
+
+    // 2. Profile the workload suite (MLP, decision tree, mul/div,
+    //    insertion sort — §III-A).
+    let u = profile_suite()?;
+    println!(
+        "\nprofiled {:?}:\n  {} instructions, {} cycles",
+        u.workloads, u.profile.instructions, u.profile.cycles
+    );
+    println!(
+        "  registers used: {}   PC bits: {}   BAR bits: {}",
+        u.regs_needed, u.pc_bits_needed, u.bar_bits_needed
+    );
+    println!("  unused instructions: {}", u.unused_instructions.join(" "));
+
+    // 3. Bespoke variants (Table I rows) re-synthesised.
+    println!("\nbespoke variants (gains vs baseline):");
+    for (name, spec) in table1_variants(&u) {
+        let r = synthesize(&spec, &tech);
+        println!(
+            "  {:<14} {:.2} cm² ({:+5.1}%)   {:.2} mW ({:+5.1}%)",
+            name,
+            r.area_cm2(),
+            (r.area_mm2 / base.area_mm2 - 1.0) * 100.0,
+            r.power_mw,
+            (r.power_mw / base.power_mw - 1.0) * 100.0,
+        );
+    }
+    println!("\n(negative = smaller/lower than the baseline core)");
+    Ok(())
+}

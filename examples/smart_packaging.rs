@@ -1,0 +1,107 @@
+//! End-to-end driver: a smart-packaging line (the paper's motivating
+//! FMCG scenario, §I) served by the full three-layer stack.
+//!
+//! Every layer composes here:
+//!   L1  the Pallas SIMD-MAC kernel, baked into the HLO artifacts;
+//!   L2  the JAX-trained quantised models (AOT, `make artifacts`);
+//!   L3  the rust coordinator: router + dynamic batcher + PJRT runtime.
+//!
+//! The "line" streams sensor readings (test-set vectors) from six
+//! product stations — each mapped to one of the paper's six models —
+//! through the coordinator as single-sample requests.  We report
+//! per-station accuracy, end-to-end latency percentiles and throughput,
+//! and close with a bit-exactness crosscheck of the serving path
+//! against the Zero-Riscy ISS running the bespoke-core programs.
+//!
+//! Run: `cargo run --release --example smart_packaging -- [--requests N]`
+//! Requires `make artifacts`.  Results are recorded in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use printed_bespoke::coordinator::router::Key;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::util::cli::Args;
+use printed_bespoke::util::stats;
+
+const PRECISION: u32 = 8; // the paper's "suitable compromise" (§IV-B)
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let requests: usize = args.parse_or("requests", 1200)?;
+    let batch: usize = args.parse_or("batch", 64)?;
+    args.finish()?;
+
+    let svc = Service::start(ServiceConfig { max_batch: batch, linger_ms: 2 })?;
+    println!(
+        "smart-packaging line: {} stations, p{PRECISION} bespoke cores, batch {batch}",
+        svc.models.len()
+    );
+
+    // Station data = each model's test set.
+    let stations: Vec<Dataset> = svc
+        .models
+        .iter()
+        .map(|m| Dataset::load(svc.manifest.data_dir(), &m.dataset, "test"))
+        .collect::<Result<_>>()?;
+
+    // Warm up (compile every station executable once).
+    for (m, ds) in svc.models.iter().zip(&stations) {
+        svc.submit(Key::precision(&m.name, PRECISION), ds.x[0].clone())?
+            .recv()
+            .context("warmup")?
+            .map_err(|e| anyhow!(e))?;
+    }
+
+    // Stream the line: round-robin stations, single-sample requests.
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let s = i % stations.len();
+        let idx = (i / stations.len()) % stations[s].len();
+        let key = Key::precision(&svc.models[s].name, PRECISION);
+        pending.push((s, idx, Instant::now(), svc.submit(key, stations[s].x[idx].clone())?));
+    }
+    let mut lat_ms = Vec::with_capacity(requests);
+    let mut hits = vec![0usize; stations.len()];
+    let mut counts = vec![0usize; stations.len()];
+    for (s, idx, t, rx) in pending {
+        let scores = rx.recv().context("reply")?.map_err(|e| anyhow!(e))?;
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        let pred = svc.models[s].predict(&scores);
+        counts[s] += 1;
+        if pred == stations[s].y[idx] {
+            hits[s] += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nper-station accuracy (p{PRECISION} quantised serving path):");
+    for (s, m) in svc.models.iter().enumerate() {
+        println!(
+            "  {:<18} {:>6.2}%  ({} readings)",
+            m.name,
+            100.0 * hits[s] as f64 / counts[s] as f64,
+            counts[s]
+        );
+    }
+    let l = stats::summarize(&lat_ms);
+    println!(
+        "\nline throughput: {:.0} readings/s  ({} readings in {:.3}s)",
+        requests as f64 / wall,
+        requests,
+        wall
+    );
+    println!(
+        "end-to-end latency: p50 {:.2} ms  p95 {:.2} ms  p99 {:.2} ms  max {:.2} ms",
+        l.p50, l.p95, l.p99, l.max
+    );
+    println!("coordinator: {}", svc.metrics.lock().unwrap().summary());
+
+    // Cross-check the serving path against the bespoke-core ISS.
+    println!("\ncrosscheck (PJRT vs rust reference vs Zero-Riscy ISS):");
+    let report = svc.crosscheck(4)?;
+    println!("{}", report.lines().last().unwrap_or(""));
+    Ok(())
+}

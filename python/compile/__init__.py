@@ -1,0 +1,9 @@
+"""Build-time Python package (L1 + L2).  Never imported at runtime.
+
+x64 is enabled globally: the n=32 precision configuration of the SIMD MAC
+unit needs an exact int64 accumulator model (see compile.quant).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

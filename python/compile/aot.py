@@ -1,0 +1,177 @@
+"""AOT pipeline: datasets -> trained weights -> HLO-text artifacts.
+
+Runs ONCE at build time (`make artifacts`); the rust binary is then fully
+self-contained.  Emits:
+
+    artifacts/data/<ds>_{train,test}.csv      datasets for the rust layer
+    artifacts/weights/<model>.json            weights + calibration + per-
+                                              precision quantised tensors
+    artifacts/hlo/<model>_float.hlo.txt       f32 reference forward
+    artifacts/hlo/<model>_p{32,16,8,4}.hlo.txt  quantised forward (Pallas
+                                              SIMD-MAC kernel inside)
+    artifacts/hlo/simd_mac_unit_p{n}.hlo.txt  packed word-level MAC unit
+                                              (runtime unit-test artifacts)
+    artifacts/manifest.json                   index + python-side accuracy
+
+HLO *text* is the interchange format, not serialised protos: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets as dsets
+from . import quant, train
+from .model import Model, PRECISIONS, accuracy, float_forward, quantized_forward, to_json_dict
+
+BATCH = 256  # fixed batch dim of every model executable; rust pads chunks
+MAC_UNIT_WORDS = 64  # stream length of the packed-MAC unit-test artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path).
+
+    GOTCHA: the default printer elides constants above ~10 elements as
+    ``constant({...})`` — which the consumer-side text parser silently
+    turns into zeros, wiping the baked-in model weights.  Print with
+    ``print_large_constants`` so the artifact is self-contained.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # Modern metadata attributes (source_end_line, ...) are rejected by
+    # the consumer-side (xla_extension 0.5.1) HLO text parser.
+    opts.print_metadata = False
+    text = comp.as_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer still eliding constants"
+    return text
+
+
+def lower_model(model: Model, precision: int | None) -> str:
+    """Lower one forward variant at the fixed batch shape to HLO text."""
+    k = model.arch[0]
+    spec = jax.ShapeDtypeStruct((BATCH, k), jnp.float32)
+    if precision is None:
+        fn = lambda x: (float_forward(model, x),)
+    else:
+        fn = lambda x: (quantized_forward(model, x, precision),)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_mac_unit(n: int) -> str:
+    """Lower the packed word-level SIMD MAC kernel (hardware-faithful)."""
+    from .kernels import simd_mac
+
+    spec = jax.ShapeDtypeStruct((MAC_UNIT_WORDS,), jnp.int32)
+    fn = lambda a, b: (simd_mac.packed_simd_mac(a, b, n),)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def quantized_layer_export(model: Model, n: int) -> list[dict]:
+    """Integer weight/bias tensors + formats at precision n — baked into
+    the weights JSON so the rust layer shares the exact same numbers."""
+    out = []
+    for layer, lq in zip(model.layers, model.layer_quants(n)):
+        qw = quant.quantize(layer.w, lq.fw, lq.n)
+        qb = quant.quantize(layer.b, lq.fx + lq.fw, 32 if n <= 16 else 64)
+        out.append(
+            {
+                "fx": lq.fx,
+                "fw": lq.fw,
+                "fy": lq.fy,
+                "shift": lq.shift,
+                "qw": [[int(v) for v in row] for row in qw],
+                "qb": [int(v) for v in qb],
+            }
+        )
+    return out
+
+
+def eval_quantized(model: Model, ds: dsets.Dataset, n: int) -> float:
+    """Python-side quantised accuracy (jnp oracle path) — recorded in the
+    manifest and cross-checked by the rust coordinator."""
+    scores = np.asarray(
+        quantized_forward(model, jnp.asarray(ds.x_test), n, use_pallas=False)
+    )
+    return accuracy(model, scores, ds.y_test)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    for sub in ("data", "weights", "hlo"):
+        os.makedirs(os.path.join(out, sub), exist_ok=True)
+
+    print("[aot] generating datasets")
+    data = dsets.generate_all()
+    for ds in data.values():
+        dsets.export_csv(ds, os.path.join(out, "data"))
+
+    print("[aot] training 6 models (JAX)")
+    models = train.train_all(data)
+
+    manifest: dict = {"batch": BATCH, "precisions": list(PRECISIONS), "models": []}
+
+    for model in models:
+        ds = data[model.dataset]
+        entry = {
+            "name": model.name,
+            "dataset": model.dataset,
+            "head": model.head,
+            "arch": model.arch,
+            "n_classes": model.n_classes,
+            "label_offset": model.label_offset,
+            "n_test": int(len(ds.y_test)),
+            "float_accuracy": model.float_accuracy,
+            "weights": f"weights/{model.name}.json",
+            "hlo": {"float": f"hlo/{model.name}_float.hlo.txt"},
+            "quant_accuracy": {},
+        }
+
+        wj = to_json_dict(model)
+        wj["quantized"] = {str(n): quantized_layer_export(model, n) for n in PRECISIONS}
+        with open(os.path.join(out, entry["weights"]), "w") as f:
+            json.dump(wj, f)
+
+        print(f"[aot] {model.name}: float acc {model.float_accuracy:.4f}; lowering")
+        with open(os.path.join(out, entry["hlo"]["float"]), "w") as f:
+            f.write(lower_model(model, None))
+        for n in PRECISIONS:
+            acc = eval_quantized(model, ds, n)
+            entry["quant_accuracy"][str(n)] = acc
+            rel = f"hlo/{model.name}_p{n}.hlo.txt"
+            entry["hlo"][f"p{n}"] = rel
+            with open(os.path.join(out, rel), "w") as f:
+                f.write(lower_model(model, n))
+            print(f"[aot]   p{n}: acc {acc:.4f}")
+        manifest["models"].append(entry)
+
+    print("[aot] lowering packed SIMD MAC unit kernels")
+    manifest["mac_units"] = {}
+    for n in PRECISIONS:
+        rel = f"hlo/simd_mac_unit_p{n}.hlo.txt"
+        manifest["mac_units"][str(n)] = {"path": rel, "words": MAC_UNIT_WORDS}
+        with open(os.path.join(out, rel), "w") as f:
+            f.write(lower_mac_unit(n))
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

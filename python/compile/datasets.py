@@ -1,0 +1,193 @@
+"""Synthetic stand-ins for the UCI datasets used by the paper.
+
+The paper trains on Cardiotocography, RedWine and WhiteWine from the UCI
+repository.  This image has no network access, so we generate deterministic
+synthetic datasets with the *same shapes and statistical regime* as the
+real ones (feature count, class count, row count, [0,1] normalised
+features, separable-but-noisy class structure).  DESIGN.md documents the
+substitution; the paper's accuracy-loss-vs-precision curves depend on the
+feature scale and model capacity, both of which are preserved.
+
+All generation is NumPy with fixed seeds so `make artifacts` is
+reproducible bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Dataset specs (mirroring the UCI originals)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    """Static description of one dataset."""
+
+    name: str
+    n_features: int
+    n_rows: int
+    task: str  # "classification" | "regression"
+    n_classes: int  # classes for classification; distinct quality levels for regression
+    label_offset: int  # regression: first quality level (e.g. wine quality 3)
+    seed: int
+    class_sep: float  # distance between class centroids (pre-normalisation)
+    noise: float  # within-class standard deviation
+
+
+# The three datasets the paper evaluates on.  Row/feature/class counts match
+# the UCI originals (Cardiotocography NSP 3-class, wine quality levels).
+SPECS: dict[str, DatasetSpec] = {
+    "cardio": DatasetSpec(
+        name="cardio",
+        n_features=21,
+        n_rows=2126,
+        task="classification",
+        n_classes=3,
+        label_offset=0,
+        seed=0xC0FFEE,
+        class_sep=0.55,
+        noise=1.2,
+    ),
+    "redwine": DatasetSpec(
+        name="redwine",
+        n_features=11,
+        n_rows=1599,
+        task="regression",
+        n_classes=6,  # quality 3..8
+        label_offset=3,
+        seed=0x7ED,
+        class_sep=1.3,
+        noise=1.0,
+    ),
+    "whitewine": DatasetSpec(
+        name="whitewine",
+        n_features=11,
+        n_rows=4898,
+        task="regression",
+        n_classes=7,  # quality 3..9
+        label_offset=3,
+        seed=0x3417E,
+        class_sep=1.3,
+        noise=1.0,
+    ),
+}
+
+TRAIN_FRACTION = 0.7  # 70/30 split, as in the paper
+
+
+@dataclass
+class Dataset:
+    """A generated dataset, already normalised and split."""
+
+    spec: DatasetSpec
+    x_train: np.ndarray = field(repr=False)
+    y_train: np.ndarray = field(repr=False)
+    x_test: np.ndarray = field(repr=False)
+    y_test: np.ndarray = field(repr=False)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+# ---------------------------------------------------------------------------
+# Generation
+# ---------------------------------------------------------------------------
+
+
+def _class_counts(spec: DatasetSpec, rng: np.random.Generator) -> np.ndarray:
+    """Imbalanced class sizes (UCI cardio/wine are heavily imbalanced)."""
+    if spec.task == "classification":
+        # Cardiotocography NSP: roughly 78/14/8.
+        props = np.array([0.78, 0.14, 0.08])[: spec.n_classes]
+    else:
+        # Wine quality: roughly normal around the middle levels.
+        levels = np.arange(spec.n_classes)
+        mid = (spec.n_classes - 1) / 2.0
+        props = np.exp(-0.5 * ((levels - mid) / 1.1) ** 2)
+    props = props / props.sum()
+    counts = np.floor(props * spec.n_rows).astype(int)
+    counts[0] += spec.n_rows - counts.sum()
+    return counts
+
+
+def generate(spec: DatasetSpec) -> Dataset:
+    """Generate one dataset: Gaussian class clusters on a random low-rank
+    structure, min-max normalised to [0, 1] (as the paper normalises its
+    inputs), split 70/30."""
+    rng = np.random.default_rng(spec.seed)
+    counts = _class_counts(spec, rng)
+
+    # Class centroids along a smooth direction for regression (quality is
+    # ordinal) and spread out for classification.
+    base_dir = rng.normal(size=spec.n_features)
+    base_dir /= np.linalg.norm(base_dir)
+    xs, ys = [], []
+    for cls, cnt in enumerate(counts):
+        if spec.task == "regression":
+            # Ordinal: centroids progress along base_dir with per-class jitter.
+            centroid = base_dir * spec.class_sep * cls + rng.normal(
+                scale=0.35, size=spec.n_features
+            )
+        else:
+            centroid = rng.normal(scale=spec.class_sep, size=spec.n_features)
+        pts = centroid + rng.normal(scale=spec.noise, size=(cnt, spec.n_features))
+        xs.append(pts)
+        ys.append(np.full(cnt, cls + spec.label_offset, dtype=np.int64))
+    x = np.concatenate(xs, axis=0)
+    y = np.concatenate(ys, axis=0)
+
+    # Shuffle rows.
+    perm = rng.permutation(len(x))
+    x, y = x[perm], y[perm]
+
+    # Min-max normalise each feature to [0, 1] (paper: "Input features are
+    # normalized to the range [0, 1]").
+    lo, hi = x.min(axis=0), x.max(axis=0)
+    x = (x - lo) / np.maximum(hi - lo, 1e-9)
+
+    n_train = int(round(TRAIN_FRACTION * len(x)))
+    return Dataset(
+        spec=spec,
+        x_train=x[:n_train].astype(np.float32),
+        y_train=y[:n_train],
+        x_test=x[n_train:].astype(np.float32),
+        y_test=y[n_train:],
+    )
+
+
+def generate_all() -> dict[str, Dataset]:
+    return {name: generate(spec) for name, spec in SPECS.items()}
+
+
+# ---------------------------------------------------------------------------
+# CSV export (consumed by the rust layer)
+# ---------------------------------------------------------------------------
+
+
+def export_csv(ds: Dataset, out_dir: str) -> list[str]:
+    """Write <name>_train.csv / <name>_test.csv: feature columns then label."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for split, xs, ys in (
+        ("train", ds.x_train, ds.y_train),
+        ("test", ds.x_test, ds.y_test),
+    ):
+        path = os.path.join(out_dir, f"{ds.name}_{split}.csv")
+        header = ",".join(f"f{i}" for i in range(ds.spec.n_features)) + ",label"
+        rows = [header]
+        for xi, yi in zip(xs, ys):
+            rows.append(",".join(f"{v:.8f}" for v in xi) + f",{int(yi)}")
+        with open(path, "w") as f:
+            f.write("\n".join(rows) + "\n")
+        paths.append(path)
+    return paths
+
+
+def export_all(out_dir: str) -> dict[str, list[str]]:
+    return {name: export_csv(ds, out_dir) for name, ds in generate_all().items()}

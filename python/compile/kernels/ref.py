@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal of the L1 layer: the pytest suite
+asserts bit-equality between each Pallas kernel (interpret=True) and the
+oracle here, and the numpy contract in `compile.quant` validates the
+oracle itself.  The rust bit-exact model mirrors the same semantics.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_acc_ref(qx: jnp.ndarray, qw: jnp.ndarray, qb: jnp.ndarray, acc_dtype) -> jnp.ndarray:
+    """Exact integer accumulator of one dense layer.
+
+    qx: [B, K] int32 quantised activations
+    qw: [K, N] int32 quantised weights
+    qb: [N]    int accumulator-scale bias
+    Returns acc [B, N] in `acc_dtype` (int32 for n<=16, int64 for n=32).
+    """
+    return jnp.dot(qx.astype(acc_dtype), qw.astype(acc_dtype)) + qb.astype(acc_dtype)[None, :]
+
+
+def _sign_extend(lane: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Sign-extend the low n bits of an int32 lane value (branch-free;
+    the identical identity is used in the rust MAC model)."""
+    sign = jnp.int32(1 << (n - 1))
+    return (lane ^ sign) - sign
+
+
+def unpack_lane(word: jnp.ndarray, lane: int, n: int) -> jnp.ndarray:
+    """Extract signed lane `lane` (n bits) from a packed 32-bit word."""
+    if n == 32:
+        return word
+    mask = jnp.int32((1 << n) - 1)
+    v = (word >> (n * lane)) & mask
+    return _sign_extend(v, n)
+
+
+def packed_simd_mac_ref(wa: jnp.ndarray, wb: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Word-level SIMD MAC oracle (paper Fig. 2 / Eq. 1).
+
+    wa, wb: [M] int32 packed operand streams (32/n lanes per word).
+    Executes M MAC instructions: for each word, every lane multiplies and
+    adds into its private accumulator.  Accumulators are 32-bit and WRAP,
+    exactly like the hardware unit.  Returns acc [L] int32.
+    """
+    L = max(1, 32 // n)
+    accs = []
+    for i in range(L):
+        a = unpack_lane(wa, i, n)
+        b = unpack_lane(wb, i, n)
+        accs.append(jnp.sum(a * b, dtype=jnp.int32))  # wrapping int32 sum
+    return jnp.stack(accs)
+
+
+def rescale_ref(acc: jnp.ndarray, shift: int, n: int) -> jnp.ndarray:
+    """Round-half-up arithmetic shift + saturation to n bits (see quant.py)."""
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    elif shift < 0:
+        acc = acc << (-shift)
+    qmin, qmax = -(1 << (n - 1)), (1 << (n - 1)) - 1
+    return jnp.clip(acc, qmin, qmax)

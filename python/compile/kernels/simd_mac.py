@@ -1,0 +1,115 @@
+"""Pallas kernels modelling the paper's SIMD MAC unit (Fig. 2).
+
+Two kernels, both lowered with interpret=True (the CPU PJRT plugin cannot
+execute Mosaic custom-calls; see /opt/xla-example/README.md):
+
+* `dense_acc` — the *deployment* kernel: the quantised dense-layer MAC grid
+  that the L2 model calls for every layer.  Tiled with BlockSpec over
+  (batch, out-neuron) so each block's operand slices fit a VMEM-sized
+  scratch on a real TPU; the K (fan-in) axis is kept whole per block
+  because the paper's models have K <= 21.
+
+* `packed_simd_mac` — the *hardware-faithful* kernel: word-level lane
+  packing with wrapping 32-bit accumulators, bit-identical to the printed
+  unit and to the rust ISS MAC model (`rust/src/sim/mac_model.rs`).  Used
+  for cross-layer validation, not on the model path.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's unit is
+a combinational printed-logic block; its core insight — sub-word lane
+parallelism with per-lane accumulators — maps to the TPU as (a) BlockSpec
+tiles sized for VMEM, (b) lane parallelism as vectorised integer ops on
+the VPU (on a real TPU, n=16/8 packs into MXU bf16/int8 passes), (c) the
+accumulate register as a carried block accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes for the dense MAC grid.  The models in the paper are tiny
+# (K <= 21, N <= 5), so a whole layer fits one block at batch tiles of 128;
+# the grid only materialises for large batches.  VMEM estimate per block:
+# (BM*K + K*BN + BM*BN) * 4B  <=  (128*32 + 32*128 + 128*128) * 4 ≈ 96 KiB.
+BLOCK_B = 128
+BLOCK_N = 128
+
+
+def _dense_acc_kernel(x_ref, w_ref, b_ref, o_ref, *, acc_dtype):
+    """One (BM, BN) tile: acc = x @ w + b, exact integer arithmetic."""
+    x = x_ref[...].astype(acc_dtype)
+    w = w_ref[...].astype(acc_dtype)
+    acc = jnp.dot(x, w, preferred_element_type=acc_dtype)
+    o_ref[...] = acc + b_ref[...].astype(acc_dtype)[None, :]
+
+
+def dense_acc(qx: jnp.ndarray, qw: jnp.ndarray, qb: jnp.ndarray, acc_dtype=jnp.int32) -> jnp.ndarray:
+    """Quantised dense-layer accumulator via the SIMD MAC kernel.
+
+    qx: [B, K] int32; qw: [K, N] int32; qb: [N] int32/int64.
+    Returns acc [B, N] in acc_dtype.  B and N are padded up to the block
+    grid; K stays whole (tiny fan-ins in these models).
+    """
+    B, K = qx.shape
+    K2, N = qw.shape
+    assert K == K2 and qb.shape == (N,)
+    bm, bn = min(BLOCK_B, B), min(BLOCK_N, N)
+    # Pad to block multiples (zeros contribute nothing to the MAC).
+    Bp = (B + bm - 1) // bm * bm
+    Np = (N + bn - 1) // bn * bn
+    if Bp != B:
+        qx = jnp.pad(qx, ((0, Bp - B), (0, 0)))
+    if Np != N:
+        qw = jnp.pad(qw, ((0, 0), (0, Np - N)))
+        qb = jnp.pad(qb, (0, Np - N))
+
+    out = pl.pallas_call(
+        functools.partial(_dense_acc_kernel, acc_dtype=acc_dtype),
+        grid=(Bp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), acc_dtype),
+        interpret=True,
+    )(qx, qw, qb)
+    return out[:B, :N]
+
+
+def _packed_kernel(wa_ref, wb_ref, o_ref, *, n: int):
+    """Word-level SIMD MAC: all M words, L = 32/n lanes each, wrapping i32
+    per-lane accumulators — the printed unit's exact semantics."""
+    L = max(1, 32 // n)
+    wa = wa_ref[...]
+    wb = wb_ref[...]
+    sign = jnp.int32(1 << (n - 1)) if n < 32 else None
+    mask = jnp.int32((1 << n) - 1) if n < 32 else None
+    accs = []
+    for i in range(L):
+        if n == 32:
+            a, b = wa, wb
+        else:
+            a = ((wa >> (n * i)) & mask ^ sign) - sign
+            b = ((wb >> (n * i)) & mask ^ sign) - sign
+        accs.append(jnp.sum(a * b, dtype=jnp.int32))
+    o_ref[...] = jnp.stack(accs)
+
+
+def packed_simd_mac(wa: jnp.ndarray, wb: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Execute M packed MAC instructions; returns the L lane accumulators.
+
+    wa, wb: [M] int32.  Bit-identical to kernels.ref.packed_simd_mac_ref
+    and to the rust `sim::mac_model`.
+    """
+    assert wa.shape == wb.shape and wa.ndim == 1
+    L = max(1, 32 // n)
+    return pl.pallas_call(
+        functools.partial(_packed_kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((L,), jnp.int32),
+        interpret=True,
+    )(wa.astype(jnp.int32), wb.astype(jnp.int32))

@@ -1,0 +1,237 @@
+"""L2 — the paper's ML models (3 MLPs, 3 SVMs) in JAX.
+
+Every model is a stack of dense layers plus a *head*:
+
+* ``argmax``   — MLP-C / classification logits (Cardiotocography).
+* ``ovo_vote`` — SVM-C one-vs-one: per-pair linear decisions voted into
+                 per-class counts (paper: "one-vs-one classification
+                 strategy").
+* ``round``    — MLP-R / SVM-R regression on wine quality; the prediction
+                 is the rounded scalar output.
+
+Two forward paths:
+
+* ``float_forward``      — f32 reference (training + float accuracy).
+* ``quantized_forward``  — the bespoke-core path: in-graph quantisation,
+  the L1 Pallas SIMD-MAC kernel per layer, integer rescale, dequantised
+  float scores out.  This is what gets AOT-lowered to HLO and executed by
+  the rust runtime; it is bit-identical to the rust ISS running the
+  code-generated assembly of the same model.
+
+The HLO interface is uniform across heads:  ``f32[B, K] -> (f32[B, C],)``
+where C = n_classes (argmax/ovo as per-class scores/votes) or 1 (round).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .kernels import ref as kref
+from .kernels import simd_mac
+
+PRECISIONS = (32, 16, 8, 4)  # the unit's 4 precision configurations
+
+
+@dataclass
+class DenseLayer:
+    w: np.ndarray  # [K, N] float32
+    b: np.ndarray  # [N] float32
+    relu: bool
+
+
+@dataclass
+class Model:
+    """One trained model plus the calibration needed for quantisation."""
+
+    name: str
+    dataset: str
+    task: str  # "classification" | "regression"
+    head: str  # "argmax" | "ovo_vote" | "round"
+    layers: list[DenseLayer]
+    # max-abs of the activation tensor at each layer boundary (len = L+1):
+    # calib[0] is the input (1.0 for [0,1]-normalised features).
+    calib: list[float]
+    n_classes: int
+    label_offset: int
+    ovo_pairs: list[tuple[int, int]] = field(default_factory=list)
+    float_accuracy: float = 0.0
+
+    @property
+    def arch(self) -> list[int]:
+        return [self.layers[0].w.shape[0]] + [l.w.shape[1] for l in self.layers]
+
+    def layer_quants(self, n: int) -> list[quant.LayerQuant]:
+        """Per-layer quantisation parameters for precision n, derived as a
+        chain (layer i's fy == layer i+1's fx — they are the same tensor).
+        The derived values are baked into the weights JSON for rust."""
+        stats = [
+            (float(np.max(np.abs(l.w))), self.calib[i + 1], l.w.shape[0])
+            for i, l in enumerate(self.layers)
+        ]
+        return quant.derive_chain(n, self.calib[0], stats)
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+
+def _head_scores(model: Model, raw: jnp.ndarray) -> jnp.ndarray:
+    """Map the last layer's float outputs to the uniform [B, C] score tensor."""
+    if model.head == "argmax":
+        return raw  # logits, C = n_classes
+    if model.head == "round":
+        return raw  # scalar quality estimate, C = 1
+    if model.head == "ovo_vote":
+        # raw: [B, P] pair decision values; pair (i, j): >= 0 votes i else j.
+        votes = []
+        for c in range(model.n_classes):
+            v = jnp.zeros(raw.shape[0], dtype=jnp.float32)
+            for p, (i, j) in enumerate(model.ovo_pairs):
+                if i == c:
+                    v = v + (raw[:, p] >= 0.0).astype(jnp.float32)
+                elif j == c:
+                    v = v + (raw[:, p] < 0.0).astype(jnp.float32)
+            votes.append(v)
+        return jnp.stack(votes, axis=1)
+    raise ValueError(f"unknown head {model.head}")
+
+
+def predict_from_scores(model: Model, scores: np.ndarray) -> np.ndarray:
+    """Scores [B, C] -> integer label predictions (mirrored in rust)."""
+    scores = np.asarray(scores)
+    if model.head == "round":
+        return np.clip(
+            np.floor(scores[:, 0] + 0.5).astype(np.int64),
+            model.label_offset,
+            model.label_offset + model.n_classes - 1,
+        )
+    return np.argmax(scores, axis=1) + model.label_offset
+
+
+# ---------------------------------------------------------------------------
+# Forward paths
+# ---------------------------------------------------------------------------
+
+
+def float_forward(model: Model, x: jnp.ndarray) -> jnp.ndarray:
+    """f32 reference forward; returns the uniform [B, C] score tensor."""
+    h = x
+    for layer in model.layers:
+        h = h @ jnp.asarray(layer.w) + jnp.asarray(layer.b)
+        if layer.relu:
+            h = jnp.maximum(h, 0.0)
+    return _head_scores(model, h)
+
+
+def quantized_forward(
+    model: Model, x: jnp.ndarray, n: int, use_pallas: bool = True
+) -> jnp.ndarray:
+    """Bespoke-core forward at precision n: quantise -> SIMD MAC (Pallas)
+    -> integer rescale -> dequantised float scores.
+
+    ``use_pallas=False`` swaps in the jnp oracle (kernels.ref) — the pytest
+    suite asserts both paths are bit-identical.
+    """
+    lqs = model.layer_quants(n)
+    acc_dtype = jnp.int64 if n == 32 else jnp.int32
+
+    # In-graph input quantisation (round-half-up, matching
+    # quant.quantize).  f64 arithmetic: at n=32 the scaled values exceed
+    # the f32 mantissa and would diverge from the rust/numpy contract.
+    lq0 = lqs[0]
+    qmin, qmax = quant.qlimits(n)
+    h = jnp.clip(
+        jnp.floor(x.astype(jnp.float64) * (1 << lq0.fx) + 0.5), qmin, qmax
+    ).astype(jnp.int32)
+
+    raw = None
+    for i, (layer, lq) in enumerate(zip(model.layers, lqs)):
+        qw = jnp.asarray(quant.quantize(layer.w, lq.fw, lq.n), dtype=jnp.int32)
+        qb = jnp.asarray(
+            quant.quantize(layer.b, lq.fx + lq.fw, 32 if n <= 16 else 64),
+            dtype=acc_dtype,
+        )
+        if use_pallas:
+            acc = simd_mac.dense_acc(h, qw, qb, acc_dtype=acc_dtype)
+        else:
+            acc = kref.dense_acc_ref(h, qw, qb, acc_dtype)
+        last = i == len(model.layers) - 1
+        if last:
+            # Dequantise in f64 (exact for the i64 accumulators), then
+            # narrow to the f32 interface.
+            raw = (acc.astype(jnp.float64) / np.float64(2.0 ** (lq.fx + lq.fw))).astype(
+                jnp.float32
+            )
+        else:
+            y = kref.rescale_ref(acc, lq.shift, lq.n)
+            if layer.relu:
+                y = jnp.maximum(y, 0)
+            h = y.astype(jnp.int32)
+    return _head_scores(model, raw)
+
+
+# ---------------------------------------------------------------------------
+# Accuracy helpers (used by train.py and the pytest suite)
+# ---------------------------------------------------------------------------
+
+
+def accuracy(model: Model, scores: np.ndarray, labels: np.ndarray) -> float:
+    """Top-1 accuracy (regression: rounded-quality exact match, as the
+    paper reports a single 'accuracy' metric for all six models)."""
+    pred = predict_from_scores(model, scores)
+    return float(np.mean(pred == np.asarray(labels)))
+
+
+# ---------------------------------------------------------------------------
+# (De)serialisation — the weights JSON consumed by the rust layer
+# ---------------------------------------------------------------------------
+
+
+def to_json_dict(model: Model) -> dict:
+    return {
+        "name": model.name,
+        "dataset": model.dataset,
+        "task": model.task,
+        "head": model.head,
+        "arch": model.arch,
+        "n_classes": model.n_classes,
+        "label_offset": model.label_offset,
+        "ovo_pairs": [list(p) for p in model.ovo_pairs],
+        "calib": [float(c) for c in model.calib],
+        "float_accuracy": model.float_accuracy,
+        "layers": [
+            {
+                "relu": l.relu,
+                "w": [[float(v) for v in row] for row in l.w],
+                "b": [float(v) for v in l.b],
+            }
+            for l in model.layers
+        ],
+    }
+
+
+def from_json_dict(d: dict) -> Model:
+    return Model(
+        name=d["name"],
+        dataset=d["dataset"],
+        task=d["task"],
+        head=d["head"],
+        layers=[
+            DenseLayer(
+                w=np.asarray(l["w"], dtype=np.float32),
+                b=np.asarray(l["b"], dtype=np.float32),
+                relu=bool(l["relu"]),
+            )
+            for l in d["layers"]
+        ],
+        calib=[float(c) for c in d["calib"]],
+        n_classes=int(d["n_classes"]),
+        label_offset=int(d["label_offset"]),
+        ovo_pairs=[tuple(p) for p in d["ovo_pairs"]],
+        float_accuracy=float(d["float_accuracy"]),
+    )

@@ -1,0 +1,262 @@
+"""Fixed-point quantisation contract shared with the rust layer.
+
+This module is the *single source of truth* for the numeric semantics of
+the paper's SIMD MAC unit (Fig. 2).  The rust bit-exact model
+(`rust/src/ml/quant.rs`, `rust/src/sim/mac_model.rs`), the Pallas kernel
+(`kernels/simd_mac.py`) and the jnp oracle (`kernels/ref.py`) all implement
+exactly these rules; cross-layer tests assert bit-equality.
+
+Contract
+--------
+* Precision n ∈ {32, 16, 8, 4}: signed two's-complement n-bit operands,
+  qmin = -2^(n-1), qmax = 2^(n-1) - 1.
+* A tensor with max-abs M is assigned `f = frac_bits(M, n)` fractional bits:
+      int_bits(M) = 0                      if M < 1
+                  = floor(log2(M)) + 1     otherwise
+      frac_bits(M, n) = clamp(n - 1 - int_bits(M), 0, n - 1)
+* quantise(v) = clamp(floor(v * 2^f + 0.5), qmin, qmax)   (round half up)
+* MAC: the unit multiplies n-bit lanes and accumulates into the paper's
+  per-lane accumulator (Eq. 1): a 32-bit register for n <= 16 (wrapping),
+  a 64-bit register pair for n = 32.  Quantisation *guarantees* the
+  accumulator never wraps on real workloads by capping the total
+  fractional bits:  K * Mx * Mw * 2^(fx+fw) < 2^(acc_bits-2)
+  (one headroom bit for the bias, one safety bit), reducing fx/fw if the
+  naturally-assigned formats would exceed the cap.
+* Rescale to the next layer's activation format fy:
+      shift = fa + fw - fy          (always >= 0 for our formats)
+      y = sat_n( (acc + (1 << (shift-1))) >> shift )      if shift > 0
+        = sat_n( acc )                                    if shift == 0
+  (arithmetic shift; round-half-up on the dropped bits; saturate to n bits)
+* ReLU (hidden layers): max(0, y) applied after the rescale.
+* Output layer: scores are dequantised to float: acc * 2^-(fa + fw).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def int_bits(max_abs: float) -> int:
+    """Number of integer bits needed for magnitude `max_abs`."""
+    if max_abs < 1.0:
+        return 0
+    return int(math.floor(math.log2(max_abs))) + 1
+
+
+def frac_bits(max_abs: float, n: int) -> int:
+    """Fractional bits assigned to a tensor with the given max-abs."""
+    f = n - 1 - int_bits(max_abs)
+    return max(0, min(n - 1, f))
+
+
+def qlimits(n: int) -> tuple[int, int]:
+    return -(1 << (n - 1)), (1 << (n - 1)) - 1
+
+
+def quantize(v: np.ndarray, f: int, n: int) -> np.ndarray:
+    """Quantise float array to n-bit signed fixed point, f fractional bits.
+
+    Round-half-up (floor(x + 0.5)) — chosen because it is trivially
+    identical across numpy / jnp / rust (no banker's rounding ambiguity).
+    """
+    qmin, qmax = qlimits(n)
+    q = np.floor(np.asarray(v, dtype=np.float64) * (1 << f) + 0.5)
+    return np.clip(q, qmin, qmax).astype(np.int64)
+
+
+def dequantize(q: np.ndarray, f: int) -> np.ndarray:
+    return np.asarray(q, dtype=np.float64) / (1 << f)
+
+
+def sat(v: np.ndarray, n: int) -> np.ndarray:
+    qmin, qmax = qlimits(n)
+    return np.clip(v, qmin, qmax)
+
+
+def rescale(acc: np.ndarray, shift: int, n: int) -> np.ndarray:
+    """Rescale an exact accumulator to n bits, dropping `shift` frac bits."""
+    acc = np.asarray(acc, dtype=np.int64)
+    if shift > 0:
+        acc = (acc + (1 << (shift - 1))) >> shift
+    elif shift < 0:
+        acc = acc << (-shift)
+    return sat(acc, n)
+
+
+@dataclass(frozen=True)
+class LayerQuant:
+    """Quantisation parameters of one dense layer, fully determined by the
+    calibration max-abs values and the precision.  Serialised into the
+    weights JSON so rust shares the identical parameters."""
+
+    n: int  # precision (bits)
+    fx: int  # input activation frac bits
+    fw: int  # weight frac bits
+    fy: int  # output activation frac bits (next layer's fx)
+    k: int  # fan-in
+    mx: float = 1.0  # calibrated max-abs of inputs
+    mw: float = 1.0  # calibrated max-abs of weights
+
+    @property
+    def acc_bits(self) -> int:
+        """Accumulator width: the 32-bit datapath register for n <= 16,
+        a 64-bit register pair for the n = 32 configuration."""
+        return 32 if self.n <= 16 else 64
+
+    @property
+    def shift(self) -> int:
+        return self.fx + self.fw - self.fy
+
+    def check_no_overflow(self) -> None:
+        """Guaranteed bound: |acc| <= K*Mx*Mw*2^(fx+fw) (+1 bias headroom
+        bit) must fit the accumulator."""
+        worst = self.k * self.mx * self.mw * 2.0 ** (self.fx + self.fw)
+        assert worst < 2.0 ** (self.acc_bits - 2), (
+            f"MAC accumulator could overflow: worst |acc| ~ 2^{math.log2(max(worst,1)):.1f}"
+            f" vs {self.acc_bits}-bit register (n={self.n}, k={self.k})"
+        )
+
+
+def layer_quant(n: int, max_abs_x: float, max_abs_w: float, max_abs_y: float, k: int) -> LayerQuant:
+    """Derive one layer's quantisation from calibration statistics.
+
+    * fx/fw start at the natural format for the calibrated magnitudes and
+      are reduced (largest first) until the no-overflow cap holds:
+      K * Mx * Mw * 2^(fx+fw) < 2^(acc_bits - 2).
+    * fy is clamped to fx + fw so the rescale shift is never negative —
+      the hardware rescaler only drops fractional bits (right shift).
+    """
+    fx = frac_bits(max_abs_x, n)
+    fw = frac_bits(max_abs_w, n)
+    acc_bits = 32 if n <= 16 else 64
+    cap = acc_bits - 2 - math.ceil(math.log2(max(1.0, k * max_abs_x * max_abs_w)))
+    while fx + fw > cap and (fx > 0 or fw > 0):
+        if fx >= fw:
+            fx -= 1
+        else:
+            fw -= 1
+    lq = LayerQuant(
+        n=n,
+        fx=fx,
+        fw=fw,
+        fy=min(frac_bits(max_abs_y, n), fx + fw),
+        k=k,
+        mx=max_abs_x,
+        mw=max_abs_w,
+    )
+    lq.check_no_overflow()
+    assert lq.shift >= 0, "rescale shift must be non-negative by construction"
+    return lq
+
+
+def derive_chain(
+    n: int, max_abs_x0: float, layer_stats: list[tuple[float, float, int]]
+) -> list[LayerQuant]:
+    """Derive the whole model's layer quants as a *chain*: layer i's output
+    format fy IS layer i+1's input format fx (they are the same tensor).
+
+    `layer_stats` is one (max_abs_w, max_abs_y, k) triple per layer.  The
+    first layer may reduce both fx and fw to satisfy the no-overflow cap;
+    subsequent layers have fx pinned by the chain and reduce only fw.
+    """
+    lqs: list[LayerQuant] = []
+    mx = max_abs_x0
+    fx = frac_bits(mx, n)
+    for mw, my, k in layer_stats:
+        acc_bits = 32 if n <= 16 else 64
+        fw = frac_bits(mw, n)
+        cap = acc_bits - 2 - math.ceil(math.log2(max(1.0, k * mx * mw)))
+        if n == 32:
+            # Keep every serialised integer (weights, biases at fx+fw)
+            # within f64-exact range (< 2^53) for the JSON interchange;
+            # 2^-46 granularity is far below any accuracy effect.
+            cap = min(cap, 46)
+        if not lqs:
+            while fx + fw > cap and (fx > 0 or fw > 0):
+                if fx >= fw:
+                    fx -= 1
+                else:
+                    fw -= 1
+        else:
+            fw = max(0, min(fw, cap - fx))
+        fy = min(frac_bits(my, n), fx + fw)
+        lq = LayerQuant(n=n, fx=fx, fw=fw, fy=fy, k=k, mx=mx, mw=mw)
+        lq.check_no_overflow()
+        assert lq.shift >= 0
+        lqs.append(lq)
+        fx, mx = fy, my
+    return lqs
+
+
+# ---------------------------------------------------------------------------
+# Reference (numpy) quantised dense layer — the plain-python oracle used by
+# the pytest suite to validate both the jnp ref and the Pallas kernel.
+# ---------------------------------------------------------------------------
+
+
+def dense_quantized_ref(
+    x: np.ndarray,
+    w: np.ndarray,
+    b: np.ndarray,
+    lq: LayerQuant,
+    relu: bool,
+    last: bool,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Quantised dense layer, numpy oracle.
+
+    x: float [B, K]; w: float [K, N]; b: float [N].
+    Returns (q_out or float scores, acc) — if `last`, the first element is
+    the dequantised float scores [B, N]; otherwise the n-bit q activations.
+    """
+    qx = quantize(x, lq.fx, lq.n)
+    qw = quantize(w, lq.fw, lq.n)
+    qb = quantize(b, lq.fx + lq.fw, 32 if lq.n <= 16 else 64)
+    acc = qx @ qw + qb[None, :]
+    if last:
+        return dequantize(acc, lq.fx + lq.fw), acc
+    y = rescale(acc, lq.shift, lq.n)
+    if relu:
+        y = np.maximum(y, 0)
+    return y, acc
+
+
+# ---------------------------------------------------------------------------
+# SIMD lane packing (hardware word-level view, paper Fig. 2)
+# ---------------------------------------------------------------------------
+
+
+def lanes(n: int, datapath: int = 32) -> int:
+    """Number of concurrent MAC lanes for precision n on a `datapath`-bit
+    register pair (paper: 32/n lanes; the 4-bit TP-ISA gets a single lane)."""
+    return max(1, datapath // n)
+
+
+def pack_lanes(q: np.ndarray, n: int, datapath: int = 32) -> np.ndarray:
+    """Pack a [..., L] int lane array into datapath-bit words (two's
+    complement, lane 0 in the least-significant bits)."""
+    L = lanes(n, datapath)
+    assert q.shape[-1] == L
+    mask = (1 << n) - 1
+    word = np.zeros(q.shape[:-1], dtype=np.int64)
+    for i in range(L):
+        word |= (q[..., i].astype(np.int64) & mask) << (n * i)
+    # Reinterpret as signed datapath-bit value.
+    sign = 1 << (datapath - 1)
+    word = (word & ((1 << datapath) - 1)).astype(np.int64)
+    return np.where(word >= sign, word - (1 << datapath), word)
+
+
+def unpack_lanes(word: np.ndarray, n: int, datapath: int = 32) -> np.ndarray:
+    """Inverse of pack_lanes: [...] words -> [..., L] signed lanes."""
+    L = lanes(n, datapath)
+    word = np.asarray(word, dtype=np.int64) & ((1 << datapath) - 1)
+    out = np.zeros(word.shape + (L,), dtype=np.int64)
+    mask = (1 << n) - 1
+    for i in range(L):
+        lane = (word >> (n * i)) & mask
+        sign = 1 << (n - 1)
+        out[..., i] = np.where(lane >= sign, lane - (1 << n), lane)
+    return out

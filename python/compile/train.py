@@ -1,0 +1,232 @@
+"""L2 training — JAX stands in for the paper's scikit-learn flow.
+
+The paper trains with scikit-learn (RandomizedSearchCV, 5-fold CV); this
+image has no sklearn and no UCI access, so we train the same model
+families in JAX on the synthetic datasets (DESIGN.md documents the
+substitution).  Hyperparameters respect the paper's envelope: MLPs use a
+single hidden layer of at most five ReLU neurons; SVMs are linear, with
+one-vs-one classification.
+
+A small hand-rolled Adam (no optax offline) drives full-batch training —
+the datasets are tiny.  Everything is seeded and deterministic.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets as dsets
+from .model import DenseLayer, Model, accuracy, float_forward
+
+HIDDEN = 5  # paper: "a single hidden layer with up to five neurons"
+
+
+# ---------------------------------------------------------------------------
+# Hand-rolled Adam
+# ---------------------------------------------------------------------------
+
+
+def adam(params, grads, state, lr, step, b1=0.9, b2=0.999, eps=1e-8):
+    m, v = state
+    m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda mi: mi / (1 - b1**step), m)
+    vh = jax.tree.map(lambda vi: vi / (1 - b2**step), v)
+    params = jax.tree.map(lambda p, mi, vi: p - lr * mi / (jnp.sqrt(vi) + eps), params, mh, vh)
+    return params, (m, v)
+
+
+def _fit(loss_fn, params, epochs: int, lr: float):
+    """Full-batch Adam on `loss_fn(params)`."""
+    state = (
+        jax.tree.map(jnp.zeros_like, params),
+        jax.tree.map(jnp.zeros_like, params),
+    )
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    for step in range(1, epochs + 1):
+        _, grads = grad_fn(params)
+        params, state = adam(params, grads, state, lr, step)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Model trainers
+# ---------------------------------------------------------------------------
+
+
+def _mlp_params(key, k_in: int, hidden: int, k_out: int):
+    k1, k2 = jax.random.split(key)
+    scale1 = float(np.sqrt(2.0 / k_in))
+    scale2 = float(np.sqrt(2.0 / hidden))
+    return {
+        "w1": jax.random.normal(k1, (k_in, hidden), jnp.float32) * scale1,
+        "b1": jnp.zeros(hidden, jnp.float32),
+        "w2": jax.random.normal(k2, (hidden, k_out), jnp.float32) * scale2,
+        "b2": jnp.zeros(k_out, jnp.float32),
+    }
+
+
+def _mlp_fwd(p, x):
+    h = jnp.maximum(x @ p["w1"] + p["b1"], 0.0)
+    return h @ p["w2"] + p["b2"]
+
+
+def train_mlp_classifier(ds: dsets.Dataset, seed: int = 1) -> Model:
+    """MLP-C: 1 hidden ReLU layer, softmax cross-entropy."""
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train - ds.spec.label_offset)
+    params = _mlp_params(jax.random.PRNGKey(seed), ds.spec.n_features, HIDDEN, ds.spec.n_classes)
+
+    def loss(p):
+        logits = _mlp_fwd(p, x)
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.mean(logp[jnp.arange(len(y)), y])
+        l2 = 1e-4 * (jnp.sum(p["w1"] ** 2) + jnp.sum(p["w2"] ** 2))
+        return ce + l2
+
+    params = _fit(loss, params, epochs=800, lr=0.02)
+    return _finalize(ds, "mlp_c", "argmax", params)
+
+
+def train_mlp_regressor(ds: dsets.Dataset, seed: int = 2) -> Model:
+    """MLP-R: 1 hidden ReLU layer, MSE on the raw quality value."""
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train, dtype=jnp.float32)
+    params = _mlp_params(jax.random.PRNGKey(seed), ds.spec.n_features, HIDDEN, 1)
+
+    def loss(p):
+        pred = _mlp_fwd(p, x)[:, 0]
+        l2 = 1e-4 * (jnp.sum(p["w1"] ** 2) + jnp.sum(p["w2"] ** 2))
+        return jnp.mean((pred - y) ** 2) + l2
+
+    params = _fit(loss, params, epochs=800, lr=0.02)
+    return _finalize(ds, "mlp_r", "round", params)
+
+
+def train_svm_classifier(ds: dsets.Dataset, seed: int = 3) -> Model:
+    """SVM-C: linear one-vs-one with squared hinge loss per pair."""
+    pairs = list(itertools.combinations(range(ds.spec.n_classes), 2))
+    k = ds.spec.n_features
+    ws, bs = [], []
+    for p_idx, (ci, cj) in enumerate(pairs):
+        mask = np.isin(ds.y_train - ds.spec.label_offset, (ci, cj))
+        xp = jnp.asarray(ds.x_train[mask])
+        # +1 for class ci, -1 for class cj.
+        yp = jnp.asarray(
+            np.where((ds.y_train - ds.spec.label_offset)[mask] == ci, 1.0, -1.0),
+            dtype=jnp.float32,
+        )
+        key = jax.random.PRNGKey(seed * 100 + p_idx)
+        params = {
+            "w": jax.random.normal(key, (k,), jnp.float32) * 0.01,
+            "b": jnp.zeros((), jnp.float32),
+        }
+
+        def loss(p, xp=xp, yp=yp):
+            margin = yp * (xp @ p["w"] + p["b"])
+            hinge = jnp.mean(jnp.maximum(0.0, 1.0 - margin) ** 2)
+            return hinge + 1e-3 * jnp.sum(p["w"] ** 2)
+
+        params = _fit(loss, params, epochs=600, lr=0.05)
+        ws.append(np.asarray(params["w"]))
+        bs.append(float(params["b"]))
+
+    w = np.stack(ws, axis=1).astype(np.float32)  # [K, P]
+    b = np.asarray(bs, dtype=np.float32)
+    layers = [DenseLayer(w=w, b=b, relu=False)]
+    return _build_model(ds, "svm_c", "ovo_vote", layers, ovo_pairs=pairs)
+
+
+def train_svm_regressor(ds: dsets.Dataset, seed: int = 4) -> Model:
+    """SVM-R: linear epsilon-insensitive regression (smoothed) + ridge."""
+    x = jnp.asarray(ds.x_train)
+    y = jnp.asarray(ds.y_train, dtype=jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    params = {
+        "w": jax.random.normal(key, (ds.spec.n_features, 1), jnp.float32) * 0.01,
+        "b": jnp.zeros(1, jnp.float32),
+    }
+
+    def loss(p):
+        pred = (x @ p["w"] + p["b"])[:, 0]
+        err = jnp.abs(pred - y)
+        eps_ins = jnp.maximum(0.0, err - 0.2) ** 2  # smoothed eps-insensitive
+        return jnp.mean(eps_ins) + 1e-3 * jnp.sum(p["w"] ** 2)
+
+    params = _fit(loss, params, epochs=800, lr=0.05)
+    layers = [DenseLayer(w=np.asarray(params["w"]), b=np.asarray(params["b"]), relu=False)]
+    return _build_model(ds, "svm_r", "round", layers)
+
+
+# ---------------------------------------------------------------------------
+# Calibration + packaging
+# ---------------------------------------------------------------------------
+
+
+def _finalize(ds: dsets.Dataset, kind: str, head: str, params) -> Model:
+    layers = [
+        DenseLayer(w=np.asarray(params["w1"]), b=np.asarray(params["b1"]), relu=True),
+        DenseLayer(w=np.asarray(params["w2"]), b=np.asarray(params["b2"]), relu=False),
+    ]
+    return _build_model(ds, kind, head, layers)
+
+
+def _build_model(
+    ds: dsets.Dataset,
+    kind: str,
+    head: str,
+    layers: list[DenseLayer],
+    ovo_pairs: list[tuple[int, int]] | None = None,
+) -> Model:
+    model = Model(
+        name=f"{kind}_{ds.name}",
+        dataset=ds.name,
+        task=ds.spec.task,
+        head=head,
+        layers=layers,
+        calib=[],
+        n_classes=ds.spec.n_classes,
+        label_offset=ds.spec.label_offset,
+        ovo_pairs=ovo_pairs or [],
+    )
+    model.calib = _calibrate(model, ds.x_train)
+    scores = np.asarray(float_forward(model, jnp.asarray(ds.x_test)))
+    model.float_accuracy = accuracy(model, scores, ds.y_test)
+    return model
+
+
+def _calibrate(model: Model, x_train: np.ndarray) -> list[float]:
+    """Max-abs activation at each layer boundary over the training set —
+    the statistics that fix the fixed-point formats (quant.layer_quant).
+    A 1.10 safety margin covers test-set excursions."""
+    calib = [1.0]  # inputs are [0,1]-normalised
+    h = jnp.asarray(x_train)
+    for layer in model.layers:
+        h = h @ jnp.asarray(layer.w) + jnp.asarray(layer.b)
+        if layer.relu:
+            h = jnp.maximum(h, 0.0)
+        calib.append(float(jnp.max(jnp.abs(h))) * 1.10 + 1e-6)
+    return calib
+
+
+# ---------------------------------------------------------------------------
+# Entry: train all six models of the paper's evaluation
+# ---------------------------------------------------------------------------
+
+
+def train_all(data: dict[str, dsets.Dataset] | None = None) -> list[Model]:
+    """3 MLPs + 3 SVMs: MLP-C/SVM-C on cardio, MLP-R/SVM-R on both wines."""
+    data = data or dsets.generate_all()
+    return [
+        train_mlp_classifier(data["cardio"]),
+        train_mlp_regressor(data["redwine"]),
+        train_mlp_regressor(data["whitewine"]),
+        train_svm_classifier(data["cardio"]),
+        train_svm_regressor(data["redwine"]),
+        train_svm_regressor(data["whitewine"]),
+    ]

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `import compile...` work regardless of pytest invocation directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import compile  # noqa: F401  (enables jax x64 — required by the n=32 path)

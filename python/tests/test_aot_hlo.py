@@ -1,0 +1,47 @@
+"""AOT HLO-text interchange regressions.
+
+Two gotchas bit the rust consumer (xla_extension 0.5.1) and are pinned
+here so they never come back:
+
+* the default HLO printer ELIDES constants above ~10 elements as
+  ``constant({...})``, which the consumer-side text parser silently
+  parses as zeros — wiping the baked-in model weights;
+* modern metadata attributes (``source_end_line``) are rejected by the
+  0.5.1 text parser outright.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def lowered_with_big_constant():
+    w = jnp.asarray(np.arange(210, dtype=np.float32).reshape(21, 10))
+    fn = lambda x: (x @ w,)
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 21), jnp.float32))
+
+
+def test_no_elided_constants(lowered_with_big_constant):
+    txt = aot.to_hlo_text(lowered_with_big_constant)
+    assert "{...}" not in txt
+    # A distinctive weight value must literally appear in the text.
+    assert "209" in txt
+
+
+def test_no_modern_metadata(lowered_with_big_constant):
+    txt = aot.to_hlo_text(lowered_with_big_constant)
+    assert "source_end_line" not in txt
+    assert "metadata=" not in txt
+
+
+def test_entry_layout_present(lowered_with_big_constant):
+    txt = aot.to_hlo_text(lowered_with_big_constant)
+    assert txt.startswith("HloModule")
+    assert "f32[4,21]" in txt and "f32[4,10]" in txt
+    # return_tuple=True: output is a 1-tuple.
+    assert "(f32[4,10]" in txt

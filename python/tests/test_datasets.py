@@ -1,0 +1,63 @@
+"""Dataset generator tests: determinism, shapes, normalisation, split."""
+
+import numpy as np
+
+from compile import datasets as dsets
+
+
+def test_specs_match_uci_shapes():
+    assert dsets.SPECS["cardio"].n_features == 21
+    assert dsets.SPECS["cardio"].n_classes == 3
+    assert dsets.SPECS["cardio"].n_rows == 2126
+    assert dsets.SPECS["redwine"].n_features == 11
+    assert dsets.SPECS["redwine"].n_rows == 1599
+    assert dsets.SPECS["whitewine"].n_rows == 4898
+
+
+def test_deterministic():
+    a = dsets.generate(dsets.SPECS["cardio"])
+    b = dsets.generate(dsets.SPECS["cardio"])
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+    np.testing.assert_array_equal(a.y_test, b.y_test)
+
+
+def test_normalised_to_unit_interval():
+    for ds in dsets.generate_all().values():
+        x = np.concatenate([ds.x_train, ds.x_test])
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        # Every feature actually spans the interval (min-max normalised).
+        assert np.allclose(x.min(axis=0), 0.0, atol=1e-6)
+        assert np.allclose(x.max(axis=0), 1.0, atol=1e-6)
+
+
+def test_split_ratio_and_counts():
+    for name, ds in dsets.generate_all().items():
+        n = len(ds.x_train) + len(ds.x_test)
+        assert n == dsets.SPECS[name].n_rows
+        frac = len(ds.x_train) / n
+        assert abs(frac - 0.7) < 0.01
+
+
+def test_labels_in_range():
+    for ds in dsets.generate_all().values():
+        y = np.concatenate([ds.y_train, ds.y_test])
+        lo = ds.spec.label_offset
+        hi = lo + ds.spec.n_classes - 1
+        assert y.min() >= lo and y.max() <= hi
+        # All classes present.
+        assert len(np.unique(y)) == ds.spec.n_classes
+
+
+def test_csv_export_roundtrip(tmp_path):
+    ds = dsets.generate(dsets.SPECS["redwine"])
+    paths = dsets.export_csv(ds, str(tmp_path))
+    assert len(paths) == 2
+    rows = open(paths[1]).read().strip().split("\n")
+    assert rows[0].endswith(",label")
+    assert len(rows) - 1 == len(ds.x_test)
+    first = rows[1].split(",")
+    assert len(first) == ds.spec.n_features + 1
+    np.testing.assert_allclose(
+        [float(v) for v in first[:-1]], ds.x_test[0], atol=1e-7
+    )
+    assert int(first[-1]) == ds.y_test[0]

@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle vs the
+plain-numpy contract.  Hypothesis sweeps shapes, precisions and value
+ranges; every comparison is bit-exact (assert_array_equal), because the
+kernels model integer hardware."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+from compile.kernels import ref as kref
+from compile.kernels import simd_mac
+
+PRECISIONS = [32, 16, 8, 4]
+
+
+def _rand_q(rng, shape, n):
+    qmin, qmax = quant.qlimits(min(n, 16))  # operand magnitudes per contract
+    return rng.integers(qmin, qmax + 1, size=shape).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# dense_acc: Pallas kernel vs jnp oracle vs numpy
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(min_value=1, max_value=200),
+    k=st.integers(min_value=1, max_value=33),
+    m=st.integers(min_value=1, max_value=9),
+    n=st.sampled_from(PRECISIONS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_dense_acc_matches_ref(b, k, m, n, seed):
+    rng = np.random.default_rng(seed)
+    qx = _rand_q(rng, (b, k), n)
+    qw = _rand_q(rng, (k, m), n)
+    acc_dtype = jnp.int64 if n == 32 else jnp.int32
+    qb = rng.integers(-(2**20), 2**20, size=m).astype(np.int32)
+
+    got = simd_mac.dense_acc(jnp.asarray(qx), jnp.asarray(qw), jnp.asarray(qb), acc_dtype)
+    want = kref.dense_acc_ref(jnp.asarray(qx), jnp.asarray(qw), jnp.asarray(qb), acc_dtype)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # And against plain numpy, wrapped to the accumulator width (the dense
+    # path wraps exactly like the hardware register when operands are
+    # unconstrained; quant.layer_quant guarantees real models never wrap).
+    np_exact = qx.astype(np.int64) @ qw.astype(np.int64) + qb[None, :].astype(np.int64)
+    if acc_dtype == jnp.int32:
+        np_exact = ((np_exact + 2**31) % 2**32 - 2**31).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(want, dtype=np.int64), np_exact.astype(np.int64))
+
+
+def test_dense_acc_blocking_boundaries():
+    """Shapes straddling the BlockSpec grid (127/128/129...) must agree."""
+    rng = np.random.default_rng(7)
+    for b in (127, 128, 129, 256, 257):
+        qx = _rand_q(rng, (b, 21), 16)
+        qw = _rand_q(rng, (21, 5), 16)
+        qb = np.zeros(5, dtype=np.int32)
+        got = simd_mac.dense_acc(jnp.asarray(qx), jnp.asarray(qw), jnp.asarray(qb))
+        want = qx.astype(np.int64) @ qw.astype(np.int64)
+        want = ((want + 2**31) % 2**32 - 2**31).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_dense_acc_wide_n():
+    """N wider than one block tile."""
+    rng = np.random.default_rng(8)
+    qx = _rand_q(rng, (16, 8), 8)
+    qw = _rand_q(rng, (8, 300), 8)
+    qb = rng.integers(-100, 100, size=300).astype(np.int32)
+    got = simd_mac.dense_acc(jnp.asarray(qx), jnp.asarray(qw), jnp.asarray(qb))
+    want = qx.astype(np.int64) @ qw.astype(np.int64) + qb[None, :]
+    want = ((want + 2**31) % 2**32 - 2**31).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---------------------------------------------------------------------------
+# packed_simd_mac: Pallas kernel vs jnp oracle vs numpy lane contract
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.sampled_from(PRECISIONS),
+    m=st.integers(min_value=1, max_value=128),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_packed_simd_mac_matches_ref(n, m, seed):
+    rng = np.random.default_rng(seed)
+    wa = rng.integers(-(2**31), 2**31, size=m).astype(np.int64).astype(np.int32)
+    wb = rng.integers(-(2**31), 2**31, size=m).astype(np.int64).astype(np.int32)
+
+    got = simd_mac.packed_simd_mac(jnp.asarray(wa), jnp.asarray(wb), n)
+    want = kref.packed_simd_mac_ref(jnp.asarray(wa), jnp.asarray(wb), n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # Numpy lane contract: unpack lanes, multiply, wrapping-i32 accumulate.
+    la = quant.unpack_lanes(wa, n)
+    lb = quant.unpack_lanes(wb, n)
+    acc = np.sum(
+        (la * lb).astype(np.int64), axis=0
+    )  # exact, then wrap to i32:
+    acc = ((acc + 2**31) % 2**32 - 2**31).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(got), acc)
+
+
+def test_packed_simd_mac_lane_isolation():
+    """A value in lane i must not perturb lane j accumulators."""
+    for n in (16, 8, 4):
+        L = quant.lanes(n)
+        for i in range(L):
+            lanes_a = np.zeros((3, L), dtype=np.int64)
+            lanes_a[:, i] = [1, 2, 3]
+            lanes_b = np.zeros((3, L), dtype=np.int64)
+            lanes_b[:, i] = [4, 5, 6]
+            wa = quant.pack_lanes(lanes_a, n).astype(np.int32)
+            wb = quant.pack_lanes(lanes_b, n).astype(np.int32)
+            got = np.asarray(simd_mac.packed_simd_mac(jnp.asarray(wa), jnp.asarray(wb), n))
+            want = np.zeros(L, dtype=np.int32)
+            want[i] = 1 * 4 + 2 * 5 + 3 * 6
+            np.testing.assert_array_equal(got, want)
+
+
+def test_packed_simd_mac_negative_lanes():
+    """Sign extension across lanes (the ^sign - sign identity)."""
+    n = 8
+    lanes_a = np.array([[-128, -1, 127, -5]], dtype=np.int64)
+    lanes_b = np.array([[127, -1, -128, 5]], dtype=np.int64)
+    wa = quant.pack_lanes(lanes_a, n).astype(np.int32)
+    wb = quant.pack_lanes(lanes_b, n).astype(np.int32)
+    got = np.asarray(simd_mac.packed_simd_mac(jnp.asarray(wa), jnp.asarray(wb), n))
+    np.testing.assert_array_equal(got, [-128 * 127, 1, 127 * -128, -25])
+
+
+def test_packed_simd_mac_wraps_like_hardware():
+    """32-bit accumulator wrap-around, as in the printed unit."""
+    n = 16
+    big = 32767
+    m = 5000  # 5000 * 32767^2 ≈ 5.4e12 >> 2^31: must wrap
+    lanes_a = np.full((m, 2), big, dtype=np.int64)
+    lanes_b = np.full((m, 2), big, dtype=np.int64)
+    wa = quant.pack_lanes(lanes_a, n).astype(np.int32)
+    wb = quant.pack_lanes(lanes_b, n).astype(np.int32)
+    got = np.asarray(simd_mac.packed_simd_mac(jnp.asarray(wa), jnp.asarray(wb), n))
+    want = ((m * big * big + 2**31) % 2**32) - 2**31
+    np.testing.assert_array_equal(got, [want, want])
+
+
+# ---------------------------------------------------------------------------
+# rescale_ref vs numpy contract
+# ---------------------------------------------------------------------------
+
+
+@given(
+    shift=st.integers(min_value=0, max_value=20),
+    n=st.sampled_from(PRECISIONS),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_rescale_ref_matches_numpy(shift, n, seed):
+    rng = np.random.default_rng(seed)
+    acc = rng.integers(-(2**40), 2**40, size=64)
+    got = np.asarray(kref.rescale_ref(jnp.asarray(acc, dtype=jnp.int64), shift, n))
+    want = quant.rescale(acc, shift, n)
+    np.testing.assert_array_equal(got, want)

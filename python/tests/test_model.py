@@ -1,0 +1,163 @@
+"""L2 model tests: quantised forward (Pallas vs oracle, bit-exact), float
+reference sanity, heads, serialisation roundtrip, accuracy degradation."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets as dsets
+from compile import model as M
+from compile import quant
+
+
+def tiny_mlp(head="argmax", n_classes=3, k=6, seed=0):
+    rng = np.random.default_rng(seed)
+    out = n_classes if head == "argmax" else 1
+    layers = [
+        M.DenseLayer(
+            w=rng.normal(scale=0.8, size=(k, 4)).astype(np.float32),
+            b=rng.normal(scale=0.2, size=4).astype(np.float32),
+            relu=True,
+        ),
+        M.DenseLayer(
+            w=rng.normal(scale=0.8, size=(4, out)).astype(np.float32),
+            b=rng.normal(scale=0.2, size=out).astype(np.float32),
+            relu=False,
+        ),
+    ]
+    m = M.Model(
+        name="tiny",
+        dataset="synth",
+        task="classification" if head == "argmax" else "regression",
+        head=head,
+        layers=layers,
+        calib=[1.0, 4.0, 6.0],
+        n_classes=n_classes,
+        label_offset=0 if head == "argmax" else 3,
+    )
+    return m
+
+
+def tiny_svm_ovo(seed=1):
+    rng = np.random.default_rng(seed)
+    pairs = [(0, 1), (0, 2), (1, 2)]
+    layers = [
+        M.DenseLayer(
+            w=rng.normal(scale=0.5, size=(5, 3)).astype(np.float32),
+            b=rng.normal(scale=0.1, size=3).astype(np.float32),
+            relu=False,
+        )
+    ]
+    return M.Model(
+        name="tiny_svm",
+        dataset="synth",
+        task="classification",
+        head="ovo_vote",
+        layers=layers,
+        calib=[1.0, 3.0],
+        n_classes=3,
+        label_offset=0,
+        ovo_pairs=pairs,
+    )
+
+
+@pytest.mark.parametrize("n", M.PRECISIONS)
+def test_quantized_pallas_equals_oracle(n):
+    m = tiny_mlp()
+    x = jnp.asarray(np.random.default_rng(2).uniform(0, 1, size=(37, 6)).astype(np.float32))
+    a = np.asarray(M.quantized_forward(m, x, n, use_pallas=True))
+    b = np.asarray(M.quantized_forward(m, x, n, use_pallas=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_quantized32_close_to_float():
+    m = tiny_mlp()
+    x = jnp.asarray(np.random.default_rng(3).uniform(0, 1, size=(64, 6)).astype(np.float32))
+    f = np.asarray(M.float_forward(m, x))
+    q = np.asarray(M.quantized_forward(m, x, 32, use_pallas=False))
+    np.testing.assert_allclose(q, f, atol=1e-3)
+
+
+def test_quantization_error_grows_as_precision_drops():
+    m = tiny_mlp()
+    x = jnp.asarray(np.random.default_rng(4).uniform(0, 1, size=(128, 6)).astype(np.float32))
+    f = np.asarray(M.float_forward(m, x))
+    errs = []
+    for n in (32, 16, 8, 4):
+        q = np.asarray(M.quantized_forward(m, x, n, use_pallas=False))
+        errs.append(float(np.mean(np.abs(q - f))))
+    assert errs[0] <= errs[1] <= errs[2] <= errs[3]
+    assert errs[0] < 1e-3 and errs[3] > errs[0]
+
+
+def test_ovo_vote_head():
+    m = tiny_svm_ovo()
+    # Hand-crafted raw pair decisions: [+, +, +] => class0 beats 1 and 2,
+    # class1 beats 2 => votes [2, 1, 0].
+    raw = jnp.asarray(np.array([[1.0, 1.0, 1.0]], dtype=np.float32))
+    votes = np.asarray(M._head_scores(m, raw))
+    np.testing.assert_array_equal(votes, [[2.0, 1.0, 0.0]])
+    # [-, -, -]: 1 beats 0, 2 beats 0, 2 beats 1 => [0, 1, 2].
+    votes = np.asarray(M._head_scores(m, -raw))
+    np.testing.assert_array_equal(votes, [[0.0, 1.0, 2.0]])
+
+
+def test_ovo_tie_break_boundary():
+    m = tiny_svm_ovo()
+    # Zero decision counts as ">= 0" => vote for the first class of the pair.
+    raw = jnp.zeros((1, 3), dtype=jnp.float32)
+    votes = np.asarray(M._head_scores(m, raw))
+    np.testing.assert_array_equal(votes, [[2.0, 1.0, 0.0]])
+
+
+def test_predict_round_head_clamps():
+    m = tiny_mlp(head="round")
+    m.n_classes, m.label_offset = 6, 3  # wine quality 3..8
+    scores = np.array([[2.2], [3.4], [5.5], [9.7], [7.49]])
+    pred = M.predict_from_scores(m, scores)
+    np.testing.assert_array_equal(pred, [3, 3, 6, 8, 7])
+
+
+def test_predict_argmax_offset():
+    m = tiny_mlp(head="argmax")
+    m.label_offset = 1
+    pred = M.predict_from_scores(m, np.array([[0.1, 0.9, 0.3]]))
+    np.testing.assert_array_equal(pred, [2])
+
+
+def test_accuracy_metric():
+    m = tiny_mlp(head="argmax")
+    scores = np.array([[1, 0, 0], [0, 1, 0], [0, 0, 1], [1, 0, 0]], dtype=np.float32)
+    labels = np.array([0, 1, 2, 2])
+    assert M.accuracy(m, scores, labels) == pytest.approx(0.75)
+
+
+def test_json_roundtrip():
+    m = tiny_svm_ovo()
+    m.float_accuracy = 0.87
+    d = M.to_json_dict(m)
+    m2 = M.from_json_dict(d)
+    assert m2.name == m.name and m2.head == m.head
+    assert m2.ovo_pairs == m.ovo_pairs
+    np.testing.assert_allclose(m2.layers[0].w, m.layers[0].w)
+    np.testing.assert_allclose(m2.calib, m.calib)
+    assert m2.float_accuracy == pytest.approx(0.87)
+
+
+def test_layer_quants_derivation():
+    m = tiny_mlp()
+    for n in M.PRECISIONS:
+        lqs = m.layer_quants(n)
+        assert len(lqs) == 2
+        for lq in lqs:
+            assert lq.shift >= 0
+            lq.check_no_overflow()
+
+
+def test_quantized_forward_batch_one():
+    m = tiny_mlp()
+    x = jnp.asarray(np.random.default_rng(5).uniform(0, 1, size=(1, 6)).astype(np.float32))
+    a = np.asarray(M.quantized_forward(m, x, 16, use_pallas=True))
+    b = np.asarray(M.quantized_forward(m, x, 16, use_pallas=False))
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (1, 3)

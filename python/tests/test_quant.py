@@ -1,0 +1,164 @@
+"""Unit + property tests for the fixed-point contract (compile.quant)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+
+PRECISIONS = [32, 16, 8, 4]
+
+
+# ---------------------------------------------------------------------------
+# frac_bits / int_bits
+# ---------------------------------------------------------------------------
+
+
+def test_int_bits_basics():
+    assert quant.int_bits(0.5) == 0
+    assert quant.int_bits(0.999) == 0
+    assert quant.int_bits(1.0) == 1
+    assert quant.int_bits(1.5) == 1
+    assert quant.int_bits(2.0) == 2
+    assert quant.int_bits(3.99) == 2
+    assert quant.int_bits(4.0) == 3
+
+
+@given(m=st.floats(min_value=1e-6, max_value=1e6), n=st.sampled_from(PRECISIONS))
+def test_frac_bits_in_range(m, n):
+    f = quant.frac_bits(m, n)
+    assert 0 <= f <= n - 1
+
+
+@given(m=st.floats(min_value=1e-3, max_value=1e3), n=st.sampled_from(PRECISIONS))
+def test_frac_bits_representable(m, n):
+    """Quantising +-m at the assigned f must not saturate badly: the value
+    scaled by 2^f stays within ~2x of the quantisation range."""
+    f = quant.frac_bits(m, n)
+    if f == 0 and quant.int_bits(m) >= n:
+        return  # magnitude exceeds the format entirely; saturation expected
+    assert m * (1 << f) <= (1 << (n - 1))
+
+
+# ---------------------------------------------------------------------------
+# quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+@given(
+    v=st.lists(st.floats(min_value=-4, max_value=4), min_size=1, max_size=64),
+    n=st.sampled_from(PRECISIONS),
+)
+def test_quantize_dequantize_error_bound(v, n):
+    v = np.asarray(v)
+    f = quant.frac_bits(4.0, n)
+    q = quant.quantize(v, f, n)
+    qmin, qmax = quant.qlimits(n)
+    assert q.min() >= qmin and q.max() <= qmax
+    # In-range values round to within half an LSB.
+    d = quant.dequantize(q, f)
+    in_range = (v >= qmin / (1 << f)) & (v <= qmax / (1 << f))
+    assert np.all(np.abs(d[in_range] - v[in_range]) <= 0.5 / (1 << f) + 1e-12)
+
+
+def test_quantize_round_half_up():
+    # floor(x + 0.5): 0.5 LSB rounds up, -0.5 LSB rounds toward zero/up.
+    assert quant.quantize(np.array([0.5]), 0, 8)[0] == 1
+    assert quant.quantize(np.array([-0.5]), 0, 8)[0] == 0
+    assert quant.quantize(np.array([1.5]), 0, 8)[0] == 2
+    assert quant.quantize(np.array([-1.5]), 0, 8)[0] == -1
+
+
+def test_quantize_saturates():
+    assert quant.quantize(np.array([1e9]), 4, 8)[0] == 127
+    assert quant.quantize(np.array([-1e9]), 4, 8)[0] == -128
+
+
+# ---------------------------------------------------------------------------
+# rescale
+# ---------------------------------------------------------------------------
+
+
+@given(
+    acc=st.lists(st.integers(min_value=-(2**40), max_value=2**40), min_size=1, max_size=32),
+    shift=st.integers(min_value=0, max_value=24),
+    n=st.sampled_from(PRECISIONS),
+)
+def test_rescale_matches_float_rounding(acc, shift, n):
+    acc = np.asarray(acc, dtype=np.int64)
+    got = quant.rescale(acc, shift, n)
+    want = quant.sat(np.floor(acc / (1 << shift) + 0.5).astype(np.int64), n)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rescale_zero_shift_saturates_only():
+    acc = np.array([300, -300, 5], dtype=np.int64)
+    np.testing.assert_array_equal(quant.rescale(acc, 0, 8), [127, -128, 5])
+
+
+# ---------------------------------------------------------------------------
+# lane pack / unpack
+# ---------------------------------------------------------------------------
+
+
+@given(n=st.sampled_from([4, 8, 16, 32]), data=st.data())
+@settings(max_examples=200)
+def test_pack_unpack_roundtrip(n, data):
+    L = quant.lanes(n)
+    qmin, qmax = quant.qlimits(n)
+    vals = data.draw(
+        st.lists(
+            st.lists(st.integers(min_value=qmin, max_value=qmax), min_size=L, max_size=L),
+            min_size=1,
+            max_size=16,
+        )
+    )
+    q = np.asarray(vals, dtype=np.int64)
+    word = quant.pack_lanes(q, n)
+    # Packed words are valid signed 32-bit values.
+    assert word.min() >= -(2**31) and word.max() <= 2**31 - 1
+    np.testing.assert_array_equal(quant.unpack_lanes(word, n), q)
+
+
+def test_pack_lane_order():
+    # Lane 0 occupies the least-significant bits.
+    w = quant.pack_lanes(np.array([[1, 2]]), 16)
+    assert w[0] == (2 << 16) | 1
+
+
+def test_lanes_counts():
+    assert [quant.lanes(n) for n in (32, 16, 8, 4)] == [1, 2, 4, 8]
+    # 4-bit TP-ISA datapath: no room to parallelise (paper §IV-A).
+    assert quant.lanes(4, datapath=4) == 1
+
+
+# ---------------------------------------------------------------------------
+# layer_quant invariants
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.sampled_from(PRECISIONS),
+    mx=st.floats(min_value=0.1, max_value=8.0),
+    mw=st.floats(min_value=0.01, max_value=8.0),
+    my=st.floats(min_value=0.01, max_value=64.0),
+    k=st.integers(min_value=1, max_value=64),
+)
+def test_layer_quant_invariants(n, mx, mw, my, k):
+    lq = quant.layer_quant(n, mx, mw, my, k)
+    assert lq.shift >= 0
+    assert 0 <= lq.fx <= n - 1 and 0 <= lq.fw <= n - 1 and 0 <= lq.fy <= n - 1
+    lq.check_no_overflow()
+
+
+def test_dense_quantized_ref_exact_small():
+    """Hand-computed tiny layer."""
+    x = np.array([[0.5, 0.25]])
+    w = np.array([[1.0], [2.0]])
+    b = np.array([0.125])
+    lq = quant.layer_quant(8, 1.0, 2.0, 2.0, 2)
+    scores, acc = quant.dense_quantized_ref(x, w, b, lq, relu=False, last=True)
+    # fx=6, fw=5: qx=[32,16], qw=[32,64], qb=0.125*2^11=256
+    assert acc[0, 0] == 32 * 32 + 16 * 64 + 256
+    assert scores[0, 0] == pytest.approx(acc[0, 0] / 2**11)

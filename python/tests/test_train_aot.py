@@ -1,0 +1,84 @@
+"""Training + AOT lowering smoke tests (kept light: full training of all
+six models happens once in `make artifacts`)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, datasets as dsets, model as M, train
+
+
+@pytest.fixture(scope="module")
+def redwine():
+    return dsets.generate(dsets.SPECS["redwine"])
+
+
+@pytest.fixture(scope="module")
+def cardio():
+    return dsets.generate(dsets.SPECS["cardio"])
+
+
+@pytest.fixture(scope="module")
+def svm_r(redwine):
+    return train.train_svm_regressor(redwine)
+
+
+def test_svm_regressor_learns(redwine, svm_r):
+    """A linear model on the ordinal synthetic wine data must beat the
+    majority-class baseline."""
+    counts = np.bincount(redwine.y_test - redwine.spec.label_offset)
+    majority = counts.max() / counts.sum()
+    assert svm_r.float_accuracy > majority + 0.03
+    assert svm_r.head == "round"
+    assert svm_r.arch == [11, 1]
+
+
+def test_calibration_covers_activations(redwine, svm_r):
+    scores = np.asarray(M.float_forward(svm_r, jnp.asarray(redwine.x_test)))
+    assert np.max(np.abs(scores)) <= svm_r.calib[-1] + 1e-3
+
+
+def test_svm_classifier_ovo_structure(cardio):
+    m = train.train_svm_classifier(cardio)
+    assert m.head == "ovo_vote"
+    assert m.ovo_pairs == [(0, 1), (0, 2), (1, 2)]
+    assert m.arch == [21, 3]
+    assert m.float_accuracy > 0.75
+
+
+def test_mlp_classifier_learns(cardio):
+    m = train.train_mlp_classifier(cardio)
+    assert m.arch == [21, train.HIDDEN, 3]
+    assert m.float_accuracy > 0.80
+
+
+def test_quantized_16bit_no_accuracy_loss(redwine, svm_r):
+    """Paper Table I: P16 loses no accuracy (params are 16-bit)."""
+    acc16 = aot.eval_quantized(svm_r, redwine, 16)
+    assert abs(acc16 - svm_r.float_accuracy) < 0.01
+
+
+def test_lower_model_emits_hlo(redwine, svm_r):
+    txt = aot.lower_model(svm_r, 16)
+    assert txt.startswith("HloModule")
+    assert f"f32[{aot.BATCH},11]" in txt  # input shape baked in
+    txt_f = aot.lower_model(svm_r, None)
+    assert "f32" in txt_f and txt_f.startswith("HloModule")
+
+
+def test_lower_mac_unit_emits_hlo():
+    txt = aot.lower_mac_unit(8)
+    assert txt.startswith("HloModule")
+    assert f"s32[{aot.MAC_UNIT_WORDS}]" in txt
+
+
+def test_quantized_layer_export_consistent(svm_r):
+    exp = aot.quantized_layer_export(svm_r, 8)
+    assert len(exp) == 1
+    lq = svm_r.layer_quants(8)[0]
+    assert exp[0]["fx"] == lq.fx and exp[0]["fw"] == lq.fw
+    assert exp[0]["shift"] == lq.fx + lq.fw - lq.fy
+    qw = np.asarray(exp[0]["qw"])
+    assert qw.shape == (11, 1)
+    assert qw.min() >= -128 and qw.max() <= 127

@@ -1,0 +1,59 @@
+//! Ablation: the coordinator's dynamic-batching policy (DESIGN.md
+//! design choice).  Sweeps the batcher's max_batch against a fixed
+//! streamed load and reports throughput + latency, demonstrating (a)
+//! why the batcher exists at all (tiny batches pay the fixed 256-sample
+//! executable cost per flush) and (b) why max_batch is aligned to the
+//! executable batch (§Perf iteration 3).
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context};
+use printed_bespoke::coordinator::router::Key;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    println!("max_batch   throughput [req/s]   p50 [ms]   p99 [ms]   mean batch");
+    let mut rows = Vec::new();
+    for max_batch in [1usize, 8, 32, 64, 128, 256] {
+        let svc = Service::start(ServiceConfig { max_batch, linger_ms: 1 })?;
+        let model = svc.models[0].clone();
+        let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
+        let key = Key::precision(&model.name, 8);
+        let xs: Vec<Vec<f32>> = ds.x.iter().take(512).cloned().collect();
+        // Warm-up compile.
+        svc.scores(&key, &xs[..1])?;
+
+        let mut lat = Vec::new();
+        let t0 = Instant::now();
+        for _round in 0..3 {
+            let pending: Vec<_> = xs
+                .iter()
+                .map(|x| (Instant::now(), svc.submit(key.clone(), x.clone()).unwrap()))
+                .collect();
+            for (t, rx) in pending {
+                rx.recv().context("reply")?.map_err(|e| anyhow!(e))?;
+                lat.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let tput = (3 * xs.len()) as f64 / wall;
+        let s = stats::summarize(&lat);
+        let mb = svc.metrics.lock().unwrap().mean_batch_size();
+        println!(
+            "{max_batch:>9}   {tput:>18.0}   {:>8.3}   {:>8.3}   {mb:>10.1}",
+            s.p50, s.p99
+        );
+        rows.push((max_batch, tput));
+    }
+    // The ablation's claim: batching wins by a wide margin over
+    // batch=1, and large batches (>=128) beat small ones (<=8).
+    let t1 = rows.iter().find(|(b, _)| *b == 1).unwrap().1;
+    let t8 = rows.iter().find(|(b, _)| *b == 8).unwrap().1;
+    let t256 = rows.iter().find(|(b, _)| *b == 256).unwrap().1;
+    assert!(t256 > 2.0 * t1, "batching must win big: {t256} vs {t1}");
+    assert!(t256 > t8, "aligned batches must beat small ones");
+    println!("ablation: batching policy justified (x{:.1} over batch=1)", t256 / t1);
+    Ok(())
+}

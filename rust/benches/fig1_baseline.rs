@@ -1,0 +1,27 @@
+//! Bench: regenerate paper Fig. 1 (baseline area / power / clock for
+//! Zero-Riscy and TP-ISA in EGFET, plus the ZR unit breakdown), and
+//! time the synthesis pass itself.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+use printed_bespoke::hw::egfet::egfet;
+use printed_bespoke::hw::synth::{synthesize, zero_riscy};
+use printed_bespoke::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::load(4)?;
+    let f = report::fig1(&ctx);
+    println!("{}", f.text);
+
+    // Sanity pins (the calibration anchors).
+    assert!((f.zr.area_cm2() - 67.53).abs() / 67.53 < 0.005);
+    assert!((f.zr.power_mw - 291.21).abs() / 291.21 < 0.005);
+    assert!(f.tp4.area_mm2 < f.tp32.area_mm2);
+
+    let tech = egfet();
+    let spec = zero_riscy();
+    bench("synthesize(zero-riscy)", 10, 100, || {
+        std::hint::black_box(synthesize(&spec, &tech));
+    });
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Bench: regenerate paper Fig. 4 (average accuracy loss per model per
+//! precision option) and verify the shape: no loss at 32/16 bits, small
+//! loss at 8, a jump at 4 with the wine models worst.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+use printed_bespoke::util::bench::bench;
+use printed_bespoke::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::load(4)?;
+    let f = report::fig4(&ctx);
+    println!("{}", f.text);
+
+    let col = |i: usize| -> Vec<f64> { f.losses.iter().map(|(_, r)| r[i]).collect() };
+    let (l32, l16, l8, l4) = (col(0), col(1), col(2), col(3));
+    assert!(stats::mean(&l32).abs() < 0.05, "p32 must be lossless");
+    assert!(stats::mean(&l16).abs() < 0.5, "p16 ~ lossless");
+    assert!(stats::mean(&l8) < 2.0, "p8 small loss");
+    assert!(
+        stats::mean(&l4) > stats::mean(&l8) + 2.0,
+        "p4 must jump (paper: up to 26% on RedWine)"
+    );
+    // The worst p4 model is a wine model (paper: RedWine).
+    let worst = f
+        .losses
+        .iter()
+        .max_by(|a, b| a.1[3].partial_cmp(&b.1[3]).unwrap())
+        .unwrap();
+    println!("worst p4 model: {} ({:.2}%)", worst.0, worst.1[3]);
+    assert!(worst.0.contains("wine"));
+    println!("Fig 4 shape: OK");
+
+    bench("fig4 (manifest accuracy matrix)", 1, 50, || {
+        std::hint::black_box(report::fig4(&ctx));
+    });
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate paper Fig. 5 (TP-ISA configuration scatter with
+//! the area-speedup Pareto front) and verify its structure.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+use printed_bespoke::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::load(6)?;
+    let f = report::fig5(&ctx)?;
+    println!("{}", f.text);
+
+    // Paper: "The lower-left group of points corresponds to the baseline
+    // cores, achieving no speedup, while the upper-side implementations
+    // are generated through the proposed methodology."
+    for p in &f.points {
+        if matches!(p.variant, printed_bespoke::ml::codegen_tpisa::TpVariant::Baseline) {
+            assert!(p.speedup_pct.abs() < 1.0, "{}: baseline must have ~0 speedup", p.label);
+        } else {
+            assert!(p.speedup_pct > 50.0, "{}: MAC configs speed up sharply", p.label);
+        }
+    }
+    // The front is non-trivial: at least 3 points, containing both a
+    // cheap baseline and a high-speedup MAC config.
+    let front: Vec<&str> = f
+        .points
+        .iter()
+        .zip(&f.pareto)
+        .filter(|(_, &on)| on)
+        .map(|(p, _)| p.label.as_str())
+        .collect();
+    println!("Pareto front: {front:?}");
+    assert!(front.len() >= 3);
+    assert!(front.iter().any(|l| !l.contains('m')));
+    assert!(front.iter().any(|l| l.contains('m')));
+    println!("Fig 5 structure: OK");
+
+    bench("tpisa_sweep (14 configs x 6 models)", 0, 3, || {
+        std::hint::black_box(report::fig5(&ctx).unwrap());
+    });
+    Ok(())
+}

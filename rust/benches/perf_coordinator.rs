@@ -1,0 +1,50 @@
+//! Perf bench (L3 serving path): PJRT executable throughput, coordinator
+//! bulk overhead, and streaming (router + dynamic batcher) throughput.
+//! The coordinator target: within 1.5x of raw PJRT execute; max_batch aligned to the 256-sample executable batch (padding waste otherwise) (DESIGN.md
+//! §Perf).
+
+use anyhow::{anyhow, Context};
+use printed_bespoke::coordinator::router::Key;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::util::bench::{bench, bench_throughput};
+
+fn main() -> anyhow::Result<()> {
+    let svc = Service::start(ServiceConfig { max_batch: 256, linger_ms: 1 })?;
+    let model = svc.models[0].clone();
+    let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
+    let key = Key::precision(&model.name, 8);
+    let xs: Vec<Vec<f32>> = ds.x.iter().take(512).cloned().collect();
+
+    // Warm-up compile.
+    svc.scores(&key, &xs[..1])?;
+
+    // Bulk path: full batches through the coordinator.
+    let bulk = bench_throughput("coordinator bulk 512 samples (p8)", xs.len(), 1, 10, || {
+        std::hint::black_box(svc.scores(&key, &xs).unwrap());
+    });
+
+    // Streaming path: single-sample requests through router + batcher.
+    let stream = bench_throughput("coordinator streaming 512 reqs (p8)", xs.len(), 1, 5, || {
+        let pending: Vec<_> = xs
+            .iter()
+            .map(|x| svc.submit(key.clone(), x.clone()).unwrap())
+            .collect();
+        for rx in pending {
+            rx.recv().context("reply").unwrap().map_err(|e| anyhow!(e)).unwrap();
+        }
+    });
+
+    bench("single-sample round trip (p8)", 5, 50, || {
+        let rx = svc.submit(key.clone(), xs[0].clone()).unwrap();
+        rx.recv().unwrap().unwrap();
+    });
+
+    println!(
+        "\nstreaming/bulk throughput ratio: {:.2} (target: batching amortises \
+         the per-request overhead to >= 0.3x bulk)",
+        stream / bulk
+    );
+    println!("metrics: {}", svc.metrics.lock().unwrap().summary());
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Perf bench (L3 hot path): ISS simulation rate in instructions/second
+//! for both cores, plus per-sample inference cost per variant.  Used by
+//! the EXPERIMENTS.md §Perf iteration log.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::ml::codegen_rv32::{self, Rv32Variant};
+use printed_bespoke::ml::codegen_tpisa::{self, TpVariant};
+use printed_bespoke::ml::harness;
+use printed_bespoke::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::load(32)?;
+    let model = &ctx.models[0]; // mlp_c_cardio: the largest program
+    let xs = &ctx.cycle_samples[0];
+
+    // Zero-Riscy ISS rate.
+    for variant in [Rv32Variant::Baseline, Rv32Variant::Simd(8)] {
+        let prog = codegen_rv32::generate(model, variant)?;
+        let mut instrs = 0u64;
+        let r = bench(&format!("zero-riscy ISS {} x{}", variant.label(), xs.len()), 1, 10, || {
+            let run = harness::run_rv32(model, &prog, xs).unwrap();
+            instrs = run.profile.instructions;
+        });
+        let ips = instrs as f64 / (r.min_ms / 1e3);
+        println!("{:<40} {:>12.2} M instr/s", format!("  -> {}", variant.label()), ips / 1e6);
+    }
+
+    // TP-ISA ISS rate (software-multiply baseline is the heavy one).
+    for (d, variant) in [(8u32, TpVariant::Baseline), (8, TpVariant::Mac { precision: 8 })] {
+        let prog = codegen_tpisa::generate(model, d, variant)?;
+        let mut instrs = 0u64;
+        let r = bench(&format!("tp-isa d{d} ISS {} x{}", variant.label(), xs.len()), 1, 5, || {
+            let run = harness::run_tpisa(model, &prog, xs).unwrap();
+            instrs = run.profile.instructions;
+        });
+        let ips = instrs as f64 / (r.min_ms / 1e3);
+        println!("{:<40} {:>12.2} M instr/s", format!("  -> {}", variant.label()), ips / 1e6);
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate paper Table I (bespoke Zero-Riscy area/power gains,
+//! average speedup and accuracy loss across the six ML models) and
+//! verify the paper's orderings hold.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+use printed_bespoke::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::load(8)?;
+    let t = report::table1(&ctx)?;
+    println!("{}", t.text);
+
+    let get = |name: &str| t.rows.iter().find(|r| r.name == name).unwrap();
+    let (b, m32, p16, p8, p4) = (
+        get("ZR B"),
+        get("ZR B MAC 32"),
+        get("ZR B MAC P16"),
+        get("ZR B MAC P8"),
+        get("ZR B MAC P4"),
+    );
+    // Paper Table I shape: MAC32 area gain dips below B; P16 < P8 < P4
+    // in gains; speedups strictly increasing; accuracy loss jumps at P4.
+    assert!(m32.area_gain_pct < b.area_gain_pct);
+    assert!(p16.area_gain_pct > b.area_gain_pct);
+    assert!(p8.area_gain_pct > p16.area_gain_pct);
+    assert!(p4.area_gain_pct > p8.area_gain_pct);
+    assert!(b.speedup_pct.abs() < 1.0);
+    assert!(m32.speedup_pct > 5.0);
+    assert!(p16.speedup_pct > m32.speedup_pct);
+    assert!(p8.speedup_pct > p16.speedup_pct);
+    assert!(p4.speedup_pct > p8.speedup_pct);
+    assert!(p4.acc_loss_pct > p8.acc_loss_pct + 1.0);
+    assert!(p16.acc_loss_pct < 0.5);
+    println!("Table I orderings: OK");
+
+    bench("zr_table1 sweep (6 models x 5 variants)", 0, 3, || {
+        std::hint::black_box(report::table1(&ctx).unwrap());
+    });
+    Ok(())
+}

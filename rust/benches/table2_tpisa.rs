@@ -1,0 +1,25 @@
+//! Bench: regenerate paper Table II (the bespoke 8-bit TP-ISA MAC
+//! Pareto solution) and check its factors against the paper's bands.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+use printed_bespoke::util::bench::bench;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = EvalContext::load(8)?;
+    let t = report::table2(&ctx)?;
+    println!("{}", t.text);
+
+    // Paper: x1.98 area, x1.82 power, 0.5% err, up to 85.1% speedup.
+    // Bands: same winner, same rough factors.
+    assert!((1.4..=2.6).contains(&t.area_factor), "area factor {}", t.area_factor);
+    assert!((1.4..=2.6).contains(&t.power_factor), "power factor {}", t.power_factor);
+    assert!(t.speedup_pct > 60.0, "speedup {}", t.speedup_pct);
+    assert!(t.err_pct < 2.0, "err {}", t.err_pct);
+    println!("Table II bands: OK");
+
+    bench("table2 (d8 sweep pair)", 0, 3, || {
+        std::hint::black_box(report::table2(&ctx).unwrap());
+    });
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! The bespoke design flow — the paper's core contribution (§III):
+//! measure what a deployment actually uses (workflow step ③), remove
+//! what it doesn't, and re-synthesise.
+//!
+//! * [`profile`] — runs the profiling suite (§III-A) and the ML
+//!   benchmarks on the baseline ISS and aggregates utilization.
+//! * [`reduction`] — maps a utilization profile to a reduced
+//!   [`crate::hw::synth::CoreSpec`]: unit removal, ISA trimming,
+//!   register-file shrink, PC/BAR narrowing.
+
+pub mod profile;
+pub mod reduction;

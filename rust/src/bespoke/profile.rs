@@ -1,0 +1,95 @@
+//! Utilization profiling (workflow step ③): run the application set on
+//! the baseline core and record which instructions, registers, CSRs and
+//! address ranges are actually exercised.
+
+use anyhow::Result;
+
+use crate::ml::codegen_rv32::{self, Rv32Variant, RAM_BYTES};
+use crate::ml::model::Model;
+use crate::ml::{harness, microbench};
+use crate::sim::trace::Profile;
+use crate::sim::zero_riscy::{Halt, ZeroRiscy, ALL_MNEMONICS};
+
+/// A utilization report over a workload set.
+#[derive(Debug, Clone)]
+pub struct Utilization {
+    pub profile: Profile,
+    pub unused_instructions: Vec<&'static str>,
+    pub regs_needed: u32,
+    pub pc_bits_needed: u32,
+    pub bar_bits_needed: u32,
+    pub workloads: Vec<String>,
+}
+
+impl Utilization {
+    pub fn from_profile(profile: Profile, workloads: Vec<String>) -> Utilization {
+        Utilization {
+            unused_instructions: profile.unused_mnemonics(ALL_MNEMONICS),
+            regs_needed: profile.reg_count(),
+            pc_bits_needed: profile.pc_bits_needed(),
+            bar_bits_needed: profile.bar_bits_needed(),
+            profile,
+            workloads,
+        }
+    }
+}
+
+/// Profile the §III-A suite (MLP, DT, mul/div, insertion sort) on the
+/// baseline Zero-Riscy.
+pub fn profile_suite() -> Result<Utilization> {
+    let mut merged = Profile::default();
+    let mut names = Vec::new();
+    for (name, prog) in microbench::suite()? {
+        let mut sim = ZeroRiscy::new(&prog, &[], RAM_BYTES, None);
+        anyhow::ensure!(sim.run(10_000_000)? == Halt::Break, "{name} did not halt");
+        merged.merge(&sim.profile);
+        names.push(name.to_string());
+    }
+    Ok(Utilization::from_profile(merged, names))
+}
+
+/// Profile the six ML models (baseline codegen) on the baseline core,
+/// over a few samples each.
+pub fn profile_models(models: &[Model], samples: &[Vec<Vec<f32>>]) -> Result<Utilization> {
+    let mut merged = Profile::default();
+    let mut names = Vec::new();
+    for (model, xs) in models.iter().zip(samples) {
+        let prog = codegen_rv32::generate(model, Rv32Variant::Baseline)?;
+        let run = harness::run_rv32(model, &prog, xs)?;
+        merged.merge(&run.profile);
+        names.push(model.name.clone());
+    }
+    Ok(Utilization::from_profile(merged, names))
+}
+
+/// Combined utilization of the suite + models (the paper's workload set).
+pub fn profile_all(models: &[Model], samples: &[Vec<Vec<f32>>]) -> Result<Utilization> {
+    let mut u = profile_suite()?;
+    let m = profile_models(models, samples)?;
+    u.profile.merge(&m.profile);
+    let mut workloads = u.workloads.clone();
+    workloads.extend(m.workloads);
+    Ok(Utilization::from_profile(u.profile, workloads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_utilization_matches_paper_observations() {
+        let u = profile_suite().unwrap();
+        // §III-A: "the SLT, most CSR, System Calls, and MULH
+        // instructions remain unused".
+        for m in ["slt", "csrrw", "csrrs", "ecall", "mulh", "mulhsu", "mulhu"] {
+            assert!(u.unused_instructions.contains(&m), "{m}");
+        }
+        // "12 registers are sufficient" — the suite stays in that
+        // neighbourhood.
+        assert!(u.regs_needed <= 14, "regs {}", u.regs_needed);
+        // "reduction of the PC from 32 bits to 10" — code is tiny.
+        assert!(u.pc_bits_needed <= 12, "pc bits {}", u.pc_bits_needed);
+        assert!(u.bar_bits_needed <= 12, "bar bits {}", u.bar_bits_needed);
+        assert!(!u.profile.csr_used);
+    }
+}

@@ -1,0 +1,128 @@
+//! The reduction pass: map measured utilization to a bespoke core
+//! configuration (§III-A) — remove the Debug / IRQ / compressed-decoder
+//! units, trim unused instructions out of the decode/control logic,
+//! shrink the register file to the registers actually used, and narrow
+//! the PC and base-address registers to the measured reach.
+
+use super::profile::Utilization;
+use crate::hw::mac_unit::MacConfig;
+use crate::hw::synth::{zero_riscy, CoreSpec, MulOption};
+use crate::sim::zero_riscy::ALL_MNEMONICS;
+
+/// Derive the bespoke Zero-Riscy configuration from a utilization
+/// report, with the multiplier option of the target variant (paper
+/// Table I rows: `B`, `B MAC 32`, `B MAC P16/P8/P4`).
+pub fn bespoke_zero_riscy(u: &Utilization, mul: MulOption) -> CoreSpec {
+    let mut spec = zero_riscy();
+    spec.name = match mul {
+        MulOption::Baseline => "zero-riscy-bespoke".into(),
+        MulOption::None => "zero-riscy-bespoke-nomul".into(),
+        MulOption::Mac(cfg) => format!("zero-riscy-bespoke-mac-p{}", cfg.precision),
+    };
+
+    // Register file: keep exactly the registers the workload set
+    // touches (paper: "12 registers are sufficient ... allowing for
+    // the removal of the rest").
+    spec.regs = u.regs_needed.max(8);
+
+    // PC / BAR narrowing to the measured reach (paper: PC 32 -> 10,
+    // BAR 32 -> 8).
+    spec.pc_bits = u.pc_bits_needed.max(8);
+    spec.bar_bits = u.bar_bits_needed.max(8);
+
+    // Unit removal: nothing in the workload set uses debug, interrupts
+    // or compressed instructions (paper: "the Debug, Interrupt
+    // Controller, and Compressed Decoder Unit are not utilized and are
+    // completely removed").
+    spec.has_debug = false;
+    spec.has_irq = u.profile.syscalls_used; // no traps -> no IRQ ctl
+    spec.has_compressed_dec = false;
+
+    // CSR block: trim to a rump of counters unless CSRs are exercised.
+    spec.csr_fraction = if u.profile.csr_used { 1.0 } else { 0.15 };
+
+    // Decoder/controller trim proportional to the retained ISA.
+    let used = ALL_MNEMONICS.len() - u.unused_instructions.len();
+    spec.isa_fraction = used as f64 / ALL_MNEMONICS.len() as f64;
+
+    // Multiplier option.  When a MAC replaces the multiplier, the MUL/
+    // MULH decode paths go away with it (already counted in the ISA
+    // fraction only if unused; the multi-stage unit itself is swapped).
+    spec.mul = mul;
+    spec
+}
+
+/// The Table I variant list: bespoke core specs for B, MAC32, P16, P8, P4.
+pub fn table1_variants(u: &Utilization) -> Vec<(String, CoreSpec)> {
+    let mut out = vec![
+        ("ZR B".to_string(), bespoke_zero_riscy(u, MulOption::Baseline)),
+        (
+            "ZR B MAC 32".to_string(),
+            bespoke_zero_riscy(u, MulOption::Mac(MacConfig::new(32, 32))),
+        ),
+    ];
+    for p in [16u32, 8, 4] {
+        out.push((
+            format!("ZR B MAC P{p}"),
+            bespoke_zero_riscy(u, MulOption::Mac(MacConfig::new(32, p))),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bespoke::profile::profile_suite;
+    use crate::hw::egfet::egfet;
+    use crate::hw::synth::synthesize;
+
+    #[test]
+    fn bespoke_reduces_area_and_power() {
+        let u = profile_suite().unwrap();
+        let tech = egfet();
+        let base = synthesize(&zero_riscy(), &tech);
+        let b = synthesize(&bespoke_zero_riscy(&u, MulOption::Baseline), &tech);
+        let area_gain = 1.0 - b.area_mm2 / base.area_mm2;
+        let power_gain = 1.0 - b.power_mw / base.power_mw;
+        // Paper Table I: 10.6% / 11.4%.  Our analytical RF/CSR model
+        // prunes more aggressively than their synthesis (documented in
+        // EXPERIMENTS.md); the gain must be positive and meaningful but
+        // not implausibly large.
+        assert!((0.05..=0.45).contains(&area_gain), "area gain {area_gain}");
+        assert!((0.05..=0.45).contains(&power_gain), "power gain {power_gain}");
+    }
+
+    #[test]
+    fn table1_variant_ordering() {
+        // Area gains: MAC32 < B < P16 < P8 < P4 (Table I shape).
+        let u = profile_suite().unwrap();
+        let tech = egfet();
+        let base = synthesize(&zero_riscy(), &tech).area_mm2;
+        let gains: Vec<(String, f64)> = table1_variants(&u)
+            .into_iter()
+            .map(|(name, spec)| (name, 1.0 - synthesize(&spec, &tech).area_mm2 / base))
+            .collect();
+        let b = gains[0].1;
+        let m32 = gains[1].1;
+        let p16 = gains[2].1;
+        let p8 = gains[3].1;
+        let p4 = gains[4].1;
+        assert!(m32 < b, "MAC32 gain {m32} should dip below B {b}");
+        assert!(p16 > b && p8 > p16 && p4 > p8, "{gains:?}");
+    }
+
+    #[test]
+    fn bespoke_keeps_core_functional_units() {
+        let u = profile_suite().unwrap();
+        let spec = bespoke_zero_riscy(&u, MulOption::Baseline);
+        // ALU/RF/IF/ID/LSU must remain.
+        let kinds: Vec<_> = spec.units().iter().map(|un| un.kind).collect();
+        use crate::hw::synth::UnitKind::*;
+        for k in [RegFile, Alu, Lsu, IfStage, Decoder, Controller] {
+            assert!(kinds.contains(&k), "{k:?} missing");
+        }
+        assert!(!kinds.contains(&Debug));
+        assert!(!kinds.contains(&CompressedDec));
+    }
+}

@@ -1,0 +1,129 @@
+//! Dynamic batcher: accumulates single-sample requests per executable
+//! key and flushes when a batch fills or the linger window expires —
+//! the standard serving trade-off between latency and throughput.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One queued request.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A per-key FIFO with batch-flush policy.
+#[derive(Debug)]
+pub struct Queue<T> {
+    items: VecDeque<Pending<T>>,
+    pub max_batch: usize,
+    pub linger_ms: u64,
+}
+
+impl<T> Queue<T> {
+    pub fn new(max_batch: usize, linger_ms: u64) -> Queue<T> {
+        assert!(max_batch > 0);
+        Queue { items: VecDeque::new(), max_batch, linger_ms }
+    }
+
+    pub fn push(&mut self, payload: T) {
+        self.items.push_back(Pending { payload, enqueued: Instant::now() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Should this queue flush now?  Full batch, or the oldest request
+    /// has lingered past the window.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.items.len() >= self.max_batch {
+            return true;
+        }
+        match self.items.front() {
+            Some(p) => now.duration_since(p.enqueued).as_millis() as u64 >= self.linger_ms,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` requests.
+    pub fn drain_batch(&mut self) -> Vec<Pending<T>> {
+        let n = self.items.len().min(self.max_batch);
+        self.items.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut q = Queue::new(3, 1000);
+        q.push(1);
+        q.push(2);
+        assert!(!q.ready(Instant::now()));
+        q.push(3);
+        assert!(q.ready(Instant::now()));
+        let batch = q.drain_batch();
+        assert_eq!(batch.len(), 3);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_linger() {
+        let mut q = Queue::new(100, 5);
+        q.push(1);
+        assert!(!q.ready(Instant::now()));
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(q.ready(Instant::now()));
+    }
+
+    #[test]
+    fn drain_caps_at_max_batch() {
+        let mut q = Queue::new(2, 0);
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.drain_batch().len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    /// Property: FIFO order is preserved across arbitrary push/drain
+    /// interleavings.
+    #[test]
+    fn prop_fifo_order() {
+        crate::util::prop::check("batcher fifo", 200, |rng| {
+            let max_batch = rng.range_usize(1, 8);
+            let mut q = Queue::new(max_batch, 1000);
+            let mut next = 0u64;
+            let mut expected = std::collections::VecDeque::new();
+            let mut drained = Vec::new();
+            for _ in 0..rng.range_usize(1, 40) {
+                if rng.bool() {
+                    q.push(next);
+                    expected.push_back(next);
+                    next += 1;
+                } else {
+                    for p in q.drain_batch() {
+                        drained.push(p.payload);
+                    }
+                }
+            }
+            for p in q.drain_batch() {
+                drained.push(p.payload);
+            }
+            for (i, v) in drained.iter().enumerate() {
+                if expected[i] != *v {
+                    return Err(format!("order broken at {i}: {v} != {}", expected[i]));
+                }
+            }
+            Ok(())
+        });
+    }
+}

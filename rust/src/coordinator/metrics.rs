@@ -1,0 +1,82 @@
+//! Coordinator metrics: request/batch counters, batch-size and latency
+//! distributions.  Shared between the service facade and the worker via
+//! `Arc<Mutex<_>>`; snapshots are cheap copies.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats;
+
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_sizes: Vec<f64>,
+    pub exec_ms: Vec<f64>,
+    pub queue_ms: Vec<f64>,
+    pub compiles: u64,
+}
+
+impl Metrics {
+    pub fn record_batch(&mut self, size: usize, exec_ms: f64) {
+        self.batches += 1;
+        self.requests += size as u64;
+        self.batch_sizes.push(size as f64);
+        self.exec_ms.push(exec_ms);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            stats::mean(&self.batch_sizes)
+        }
+    }
+
+    pub fn mean_exec_ms(&self) -> f64 {
+        if self.exec_ms.is_empty() {
+            0.0
+        } else {
+            stats::mean(&self.exec_ms)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        let lat = if self.exec_ms.is_empty() {
+            "n/a".to_string()
+        } else {
+            let s = stats::summarize(&self.exec_ms);
+            format!("{:.2}/{:.2}/{:.2} ms (p50/p95/p99)", s.p50, s.p95, s.p99)
+        };
+        format!(
+            "requests {} batches {} mean-batch {:.1} exec {lat} compiles {}",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.compiles
+        )
+    }
+}
+
+/// Shared handle.
+pub type Shared = Arc<Mutex<Metrics>>;
+
+pub fn shared() -> Shared {
+    Arc::new(Mutex::new(Metrics::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let mut m = Metrics::default();
+        m.record_batch(4, 1.5);
+        m.record_batch(8, 2.5);
+        assert_eq!(m.requests, 12);
+        assert_eq!(m.batches, 2);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+        assert!((m.mean_exec_ms() - 2.0).abs() < 1e-12);
+        assert!(m.summary().contains("requests 12"));
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator: a vLLM-router-style evaluation service over the
+//! PJRT runtime — request routing, dynamic batching, worker ownership
+//! of executables, metrics, and the ISS/PJRT bit-exactness crosscheck.
+//!
+//! Offline substrate note: no tokio in this environment, so the event
+//! loop is a dedicated worker thread over std mpsc channels (PJRT
+//! handles are not Send, so the runtime lives entirely on the worker).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;

@@ -1,0 +1,158 @@
+//! Request router: maps (model, variant) keys to executable artifacts
+//! and drives fair round-robin dispatch over the per-key batch queues.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::{Pending, Queue};
+use crate::ml::manifest::Manifest;
+
+/// An executable key: model name + variant ("float", "p32", "p16", ...).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Key {
+    pub model: String,
+    pub variant: String,
+}
+
+impl Key {
+    pub fn new(model: &str, variant: &str) -> Key {
+        Key { model: model.to_string(), variant: variant.to_string() }
+    }
+
+    pub fn precision(model: &str, p: u32) -> Key {
+        Key::new(model, &format!("p{p}"))
+    }
+}
+
+/// Artifact resolution + per-key queues with round-robin fairness.
+pub struct Router<T> {
+    queues: BTreeMap<Key, Queue<T>>,
+    max_batch: usize,
+    linger_ms: u64,
+    rr_cursor: usize,
+}
+
+impl<T> Router<T> {
+    pub fn new(max_batch: usize, linger_ms: u64) -> Router<T> {
+        Router { queues: BTreeMap::new(), max_batch, linger_ms, rr_cursor: 0 }
+    }
+
+    /// Resolve a key to its HLO artifact path + input dim.  (The output
+    /// dim — the uniform score width C — comes from the loaded model's
+    /// head; the service supplies it.)
+    pub fn resolve(manifest: &Manifest, key: &Key) -> Result<(std::path::PathBuf, usize)> {
+        let entry = manifest.model(&key.model)?;
+        let path = entry
+            .hlo
+            .get(&key.variant)
+            .with_context(|| format!("{}: no variant {:?}", key.model, key.variant))?
+            .clone();
+        Ok((path, entry.arch[0]))
+    }
+
+    pub fn enqueue(&mut self, key: Key, payload: T) {
+        self.queues
+            .entry(key)
+            .or_insert_with(|| Queue::new(self.max_batch, self.linger_ms))
+            .push(payload);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(Queue::len).sum()
+    }
+
+    /// Next ready batch under round-robin fairness across keys.
+    pub fn next_batch(&mut self, now: Instant) -> Option<(Key, Vec<Pending<T>>)> {
+        let keys: Vec<Key> = self.queues.keys().cloned().collect();
+        if keys.is_empty() {
+            return None;
+        }
+        let n = keys.len();
+        for i in 0..n {
+            let key = &keys[(self.rr_cursor + i) % n];
+            let q = self.queues.get_mut(key).unwrap();
+            if q.ready(now) {
+                self.rr_cursor = (self.rr_cursor + i + 1) % n;
+                return Some((key.clone(), q.drain_batch()));
+            }
+        }
+        None
+    }
+
+    /// Force-flush the oldest non-empty queue (shutdown path).
+    pub fn flush_any(&mut self) -> Option<(Key, Vec<Pending<T>>)> {
+        let key = self
+            .queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(k, _)| k.clone())
+            .next()?;
+        let q = self.queues.get_mut(&key).unwrap();
+        Some((key, q.drain_batch()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut r: Router<u32> = Router::new(2, 0); // linger 0: always ready
+        for i in 0..4 {
+            r.enqueue(Key::new("a", "p16"), i);
+            r.enqueue(Key::new("b", "p16"), 10 + i);
+        }
+        let now = Instant::now();
+        let mut seen = Vec::new();
+        while let Some((k, batch)) = r.next_batch(now) {
+            seen.push((k.model.clone(), batch.len()));
+        }
+        // Alternating a/b batches of 2.
+        assert_eq!(
+            seen,
+            vec![
+                ("a".to_string(), 2),
+                ("b".to_string(), 2),
+                ("a".to_string(), 2),
+                ("b".to_string(), 2)
+            ]
+        );
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn respects_linger() {
+        let mut r: Router<u32> = Router::new(10, 1000);
+        r.enqueue(Key::new("a", "p16"), 1);
+        assert!(r.next_batch(Instant::now()).is_none()); // not full, not lingered
+        assert!(r.flush_any().is_some());
+    }
+
+    /// Property: every enqueued item is dispatched exactly once.
+    #[test]
+    fn prop_no_loss_no_duplication() {
+        crate::util::prop::check("router delivery", 100, |rng| {
+            let mut r: Router<u64> = Router::new(rng.range_usize(1, 5), 0);
+            let key_names = ["a", "b", "c"];
+            let n = rng.range_usize(1, 60);
+            for i in 0..n {
+                let name = key_names[rng.range_usize(0, key_names.len() - 1)];
+                r.enqueue(Key::new(name, "p8"), i as u64);
+            }
+            let mut got = Vec::new();
+            let now = Instant::now();
+            while let Some((_, batch)) = r.next_batch(now) {
+                got.extend(batch.into_iter().map(|p| p.payload));
+            }
+            got.sort();
+            let want: Vec<u64> = (0..n as u64).collect();
+            if got != want {
+                return Err(format!("delivered {got:?}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,47 @@
+//! Shared evaluation context: artifacts, models, datasets and the
+//! technology, loaded once per run.
+
+use anyhow::Result;
+
+use crate::hw::egfet::{egfet, Technology};
+use crate::ml::dataset::Dataset;
+use crate::ml::manifest::Manifest;
+use crate::ml::model::Model;
+
+/// Everything a sweep or report needs.
+pub struct EvalContext {
+    pub manifest: Manifest,
+    pub models: Vec<Model>,
+    pub tech: Technology,
+    /// Per-model cycle-measurement samples (ISS timing is data-dependent
+    /// only through ReLU/branch paths; a handful of samples suffices).
+    pub cycle_samples: Vec<Vec<Vec<f32>>>,
+    /// Per-model full test sets (for end-to-end accuracy runs).
+    pub test_sets: Vec<Dataset>,
+}
+
+impl EvalContext {
+    /// Load from `artifacts/`, taking `n_cycle_samples` per model.
+    pub fn load(n_cycle_samples: usize) -> Result<EvalContext> {
+        let dir = crate::artifacts_dir()?;
+        let manifest = Manifest::load(&dir)?;
+        let models: Vec<Model> =
+            manifest.models.iter().map(|e| Model::load(&e.weights)).collect::<Result<_>>()?;
+        let mut cycle_samples = Vec::new();
+        let mut test_sets = Vec::new();
+        for m in &models {
+            let ds = Dataset::load(manifest.data_dir(), &m.dataset, "test")?;
+            cycle_samples.push(ds.x.iter().take(n_cycle_samples).cloned().collect());
+            test_sets.push(ds);
+        }
+        Ok(EvalContext { manifest, models, tech: egfet(), cycle_samples, test_sets })
+    }
+
+    /// Accuracy loss (float - quantised, percentage points) of a model
+    /// at a precision, from the manifest's cross-checked evals.
+    pub fn accuracy_loss_pct(&self, model_idx: usize, precision: u32) -> f64 {
+        let e = &self.manifest.models[model_idx];
+        let q = e.quant_accuracy.get(&precision).copied().unwrap_or(f64::NAN);
+        (e.float_accuracy - q) * 100.0
+    }
+}

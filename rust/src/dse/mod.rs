@@ -1,0 +1,10 @@
+//! Design-space exploration over core configurations (paper §IV):
+//! sweep (core family, datapath, MAC option, precision), evaluate
+//! area/power via [`crate::hw::synth`], cycles via the ISSes, accuracy
+//! via the manifest's cross-checked quantised evals, and extract the
+//! area-speedup Pareto front (Fig. 5).
+
+pub mod context;
+pub mod pareto;
+pub mod report;
+pub mod sweep;

@@ -1,0 +1,72 @@
+//! Pareto-front extraction (Fig. 5: minimise area, maximise speedup).
+
+/// Returns a flag per point: true if non-dominated under (minimise
+/// `cost`, maximise `gain`).
+pub fn pareto_flags(points: &[(f64, f64)]) -> Vec<bool> {
+    points
+        .iter()
+        .map(|&(c, g)| {
+            !points.iter().any(|&(c2, g2)| {
+                (c2 <= c && g2 >= g) && (c2 < c || g2 > g) // dominates
+            })
+        })
+        .collect()
+}
+
+/// Indices of the Pareto front, sorted by cost.
+pub fn pareto_indices(points: &[(f64, f64)]) -> Vec<usize> {
+    let flags = pareto_flags(points);
+    let mut idx: Vec<usize> = (0..points.len()).filter(|&i| flags[i]).collect();
+    idx.sort_by(|&a, &b| points[a].0.partial_cmp(&points[b].0).unwrap());
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple_front() {
+        // (area, speedup)
+        let pts = [(1.0, 0.0), (2.0, 5.0), (3.0, 4.0), (4.0, 9.0), (2.5, 5.0)];
+        let flags = pareto_flags(&pts);
+        assert!(flags[0]); // cheapest
+        assert!(flags[1]); // best at its cost
+        assert!(!flags[2]); // dominated by (2.0, 5.0)
+        assert!(flags[3]); // best speedup
+        assert!(!flags[4]); // dominated by (2.0, 5.0)
+        assert_eq!(pareto_indices(&pts), vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn duplicate_points_both_on_front() {
+        let pts = [(1.0, 1.0), (1.0, 1.0)];
+        assert_eq!(pareto_flags(&pts), vec![true, true]);
+    }
+
+    #[test]
+    fn property_front_nonempty_and_undominated() {
+        crate::util::prop::check("pareto invariants", 200, |rng| {
+            let n = rng.range_usize(1, 20);
+            let pts: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.range_f64(0.0, 10.0), rng.range_f64(0.0, 10.0))).collect();
+            let idx = pareto_indices(&pts);
+            if idx.is_empty() {
+                return Err("empty front".into());
+            }
+            // No front point dominates another front point strictly.
+            for &i in &idx {
+                for &j in &idx {
+                    let (ci, gi) = pts[i];
+                    let (cj, gj) = pts[j];
+                    if ci < cj && gi > gj {
+                        // fine: i is strictly better on both — then j
+                        // should not be on the front
+                        return Err(format!("front point {j} dominated by {i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

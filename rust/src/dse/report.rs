@@ -1,0 +1,241 @@
+//! Report emitters: regenerate every table and figure of the paper's
+//! evaluation as formatted text (and structured values for the bench
+//! harness).  One function per artifact:
+//!
+//! * [`fig1`]   — baseline area/power/clock + ZR unit breakdown
+//! * [`table1`] — bespoke Zero-Riscy gains/speedup/accuracy
+//! * [`fig4`]   — accuracy loss per model per precision
+//! * [`fig5`]   — TP-ISA scatter + Pareto front
+//! * [`table2`] — the TP-ISA 8-bit MAC Pareto solution
+//! * [`mem`]    — §IV-B printed-memory observations
+
+use anyhow::{Context, Result};
+
+use super::context::EvalContext;
+use super::pareto::pareto_flags;
+use super::sweep::{self, TpPoint, ZrRow};
+use crate::hw::synth::{synthesize, tpisa, zero_riscy, SynthReport, UnitKind};
+
+fn fmt_pct(v: f64) -> String {
+    format!("{v:6.2}%")
+}
+
+/// Fig. 1a/1b: baseline synthesis of Zero-Riscy and both TP-ISA widths
+/// in EGFET, plus the ZR functional-unit breakdown.
+pub struct Fig1 {
+    pub zr: SynthReport,
+    pub tp4: SynthReport,
+    pub tp32: SynthReport,
+    pub text: String,
+}
+
+pub fn fig1(ctx: &EvalContext) -> Fig1 {
+    let zr = synthesize(&zero_riscy(), &ctx.tech);
+    let tp4 = synthesize(&tpisa(4), &ctx.tech);
+    let tp32 = synthesize(&tpisa(32), &ctx.tech);
+    let mut text = String::from(
+        "Fig 1a — Baseline area / power / clock (EGFET)\n\
+         core          area [cm^2]   power [mW]   clock [Hz]\n",
+    );
+    for r in [&zr, &tp4, &tp32] {
+        text += &format!(
+            "{:<12}  {:>10.2}   {:>9.2}   {:>9.1}\n",
+            r.name,
+            r.area_cm2(),
+            r.power_mw,
+            r.fmax_hz
+        );
+    }
+    text += "\nFig 1b — Zero-Riscy unit shares (area% / power%)\n";
+    let groups: [(&str, &[UnitKind]); 4] = [
+        ("EX", &[UnitKind::Alu]),
+        ("MUL", &[UnitKind::Mul]),
+        ("RF", &[UnitKind::RegFile]),
+        ("IF/ID/Ctl", &[UnitKind::IfStage, UnitKind::Decoder, UnitKind::Controller]),
+    ];
+    for (name, kinds) in groups {
+        text += &format!(
+            "{:<10} {} / {}\n",
+            name,
+            fmt_pct(zr.area_fraction(kinds) * 100.0),
+            fmt_pct(zr.power_fraction(kinds) * 100.0)
+        );
+    }
+    text += &format!(
+        "MUL+RF     {} / {}   (paper: 46.5% / 46.2%)\n",
+        fmt_pct(zr.area_fraction(&[UnitKind::Mul, UnitKind::RegFile]) * 100.0),
+        fmt_pct(zr.power_fraction(&[UnitKind::Mul, UnitKind::RegFile]) * 100.0)
+    );
+    Fig1 { zr, tp4, tp32, text }
+}
+
+/// Table I: bespoke Zero-Riscy rows.
+pub struct Table1 {
+    pub rows: Vec<ZrRow>,
+    pub text: String,
+}
+
+pub fn table1(ctx: &EvalContext) -> Result<Table1> {
+    let (_u, rows) = sweep::zr_table1(ctx)?;
+    let mut text = String::from(
+        "Table I — Bespoke Zero-Riscy (gains vs baseline)\n\
+         config         area-gain  power-gain  speedup   acc-loss\n",
+    );
+    for r in rows.iter().skip(1) {
+        text += &format!(
+            "{:<13} {}  {}  {}  {}\n",
+            r.name,
+            fmt_pct(r.area_gain_pct),
+            fmt_pct(r.power_gain_pct),
+            fmt_pct(r.speedup_pct),
+            fmt_pct(r.acc_loss_pct)
+        );
+    }
+    text += "paper:        B 10.6/11.4/0/0; MAC32 8.2/14.4/23.9/0; \
+             P16 22.2/23.6/33.8/0; P8 29.3/28.7/41.7/0.5; P4 36.5/34.1/46.4/15.7\n";
+    Ok(Table1 { rows, text })
+}
+
+/// Fig. 4: average accuracy loss per model per precision.
+pub struct Fig4 {
+    /// (model name, [loss% at 32, 16, 8, 4])
+    pub losses: Vec<(String, Vec<f64>)>,
+    pub text: String,
+}
+
+pub fn fig4(ctx: &EvalContext) -> Fig4 {
+    let precisions = [32u32, 16, 8, 4];
+    let mut losses = Vec::new();
+    let mut text = String::from(
+        "Fig 4 — Accuracy loss per model per precision (percentage points)\n\
+         model               p32      p16      p8       p4\n",
+    );
+    for (i, e) in ctx.manifest.models.iter().enumerate() {
+        let row: Vec<f64> = precisions.iter().map(|&p| ctx.accuracy_loss_pct(i, p)).collect();
+        text += &format!(
+            "{:<18} {:>7.2}  {:>7.2}  {:>7.2}  {:>7.2}\n",
+            e.name, row[0], row[1], row[2], row[3]
+        );
+        losses.push((e.name.clone(), row));
+    }
+    text += "(paper: no loss at 32/16, ~0.5% avg at 8, jump at 4 — up to 26% on RedWine)\n";
+    Fig4 { losses, text }
+}
+
+/// Fig. 5: the TP-ISA scatter with Pareto flags.
+pub struct Fig5 {
+    pub points: Vec<TpPoint>,
+    pub pareto: Vec<bool>,
+    pub text: String,
+}
+
+pub fn fig5(ctx: &EvalContext) -> Result<Fig5> {
+    let points = sweep::tpisa_sweep(ctx)?;
+    let xy: Vec<(f64, f64)> = points.iter().map(|p| (p.area_mm2, p.speedup_pct)).collect();
+    let pareto = pareto_flags(&xy);
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| points[a].area_mm2.partial_cmp(&points[b].area_mm2).unwrap());
+    let mut text = String::from(
+        "Fig 5 — TP-ISA configurations (area vs speedup; * = Pareto)\n\
+         config      area [mm^2]  power [mW]  speedup    err\n",
+    );
+    for &i in &order {
+        let p = &points[i];
+        text += &format!(
+            "{}{:<10} {:>10.1}  {:>9.2}  {}  {}\n",
+            if pareto[i] { "*" } else { " " },
+            p.label,
+            p.area_mm2,
+            p.power_mw,
+            fmt_pct(p.speedup_pct),
+            fmt_pct(p.err_pct)
+        );
+    }
+    Ok(Fig5 { points, pareto, text })
+}
+
+/// Table II: the 8-bit TP-ISA MAC Pareto solution vs its baseline.
+pub struct Table2 {
+    pub area_factor: f64,
+    pub power_factor: f64,
+    pub speedup_pct: f64,
+    pub err_pct: f64,
+    pub text: String,
+}
+
+pub fn table2(ctx: &EvalContext) -> Result<Table2> {
+    let points = sweep::tpisa_sweep(ctx)?;
+    let base = points.iter().find(|p| p.label == "d8").context("d8 baseline")?;
+    let mac = points.iter().find(|p| p.label == "d8m").context("d8m point")?;
+    let t = Table2 {
+        area_factor: mac.area_mm2 / base.area_mm2,
+        power_factor: mac.power_mw / base.power_mw,
+        speedup_pct: mac.speedup_pct,
+        err_pct: mac.err_pct,
+        text: String::new(),
+    };
+    let text = format!(
+        "Table II — Bespoke 8-bit TP-ISA MAC (vs 8-bit baseline)\n\
+         area overhead   x{:.2}   (paper: x1.98)\n\
+         power overhead  x{:.2}   (paper: x1.82)\n\
+         avg err         {:.2}%  (paper: 0.5%)\n\
+         est. speedup    {:.1}%  (paper: up to 85.1%)\n",
+        t.area_factor, t.power_factor, t.err_pct, t.speedup_pct
+    );
+    Ok(Table2 { text, ..t })
+}
+
+/// §IV-B: printed-memory observations.
+pub struct MemReport {
+    /// ROM cells per ZR variant (avg across models).
+    pub zr_rom: Vec<(String, f64)>,
+    /// (label, rom cells) per TP-ISA point.
+    pub tp_rom: Vec<(String, f64)>,
+    /// Memory saved by hardware multiply (TP-ISA d8: baseline -> MAC).
+    pub mul_saving_pct: f64,
+    /// Additional saving from SIMD (ZR MAC32 -> P16 code size).
+    pub simd_saving_pct: f64,
+    pub text: String,
+}
+
+pub fn mem(ctx: &EvalContext) -> Result<MemReport> {
+    let (_u, rows) = sweep::zr_table1(ctx)?;
+    let zr_rom: Vec<(String, f64)> =
+        rows.iter().map(|r| (r.name.clone(), r.rom_cells_avg)).collect();
+    let points = sweep::tpisa_sweep(ctx)?;
+    let tp_rom: Vec<(String, f64)> =
+        points.iter().map(|p| (p.label.clone(), p.rom_cells_avg)).collect();
+
+    let d8 = points.iter().find(|p| p.label == "d8").context("d8")?;
+    let d8m = points.iter().find(|p| p.label == "d8m").context("d8m")?;
+    let mul_saving_pct = (1.0 - d8m.rom_cells_avg / d8.rom_cells_avg) * 100.0;
+
+    // "Up to 1-2%": the saving materialises where whole neurons fit a
+    // single pass (few packed words per column) — report the best SIMD
+    // configuration, as the paper does.
+    let mac32 = rows.iter().find(|r| r.name == "ZR B MAC 32").context("mac32")?;
+    let simd_saving_pct = rows
+        .iter()
+        .filter(|r| r.name.contains("MAC P"))
+        .map(|r| (1.0 - r.rom_cells_avg / mac32.rom_cells_avg) * 100.0)
+        .fold(f64::NEG_INFINITY, f64::max);
+
+    let mut text = String::from("§IV-B — Printed memory observations\n");
+    text += &format!(
+        "(b) hardware multiply vs ALU-scheduled: {:.1}% ROM saved (paper: up to 11.1%)\n",
+        mul_saving_pct
+    );
+    text += &format!(
+        "(c) SIMD loop removal: {:.1}% additional ROM saved (paper: 1-2%)\n",
+        simd_saving_pct
+    );
+    text += "(a) ROM cells by TP-ISA width (narrower widths -> fewer cells):\n";
+    for (label, cells) in &tp_rom {
+        text += &format!("    {label:<10} {cells:>8.0} cells\n");
+    }
+    text += "ZR variants (avg cells):\n";
+    for (name, cells) in &zr_rom {
+        text += &format!("    {name:<14} {cells:>8.0} cells\n");
+    }
+    Ok(MemReport { zr_rom, tp_rom, mul_saving_pct, simd_saving_pct, text })
+}

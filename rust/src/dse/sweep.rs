@@ -1,0 +1,188 @@
+//! Configuration sweeps: the Table I Zero-Riscy variants and the Fig. 5
+//! TP-ISA design space.
+
+use anyhow::Result;
+
+use super::context::EvalContext;
+use crate::bespoke::profile::{profile_all, Utilization};
+use crate::bespoke::reduction::table1_variants;
+use crate::hw::synth::{synthesize, zero_riscy, MulOption, SynthReport};
+use crate::ml::codegen_rv32::{self, Rv32Variant};
+use crate::ml::codegen_tpisa::{self, TpVariant};
+use crate::ml::harness;
+use crate::util::stats;
+
+/// One Table-I row.
+#[derive(Debug, Clone)]
+pub struct ZrRow {
+    pub name: String,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub area_gain_pct: f64,
+    pub power_gain_pct: f64,
+    pub speedup_pct: f64,
+    pub acc_loss_pct: f64,
+    pub rom_cells_avg: f64,
+}
+
+/// The variant each Table-I row runs on the ISS.
+fn row_variant(name: &str) -> Rv32Variant {
+    match name {
+        "ZR B" => Rv32Variant::Baseline,
+        "ZR B MAC 32" => Rv32Variant::Mac32,
+        "ZR B MAC P16" => Rv32Variant::Simd(16),
+        "ZR B MAC P8" => Rv32Variant::Simd(8),
+        "ZR B MAC P4" => Rv32Variant::Simd(4),
+        _ => Rv32Variant::Baseline,
+    }
+}
+
+/// Measure mean cycles/sample of a variant across all models.
+fn zr_cycles(ctx: &EvalContext, variant: Rv32Variant) -> Result<(Vec<f64>, f64)> {
+    let mut per_model = Vec::new();
+    let mut rom = Vec::new();
+    for (model, xs) in ctx.models.iter().zip(&ctx.cycle_samples) {
+        let prog = codegen_rv32::generate(model, variant)?;
+        let run = harness::run_rv32(model, &prog, xs)?;
+        per_model.push(run.cycles_per_sample);
+        rom.push(prog.rom_cells as f64);
+    }
+    let rom_avg = stats::mean(&rom);
+    Ok((per_model, rom_avg))
+}
+
+/// Profile the workload set and produce the Table-I rows.
+pub fn zr_table1(ctx: &EvalContext) -> Result<(Utilization, Vec<ZrRow>)> {
+    let u = profile_all(&ctx.models, &ctx.cycle_samples)?;
+    let base_synth = synthesize(&zero_riscy(), &ctx.tech);
+    let (base_cycles, base_rom) = zr_cycles(ctx, Rv32Variant::Baseline)?;
+
+    let mut rows = vec![ZrRow {
+        name: "ZR baseline".into(),
+        area_mm2: base_synth.area_mm2,
+        power_mw: base_synth.power_mw,
+        area_gain_pct: 0.0,
+        power_gain_pct: 0.0,
+        speedup_pct: 0.0,
+        acc_loss_pct: 0.0,
+        rom_cells_avg: base_rom,
+    }];
+
+    for (name, spec) in table1_variants(&u) {
+        let s = synthesize(&spec, &ctx.tech);
+        let variant = row_variant(&name);
+        let (cycles, rom_avg) = zr_cycles(ctx, variant)?;
+        let speedups: Vec<f64> = base_cycles
+            .iter()
+            .zip(&cycles)
+            .map(|(b, c)| (1.0 - c / b) * 100.0)
+            .collect();
+        let p = variant.quant_precision();
+        let losses: Vec<f64> =
+            (0..ctx.models.len()).map(|i| ctx.accuracy_loss_pct(i, p)).collect();
+        rows.push(ZrRow {
+            name,
+            area_mm2: s.area_mm2,
+            power_mw: s.power_mw,
+            area_gain_pct: (1.0 - s.area_mm2 / base_synth.area_mm2) * 100.0,
+            power_gain_pct: (1.0 - s.power_mw / base_synth.power_mw) * 100.0,
+            speedup_pct: stats::mean(&speedups),
+            acc_loss_pct: stats::mean(&losses),
+            rom_cells_avg: rom_avg,
+        });
+    }
+    Ok((u, rows))
+}
+
+/// One Fig.-5 scatter point.
+#[derive(Debug, Clone)]
+pub struct TpPoint {
+    /// e.g. "d8", "d8m", "d32m p8".
+    pub label: String,
+    pub datapath: u32,
+    pub variant: TpVariant,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    /// Mean execution-time reduction vs the same-width baseline (%).
+    pub speedup_pct: f64,
+    pub err_pct: f64,
+    pub rom_cells_avg: f64,
+    pub cycles_avg: f64,
+    pub synth: SynthReport,
+}
+
+/// Mean cycles/sample of a TP-ISA config across the models it can run;
+/// returns (per-model-index, cycles, rom_cells).
+fn tp_cycles(
+    ctx: &EvalContext,
+    d: u32,
+    variant: TpVariant,
+) -> Result<Vec<(usize, f64, f64)>> {
+    let mut out = Vec::new();
+    for (i, (model, xs)) in ctx.models.iter().zip(&ctx.cycle_samples).enumerate() {
+        let p = codegen_tpisa::quant_precision(d, variant);
+        if model.qlayers(p).is_err() {
+            continue;
+        }
+        let Ok(prog) = codegen_tpisa::generate(model, d, variant) else {
+            continue; // e.g. multi-layer models on the 4-bit core
+        };
+        let run = harness::run_tpisa(model, &prog, xs)?;
+        out.push((i, run.cycles_per_sample, prog.rom_cells as f64));
+    }
+    Ok(out)
+}
+
+/// The Fig.-5 sweep: all TP-ISA configurations.
+pub fn tpisa_sweep(ctx: &EvalContext) -> Result<Vec<TpPoint>> {
+    let mut points = Vec::new();
+    for d in [4u32, 8, 16, 32] {
+        let base_runs = tp_cycles(ctx, d, TpVariant::Baseline)?;
+        let mut variants: Vec<(String, TpVariant)> =
+            vec![(format!("d{d}"), TpVariant::Baseline), (format!("d{d}m"), TpVariant::Mac { precision: d })];
+        for p in [16u32, 8, 4] {
+            if p < d {
+                variants.push((format!("d{d}m p{p}"), TpVariant::Mac { precision: p }));
+            }
+        }
+        for (label, variant) in variants {
+            let runs = tp_cycles(ctx, d, variant)?;
+            if runs.is_empty() {
+                continue;
+            }
+            // Speedup vs same-width baseline on the common model set.
+            let mut speedups = Vec::new();
+            let mut cycles = Vec::new();
+            for &(i, c, _) in &runs {
+                cycles.push(c);
+                if let Some(&(_, b, _)) = base_runs.iter().find(|(bi, ..)| *bi == i) {
+                    speedups.push((1.0 - c / b) * 100.0);
+                }
+            }
+            let p = codegen_tpisa::quant_precision(d, variant);
+            let losses: Vec<f64> =
+                runs.iter().map(|&(i, ..)| ctx.accuracy_loss_pct(i, p)).collect();
+            let mut spec = crate::hw::synth::tpisa(d);
+            if let TpVariant::Mac { precision } = variant {
+                spec.mul = MulOption::Mac(crate::hw::mac_unit::MacConfig::new(d, precision));
+                spec.name = format!("tp-isa-{label}");
+            }
+            let s = synthesize(&spec, &ctx.tech);
+            points.push(TpPoint {
+                label,
+                datapath: d,
+                variant,
+                area_mm2: s.area_mm2,
+                power_mw: s.power_mw,
+                speedup_pct: stats::mean(&speedups),
+                err_pct: stats::mean(&losses),
+                rom_cells_avg: stats::mean(
+                    &runs.iter().map(|&(_, _, r)| r).collect::<Vec<_>>(),
+                ),
+                cycles_avg: stats::mean(&cycles),
+                synth: s,
+            });
+        }
+    }
+    Ok(points)
+}

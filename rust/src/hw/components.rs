@@ -1,0 +1,138 @@
+//! Gate-equivalent (GE) and logic-depth formulas for datapath components.
+//!
+//! One GE = one NAND2.  The formulas are standard structural estimates
+//! (ripple-carry adders, AND-array multipliers, DFF = 5 GE, 2:1 mux =
+//! 1.25 GE) — coarse, but the evaluation only relies on *relative* cost,
+//! and the absolute scale is calibrated against the paper's anchors in
+//! [`super::egfet`].
+
+/// GE of a D flip-flop bank.
+pub fn dff(bits: u32) -> f64 {
+    5.0 * bits as f64
+}
+
+/// GE of a ripple-carry adder (full adder ~ 7 GE/bit incl. carry chain).
+pub fn adder(bits: u32) -> f64 {
+    7.0 * bits as f64
+}
+
+/// Logic depth (levels) of a ripple-carry adder.
+pub fn adder_depth(bits: u32) -> u32 {
+    bits.max(1)
+}
+
+/// GE of a bank of 2:1 muxes.
+pub fn mux2(bits: u32) -> f64 {
+    1.25 * bits as f64
+}
+
+/// GE of an `inputs`:1 mux tree over `bits`-wide words.
+pub fn mux_tree(inputs: u32, bits: u32) -> f64 {
+    if inputs <= 1 {
+        return 0.0;
+    }
+    (inputs - 1) as f64 * mux2(bits)
+}
+
+/// Depth of an `inputs`:1 mux tree.
+pub fn mux_tree_depth(inputs: u32) -> u32 {
+    if inputs <= 1 {
+        0
+    } else {
+        32 - (inputs - 1).leading_zeros()
+    }
+}
+
+/// GE of an n-to-2^n one-hot decoder (~1.5 GE per output line).
+pub fn decoder(out_lines: u32) -> f64 {
+    1.5 * out_lines as f64
+}
+
+/// GE of an unsigned/signed AND-array multiplier: n*m partial-product
+/// AND gates plus (n-1) m-bit carry-save adder rows.
+pub fn array_multiplier(n: u32, m: u32) -> f64 {
+    (n * m) as f64 + adder(m) * (n.saturating_sub(1)) as f64
+}
+
+/// Depth of the array multiplier (carry-save rows then final ripple).
+pub fn array_multiplier_depth(n: u32, m: u32) -> u32 {
+    n + m
+}
+
+/// GE of a logarithmic barrel shifter.
+pub fn barrel_shifter(bits: u32) -> f64 {
+    mux_tree_depth(bits.max(2)) as f64 * mux2(bits)
+}
+
+pub fn barrel_shifter_depth(bits: u32) -> u32 {
+    mux_tree_depth(bits.max(2))
+}
+
+/// GE of an equality/magnitude comparator.
+pub fn comparator(bits: u32) -> f64 {
+    3.5 * bits as f64
+}
+
+/// Register file cost: DFF storage rows, per-port read mux trees, write
+/// decoder and word-line drivers.
+pub fn regfile(words: u32, bits: u32, read_ports: u32) -> f64 {
+    let storage = dff(bits) * words as f64;
+    let read = read_ports as f64 * mux_tree(words, bits);
+    let wdec = decoder(words);
+    let drivers = 0.6 * (words * read_ports) as f64; // word lines
+    storage + read + wdec + drivers
+}
+
+/// Register-file read depth: mux tree + output drive.
+pub fn regfile_depth(words: u32) -> u32 {
+    mux_tree_depth(words) + 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adder_scales_linearly() {
+        assert_eq!(adder(32), 2.0 * adder(16));
+        assert_eq!(adder_depth(32), 32);
+    }
+
+    #[test]
+    fn multiplier_quadratic_scaling() {
+        let m32 = array_multiplier(32, 32);
+        let m16 = array_multiplier(16, 16);
+        let m8 = array_multiplier(8, 8);
+        // Roughly 4x per halving (paper's premise: "replace large
+        // multipliers with small ones that have less depth").
+        assert!(m32 / m16 > 3.5 && m32 / m16 < 4.5, "{}", m32 / m16);
+        assert!(m16 / m8 > 3.5 && m16 / m8 < 4.7);
+        assert_eq!(array_multiplier_depth(16, 16), 32);
+        assert!(array_multiplier_depth(8, 8) < array_multiplier_depth(32, 32));
+    }
+
+    #[test]
+    fn mux_tree_sizes() {
+        assert_eq!(mux_tree(1, 32), 0.0);
+        assert_eq!(mux_tree(2, 32), mux2(32));
+        assert_eq!(mux_tree_depth(32), 5);
+        assert_eq!(mux_tree_depth(12), 4);
+        assert_eq!(mux_tree_depth(2), 1);
+    }
+
+    #[test]
+    fn regfile_shrinks_with_words() {
+        let full = regfile(32, 32, 2);
+        let trimmed = regfile(12, 32, 2);
+        assert!(trimmed < full);
+        // Trimming 32 -> 12 registers saves more than 40% of the RF.
+        assert!(trimmed / full < 0.60, "ratio {}", trimmed / full);
+        assert!(regfile_depth(12) < regfile_depth(32));
+    }
+
+    #[test]
+    fn barrel_shifter_log_depth() {
+        assert_eq!(barrel_shifter_depth(32), 5);
+        assert!(barrel_shifter(32) < adder(32) * 4.0);
+    }
+}

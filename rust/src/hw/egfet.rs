@@ -1,0 +1,97 @@
+//! EGFET (electrolyte-gated FET) printed-technology constants.
+//!
+//! Calibrated against the anchors the paper publishes for this library
+//! (§III-A): baseline Zero-Riscy synthesises to **67.53 cm²** and
+//! **291.21 mW**, and one ROM cell costs **0.84 mm²** / **18.23 µW**.
+//! `AREA_PER_GE` / `POWER_PER_GE` are fixed so that the Zero-Riscy unit
+//! inventory in [`super::synth`] reproduces those numbers exactly; a unit
+//! test guards the calibration.
+//!
+//! Printed EGFET circuits switch slowly: typical operating frequencies
+//! are a few Hz to a few kHz (paper §II), which the per-level gate delay
+//! reproduces.
+
+/// Technology parameters for printed EGFET.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Technology {
+    pub name: &'static str,
+    /// Area of one gate equivalent (NAND2), mm².
+    pub area_per_ge_mm2: f64,
+    /// Power of one GE at activity 1.0, µW.
+    pub power_per_ge_uw: f64,
+    /// Propagation delay of one logic level, µs.
+    pub gate_delay_us: f64,
+    /// Area of one ROM cell (one stored byte), mm² (paper: 0.84).
+    pub rom_cell_area_mm2: f64,
+    /// Power of one ROM cell, µW (paper: 18.23).
+    pub rom_cell_power_uw: f64,
+}
+
+/// Calibration anchors from the paper.
+pub const ZERO_RISCY_AREA_CM2: f64 = 67.53;
+pub const ZERO_RISCY_POWER_MW: f64 = 291.21;
+
+impl Technology {
+    pub fn area_mm2(&self, ge: f64) -> f64 {
+        ge * self.area_per_ge_mm2
+    }
+
+    pub fn power_uw(&self, ge: f64, activity: f64) -> f64 {
+        ge * activity * self.power_per_ge_uw
+    }
+
+    /// Maximum clock for a given critical-path depth (logic levels),
+    /// including a fixed sequencing overhead (setup + clock skew).
+    pub fn fmax_hz(&self, depth_levels: u32) -> f64 {
+        let period_us = self.gate_delay_us * (depth_levels as f64 + 6.0);
+        1e6 / period_us
+    }
+}
+
+/// The EGFET library used throughout the evaluation.
+///
+/// `area_per_ge_mm2` and `power_per_ge_uw` are calibrated in
+/// `hw::synth::tests::calibration_anchors` so the baseline Zero-Riscy
+/// inventory reproduces the paper's 67.53 cm² / 291.21 mW.
+pub fn egfet() -> Technology {
+    Technology {
+        name: "EGFET",
+        area_per_ge_mm2: 0.207_246_412_4,
+        power_per_ge_uw: 8.740_850_487,
+        gate_delay_us: 220.0,
+        rom_cell_area_mm2: 0.84,
+        rom_cell_power_uw: 18.23,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmax_in_printed_range() {
+        let t = egfet();
+        // Deep path (baseline ZR multiplier, ~70 levels) lands in the
+        // tens-of-Hz range; shallow paths reach a few hundred Hz — the
+        // "few Hz to a few kHz" envelope of §II.
+        let slow = t.fmax_hz(70);
+        let fast = t.fmax_hz(10);
+        assert!(slow > 10.0 && slow < 200.0, "slow {slow}");
+        assert!(fast > 100.0 && fast < 5000.0, "fast {fast}");
+        assert!(fast > slow);
+    }
+
+    #[test]
+    fn rom_cell_anchors() {
+        let t = egfet();
+        assert_eq!(t.rom_cell_area_mm2, 0.84);
+        assert_eq!(t.rom_cell_power_uw, 18.23);
+    }
+
+    #[test]
+    fn monotone_costs() {
+        let t = egfet();
+        assert!(t.area_mm2(100.0) > t.area_mm2(10.0));
+        assert!(t.power_uw(100.0, 1.0) > t.power_uw(100.0, 0.5));
+    }
+}

@@ -1,0 +1,27 @@
+//! Printed-technology hardware cost model.
+//!
+//! This module replaces the paper's Synopsys DC + EGFET standard-cell
+//! synthesis flow (unavailable here) with an analytical gate-level model:
+//!
+//! * [`components`] — gate-equivalent (GE) and logic-depth formulas for
+//!   the datapath building blocks (adders, array multipliers, register
+//!   files, muxes, decoders, barrel shifters).
+//! * [`egfet`] — the EGFET technology constants, calibrated to the
+//!   paper's published anchors: baseline Zero-Riscy = 67.53 cm² and
+//!   291.21 mW; one ROM cell = 0.84 mm² and 18.23 µW (§III-A).
+//! * [`mac_unit`] — the paper's SIMD MAC unit (Fig. 2) as a hardware
+//!   cost model parameterised by datapath width and precision.
+//! * [`rom`] — printed program-memory (ROM) cost model.
+//! * [`synth`] — "synthesis": composes a core's unit inventory into
+//!   area / power / fmax, the stand-in for Synopsys DC reports.
+//!
+//! The paper's evaluation is *relative* (% gains, overhead factors,
+//! Pareto shape); an analytical model calibrated at the published
+//! anchor points reproduces the relative ordering and crossovers, which
+//! is what DESIGN.md commits to.
+
+pub mod components;
+pub mod egfet;
+pub mod mac_unit;
+pub mod rom;
+pub mod synth;

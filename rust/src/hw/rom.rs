@@ -1,0 +1,75 @@
+//! Printed program-memory (ROM) cost model.
+//!
+//! The paper (§III-A): "Each ROM cell takes up 0.84 mm² and 18.23 µW,
+//! favoring designs with narrower bit-widths and smaller code sizes."
+//! We model one ROM cell as one stored byte plus an address decoder
+//! sized by the address width — so narrower PCs and shorter programs
+//! both shrink the memory, reproducing the paper's §IV-B memory
+//! observations.
+
+use super::components;
+use super::egfet::Technology;
+
+/// A program ROM holding `bytes` of code/data, addressed by `addr_bits`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rom {
+    pub bytes: u32,
+    pub addr_bits: u32,
+}
+
+impl Rom {
+    /// ROM sized exactly for a program image (address width = next power
+    /// of two covering the image).
+    pub fn for_image(bytes: u32) -> Rom {
+        let addr_bits = 32 - bytes.max(2).next_power_of_two().leading_zeros() - 1;
+        Rom { bytes, addr_bits }
+    }
+
+    /// Address-decoder gate count (amortised into the ROM macro): a
+    /// row/column organisation shares the decode across 16-byte rows.
+    pub fn decoder_ge(&self) -> f64 {
+        let rows = (self.bytes.max(16) / 16).max(1);
+        components::decoder(rows)
+            + components::mux_tree(16, 8)
+            + components::dff(self.addr_bits)
+    }
+
+    pub fn area_mm2(&self, tech: &Technology) -> f64 {
+        self.bytes as f64 * tech.rom_cell_area_mm2 + tech.area_mm2(self.decoder_ge())
+    }
+
+    pub fn power_mw(&self, tech: &Technology) -> f64 {
+        (self.bytes as f64 * tech.rom_cell_power_uw + tech.power_uw(self.decoder_ge(), 0.5))
+            / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::egfet::egfet;
+    use super::*;
+
+    #[test]
+    fn for_image_addr_bits() {
+        assert_eq!(Rom::for_image(256).addr_bits, 8);
+        assert_eq!(Rom::for_image(257).addr_bits, 9);
+        assert_eq!(Rom::for_image(1024).addr_bits, 10);
+        assert_eq!(Rom::for_image(2).addr_bits, 1);
+    }
+
+    #[test]
+    fn area_dominated_by_cells() {
+        let t = egfet();
+        let r = Rom::for_image(512);
+        let cells = 512.0 * t.rom_cell_area_mm2;
+        assert!(r.area_mm2(&t) >= cells);
+        assert!(r.area_mm2(&t) < cells * 1.2);
+    }
+
+    #[test]
+    fn smaller_code_smaller_rom() {
+        let t = egfet();
+        assert!(Rom::for_image(300).area_mm2(&t) < Rom::for_image(600).area_mm2(&t));
+        assert!(Rom::for_image(300).power_mw(&t) < Rom::for_image(600).power_mw(&t));
+    }
+}

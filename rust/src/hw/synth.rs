@@ -1,0 +1,453 @@
+//! Core "synthesis": composes a unit inventory into area / power / fmax —
+//! the stand-in for the paper's Synopsys DC + EGFET reports (workflow
+//! steps ① and ⑤, Fig. 3).
+//!
+//! Two parametric core generators are provided:
+//!
+//! * [`zero_riscy`] — the 32-bit 2-stage RISC-V core, parameterised by
+//!   everything the bespoke flow trims: register count, PC width, BAR
+//!   width, the debug / IRQ / compressed-decoder units, the retained CSR
+//!   fraction and the multiplier option (baseline multi-stage MUL, the
+//!   SIMD MAC unit, or none).
+//! * [`tpisa`] — the minimal width-configurable printed core of Bleier
+//!   et al. (ISCA'20), parameterised by datapath width and MAC option.
+//!
+//! The baseline Zero-Riscy inventory is calibrated against the paper's
+//! anchors (67.53 cm², 291.21 mW) via the EGFET per-GE constants.
+
+use super::components as c;
+use super::egfet::Technology;
+use super::mac_unit::MacConfig;
+
+/// Functional unit classes (Fig. 1b groups: EX, MUL, RF, IF/ID/Ctl, ...).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnitKind {
+    Mul,
+    MacUnit,
+    RegFile,
+    Alu,
+    Lsu,
+    IfStage,
+    Decoder,
+    Controller,
+    CompressedDec,
+    Csr,
+    Debug,
+    Irq,
+    Pipeline,
+}
+
+impl UnitKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            UnitKind::Mul => "MUL",
+            UnitKind::MacUnit => "MAC",
+            UnitKind::RegFile => "RF",
+            UnitKind::Alu => "EX",
+            UnitKind::Lsu => "LSU",
+            UnitKind::IfStage => "IF",
+            UnitKind::Decoder => "ID",
+            UnitKind::Controller => "CTL",
+            UnitKind::CompressedDec => "CDEC",
+            UnitKind::Csr => "CSR",
+            UnitKind::Debug => "DEBUG",
+            UnitKind::Irq => "IRQ",
+            UnitKind::Pipeline => "PIPE",
+        }
+    }
+}
+
+/// One synthesised functional unit.
+#[derive(Debug, Clone)]
+pub struct Unit {
+    pub kind: UnitKind,
+    pub ge: f64,
+    pub activity: f64,
+    /// Critical-path contribution in logic levels.
+    pub depth: u32,
+}
+
+/// Multiplier option of a core configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulOption {
+    /// No hardware multiply (baseline TP-ISA: software shift-add).
+    None,
+    /// Zero-Riscy's 3-cycle multi-stage 32x32 multiplier.
+    Baseline,
+    /// The paper's SIMD MAC unit.
+    Mac(MacConfig),
+}
+
+/// A core configuration: the input to "synthesis" and to the ISS timing
+/// model.  Produced by the baseline generators and transformed by the
+/// bespoke reduction pass.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreSpec {
+    pub name: String,
+    /// "zero-riscy" | "tp-isa" (selects the ISS).
+    pub family: CoreFamily,
+    pub datapath: u32,
+    pub regs: u32,
+    pub pc_bits: u32,
+    pub bar_bits: u32,
+    pub has_debug: bool,
+    pub has_irq: bool,
+    pub has_compressed_dec: bool,
+    /// Fraction of the CSR block retained (1.0 = full, paper trims to a
+    /// rump of counters).
+    pub csr_fraction: f64,
+    /// Fraction of the ISA actually decoded (bespoke trims the decoder
+    /// and controller for removed instructions; a base FSM remains).
+    pub isa_fraction: f64,
+    pub mul: MulOption,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreFamily {
+    ZeroRiscy,
+    TpIsa,
+}
+
+/// Baseline Zero-Riscy (RV32IM, 2-stage, 32 registers, full units).
+pub fn zero_riscy() -> CoreSpec {
+    CoreSpec {
+        name: "zero-riscy".into(),
+        family: CoreFamily::ZeroRiscy,
+        datapath: 32,
+        regs: 32,
+        pc_bits: 32,
+        bar_bits: 32,
+        has_debug: true,
+        has_irq: true,
+        has_compressed_dec: true,
+        csr_fraction: 1.0,
+        isa_fraction: 1.0,
+        mul: MulOption::Baseline,
+    }
+}
+
+/// Baseline TP-ISA at a given datapath width (paper synthesises the
+/// 4-bit and 32-bit configurations in Fig. 1a).
+pub fn tpisa(datapath: u32) -> CoreSpec {
+    assert!(matches!(datapath, 4 | 8 | 16 | 32), "TP-ISA widths: 4/8/16/32");
+    CoreSpec {
+        name: format!("tp-isa-d{datapath}"),
+        family: CoreFamily::TpIsa,
+        datapath,
+        regs: 8,
+        pc_bits: 10,
+        bar_bits: 10,
+        has_debug: false,
+        has_irq: false,
+        has_compressed_dec: false,
+        csr_fraction: 0.0,
+        isa_fraction: 1.0,
+        mul: MulOption::None,
+    }
+}
+
+impl CoreSpec {
+    /// Instantiate the unit inventory for this configuration.
+    pub fn units(&self) -> Vec<Unit> {
+        match self.family {
+            CoreFamily::ZeroRiscy => self.zero_riscy_units(),
+            CoreFamily::TpIsa => self.tpisa_units(),
+        }
+    }
+
+    fn mul_units(&self, out: &mut Vec<Unit>) {
+        match self.mul {
+            MulOption::None => {}
+            MulOption::Baseline => out.push(Unit {
+                kind: UnitKind::Mul,
+                // 32x32 array staged over 3 cycles + two 64-bit staging regs.
+                ge: c::array_multiplier(32, 32) + 2.0 * c::dff(64),
+                activity: 1.30,
+                depth: c::array_multiplier_depth(32, 32) / 3 + 6,
+            }),
+            MulOption::Mac(cfg) => out.push(Unit {
+                kind: UnitKind::MacUnit,
+                ge: cfg.ge(),
+                activity: cfg.activity(),
+                depth: cfg.depth(),
+            }),
+        }
+    }
+
+    fn zero_riscy_units(&self) -> Vec<Unit> {
+        let d = self.datapath;
+        let mut units = vec![
+            Unit {
+                kind: UnitKind::RegFile,
+                ge: c::regfile(self.regs, d, 2),
+                activity: 0.95,
+                depth: c::regfile_depth(self.regs),
+            },
+            Unit {
+                // EX: main adder, branch adder, barrel shifter, logic
+                // ops, comparator, result muxing, flag logic.
+                kind: UnitKind::Alu,
+                ge: 2.0 * c::adder(d)
+                    + c::barrel_shifter(d)
+                    + 4.0 * c::mux2(d)
+                    + c::comparator(d)
+                    + 3.0 * c::mux2(d)
+                    + 450.0,
+                activity: 1.15,
+                depth: c::adder_depth(d) + 6,
+            },
+            Unit {
+                kind: UnitKind::Lsu,
+                ge: 2256.0 + 2.0 * c::dff(self.bar_bits) + c::adder(self.bar_bits),
+                activity: 1.0,
+                depth: 12,
+            },
+            Unit {
+                kind: UnitKind::IfStage,
+                ge: 892.0 + c::dff(self.pc_bits) + 2.0 * c::adder(self.pc_bits),
+                activity: 1.10,
+                depth: c::adder_depth(self.pc_bits) / 2 + 6,
+            },
+            Unit {
+                kind: UnitKind::Decoder,
+                ge: 2200.0 * (0.45 + 0.55 * self.isa_fraction),
+                activity: 1.0,
+                depth: 8,
+            },
+            Unit {
+                kind: UnitKind::Controller,
+                ge: 2600.0 * (0.45 + 0.55 * self.isa_fraction),
+                activity: 1.0,
+                depth: 10,
+            },
+            Unit { kind: UnitKind::Pipeline, ge: 900.0, activity: 1.20, depth: 2 },
+        ];
+        if self.csr_fraction > 0.0 {
+            units.push(Unit {
+                kind: UnitKind::Csr,
+                ge: 2400.0 * self.csr_fraction,
+                activity: 0.70,
+                depth: 8,
+            });
+        }
+        if self.has_compressed_dec {
+            units.push(Unit { kind: UnitKind::CompressedDec, ge: 600.0, activity: 0.8, depth: 6 });
+        }
+        if self.has_debug {
+            units.push(Unit { kind: UnitKind::Debug, ge: 1400.0, activity: 0.30, depth: 6 });
+        }
+        if self.has_irq {
+            units.push(Unit { kind: UnitKind::Irq, ge: 400.0, activity: 0.50, depth: 5 });
+        }
+        self.mul_units(&mut units);
+        units
+    }
+
+    fn tpisa_units(&self) -> Vec<Unit> {
+        let d = self.datapath;
+        let mut units = vec![
+            Unit {
+                kind: UnitKind::RegFile,
+                ge: c::regfile(self.regs, d, 1),
+                activity: 0.95,
+                depth: c::regfile_depth(self.regs),
+            },
+            Unit {
+                kind: UnitKind::Alu,
+                ge: c::adder(d) + c::barrel_shifter(d) + 3.0 * c::mux2(d) + 90.0,
+                activity: 1.15,
+                depth: c::adder_depth(d) + 4,
+            },
+            Unit {
+                kind: UnitKind::Lsu,
+                ge: 90.0 + c::dff(self.bar_bits) + c::adder(self.bar_bits) / 2.0,
+                activity: 1.0,
+                depth: 8,
+            },
+            Unit {
+                kind: UnitKind::IfStage,
+                ge: 60.0 + c::dff(self.pc_bits) + c::adder(self.pc_bits),
+                activity: 1.10,
+                depth: c::adder_depth(self.pc_bits) / 2 + 4,
+            },
+            Unit { kind: UnitKind::Decoder, ge: 160.0, activity: 1.0, depth: 5 },
+            Unit { kind: UnitKind::Controller, ge: 220.0, activity: 1.0, depth: 6 },
+        ];
+        self.mul_units(&mut units);
+        units
+    }
+}
+
+/// A synthesis report: the analytical analogue of the DC area/power/fmax
+/// tables the paper extracts in workflow steps ① and ⑤.
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub name: String,
+    pub total_ge: f64,
+    pub area_mm2: f64,
+    pub power_mw: f64,
+    pub fmax_hz: f64,
+    pub critical_depth: u32,
+    /// Per-unit (kind, GE, area mm², power mW).
+    pub breakdown: Vec<(UnitKind, f64, f64, f64)>,
+}
+
+impl SynthReport {
+    pub fn area_cm2(&self) -> f64 {
+        self.area_mm2 / 100.0
+    }
+
+    /// Fraction of total area in the given unit kinds.
+    pub fn area_fraction(&self, kinds: &[UnitKind]) -> f64 {
+        let part: f64 = self
+            .breakdown
+            .iter()
+            .filter(|(k, ..)| kinds.contains(k))
+            .map(|(_, _, a, _)| a)
+            .sum();
+        part / self.area_mm2
+    }
+
+    /// Fraction of total power in the given unit kinds.
+    pub fn power_fraction(&self, kinds: &[UnitKind]) -> f64 {
+        let part: f64 = self
+            .breakdown
+            .iter()
+            .filter(|(k, ..)| kinds.contains(k))
+            .map(|(_, _, _, p)| p)
+            .sum();
+        part / self.power_mw
+    }
+}
+
+/// Synthesise a core configuration in a technology.
+pub fn synthesize(spec: &CoreSpec, tech: &Technology) -> SynthReport {
+    let units = spec.units();
+    let mut total_ge = 0.0;
+    let mut area = 0.0;
+    let mut power_uw = 0.0;
+    let mut depth = 0;
+    let mut breakdown = Vec::with_capacity(units.len());
+    for u in &units {
+        let a = tech.area_mm2(u.ge);
+        let p = tech.power_uw(u.ge, u.activity);
+        total_ge += u.ge;
+        area += a;
+        power_uw += p;
+        depth = depth.max(u.depth);
+        breakdown.push((u.kind, u.ge, a, p / 1000.0));
+    }
+    SynthReport {
+        name: spec.name.clone(),
+        total_ge,
+        area_mm2: area,
+        power_mw: power_uw / 1000.0,
+        fmax_hz: tech.fmax_hz(depth),
+        critical_depth: depth,
+        breakdown,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::egfet::{egfet, ZERO_RISCY_AREA_CM2, ZERO_RISCY_POWER_MW};
+    use super::*;
+
+    #[test]
+    fn calibration_anchors() {
+        // The EGFET per-GE constants are fixed so baseline Zero-Riscy
+        // reproduces the paper's published numbers (§III-A).
+        let r = synthesize(&zero_riscy(), &egfet());
+        let da = (r.area_cm2() - ZERO_RISCY_AREA_CM2).abs() / ZERO_RISCY_AREA_CM2;
+        let dp = (r.power_mw - ZERO_RISCY_POWER_MW).abs() / ZERO_RISCY_POWER_MW;
+        assert!(da < 0.005, "area {} cm2 vs anchor {} ({da:.4})", r.area_cm2(), ZERO_RISCY_AREA_CM2);
+        assert!(dp < 0.005, "power {} mW vs anchor {} ({dp:.4})", r.power_mw, ZERO_RISCY_POWER_MW);
+    }
+
+    #[test]
+    fn mul_rf_almost_half() {
+        // Paper Fig. 1b: "the multi-stage multiplier unit and the
+        // register file ... account for almost half of the total area
+        // and power consumption, at 46.5% and 46.2%".
+        let r = synthesize(&zero_riscy(), &egfet());
+        let af = r.area_fraction(&[UnitKind::Mul, UnitKind::RegFile]);
+        let pf = r.power_fraction(&[UnitKind::Mul, UnitKind::RegFile]);
+        assert!((0.42..=0.54).contains(&af), "area fraction {af}");
+        assert!((0.42..=0.56).contains(&pf), "power fraction {pf}");
+    }
+
+    #[test]
+    fn tpisa_within_technology_limits() {
+        // Fig. 1a: both TP-ISA configurations are far smaller than ZR.
+        let t = egfet();
+        let zr = synthesize(&zero_riscy(), &t);
+        let tp4 = synthesize(&tpisa(4), &t);
+        let tp32 = synthesize(&tpisa(32), &t);
+        assert!(tp32.area_mm2 < zr.area_mm2 / 5.0);
+        assert!(tp4.area_mm2 < tp32.area_mm2);
+        assert!(tp4.power_mw < tp32.power_mw);
+        // And clock faster (shallower paths).
+        assert!(tp4.fmax_hz > zr.fmax_hz);
+    }
+
+    #[test]
+    fn bespoke_reductions_shrink_core() {
+        let t = egfet();
+        let base = synthesize(&zero_riscy(), &t);
+        let mut b = zero_riscy();
+        b.regs = 12;
+        b.pc_bits = 10;
+        b.bar_bits = 8;
+        b.has_debug = false;
+        b.has_irq = false;
+        b.has_compressed_dec = false;
+        b.csr_fraction = 0.15;
+        let r = synthesize(&b, &t);
+        assert!(r.area_mm2 < base.area_mm2);
+        assert!(r.power_mw < base.power_mw);
+    }
+
+    #[test]
+    fn mac_area_ordering_matches_table1() {
+        // Replacing the baseline MUL: MAC32 costs slightly MORE (gain
+        // dips, Table I: 10.6% -> 8.2%), P16/P8/P4 progressively less.
+        let t = egfet();
+        let mk = |mul: MulOption| {
+            let mut s = zero_riscy();
+            s.mul = mul;
+            synthesize(&s, &t).area_mm2
+        };
+        let base = mk(MulOption::Baseline);
+        let m32 = mk(MulOption::Mac(MacConfig::new(32, 32)));
+        let m16 = mk(MulOption::Mac(MacConfig::new(32, 16)));
+        let m8 = mk(MulOption::Mac(MacConfig::new(32, 8)));
+        let m4 = mk(MulOption::Mac(MacConfig::new(32, 4)));
+        assert!(m32 > base, "MAC32 {m32} should exceed baseline {base}");
+        assert!(m16 < base && m8 < m16 && m4 < m8, "{m16} {m8} {m4}");
+    }
+
+    #[test]
+    fn tpisa_mac_overhead_factor() {
+        // Table II ballpark: TP-ISA 8-bit with an 8-bit MAC costs ~2x
+        // area and slightly less in power factor.
+        let t = egfet();
+        let base = synthesize(&tpisa(8), &t);
+        let mut m = tpisa(8);
+        m.mul = MulOption::Mac(MacConfig::new(8, 8));
+        m.name = "tp-isa-d8-mac".into();
+        let r = synthesize(&m, &t);
+        let area_x = r.area_mm2 / base.area_mm2;
+        let power_x = r.power_mw / base.power_mw;
+        assert!((1.5..=2.6).contains(&area_x), "area factor {area_x}");
+        assert!((1.4..=2.6).contains(&power_x), "power factor {power_x}");
+    }
+
+    #[test]
+    fn breakdown_sums_to_totals() {
+        let r = synthesize(&zero_riscy(), &egfet());
+        let a: f64 = r.breakdown.iter().map(|(_, _, a, _)| a).sum();
+        let p: f64 = r.breakdown.iter().map(|(_, _, _, p)| p).sum();
+        assert!((a - r.area_mm2).abs() < 1e-9);
+        assert!((p - r.power_mw).abs() < 1e-9);
+    }
+}

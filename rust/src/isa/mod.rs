@@ -1,0 +1,26 @@
+//! Instruction-set architectures.
+//!
+//! * [`rv32`] — the RV32IM subset Zero-Riscy executes, plus the paper's
+//!   custom SIMD-MAC extension (custom-0 opcode space), with encoder,
+//!   decoder, disassembler and a two-pass assembler.
+//! * [`tpisa`] — the minimal width-configurable printed ISA (Bleier et
+//!   al., ISCA'20 lineage): 16-bit instructions, 8 registers, carry/zero
+//!   flags, no hardware multiply, optional MAC extension.
+
+pub mod rv32;
+pub mod rv32_asm;
+pub mod tpisa;
+
+/// The SIMD MAC extension operations, shared by both ISAs.  Semantics
+/// live in `sim::mac_model`; encodings are ISA-specific.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacOp {
+    /// `mac rs1, rs2` — multiply-accumulate all lanes of the two packed
+    /// operand words into the unit's per-lane accumulators.
+    Mac,
+    /// `macrd rd, lane` — read lane accumulator into a register (for
+    /// p=32, lanes 0/1 read the low/high accumulator halves).
+    MacRd,
+    /// `maccl` — clear all lane accumulators.
+    MacClr,
+}

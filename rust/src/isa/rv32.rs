@@ -1,0 +1,726 @@
+//! RV32IM subset + custom SIMD-MAC extension: instruction model,
+//! encoder, decoder, disassembler.
+//!
+//! This is the slice of RV32IM that Zero-Riscy executes in our
+//! benchmarks plus the instructions the bespoke profiler must *observe
+//! as unused* (SLT/SLTI, CSR ops, ECALL/EBREAK, MULH*) — the reduction
+//! pass works from real decode results, not hard-coded lists.
+//!
+//! The MAC extension lives in the custom-0 opcode (0x0B): funct3 0 =
+//! `mac rs1, rs2`, funct3 1 = `macrd rd, lane(rs1 field)`, funct3 2 =
+//! `maccl`.  The unit's precision is a *hardware* configuration (one
+//! precision option per synthesised core, as in the paper), not an
+//! instruction field.
+
+use anyhow::{bail, Result};
+
+use super::MacOp;
+
+/// Register index newtype (x0..x31).
+pub type Reg = u8;
+
+/// Decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    Lui { rd: Reg, imm: i32 },
+    Auipc { rd: Reg, imm: i32 },
+    Jal { rd: Reg, offset: i32 },
+    Jalr { rd: Reg, rs1: Reg, offset: i32 },
+    Branch { op: BranchOp, rs1: Reg, rs2: Reg, offset: i32 },
+    Load { op: LoadOp, rd: Reg, rs1: Reg, offset: i32 },
+    Store { op: StoreOp, rs2: Reg, rs1: Reg, offset: i32 },
+    OpImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    Op { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    MulDiv { op: MulOp, rd: Reg, rs1: Reg, rs2: Reg },
+    Csr { op: CsrOp, rd: Reg, rs1: Reg, csr: u16 },
+    Ecall,
+    Ebreak,
+    Fence,
+    /// Custom-0 SIMD MAC extension.
+    Mac { op: MacOp, rd: Reg, rs1: Reg, rs2: Reg },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BranchOp {
+    Beq,
+    Bne,
+    Blt,
+    Bge,
+    Bltu,
+    Bgeu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOp {
+    Lb,
+    Lh,
+    Lw,
+    Lbu,
+    Lhu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreOp {
+    Sb,
+    Sh,
+    Sw,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Slt,
+    Sltu,
+    Xor,
+    Srl,
+    Sra,
+    Or,
+    And,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MulOp {
+    Mul,
+    Mulh,
+    Mulhsu,
+    Mulhu,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CsrOp {
+    Csrrw,
+    Csrrs,
+    Csrrc,
+}
+
+impl Instr {
+    /// Dense, stable per-mnemonic id (the profiler's histogram index —
+    /// the retire hot path must not hash or compare strings).
+    pub fn mnemonic_id(&self) -> usize {
+        match *self {
+            Instr::Lui { .. } => 0,
+            Instr::Auipc { .. } => 1,
+            Instr::Jal { .. } => 2,
+            Instr::Jalr { .. } => 3,
+            Instr::Branch { op, .. } => 4 + op as usize, // 4..=9
+            Instr::Load { op, .. } => 10 + op as usize,  // 10..=14
+            Instr::Store { op, .. } => 15 + op as usize, // 15..=17
+            Instr::OpImm { op, .. } => 18 + op as usize, // 18..=27
+            Instr::Op { op, .. } => 28 + op as usize,    // 28..=37
+            Instr::MulDiv { op, .. } => 38 + op as usize, // 38..=45
+            Instr::Csr { op, .. } => 46 + op as usize,   // 46..=48
+            Instr::Ecall => 49,
+            Instr::Ebreak => 50,
+            Instr::Fence => 51,
+            Instr::Mac { op, .. } => 52 + op as usize,   // 52..=54
+        }
+    }
+
+    /// Stable mnemonic (profiling histograms key on this).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Lui { .. } => "lui",
+            Instr::Auipc { .. } => "auipc",
+            Instr::Jal { .. } => "jal",
+            Instr::Jalr { .. } => "jalr",
+            Instr::Branch { op, .. } => match op {
+                BranchOp::Beq => "beq",
+                BranchOp::Bne => "bne",
+                BranchOp::Blt => "blt",
+                BranchOp::Bge => "bge",
+                BranchOp::Bltu => "bltu",
+                BranchOp::Bgeu => "bgeu",
+            },
+            Instr::Load { op, .. } => match op {
+                LoadOp::Lb => "lb",
+                LoadOp::Lh => "lh",
+                LoadOp::Lw => "lw",
+                LoadOp::Lbu => "lbu",
+                LoadOp::Lhu => "lhu",
+            },
+            Instr::Store { op, .. } => match op {
+                StoreOp::Sb => "sb",
+                StoreOp::Sh => "sh",
+                StoreOp::Sw => "sw",
+            },
+            Instr::OpImm { op, .. } => match op {
+                AluOp::Add => "addi",
+                AluOp::Sll => "slli",
+                AluOp::Slt => "slti",
+                AluOp::Sltu => "sltiu",
+                AluOp::Xor => "xori",
+                AluOp::Srl => "srli",
+                AluOp::Sra => "srai",
+                AluOp::Or => "ori",
+                AluOp::And => "andi",
+                AluOp::Sub => unreachable!("no subi"),
+            },
+            Instr::Op { op, .. } => match op {
+                AluOp::Add => "add",
+                AluOp::Sub => "sub",
+                AluOp::Sll => "sll",
+                AluOp::Slt => "slt",
+                AluOp::Sltu => "sltu",
+                AluOp::Xor => "xor",
+                AluOp::Srl => "srl",
+                AluOp::Sra => "sra",
+                AluOp::Or => "or",
+                AluOp::And => "and",
+            },
+            Instr::MulDiv { op, .. } => match op {
+                MulOp::Mul => "mul",
+                MulOp::Mulh => "mulh",
+                MulOp::Mulhsu => "mulhsu",
+                MulOp::Mulhu => "mulhu",
+                MulOp::Div => "div",
+                MulOp::Divu => "divu",
+                MulOp::Rem => "rem",
+                MulOp::Remu => "remu",
+            },
+            Instr::Csr { op, .. } => match op {
+                CsrOp::Csrrw => "csrrw",
+                CsrOp::Csrrs => "csrrs",
+                CsrOp::Csrrc => "csrrc",
+            },
+            Instr::Ecall => "ecall",
+            Instr::Ebreak => "ebreak",
+            Instr::Fence => "fence",
+            Instr::Mac { op, .. } => match op {
+                MacOp::Mac => "mac",
+                MacOp::MacRd => "macrd",
+                MacOp::MacClr => "maccl",
+            },
+        }
+    }
+
+    /// Registers read by this instruction.
+    pub fn reads(&self) -> Vec<Reg> {
+        match *self {
+            Instr::Lui { .. } | Instr::Auipc { .. } | Instr::Jal { .. } => vec![],
+            Instr::Jalr { rs1, .. } => vec![rs1],
+            Instr::Branch { rs1, rs2, .. } => vec![rs1, rs2],
+            Instr::Load { rs1, .. } => vec![rs1],
+            Instr::Store { rs1, rs2, .. } => vec![rs1, rs2],
+            Instr::OpImm { rs1, .. } => vec![rs1],
+            Instr::Op { rs1, rs2, .. } | Instr::MulDiv { rs1, rs2, .. } => vec![rs1, rs2],
+            Instr::Csr { rs1, .. } => vec![rs1],
+            Instr::Ecall | Instr::Ebreak | Instr::Fence => vec![],
+            Instr::Mac { op, rs1, rs2, .. } => match op {
+                MacOp::Mac => vec![rs1, rs2],
+                _ => vec![],
+            },
+        }
+    }
+
+    /// Register written by this instruction (if any).
+    pub fn writes(&self) -> Option<Reg> {
+        match *self {
+            Instr::Lui { rd, .. }
+            | Instr::Auipc { rd, .. }
+            | Instr::Jal { rd, .. }
+            | Instr::Jalr { rd, .. }
+            | Instr::Load { rd, .. }
+            | Instr::OpImm { rd, .. }
+            | Instr::Op { rd, .. }
+            | Instr::MulDiv { rd, .. }
+            | Instr::Csr { rd, .. } => (rd != 0).then_some(rd),
+            Instr::Mac { op: MacOp::MacRd, rd, .. } => (rd != 0).then_some(rd),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+const OP_LUI: u32 = 0b0110111;
+const OP_AUIPC: u32 = 0b0010111;
+const OP_JAL: u32 = 0b1101111;
+const OP_JALR: u32 = 0b1100111;
+const OP_BRANCH: u32 = 0b1100011;
+const OP_LOAD: u32 = 0b0000011;
+const OP_STORE: u32 = 0b0100011;
+const OP_IMM: u32 = 0b0010011;
+const OP_OP: u32 = 0b0110011;
+const OP_SYSTEM: u32 = 0b1110011;
+const OP_FENCE: u32 = 0b0001111;
+const OP_CUSTOM0: u32 = 0b0001011; // MAC extension
+
+fn enc_r(op: u32, f3: u32, f7: u32, rd: u8, rs1: u8, rs2: u8) -> u32 {
+    op | ((rd as u32) << 7)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (f7 << 25)
+}
+
+fn enc_i(op: u32, f3: u32, rd: u8, rs1: u8, imm: i32) -> u32 {
+    op | ((rd as u32) << 7) | (f3 << 12) | ((rs1 as u32) << 15) | (((imm as u32) & 0xfff) << 20)
+}
+
+fn enc_s(op: u32, f3: u32, rs1: u8, rs2: u8, imm: i32) -> u32 {
+    let imm = imm as u32;
+    op | ((imm & 0x1f) << 7)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((imm >> 5) & 0x7f) << 25)
+}
+
+fn enc_b(op: u32, f3: u32, rs1: u8, rs2: u8, off: i32) -> u32 {
+    let o = off as u32;
+    op | (((o >> 11) & 1) << 7)
+        | (((o >> 1) & 0xf) << 8)
+        | (f3 << 12)
+        | ((rs1 as u32) << 15)
+        | ((rs2 as u32) << 20)
+        | (((o >> 5) & 0x3f) << 25)
+        | (((o >> 12) & 1) << 31)
+}
+
+fn enc_j(op: u32, rd: u8, off: i32) -> u32 {
+    let o = off as u32;
+    op | ((rd as u32) << 7)
+        | (((o >> 12) & 0xff) << 12)
+        | (((o >> 11) & 1) << 20)
+        | (((o >> 1) & 0x3ff) << 21)
+        | (((o >> 20) & 1) << 31)
+}
+
+impl Instr {
+    /// Encode to the 32-bit RISC-V instruction word.
+    pub fn encode(&self) -> u32 {
+        match *self {
+            Instr::Lui { rd, imm } => OP_LUI | ((rd as u32) << 7) | ((imm as u32) & 0xfffff000),
+            Instr::Auipc { rd, imm } => {
+                OP_AUIPC | ((rd as u32) << 7) | ((imm as u32) & 0xfffff000)
+            }
+            Instr::Jal { rd, offset } => enc_j(OP_JAL, rd, offset),
+            Instr::Jalr { rd, rs1, offset } => enc_i(OP_JALR, 0, rd, rs1, offset),
+            Instr::Branch { op, rs1, rs2, offset } => {
+                let f3 = match op {
+                    BranchOp::Beq => 0,
+                    BranchOp::Bne => 1,
+                    BranchOp::Blt => 4,
+                    BranchOp::Bge => 5,
+                    BranchOp::Bltu => 6,
+                    BranchOp::Bgeu => 7,
+                };
+                enc_b(OP_BRANCH, f3, rs1, rs2, offset)
+            }
+            Instr::Load { op, rd, rs1, offset } => {
+                let f3 = match op {
+                    LoadOp::Lb => 0,
+                    LoadOp::Lh => 1,
+                    LoadOp::Lw => 2,
+                    LoadOp::Lbu => 4,
+                    LoadOp::Lhu => 5,
+                };
+                enc_i(OP_LOAD, f3, rd, rs1, offset)
+            }
+            Instr::Store { op, rs2, rs1, offset } => {
+                let f3 = match op {
+                    StoreOp::Sb => 0,
+                    StoreOp::Sh => 1,
+                    StoreOp::Sw => 2,
+                };
+                enc_s(OP_STORE, f3, rs1, rs2, offset)
+            }
+            Instr::OpImm { op, rd, rs1, imm } => match op {
+                AluOp::Add => enc_i(OP_IMM, 0, rd, rs1, imm),
+                AluOp::Slt => enc_i(OP_IMM, 2, rd, rs1, imm),
+                AluOp::Sltu => enc_i(OP_IMM, 3, rd, rs1, imm),
+                AluOp::Xor => enc_i(OP_IMM, 4, rd, rs1, imm),
+                AluOp::Or => enc_i(OP_IMM, 6, rd, rs1, imm),
+                AluOp::And => enc_i(OP_IMM, 7, rd, rs1, imm),
+                AluOp::Sll => enc_r(OP_IMM, 1, 0, rd, rs1, (imm & 31) as u8),
+                AluOp::Srl => enc_r(OP_IMM, 5, 0, rd, rs1, (imm & 31) as u8),
+                AluOp::Sra => enc_r(OP_IMM, 5, 0b0100000, rd, rs1, (imm & 31) as u8),
+                AluOp::Sub => unreachable!("no subi"),
+            },
+            Instr::Op { op, rd, rs1, rs2 } => {
+                let (f3, f7) = match op {
+                    AluOp::Add => (0, 0),
+                    AluOp::Sub => (0, 0b0100000),
+                    AluOp::Sll => (1, 0),
+                    AluOp::Slt => (2, 0),
+                    AluOp::Sltu => (3, 0),
+                    AluOp::Xor => (4, 0),
+                    AluOp::Srl => (5, 0),
+                    AluOp::Sra => (5, 0b0100000),
+                    AluOp::Or => (6, 0),
+                    AluOp::And => (7, 0),
+                };
+                enc_r(OP_OP, f3, f7, rd, rs1, rs2)
+            }
+            Instr::MulDiv { op, rd, rs1, rs2 } => {
+                let f3 = match op {
+                    MulOp::Mul => 0,
+                    MulOp::Mulh => 1,
+                    MulOp::Mulhsu => 2,
+                    MulOp::Mulhu => 3,
+                    MulOp::Div => 4,
+                    MulOp::Divu => 5,
+                    MulOp::Rem => 6,
+                    MulOp::Remu => 7,
+                };
+                enc_r(OP_OP, f3, 1, rd, rs1, rs2)
+            }
+            Instr::Csr { op, rd, rs1, csr } => {
+                let f3 = match op {
+                    CsrOp::Csrrw => 1,
+                    CsrOp::Csrrs => 2,
+                    CsrOp::Csrrc => 3,
+                };
+                enc_i(OP_SYSTEM, f3, rd, rs1, csr as i32)
+            }
+            Instr::Ecall => OP_SYSTEM,
+            Instr::Ebreak => OP_SYSTEM | (1 << 20),
+            Instr::Fence => OP_FENCE,
+            Instr::Mac { op, rd, rs1, rs2 } => {
+                let f3 = match op {
+                    MacOp::Mac => 0,
+                    MacOp::MacRd => 1,
+                    MacOp::MacClr => 2,
+                };
+                enc_r(OP_CUSTOM0, f3, 0, rd, rs1, rs2)
+            }
+        }
+    }
+
+    /// Decode a 32-bit instruction word.
+    pub fn decode(w: u32) -> Result<Instr> {
+        let op = w & 0x7f;
+        let rd = ((w >> 7) & 0x1f) as u8;
+        let f3 = (w >> 12) & 7;
+        let rs1 = ((w >> 15) & 0x1f) as u8;
+        let rs2 = ((w >> 20) & 0x1f) as u8;
+        let f7 = w >> 25;
+        let imm_i = (w as i32) >> 20;
+        Ok(match op {
+            OP_LUI => Instr::Lui { rd, imm: (w & 0xfffff000) as i32 },
+            OP_AUIPC => Instr::Auipc { rd, imm: (w & 0xfffff000) as i32 },
+            OP_JAL => {
+                let off = (((w & 0x8000_0000) as i32 >> 11) as u32 & 0xfff0_0000)
+                    | (w & 0x000f_f000)
+                    | ((w >> 9) & 0x800)
+                    | ((w >> 20) & 0x7fe);
+                Instr::Jal { rd, offset: off as i32 }
+            }
+            OP_JALR => Instr::Jalr { rd, rs1, offset: imm_i },
+            OP_BRANCH => {
+                let off = (((w & 0x8000_0000) as i32 >> 19) as u32 & 0xffff_f000)
+                    | ((w << 4) & 0x800)
+                    | ((w >> 20) & 0x7e0)
+                    | ((w >> 7) & 0x1e);
+                let bop = match f3 {
+                    0 => BranchOp::Beq,
+                    1 => BranchOp::Bne,
+                    4 => BranchOp::Blt,
+                    5 => BranchOp::Bge,
+                    6 => BranchOp::Bltu,
+                    7 => BranchOp::Bgeu,
+                    _ => bail!("bad branch funct3 {f3}"),
+                };
+                Instr::Branch { op: bop, rs1, rs2, offset: off as i32 }
+            }
+            OP_LOAD => {
+                let lop = match f3 {
+                    0 => LoadOp::Lb,
+                    1 => LoadOp::Lh,
+                    2 => LoadOp::Lw,
+                    4 => LoadOp::Lbu,
+                    5 => LoadOp::Lhu,
+                    _ => bail!("bad load funct3 {f3}"),
+                };
+                Instr::Load { op: lop, rd, rs1, offset: imm_i }
+            }
+            OP_STORE => {
+                let sop = match f3 {
+                    0 => StoreOp::Sb,
+                    1 => StoreOp::Sh,
+                    2 => StoreOp::Sw,
+                    _ => bail!("bad store funct3 {f3}"),
+                };
+                let off = ((imm_i >> 5) << 5) | (((w >> 7) & 0x1f) as i32);
+                Instr::Store { op: sop, rs2, rs1, offset: off }
+            }
+            OP_IMM => {
+                let aop = match f3 {
+                    0 => AluOp::Add,
+                    1 => AluOp::Sll,
+                    2 => AluOp::Slt,
+                    3 => AluOp::Sltu,
+                    4 => AluOp::Xor,
+                    5 => {
+                        if f7 == 0b0100000 {
+                            AluOp::Sra
+                        } else {
+                            AluOp::Srl
+                        }
+                    }
+                    6 => AluOp::Or,
+                    7 => AluOp::And,
+                    _ => unreachable!(),
+                };
+                let imm = if matches!(aop, AluOp::Sll | AluOp::Srl | AluOp::Sra) {
+                    rs2 as i32
+                } else {
+                    imm_i
+                };
+                Instr::OpImm { op: aop, rd, rs1, imm }
+            }
+            OP_OP if f7 == 1 => {
+                let mop = match f3 {
+                    0 => MulOp::Mul,
+                    1 => MulOp::Mulh,
+                    2 => MulOp::Mulhsu,
+                    3 => MulOp::Mulhu,
+                    4 => MulOp::Div,
+                    5 => MulOp::Divu,
+                    6 => MulOp::Rem,
+                    _ => MulOp::Remu,
+                };
+                Instr::MulDiv { op: mop, rd, rs1, rs2 }
+            }
+            OP_OP => {
+                let aop = match (f3, f7) {
+                    (0, 0) => AluOp::Add,
+                    (0, 0b0100000) => AluOp::Sub,
+                    (1, _) => AluOp::Sll,
+                    (2, _) => AluOp::Slt,
+                    (3, _) => AluOp::Sltu,
+                    (4, _) => AluOp::Xor,
+                    (5, 0) => AluOp::Srl,
+                    (5, _) => AluOp::Sra,
+                    (6, _) => AluOp::Or,
+                    (7, _) => AluOp::And,
+                    _ => bail!("bad OP encoding {w:#010x}"),
+                };
+                Instr::Op { op: aop, rd, rs1, rs2 }
+            }
+            OP_SYSTEM => match f3 {
+                0 if w == OP_SYSTEM => Instr::Ecall,
+                0 if w == OP_SYSTEM | (1 << 20) => Instr::Ebreak,
+                1 => Instr::Csr { op: CsrOp::Csrrw, rd, rs1, csr: (w >> 20) as u16 },
+                2 => Instr::Csr { op: CsrOp::Csrrs, rd, rs1, csr: (w >> 20) as u16 },
+                3 => Instr::Csr { op: CsrOp::Csrrc, rd, rs1, csr: (w >> 20) as u16 },
+                _ => bail!("bad SYSTEM encoding {w:#010x}"),
+            },
+            OP_FENCE => Instr::Fence,
+            OP_CUSTOM0 => {
+                let mop = match f3 {
+                    0 => MacOp::Mac,
+                    1 => MacOp::MacRd,
+                    2 => MacOp::MacClr,
+                    _ => bail!("bad MAC funct3 {f3}"),
+                };
+                Instr::Mac { op: mop, rd, rs1, rs2 }
+            }
+            _ => bail!("unknown opcode {op:#09b} in {w:#010x}"),
+        })
+    }
+}
+
+impl std::fmt::Display for Instr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let m = self.mnemonic();
+        match *self {
+            Instr::Lui { rd, imm } => write!(f, "{m} x{rd}, {:#x}", (imm as u32) >> 12),
+            Instr::Auipc { rd, imm } => write!(f, "{m} x{rd}, {:#x}", (imm as u32) >> 12),
+            Instr::Jal { rd, offset } => write!(f, "{m} x{rd}, {offset}"),
+            Instr::Jalr { rd, rs1, offset } => write!(f, "{m} x{rd}, {offset}(x{rs1})"),
+            Instr::Branch { rs1, rs2, offset, .. } => write!(f, "{m} x{rs1}, x{rs2}, {offset}"),
+            Instr::Load { rd, rs1, offset, .. } => write!(f, "{m} x{rd}, {offset}(x{rs1})"),
+            Instr::Store { rs2, rs1, offset, .. } => write!(f, "{m} x{rs2}, {offset}(x{rs1})"),
+            Instr::OpImm { rd, rs1, imm, .. } => write!(f, "{m} x{rd}, x{rs1}, {imm}"),
+            Instr::Op { rd, rs1, rs2, .. } | Instr::MulDiv { rd, rs1, rs2, .. } => {
+                write!(f, "{m} x{rd}, x{rs1}, x{rs2}")
+            }
+            Instr::Csr { rd, rs1, csr, .. } => write!(f, "{m} x{rd}, {csr:#x}, x{rs1}"),
+            Instr::Ecall | Instr::Ebreak | Instr::Fence => write!(f, "{m}"),
+            Instr::Mac { op, rd, rs1, rs2 } => match op {
+                MacOp::Mac => write!(f, "{m} x{rs1}, x{rs2}"),
+                MacOp::MacRd => write!(f, "{m} x{rd}, {rs1}"),
+                MacOp::MacClr => write!(f, "{m}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn known_encodings() {
+        // addi x1, x0, 5  => 0x00500093
+        assert_eq!(
+            Instr::OpImm { op: AluOp::Add, rd: 1, rs1: 0, imm: 5 }.encode(),
+            0x0050_0093
+        );
+        // add x3, x1, x2 => 0x002081b3
+        assert_eq!(Instr::Op { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 }.encode(), 0x0020_81b3);
+        // mul x5, x6, x7 => 0x027302b3
+        assert_eq!(
+            Instr::MulDiv { op: MulOp::Mul, rd: 5, rs1: 6, rs2: 7 }.encode(),
+            0x0273_02b3
+        );
+        // lw x10, 8(x2) => 0x00812503
+        assert_eq!(
+            Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 2, offset: 8 }.encode(),
+            0x0081_2503
+        );
+        // sw x10, 12(x2) => 0x00a12623
+        assert_eq!(
+            Instr::Store { op: StoreOp::Sw, rs2: 10, rs1: 2, offset: 12 }.encode(),
+            0x00a1_2623
+        );
+        // beq x1, x2, +8 => 0x00208463
+        assert_eq!(
+            Instr::Branch { op: BranchOp::Beq, rs1: 1, rs2: 2, offset: 8 }.encode(),
+            0x0020_8463
+        );
+        // jal x1, +16 => 0x010000ef
+        assert_eq!(Instr::Jal { rd: 1, offset: 16 }.encode(), 0x0100_00ef);
+    }
+
+    fn random_instr(rng: &mut Pcg32) -> Instr {
+        let r = |rng: &mut Pcg32| rng.range_usize(0, 31) as u8;
+        let imm12 = |rng: &mut Pcg32| rng.range_i64(-2048, 2047) as i32;
+        match rng.range_usize(0, 11) {
+            0 => Instr::Lui { rd: r(rng), imm: (rng.range_i64(0, 0xfffff) as i32) << 12 },
+            1 => Instr::Jal { rd: r(rng), offset: (rng.range_i64(-500_000, 500_000) as i32) & !1 },
+            2 => Instr::Jalr { rd: r(rng), rs1: r(rng), offset: imm12(rng) },
+            3 => {
+                let op = *rng.choice(&[
+                    BranchOp::Beq,
+                    BranchOp::Bne,
+                    BranchOp::Blt,
+                    BranchOp::Bge,
+                    BranchOp::Bltu,
+                    BranchOp::Bgeu,
+                ]);
+                Instr::Branch {
+                    op,
+                    rs1: r(rng),
+                    rs2: r(rng),
+                    offset: (rng.range_i64(-4000, 4000) as i32) & !1,
+                }
+            }
+            4 => {
+                let op = *rng.choice(&[LoadOp::Lb, LoadOp::Lh, LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu]);
+                Instr::Load { op, rd: r(rng), rs1: r(rng), offset: imm12(rng) }
+            }
+            5 => {
+                let op = *rng.choice(&[StoreOp::Sb, StoreOp::Sh, StoreOp::Sw]);
+                Instr::Store { op, rs2: r(rng), rs1: r(rng), offset: imm12(rng) }
+            }
+            6 => {
+                let op = *rng.choice(&[
+                    AluOp::Add,
+                    AluOp::Slt,
+                    AluOp::Sltu,
+                    AluOp::Xor,
+                    AluOp::Or,
+                    AluOp::And,
+                ]);
+                Instr::OpImm { op, rd: r(rng), rs1: r(rng), imm: imm12(rng) }
+            }
+            7 => {
+                let op = *rng.choice(&[AluOp::Sll, AluOp::Srl, AluOp::Sra]);
+                Instr::OpImm { op, rd: r(rng), rs1: r(rng), imm: rng.range_i64(0, 31) as i32 }
+            }
+            8 => {
+                let op = *rng.choice(&[
+                    AluOp::Add,
+                    AluOp::Sub,
+                    AluOp::Sll,
+                    AluOp::Slt,
+                    AluOp::Sltu,
+                    AluOp::Xor,
+                    AluOp::Srl,
+                    AluOp::Sra,
+                    AluOp::Or,
+                    AluOp::And,
+                ]);
+                Instr::Op { op, rd: r(rng), rs1: r(rng), rs2: r(rng) }
+            }
+            9 => {
+                let op = *rng.choice(&[
+                    MulOp::Mul,
+                    MulOp::Mulh,
+                    MulOp::Mulhsu,
+                    MulOp::Mulhu,
+                    MulOp::Div,
+                    MulOp::Divu,
+                    MulOp::Rem,
+                    MulOp::Remu,
+                ]);
+                Instr::MulDiv { op, rd: r(rng), rs1: r(rng), rs2: r(rng) }
+            }
+            10 => {
+                let op = *rng.choice(&[CsrOp::Csrrw, CsrOp::Csrrs, CsrOp::Csrrc]);
+                Instr::Csr { op, rd: r(rng), rs1: r(rng), csr: rng.range_usize(0, 0xfff) as u16 }
+            }
+            _ => {
+                let op = *rng.choice(&[MacOp::Mac, MacOp::MacRd, MacOp::MacClr]);
+                Instr::Mac { op, rd: r(rng), rs1: r(rng), rs2: r(rng) }
+            }
+        }
+    }
+
+    /// Property: encode -> decode is the identity (modulo don't-care
+    /// fields of MAC instructions, which we normalise in construction).
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        crate::util::prop::check("rv32 encode/decode roundtrip", 2000, |rng| {
+            let i = random_instr(rng);
+            let w = i.encode();
+            let d = Instr::decode(w).map_err(|e| e.to_string())?;
+            // MAC don't-care fields: compare mnemonics + encode again.
+            if d.encode() != w {
+                return Err(format!("{i:?} -> {w:#010x} -> {d:?}"));
+            }
+            if d.mnemonic() != i.mnemonic() {
+                return Err(format!("mnemonic {} != {}", d.mnemonic(), i.mnemonic()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Instr::decode(0x0000_0000).is_err()); // opcode 0
+        assert!(Instr::decode(0xffff_ffff).is_err());
+    }
+
+    #[test]
+    fn reads_writes() {
+        let i = Instr::Op { op: AluOp::Add, rd: 3, rs1: 1, rs2: 2 };
+        assert_eq!(i.reads(), vec![1, 2]);
+        assert_eq!(i.writes(), Some(3));
+        // x0 writes are discarded.
+        let i = Instr::OpImm { op: AluOp::Add, rd: 0, rs1: 0, imm: 0 };
+        assert_eq!(i.writes(), None);
+        let i = Instr::Mac { op: MacOp::Mac, rd: 0, rs1: 4, rs2: 5 };
+        assert_eq!(i.reads(), vec![4, 5]);
+        assert_eq!(i.writes(), None);
+    }
+
+    #[test]
+    fn disassembly_smoke() {
+        let i = Instr::Load { op: LoadOp::Lh, rd: 5, rs1: 2, offset: -4 };
+        assert_eq!(i.to_string(), "lh x5, -4(x2)");
+        let i = Instr::Mac { op: MacOp::Mac, rd: 0, rs1: 10, rs2: 11 };
+        assert_eq!(i.to_string(), "mac x10, x11");
+    }
+}

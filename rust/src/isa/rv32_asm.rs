@@ -1,0 +1,498 @@
+//! Two-pass RV32 assembler: a typed builder API with label resolution,
+//! pseudo-instructions (`li`, `mv`, `j`, `nop`, `ret`) and a small text
+//! parser for tests/examples.
+//!
+//! The ML code generator (`ml::codegen_rv32`) drives the builder API;
+//! the text syntax exists so programs can also be written by hand:
+//!
+//! ```text
+//!     li   x5, 1000
+//! loop:
+//!     addi x5, x5, -1
+//!     bne  x5, x0, loop
+//!     ebreak
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::rv32::*;
+use super::MacOp;
+
+/// A pending label reference.
+#[derive(Debug, Clone)]
+enum Fixup {
+    Branch { idx: usize, label: String },
+    Jal { idx: usize, label: String },
+}
+
+/// Two-pass assembler/builder.
+#[derive(Debug, Default)]
+pub struct Asm {
+    instrs: Vec<Instr>,
+    labels: BTreeMap<String, usize>,
+    fixups: Vec<Fixup>,
+}
+
+impl Asm {
+    pub fn new() -> Asm {
+        Asm::default()
+    }
+
+    /// Current instruction index (word offset).
+    pub fn here(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn label(&mut self, name: &str) {
+        assert!(
+            self.labels.insert(name.to_string(), self.instrs.len()).is_none(),
+            "duplicate label {name}"
+        );
+    }
+
+    pub fn push(&mut self, i: Instr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    // -- common instructions ------------------------------------------------
+
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) -> &mut Self {
+        assert!((-2048..=2047).contains(&imm), "addi imm {imm} out of range");
+        self.push(Instr::OpImm { op: AluOp::Add, rd, rs1, imm })
+    }
+
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Op { op: AluOp::Add, rd, rs1, rs2 })
+    }
+
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Op { op: AluOp::Sub, rd, rs1, rs2 })
+    }
+
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::MulDiv { op: MulOp::Mul, rd, rs1, rs2 })
+    }
+
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.push(Instr::OpImm { op: AluOp::Sll, rd, rs1, imm: sh })
+    }
+
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, sh: i32) -> &mut Self {
+        self.push(Instr::OpImm { op: AluOp::Sra, rd, rs1, imm: sh })
+    }
+
+    pub fn lw(&mut self, rd: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.push(Instr::Load { op: LoadOp::Lw, rd, rs1, offset: off })
+    }
+
+    pub fn lh(&mut self, rd: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.push(Instr::Load { op: LoadOp::Lh, rd, rs1, offset: off })
+    }
+
+    pub fn lb(&mut self, rd: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.push(Instr::Load { op: LoadOp::Lb, rd, rs1, offset: off })
+    }
+
+    pub fn sw(&mut self, rs2: Reg, rs1: Reg, off: i32) -> &mut Self {
+        self.push(Instr::Store { op: StoreOp::Sw, rs2, rs1, offset: off })
+    }
+
+    pub fn mac(&mut self, rs1: Reg, rs2: Reg) -> &mut Self {
+        self.push(Instr::Mac { op: MacOp::Mac, rd: 0, rs1, rs2 })
+    }
+
+    pub fn macrd(&mut self, rd: Reg, lane: u8) -> &mut Self {
+        self.push(Instr::Mac { op: MacOp::MacRd, rd, rs1: lane, rs2: 0 })
+    }
+
+    pub fn maccl(&mut self) -> &mut Self {
+        self.push(Instr::Mac { op: MacOp::MacClr, rd: 0, rs1: 0, rs2: 0 })
+    }
+
+    pub fn ebreak(&mut self) -> &mut Self {
+        self.push(Instr::Ebreak)
+    }
+
+    // -- pseudo-instructions --------------------------------------------------
+
+    /// Load immediate: `addi` when it fits, else `lui (+ addi)`.
+    pub fn li(&mut self, rd: Reg, imm: i32) -> &mut Self {
+        if (-2048..=2047).contains(&imm) {
+            return self.addi(rd, 0, imm);
+        }
+        let lo = (imm << 20) >> 20; // sign-extended low 12
+        let hi = imm.wrapping_sub(lo) as u32 & 0xfffff000;
+        self.push(Instr::Lui { rd, imm: hi as i32 });
+        if lo != 0 {
+            self.addi(rd, rd, lo);
+        }
+        self
+    }
+
+    pub fn mv(&mut self, rd: Reg, rs: Reg) -> &mut Self {
+        self.addi(rd, rs, 0)
+    }
+
+    pub fn nop(&mut self) -> &mut Self {
+        self.addi(0, 0, 0)
+    }
+
+    // -- control flow with labels ----------------------------------------------
+
+    pub fn branch(&mut self, op: BranchOp, rs1: Reg, rs2: Reg, label: &str) -> &mut Self {
+        self.fixups.push(Fixup::Branch { idx: self.instrs.len(), label: label.to_string() });
+        self.push(Instr::Branch { op, rs1, rs2, offset: 0 })
+    }
+
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, l: &str) -> &mut Self {
+        self.branch(BranchOp::Beq, rs1, rs2, l)
+    }
+
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, l: &str) -> &mut Self {
+        self.branch(BranchOp::Bne, rs1, rs2, l)
+    }
+
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, l: &str) -> &mut Self {
+        self.branch(BranchOp::Blt, rs1, rs2, l)
+    }
+
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, l: &str) -> &mut Self {
+        self.branch(BranchOp::Bge, rs1, rs2, l)
+    }
+
+    /// Unconditional jump to label (JAL x0).
+    pub fn j(&mut self, label: &str) -> &mut Self {
+        self.fixups.push(Fixup::Jal { idx: self.instrs.len(), label: label.to_string() });
+        self.push(Instr::Jal { rd: 0, offset: 0 })
+    }
+
+    /// Resolve fixups and return the finished instruction stream.
+    pub fn finish(mut self) -> Result<Vec<Instr>> {
+        for f in &self.fixups {
+            match f {
+                Fixup::Branch { idx, label } | Fixup::Jal { idx, label } => {
+                    let target = *self
+                        .labels
+                        .get(label)
+                        .ok_or_else(|| anyhow!("undefined label {label:?}"))?;
+                    let off = (target as i64 - *idx as i64) * 4;
+                    match &mut self.instrs[*idx] {
+                        Instr::Branch { offset, .. } => {
+                            if !(-4096..=4094).contains(&off) {
+                                bail!("branch to {label:?} out of range ({off})");
+                            }
+                            *offset = off as i32;
+                        }
+                        Instr::Jal { offset, .. } => *offset = off as i32,
+                        other => bail!("fixup on non-branch {other:?}"),
+                    }
+                }
+            }
+        }
+        Ok(self.instrs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Text parser (subset; the builder API is the primary interface)
+// ---------------------------------------------------------------------------
+
+fn parse_reg(tok: &str) -> Result<Reg> {
+    let t = tok.trim().trim_end_matches(',');
+    let names = [
+        ("zero", 0), ("ra", 1), ("sp", 2), ("gp", 3), ("tp", 4), ("t0", 5), ("t1", 6),
+        ("t2", 7), ("s0", 8), ("fp", 8), ("s1", 9), ("a0", 10), ("a1", 11), ("a2", 12),
+        ("a3", 13), ("a4", 14), ("a5", 15), ("a6", 16), ("a7", 17), ("s2", 18), ("s3", 19),
+        ("s4", 20), ("s5", 21), ("s6", 22), ("s7", 23), ("s8", 24), ("s9", 25), ("s10", 26),
+        ("s11", 27), ("t3", 28), ("t4", 29), ("t5", 30), ("t6", 31),
+    ];
+    if let Some(&(_, n)) = names.iter().find(|(n, _)| *n == t) {
+        return Ok(n);
+    }
+    if let Some(n) = t.strip_prefix('x') {
+        let v: u8 = n.parse().with_context(|| format!("bad register {t:?}"))?;
+        if v < 32 {
+            return Ok(v);
+        }
+    }
+    bail!("bad register {tok:?}")
+}
+
+fn parse_imm(tok: &str) -> Result<i32> {
+    let t = tok.trim().trim_end_matches(',');
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(r) => (true, r),
+        None => (false, t),
+    };
+    let v = if let Some(h) = t.strip_prefix("0x") {
+        i64::from_str_radix(h, 16)?
+    } else {
+        t.parse::<i64>()?
+    };
+    Ok(if neg { -v } else { v } as i32)
+}
+
+/// Parse `off(reg)`.
+fn parse_mem(tok: &str) -> Result<(i32, Reg)> {
+    let t = tok.trim().trim_end_matches(',');
+    let open = t.find('(').ok_or_else(|| anyhow!("expected off(reg): {t:?}"))?;
+    let off = if open == 0 { 0 } else { parse_imm(&t[..open])? };
+    let reg = parse_reg(t[open + 1..].trim_end_matches(')'))?;
+    Ok((off, reg))
+}
+
+/// Assemble a text program into an instruction stream.
+pub fn assemble(text: &str) -> Result<Vec<Instr>> {
+    let mut asm = Asm::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let line = if let Some((label, rest)) = line.split_once(':') {
+            asm.label(label.trim());
+            rest.trim()
+        } else {
+            line
+        };
+        if line.is_empty() {
+            continue;
+        }
+        parse_line(&mut asm, line).with_context(|| format!("line {}: {raw:?}", lineno + 1))?;
+    }
+    asm.finish()
+}
+
+fn parse_line(asm: &mut Asm, line: &str) -> Result<()> {
+    let mut parts = line.split_whitespace();
+    let op = parts.next().unwrap();
+    let rest: Vec<&str> = parts.collect();
+    let arg = |i: usize| -> Result<&str> {
+        rest.get(i).copied().ok_or_else(|| anyhow!("{op}: missing operand {i}"))
+    };
+    match op {
+        "li" => {
+            asm.li(parse_reg(arg(0)?)?, parse_imm(arg(1)?)?);
+        }
+        "mv" => {
+            asm.mv(parse_reg(arg(0)?)?, parse_reg(arg(1)?)?);
+        }
+        "nop" => {
+            asm.nop();
+        }
+        "addi" | "andi" | "ori" | "xori" | "slti" | "sltiu" | "slli" | "srli" | "srai" => {
+            let a = match op {
+                "addi" => AluOp::Add,
+                "andi" => AluOp::And,
+                "ori" => AluOp::Or,
+                "xori" => AluOp::Xor,
+                "slti" => AluOp::Slt,
+                "sltiu" => AluOp::Sltu,
+                "slli" => AluOp::Sll,
+                "srli" => AluOp::Srl,
+                _ => AluOp::Sra,
+            };
+            asm.push(Instr::OpImm {
+                op: a,
+                rd: parse_reg(arg(0)?)?,
+                rs1: parse_reg(arg(1)?)?,
+                imm: parse_imm(arg(2)?)?,
+            });
+        }
+        "add" | "sub" | "and" | "or" | "xor" | "sll" | "srl" | "sra" | "slt" | "sltu" => {
+            let a = match op {
+                "add" => AluOp::Add,
+                "sub" => AluOp::Sub,
+                "and" => AluOp::And,
+                "or" => AluOp::Or,
+                "xor" => AluOp::Xor,
+                "sll" => AluOp::Sll,
+                "srl" => AluOp::Srl,
+                "sra" => AluOp::Sra,
+                "slt" => AluOp::Slt,
+                _ => AluOp::Sltu,
+            };
+            asm.push(Instr::Op {
+                op: a,
+                rd: parse_reg(arg(0)?)?,
+                rs1: parse_reg(arg(1)?)?,
+                rs2: parse_reg(arg(2)?)?,
+            });
+        }
+        "mul" | "mulh" | "mulhu" | "mulhsu" | "div" | "divu" | "rem" | "remu" => {
+            let m = match op {
+                "mul" => MulOp::Mul,
+                "mulh" => MulOp::Mulh,
+                "mulhu" => MulOp::Mulhu,
+                "mulhsu" => MulOp::Mulhsu,
+                "div" => MulOp::Div,
+                "divu" => MulOp::Divu,
+                "rem" => MulOp::Rem,
+                _ => MulOp::Remu,
+            };
+            asm.push(Instr::MulDiv {
+                op: m,
+                rd: parse_reg(arg(0)?)?,
+                rs1: parse_reg(arg(1)?)?,
+                rs2: parse_reg(arg(2)?)?,
+            });
+        }
+        "lb" | "lh" | "lw" | "lbu" | "lhu" => {
+            let l = match op {
+                "lb" => LoadOp::Lb,
+                "lh" => LoadOp::Lh,
+                "lw" => LoadOp::Lw,
+                "lbu" => LoadOp::Lbu,
+                _ => LoadOp::Lhu,
+            };
+            let (off, rs1) = parse_mem(arg(1)?)?;
+            asm.push(Instr::Load { op: l, rd: parse_reg(arg(0)?)?, rs1, offset: off });
+        }
+        "sb" | "sh" | "sw" => {
+            let s = match op {
+                "sb" => StoreOp::Sb,
+                "sh" => StoreOp::Sh,
+                _ => StoreOp::Sw,
+            };
+            let (off, rs1) = parse_mem(arg(1)?)?;
+            asm.push(Instr::Store { op: s, rs2: parse_reg(arg(0)?)?, rs1, offset: off });
+        }
+        "beq" | "bne" | "blt" | "bge" | "bltu" | "bgeu" => {
+            let b = match op {
+                "beq" => BranchOp::Beq,
+                "bne" => BranchOp::Bne,
+                "blt" => BranchOp::Blt,
+                "bge" => BranchOp::Bge,
+                "bltu" => BranchOp::Bltu,
+                _ => BranchOp::Bgeu,
+            };
+            asm.branch(b, parse_reg(arg(0)?)?, parse_reg(arg(1)?)?, arg(2)?);
+        }
+        "beqz" => {
+            asm.branch(BranchOp::Beq, parse_reg(arg(0)?)?, 0, arg(1)?);
+        }
+        "bnez" => {
+            asm.branch(BranchOp::Bne, parse_reg(arg(0)?)?, 0, arg(1)?);
+        }
+        "j" => {
+            asm.j(arg(0)?);
+        }
+        "mac" => {
+            asm.mac(parse_reg(arg(0)?)?, parse_reg(arg(1)?)?);
+        }
+        "macrd" => {
+            asm.macrd(parse_reg(arg(0)?)?, parse_imm(arg(1)?)? as u8);
+        }
+        "maccl" => {
+            asm.maccl();
+        }
+        "ebreak" => {
+            asm.ebreak();
+        }
+        "ecall" => {
+            asm.push(Instr::Ecall);
+        }
+        _ => bail!("unknown mnemonic {op:?}"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_labels_resolve() {
+        let mut a = Asm::new();
+        a.li(5, 3);
+        a.label("loop");
+        a.addi(5, 5, -1);
+        a.bne(5, 0, "loop");
+        a.ebreak();
+        let prog = a.finish().unwrap();
+        match prog[2] {
+            Instr::Branch { offset, .. } => assert_eq!(offset, -4),
+            ref other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn undefined_label_errors() {
+        let mut a = Asm::new();
+        a.j("nowhere");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn li_expansion() {
+        let mut a = Asm::new();
+        a.li(1, 5);
+        a.li(2, 0x12345);
+        a.li(3, -70000);
+        let prog = a.finish().unwrap();
+        // 5 fits addi; 0x12345 needs lui+addi; -70000 needs lui+addi.
+        assert_eq!(prog.len(), 5);
+        // Verify the expansions compute the right constants by symbolic
+        // evaluation.
+        let eval = |instrs: &[Instr]| -> i64 {
+            let mut regs = [0i64; 32];
+            for i in instrs {
+                match *i {
+                    Instr::Lui { rd, imm } => regs[rd as usize] = imm as i64,
+                    Instr::OpImm { op: AluOp::Add, rd, rs1, imm } => {
+                        regs[rd as usize] = regs[rs1 as usize] + imm as i64
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            regs.iter().skip(1).copied().find(|&v| v != 0).unwrap()
+        };
+        assert_eq!(eval(&prog[0..1]), 5);
+        assert_eq!(eval(&prog[1..3]), 0x12345);
+        assert_eq!(eval(&prog[3..5]), -70000);
+    }
+
+    #[test]
+    fn text_assembly_roundtrip() {
+        let prog = assemble(
+            r#"
+            # countdown
+                li   t0, 10
+            loop:
+                addi t0, t0, -1
+                bnez t0, loop
+                sw   t0, 0(sp)
+                ebreak
+            "#,
+        )
+        .unwrap();
+        assert_eq!(prog.len(), 5);
+        assert_eq!(prog[0], Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 10 });
+        assert!(matches!(prog[2], Instr::Branch { op: BranchOp::Bne, offset: -4, .. }));
+    }
+
+    #[test]
+    fn text_mac_ops() {
+        let prog = assemble("maccl\nmac a0, a1\nmacrd a2, 1\nebreak").unwrap();
+        assert_eq!(prog.len(), 4);
+        assert!(matches!(prog[1], Instr::Mac { op: crate::isa::MacOp::Mac, rs1: 10, rs2: 11, .. }));
+        assert!(matches!(prog[2], Instr::Mac { op: crate::isa::MacOp::MacRd, rd: 12, rs1: 1, .. }));
+    }
+
+    #[test]
+    fn text_rejects_unknown() {
+        assert!(assemble("frobnicate x1, x2").is_err());
+        assert!(assemble("addi x1").is_err());
+    }
+
+    #[test]
+    fn mem_operands() {
+        let prog = assemble("lw a0, 8(sp)\nsw a0, -4(s0)\nlw a1, (sp)").unwrap();
+        assert_eq!(prog[0], Instr::Load { op: LoadOp::Lw, rd: 10, rs1: 2, offset: 8 });
+        assert_eq!(prog[1], Instr::Store { op: StoreOp::Sw, rs2: 10, rs1: 8, offset: -4 });
+        assert_eq!(prog[2], Instr::Load { op: LoadOp::Lw, rd: 11, rs1: 2, offset: 0 });
+    }
+}

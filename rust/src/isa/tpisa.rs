@@ -1,0 +1,502 @@
+//! TP-ISA: the minimal, width-configurable printed ISA (after Bleier et
+//! al., "Printed Microprocessors", ISCA'20 — the paper's TP-ISA is not
+//! public, so this reconstruction follows its published description: a
+//! minimal, highly configurable core with no hardware multiplier, where
+//! multiplication is "scheduled to the ALU" as shift-add software).
+//!
+//! * 16-bit fixed instruction encoding: `[15:12 op][11:9 r1][8:6 r2][5:0 imm]`
+//! * 8 registers of `d` bits (d ∈ {4, 8, 16, 32} — the datapath width)
+//! * carry (C) and zero (Z) flags; multi-word arithmetic via ADC/SBC/SLC/SRC
+//! * data memory of d-bit words, disjoint from instruction ROM
+//! * optional SIMD MAC extension in the EXT opcode (`sim::mac_model`)
+//!
+//! Branch/jump offsets are 12-bit (r1:r2:imm6), relative instruction
+//! counts; the EXT-space carry branches (BC/BNC) carry 6-bit offsets in
+//! the register fields.
+
+use anyhow::{bail, Result};
+
+use super::MacOp;
+
+pub type Reg = u8; // r0..r7
+
+/// Decoded TP-ISA instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// r1 = sign-extended imm6.
+    Ldi { r1: Reg, imm: i8 },
+    /// r1 += r2 (sets C, Z).
+    Add { r1: Reg, r2: Reg },
+    /// r1 += r2 + C (sets C, Z).
+    Adc { r1: Reg, r2: Reg },
+    /// r1 -= r2 (C = borrow, Z).
+    Sub { r1: Reg, r2: Reg },
+    /// r1 -= r2 + C (C = borrow, Z).
+    Sbc { r1: Reg, r2: Reg },
+    And { r1: Reg, r2: Reg },
+    Or { r1: Reg, r2: Reg },
+    Xor { r1: Reg, r2: Reg },
+    /// Shift r1 left 1; C = bit out (sets Z).
+    Shl { r1: Reg },
+    /// Logical shift right 1; C = bit out (sets Z).
+    Shr { r1: Reg },
+    /// Arithmetic shift right 1; C = bit out (sets Z).
+    Sra { r1: Reg },
+    /// Shift left through carry: r1 = (r1 << 1) | C_in; C = bit out.
+    Slc { r1: Reg },
+    /// Shift right through carry: r1 = (C_in << (d-1)) | (r1 >> 1).
+    Src { r1: Reg },
+    /// r1 = mem[r2 + imm6] (imm6 is UNSIGNED 0..63 — memory offsets
+    /// only ever reach forward, and narrow datapaths need the reach).
+    Ld { r1: Reg, r2: Reg, imm: i8 },
+    /// mem[r2 + imm6] = r1 (unsigned imm6).
+    St { r1: Reg, r2: Reg, imm: i8 },
+    /// r1 += sign-extended imm6 (sets Z; C unchanged).
+    Addi { r1: Reg, imm: i8 },
+    /// r1 = r2.
+    Mov { r1: Reg, r2: Reg },
+    /// r1 = sign-fill of r2 (all-ones if r2's MSB set, else 0).
+    Sxt { r1: Reg, r2: Reg },
+    /// Clear carry.
+    Clc,
+    /// Relative branches (instruction-count offsets).
+    Bz { off: i16 },
+    Bnz { off: i16 },
+    Bc { off: i8 },
+    Bnc { off: i8 },
+    Jmp { off: i16 },
+    /// SIMD MAC extension.
+    Mac { op: MacOp, r1: Reg, r2: Reg },
+    Halt,
+}
+
+impl Instr {
+    /// Dense per-mnemonic id (profiler histogram index; see
+    /// `rv32::Instr::mnemonic_id`).
+    pub fn mnemonic_id(&self) -> usize {
+        match self {
+            Instr::Ldi { .. } => 0,
+            Instr::Add { .. } => 1,
+            Instr::Adc { .. } => 2,
+            Instr::Sub { .. } => 3,
+            Instr::Sbc { .. } => 4,
+            Instr::And { .. } => 5,
+            Instr::Or { .. } => 6,
+            Instr::Xor { .. } => 7,
+            Instr::Shl { .. } => 8,
+            Instr::Shr { .. } => 9,
+            Instr::Sra { .. } => 10,
+            Instr::Slc { .. } => 11,
+            Instr::Src { .. } => 12,
+            Instr::Ld { .. } => 13,
+            Instr::St { .. } => 14,
+            Instr::Addi { .. } => 15,
+            Instr::Mov { .. } => 16,
+            Instr::Sxt { .. } => 17,
+            Instr::Clc => 18,
+            Instr::Bz { .. } => 19,
+            Instr::Bnz { .. } => 20,
+            Instr::Bc { .. } => 21,
+            Instr::Bnc { .. } => 22,
+            Instr::Jmp { .. } => 23,
+            Instr::Mac { op, .. } => 24 + *op as usize, // 24..=26
+            Instr::Halt => 27,
+        }
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Ldi { .. } => "ldi",
+            Instr::Add { .. } => "add",
+            Instr::Adc { .. } => "adc",
+            Instr::Sub { .. } => "sub",
+            Instr::Sbc { .. } => "sbc",
+            Instr::And { .. } => "and",
+            Instr::Or { .. } => "or",
+            Instr::Xor { .. } => "xor",
+            Instr::Shl { .. } => "shl",
+            Instr::Shr { .. } => "shr",
+            Instr::Sra { .. } => "sra",
+            Instr::Slc { .. } => "slc",
+            Instr::Src { .. } => "src",
+            Instr::Ld { .. } => "ld",
+            Instr::St { .. } => "st",
+            Instr::Addi { .. } => "addi",
+            Instr::Mov { .. } => "mov",
+            Instr::Sxt { .. } => "sxt",
+            Instr::Clc => "clc",
+            Instr::Bz { .. } => "bz",
+            Instr::Bnz { .. } => "bnz",
+            Instr::Bc { .. } => "bc",
+            Instr::Bnc { .. } => "bnc",
+            Instr::Jmp { .. } => "jmp",
+            Instr::Mac { op, .. } => match op {
+                MacOp::Mac => "mac",
+                MacOp::MacRd => "macrd",
+                MacOp::MacClr => "maccl",
+            },
+            Instr::Halt => "halt",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn fields(r1: u8, r2: u8, imm: i8) -> u16 {
+    ((r1 as u16 & 7) << 9) | ((r2 as u16 & 7) << 6) | (imm as u16 & 0x3f)
+}
+
+fn off12(off: i16) -> u16 {
+    (off as u16) & 0xfff
+}
+
+const EXT_HALT: i8 = 0;
+const EXT_MAC: i8 = 1;
+const EXT_MACRD: i8 = 2;
+const EXT_MACCL: i8 = 3;
+const EXT_SXT: i8 = 8;
+const EXT_SBC: i8 = 9;
+const EXT_CLC: i8 = 10;
+// EXT carry branches put the 6-bit offset in the register fields.
+const EXT_BC: i8 = 6;
+const EXT_BNC: i8 = 7;
+
+impl Instr {
+    pub fn encode(&self) -> u16 {
+        match *self {
+            Instr::Ldi { r1, imm } => 0x0000 | fields(r1, 0, imm),
+            Instr::Add { r1, r2 } => 0x1000 | fields(r1, r2, 0),
+            Instr::Adc { r1, r2 } => 0x2000 | fields(r1, r2, 0),
+            Instr::Sub { r1, r2 } => 0x3000 | fields(r1, r2, 0),
+            Instr::And { r1, r2 } => 0x4000 | fields(r1, r2, 0),
+            Instr::Or { r1, r2 } => 0x5000 | fields(r1, r2, 0),
+            Instr::Xor { r1, r2 } => 0x6000 | fields(r1, r2, 0),
+            Instr::Shl { r1 } => 0x7000 | fields(r1, 0, 0),
+            Instr::Shr { r1 } => 0x7000 | fields(r1, 0, 1),
+            Instr::Sra { r1 } => 0x7000 | fields(r1, 0, 2),
+            Instr::Slc { r1 } => 0x7000 | fields(r1, 0, 3),
+            Instr::Src { r1 } => 0x7000 | fields(r1, 0, 4),
+            Instr::Ld { r1, r2, imm } => 0x8000 | fields(r1, r2, imm),
+            Instr::St { r1, r2, imm } => 0x9000 | fields(r1, r2, imm),
+            Instr::Addi { r1, imm } => 0xa000 | fields(r1, 0, imm),
+            Instr::Bz { off } => 0xb000 | off12(off),
+            Instr::Bnz { off } => 0xc000 | off12(off),
+            Instr::Jmp { off } => 0xd000 | off12(off),
+            Instr::Mov { r1, r2 } => 0xe000 | fields(r1, r2, 0),
+            Instr::Halt => 0xf000 | fields(0, 0, EXT_HALT),
+            Instr::Mac { op, r1, r2 } => {
+                let f = match op {
+                    MacOp::Mac => EXT_MAC,
+                    MacOp::MacRd => EXT_MACRD,
+                    MacOp::MacClr => EXT_MACCL,
+                };
+                0xf000 | fields(r1, r2, f)
+            }
+            Instr::Sxt { r1, r2 } => 0xf000 | fields(r1, r2, EXT_SXT),
+            Instr::Sbc { r1, r2 } => 0xf000 | fields(r1, r2, EXT_SBC),
+            Instr::Clc => 0xf000 | fields(0, 0, EXT_CLC),
+            Instr::Bc { off } => 0xf000 | fields(((off as u8) >> 3) & 7, (off as u8) & 7, EXT_BC),
+            Instr::Bnc { off } => {
+                0xf000 | fields(((off as u8) >> 3) & 7, (off as u8) & 7, EXT_BNC)
+            }
+        }
+    }
+
+    pub fn decode(w: u16) -> Result<Instr> {
+        let op = w >> 12;
+        let r1 = ((w >> 9) & 7) as u8;
+        let r2 = ((w >> 6) & 7) as u8;
+        let imm = ((w & 0x3f) as i8) << 2 >> 2; // sign-extend 6 bits
+        let uimm = (w & 0x3f) as i8; // unsigned 6 bits (LD/ST offsets)
+        let off = ((w & 0xfff) as i16) << 4 >> 4; // sign-extend 12 bits
+        Ok(match op {
+            0x0 => Instr::Ldi { r1, imm },
+            0x1 => Instr::Add { r1, r2 },
+            0x2 => Instr::Adc { r1, r2 },
+            0x3 => Instr::Sub { r1, r2 },
+            0x4 => Instr::And { r1, r2 },
+            0x5 => Instr::Or { r1, r2 },
+            0x6 => Instr::Xor { r1, r2 },
+            0x7 => match w & 0x3f {
+                0 => Instr::Shl { r1 },
+                1 => Instr::Shr { r1 },
+                2 => Instr::Sra { r1 },
+                3 => Instr::Slc { r1 },
+                4 => Instr::Src { r1 },
+                f => bail!("bad shift funct {f}"),
+            },
+            0x8 => Instr::Ld { r1, r2, imm: uimm },
+            0x9 => Instr::St { r1, r2, imm: uimm },
+            0xa => Instr::Addi { r1, imm },
+            0xb => Instr::Bz { off },
+            0xc => Instr::Bnz { off },
+            0xd => Instr::Jmp { off },
+            0xe => Instr::Mov { r1, r2 },
+            0xf => {
+                let f = (w & 0x3f) as i8;
+                let off6 = (((r1 << 3) | r2) as i8) << 2 >> 2;
+                match f {
+                    EXT_HALT => Instr::Halt,
+                    EXT_MAC => Instr::Mac { op: MacOp::Mac, r1, r2 },
+                    EXT_MACRD => Instr::Mac { op: MacOp::MacRd, r1, r2 },
+                    EXT_MACCL => Instr::Mac { op: MacOp::MacClr, r1, r2 },
+                    EXT_BC => Instr::Bc { off: off6 },
+                    EXT_BNC => Instr::Bnc { off: off6 },
+                    EXT_SXT => Instr::Sxt { r1, r2 },
+                    EXT_SBC => Instr::Sbc { r1, r2 },
+                    EXT_CLC => Instr::Clc,
+                    _ => bail!("bad EXT funct {f}"),
+                }
+            }
+            _ => unreachable!(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder assembler (labels + fixups), mirroring rv32_asm::Asm
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+pub struct Asm {
+    instrs: Vec<Instr>,
+    labels: std::collections::BTreeMap<String, usize>,
+    fixups: Vec<(usize, String)>,
+}
+
+impl Asm {
+    pub fn new() -> Asm {
+        Asm::default()
+    }
+
+    pub fn here(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn label(&mut self, name: &str) {
+        assert!(
+            self.labels.insert(name.to_string(), self.instrs.len()).is_none(),
+            "duplicate label {name}"
+        );
+    }
+
+    pub fn push(&mut self, i: Instr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn ldi(&mut self, r1: Reg, imm: i8) -> &mut Self {
+        assert!((-32..=31).contains(&imm), "ldi imm {imm} out of 6-bit range");
+        self.push(Instr::Ldi { r1, imm })
+    }
+
+    /// Load an arbitrary d-bit constant by LDI + shift/or chunks.
+    pub fn ldc(&mut self, r1: Reg, value: i64, datapath: u32) -> &mut Self {
+        let masked = (value as u64) & ((1u64 << datapath) - 1).max(1);
+        // Fast path: fits a signed 6-bit immediate.
+        let sext = ((value << (64 - datapath as i64)) >> (64 - datapath as i64)) as i64;
+        if (-32..=31).contains(&sext) {
+            return self.ldi(r1, sext as i8);
+        }
+        // Build from 5-bit unsigned chunks, MSB first: r1 = chunk;
+        // then repeatedly r1 = (r1 << 5) | next (via shifts + ADDI).
+        let chunks: Vec<u8> = (0..datapath.div_ceil(5))
+            .rev()
+            .map(|i| ((masked >> (5 * i)) & 0x1f) as u8)
+            .collect();
+        let mut started = false;
+        for &c in &chunks {
+            if !started {
+                if c == 0 {
+                    continue;
+                }
+                self.ldi(r1, c as i8);
+                started = true;
+            } else {
+                for _ in 0..5 {
+                    self.push(Instr::Shl { r1 });
+                }
+                if c != 0 {
+                    self.push(Instr::Addi { r1, imm: c as i8 });
+                }
+            }
+        }
+        if !started {
+            self.ldi(r1, 0);
+        }
+        self
+    }
+
+    pub fn bz(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), label.to_string()));
+        self.push(Instr::Bz { off: 0 })
+    }
+
+    pub fn bnz(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), label.to_string()));
+        self.push(Instr::Bnz { off: 0 })
+    }
+
+    pub fn bc(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), label.to_string()));
+        self.push(Instr::Bc { off: 0 })
+    }
+
+    pub fn bnc(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), label.to_string()));
+        self.push(Instr::Bnc { off: 0 })
+    }
+
+    pub fn jmp(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), label.to_string()));
+        self.push(Instr::Jmp { off: 0 })
+    }
+
+    pub fn finish(mut self) -> Result<Vec<Instr>> {
+        for (idx, label) in &self.fixups {
+            let target = *self
+                .labels
+                .get(label)
+                .ok_or_else(|| anyhow::anyhow!("undefined label {label:?}"))?;
+            let off = target as i64 - *idx as i64;
+            match &mut self.instrs[*idx] {
+                Instr::Bz { off: o } | Instr::Bnz { off: o } | Instr::Jmp { off: o } => {
+                    if !(-2048..=2047).contains(&off) {
+                        bail!("branch to {label:?} out of 12-bit range ({off})");
+                    }
+                    *o = off as i16;
+                }
+                Instr::Bc { off: o } | Instr::Bnc { off: o } => {
+                    if !(-32..=31).contains(&off) {
+                        bail!("carry branch to {label:?} out of 6-bit range ({off})");
+                    }
+                    *o = off as i8;
+                }
+                other => bail!("fixup on non-branch {other:?}"),
+            }
+        }
+        Ok(self.instrs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_instr(rng: &mut Pcg32) -> Instr {
+        let r = |rng: &mut Pcg32| rng.range_usize(0, 7) as u8;
+        let imm6 = |rng: &mut Pcg32| rng.range_i64(-32, 31) as i8;
+        match rng.range_usize(0, 21) {
+            0 => Instr::Ldi { r1: r(rng), imm: imm6(rng) },
+            1 => Instr::Add { r1: r(rng), r2: r(rng) },
+            2 => Instr::Adc { r1: r(rng), r2: r(rng) },
+            3 => Instr::Sub { r1: r(rng), r2: r(rng) },
+            4 => Instr::Sbc { r1: r(rng), r2: r(rng) },
+            5 => Instr::And { r1: r(rng), r2: r(rng) },
+            6 => Instr::Or { r1: r(rng), r2: r(rng) },
+            7 => Instr::Xor { r1: r(rng), r2: r(rng) },
+            8 => Instr::Shl { r1: r(rng) },
+            9 => Instr::Shr { r1: r(rng) },
+            10 => Instr::Sra { r1: r(rng) },
+            11 => Instr::Slc { r1: r(rng) },
+            12 => Instr::Src { r1: r(rng) },
+            13 => Instr::Ld { r1: r(rng), r2: r(rng), imm: rng.range_i64(0, 63) as i8 },
+            14 => Instr::St { r1: r(rng), r2: r(rng), imm: rng.range_i64(0, 63) as i8 },
+            15 => Instr::Addi { r1: r(rng), imm: imm6(rng) },
+            16 => Instr::Mov { r1: r(rng), r2: r(rng) },
+            17 => Instr::Bz { off: rng.range_i64(-2048, 2047) as i16 },
+            18 => Instr::Bnz { off: rng.range_i64(-2048, 2047) as i16 },
+            19 => Instr::Jmp { off: rng.range_i64(-2048, 2047) as i16 },
+            _ => *rng.choice(&[
+                Instr::Halt,
+                Instr::Clc,
+                Instr::Bc { off: -5 },
+                Instr::Bnc { off: 31 },
+                Instr::Sxt { r1: 1, r2: 2 },
+                Instr::Mac { op: crate::isa::MacOp::Mac, r1: 3, r2: 4 },
+                Instr::Mac { op: crate::isa::MacOp::MacRd, r1: 5, r2: 1 },
+                Instr::Mac { op: crate::isa::MacOp::MacClr, r1: 0, r2: 0 },
+            ]),
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        crate::util::prop::check("tpisa encode/decode roundtrip", 3000, |rng| {
+            let mut i = random_instr(rng);
+            // Normalise don't-care fields the decoder zeroes.
+            if let Instr::Mac { op: crate::isa::MacOp::MacClr, r1, r2 } = &mut i {
+                *r1 = 0;
+                *r2 = 0;
+            }
+            let w = i.encode();
+            let d = Instr::decode(w).map_err(|e| e.to_string())?;
+            if d != i {
+                return Err(format!("{i:?} -> {w:#06x} -> {d:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn branch_offsets_sign_extend() {
+        let i = Instr::Bz { off: -100 };
+        assert_eq!(Instr::decode(i.encode()).unwrap(), i);
+        let i = Instr::Bc { off: -32 };
+        assert_eq!(Instr::decode(i.encode()).unwrap(), i);
+    }
+
+    #[test]
+    fn builder_resolves_labels() {
+        let mut a = Asm::new();
+        a.ldi(1, 3);
+        a.label("loop");
+        a.push(Instr::Addi { r1: 1, imm: -1 });
+        a.bnz("loop");
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        assert_eq!(prog[2], Instr::Bnz { off: -1 });
+    }
+
+    #[test]
+    fn ldc_builds_wide_constants() {
+        // Symbolically evaluate the emitted sequence.
+        fn eval(instrs: &[Instr], datapath: u32) -> u64 {
+            let mask = (1u64 << datapath) - 1;
+            let mut r = [0u64; 8];
+            for i in instrs {
+                match *i {
+                    Instr::Ldi { r1, imm } => r[r1 as usize] = (imm as i64 as u64) & mask,
+                    Instr::Shl { r1 } => r[r1 as usize] = (r[r1 as usize] << 1) & mask,
+                    Instr::Addi { r1, imm } => {
+                        r[r1 as usize] = r[r1 as usize].wrapping_add(imm as i64 as u64) & mask
+                    }
+                    ref other => panic!("unexpected {other:?}"),
+                }
+            }
+            r[2]
+        }
+        for (val, d) in [(1000i64, 16u32), (-7, 16), (255, 8), (0x7fff, 16), (0, 32), (12345678, 32)]
+        {
+            let mut a = Asm::new();
+            a.ldc(2, val, d);
+            let prog = a.finish().unwrap();
+            let want = (val as u64) & ((1u64 << d) - 1);
+            assert_eq!(eval(&prog, d), want, "val {val} d {d}");
+        }
+    }
+
+    #[test]
+    fn carry_branch_range_enforced() {
+        let mut a = Asm::new();
+        a.bc("far");
+        for _ in 0..40 {
+            a.push(Instr::Halt);
+        }
+        a.label("far");
+        assert!(a.finish().is_err());
+    }
+}

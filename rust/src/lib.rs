@@ -1,0 +1,50 @@
+//! `printed_bespoke` — a bespoke-microprocessor design framework for
+//! printed electronics, reproducing *"A Bespoke Design Approach to
+//! Low-Power Printed Microprocessors for Machine Learning Applications"*
+//! (Chaidos et al., 2025).
+//!
+//! The library is the L3 layer of a three-layer stack:
+//!
+//! * **L1** (build-time Python): the paper's SIMD MAC unit as a bit-exact
+//!   Pallas kernel (`python/compile/kernels/simd_mac.py`).
+//! * **L2** (build-time Python): the six evaluation models (3 MLPs,
+//!   3 SVMs) in JAX, AOT-lowered to HLO text under `artifacts/`.
+//! * **L3** (this crate): the bespoke design workflow — printed-technology
+//!   cost modelling ([`hw`]), ISA toolchains ([`isa`]), cycle-approximate
+//!   simulators ([`sim`]), ML code generation ([`ml`]), utilization-driven
+//!   logic reduction ([`bespoke`]), design-space exploration ([`dse`]),
+//!   and a PJRT-backed evaluation service ([`runtime`], [`coordinator`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! rust binary is self-contained.
+
+pub mod bespoke;
+pub mod coordinator;
+pub mod dse;
+pub mod hw;
+pub mod isa;
+pub mod ml;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Locate the repository's `artifacts/` directory: `$PBSP_ARTIFACTS`, or
+/// walk up from the current directory until one is found.
+pub fn artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("PBSP_ARTIFACTS") {
+        return Ok(std::path::PathBuf::from(p));
+    }
+    let mut dir = std::env::current_dir()?;
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").is_file() {
+            return Ok(cand);
+        }
+        if !dir.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found; run `make artifacts` \
+                 or set PBSP_ARTIFACTS"
+            );
+        }
+    }
+}

@@ -1,0 +1,176 @@
+//! `pbsp` — the bespoke printed-microprocessor framework CLI (L3 leader
+//! entrypoint).
+//!
+//! ```text
+//! pbsp synth [--core zero-riscy|tp-isa-dN]     synthesis report
+//! pbsp profile                                  §III-A utilization report
+//! pbsp report <fig1|table1|fig4|fig5|table2|mem|all>
+//! pbsp eval --model <name> [--precision N] [--backend iss|pjrt|both]
+//! pbsp serve [--requests N] [--batch N]         coordinator demo loop
+//! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
+//! ```
+
+use anyhow::{bail, Context, Result};
+use printed_bespoke::bespoke::profile::profile_suite;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::dse::{context::EvalContext, report};
+use printed_bespoke::hw::egfet::egfet;
+use printed_bespoke::hw::synth::{synthesize, tpisa, zero_riscy};
+use printed_bespoke::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("pbsp: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("synth") => cmd_synth(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("report") => cmd_report(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("crosscheck") => cmd_crosscheck(&args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: pbsp <synth|profile|report|eval|serve|crosscheck> [options]";
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let core = args.str_or("core", "zero-riscy");
+    args.finish()?;
+    let tech = egfet();
+    let spec = match core.as_str() {
+        "zero-riscy" => zero_riscy(),
+        s if s.starts_with("tp-isa-d") => {
+            let d: u32 = s["tp-isa-d".len()..].parse().context("datapath")?;
+            tpisa(d)
+        }
+        other => bail!("unknown core {other:?}"),
+    };
+    let r = synthesize(&spec, &tech);
+    println!(
+        "{}: {:.2} cm^2, {:.2} mW, fmax {:.1} Hz (critical depth {})",
+        r.name,
+        r.area_cm2(),
+        r.power_mw,
+        r.fmax_hz,
+        r.critical_depth
+    );
+    println!("unit       GE        area[mm^2]  power[mW]");
+    for (kind, ge, a, p) in &r.breakdown {
+        println!("{:<9} {:>9.0}  {:>9.1}  {:>9.2}", kind.name(), ge, a, p);
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    args.finish()?;
+    let u = profile_suite()?;
+    println!("profiling suite: {:?}", u.workloads);
+    println!(
+        "instructions {} cycles {} (CPI {:.2})",
+        u.profile.instructions,
+        u.profile.cycles,
+        u.profile.cycles as f64 / u.profile.instructions as f64
+    );
+    println!(
+        "registers used: {} / 32; PC bits needed: {}; BAR bits: {}",
+        u.regs_needed, u.pc_bits_needed, u.bar_bits_needed
+    );
+    println!("unused instructions: {}", u.unused_instructions.join(" "));
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let what = args.positionals.get(1).map(String::as_str).unwrap_or("all").to_string();
+    let samples = args.parse_or("samples", 8usize)?;
+    args.finish()?;
+    let ctx = EvalContext::load(samples)?;
+    let print = |name: &str| -> Result<()> {
+        match name {
+            "fig1" => println!("{}", report::fig1(&ctx).text),
+            "table1" => println!("{}", report::table1(&ctx)?.text),
+            "fig4" => println!("{}", report::fig4(&ctx).text),
+            "fig5" => println!("{}", report::fig5(&ctx)?.text),
+            "table2" => println!("{}", report::table2(&ctx)?.text),
+            "mem" => println!("{}", report::mem(&ctx)?.text),
+            other => bail!("unknown report {other:?}"),
+        }
+        Ok(())
+    };
+    if what == "all" {
+        for name in ["fig1", "table1", "fig4", "fig5", "table2", "mem"] {
+            print(name)?;
+        }
+    } else {
+        print(&what)?;
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.require("model")?.to_string();
+    let precision = args.parse_or("precision", 16u32)?;
+    let backend = args.str_or("backend", "both");
+    args.finish()?;
+    let ctx = EvalContext::load(4)?;
+    let idx = ctx
+        .models
+        .iter()
+        .position(|m| m.name == model)
+        .with_context(|| format!("unknown model {model:?}"))?;
+    let ds = &ctx.test_sets[idx];
+    if backend == "pjrt" || backend == "both" {
+        let svc = Service::start(ServiceConfig::default())?;
+        let r = svc.evaluate(&model, precision, &ds.x, &ds.y)?;
+        println!(
+            "[pjrt] {} p{} accuracy {:.4} ({} samples, {:.2} ms/batch)",
+            model, precision, r.accuracy, r.n, r.batch_ms_mean
+        );
+    }
+    if backend == "iss" || backend == "both" {
+        let m = &ctx.models[idx];
+        let prog = printed_bespoke::ml::codegen_rv32::generate(
+            m,
+            printed_bespoke::ml::codegen_rv32::Rv32Variant::Simd(precision.min(16)),
+        )?;
+        let run = printed_bespoke::ml::harness::run_rv32(m, &prog, &ds.x)?;
+        println!(
+            "[iss ] {} p{} accuracy {:.4} ({:.0} cycles/sample)",
+            model,
+            precision,
+            ds.accuracy(&run.predictions),
+            run.cycles_per_sample
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.parse_or("requests", 200usize)?;
+    let batch = args.parse_or("batch", 64usize)?;
+    args.finish()?;
+    let cfg = ServiceConfig { max_batch: batch, ..ServiceConfig::default() };
+    let svc = Service::start(cfg)?;
+    let stats = svc.demo_load(requests)?;
+    println!("{stats}");
+    Ok(())
+}
+
+fn cmd_crosscheck(args: &Args) -> Result<()> {
+    let samples = args.parse_or("samples", 16usize)?;
+    args.finish()?;
+    let svc = Service::start(ServiceConfig::default())?;
+    let report = svc.crosscheck(samples)?;
+    println!("{report}");
+    Ok(())
+}

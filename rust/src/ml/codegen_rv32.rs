@@ -1,0 +1,446 @@
+//! RV32 code generation: lower a quantised model to a Zero-Riscy
+//! program, in three variants (paper Table I rows):
+//!
+//! * [`Rv32Variant::Baseline`] — scalar `lh/lh/mul/add` inner product
+//!   (the baseline 3-cycle multiplier path), 16-bit quantisation.
+//! * [`Rv32Variant::Mac32`] — scalar loads feeding the 32-bit MAC unit
+//!   (single-cycle multiply-accumulate, no parallelisation), 16-bit
+//!   quantisation (bit-identical results to Baseline).
+//! * [`Rv32Variant::Simd(p)`] — packed `lw/lw/mac` at precision
+//!   p ∈ {16, 8, 4} with 32/p lanes per instruction, p-bit quantisation.
+//!
+//! Program contract (shared with `ml::harness`):
+//!
+//! * RAM: scores (i32 accs) at `RAM_BASE`, input at `RAM_BASE + 0x40`,
+//!   hidden scratch at `RAM_BASE + 0x100`, packed scratch at `+ 0x180`.
+//! * ROM: code at 0, constant data (packed weights) at `DATA_BASE`.
+//! * The program halts with `ebreak`; final-layer accumulators are
+//!   written as i32 words to the scores region; the harness dequantises
+//!   with the last layer's `2^-(fx+fw)` scale and applies the head.
+
+use anyhow::{bail, Result};
+
+use super::model::{Model, QLayer};
+use super::quant::{pack_vec, qlimits};
+use crate::hw::mac_unit::MacConfig;
+use crate::isa::rv32::Instr;
+use crate::isa::rv32_asm::Asm;
+use crate::sim::mem::RAM_BASE;
+
+/// Fixed ROM offset where constant data is placed (code must fit below).
+pub const DATA_BASE: u32 = 0x2000;
+
+pub const SCORES_OFF: i32 = 0x0;
+pub const INPUT_OFF: i32 = 0x40;
+pub const HIDDEN_OFF: i32 = 0x100;
+pub const PACKED_OFF: i32 = 0x180;
+pub const RAM_BYTES: usize = 0x400;
+
+/// Program variant (Table I rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rv32Variant {
+    Baseline,
+    Mac32,
+    Simd(u32),
+}
+
+impl Rv32Variant {
+    /// Quantisation precision of the model tensors this variant runs.
+    pub fn quant_precision(&self) -> u32 {
+        match self {
+            Rv32Variant::Baseline | Rv32Variant::Mac32 => 16,
+            Rv32Variant::Simd(p) => *p,
+        }
+    }
+
+    /// The MAC unit configuration the core must be synthesised with.
+    pub fn mac_config(&self) -> Option<MacConfig> {
+        match self {
+            Rv32Variant::Baseline => None,
+            Rv32Variant::Mac32 => Some(MacConfig::new(32, 32)),
+            Rv32Variant::Simd(p) => Some(MacConfig::new(32, *p)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Rv32Variant::Baseline => "baseline".into(),
+            Rv32Variant::Mac32 => "mac32".into(),
+            Rv32Variant::Simd(p) => format!("simd-p{p}"),
+        }
+    }
+}
+
+/// How the harness must lay out the input vector in RAM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputFormat {
+    /// One i16 halfword per feature.
+    I16,
+    /// 32-bit words packed with 32/p lanes of p bits.
+    Packed(u32),
+}
+
+/// A generated program plus its I/O contract.
+#[derive(Debug, Clone)]
+pub struct Rv32Program {
+    pub code: Vec<Instr>,
+    pub rom_data: Vec<u8>,
+    pub variant: Rv32Variant,
+    pub n_scores: usize,
+    pub input_format: InputFormat,
+    /// Dequantisation scale of the final accumulators: 2^(fx + fw).
+    pub score_scale: f64,
+    /// ROM cells actually occupied (code + data), for the §IV-B memory
+    /// analysis.
+    pub rom_cells: usize,
+}
+
+// Register conventions.
+const T0: u8 = 5;
+const T1: u8 = 6;
+const T2: u8 = 7;
+const S0: u8 = 8; // x pointer
+const S1: u8 = 9; // w pointer
+const S2: u8 = 18; // RAM base
+const A0: u8 = 10; // accumulator
+const A1: u8 = 11; // loop counter
+
+/// Append little-endian bytes of a value at the given element width.
+fn push_elem(data: &mut Vec<u8>, v: i64, bytes: usize) {
+    for i in 0..bytes {
+        data.push(((v >> (8 * i)) & 0xff) as u8);
+    }
+}
+
+/// Saturating clamp emit: a0 = clamp(a0, qmin, qmax), then optional ReLU.
+fn emit_sat_relu(a: &mut Asm, tag: &str, n: u32, relu: bool) {
+    let (qmin, qmax) = qlimits(n);
+    a.li(T0, qmax as i32);
+    a.blt(A0, T0, &format!("sat_hi_{tag}"));
+    a.mv(A0, T0);
+    a.label(&format!("sat_hi_{tag}"));
+    a.li(T0, qmin as i32);
+    a.bge(A0, T0, &format!("sat_lo_{tag}"));
+    a.mv(A0, T0);
+    a.label(&format!("sat_lo_{tag}"));
+    if relu {
+        a.bge(A0, 0, &format!("relu_{tag}"));
+        a.li(A0, 0);
+        a.label(&format!("relu_{tag}"));
+    }
+}
+
+/// Generate the program for `model` under `variant`.
+pub fn generate(model: &Model, variant: Rv32Variant) -> Result<Rv32Program> {
+    let p = variant.quant_precision();
+    let qls: &[QLayer] = model.qlayers(p)?;
+    let mut a = Asm::new();
+    let mut data: Vec<u8> = Vec::new();
+
+    a.li(S2, RAM_BASE as i32);
+
+    // Per-layer input location/layout inside RAM (offsets from S2).
+    // Layer 0 reads the harness-written input region.
+    let mut layer_in_off = INPUT_OFF;
+
+    let last_idx = model.layers.len() - 1;
+    for (li, (layer, ql)) in model.layers.iter().zip(qls).enumerate() {
+        let k = ql.qw.len();
+        let n = ql.qb.len();
+        let last = li == last_idx;
+
+        match variant {
+            Rv32Variant::Baseline | Rv32Variant::Mac32 => {
+                // Column-major i16 weights for this layer.
+                let col_base: Vec<u32> = (0..n)
+                    .map(|j| {
+                        let base = DATA_BASE + data.len() as u32;
+                        for kk in 0..k {
+                            push_elem(&mut data, ql.qw[kk][j], 2);
+                        }
+                        base
+                    })
+                    .collect();
+                for j in 0..n {
+                    let tag = format!("l{li}o{j}");
+                    if matches!(variant, Rv32Variant::Mac32) {
+                        a.maccl();
+                    } else {
+                        a.li(A0, 0);
+                    }
+                    a.addi(S0, S2, layer_in_off);
+                    a.li(S1, col_base[j] as i32);
+                    a.li(A1, k as i32);
+                    a.label(&format!("inner_{tag}"));
+                    a.lh(T0, S0, 0);
+                    a.lh(T1, S1, 0);
+                    if matches!(variant, Rv32Variant::Mac32) {
+                        a.mac(T0, T1);
+                    } else {
+                        a.mul(T2, T0, T1);
+                        a.add(A0, A0, T2);
+                    }
+                    a.addi(S0, S0, 2);
+                    a.addi(S1, S1, 2);
+                    a.addi(A1, A1, -1);
+                    a.bne(A1, 0, &format!("inner_{tag}"));
+                    if matches!(variant, Rv32Variant::Mac32) {
+                        a.macrd(A0, 0); // low 32 bits (exact by the quant cap)
+                    }
+                    // Bias.
+                    a.li(T0, ql.qb[j] as i32);
+                    a.add(A0, A0, T0);
+                    finish_output(&mut a, &tag, ql, j, last, layer.relu, p, variant)?;
+                }
+            }
+            Rv32Variant::Simd(prec) => {
+                let lanes = (32 / prec) as usize;
+                let words_k = k.div_ceil(lanes);
+                // Packed weights, column-major.
+                let col_base: Vec<u32> = (0..n)
+                    .map(|j| {
+                        let base = DATA_BASE + data.len() as u32;
+                        let col: Vec<i64> = (0..k).map(|kk| ql.qw[kk][j]).collect();
+                        for w in pack_vec(&col, prec, 32) {
+                            push_elem(&mut data, w as i64, 4);
+                        }
+                        base
+                    })
+                    .collect();
+                // Layer > 0 at p4 needs explicit nibble packing of the
+                // hidden bytes (p16/p8 hidden storage is already packed
+                // by memory layout).
+                let in_off = if li > 0 && prec == 4 {
+                    emit_pack_nibbles(&mut a, li, k, HIDDEN_OFF, PACKED_OFF);
+                    PACKED_OFF
+                } else {
+                    layer_in_off
+                };
+                for j in 0..n {
+                    let tag = format!("l{li}o{j}");
+                    a.maccl();
+                    a.addi(S0, S2, in_off);
+                    a.li(S1, col_base[j] as i32);
+                    if words_k <= 3 {
+                        // "Entire neurons in a single pass, without
+                        // requiring additional control instructions for
+                        // loops" (§IV-B c): short packed columns are
+                        // unrolled with immediate offsets.
+                        for w in 0..words_k {
+                            a.lw(T0, S0, 4 * w as i32);
+                            a.lw(T1, S1, 4 * w as i32);
+                            a.mac(T0, T1);
+                        }
+                    } else {
+                        a.li(A1, words_k as i32);
+                        a.label(&format!("inner_{tag}"));
+                        a.lw(T0, S0, 0);
+                        a.lw(T1, S1, 0);
+                        a.mac(T0, T1);
+                        a.addi(S0, S0, 4);
+                        a.addi(S1, S1, 4);
+                        a.addi(A1, A1, -1);
+                        a.bne(A1, 0, &format!("inner_{tag}"));
+                    }
+                    // Read the unit's adder-tree total (paper Eq. 1
+                    // acc_total — summed in hardware, Fig. 2).
+                    let _ = lanes;
+                    a.macrd(A0, crate::sim::mac_model::MacState::TOTAL_LANE as u8);
+                    a.li(T0, ql.qb[j] as i32);
+                    a.add(A0, A0, T0);
+                    finish_output(&mut a, &tag, ql, j, last, layer.relu, p, variant)?;
+                }
+            }
+        }
+        layer_in_off = HIDDEN_OFF;
+    }
+    a.ebreak();
+
+    let code = a.finish()?;
+    let code_bytes = code.len() * 4;
+    if code_bytes as u32 > DATA_BASE {
+        bail!("program too large: {code_bytes} bytes exceeds DATA_BASE");
+    }
+    let rom_cells = code_bytes + data.len();
+
+    // ROM image: code padding up to DATA_BASE then data.
+    let mut rom_data = vec![0u8; DATA_BASE as usize - code_bytes];
+    rom_data.extend_from_slice(&data);
+
+    let lastq = &qls[last_idx];
+    Ok(Rv32Program {
+        code,
+        rom_data,
+        variant,
+        n_scores: model.raw_outputs(),
+        input_format: match variant {
+            Rv32Variant::Baseline | Rv32Variant::Mac32 => InputFormat::I16,
+            Rv32Variant::Simd(prec) => InputFormat::Packed(prec),
+        },
+        score_scale: (1i64 << (lastq.fx + lastq.fw)) as f64,
+        rom_cells,
+    })
+}
+
+/// Epilogue for one output neuron: store the raw accumulator (last
+/// layer) or rescale + saturate + ReLU and store to the hidden region.
+#[allow(clippy::too_many_arguments)]
+fn finish_output(
+    a: &mut Asm,
+    tag: &str,
+    ql: &QLayer,
+    j: usize,
+    last: bool,
+    relu: bool,
+    p: u32,
+    variant: Rv32Variant,
+) -> Result<()> {
+    if last {
+        a.sw(A0, S2, SCORES_OFF + 4 * j as i32);
+        return Ok(());
+    }
+    // Rescale: acc = (acc + 1 << (shift-1)) >> shift, saturate, ReLU.
+    if ql.shift > 0 {
+        a.li(T0, 1 << (ql.shift - 1));
+        a.add(A0, A0, T0);
+        a.srai(A0, A0, ql.shift as i32);
+    }
+    emit_sat_relu(a, tag, p, relu);
+    // Store at the element width of the next layer's loads: i16 for
+    // baseline/mac32/p16, i8 for p8/p4 (contiguous elements double as
+    // the packed layout for p16/p8; p4 packs explicitly).
+    match variant {
+        Rv32Variant::Baseline | Rv32Variant::Mac32 => {
+            a.push(Instr::Store {
+                op: crate::isa::rv32::StoreOp::Sh,
+                rs2: A0,
+                rs1: S2,
+                offset: HIDDEN_OFF + 2 * j as i32,
+            });
+        }
+        Rv32Variant::Simd(16) => {
+            a.push(Instr::Store {
+                op: crate::isa::rv32::StoreOp::Sh,
+                rs2: A0,
+                rs1: S2,
+                offset: HIDDEN_OFF + 2 * j as i32,
+            });
+        }
+        Rv32Variant::Simd(_) => {
+            a.push(Instr::Store {
+                op: crate::isa::rv32::StoreOp::Sb,
+                rs2: A0,
+                rs1: S2,
+                offset: HIDDEN_OFF + j as i32,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Pack `k` hidden bytes (4-bit values stored as bytes) into nibble
+/// words at PACKED_OFF.
+fn emit_pack_nibbles(a: &mut Asm, li: usize, k: usize, from_off: i32, to_off: i32) {
+    let words = k.div_ceil(8);
+    for w in 0..words {
+        a.li(A0, 0);
+        for lane in 0..8 {
+            let idx = w * 8 + lane;
+            if idx >= k {
+                break;
+            }
+            a.push(Instr::Load {
+                op: crate::isa::rv32::LoadOp::Lbu,
+                rd: T0,
+                rs1: S2,
+                offset: from_off + idx as i32,
+            });
+            a.push(Instr::OpImm {
+                op: crate::isa::rv32::AluOp::And,
+                rd: T0,
+                rs1: T0,
+                imm: 0xf,
+            });
+            if lane > 0 {
+                a.slli(T0, T0, (4 * lane) as i32);
+            }
+            a.push(Instr::Op { op: crate::isa::rv32::AluOp::Or, rd: A0, rs1: A0, rs2: T0 });
+        }
+        a.sw(A0, S2, to_off + 4 * w as i32);
+        let _ = li;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn tiny_model() -> Model {
+        // Reuse the hand-quantised tiny model from model.rs tests, but
+        // with variants for 16/8/4 added programmatically.
+        let mut m = Model::from_json(&super::super::model::tests::tiny_model_json()).unwrap();
+        // Derive 16/4-bit variants by re-quantising the float weights
+        // with simple formats (adequate for codegen tests).
+        for (n, fx, fw, fy) in [(16u32, 12u32, 12u32, 10u32), (4, 2, 2, 1)] {
+            let mut qlayers = Vec::new();
+            let mut fxc = fx;
+            for (i, l) in m.layers.iter().enumerate() {
+                let fyc = if i == m.layers.len() - 1 { 0 } else { fy };
+                let qw: Vec<Vec<i64>> = l
+                    .w
+                    .iter()
+                    .map(|row| {
+                        row.iter().map(|&v| super::super::quant::quantize(v, fw, n)).collect()
+                    })
+                    .collect();
+                let qb: Vec<i64> = l
+                    .b
+                    .iter()
+                    .map(|&v| super::super::quant::quantize(v, fxc + fw, 32))
+                    .collect();
+                qlayers.push(QLayer { fx: fxc, fw, fy: fyc, shift: fxc + fw - fyc, qw, qb });
+                fxc = fyc;
+            }
+            m.quantized.push((n, qlayers));
+        }
+        m
+    }
+
+    #[test]
+    fn generates_all_variants() {
+        let m = tiny_model();
+        for v in [
+            Rv32Variant::Baseline,
+            Rv32Variant::Mac32,
+            Rv32Variant::Simd(16),
+            Rv32Variant::Simd(8),
+            Rv32Variant::Simd(4),
+        ] {
+            let prog = generate(&m, v).unwrap_or_else(|e| panic!("{v:?}: {e}"));
+            assert!(!prog.code.is_empty());
+            assert_eq!(prog.n_scores, 1);
+            assert!(prog.rom_cells > 0);
+        }
+    }
+
+    #[test]
+    fn simd_code_is_shorter_per_term_than_baseline() {
+        // The paper's §IV-B: SIMD reduces instruction count.  With the
+        // tiny model the static code difference is modest, but the MAC
+        // variant must not be larger than baseline.
+        let m = tiny_model();
+        let base = generate(&m, Rv32Variant::Baseline).unwrap();
+        let mac = generate(&m, Rv32Variant::Mac32).unwrap();
+        assert!(mac.code.len() <= base.code.len() + 4);
+    }
+
+    #[test]
+    fn score_scale_matches_last_layer() {
+        let m = tiny_model();
+        let prog = generate(&m, Rv32Variant::Baseline).unwrap();
+        let ql = m.qlayers(16).unwrap();
+        let last = ql.last().unwrap();
+        assert_eq!(prog.score_scale, (1i64 << (last.fx + last.fw)) as f64);
+    }
+}

@@ -1,0 +1,603 @@
+//! TP-ISA code generation: lower a quantised model to the minimal
+//! printed core, in two variants (paper Fig. 5 / Table II):
+//!
+//! * [`TpVariant::Baseline`] — no hardware multiply: every product is a
+//!   signed shift-add *software multiply* on the ALU ("the whole
+//!   operation is scheduled to the ALU", §III-B), with the 32-bit
+//!   accumulator held in data memory as `32/d` words and carried through
+//!   ADC chains.
+//! * [`TpVariant::Mac { precision }`] — the SIMD MAC unit: packed
+//!   `ld/ld/mac` with d/p lanes, accumulators read back in d-bit chunks.
+//!
+//! Addressing strategy:
+//!
+//! * d >= 8 — looped inner products with pointer registers (r7 = x,
+//!   r6 = w) and a memory-resident k-counter.
+//! * d = 4 — registers cannot hold addresses, so programs are fully
+//!   unrolled with immediate-only addressing off a zeroed base register;
+//!   the whole data image must fit 64 words, which holds for the
+//!   single-layer SVM models (the paper's 4-bit TP-ISA similarly
+//!   targets the smallest configurations, §IV-A).
+//!
+//! Data-memory layout (word-addressed, d-bit cells):
+//!
+//! ```text
+//! 0                  k-loop counter scratch
+//! 1 .. 1+nacc        accumulator scratch (nacc = 32/d words)
+//! score_base ..      n_scores x nacc accumulator words (output)
+//! input_base ..      input vector (1 word/value, or packed for MAC)
+//! hidden_base ..     hidden activations (1 word/value)
+//! packed_base ..     packed hidden words (MAC with >1 lane only)
+//! const_base ..      weights, biases, rounding constants
+//! ```
+
+use anyhow::{ensure, Result};
+
+use super::model::{Model, QLayer};
+use super::quant::{pack_vec, qlimits};
+use crate::hw::mac_unit::MacConfig;
+use crate::isa::tpisa::{Asm, Instr};
+use crate::isa::MacOp;
+
+/// Program variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpVariant {
+    Baseline,
+    Mac { precision: u32 },
+}
+
+impl TpVariant {
+    pub fn label(&self) -> String {
+        match self {
+            TpVariant::Baseline => "baseline".into(),
+            TpVariant::Mac { precision } => format!("mac-p{precision}"),
+        }
+    }
+}
+
+/// A generated TP-ISA program plus its I/O contract.
+#[derive(Debug, Clone)]
+pub struct TpIsaProgram {
+    pub code: Vec<Instr>,
+    /// Initial data-memory image (constants; input region zeroed).
+    pub dmem_image: Vec<u64>,
+    pub datapath: u32,
+    pub variant: TpVariant,
+    pub quant_precision: u32,
+    pub packed_input: bool,
+    pub input_base: usize,
+    pub score_base: usize,
+    pub n_scores: usize,
+    pub score_scale: f64,
+    pub dmem_words: usize,
+    /// ROM cells (bytes): 2 per instruction + constant-data bytes.
+    pub rom_cells: usize,
+}
+
+impl TpIsaProgram {
+    pub fn mac_config(&self) -> Option<MacConfig> {
+        match self.variant {
+            TpVariant::Baseline => None,
+            TpVariant::Mac { precision } => Some(MacConfig::new(self.datapath, precision)),
+        }
+    }
+}
+
+/// Quantisation precision a variant runs at (baseline: the datapath
+/// width capped at 16 — "all the models' parameters are 16-bits").
+pub fn quant_precision(datapath: u32, variant: TpVariant) -> u32 {
+    match variant {
+        TpVariant::Baseline => datapath.min(16),
+        TpVariant::Mac { precision } => precision,
+    }
+}
+
+// Register conventions (d >= 8 looped mode):
+//   r0, r1  softmul x_lo/x_hi; general temps
+//   r2      softmul w / zero-base for imm-only access
+//   r3, r4  softmul product lo/hi; MAC readback temps
+//   r5      softmul counter / sign-fill / shift counter
+//   r6      w pointer (also const pointer in epilogues)
+//   r7      x pointer (also score/hidden pointer in epilogues)
+const KCNT: usize = 0;
+const ACC: usize = 1;
+
+struct Layout {
+    nacc: usize,
+    score_base: usize,
+    input_base: usize,
+    hidden_base: usize,
+    packed_base: usize,
+    const_base: usize,
+}
+
+/// Generate a TP-ISA program for `model` on a `datapath`-bit core.
+pub fn generate(model: &Model, datapath: u32, variant: TpVariant) -> Result<TpIsaProgram> {
+    ensure!(matches!(datapath, 4 | 8 | 16 | 32), "TP-ISA widths: 4/8/16/32");
+    if let TpVariant::Mac { precision } = variant {
+        ensure!(precision <= datapath, "MAC precision wider than datapath");
+    }
+    let p = quant_precision(datapath, variant);
+    let qls: &[QLayer] = model.qlayers(p)?;
+    let d = datapath;
+    let nacc = (32 / d).max(1) as usize;
+    let lanes = match variant {
+        TpVariant::Baseline => 1,
+        TpVariant::Mac { precision } => (d / precision).max(1) as usize,
+    };
+    let packed_input = matches!(variant, TpVariant::Mac { .. });
+
+    let k0 = model.arch[0];
+    let in_words = if packed_input { k0.div_ceil(lanes) } else { k0 };
+    let max_hidden = model.arch[1..model.arch.len() - 1].iter().copied().max().unwrap_or(0);
+    let n_scores = model.raw_outputs();
+
+    let score_base = ACC + nacc;
+    let input_base = score_base + n_scores * nacc;
+    let hidden_base = input_base + in_words;
+    let packed_base = hidden_base + max_hidden;
+    let const_base = packed_base + if lanes > 1 { max_hidden.div_ceil(lanes) } else { 0 };
+    let lay = Layout { nacc, score_base, input_base, hidden_base, packed_base, const_base };
+
+    let mut consts: Vec<u64> = Vec::new();
+    let mut a = Asm::new();
+
+    let unrolled = d == 4;
+    if unrolled {
+        ensure!(
+            model.layers.len() == 1,
+            "4-bit TP-ISA supports single-layer models (immediate-only addressing)"
+        );
+        a.ldi(6, 0); // r6 = zero base for imm-only addressing
+    }
+
+    let last_idx = model.layers.len() - 1;
+    let mut layer_in = lay.input_base;
+    for (li, (layer, ql)) in model.layers.iter().zip(qls).enumerate() {
+        let k = ql.qw.len();
+        let n = ql.qb.len();
+        let last = li == last_idx;
+
+        // Constant data for this layer: per-output weight columns,
+        // bias as nacc acc-words, rounding constant as nacc words.
+        let mask = if d == 64 { u64::MAX } else { (1u64 << d) - 1 };
+        let acc_words = |v: i64| -> Vec<u64> {
+            (0..nacc).map(|w| ((v as u64) >> (d * w as u32)) & mask).collect()
+        };
+        let col_addr: Vec<usize> = (0..n)
+            .map(|j| {
+                let addr = lay.const_base + consts.len();
+                let col: Vec<i64> = (0..k).map(|kk| ql.qw[kk][j]).collect();
+                if packed_input {
+                    let prec = p;
+                    consts.extend(pack_vec(&col, prec, d));
+                } else {
+                    consts.extend(col.iter().map(|&v| (v as u64) & mask));
+                }
+                addr
+            })
+            .collect();
+        let bias_addr: Vec<usize> = (0..n)
+            .map(|j| {
+                let addr = lay.const_base + consts.len();
+                consts.extend(acc_words(ql.qb[j]));
+                addr
+            })
+            .collect();
+        let round_addr = {
+            let addr = lay.const_base + consts.len();
+            let rc = if ql.shift > 0 { 1i64 << (ql.shift - 1) } else { 0 };
+            consts.extend(acc_words(rc));
+            addr
+        };
+
+        let in_words_l =
+            if packed_input { k.div_ceil(lanes) } else { k };
+
+        for j in 0..n {
+            let tag = format!("l{li}o{j}");
+            if unrolled {
+                emit_output_unrolled(
+                    &mut a, &tag, model, ql, variant, d, p, k, j, layer_in, col_addr[j],
+                    bias_addr[j], &lay, last,
+                )?;
+            } else {
+                emit_output_looped(
+                    &mut a, &tag, ql, variant, d, p, k, in_words_l, j, layer_in, col_addr[j],
+                    bias_addr[j], round_addr, &lay, last, layer.relu, lanes,
+                )?;
+            }
+        }
+        // Pack hidden values for the next MAC layer if lanes > 1.
+        if !last && lanes > 1 {
+            emit_pack_hidden(&mut a, d, p, model.arch[li + 1 - 0], &lay)?;
+            layer_in = lay.packed_base;
+        } else {
+            layer_in = lay.hidden_base;
+        }
+    }
+    a.push(Instr::Halt);
+
+    let code = a.finish()?;
+    let dmem_words = lay.const_base + consts.len() + 4;
+    if unrolled {
+        ensure!(dmem_words <= 64, "4-bit TP-ISA data image exceeds 64 words ({dmem_words})");
+    }
+    let mut dmem_image = vec![0u64; dmem_words];
+    for (i, &c) in consts.iter().enumerate() {
+        dmem_image[lay.const_base + i] = c;
+    }
+
+    let lastq = &qls[last_idx];
+    let const_bytes = (consts.len() * d as usize).div_ceil(8);
+    Ok(TpIsaProgram {
+        rom_cells: code.len() * 2 + const_bytes,
+        code,
+        dmem_image,
+        datapath: d,
+        variant,
+        quant_precision: p,
+        packed_input,
+        input_base: lay.input_base,
+        score_base: lay.score_base,
+        n_scores,
+        score_scale: (1i64 << (lastq.fx + lastq.fw)) as f64,
+        dmem_words,
+    })
+}
+
+/// Looped per-output inner product (d >= 8).
+#[allow(clippy::too_many_arguments)]
+fn emit_output_looped(
+    a: &mut Asm,
+    tag: &str,
+    ql: &QLayer,
+    variant: TpVariant,
+    d: u32,
+    p: u32,
+    _k: usize,
+    in_words: usize,
+    _j: usize,
+    in_base: usize,
+    col_addr: usize,
+    bias_addr: usize,
+    round_addr: usize,
+    lay: &Layout,
+    last: bool,
+    relu: bool,
+    lanes: usize,
+) -> Result<()> {
+    let nacc = lay.nacc;
+    if matches!(variant, TpVariant::Mac { .. }) {
+        a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
+    }
+    // acc = bias.
+    a.ldc(7, bias_addr as i64, d);
+    a.ldi(2, 0);
+    for w in 0..nacc {
+        a.push(Instr::Ld { r1: 0, r2: 7, imm: w as i8 });
+        a.push(Instr::St { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+    }
+    // kcnt = in_words.
+    a.ldc(0, in_words as i64, d);
+    a.push(Instr::St { r1: 0, r2: 2, imm: KCNT as i8 });
+    // Pointers.
+    a.ldc(7, in_base as i64, d);
+    a.ldc(6, col_addr as i64, d);
+
+    a.label(&format!("kloop_{tag}"));
+    match variant {
+        TpVariant::Baseline => {
+            // x -> (r0, r1), w -> r2, softmul -> (r3, r4).
+            a.push(Instr::Ld { r1: 0, r2: 7, imm: 0 });
+            a.push(Instr::Sxt { r1: 1, r2: 0 });
+            a.push(Instr::Ld { r1: 2, r2: 6, imm: 0 });
+            emit_softmul(a, tag, d, p);
+            // acc += sign-extended product.
+            let np = if 2 * p <= d { 1 } else { 2 };
+            if np == 1 {
+                a.push(Instr::Sxt { r1: 5, r2: 3 });
+            } else {
+                a.push(Instr::Sxt { r1: 5, r2: 4 });
+            }
+            a.ldi(2, 0);
+            a.push(Instr::Ld { r1: 0, r2: 2, imm: ACC as i8 });
+            a.push(Instr::Add { r1: 0, r2: 3 });
+            a.push(Instr::St { r1: 0, r2: 2, imm: ACC as i8 });
+            for w in 1..nacc {
+                a.push(Instr::Ld { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+                let src = if w < np { 4 } else { 5 };
+                a.push(Instr::Adc { r1: 0, r2: src });
+                a.push(Instr::St { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+            }
+        }
+        TpVariant::Mac { .. } => {
+            // r2 stays 0 across the loop (nothing clobbers it here).
+            a.push(Instr::Ld { r1: 0, r2: 7, imm: 0 });
+            a.push(Instr::Ld { r1: 1, r2: 6, imm: 0 });
+            a.push(Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 });
+        }
+    }
+    // Advance pointers + counter.
+    a.push(Instr::Addi { r1: 7, imm: 1 });
+    a.push(Instr::Addi { r1: 6, imm: 1 });
+    a.push(Instr::Ld { r1: 0, r2: 2, imm: KCNT as i8 });
+    a.push(Instr::Addi { r1: 0, imm: -1 });
+    a.push(Instr::St { r1: 0, r2: 2, imm: KCNT as i8 });
+    a.bnz(&format!("kloop_{tag}"));
+
+    if let TpVariant::Mac { .. } = variant {
+        // Read the adder-tree total `acc_total` in d-bit chunks and add
+        // it onto the bias-seeded memory accumulator (paper Eq. 1: the
+        // unit sums lanes in hardware, Fig. 2).
+        let _ = lanes;
+        let parts = (32u32.div_ceil(d)) as usize;
+        a.ldi(2, 0);
+        for part in 0..parts {
+            a.push(Instr::Mac { op: MacOp::MacRd, r1: 3, r2: part as u8 });
+            a.push(Instr::Ld { r1: 0, r2: 2, imm: (ACC + part) as i8 });
+            if part == 0 {
+                a.push(Instr::Add { r1: 0, r2: 3 });
+            } else {
+                a.push(Instr::Adc { r1: 0, r2: 3 });
+            }
+            a.push(Instr::St { r1: 0, r2: 2, imm: (ACC + part) as i8 });
+        }
+    }
+    emit_epilogue(a, tag, ql, d, p, _j, lay, last, relu, round_addr)
+}
+
+/// Signed shift-add multiply: x in (r0 lo, r1 hi), w in r2; product
+/// left in (r3, r4).  p-1 conditional adds then a conditional subtract
+/// for the sign bit (two's complement).  Clobbers r5.
+fn emit_softmul(a: &mut Asm, tag: &str, d: u32, p: u32) {
+    let np2 = 2 * p > d; // product needs two words
+    a.ldi(3, 0);
+    if np2 {
+        a.ldi(4, 0);
+    }
+    a.ldi(5, (p - 1) as i8);
+    a.label(&format!("smul_{tag}"));
+    a.push(Instr::Shr { r1: 2 }); // carry = multiplier LSB
+    a.bnc(&format!("smul_skip_{tag}"));
+    a.push(Instr::Add { r1: 3, r2: 0 });
+    if np2 {
+        a.push(Instr::Adc { r1: 4, r2: 1 });
+    }
+    a.label(&format!("smul_skip_{tag}"));
+    a.push(Instr::Shl { r1: 0 });
+    if np2 {
+        a.push(Instr::Slc { r1: 1 });
+    }
+    a.push(Instr::Addi { r1: 5, imm: -1 });
+    a.bnz(&format!("smul_{tag}"));
+    // Sign bit: subtract x << (p-1).
+    a.push(Instr::Shr { r1: 2 });
+    a.bnc(&format!("smul_done_{tag}"));
+    a.push(Instr::Sub { r1: 3, r2: 0 });
+    if np2 {
+        a.push(Instr::Sbc { r1: 4, r2: 1 });
+    }
+    a.label(&format!("smul_done_{tag}"));
+}
+
+/// Rescale + saturate + ReLU + store (hidden) or copy acc to the score
+/// region (last layer).
+#[allow(clippy::too_many_arguments)]
+fn emit_epilogue(
+    a: &mut Asm,
+    tag: &str,
+    ql: &QLayer,
+    d: u32,
+    p: u32,
+    j: usize,
+    lay: &Layout,
+    last: bool,
+    relu: bool,
+    round_addr: usize,
+) -> Result<()> {
+    let nacc = lay.nacc;
+    a.ldi(2, 0);
+    if last {
+        // Copy acc words to the score slot.
+        a.ldc(7, (lay.score_base + j * nacc) as i64, d);
+        for w in 0..nacc {
+            a.push(Instr::Ld { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+            a.push(Instr::St { r1: 0, r2: 7, imm: w as i8 });
+        }
+        return Ok(());
+    }
+    // (a) acc += rounding constant.
+    if ql.shift > 0 {
+        a.ldc(6, round_addr as i64, d);
+        for w in 0..nacc {
+            a.push(Instr::Ld { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+            a.push(Instr::Ld { r1: 1, r2: 6, imm: w as i8 });
+            if w == 0 {
+                a.push(Instr::Add { r1: 0, r2: 1 });
+            } else {
+                a.push(Instr::Adc { r1: 0, r2: 1 });
+            }
+            a.push(Instr::St { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+        }
+        // (b) arithmetic shift right `shift` times across nacc words.
+        a.ldi(5, ql.shift as i8);
+        a.label(&format!("shl_{tag}"));
+        a.push(Instr::Ld { r1: 0, r2: 2, imm: (ACC + nacc - 1) as i8 });
+        a.push(Instr::Sra { r1: 0 });
+        a.push(Instr::St { r1: 0, r2: 2, imm: (ACC + nacc - 1) as i8 });
+        for w in (0..nacc - 1).rev() {
+            a.push(Instr::Ld { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+            a.push(Instr::Src { r1: 0 });
+            a.push(Instr::St { r1: 0, r2: 2, imm: (ACC + w) as i8 });
+        }
+        a.push(Instr::Addi { r1: 5, imm: -1 });
+        a.bnz(&format!("shl_{tag}"));
+    }
+    // (c) saturate to p bits.  v = acc low word; if the upper words are
+    // not the sign-fill of v, clamp to qmin/qmax by the sign of the
+    // top word.  (For p == d the in-range value is exactly the low
+    // word; for p < d also check the low word fits p bits.)
+    a.push(Instr::Ld { r1: 0, r2: 2, imm: ACC as i8 });
+    a.push(Instr::Sxt { r1: 1, r2: 0 });
+    for w in 1..nacc {
+        a.push(Instr::Ld { r1: 3, r2: 2, imm: (ACC + w) as i8 });
+        a.push(Instr::Xor { r1: 3, r2: 1 });
+        a.bnz(&format!("clamp_{tag}"));
+    }
+    if p < d {
+        // In-word range check against the p-bit bounds.  `Sub` sets Z
+        // on equality; the sign fill of the difference distinguishes
+        // below/above.  (Wrap-around at the word width only occurs for
+        // |v| far outside the p-bit range, where the clamp branch picks
+        // the correct bound from the top acc word's sign.)
+        let (qmin, qmax) = qlimits(p);
+        a.push(Instr::Mov { r1: 3, r2: 0 });
+        a.ldc(4, qmax, d);
+        a.push(Instr::Sub { r1: 3, r2: 4 }); // v - qmax; Z if equal
+        a.bz(&format!("satok_{tag}"));
+        a.push(Instr::Sxt { r1: 5, r2: 3 });
+        a.push(Instr::Or { r1: 5, r2: 5 }); // Z iff difference >= 0
+        a.bnz(&format!("satlo_{tag}")); // negative -> v < qmax: check min
+        a.jmp(&format!("clamp_{tag}")); // v > qmax
+        a.label(&format!("satlo_{tag}"));
+        a.push(Instr::Mov { r1: 3, r2: 0 });
+        a.ldc(4, qmin, d);
+        a.push(Instr::Sub { r1: 3, r2: 4 }); // v - qmin; Z if equal
+        a.bz(&format!("satok_{tag}"));
+        a.push(Instr::Sxt { r1: 5, r2: 3 });
+        a.push(Instr::Or { r1: 5, r2: 5 });
+        a.bnz(&format!("clamp_{tag}")); // negative -> v < qmin
+        a.label(&format!("satok_{tag}"));
+    }
+    a.jmp(&format!("store_{tag}"));
+    a.label(&format!("clamp_{tag}"));
+    // Sign from the top acc word.
+    a.push(Instr::Ld { r1: 3, r2: 2, imm: (ACC + nacc - 1) as i8 });
+    a.push(Instr::Sxt { r1: 4, r2: 3 });
+    a.push(Instr::Or { r1: 4, r2: 4 });
+    a.bz(&format!("clamp_pos_{tag}"));
+    a.ldc(0, qlimits(p).0, d);
+    a.jmp(&format!("store_{tag}"));
+    a.label(&format!("clamp_pos_{tag}"));
+    a.ldc(0, qlimits(p).1, d);
+    a.label(&format!("store_{tag}"));
+    if relu {
+        a.push(Instr::Sxt { r1: 1, r2: 0 });
+        a.push(Instr::Or { r1: 1, r2: 1 });
+        a.bz(&format!("relu_{tag}"));
+        a.ldi(0, 0);
+        a.label(&format!("relu_{tag}"));
+    }
+    a.ldc(7, (lay.hidden_base + j) as i64, d);
+    a.push(Instr::St { r1: 0, r2: 7, imm: 0 });
+    Ok(())
+}
+
+/// Pack hidden single-word values into lane-packed words for the next
+/// MAC layer.
+fn emit_pack_hidden(a: &mut Asm, d: u32, p: u32, k_next: usize, lay: &Layout) -> Result<()> {
+    let lanes = (d / p).max(1) as usize;
+    let words = k_next.div_ceil(lanes);
+    a.ldc(1, (1i64 << p) - 1, d); // lane mask
+    for w in 0..words {
+        a.ldi(3, 0);
+        for lane in (0..lanes).rev() {
+            let idx = w * lanes + lane;
+            if lane != lanes - 1 {
+                // Shift the accumulated word left by one lane.
+                for _ in 0..p {
+                    a.push(Instr::Shl { r1: 3 });
+                }
+            }
+            if idx < k_next {
+                a.ldc(7, (lay.hidden_base + idx) as i64, d);
+                a.push(Instr::Ld { r1: 0, r2: 7, imm: 0 });
+                a.push(Instr::And { r1: 0, r2: 1 });
+                a.push(Instr::Or { r1: 3, r2: 0 });
+            }
+        }
+        a.ldc(7, (lay.packed_base + w) as i64, d);
+        a.push(Instr::St { r1: 3, r2: 7, imm: 0 });
+    }
+    Ok(())
+}
+
+/// Fully unrolled single-layer output for the 4-bit core (immediate-only
+/// addressing; r6 holds 0).
+#[allow(clippy::too_many_arguments)]
+fn emit_output_unrolled(
+    a: &mut Asm,
+    tag: &str,
+    _model: &Model,
+    _ql: &QLayer,
+    variant: TpVariant,
+    d: u32,
+    p: u32,
+    k: usize,
+    j: usize,
+    in_base: usize,
+    col_addr: usize,
+    bias_addr: usize,
+    lay: &Layout,
+    _last: bool,
+) -> Result<()> {
+    let nacc = lay.nacc;
+    ensure!(col_addr + k <= 64 && bias_addr + nacc <= 64, "data beyond imm range");
+    // acc = bias.
+    for w in 0..nacc {
+        a.push(Instr::Ld { r1: 0, r2: 6, imm: (bias_addr + w) as i8 });
+        a.push(Instr::St { r1: 0, r2: 6, imm: (ACC + w) as i8 });
+    }
+    match variant {
+        TpVariant::Baseline => {
+            for kk in 0..k {
+                let t = format!("{tag}k{kk}");
+                a.push(Instr::Ld { r1: 0, r2: 6, imm: (in_base + kk) as i8 });
+                a.push(Instr::Sxt { r1: 1, r2: 0 });
+                a.push(Instr::Ld { r1: 2, r2: 6, imm: (col_addr + kk) as i8 });
+                // softmul clobbers r5 only among the low regs; r6 == 0
+                // survives (softmul uses r0..r5).
+                emit_softmul(a, &t, d, p);
+                a.push(Instr::Sxt { r1: 5, r2: 4 });
+                a.push(Instr::Ld { r1: 0, r2: 6, imm: ACC as i8 });
+                a.push(Instr::Add { r1: 0, r2: 3 });
+                a.push(Instr::St { r1: 0, r2: 6, imm: ACC as i8 });
+                for w in 1..nacc {
+                    a.push(Instr::Ld { r1: 0, r2: 6, imm: (ACC + w) as i8 });
+                    let src = if w < 2 { 4 } else { 5 };
+                    a.push(Instr::Adc { r1: 0, r2: src });
+                    a.push(Instr::St { r1: 0, r2: 6, imm: (ACC + w) as i8 });
+                }
+            }
+        }
+        TpVariant::Mac { .. } => {
+            for kk in 0..k {
+                a.push(Instr::Ld { r1: 0, r2: 6, imm: (in_base + kk) as i8 });
+                a.push(Instr::Ld { r1: 1, r2: 6, imm: (col_addr + kk) as i8 });
+                a.push(Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 });
+            }
+            let parts = (32u32.div_ceil(d)) as usize;
+            for part in 0..parts {
+                a.push(Instr::Mac { op: MacOp::MacRd, r1: 3, r2: part as u8 });
+                a.push(Instr::Ld { r1: 0, r2: 6, imm: (ACC + part) as i8 });
+                if part == 0 {
+                    a.push(Instr::Add { r1: 0, r2: 3 });
+                } else {
+                    a.push(Instr::Adc { r1: 0, r2: 3 });
+                }
+                a.push(Instr::St { r1: 0, r2: 6, imm: (ACC + part) as i8 });
+            }
+        }
+    }
+    // Copy acc to the score slot (single layer => always last).
+    for w in 0..nacc {
+        a.push(Instr::Ld { r1: 0, r2: 6, imm: (ACC + w) as i8 });
+        a.push(Instr::St { r1: 0, r2: 6, imm: (lay.score_base + j * nacc + w) as i8 });
+    }
+    // MAC state must be cleared between outputs.
+    if matches!(variant, TpVariant::Mac { .. }) {
+        a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
+    }
+    Ok(())
+}

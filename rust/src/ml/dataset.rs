@@ -1,0 +1,62 @@
+//! Dataset loading from the CSV artifacts written by
+//! `python/compile/datasets.py`.
+
+use anyhow::Result;
+
+use crate::util::csv::Table;
+
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<i64>,
+}
+
+impl Dataset {
+    pub fn load(dir: impl AsRef<std::path::Path>, name: &str, split: &str) -> Result<Dataset> {
+        let path = dir.as_ref().join(format!("{name}_{split}.csv"));
+        let (x, y) = Table::from_file(path)?.features_labels()?;
+        Ok(Dataset { name: name.to_string(), x, y })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Accuracy of a prediction vector against the labels.
+    pub fn accuracy(&self, preds: &[i64]) -> f64 {
+        assert_eq!(preds.len(), self.y.len());
+        let hits = preds.iter().zip(&self.y).filter(|(p, y)| p == y).count();
+        hits as f64 / self.y.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_from_tempdir() {
+        let dir = std::env::temp_dir().join(format!("pbsp-ds-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("toy_test.csv"),
+            "f0,f1,label\n0.1,0.9,1\n0.8,0.2,0\n0.5,0.5,1\n",
+        )
+        .unwrap();
+        let ds = Dataset::load(&dir, "toy", "test").unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.n_features(), 2);
+        assert_eq!(ds.y, vec![1, 0, 1]);
+        assert!((ds.accuracy(&[1, 0, 0]) - 2.0 / 3.0).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,134 @@
+//! ISS execution harness: runs a generated program on the matching
+//! simulator for a batch of samples, handling input quantisation /
+//! packing, score readout, dequantisation and the prediction head.
+//!
+//! This is the "Modelsim + testbench" analogue of workflow step ④, and
+//! the bit-exactness cross-check target for the PJRT path: for every
+//! (model, precision) the ISS scores must equal the HLO executable's
+//! scores exactly.
+
+use anyhow::{ensure, Context, Result};
+
+use super::codegen_rv32::{InputFormat, Rv32Program, RAM_BYTES, SCORES_OFF};
+use super::codegen_tpisa::TpIsaProgram;
+use super::model::Model;
+use super::quant::{pack_vec, quantize};
+use crate::sim::mem::RAM_BASE;
+use crate::sim::tpisa::TpIsa;
+use crate::sim::trace::Profile;
+use crate::sim::zero_riscy::{Halt, ZeroRiscy};
+
+/// Result of running a batch through an ISS.
+#[derive(Debug, Clone)]
+pub struct BatchRun {
+    /// Uniform score vectors (post-head), one per sample.
+    pub scores: Vec<Vec<f64>>,
+    pub predictions: Vec<i64>,
+    /// Aggregated execution profile.
+    pub profile: Profile,
+    /// Cycles per sample (mean).
+    pub cycles_per_sample: f64,
+}
+
+/// Quantise + lay out one input vector per the program's contract.
+fn input_words_rv32(model: &Model, prog: &Rv32Program, x: &[f32]) -> Result<Vec<u8>> {
+    let p = prog.variant.quant_precision();
+    let fx = model.qlayers(p)?[0].fx;
+    let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+    let mut bytes = Vec::new();
+    match prog.input_format {
+        InputFormat::I16 => {
+            for q in qx {
+                bytes.extend_from_slice(&(q as i16).to_le_bytes());
+            }
+        }
+        InputFormat::Packed(prec) => {
+            for w in pack_vec(&qx, prec, 32) {
+                bytes.extend_from_slice(&(w as u32).to_le_bytes());
+            }
+        }
+    }
+    Ok(bytes)
+}
+
+/// Run a batch of samples through the Zero-Riscy ISS.
+pub fn run_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> Result<BatchRun> {
+    let mut scores = Vec::with_capacity(xs.len());
+    let mut predictions = Vec::with_capacity(xs.len());
+    let mut profile = Profile::default();
+    for x in xs {
+        let mut sim =
+            ZeroRiscy::new(&prog.code, &prog.rom_data, RAM_BYTES, prog.variant.mac_config());
+        let input = input_words_rv32(model, prog, x)?;
+        for (i, b) in input.iter().enumerate() {
+            sim.mem
+                .store_u8(RAM_BASE + super::codegen_rv32::INPUT_OFF as u32 + i as u32, *b)?;
+        }
+        let halt = sim.run(50_000_000).context("ISS run")?;
+        ensure!(halt == Halt::Break, "program did not halt cleanly: {halt:?}");
+        let mut raw = Vec::with_capacity(prog.n_scores);
+        for j in 0..prog.n_scores {
+            let acc =
+                sim.mem.load_u32(RAM_BASE + SCORES_OFF as u32 + 4 * j as u32)? as i32 as i64;
+            raw.push(acc as f64 / prog.score_scale);
+        }
+        let s = model.head_scores(&raw);
+        predictions.push(model.predict(&s));
+        scores.push(s);
+        profile.merge(&sim.profile);
+    }
+    let cps = profile.cycles as f64 / xs.len().max(1) as f64;
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+}
+
+/// Run a batch through the TP-ISA ISS.
+pub fn run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> Result<BatchRun> {
+    let p = prog.quant_precision;
+    let fx = model.qlayers(p)?[0].fx;
+    let mut scores = Vec::with_capacity(xs.len());
+    let mut predictions = Vec::with_capacity(xs.len());
+    let mut profile = Profile::default();
+    for x in xs {
+        let mut sim = TpIsa::new(prog.datapath, &prog.code, prog.dmem_words, prog.mac_config());
+        // Preload constants (weights, biases, rounding constants).
+        for (addr, v) in prog.dmem_image.iter().enumerate() {
+            sim.dmem.store(addr as i64, *v)?;
+        }
+        // Input.
+        let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+        let words: Vec<u64> = if prog.packed_input {
+            pack_vec(&qx, p, prog.datapath)
+        } else {
+            qx.iter().map(|&q| q as u64).collect()
+        };
+        for (i, w) in words.iter().enumerate() {
+            sim.dmem.store(prog.input_base as i64 + i as i64, *w)?;
+        }
+        let halt = sim.run(500_000_000).context("TP-ISA run")?;
+        ensure!(halt == crate::sim::tpisa::Halt::Halted, "did not halt: {halt:?}");
+        // Scores: nacc d-bit chunks per output, little-endian.
+        let nacc = (32 / prog.datapath).max(1) as usize;
+        let mut raw = Vec::with_capacity(prog.n_scores);
+        for j in 0..prog.n_scores {
+            let mut acc: u64 = 0;
+            for wi in 0..nacc {
+                let chunk = sim.dmem.load((prog.score_base + j * nacc + wi) as i64)?;
+                acc |= chunk << (prog.datapath * wi as u32);
+            }
+            let acc = crate::sim::mac_model::sext(acc, 32);
+            raw.push(acc as f64 / prog.score_scale);
+        }
+        let s = model.head_scores(&raw);
+        predictions.push(model.predict(&s));
+        scores.push(s);
+        profile.merge(&sim.profile);
+    }
+    let cps = profile.cycles as f64 / xs.len().max(1) as f64;
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+}
+
+/// Convenience: accuracy of a batch run against labels.
+pub fn accuracy(run: &BatchRun, labels: &[i64]) -> f64 {
+    let hits = run.predictions.iter().zip(labels).filter(|(p, y)| p == y).count();
+    hits as f64 / labels.len().max(1) as f64
+}

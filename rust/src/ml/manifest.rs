@@ -1,0 +1,116 @@
+//! `artifacts/manifest.json` — the index the AOT pipeline writes: models,
+//! HLO paths per precision, python-side accuracies (the cross-check
+//! reference for the coordinator), and the packed-MAC unit artifacts.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dataset: String,
+    pub arch: Vec<usize>,
+    pub n_test: usize,
+    pub float_accuracy: f64,
+    /// Accuracy measured by the python (jnp oracle) eval per precision.
+    pub quant_accuracy: BTreeMap<u32, f64>,
+    /// HLO artifact path per variant key ("float", "p32", ...).
+    pub hlo: BTreeMap<String, PathBuf>,
+    pub weights: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub precisions: Vec<u32>,
+    pub models: Vec<ModelEntry>,
+    /// Packed SIMD-MAC unit HLOs: precision -> (path, words).
+    pub mac_units: BTreeMap<u32, (PathBuf, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let v = Value::from_file(dir.join("manifest.json"))?;
+        let batch = v.get("batch")?.as_usize()?;
+        let precisions =
+            v.get("precisions")?.as_i64_vec()?.into_iter().map(|p| p as u32).collect();
+        let mut models = Vec::new();
+        for m in v.get("models")?.as_arr()? {
+            let mut hlo = BTreeMap::new();
+            for (k, p) in m.get("hlo")?.as_obj()? {
+                hlo.insert(k.clone(), dir.join(p.as_str()?));
+            }
+            let mut quant_accuracy = BTreeMap::new();
+            for (k, a) in m.get("quant_accuracy")?.as_obj()? {
+                quant_accuracy.insert(k.parse::<u32>().context("precision key")?, a.as_f64()?);
+            }
+            models.push(ModelEntry {
+                name: m.get("name")?.as_str()?.to_string(),
+                dataset: m.get("dataset")?.as_str()?.to_string(),
+                arch: m.get("arch")?.as_i64_vec()?.into_iter().map(|x| x as usize).collect(),
+                n_test: m.get("n_test")?.as_usize()?,
+                float_accuracy: m.get("float_accuracy")?.as_f64()?,
+                quant_accuracy,
+                hlo,
+                weights: dir.join(m.get("weights")?.as_str()?),
+            });
+        }
+        let mut mac_units = BTreeMap::new();
+        for (k, u) in v.get("mac_units")?.as_obj()? {
+            mac_units.insert(
+                k.parse::<u32>().context("mac unit precision")?,
+                (dir.join(u.get("path")?.as_str()?), u.get("words")?.as_usize()?),
+            );
+        }
+        Ok(Manifest { dir, batch, precisions, models, mac_units })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+
+    pub fn data_dir(&self) -> PathBuf {
+        self.dir.join("data")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("pbsp-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 256, "precisions": [32, 16],
+                "models": [{"name": "m1", "dataset": "d", "head": "argmax",
+                  "arch": [4, 2], "n_classes": 2, "label_offset": 0,
+                  "n_test": 10, "float_accuracy": 0.9,
+                  "weights": "weights/m1.json",
+                  "hlo": {"float": "hlo/m1_float.hlo.txt", "p16": "hlo/m1_p16.hlo.txt"},
+                  "quant_accuracy": {"16": 0.9, "32": 0.9}}],
+                "mac_units": {"16": {"path": "hlo/mac16.hlo.txt", "words": 64}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.models.len(), 1);
+        let e = m.model("m1").unwrap();
+        assert_eq!(e.quant_accuracy[&16], 0.9);
+        assert!(e.hlo["p16"].ends_with("hlo/m1_p16.hlo.txt"));
+        assert_eq!(m.mac_units[&16].1, 64);
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

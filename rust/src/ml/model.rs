@@ -1,0 +1,326 @@
+//! Model representation loaded from the weights JSON emitted by the AOT
+//! pipeline (`python/compile/aot.py`).  Every quantisation parameter and
+//! integer tensor is baked in there, so the rust side shares the exact
+//! numbers the Pallas kernel was lowered with.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Output head (mirrors `python/compile/model.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Head {
+    /// Classification logits; prediction = argmax + label_offset.
+    Argmax,
+    /// One-vs-one SVM pair decisions voted into class counts.
+    OvoVote,
+    /// Regression scalar; prediction = clamped round.
+    Round,
+}
+
+/// One dense layer: float tensors plus the per-precision quantised
+/// tensors and formats.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub w: Vec<Vec<f64>>, // [K][N]
+    pub b: Vec<f64>,      // [N]
+    pub relu: bool,
+}
+
+/// Quantised view of one layer at one precision.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    pub fx: u32,
+    pub fw: u32,
+    pub fy: u32,
+    pub shift: u32,
+    pub qw: Vec<Vec<i64>>, // [K][N]
+    pub qb: Vec<i64>,      // [N]
+}
+
+/// A loaded model with quantised variants for each precision.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: String,
+    pub dataset: String,
+    pub head: Head,
+    pub arch: Vec<usize>,
+    pub n_classes: usize,
+    pub label_offset: i64,
+    pub ovo_pairs: Vec<(usize, usize)>,
+    pub layers: Vec<Layer>,
+    /// Quantised layers keyed by precision (32/16/8/4).
+    pub quantized: Vec<(u32, Vec<QLayer>)>,
+    pub float_accuracy: f64,
+}
+
+impl Model {
+    pub fn from_json(v: &Value) -> Result<Model> {
+        let head = match v.get("head")?.as_str()? {
+            "argmax" => Head::Argmax,
+            "ovo_vote" => Head::OvoVote,
+            "round" => Head::Round,
+            h => bail!("unknown head {h:?}"),
+        };
+        let layers = v
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                Ok(Layer {
+                    w: l.get("w")?.as_f64_mat()?,
+                    b: l.get("b")?.as_f64_vec()?,
+                    relu: l.get("relu")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut quantized = Vec::new();
+        for (prec, qls) in v.get("quantized")?.as_obj()? {
+            let n: u32 = prec.parse().context("precision key")?;
+            let qlayers = qls
+                .as_arr()?
+                .iter()
+                .map(|q| {
+                    Ok(QLayer {
+                        fx: q.get("fx")?.as_usize()? as u32,
+                        fw: q.get("fw")?.as_usize()? as u32,
+                        fy: q.get("fy")?.as_usize()? as u32,
+                        shift: q.get("shift")?.as_usize()? as u32,
+                        qw: q.get("qw")?.as_i64_mat()?,
+                        qb: q.get("qb")?.as_i64_vec()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            quantized.push((n, qlayers));
+        }
+        Ok(Model {
+            name: v.get("name")?.as_str()?.to_string(),
+            dataset: v.get("dataset")?.as_str()?.to_string(),
+            head,
+            arch: v
+                .get("arch")?
+                .as_i64_vec()?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            n_classes: v.get("n_classes")?.as_usize()?,
+            label_offset: v.get("label_offset")?.as_i64()?,
+            ovo_pairs: v
+                .get("ovo_pairs")?
+                .as_i64_mat()?
+                .into_iter()
+                .map(|p| (p[0] as usize, p[1] as usize))
+                .collect(),
+            layers,
+            quantized,
+            float_accuracy: v.get("float_accuracy")?.as_f64()?,
+        })
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Model> {
+        Model::from_json(&Value::from_file(path)?)
+    }
+
+    /// Quantised layers for a precision.
+    pub fn qlayers(&self, precision: u32) -> Result<&[QLayer]> {
+        self.quantized
+            .iter()
+            .find(|(p, _)| *p == precision)
+            .map(|(_, q)| q.as_slice())
+            .with_context(|| format!("{}: no quantised variant for p{precision}", self.name))
+    }
+
+    /// Number of score outputs (C in the uniform [B, C] interface).
+    pub fn n_outputs(&self) -> usize {
+        match self.head {
+            Head::Argmax => self.n_classes,
+            Head::OvoVote => self.n_classes, // votes per class
+            Head::Round => 1,
+        }
+    }
+
+    /// Width of the last dense layer (pre-head).
+    pub fn raw_outputs(&self) -> usize {
+        *self.arch.last().unwrap()
+    }
+
+    /// Reference quantised inference (plain rust integers) — the oracle
+    /// the ISS-executed programs and the PJRT executables are checked
+    /// against.  Returns the uniform score vector.
+    pub fn quantized_forward(&self, x: &[f32], precision: u32) -> Result<Vec<f64>> {
+        let qls = self.qlayers(precision)?;
+        let mut h: Vec<i64> =
+            x.iter().map(|&v| super::quant::quantize(v as f64, qls[0].fx, precision)).collect();
+        let mut raw: Vec<f64> = Vec::new();
+        for (i, (layer, ql)) in self.layers.iter().zip(qls).enumerate() {
+            let k = ql.qw.len();
+            let n = ql.qb.len();
+            anyhow::ensure!(h.len() == k, "fan-in mismatch");
+            let last = i == self.layers.len() - 1;
+            let mut next = Vec::with_capacity(n);
+            for j in 0..n {
+                let mut acc: i64 = ql.qb[j];
+                for kk in 0..k {
+                    let prod = h[kk].wrapping_mul(ql.qw[kk][j]);
+                    acc = acc.wrapping_add(prod);
+                }
+                if last {
+                    next.push(acc);
+                } else {
+                    let mut y = super::quant::rescale(acc, ql.shift, precision);
+                    if layer.relu {
+                        y = y.max(0);
+                    }
+                    next.push(y);
+                }
+            }
+            if last {
+                let scale = (1i64 << (ql.fx + ql.fw)) as f64;
+                raw = next.iter().map(|&a| a as f64 / scale).collect();
+            } else {
+                h = next;
+            }
+        }
+        Ok(self.head_scores(&raw))
+    }
+
+    /// Map the last layer's float outputs to the uniform score vector
+    /// (mirrors `model._head_scores`).
+    pub fn head_scores(&self, raw: &[f64]) -> Vec<f64> {
+        match self.head {
+            Head::Argmax | Head::Round => raw.to_vec(),
+            Head::OvoVote => {
+                let mut votes = vec![0.0f64; self.n_classes];
+                for (p, &(i, j)) in self.ovo_pairs.iter().enumerate() {
+                    if raw[p] >= 0.0 {
+                        votes[i] += 1.0;
+                    } else {
+                        votes[j] += 1.0;
+                    }
+                }
+                votes
+            }
+        }
+    }
+
+    /// Scores -> predicted label (mirrors `model.predict_from_scores`).
+    pub fn predict(&self, scores: &[f64]) -> i64 {
+        match self.head {
+            Head::Round => {
+                let v = (scores[0] + 0.5).floor() as i64;
+                v.clamp(self.label_offset, self.label_offset + self.n_classes as i64 - 1)
+            }
+            Head::Argmax | Head::OvoVote => {
+                let mut best = 0;
+                for (i, &s) in scores.iter().enumerate() {
+                    if s > scores[best] {
+                        best = i;
+                    }
+                }
+                best as i64 + self.label_offset
+            }
+        }
+    }
+
+    /// Float reference forward (f64 arithmetic).
+    pub fn float_forward(&self, x: &[f32]) -> Vec<f64> {
+        let mut h: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        for layer in &self.layers {
+            let k = layer.w.len();
+            let n = layer.b.len();
+            let mut next = vec![0.0f64; n];
+            for j in 0..n {
+                let mut acc = layer.b[j];
+                for kk in 0..k {
+                    acc += h[kk] * layer.w[kk][j];
+                }
+                next[j] = if layer.relu { acc.max(0.0) } else { acc };
+            }
+            h = next;
+        }
+        self.head_scores(&h)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_model_json() -> Value {
+        // A 2-in -> 2-hidden -> 1-out regression model with hand
+        // quantisation at p8: fx=6, fw=5, fy=4, shift=7.
+        Value::parse(
+            r#"{
+            "name": "tiny", "dataset": "synth", "task": "regression",
+            "head": "round", "arch": [2, 2, 1], "n_classes": 6,
+            "label_offset": 3, "ovo_pairs": [], "calib": [1.0, 2.0, 8.0],
+            "float_accuracy": 0.5,
+            "layers": [
+                {"relu": true, "w": [[1.0, -0.5], [0.25, 1.0]], "b": [0.125, 0.0]},
+                {"relu": false, "w": [[2.0], [-1.0]], "b": [0.5]}
+            ],
+            "quantized": {
+                "8": [
+                    {"fx": 6, "fw": 5, "fy": 4, "shift": 7,
+                     "qw": [[32, -16], [8, 32]], "qb": [256, 0]},
+                    {"fx": 4, "fw": 4, "fy": 4, "shift": 4,
+                     "qw": [[32], [-16]], "qb": [128]}
+                ]
+            }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn loads_and_runs_quantized() {
+        let m = Model::from_json(&tiny_model_json()).unwrap();
+        assert_eq!(m.arch, vec![2, 2, 1]);
+        assert_eq!(m.head, Head::Round);
+        // Hand-compute: x = [0.5, 0.25] -> qx = [32, 16] (fx=6).
+        // h1 acc = 32*32 + 16*8 + 256 = 1408; rescale >>7 = 11
+        // h2 acc = 32*-16 + 16*32 + 0 = 0; rescale = 0
+        // out acc = 11*32 + 0*-16 + 128 = 480; scale 2^8 -> 1.875
+        let scores = m.quantized_forward(&[0.5, 0.25], 8).unwrap();
+        assert!((scores[0] - 480.0 / 256.0).abs() < 1e-12, "{scores:?}");
+        // predict: round(1.875) = 2, clamped to [3, 8] -> 3.
+        assert_eq!(m.predict(&scores), 3);
+    }
+
+    #[test]
+    fn float_forward_close_to_quantized() {
+        let m = Model::from_json(&tiny_model_json()).unwrap();
+        let f = m.float_forward(&[0.5, 0.25]);
+        let q = m.quantized_forward(&[0.5, 0.25], 8).unwrap();
+        assert!((f[0] - q[0]).abs() < 0.2, "float {f:?} vs q {q:?}");
+    }
+
+    #[test]
+    fn missing_precision_errors() {
+        let m = Model::from_json(&tiny_model_json()).unwrap();
+        assert!(m.qlayers(16).is_err());
+        assert!(m.qlayers(8).is_ok());
+    }
+
+    #[test]
+    fn ovo_head_votes() {
+        let mut m = Model::from_json(&tiny_model_json()).unwrap();
+        m.head = Head::OvoVote;
+        m.n_classes = 3;
+        m.label_offset = 0;
+        m.ovo_pairs = vec![(0, 1), (0, 2), (1, 2)];
+        let votes = m.head_scores(&[1.0, 1.0, 1.0]);
+        assert_eq!(votes, vec![2.0, 1.0, 0.0]);
+        let votes = m.head_scores(&[-1.0, -1.0, -1.0]);
+        assert_eq!(votes, vec![0.0, 1.0, 2.0]);
+        assert_eq!(m.predict(&votes), 2);
+    }
+
+    #[test]
+    fn argmax_tie_breaks_low() {
+        let mut m = Model::from_json(&tiny_model_json()).unwrap();
+        m.head = Head::Argmax;
+        m.label_offset = 0;
+        assert_eq!(m.predict(&[1.0, 1.0, 0.5]), 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Fixed-point contract, rust side — mirrors `python/compile/quant.py`
+//! exactly (round-half-up quantisation, saturating rescale, lane
+//! packing).  The quantisation *parameters* (fx/fw/fy/shift) are baked
+//! into the weights JSON by the AOT pipeline, so rust never re-derives
+//! them from floats; the value-level operations here must be
+//! bit-identical to the python contract and are property-tested against
+//! hand oracles.
+
+/// Quantisation limits of an n-bit signed format.
+pub fn qlimits(n: u32) -> (i64, i64) {
+    (-(1i64 << (n - 1)), (1i64 << (n - 1)) - 1)
+}
+
+/// Quantise a float to n-bit fixed point with f fractional bits
+/// (round-half-up: floor(v * 2^f + 0.5), saturating).
+pub fn quantize(v: f64, f: u32, n: u32) -> i64 {
+    let (qmin, qmax) = qlimits(n);
+    let q = (v * (1i64 << f) as f64 + 0.5).floor();
+    if q < qmin as f64 {
+        qmin
+    } else if q > qmax as f64 {
+        qmax
+    } else {
+        q as i64
+    }
+}
+
+pub fn dequantize(q: i64, f: u32) -> f64 {
+    q as f64 / (1i64 << f) as f64
+}
+
+/// Saturating round-half-up arithmetic right shift to n bits (the
+/// hardware rescaler between layers).
+pub fn rescale(acc: i64, shift: u32, n: u32) -> i64 {
+    let v = if shift > 0 { (acc + (1i64 << (shift - 1))) >> shift } else { acc };
+    let (qmin, qmax) = qlimits(n);
+    v.clamp(qmin, qmax)
+}
+
+/// Pack `lanes` n-bit values (little-endian lane order: lane 0 in the
+/// least-significant bits) into one datapath word.
+pub fn pack_lanes(vals: &[i64], n: u32, datapath: u32) -> u64 {
+    let lanes = (datapath / n).max(1) as usize;
+    assert!(vals.len() <= lanes, "too many lanes");
+    let mask = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let mut w = 0u64;
+    for (i, &v) in vals.iter().enumerate() {
+        w |= ((v as u64) & mask) << (n * i as u32);
+    }
+    w
+}
+
+/// Unpack a word into sign-extended lanes.
+pub fn unpack_lanes(word: u64, n: u32, datapath: u32) -> Vec<i64> {
+    let lanes = (datapath / n).max(1) as usize;
+    (0..lanes).map(|i| crate::sim::mac_model::sext(word >> (n * i as u32), n)).collect()
+}
+
+/// Pack a whole vector into datapath words (zero-padding the tail —
+/// zero lanes contribute nothing to a MAC).
+pub fn pack_vec(vals: &[i64], n: u32, datapath: u32) -> Vec<u64> {
+    let lanes = (datapath / n).max(1) as usize;
+    vals.chunks(lanes).map(|c| pack_lanes(c, n, datapath)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_matches_python_contract() {
+        // Mirrors python test_quantize_round_half_up.
+        assert_eq!(quantize(0.5, 0, 8), 1);
+        assert_eq!(quantize(-0.5, 0, 8), 0);
+        assert_eq!(quantize(1.5, 0, 8), 2);
+        assert_eq!(quantize(-1.5, 0, 8), -1);
+        assert_eq!(quantize(1e9, 4, 8), 127);
+        assert_eq!(quantize(-1e9, 4, 8), -128);
+        // fx = 6: 0.5 * 64 = 32.
+        assert_eq!(quantize(0.5, 6, 8), 32);
+    }
+
+    #[test]
+    fn rescale_matches_python_contract() {
+        // floor(acc / 2^s + 0.5) with saturation.
+        assert_eq!(rescale(1000, 3, 8), 125);
+        assert_eq!(rescale(1020, 3, 8), 127); // saturates
+        assert_eq!(rescale(-3000, 3, 8), -128);
+        assert_eq!(rescale(12, 2, 8), 3);
+        assert_eq!(rescale(14, 2, 8), 4); // 3.5 rounds up
+        assert_eq!(rescale(-14, 2, 8), -3); // -3.5 rounds toward zero/up
+        assert_eq!(rescale(300, 0, 8), 127);
+    }
+
+    #[test]
+    fn prop_rescale_equals_float_oracle() {
+        crate::util::prop::check("rescale oracle", 500, |rng| {
+            let acc = rng.range_i64(-(1 << 40), 1 << 40);
+            let shift = rng.range_i64(0, 24) as u32;
+            let n = *rng.choice(&[4u32, 8, 16, 32]);
+            let got = rescale(acc, shift, n);
+            let want = {
+                let v = (acc as f64 / (1i64 << shift) as f64 + 0.5).floor() as i64;
+                let (lo, hi) = qlimits(n);
+                v.clamp(lo, hi)
+            };
+            if got != want {
+                return Err(format!("acc {acc} shift {shift} n {n}: {got} != {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        crate::util::prop::check("pack/unpack", 500, |rng| {
+            let n = *rng.choice(&[4u32, 8, 16, 32]);
+            let d = 32u32;
+            let lanes = (d / n) as usize;
+            let (lo, hi) = qlimits(n);
+            let vals: Vec<i64> = (0..lanes).map(|_| rng.range_i64(lo, hi)).collect();
+            let w = pack_lanes(&vals, n, d);
+            if w > u32::MAX as u64 {
+                return Err(format!("word {w:#x} exceeds 32 bits"));
+            }
+            let back = unpack_lanes(w, n, d);
+            if back != vals {
+                return Err(format!("{vals:?} -> {w:#x} -> {back:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_vec_pads_with_zeros() {
+        let words = pack_vec(&[1, 2, 3], 16, 32);
+        assert_eq!(words.len(), 2);
+        assert_eq!(words[0], (2 << 16) | 1);
+        assert_eq!(words[1], 3);
+    }
+
+    #[test]
+    fn pack_lane_order_matches_python() {
+        // python test_pack_lane_order: lane 0 in the LSBs.
+        assert_eq!(pack_lanes(&[1, 2], 16, 32), (2 << 16) | 1);
+        assert_eq!(pack_lanes(&[-1], 16, 32), 0xffff);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute
+//! them on the CPU PJRT client from the L3 hot path (no Python).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serialises protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and
+//! `python/compile/aot.py`).
+
+pub mod pjrt;

@@ -1,0 +1,132 @@
+//! The PJRT executor: one CPU client, a compile cache keyed by artifact
+//! path, fixed-batch execution with padding.
+//!
+//! PJRT handles are not `Send`, so the [`Runtime`] is constructed and
+//! used on a single thread — the coordinator owns one runtime per
+//! worker thread (see `coordinator::service`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+/// One compiled model executable with its I/O contract.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    /// Fixed batch dimension the HLO was lowered at.
+    pub batch: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Compiled {
+    /// Execute on up to `batch` samples (the chunk is zero-padded to the
+    /// fixed batch).  Returns one score vector per input sample.
+    pub fn run_chunk(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+        ensure!(xs.len() <= self.batch, "chunk {} exceeds batch {}", xs.len(), self.batch);
+        let mut flat = vec![0.0f32; self.batch * self.in_dim];
+        for (i, x) in xs.iter().enumerate() {
+            ensure!(x.len() == self.in_dim, "sample dim {} != {}", x.len(), self.in_dim);
+            flat[i * self.in_dim..(i + 1) * self.in_dim].copy_from_slice(x);
+        }
+        let lit = xla::Literal::vec1(&flat).reshape(&[self.batch as i64, self.in_dim as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let values = out.to_vec::<f32>()?;
+        ensure!(
+            values.len() == self.batch * self.out_dim,
+            "output size {} != {}x{}",
+            values.len(),
+            self.batch,
+            self.out_dim
+        );
+        Ok(xs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                values[i * self.out_dim..(i + 1) * self.out_dim]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Execute over an arbitrary number of samples, chunking internally.
+    pub fn run(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(self.batch) {
+            out.extend(self.run_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+}
+
+/// A single-threaded PJRT runtime with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, std::rc::Rc<Compiled>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(
+        &mut self,
+        path: impl AsRef<Path>,
+        batch: usize,
+        in_dim: usize,
+        out_dim: usize,
+    ) -> Result<std::rc::Rc<Compiled>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(c) = self.cache.get(&path) {
+            return Ok(c.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let compiled = std::rc::Rc::new(Compiled { exe, batch, in_dim, out_dim });
+        self.cache.insert(path, compiled.clone());
+        Ok(compiled)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Load + run a packed SIMD-MAC unit artifact (two s32[words] inputs
+    /// -> s32[lanes] accumulators) — used by the runtime unit tests to
+    /// validate numerics against `sim::mac_model`.
+    pub fn run_mac_unit(
+        &mut self,
+        path: impl AsRef<Path>,
+        wa: &[i32],
+        wb: &[i32],
+        lanes: usize,
+    ) -> Result<Vec<i32>> {
+        let path = path.as_ref().to_path_buf();
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let la = xla::Literal::vec1(wa);
+        let lb = xla::Literal::vec1(wb);
+        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<i32>()?;
+        ensure!(v.len() == lanes, "lane count {} != {lanes}", v.len());
+        Ok(v)
+    }
+}

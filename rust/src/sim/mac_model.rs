@@ -1,0 +1,244 @@
+//! Bit-exact functional model of the SIMD MAC unit (paper Fig. 2, Eq. 1).
+//!
+//! This is the third implementation of the same contract — the Pallas
+//! kernel (`python/compile/kernels/simd_mac.py`) and the jnp oracle
+//! (`kernels/ref.py`) are the others — and the integration tests assert
+//! all three agree bit-for-bit:
+//!
+//! * `L = max(1, datapath / precision)` lanes.
+//! * Lane i of a packed word holds bits `[n*i + n-1 : n*i]`, two's
+//!   complement.
+//! * Each MAC wraps lane products into a per-lane accumulator: a 32-bit
+//!   wrapping register for p <= 16, a 64-bit pair for p = 32.
+//! * `read(lane)` returns the 32-bit lane accumulator; for p = 32 lanes
+//!   0/1 alias the low/high halves.  `read_chunk` exposes d-bit chunks
+//!   for narrow TP-ISA datapaths.
+
+use crate::hw::mac_unit::MacConfig;
+
+/// Runtime state of one MAC unit instance.
+#[derive(Debug, Clone)]
+pub struct MacState {
+    pub cfg: MacConfig,
+    /// Lane accumulators.  p <= 16: i32 stored sign-extended; p = 32:
+    /// a single i64 in `acc[0]`.
+    acc: Vec<i64>,
+}
+
+/// Sign-extend the low `n` bits of `v`.
+#[inline]
+pub fn sext(v: u64, n: u32) -> i64 {
+    debug_assert!(n >= 1 && n <= 64);
+    let sh = 64 - n;
+    ((v << sh) as i64) >> sh
+}
+
+impl MacState {
+    pub fn new(cfg: MacConfig) -> MacState {
+        let lanes = if cfg.precision >= 32 { 1 } else { cfg.lanes() as usize };
+        MacState { cfg, acc: vec![0; lanes] }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.cfg.lanes() as usize
+    }
+
+    pub fn clear(&mut self) {
+        self.acc.iter_mut().for_each(|a| *a = 0);
+    }
+
+    /// Execute one MAC instruction on packed operand words (masked to
+    /// the datapath width).
+    pub fn mac(&mut self, a: u64, b: u64) {
+        let d = self.cfg.datapath;
+        let p = self.cfg.precision;
+        let mask = if d == 64 { u64::MAX } else { (1u64 << d) - 1 };
+        let (a, b) = (a & mask, b & mask);
+        if p >= 32 {
+            // Single 64-bit accumulator (register pair).
+            let prod = (sext(a, 32) as i64).wrapping_mul(sext(b, 32));
+            self.acc[0] = self.acc[0].wrapping_add(prod);
+            return;
+        }
+        for i in 0..self.lanes() {
+            let la = sext(a >> (p * i as u32), p) as i32;
+            let lb = sext(b >> (p * i as u32), p) as i32;
+            let acc = self.acc[i] as i32;
+            self.acc[i] = acc.wrapping_add(la.wrapping_mul(lb)) as i64;
+        }
+    }
+
+    /// Lane index that reads the unit's adder-tree output `acc_total`
+    /// (paper Fig. 2 / Eq. 1) instead of a single lane.
+    pub const TOTAL_LANE: usize = 31;
+
+    /// Read a lane accumulator as a 32-bit value (p = 32: lane 0 = low
+    /// half, lane 1 = high half).  Lane [`Self::TOTAL_LANE`] reads the
+    /// hardware-summed `acc_total`.
+    pub fn read(&self, lane: usize) -> u32 {
+        if lane == Self::TOTAL_LANE && self.cfg.precision < 32 {
+            return self.total() as u32;
+        }
+        if self.cfg.precision >= 32 {
+            match lane {
+                0 => self.acc[0] as u32,
+                1 => (self.acc[0] >> 32) as u32,
+                _ => 0,
+            }
+        } else {
+            self.acc.get(lane).map(|&a| a as u32).unwrap_or(0)
+        }
+    }
+
+    /// Read d-bit chunk `part` of lane `lane` (narrow TP-ISA datapaths
+    /// read wide accumulators in several pieces).
+    pub fn read_chunk(&self, lane: usize, part: u32, datapath: u32) -> u64 {
+        let acc = if self.cfg.precision >= 32 { self.acc[0] as u64 } else { self.read(lane) as u64 };
+        let mask = if datapath >= 64 { u64::MAX } else { (1u64 << datapath) - 1 };
+        (acc >> (part * datapath)) & mask
+    }
+
+    /// Read d-bit chunk `part` of the adder-tree total (the TP-ISA
+    /// MACRD semantics: narrow datapaths read `acc_total` in pieces).
+    pub fn read_total_chunk(&self, part: u32, datapath: u32) -> u64 {
+        let acc = self.total() as u64;
+        let mask = if datapath >= 64 { u64::MAX } else { (1u64 << datapath) - 1 };
+        (acc >> (part * datapath)) & mask
+    }
+
+    /// Sum of all lane accumulators (paper Eq. 1: acc_total), wrapping
+    /// in 32 bits for p <= 16.
+    pub fn total(&self) -> i64 {
+        if self.cfg.precision >= 32 {
+            self.acc[0]
+        } else {
+            self.acc.iter().fold(0i32, |s, &a| s.wrapping_add(a as i32)) as i64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(d: u32, p: u32) -> MacState {
+        MacState::new(MacConfig::new(d, p))
+    }
+
+    #[test]
+    fn sext_basics() {
+        assert_eq!(sext(0xff, 8), -1);
+        assert_eq!(sext(0x7f, 8), 127);
+        assert_eq!(sext(0x80, 8), -128);
+        assert_eq!(sext(0xffff_ffff, 32), -1);
+        assert_eq!(sext(0x8, 4), -8);
+    }
+
+    #[test]
+    fn single_lane_32() {
+        let mut m = mk(32, 32);
+        m.mac(5u64, 7u64);
+        m.mac((-3i32) as u32 as u64, 11);
+        assert_eq!(m.total(), 35 - 33);
+        // 64-bit accumulate: big products don't wrap at 32 bits.
+        let mut m = mk(32, 32);
+        m.mac(i32::MAX as u64, i32::MAX as u64);
+        assert_eq!(m.total(), (i32::MAX as i64) * (i32::MAX as i64));
+        assert_eq!(m.read(0), m.total() as u32);
+        assert_eq!(m.read(1), (m.total() >> 32) as u32);
+    }
+
+    #[test]
+    fn lane_isolation_p16() {
+        // Mirrors python test_packed_simd_mac_lane_isolation.
+        let mut m = mk(32, 16);
+        // lane0 = 3 * 4, lane1 = 0.
+        m.mac(3, 4);
+        assert_eq!(m.read(0), 12);
+        assert_eq!(m.read(1), 0);
+        // lane1 only: values in the high half-word.
+        let mut m = mk(32, 16);
+        m.mac(5u64 << 16, 6u64 << 16);
+        assert_eq!(m.read(0), 0);
+        assert_eq!(m.read(1), 30);
+    }
+
+    #[test]
+    fn negative_lanes_p8() {
+        // Mirrors python test_packed_simd_mac_negative_lanes:
+        // lanes a = [-128, -1, 127, -5], b = [127, -1, -128, 5].
+        let pack = |lanes: [i8; 4]| -> u64 {
+            lanes.iter().enumerate().fold(0u64, |w, (i, &v)| w | (((v as u8) as u64) << (8 * i)))
+        };
+        let mut m = mk(32, 8);
+        m.mac(pack([-128, -1, 127, -5]), pack([127, -1, -128, 5]));
+        assert_eq!(m.read(0) as i32, -128 * 127);
+        assert_eq!(m.read(1) as i32, 1);
+        assert_eq!(m.read(2) as i32, 127 * -128);
+        assert_eq!(m.read(3) as i32, -25);
+    }
+
+    #[test]
+    fn wraps_like_hardware_p16() {
+        // Mirrors python test_packed_simd_mac_wraps_like_hardware.
+        let big = 32767u64;
+        let word = big | (big << 16);
+        let mut m = mk(32, 16);
+        for _ in 0..5000 {
+            m.mac(word, word);
+        }
+        let want = ((5000i64 * 32767 * 32767 + (1 << 31)).rem_euclid(1 << 32)) - (1 << 31);
+        assert_eq!(m.read(0) as i32 as i64, want);
+        assert_eq!(m.read(1) as i32 as i64, want);
+    }
+
+    #[test]
+    fn narrow_datapath_chunks() {
+        let mut m = mk(8, 8);
+        m.mac(100, 100); // acc = 10000 = 0x2710
+        assert_eq!(m.read_chunk(0, 0, 8), 0x10);
+        assert_eq!(m.read_chunk(0, 1, 8), 0x27);
+        assert_eq!(m.read_chunk(0, 2, 8), 0);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut m = mk(32, 4);
+        m.mac(u64::MAX, u64::MAX); // all lanes (-1)*(-1)
+        assert_eq!(m.lanes(), 8);
+        for i in 0..8 {
+            assert_eq!(m.read(i), 1);
+        }
+        m.clear();
+        assert_eq!(m.total(), 0);
+    }
+
+    /// Property: for random packed words, the rust model matches a
+    /// straightforward unpack-multiply-accumulate oracle.
+    #[test]
+    fn prop_matches_unpacked_oracle() {
+        crate::util::prop::check("mac_model vs oracle", 300, |rng| {
+            let p = *rng.choice(&[4u32, 8, 16]);
+            let n_ops = rng.range_usize(1, 40);
+            let mut m = mk(32, p);
+            let lanes = (32 / p) as usize;
+            let mut oracle = vec![0i32; lanes];
+            for _ in 0..n_ops {
+                let a = rng.next_u32() as u64;
+                let b = rng.next_u32() as u64;
+                m.mac(a, b);
+                for (i, acc) in oracle.iter_mut().enumerate() {
+                    let la = sext(a >> (p * i as u32), p) as i32;
+                    let lb = sext(b >> (p * i as u32), p) as i32;
+                    *acc = acc.wrapping_add(la.wrapping_mul(lb));
+                }
+            }
+            for (i, &want) in oracle.iter().enumerate() {
+                if m.read(i) as i32 != want {
+                    return Err(format!("lane {i}: {} != {want}", m.read(i) as i32));
+                }
+            }
+            Ok(())
+        });
+    }
+}

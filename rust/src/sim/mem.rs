@@ -1,0 +1,178 @@
+//! Memory model shared by the simulators.
+//!
+//! Program-image layout convention (shared with `ml::codegen_*`):
+//!
+//! * ROM at `0x0000`: code, then 4-byte-aligned constant data (weights).
+//!   ROM bytes are what the printed memory analysis (§IV-B) counts.
+//! * RAM at [`RAM_BASE`]: mailbox (scores), input vector, scratch.
+//!
+//! Zero-Riscy addresses bytes (little-endian); TP-ISA uses its own
+//! word-addressed data memory (`WordMem`) of d-bit cells.
+
+use anyhow::{bail, Result};
+
+pub const RAM_BASE: u32 = 0x0001_0000;
+
+/// Byte-addressed ROM + RAM for the RV32 core.
+#[derive(Debug, Clone)]
+pub struct Mem {
+    pub rom: Vec<u8>,
+    pub ram: Vec<u8>,
+}
+
+impl Mem {
+    pub fn new(rom: Vec<u8>, ram_bytes: usize) -> Mem {
+        Mem { rom, ram: vec![0; ram_bytes] }
+    }
+
+    fn slot(&mut self, addr: u32, len: usize) -> Result<&mut [u8]> {
+        let a = addr as usize;
+        if addr >= RAM_BASE {
+            let off = a - RAM_BASE as usize;
+            if off + len <= self.ram.len() {
+                return Ok(&mut self.ram[off..off + len]);
+            }
+        }
+        bail!("store to invalid address {addr:#010x}")
+    }
+
+    fn view(&self, addr: u32, len: usize) -> Result<&[u8]> {
+        let a = addr as usize;
+        if addr >= RAM_BASE {
+            let off = a - RAM_BASE as usize;
+            if off + len <= self.ram.len() {
+                return Ok(&self.ram[off..off + len]);
+            }
+        } else if a + len <= self.rom.len() {
+            return Ok(&self.rom[a..a + len]);
+        }
+        bail!("load from invalid address {addr:#010x}")
+    }
+
+    pub fn load_u8(&self, addr: u32) -> Result<u8> {
+        Ok(self.view(addr, 1)?[0])
+    }
+
+    pub fn load_u16(&self, addr: u32) -> Result<u16> {
+        let b = self.view(addr, 2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn load_u32(&self, addr: u32) -> Result<u32> {
+        let b = self.view(addr, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn store_u8(&mut self, addr: u32, v: u8) -> Result<()> {
+        self.slot(addr, 1)?[0] = v;
+        Ok(())
+    }
+
+    pub fn store_u16(&mut self, addr: u32, v: u16) -> Result<()> {
+        self.slot(addr, 2)?.copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+
+    pub fn store_u32(&mut self, addr: u32, v: u32) -> Result<()> {
+        self.slot(addr, 4)?.copy_from_slice(&v.to_le_bytes());
+        Ok(())
+    }
+}
+
+/// Word-addressed data memory of `width`-bit cells for TP-ISA.
+#[derive(Debug, Clone)]
+pub struct WordMem {
+    pub width: u32,
+    words: Vec<u64>,
+}
+
+impl WordMem {
+    pub fn new(width: u32, len: usize) -> WordMem {
+        assert!(width >= 1 && width <= 64);
+        WordMem { width, words: vec![0; len] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    fn mask(&self) -> u64 {
+        if self.width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width) - 1
+        }
+    }
+
+    pub fn load(&self, addr: i64) -> Result<u64> {
+        if addr < 0 || addr as usize >= self.words.len() {
+            bail!("TP-ISA load from invalid word address {addr}");
+        }
+        Ok(self.words[addr as usize])
+    }
+
+    pub fn store(&mut self, addr: i64, v: u64) -> Result<()> {
+        if addr < 0 || addr as usize >= self.words.len() {
+            bail!("TP-ISA store to invalid word address {addr}");
+        }
+        let m = self.mask();
+        self.words[addr as usize] = v & m;
+        Ok(())
+    }
+
+    /// Write a signed value (masked to the cell width).
+    pub fn store_signed(&mut self, addr: i64, v: i64) -> Result<()> {
+        self.store(addr, v as u64)
+    }
+
+    /// Read a sign-extended value.
+    pub fn load_signed(&self, addr: i64) -> Result<i64> {
+        Ok(super::mac_model::sext(self.load(addr)?, self.width))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rom_read_only() {
+        let mut m = Mem::new(vec![1, 2, 3, 4], 64);
+        assert_eq!(m.load_u32(0).unwrap(), 0x0403_0201);
+        assert!(m.store_u32(0, 5).is_err());
+    }
+
+    #[test]
+    fn ram_rw_little_endian() {
+        let mut m = Mem::new(vec![], 64);
+        m.store_u32(RAM_BASE, 0x1234_5678).unwrap();
+        assert_eq!(m.load_u16(RAM_BASE).unwrap(), 0x5678);
+        assert_eq!(m.load_u8(RAM_BASE + 3).unwrap(), 0x12);
+        m.store_u16(RAM_BASE + 8, 0xbeef).unwrap();
+        assert_eq!(m.load_u32(RAM_BASE + 8).unwrap(), 0x0000_beef);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let m = Mem::new(vec![0; 8], 16);
+        assert!(m.load_u32(6).is_err());
+        assert!(m.load_u32(RAM_BASE + 13).is_err());
+        assert!(m.load_u32(0x8000).is_err());
+    }
+
+    #[test]
+    fn word_mem_masks_to_width() {
+        let mut m = WordMem::new(8, 16);
+        m.store(3, 0x1ff).unwrap();
+        assert_eq!(m.load(3).unwrap(), 0xff);
+        m.store_signed(4, -2).unwrap();
+        assert_eq!(m.load(4).unwrap(), 0xfe);
+        assert_eq!(m.load_signed(4).unwrap(), -2);
+        assert!(m.load(16).is_err());
+        assert!(m.store(-1, 0).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Cycle-approximate instruction-set simulators (the stand-in for the
+//! paper's Modelsim RTL simulation, workflow step ④).
+//!
+//! * [`mem`] — ROM/RAM model with the program image layout.
+//! * [`mac_model`] — the bit-exact functional model of the SIMD MAC
+//!   unit, mirrored by the Pallas kernel (`kernels/simd_mac.py`).
+//! * [`trace`] — execution profiles: instruction histograms, register
+//!   and CSR utilization, PC reach — the inputs to the bespoke
+//!   reduction pass.
+//! * [`zero_riscy`] — RV32IM 2-stage pipeline timing model.
+//! * [`tpisa`] — the minimal width-configurable printed core.
+
+pub mod mac_model;
+pub mod mem;
+pub mod tpisa;
+pub mod trace;
+pub mod zero_riscy;

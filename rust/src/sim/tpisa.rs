@@ -1,0 +1,552 @@
+//! TP-ISA ISS: the minimal width-configurable printed core.
+//!
+//! Timing model (multi-cycle minimal core, no pipeline):
+//!
+//! * 2 cycles per instruction (fetch, execute);
+//! * loads/stores: 3 cycles;
+//! * taken branches/jumps: 3 cycles;
+//! * MAC extension: 2 cycles (single-cycle unit + fetch);
+//! * HALT: 1 cycle.
+//!
+//! Registers are `d`-bit (the datapath width); C and Z flags support
+//! multi-word arithmetic (ADC/SBC/SLC/SRC), which is how the baseline
+//! core multiplies — "the whole operation is scheduled to the ALU"
+//! (paper §III-B).
+
+use anyhow::{bail, Context, Result};
+
+use super::mac_model::MacState;
+use super::mem::WordMem;
+use super::trace::Profile;
+use crate::hw::mac_unit::MacConfig;
+use crate::isa::tpisa::Instr;
+use crate::isa::MacOp;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Halt {
+    Halted,
+    Fuel,
+}
+
+pub const ALL_MNEMONICS: &[&str] = &[
+    "ldi", "add", "adc", "sub", "sbc", "and", "or", "xor", "shl", "shr", "sra", "slc", "src",
+    "ld", "st", "addi", "mov", "sxt", "clc", "bz", "bnz", "bc", "bnc", "jmp", "mac", "macrd",
+    "maccl", "halt",
+];
+
+/// The TP-ISA simulator.
+pub struct TpIsa {
+    pub width: u32,
+    pub regs: [u64; 8],
+    pub pc: i64,
+    pub carry: bool,
+    pub zero: bool,
+    pub dmem: WordMem,
+    pub mac: Option<MacState>,
+    program: Vec<Instr>,
+    pub profile: Profile,
+}
+
+impl TpIsa {
+    pub fn new(width: u32, code: &[Instr], dmem_words: usize, mac: Option<MacConfig>) -> Self {
+        if let Some(cfg) = &mac {
+            assert_eq!(cfg.datapath, width, "MAC datapath must match the core");
+        }
+        let mut profile = Profile::default();
+        for i in code {
+            profile.static_mnemonics.insert(i.mnemonic());
+        }
+        TpIsa {
+            width,
+            regs: [0; 8],
+            pc: 0,
+            carry: false,
+            zero: false,
+            dmem: WordMem::new(width, dmem_words),
+            mac: mac.map(MacState::new),
+            program: code.to_vec(),
+            profile,
+        }
+    }
+
+    pub fn code_len(&self) -> usize {
+        self.program.len()
+    }
+
+    /// Program ROM footprint in bytes (2 bytes per instruction).
+    pub fn rom_code_bytes(&self) -> usize {
+        self.program.len() * 2
+    }
+
+    fn mask(&self) -> u64 {
+        if self.width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.width) - 1
+        }
+    }
+
+    fn set(&mut self, r: u8, v: u64) {
+        self.regs[r as usize] = v & self.mask();
+        self.profile.record_reg(r);
+    }
+
+    fn get(&mut self, r: u8) -> u64 {
+        self.profile.record_reg(r);
+        self.regs[r as usize]
+    }
+
+    fn set_z(&mut self, v: u64) {
+        self.zero = v & self.mask() == 0;
+    }
+
+    pub fn run(&mut self, fuel: u64) -> Result<Halt> {
+        let mask = self.mask();
+        let msb = 1u64 << (self.width - 1);
+        let mut executed = 0u64;
+        loop {
+            if executed >= fuel {
+                return Ok(Halt::Fuel);
+            }
+            executed += 1;
+            if self.pc < 0 || self.pc as usize >= self.program.len() {
+                bail!("PC {} outside program ({} instrs)", self.pc, self.program.len());
+            }
+            let instr = self.program[self.pc as usize];
+            self.profile.record_instr(instr.mnemonic_id(), instr.mnemonic());
+            self.profile.max_pc = self.profile.max_pc.max(self.pc as u32 * 2);
+            let mut next = self.pc + 1;
+            let mut cost = 2u64;
+
+            match instr {
+                Instr::Ldi { r1, imm } => {
+                    let v = (imm as i64 as u64) & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Add { r1, r2 } => {
+                    let (a, b) = (self.get(r1), self.get(r2));
+                    let s = a + b;
+                    self.carry = s > mask;
+                    let v = s & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Adc { r1, r2 } => {
+                    let (a, b) = (self.get(r1), self.get(r2));
+                    let s = a + b + self.carry as u64;
+                    self.carry = s > mask;
+                    let v = s & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Sub { r1, r2 } => {
+                    let (a, b) = (self.get(r1), self.get(r2));
+                    let s = a.wrapping_sub(b);
+                    self.carry = b > a; // borrow
+                    let v = s & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Sbc { r1, r2 } => {
+                    let (a, b) = (self.get(r1), self.get(r2));
+                    let bb = b + self.carry as u64;
+                    let s = a.wrapping_sub(bb);
+                    self.carry = bb > a;
+                    let v = s & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::And { r1, r2 } => {
+                    let v = self.get(r1) & self.get(r2);
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Or { r1, r2 } => {
+                    let v = self.get(r1) | self.get(r2);
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Xor { r1, r2 } => {
+                    let v = self.get(r1) ^ self.get(r2);
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Shl { r1 } => {
+                    let a = self.get(r1);
+                    self.carry = a & msb != 0;
+                    let v = (a << 1) & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Shr { r1 } => {
+                    let a = self.get(r1);
+                    self.carry = a & 1 != 0;
+                    let v = a >> 1;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Sra { r1 } => {
+                    let a = self.get(r1);
+                    self.carry = a & 1 != 0;
+                    let v = ((a >> 1) | (a & msb)) & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Slc { r1 } => {
+                    let a = self.get(r1);
+                    let cin = self.carry as u64;
+                    self.carry = a & msb != 0;
+                    let v = ((a << 1) | cin) & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Src { r1 } => {
+                    let a = self.get(r1);
+                    let cin = self.carry as u64;
+                    self.carry = a & 1 != 0;
+                    let v = (a >> 1) | (cin * msb);
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Ld { r1, r2, imm } => {
+                    let addr = self.get(r2) as i64 + imm as i64;
+                    let v = self.dmem.load(addr)?;
+                    self.set(r1, v);
+                    self.set_z(v);
+                    self.profile.loads += 1;
+                    self.profile.max_ram_offset =
+                        self.profile.max_ram_offset.max(addr.max(0) as u32);
+                    cost += 1;
+                }
+                Instr::St { r1, r2, imm } => {
+                    let addr = self.get(r2) as i64 + imm as i64;
+                    let v = self.get(r1);
+                    self.dmem.store(addr, v)?;
+                    self.profile.stores += 1;
+                    self.profile.max_ram_offset =
+                        self.profile.max_ram_offset.max(addr.max(0) as u32);
+                    cost += 1;
+                }
+                Instr::Addi { r1, imm } => {
+                    let v = (self.get(r1).wrapping_add(imm as i64 as u64)) & mask;
+                    self.set(r1, v);
+                    self.set_z(v);
+                }
+                Instr::Mov { r1, r2 } => {
+                    let v = self.get(r2);
+                    self.set(r1, v);
+                }
+                Instr::Sxt { r1, r2 } => {
+                    let v = if self.get(r2) & msb != 0 { mask } else { 0 };
+                    self.set(r1, v);
+                }
+                Instr::Clc => self.carry = false,
+                Instr::Bz { off } => {
+                    if self.zero {
+                        next = self.pc + off as i64;
+                        cost += 1;
+                        self.profile.branches_taken += 1;
+                    }
+                }
+                Instr::Bnz { off } => {
+                    if !self.zero {
+                        next = self.pc + off as i64;
+                        cost += 1;
+                        self.profile.branches_taken += 1;
+                    }
+                }
+                Instr::Bc { off } => {
+                    if self.carry {
+                        next = self.pc + off as i64;
+                        cost += 1;
+                        self.profile.branches_taken += 1;
+                    }
+                }
+                Instr::Bnc { off } => {
+                    if !self.carry {
+                        next = self.pc + off as i64;
+                        cost += 1;
+                        self.profile.branches_taken += 1;
+                    }
+                }
+                Instr::Jmp { off } => {
+                    next = self.pc + off as i64;
+                    cost += 1;
+                    self.profile.branches_taken += 1;
+                }
+                Instr::Mac { op, r1, r2 } => {
+                    let width = self.width;
+                    match op {
+                        MacOp::Mac => {
+                            let a = self.regs[r1 as usize];
+                            let b = self.regs[r2 as usize];
+                            self.profile.record_reg(r1);
+                            self.profile.record_reg(r2);
+                            let mac = self
+                                .mac
+                                .as_mut()
+                                .context("MAC instruction on a core without a MAC unit")?;
+                            mac.mac(a, b);
+                            self.profile.mac_ops += 1;
+                        }
+                        MacOp::MacRd => {
+                            // r2 *field* is an immediate chunk index
+                            // into the adder-tree total `acc_total`
+                            // (paper Fig. 2: the unit sums lanes in
+                            // hardware; software reads d-bit pieces).
+                            let mac = self
+                                .mac
+                                .as_ref()
+                                .context("MACRD on a core without a MAC unit")?;
+                            let v = mac.read_total_chunk(r2 as u32, width);
+                            self.set(r1, v);
+                        }
+                        MacOp::MacClr => {
+                            self.mac
+                                .as_mut()
+                                .context("MACCL on a core without a MAC unit")?
+                                .clear();
+                        }
+                    }
+                }
+                Instr::Halt => {
+                    self.profile.cycles += 1;
+                    return Ok(Halt::Halted);
+                }
+            }
+            self.profile.cycles += cost;
+            self.pc = next;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::tpisa::Asm;
+
+    fn run(width: u32, build: impl FnOnce(&mut Asm), dmem: usize) -> TpIsa {
+        let mut a = Asm::new();
+        build(&mut a);
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let mut sim = TpIsa::new(width, &prog, dmem, None);
+        assert_eq!(sim.run(1_000_000).unwrap(), Halt::Halted);
+        sim
+    }
+
+    #[test]
+    fn countdown_loop() {
+        let sim = run(
+            8,
+            |a| {
+                a.ldi(0, 10);
+                a.ldi(1, 0);
+                a.label("loop");
+                a.push(Instr::Add { r1: 1, r2: 0 });
+                a.push(Instr::Addi { r1: 0, imm: -1 });
+                a.bnz("loop");
+            },
+            4,
+        );
+        assert_eq!(sim.regs[1], 55);
+    }
+
+    #[test]
+    fn width_masking() {
+        let sim = run(
+            4,
+            |a| {
+                a.ldi(0, 15);
+                a.push(Instr::Addi { r1: 0, imm: 1 }); // wraps to 0 in 4 bits
+            },
+            4,
+        );
+        assert_eq!(sim.regs[0], 0);
+        assert!(sim.zero);
+    }
+
+    #[test]
+    fn carry_chain_multiword_add() {
+        // 16-bit addition on an 8-bit datapath: 0x00ff + 0x0001 = 0x0100.
+        let sim = run(
+            8,
+            |a| {
+                a.ldc(0, 0xff, 8); // lo a
+                a.ldi(1, 0); // hi a
+                a.ldi(2, 1); // lo b
+                a.ldi(3, 0); // hi b
+                a.push(Instr::Add { r1: 0, r2: 2 }); // lo sum, sets carry
+                a.push(Instr::Adc { r1: 1, r2: 3 }); // hi sum + carry
+            },
+            4,
+        );
+        assert_eq!(sim.regs[0], 0x00);
+        assert_eq!(sim.regs[1], 0x01);
+    }
+
+    #[test]
+    fn borrow_chain_multiword_sub() {
+        // 0x0100 - 0x0001 = 0x00ff on 8-bit datapath.
+        let sim = run(
+            8,
+            |a| {
+                a.ldi(0, 0); // lo a
+                a.ldi(1, 1); // hi a
+                a.ldi(2, 1); // lo b
+                a.ldi(3, 0); // hi b
+                a.push(Instr::Sub { r1: 0, r2: 2 });
+                a.push(Instr::Sbc { r1: 1, r2: 3 });
+            },
+            4,
+        );
+        assert_eq!(sim.regs[0], 0xff);
+        assert_eq!(sim.regs[1], 0x00);
+    }
+
+    #[test]
+    fn shift_through_carry() {
+        // 16-bit left shift on 8-bit datapath: 0x80ff << 1 = 0x01fe
+        // (dropping the out-shifted top bit).
+        let sim = run(
+            8,
+            |a| {
+                a.ldc(0, 0xff, 8); // lo
+                a.ldc(1, 0x80, 8); // hi
+                a.push(Instr::Shl { r1: 0 }); // lo <<= 1, C = 1
+                a.push(Instr::Slc { r1: 1 }); // hi = (hi<<1)|C
+            },
+            4,
+        );
+        assert_eq!(sim.regs[0], 0xfe);
+        assert_eq!(sim.regs[1], 0x01);
+    }
+
+    #[test]
+    fn sxt_fills_sign() {
+        let sim = run(
+            8,
+            |a| {
+                a.ldi(0, -5);
+                a.push(Instr::Sxt { r1: 1, r2: 0 });
+                a.ldi(2, 5);
+                a.push(Instr::Sxt { r1: 3, r2: 2 });
+            },
+            4,
+        );
+        assert_eq!(sim.regs[1], 0xff);
+        assert_eq!(sim.regs[3], 0x00);
+    }
+
+    #[test]
+    fn load_store() {
+        let sim = run(
+            16,
+            |a| {
+                a.ldi(0, 3); // addr base
+                a.ldc(1, 1234, 16);
+                a.push(Instr::St { r1: 1, r2: 0, imm: 2 }); // mem[5] = 1234
+                a.push(Instr::Ld { r1: 2, r2: 0, imm: 2 });
+            },
+            8,
+        );
+        assert_eq!(sim.regs[2], 1234);
+        assert_eq!(sim.dmem.load(5).unwrap(), 1234);
+    }
+
+    #[test]
+    fn carry_branches() {
+        let sim = run(
+            8,
+            |a| {
+                a.ldc(0, 0xff, 8);
+                a.ldi(1, 1);
+                a.push(Instr::Add { r1: 0, r2: 1 }); // sets carry
+                a.ldi(2, 0);
+                a.bnc("skip");
+                a.ldi(2, 1); // carry taken path
+                a.label("skip");
+            },
+            4,
+        );
+        assert_eq!(sim.regs[2], 1);
+    }
+
+    #[test]
+    fn mac_narrow_readback() {
+        // d=8, p=8: 100*100 = 10000 = 0x2710 read back in two chunks.
+        let mut a = Asm::new();
+        a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
+        a.ldc(0, 100, 8);
+        a.push(Instr::Mac { op: MacOp::Mac, r1: 0, r2: 0 });
+        a.push(Instr::Mac { op: MacOp::MacRd, r1: 1, r2: 0 }); // chunk 0
+        a.push(Instr::Mac { op: MacOp::MacRd, r1: 2, r2: 1 }); // chunk 1
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let mut sim = TpIsa::new(8, &prog, 4, Some(MacConfig::new(8, 8)));
+        sim.run(1000).unwrap();
+        assert_eq!(sim.regs[1], 0x10);
+        assert_eq!(sim.regs[2], 0x27);
+    }
+
+    #[test]
+    fn mac_simd_total_wide() {
+        // d=32, p=8: 4 lanes in parallel; MACRD reads the adder-tree
+        // total (1*1 + 2*1 + 3*1 + 4*1 = 10).
+        let mut a = Asm::new();
+        a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
+        a.ldc(0, 0x0403_0201, 32); // lanes [1,2,3,4]
+        a.ldc(1, 0x0101_0101, 32); // lanes [1,1,1,1]
+        a.push(Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 });
+        a.push(Instr::Mac { op: MacOp::MacRd, r1: 2, r2: 0 });
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let mut sim = TpIsa::new(32, &prog, 4, Some(MacConfig::new(32, 8)));
+        sim.run(1000).unwrap();
+        assert_eq!(sim.regs[2], 10);
+    }
+
+    #[test]
+    fn mac_total_chunks_narrow() {
+        // d=8, p=4, two lanes: total = 5*3 + 2*4 = 23, read in 4 chunks.
+        let mut a = Asm::new();
+        a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
+        a.ldc(0, 0x25, 8); // lanes [5, 2]
+        a.ldc(1, 0x43, 8); // lanes [3, 4]
+        a.push(Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 });
+        for part in 0..4u8 {
+            a.push(Instr::Mac { op: MacOp::MacRd, r1: 2 + part, r2: part });
+        }
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let mut sim = TpIsa::new(8, &prog, 4, Some(MacConfig::new(8, 4)));
+        sim.run(1000).unwrap();
+        assert_eq!(sim.regs[2], 23);
+        assert_eq!(sim.regs[3], 0);
+        assert_eq!(sim.regs[4], 0);
+        assert_eq!(sim.regs[5], 0);
+    }
+
+    #[test]
+    fn timing_model() {
+        let mut a = Asm::new();
+        a.ldi(0, 1); // 2 cycles
+        a.push(Instr::St { r1: 0, r2: 0, imm: 0 }); // 3 cycles
+        a.push(Instr::Halt); // 1 cycle
+        let prog = a.finish().unwrap();
+        let mut sim = TpIsa::new(8, &prog, 4, None);
+        sim.run(100).unwrap();
+        assert_eq!(sim.profile.cycles, 6);
+    }
+
+    #[test]
+    fn fuel() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.jmp("x");
+        let prog = a.finish().unwrap();
+        let mut sim = TpIsa::new(8, &prog, 4, None);
+        assert_eq!(sim.run(50).unwrap(), Halt::Fuel);
+    }
+}

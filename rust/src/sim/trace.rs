@@ -1,0 +1,182 @@
+//! Execution profiles — the measured inputs to the bespoke reduction
+//! pass (workflow step ③): which instructions, registers, CSRs and PC
+//! range a workload actually uses.
+
+use std::collections::BTreeMap;
+
+/// Accumulated profile of one or more program executions.
+///
+/// The dynamic histogram is stored as a flat array indexed by the
+/// ISA's per-instruction `mnemonic_id` — the retire path is one add and
+/// one array store (§Perf iteration 2; the original BTreeMap lookup per
+/// retired instruction dominated the ISS hot loop).
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    /// Dynamic instruction counts indexed by mnemonic id.
+    counts: Vec<u64>,
+    /// id -> mnemonic (recorded on first retire of each id).
+    names: Vec<&'static str>,
+    /// Static mnemonics present in the program image.
+    pub static_mnemonics: std::collections::BTreeSet<&'static str>,
+    /// Bitmask of registers read or written.
+    pub regs_used: u32,
+    /// Highest PC fetched (byte address).
+    pub max_pc: u32,
+    /// Any CSR instruction executed or present.
+    pub csr_used: bool,
+    /// Any ecall/ebreak beyond the final halt.
+    pub syscalls_used: bool,
+    pub cycles: u64,
+    pub instructions: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub mul_ops: u64,
+    pub mac_ops: u64,
+    pub branches_taken: u64,
+    /// Largest byte offset touched in RAM (BAR reach).
+    pub max_ram_offset: u32,
+}
+
+impl Profile {
+    /// Hot path: one retire.  `id` must be stable per mnemonic within
+    /// one ISA (see `Instr::mnemonic_id`).
+    #[inline]
+    pub fn record_instr(&mut self, id: usize, mnemonic: &'static str) {
+        if id >= self.counts.len() {
+            self.counts.resize(id + 1, 0);
+            self.names.resize(id + 1, "");
+        }
+        self.counts[id] += 1;
+        if self.names[id].is_empty() {
+            self.names[id] = mnemonic;
+        }
+        self.instructions += 1;
+    }
+
+    /// Cold path: add a count by name (merging, tests).
+    pub fn add_count(&mut self, mnemonic: &'static str, n: u64) {
+        if let Some(i) = self.names.iter().position(|&m| m == mnemonic) {
+            self.counts[i] += n;
+        } else {
+            self.names.push(mnemonic);
+            self.counts.push(n);
+        }
+    }
+
+    /// Dynamic histogram keyed by mnemonic.
+    pub fn instr_counts(&self) -> BTreeMap<&'static str, u64> {
+        self.names
+            .iter()
+            .zip(&self.counts)
+            .filter(|(m, &c)| !m.is_empty() && c > 0)
+            .map(|(&m, &c)| (m, c))
+            .collect()
+    }
+
+    /// Count of one mnemonic.
+    pub fn count(&self, mnemonic: &str) -> u64 {
+        self.names
+            .iter()
+            .position(|&m| m == mnemonic)
+            .map(|i| self.counts[i])
+            .unwrap_or(0)
+    }
+
+    pub fn record_reg(&mut self, r: u8) {
+        self.regs_used |= 1 << r;
+    }
+
+    /// Number of distinct registers used.
+    pub fn reg_count(&self) -> u32 {
+        self.regs_used.count_ones()
+    }
+
+    /// PC bits needed to address the executed code (highest byte
+    /// address inclusive).
+    pub fn pc_bits_needed(&self) -> u32 {
+        self.max_pc.saturating_add(1).max(2).next_power_of_two().trailing_zeros()
+    }
+
+    /// Address bits needed for the RAM working set.
+    pub fn bar_bits_needed(&self) -> u32 {
+        self.max_ram_offset.saturating_add(1).max(2).next_power_of_two().trailing_zeros()
+    }
+
+    /// Merge another profile into this one (suite-level aggregation).
+    /// Merges by *name* — the two ISAs have different id spaces.
+    pub fn merge(&mut self, other: &Profile) {
+        for (m, c) in other.instr_counts() {
+            self.add_count(m, c);
+        }
+        self.static_mnemonics.extend(&other.static_mnemonics);
+        self.regs_used |= other.regs_used;
+        self.max_pc = self.max_pc.max(other.max_pc);
+        self.csr_used |= other.csr_used;
+        self.syscalls_used |= other.syscalls_used;
+        self.cycles += other.cycles;
+        self.instructions += other.instructions;
+        self.loads += other.loads;
+        self.stores += other.stores;
+        self.mul_ops += other.mul_ops;
+        self.mac_ops += other.mac_ops;
+        self.branches_taken += other.branches_taken;
+        self.max_ram_offset = self.max_ram_offset.max(other.max_ram_offset);
+    }
+
+    /// Mnemonics from `all` that never appear (statically or
+    /// dynamically) — the "unused instructions" of §III-A.
+    pub fn unused_mnemonics<'a>(&self, all: &[&'a str]) -> Vec<&'a str> {
+        all.iter()
+            .filter(|m| {
+                !self.names.iter().any(|k| k == *m)
+                    && !self.static_mnemonics.iter().any(|k| k == *m)
+            })
+            .copied()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reg_tracking() {
+        let mut p = Profile::default();
+        p.record_reg(0);
+        p.record_reg(5);
+        p.record_reg(5);
+        p.record_reg(31);
+        assert_eq!(p.reg_count(), 3);
+        assert_eq!(p.regs_used, 1 | (1 << 5) | (1 << 31));
+    }
+
+    #[test]
+    fn pc_bits() {
+        let mut p = Profile::default();
+        p.max_pc = 1000; // needs 10 bits
+        assert_eq!(p.pc_bits_needed(), 10);
+        p.max_pc = 1023;
+        assert_eq!(p.pc_bits_needed(), 10);
+        p.max_pc = 1024;
+        assert_eq!(p.pc_bits_needed(), 11);
+        p.max_pc = 130;
+        assert_eq!(p.pc_bits_needed(), 8);
+    }
+
+    #[test]
+    fn merge_and_unused() {
+        let mut a = Profile::default();
+        a.record_instr(0, "add");
+        a.record_reg(1);
+        let mut b = Profile::default();
+        b.record_instr(1, "mul");
+        b.record_instr(0, "add");
+        b.record_reg(2);
+        a.merge(&b);
+        assert_eq!(a.count("add"), 2);
+        assert_eq!(a.count("mul"), 1);
+        assert_eq!(a.reg_count(), 2);
+        assert_eq!(a.unused_mnemonics(&["add", "mul", "slt", "csrrw"]), vec!["slt", "csrrw"]);
+    }
+}

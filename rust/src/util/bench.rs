@@ -1,0 +1,78 @@
+//! Mini benchmark harness (offline substitute for criterion): warmup +
+//! timed iterations with mean/std/min reporting.  `cargo bench` targets
+//! use `harness = false` and drive this directly.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub min_ms: f64,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms/iter (±{:.3}, min {:.3}, n={})",
+            self.name, self.mean_ms, self.std_ms, self.min_ms, self.iters
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: stats::mean(&samples),
+        std_ms: stats::std_dev(&samples),
+        min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    };
+    println!("{r}");
+    r
+}
+
+/// Throughput helper: report items/second from a timed closure that
+/// processes `items` per call.
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    items: usize,
+    warmup: usize,
+    iters: usize,
+    f: F,
+) -> f64 {
+    let r = bench(name, warmup, iters, f);
+    let per_sec = items as f64 / (r.min_ms / 1e3);
+    println!("{:<40} {:>12.0} items/s (best)", format!("{name} [throughput]"), per_sec);
+    per_sec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ms >= 0.0 && r.min_ms <= r.mean_ms + 1e-9);
+    }
+}

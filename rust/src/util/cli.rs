@@ -1,0 +1,154 @@
+//! Hand-rolled CLI argument parser (offline substitute for clap).
+//!
+//! Supports `binary <subcommand> [positionals] [--flag] [--key value]`.
+//! Unknown options are errors; every accessor records the option so
+//! `finish()` can reject typos.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (tests) or `std::env::args`.
+    pub fn parse(tokens: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut positionals = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positionals.push(tok);
+            }
+        }
+        Ok(Args { positionals, options, flags, consumed: Default::default() })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional = subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.opt_str(name).ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Reject unknown options/flags (call after all accessors).
+    pub fn finish(&self) -> Result<()> {
+        let seen = self.consumed.borrow();
+        for k in self.options.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !seen.iter().any(|s| s == f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = args("report fig1 extra");
+        assert_eq!(a.subcommand(), Some("report"));
+        assert_eq!(a.positionals, vec!["report", "fig1", "extra"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = args("run --iters 10 --verbose --out=x.json");
+        assert_eq!(a.parse_or("iters", 0usize).unwrap(), 10);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.opt_str("out"), Some("x.json"));
+    }
+
+    #[test]
+    fn finish_rejects_unknown() {
+        let a = args("run --bogus 1");
+        assert!(a.finish().is_err());
+        let a = args("run --iters 3");
+        let _ = a.parse_or("iters", 0usize).unwrap();
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn parse_errors_are_reported() {
+        let a = args("run --iters ten");
+        assert!(a.parse_or("iters", 0usize).is_err());
+    }
+
+    #[test]
+    fn require_missing() {
+        let a = args("run");
+        assert!(a.require("model").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Tiny CSV reader for the dataset artifacts (`artifacts/data/*.csv`).
+//!
+//! Format written by `python/compile/datasets.py`: a header row of feature
+//! names ending in `label`, then one row per sample of f32 features and an
+//! integer label.  No quoting/escaping is used in the artifacts.
+
+use anyhow::{bail, Context, Result};
+
+/// A loaded CSV table: header + numeric rows.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn parse(text: &str) -> Result<Table> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header: Vec<String> = lines
+            .next()
+            .context("empty CSV")?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect();
+        let mut rows = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let row: Vec<f64> = line
+                .split(',')
+                .map(|s| s.trim().parse::<f64>().with_context(|| format!("row {}: {s:?}", i + 1)))
+                .collect::<Result<_>>()?;
+            if row.len() != header.len() {
+                bail!("row {} has {} fields, header has {}", i + 1, row.len(), header.len());
+            }
+            rows.push(row);
+        }
+        Ok(Table { header, rows })
+    }
+
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> Result<Table> {
+        let path = path.as_ref();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Split into (features, labels), assuming the last column is `label`.
+    pub fn features_labels(&self) -> Result<(Vec<Vec<f32>>, Vec<i64>)> {
+        if self.header.last().map(String::as_str) != Some("label") {
+            bail!("last column is not 'label': {:?}", self.header.last());
+        }
+        let mut xs = Vec::with_capacity(self.rows.len());
+        let mut ys = Vec::with_capacity(self.rows.len());
+        for row in &self.rows {
+            let (label, feats) = row.split_last().unwrap();
+            xs.push(feats.iter().map(|&v| v as f32).collect());
+            ys.push(*label as i64);
+        }
+        Ok((xs, ys))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let t = Table::parse("a,b,label\n0.5,1.0,2\n0.25,0.75,1\n").unwrap();
+        assert_eq!(t.header, vec!["a", "b", "label"]);
+        assert_eq!(t.rows.len(), 2);
+        let (xs, ys) = t.features_labels().unwrap();
+        assert_eq!(xs[0], vec![0.5f32, 1.0]);
+        assert_eq!(ys, vec![2, 1]);
+    }
+
+    #[test]
+    fn rejects_ragged() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric() {
+        assert!(Table::parse("a,label\nx,1\n").is_err());
+    }
+
+    #[test]
+    fn requires_label_column() {
+        let t = Table::parse("a,b\n1,2\n").unwrap();
+        assert!(t.features_labels().is_err());
+    }
+
+    #[test]
+    fn skips_blank_lines() {
+        let t = Table::parse("a,label\n\n1,2\n\n").unwrap();
+        assert_eq!(t.rows.len(), 1);
+    }
+}

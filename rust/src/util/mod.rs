@@ -1,0 +1,16 @@
+//! Offline substrates.
+//!
+//! Only the `xla` crate's vendored dependency closure is reachable in this
+//! environment (no serde, clap, rand, criterion, proptest, tokio), so the
+//! framework owns its own small, well-tested implementations of the
+//! utilities it needs: JSON, CSV, a PCG PRNG, a CLI argument parser,
+//! statistics helpers, a property-testing harness and a thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

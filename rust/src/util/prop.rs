@@ -1,0 +1,82 @@
+//! Mini property-testing harness (offline substitute for proptest).
+//!
+//! `check(name, iters, |rng| ...)` runs a closure over seeded PRNG inputs
+//! and panics with the failing seed on the first violation, so a failure
+//! is reproducible with `check_seed(name, seed, f)`.  No shrinking — the
+//! generators used in this crate produce small cases by construction.
+
+use super::rng::Pcg32;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `iters` random cases of property `f`.  Panics (with the seed) on
+/// the first failing case.
+pub fn check<F: FnMut(&mut Pcg32) -> CaseResult>(name: &str, iters: u64, mut f: F) {
+    for seed in 0..iters {
+        let mut rng = Pcg32::new(seed, 0x9e37_79b9_7f4a_7c15);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single seed (for debugging a reported failure).
+pub fn check_seed<F: FnMut(&mut Pcg32) -> CaseResult>(name: &str, seed: u64, mut f: F) {
+    let mut rng = Pcg32::new(seed, 0x9e37_79b9_7f4a_7c15);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property {name:?} failed at seed {seed}: {msg}");
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert equality helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{a:?} != {b:?}"));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check("trivial", 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn macros_work() {
+        check("macros", 10, |rng| {
+            let v = rng.range_i64(0, 10);
+            prop_assert!(v <= 10, "v was {v}");
+            prop_assert_eq!(v - v, 0);
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Cross-layer integration: for every model artifact and every core
+//! variant, the code-generated program executed on the cycle-approximate
+//! ISS must produce *bit-exact* scores against the rust quantised
+//! reference (`Model::quantized_forward`) — which the pytest suite in
+//! turn pins against the Pallas kernel and the jnp oracle.
+//!
+//! Requires `make artifacts` (skips with a message otherwise).
+
+use printed_bespoke::ml::codegen_rv32::{self, Rv32Variant};
+use printed_bespoke::ml::codegen_tpisa::{self, TpVariant};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::harness;
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::ml::model::Model;
+
+fn load() -> Option<(Manifest, Vec<Model>)> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    let models = man.models.iter().map(|e| Model::load(&e.weights).unwrap()).collect();
+    Some((man, models))
+}
+
+fn samples(man: &Manifest, model: &Model, n: usize) -> Vec<Vec<f32>> {
+    let ds = Dataset::load(man.data_dir(), &model.dataset, "test").unwrap();
+    ds.x.into_iter().take(n).collect()
+}
+
+#[test]
+fn rv32_all_variants_bit_exact() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for model in &models {
+        let xs = samples(&man, model, 12);
+        for variant in [
+            Rv32Variant::Baseline,
+            Rv32Variant::Mac32,
+            Rv32Variant::Simd(16),
+            Rv32Variant::Simd(8),
+            Rv32Variant::Simd(4),
+        ] {
+            let prog = codegen_rv32::generate(model, variant)
+                .unwrap_or_else(|e| panic!("{} {variant:?}: {e}", model.name));
+            let run = harness::run_rv32(model, &prog, &xs)
+                .unwrap_or_else(|e| panic!("{} {variant:?}: {e}", model.name));
+            let p = variant.quant_precision();
+            for (i, x) in xs.iter().enumerate() {
+                let want = model.quantized_forward(x, p).unwrap();
+                assert_eq!(
+                    run.scores[i], want,
+                    "{} {variant:?} sample {i}: ISS {:?} != ref {:?}",
+                    model.name, run.scores[i], want
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tpisa_looped_variants_bit_exact() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for model in &models {
+        let xs = samples(&man, model, 6);
+        for d in [8u32, 16, 32] {
+            let mut variants = vec![TpVariant::Baseline, TpVariant::Mac { precision: d.min(16) }];
+            // One sub-precision SIMD config per width.
+            if d > 4 {
+                variants.push(TpVariant::Mac { precision: d / 2 });
+            }
+            for variant in variants {
+                let p = codegen_tpisa::quant_precision(d, variant);
+                if model.qlayers(p).is_err() {
+                    continue;
+                }
+                let prog = codegen_tpisa::generate(model, d, variant)
+                    .unwrap_or_else(|e| panic!("{} d{d} {variant:?}: {e}", model.name));
+                let run = harness::run_tpisa(model, &prog, &xs)
+                    .unwrap_or_else(|e| panic!("{} d{d} {variant:?}: {e}", model.name));
+                for (i, x) in xs.iter().enumerate() {
+                    let want = model.quantized_forward(x, p).unwrap();
+                    assert_eq!(
+                        run.scores[i], want,
+                        "{} d{d} {variant:?} sample {i}",
+                        model.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tpisa_4bit_unrolled_svm() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for model in models.iter().filter(|m| m.name.starts_with("svm_r")) {
+        let xs = samples(&man, model, 6);
+        for variant in [TpVariant::Baseline, TpVariant::Mac { precision: 4 }] {
+            let prog = codegen_tpisa::generate(model, 4, variant)
+                .unwrap_or_else(|e| panic!("{} d4 {variant:?}: {e}", model.name));
+            let run = harness::run_tpisa(model, &prog, &xs).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                let want = model.quantized_forward(x, 4).unwrap();
+                assert_eq!(run.scores[i], want, "{} d4 {variant:?} sample {i}", model.name);
+            }
+        }
+    }
+    // Multi-layer models must be rejected cleanly on the 4-bit core.
+    if let Some(mlp) = models.iter().find(|m| m.layers.len() > 1) {
+        assert!(codegen_tpisa::generate(mlp, 4, TpVariant::Baseline).is_err());
+    }
+}
+
+#[test]
+fn mac_variants_run_faster() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // Paper Table I ordering: cycles(baseline) > cycles(mac32) >
+    // cycles(p16) > cycles(p8) > cycles(p4); and TP-ISA MAC >> baseline.
+    let model = &models[0];
+    let xs = samples(&man, model, 4);
+    let mut cycles = Vec::new();
+    for variant in [
+        Rv32Variant::Baseline,
+        Rv32Variant::Mac32,
+        Rv32Variant::Simd(16),
+        Rv32Variant::Simd(8),
+        Rv32Variant::Simd(4),
+    ] {
+        let prog = codegen_rv32::generate(model, variant).unwrap();
+        let run = harness::run_rv32(model, &prog, &xs).unwrap();
+        cycles.push((variant, run.cycles_per_sample));
+    }
+    for w in cycles.windows(2) {
+        assert!(
+            w[0].1 > w[1].1,
+            "expected {:?} ({}) slower than {:?} ({})",
+            w[0].0,
+            w[0].1,
+            w[1].0,
+            w[1].1
+        );
+    }
+
+    let base = codegen_tpisa::generate(model, 8, TpVariant::Baseline).unwrap();
+    let mac = codegen_tpisa::generate(model, 8, TpVariant::Mac { precision: 8 }).unwrap();
+    let cb = harness::run_tpisa(model, &base, &xs).unwrap().cycles_per_sample;
+    let cm = harness::run_tpisa(model, &mac, &xs).unwrap().cycles_per_sample;
+    // Table II: "up to 85.1%" execution-time reduction.
+    let reduction = 1.0 - cm / cb;
+    assert!(reduction > 0.6, "TP-ISA MAC reduction only {reduction:.3}");
+}

@@ -1,0 +1,83 @@
+//! Report-level integration: every table/figure emitter runs on the
+//! real artifacts and reproduces the paper's qualitative claims
+//! (the quantitative bands are asserted by the benches).
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+use printed_bespoke::hw::synth::UnitKind;
+
+fn ctx() -> Option<EvalContext> {
+    EvalContext::load(4).ok()
+}
+
+#[test]
+fn fig1_anchors_and_shares() {
+    let Some(ctx) = ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let f = report::fig1(&ctx);
+    assert!((f.zr.area_cm2() - 67.53).abs() < 0.5);
+    assert!((f.zr.power_mw - 291.21).abs() < 2.0);
+    // "almost half": MUL + RF between 40% and 56%.
+    let share = f.zr.area_fraction(&[UnitKind::Mul, UnitKind::RegFile]);
+    assert!((0.40..=0.56).contains(&share), "{share}");
+    // TP-ISA cores are far smaller and clock faster.
+    assert!(f.tp32.area_mm2 < f.zr.area_mm2 / 5.0);
+    assert!(f.tp4.fmax_hz > f.zr.fmax_hz);
+    assert!(f.text.contains("Fig 1a"));
+}
+
+#[test]
+fn table1_zero_accuracy_loss_at_16_bits() {
+    let Some(ctx) = ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let t = report::table1(&ctx).unwrap();
+    // Paper: "Since all the models' parameters are 16-bits ... gaining
+    // in all fronts and sacrificing no accuracy."
+    let p16 = t.rows.iter().find(|r| r.name == "ZR B MAC P16").unwrap();
+    assert!(p16.acc_loss_pct.abs() < 0.5);
+    assert!(p16.area_gain_pct > 0.0 && p16.power_gain_pct > 0.0 && p16.speedup_pct > 0.0);
+}
+
+#[test]
+fn fig5_pareto_includes_8bit_mac_family() {
+    let Some(ctx) = ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let f = report::fig5(&ctx).unwrap();
+    // The d8 MAC family must be competitive (paper picks d8m as the
+    // Table II solution): either on the front or within 10% of a front
+    // point's speedup at comparable area.
+    let d8m = f.points.iter().position(|p| p.label == "d8m").unwrap();
+    let on_front = f.pareto[d8m];
+    let competitive = f
+        .points
+        .iter()
+        .zip(&f.pareto)
+        .filter(|(_, &on)| on)
+        .any(|(p, _)| p.area_mm2 <= f.points[d8m].area_mm2 * 1.2);
+    assert!(on_front || competitive);
+    // Speedup increases "rapidly when using a MAC unit and then slowly
+    // with SIMD" (§IV-B): d8m >> d8, and d8m p4 adds a smaller delta.
+    let get = |l: &str| f.points.iter().find(|p| p.label == l).unwrap().speedup_pct;
+    assert!(get("d8m") > 50.0);
+    assert!((get("d8m p4") - get("d8m")).abs() < 25.0);
+}
+
+#[test]
+fn report_texts_are_complete() {
+    let Some(ctx) = ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(report::fig4(&ctx).text.contains("mlp_c_cardio"));
+    assert!(report::table2(&ctx).unwrap().text.contains("area overhead"));
+    let mem = report::mem(&ctx).unwrap();
+    assert!(mem.text.contains("ROM"));
+    assert_eq!(mem.zr_rom.len(), 6); // baseline + 5 variants
+    assert!(mem.tp_rom.len() >= 12); // the Fig 5 configuration set
+}

@@ -1,0 +1,148 @@
+//! Runtime + coordinator integration over the real artifacts:
+//! * the packed SIMD-MAC unit HLO (pure L1 kernel) vs the rust
+//!   functional model, bit-exact;
+//! * service bulk evaluation reproducing the manifest's python-side
+//!   accuracies exactly;
+//! * streaming path == bulk path on identical inputs;
+//! * metrics and batching behaviour.
+//!
+//! Requires `make artifacts` (skips otherwise).
+
+use printed_bespoke::coordinator::router::Key;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::hw::mac_unit::MacConfig;
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::runtime::pjrt::Runtime;
+use printed_bespoke::sim::mac_model::MacState;
+use printed_bespoke::util::rng::Pcg32;
+
+fn manifest() -> Option<Manifest> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    Manifest::load(&dir).ok()
+}
+
+#[test]
+fn mac_unit_hlo_matches_functional_model() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::cpu().unwrap();
+    let mut rng = Pcg32::seeded(0xbeef);
+    for (&p, (path, words)) in &man.mac_units {
+        let lanes = (32 / p).max(1) as usize;
+        for _ in 0..5 {
+            let wa: Vec<i32> = (0..*words).map(|_| rng.next_u32() as i32).collect();
+            let wb: Vec<i32> = (0..*words).map(|_| rng.next_u32() as i32).collect();
+            let got = rt.run_mac_unit(path, &wa, &wb, lanes).unwrap();
+            // Reference: the rust MAC model executing the same stream.
+            let mut m = MacState::new(MacConfig::new(32, p));
+            for (a, b) in wa.iter().zip(&wb) {
+                m.mac(*a as u32 as u64, *b as u32 as u64);
+            }
+            let want: Vec<i32> = if p == 32 {
+                vec![m.read(0) as i32]
+            } else {
+                (0..lanes).map(|l| m.read(l) as i32).collect()
+            };
+            assert_eq!(got, want, "p{p} packed MAC unit mismatch");
+        }
+    }
+}
+
+#[test]
+fn service_reproduces_manifest_accuracy() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let svc = Service::start(ServiceConfig::default()).unwrap();
+    for entry in svc.manifest.models.clone() {
+        let ds = Dataset::load(svc.manifest.data_dir(), &entry.dataset, "test").unwrap();
+        for (&p, &py_acc) in &entry.quant_accuracy {
+            let r = svc.evaluate(&entry.name, p, &ds.x, &ds.y).unwrap();
+            // The PJRT path runs the very computation the python eval
+            // ran (same HLO numerics) — accuracies must agree exactly
+            // up to the last-digit float formatting of the manifest.
+            assert!(
+                (r.accuracy - py_acc).abs() < 1e-9,
+                "{} p{p}: pjrt {} vs python {}",
+                entry.name,
+                r.accuracy,
+                py_acc
+            );
+        }
+        // Float reference accuracy as well.
+        let key = Key::new(&entry.name, "float");
+        let scores = svc.scores(&key, &ds.x).unwrap();
+        let model = svc.model(&entry.name).unwrap();
+        let preds: Vec<i64> = scores.iter().map(|s| model.predict(s)).collect();
+        let acc = ds.accuracy(&preds);
+        assert!(
+            (acc - entry.float_accuracy).abs() < 1e-9,
+            "{} float: {} vs {}",
+            entry.name,
+            acc,
+            entry.float_accuracy
+        );
+    }
+}
+
+#[test]
+fn streaming_equals_bulk() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let svc = Service::start(ServiceConfig { max_batch: 16, linger_ms: 1 }).unwrap();
+    let model = &svc.models[3];
+    let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test").unwrap();
+    let xs: Vec<Vec<f32>> = ds.x.iter().take(50).cloned().collect();
+    let key = Key::precision(&model.name, 16);
+    let bulk = svc.scores(&key, &xs).unwrap();
+    let pending: Vec<_> = xs.iter().map(|x| svc.submit(key.clone(), x.clone()).unwrap()).collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(got, bulk[i], "sample {i} differs between streaming and bulk");
+    }
+    let m = svc.metrics.lock().unwrap().clone();
+    assert!(m.batches >= 4, "batching should have occurred: {}", m.summary());
+    assert!(m.mean_batch_size() > 1.0, "requests should coalesce: {}", m.summary());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let svc = Service::start(ServiceConfig::default()).unwrap();
+    let model = &svc.models[0];
+    let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test").unwrap();
+    let key = Key::precision(&model.name, 8);
+    let xs: Vec<Vec<f32>> = ds.x.iter().take(8).cloned().collect();
+    for _ in 0..4 {
+        svc.scores(&key, &xs).unwrap();
+    }
+    let m = svc.metrics.lock().unwrap().clone();
+    assert_eq!(m.compiles, 1, "expected a single compile: {}", m.summary());
+    assert_eq!(m.batches, 4);
+}
+
+#[test]
+fn unknown_model_or_variant_errors_cleanly() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let svc = Service::start(ServiceConfig::default()).unwrap();
+    let bad = Key::new("nonexistent_model", "p16");
+    assert!(svc.scores(&bad, &[vec![0.0; 4]]).is_err());
+    let bad_variant = Key::new(&svc.models[0].name.clone(), "p3");
+    assert!(svc.scores(&bad_variant, &[vec![0.0; 21]]).is_err());
+    // The service must still work afterwards.
+    let ds = Dataset::load(svc.manifest.data_dir(), &svc.models[0].dataset, "test").unwrap();
+    let good = Key::precision(&svc.models[0].name, 16);
+    assert!(svc.scores(&good, &ds.x[..4].to_vec()).is_ok());
+}
