@@ -1,0 +1,47 @@
+# Top-level build entry points.  `make build test` is the repository's
+# tier-1 verification and needs nothing beyond a Rust toolchain: the
+# checked-in artifacts-fixture/ stands in for `make artifacts` output.
+
+.PHONY: all build test bench doc fmt fmt-check artifacts fixture python-test clean
+
+all: build
+
+# -- Rust (tier-1) -----------------------------------------------------------
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Paper tables/figures + perf counters (see the bench table in README.md).
+bench:
+	cargo bench
+
+doc:
+	cargo doc --no-deps
+
+fmt:
+	cargo fmt
+
+fmt-check:
+	cargo fmt --check
+
+# -- Artifacts ---------------------------------------------------------------
+
+# Full AOT pipeline (needs JAX): datasets -> trained weights -> HLO text.
+# Writes artifacts/, which takes precedence over the checked-in fixture.
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+# Regenerate the hermetic fixture tree (stdlib Python only, deterministic).
+fixture:
+	python3 tools/gen_fixture.py
+
+# Python-side unit tests for the AOT pipeline (needs JAX + pytest).
+python-test:
+	cd python && python3 -m pytest tests -q
+
+clean:
+	cargo clean
+	rm -rf artifacts

@@ -28,23 +28,37 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-/// Locate the repository's `artifacts/` directory: `$PBSP_ARTIFACTS`, or
-/// walk up from the current directory until one is found.
+/// Locate the artifact tree, in priority order:
+///
+/// 1. `$PBSP_ARTIFACTS` — an explicit override always wins;
+/// 2. a real `artifacts/` directory (the `make artifacts` AOT output),
+///    found by walking up from the current directory;
+/// 3. the checked-in hermetic fixture tree `artifacts-fixture/`
+///    ([`ml::fixtures`]), so `cargo test` passes on a fresh checkout
+///    with no Python setup at all.
 pub fn artifacts_dir() -> anyhow::Result<std::path::PathBuf> {
-    if let Ok(p) = std::env::var("PBSP_ARTIFACTS") {
-        return Ok(std::path::PathBuf::from(p));
+    let env = std::env::var_os("PBSP_ARTIFACTS").map(std::path::PathBuf::from);
+    resolve_artifacts_dir(env, std::env::current_dir()?)
+}
+
+/// Deterministic core of [`artifacts_dir`], split out so override
+/// precedence is testable without mutating the process environment.
+pub(crate) fn resolve_artifacts_dir(
+    env_override: Option<std::path::PathBuf>,
+    start: std::path::PathBuf,
+) -> anyhow::Result<std::path::PathBuf> {
+    if let Some(p) = env_override {
+        return Ok(p);
     }
-    let mut dir = std::env::current_dir()?;
-    loop {
-        let cand = dir.join("artifacts");
-        if cand.join("manifest.json").is_file() {
-            return Ok(cand);
-        }
-        if !dir.pop() {
-            anyhow::bail!(
-                "artifacts/manifest.json not found; run `make artifacts` \
-                 or set PBSP_ARTIFACTS"
-            );
-        }
+    if let Some(real) = ml::fixtures::find_up_from(start.clone(), "artifacts") {
+        return Ok(real);
     }
+    if let Some(fixture) = ml::fixtures::find_up_from(start, ml::fixtures::FIXTURE_DIR_NAME) {
+        return Ok(fixture);
+    }
+    anyhow::bail!(
+        "no artifacts found: run `make artifacts` (full AOT output), set \
+         PBSP_ARTIFACTS, or restore the checked-in artifacts-fixture/ \
+         fallback (regenerate with `python3 tools/gen_fixture.py`)"
+    )
 }

@@ -1,0 +1,212 @@
+//! Hermetic artifact fixtures: a tiny checked-in stand-in for the AOT
+//! artifact tree, so `cargo test` exercises the full manifest → model →
+//! codegen → service path with zero external setup.
+//!
+//! The real pipeline (`make artifacts`) needs JAX to train the six
+//! evaluation models and lower them to HLO text; CI and fresh checkouts
+//! have neither.  The repository therefore ships `artifacts-fixture/`:
+//! the same `manifest.json` schema and directory layout as the AOT
+//! output, with miniature versions of the six paper models and *stub*
+//! HLO files — small JSON descriptors (see [`StubHlo`]) that the default
+//! `runtime::pjrt` backend interprets against the in-crate references
+//! (`Model::quantized_forward` / `Model::float_forward`, and the
+//! `sim::mac_model` functional MAC model).  The fixture's recorded
+//! accuracies are computed by a bit-exact replica of the rust
+//! fixed-point contract, so the service-vs-manifest equality tests hold
+//! on the fixture exactly as they do on real artifacts.
+//!
+//! Regenerate with `python3 tools/gen_fixture.py` (deterministic).
+//!
+//! Resolution order lives in [`crate::artifacts_dir`]: an explicit
+//! `$PBSP_ARTIFACTS` wins, then a real `artifacts/` tree found by
+//! walking up from the current directory, then this fixture.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Directory name of the checked-in fixture tree (repository root).
+pub const FIXTURE_DIR_NAME: &str = "artifacts-fixture";
+
+/// Walk up from `start` looking for a `<dir_name>/manifest.json` tree;
+/// the shared ancestor walk behind [`crate::artifacts_dir`] (used for
+/// both the real `artifacts/` tree and this fixture).
+pub fn find_up_from(start: PathBuf, dir_name: &str) -> Option<PathBuf> {
+    let mut dir = start;
+    loop {
+        let cand = dir.join(dir_name);
+        if cand.join("manifest.json").is_file() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+/// Walk up from the current directory looking for the checked-in
+/// fixture tree; `None` when no `artifacts-fixture/manifest.json` is
+/// reachable.
+pub fn find_fixture_dir() -> Option<PathBuf> {
+    find_up_from(std::env::current_dir().ok()?, FIXTURE_DIR_NAME)
+}
+
+/// Does this manifest point at stub artifacts (interpretable by the
+/// default runtime backend) rather than real HLO text?  Service-level
+/// tests use this to skip cleanly when real AOT output is present but
+/// the crate was built without `--features xla`.
+pub fn manifest_is_stub(man: &crate::ml::manifest::Manifest) -> bool {
+    man.models
+        .first()
+        .and_then(|e| e.hlo.values().next())
+        .map(|p| StubHlo::from_file(p).is_ok())
+        .unwrap_or(false)
+}
+
+/// A parsed stub-HLO descriptor.
+///
+/// Stub artifacts are JSON objects carrying a `"pbsp_hlo_stub": 1`
+/// marker; anything else under `hlo/` is treated as real HLO text and
+/// requires the `xla` backend.  Two kinds exist:
+///
+/// ```text
+/// {"pbsp_hlo_stub": 1, "kind": "model",
+///  "weights": "../weights/<name>.json", "variant": "float" | "p<N>"}
+/// {"pbsp_hlo_stub": 1, "kind": "mac_unit",
+///  "datapath": 32, "precision": 8, "words": 64}
+/// ```
+///
+/// Relative `weights` paths resolve against the stub file's directory.
+#[derive(Debug, Clone)]
+pub enum StubHlo {
+    /// A model executable: evaluate `weights` at `variant` ("float" or
+    /// "p32"/"p16"/"p8"/"p4").
+    Model { weights: PathBuf, variant: String },
+    /// A packed SIMD-MAC unit (two `s32[words]` operand streams in,
+    /// `s32[lanes]` accumulators out).
+    MacUnit { datapath: u32, precision: u32, words: usize },
+}
+
+impl StubHlo {
+    /// Cheap sniff: does this text look like a stub descriptor?
+    pub fn is_stub_text(text: &str) -> bool {
+        text.trim_start().starts_with('{') && text.contains("\"pbsp_hlo_stub\"")
+    }
+
+    /// Parse a stub artifact file; errors on real HLO text with a
+    /// pointer at the `xla` feature.
+    pub fn from_file(path: &Path) -> Result<StubHlo> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if !Self::is_stub_text(&text) {
+            bail!(
+                "{} is not a PBSP stub artifact; executing real HLO text \
+                 requires the `xla` cargo feature (see runtime::pjrt)",
+                path.display()
+            );
+        }
+        let v = Value::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        let base = path.parent().unwrap_or_else(|| Path::new("."));
+        match v.get("kind")?.as_str()? {
+            "model" => Ok(StubHlo::Model {
+                weights: base.join(v.get("weights")?.as_str()?),
+                variant: v.get("variant")?.as_str()?.to_string(),
+            }),
+            "mac_unit" => Ok(StubHlo::MacUnit {
+                datapath: v.get("datapath")?.as_usize()? as u32,
+                precision: v.get("precision")?.as_usize()? as u32,
+                words: v.get("words")?.as_usize()?,
+            }),
+            k => bail!("unknown stub kind {k:?} in {}", path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::manifest::Manifest;
+    use crate::ml::model::Model;
+
+    #[test]
+    fn fixture_manifest_round_trips() {
+        let dir = find_fixture_dir().expect("checked-in artifacts-fixture/ missing");
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.models.len(), 6, "the six paper models");
+        assert_eq!(man.precisions, vec![32, 16, 8, 4]);
+        assert_eq!(man.mac_units.len(), 4);
+        let entry = man.model("mlp_c_cardio").unwrap();
+        assert!(entry.hlo.contains_key("float") && entry.hlo.contains_key("p16"));
+        // Weights load and expose every manifest precision.
+        let model = Model::load(&entry.weights).unwrap();
+        for &p in &man.precisions {
+            assert!(model.qlayers(p).is_ok(), "p{p} variant missing");
+        }
+        // Datasets load with matching feature counts and sizes.
+        for e in &man.models {
+            let ds =
+                crate::ml::dataset::Dataset::load(man.data_dir(), &e.dataset, "test").unwrap();
+            assert_eq!(ds.n_features(), e.arch[0], "{}", e.name);
+            assert_eq!(ds.len(), e.n_test, "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn fixture_stub_files_parse() {
+        let dir = find_fixture_dir().expect("checked-in artifacts-fixture/ missing");
+        let man = Manifest::load(&dir).unwrap();
+        for e in &man.models {
+            for (variant, path) in &e.hlo {
+                match StubHlo::from_file(path).unwrap() {
+                    StubHlo::Model { weights, variant: v } => {
+                        assert_eq!(&v, variant);
+                        assert!(weights.is_file(), "{} missing", weights.display());
+                    }
+                    other => panic!("{variant}: expected a model stub, got {other:?}"),
+                }
+            }
+        }
+        for (&p, (path, man_words)) in &man.mac_units {
+            match StubHlo::from_file(path).unwrap() {
+                StubHlo::MacUnit { datapath, precision, words } => {
+                    assert_eq!(datapath, 32);
+                    assert_eq!(precision, p);
+                    assert_eq!(words, *man_words);
+                }
+                other => panic!("p{p}: expected a mac_unit stub, got {other:?}"),
+            }
+        }
+        assert!(manifest_is_stub(&man));
+    }
+
+    #[test]
+    fn real_hlo_text_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("pbsp-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("real.hlo.txt");
+        std::fs::write(&path, "HloModule jit_forward\n\nENTRY main { ... }\n").unwrap();
+        let err = StubHlo::from_file(&path).unwrap_err().to_string();
+        assert!(err.contains("xla"), "error should point at the xla feature: {err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn artifacts_dir_env_override_beats_walking() {
+        // Exercises resolve_artifacts_dir (the deterministic core of
+        // artifacts_dir) directly: mutating $PBSP_ARTIFACTS in-process
+        // would race other test threads' getenv calls.
+        let cwd = std::env::current_dir().unwrap();
+        // Walking alone finds a tree (the checked-in fixture at minimum,
+        // or a real artifacts/ when one was built)...
+        let walked = crate::resolve_artifacts_dir(None, cwd.clone()).unwrap();
+        assert!(walked.ends_with("artifacts") || walked.ends_with(FIXTURE_DIR_NAME));
+        // ...but an explicit override short-circuits the walk entirely,
+        // without even requiring the directory to exist (mirroring the
+        // $PBSP_ARTIFACTS contract).
+        let over = PathBuf::from("/nonexistent/pbsp-override/artifacts");
+        let got = crate::resolve_artifacts_dir(Some(over.clone()), cwd).unwrap();
+        assert_eq!(got, over);
+    }
+}

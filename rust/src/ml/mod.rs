@@ -1,11 +1,13 @@
 //! ML model handling on the rust side: weights/manifest loading, the
 //! fixed-point contract (mirroring `python/compile/quant.py`), dataset
-//! loading, code generation for both cores, the ISS execution harness,
-//! and the §III-A profiling suite.
+//! loading, hermetic artifact fixtures ([`fixtures`]), code generation
+//! for both cores, the ISS execution harness, and the §III-A profiling
+//! suite.
 
 pub mod codegen_rv32;
 pub mod codegen_tpisa;
 pub mod dataset;
+pub mod fixtures;
 pub mod harness;
 pub mod manifest;
 pub mod microbench;

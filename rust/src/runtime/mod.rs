@@ -1,9 +1,13 @@
-//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute
-//! them on the CPU PJRT client from the L3 hot path (no Python).
+//! Model-executable runtime: load the AOT artifacts and execute them on
+//! the L3 hot path (no Python).
 //!
-//! Interchange is HLO *text*: jax >= 0.5 serialises protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and
+//! [`pjrt`] exposes one API with two backends: the default hermetic
+//! stub interpreter (drives the in-crate reference implementations from
+//! the checked-in `artifacts-fixture/` stub descriptors), and the real
+//! PJRT executor over HLO-text artifacts behind `--features xla`.
+//! Interchange with the AOT pipeline is HLO *text*: jax >= 0.5
+//! serialises protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
 //! `python/compile/aot.py`).
 
 pub mod pjrt;

@@ -1,132 +1,412 @@
-//! The PJRT executor: one CPU client, a compile cache keyed by artifact
-//! path, fixed-batch execution with padding.
+//! The model-executable runtime behind the coordinator: load the
+//! `artifacts/` executables and run them from the L3 hot path (no
+//! Python).  Two interchangeable backends expose the identical API
+//! (`Runtime`, `Compiled`):
 //!
-//! PJRT handles are not `Send`, so the [`Runtime`] is constructed and
-//! used on a single thread — the coordinator owns one runtime per
-//! worker thread (see `coordinator::service`).
+//! * **Stub interpreter** (default — hermetic, no external crates):
+//!   artifacts are JSON stub descriptors (`ml::fixtures::StubHlo`, the
+//!   checked-in `artifacts-fixture/` tree), and execution delegates to
+//!   the in-crate references — `Model::quantized_forward` /
+//!   `Model::float_forward` for model executables and the
+//!   `sim::mac_model` functional model for the packed MAC unit.  The
+//!   fixed-batch contract is preserved: every chunk pays the cost of the
+//!   full zero-padded batch, exactly like a compiled executable, so the
+//!   coordinator's batching trade-offs stay measurable.
+//!
+//! * **PJRT** (`--features xla`, plus the vendored `xla` path
+//!   dependency — see `rust/Cargo.toml`): parses the HLO *text*
+//!   artifacts the JAX AOT pipeline wrote and runs them on the CPU PJRT
+//!   client.  Interchange is HLO text because jax >= 0.5 serialises
+//!   protos with 64-bit instruction ids that xla_extension 0.5.1
+//!   rejects; the text parser reassigns ids (see
+//!   `python/compile/aot.py`).
+//!
+//! In the PJRT backend the handles are not `Send`, so a `Runtime` is
+//! constructed and used on a single thread; the stub backend keeps the
+//! same single-thread discipline (the coordinator owns one runtime per
+//! worker thread — see `coordinator::service`).
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(not(feature = "xla"))]
+pub use stub_backend::{Compiled, Runtime};
 
-use anyhow::{ensure, Context, Result};
+#[cfg(feature = "xla")]
+pub use xla_backend::{Compiled, Runtime};
 
-/// One compiled model executable with its I/O contract.
-pub struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    /// Fixed batch dimension the HLO was lowered at.
-    pub batch: usize,
-    pub in_dim: usize,
-    pub out_dim: usize,
+// ---------------------------------------------------------------------------
+// Default backend: hermetic stub interpreter
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "xla"))]
+mod stub_backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::rc::Rc;
+
+    use anyhow::{bail, ensure, Context, Result};
+
+    use crate::hw::mac_unit::MacConfig;
+    use crate::ml::fixtures::StubHlo;
+    use crate::ml::model::Model;
+    use crate::sim::mac_model::MacState;
+
+    /// What a stub model executable computes per sample.
+    enum Program {
+        /// f64 reference forward (the "float" variant).
+        Float(Model),
+        /// Quantised reference forward at a precision.
+        Quant(Model, u32),
+    }
+
+    /// One loaded model executable with its I/O contract (stub backend).
+    pub struct Compiled {
+        program: Program,
+        /// Fixed batch dimension the artifact was lowered at.
+        pub batch: usize,
+        pub in_dim: usize,
+        pub out_dim: usize,
+    }
+
+    impl Compiled {
+        /// Execute on up to `batch` samples.  Mirrors the fixed-batch
+        /// executable semantics: the whole zero-padded batch is
+        /// evaluated (padding rows discarded), so per-flush cost is flat
+        /// in the chunk size — the property the dynamic batcher trades
+        /// against.
+        pub fn run_chunk(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+            ensure!(xs.len() <= self.batch, "chunk {} exceeds batch {}", xs.len(), self.batch);
+            let zero = vec![0.0f32; self.in_dim];
+            let mut out = Vec::with_capacity(xs.len());
+            for i in 0..self.batch {
+                let x = xs.get(i).unwrap_or(&zero);
+                ensure!(x.len() == self.in_dim, "sample dim {} != {}", x.len(), self.in_dim);
+                let scores = match &self.program {
+                    Program::Float(m) => m.float_forward(x),
+                    Program::Quant(m, p) => m.quantized_forward(x, *p)?,
+                };
+                ensure!(
+                    scores.len() == self.out_dim,
+                    "output dim {} != {}",
+                    scores.len(),
+                    self.out_dim
+                );
+                if i < xs.len() {
+                    out.push(scores);
+                }
+            }
+            Ok(out)
+        }
+
+        /// Execute over an arbitrary number of samples, chunking
+        /// internally.
+        pub fn run(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+            let mut out = Vec::with_capacity(xs.len());
+            for chunk in xs.chunks(self.batch) {
+                out.extend(self.run_chunk(chunk)?);
+            }
+            Ok(out)
+        }
+    }
+
+    /// A single-threaded stub runtime with a load cache (mirroring the
+    /// PJRT compile cache so `coordinator::metrics` compile counting
+    /// behaves identically).
+    pub struct Runtime {
+        cache: HashMap<PathBuf, Rc<Compiled>>,
+    }
+
+    impl Runtime {
+        /// Construct the runtime ("cpu" naming kept for API parity with
+        /// the PJRT backend).
+        pub fn cpu() -> Result<Runtime> {
+            Ok(Runtime { cache: HashMap::new() })
+        }
+
+        pub fn platform(&self) -> String {
+            "pbsp-stub-interpreter".to_string()
+        }
+
+        /// `true`: this build interprets stub descriptors only; real HLO
+        /// text needs `--features xla`.  Service-level tests use this to
+        /// skip when pointed at real AOT artifacts.
+        pub fn is_stub() -> bool {
+            true
+        }
+
+        /// Load a stub model artifact (cached by path).
+        pub fn load(
+            &mut self,
+            path: impl AsRef<Path>,
+            batch: usize,
+            in_dim: usize,
+            out_dim: usize,
+        ) -> Result<Rc<Compiled>> {
+            let path = path.as_ref().to_path_buf();
+            if let Some(c) = self.cache.get(&path) {
+                return Ok(c.clone());
+            }
+            let StubHlo::Model { weights, variant } = StubHlo::from_file(&path)? else {
+                bail!("{}: expected a model artifact, found a MAC unit", path.display());
+            };
+            let model = Model::load(&weights)
+                .with_context(|| format!("loading stub weights {}", weights.display()))?;
+            let program = if variant == "float" {
+                Program::Float(model)
+            } else if let Some(p) = variant.strip_prefix('p') {
+                let p: u32 =
+                    p.parse().with_context(|| format!("stub variant {variant:?}"))?;
+                model.qlayers(p)?; // fail fast on a missing quantised variant
+                Program::Quant(model, p)
+            } else {
+                bail!("{}: unknown stub variant {variant:?}", path.display());
+            };
+            let compiled = Rc::new(Compiled { program, batch, in_dim, out_dim });
+            self.cache.insert(path, compiled.clone());
+            Ok(compiled)
+        }
+
+        pub fn cached_count(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Run a packed SIMD-MAC unit artifact (two `s32[words]` inputs
+        /// -> `s32[lanes]` accumulators) via the functional model — the
+        /// same contract as the Pallas-kernel HLO the real backend
+        /// executes.
+        pub fn run_mac_unit(
+            &mut self,
+            path: impl AsRef<Path>,
+            wa: &[i32],
+            wb: &[i32],
+            lanes: usize,
+        ) -> Result<Vec<i32>> {
+            ensure!(wa.len() == wb.len(), "operand streams differ in length");
+            let path = path.as_ref();
+            let StubHlo::MacUnit { datapath, precision, words } = StubHlo::from_file(path)?
+            else {
+                bail!("{}: expected a mac_unit artifact", path.display());
+            };
+            // The real backend's compiled s32[words] parameter shape
+            // rejects mismatched streams; enforce the same contract here.
+            ensure!(wa.len() == words, "operand stream length {} != words {words}", wa.len());
+            let mut m = MacState::new(MacConfig::new(datapath, precision));
+            for (a, b) in wa.iter().zip(wb) {
+                m.mac(*a as u32 as u64, *b as u32 as u64);
+            }
+            let out: Vec<i32> = if precision >= 32 {
+                vec![m.read(0) as i32]
+            } else {
+                (0..m.lanes()).map(|l| m.read(l) as i32).collect()
+            };
+            ensure!(out.len() == lanes, "lane count {} != {lanes}", out.len());
+            Ok(out)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::ml::dataset::Dataset;
+        use crate::ml::manifest::Manifest;
+
+        #[test]
+        fn stub_scores_match_reference() {
+            let dir = crate::ml::fixtures::find_fixture_dir()
+                .expect("checked-in artifacts-fixture/ missing");
+            let man = Manifest::load(&dir).unwrap();
+            let entry = man.model("mlp_c_cardio").unwrap();
+            let model = Model::load(&entry.weights).unwrap();
+            let ds = Dataset::load(man.data_dir(), &entry.dataset, "test").unwrap();
+            let xs: Vec<Vec<f32>> = ds.x.iter().take(5).cloned().collect();
+            let mut rt = Runtime::cpu().unwrap();
+
+            let exe = rt
+                .load(&entry.hlo["p16"], man.batch, entry.arch[0], model.n_outputs())
+                .unwrap();
+            let scores = exe.run(&xs).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                assert_eq!(scores[i], model.quantized_forward(x, 16).unwrap(), "sample {i}");
+            }
+
+            let exe = rt
+                .load(&entry.hlo["float"], man.batch, entry.arch[0], model.n_outputs())
+                .unwrap();
+            let scores = exe.run(&xs).unwrap();
+            for (i, x) in xs.iter().enumerate() {
+                assert_eq!(scores[i], model.float_forward(x), "sample {i}");
+            }
+        }
+
+        #[test]
+        fn load_cache_hits_by_path() {
+            let dir = crate::ml::fixtures::find_fixture_dir()
+                .expect("checked-in artifacts-fixture/ missing");
+            let man = Manifest::load(&dir).unwrap();
+            let entry = man.model("svm_c_cardio").unwrap();
+            let mut rt = Runtime::cpu().unwrap();
+            rt.load(&entry.hlo["p8"], man.batch, entry.arch[0], 3).unwrap();
+            rt.load(&entry.hlo["p8"], man.batch, entry.arch[0], 3).unwrap();
+            assert_eq!(rt.cached_count(), 1);
+            rt.load(&entry.hlo["p4"], man.batch, entry.arch[0], 3).unwrap();
+            assert_eq!(rt.cached_count(), 2);
+        }
+
+        #[test]
+        fn mac_unit_stub_matches_functional_model() {
+            let dir = crate::ml::fixtures::find_fixture_dir()
+                .expect("checked-in artifacts-fixture/ missing");
+            let man = Manifest::load(&dir).unwrap();
+            let mut rt = Runtime::cpu().unwrap();
+            let (path, words) = &man.mac_units[&8];
+            let wa: Vec<i32> = (0..*words as i32).map(|i| i.wrapping_mul(0x1234_567)).collect();
+            let wb: Vec<i32> = (0..*words as i32).map(|i| i.wrapping_mul(-0x76_5432)).collect();
+            let got = rt.run_mac_unit(path, &wa, &wb, 4).unwrap();
+            let mut m = MacState::new(MacConfig::new(32, 8));
+            for (a, b) in wa.iter().zip(&wb) {
+                m.mac(*a as u32 as u64, *b as u32 as u64);
+            }
+            let want: Vec<i32> = (0..4).map(|l| m.read(l) as i32).collect();
+            assert_eq!(got, want);
+        }
+    }
 }
 
-impl Compiled {
-    /// Execute on up to `batch` samples (the chunk is zero-padded to the
-    /// fixed batch).  Returns one score vector per input sample.
-    pub fn run_chunk(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
-        ensure!(xs.len() <= self.batch, "chunk {} exceeds batch {}", xs.len(), self.batch);
-        let mut flat = vec![0.0f32; self.batch * self.in_dim];
-        for (i, x) in xs.iter().enumerate() {
-            ensure!(x.len() == self.in_dim, "sample dim {} != {}", x.len(), self.in_dim);
-            flat[i * self.in_dim..(i + 1) * self.in_dim].copy_from_slice(x);
+// ---------------------------------------------------------------------------
+// Real backend: PJRT over the vendored `xla` crate
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+mod xla_backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{ensure, Context, Result};
+
+    /// One compiled model executable with its I/O contract.
+    pub struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        /// Fixed batch dimension the HLO was lowered at.
+        pub batch: usize,
+        pub in_dim: usize,
+        pub out_dim: usize,
+    }
+
+    impl Compiled {
+        /// Execute on up to `batch` samples (the chunk is zero-padded to
+        /// the fixed batch).  Returns one score vector per input sample.
+        pub fn run_chunk(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+            ensure!(xs.len() <= self.batch, "chunk {} exceeds batch {}", xs.len(), self.batch);
+            let mut flat = vec![0.0f32; self.batch * self.in_dim];
+            for (i, x) in xs.iter().enumerate() {
+                ensure!(x.len() == self.in_dim, "sample dim {} != {}", x.len(), self.in_dim);
+                flat[i * self.in_dim..(i + 1) * self.in_dim].copy_from_slice(x);
+            }
+            let lit =
+                xla::Literal::vec1(&flat).reshape(&[self.batch as i64, self.in_dim as i64])?;
+            let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            let values = out.to_vec::<f32>()?;
+            ensure!(
+                values.len() == self.batch * self.out_dim,
+                "output size {} != {}x{}",
+                values.len(),
+                self.batch,
+                self.out_dim
+            );
+            Ok(xs
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    values[i * self.out_dim..(i + 1) * self.out_dim]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect()
+                })
+                .collect())
         }
-        let lit = xla::Literal::vec1(&flat).reshape(&[self.batch as i64, self.in_dim as i64])?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let values = out.to_vec::<f32>()?;
-        ensure!(
-            values.len() == self.batch * self.out_dim,
-            "output size {} != {}x{}",
-            values.len(),
-            self.batch,
-            self.out_dim
-        );
-        Ok(xs
-            .iter()
-            .enumerate()
-            .map(|(i, _)| {
-                values[i * self.out_dim..(i + 1) * self.out_dim]
-                    .iter()
-                    .map(|&v| v as f64)
-                    .collect()
-            })
-            .collect())
-    }
 
-    /// Execute over an arbitrary number of samples, chunking internally.
-    pub fn run(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
-        let mut out = Vec::with_capacity(xs.len());
-        for chunk in xs.chunks(self.batch) {
-            out.extend(self.run_chunk(chunk)?);
+        /// Execute over an arbitrary number of samples, chunking
+        /// internally.
+        pub fn run(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f64>>> {
+            let mut out = Vec::with_capacity(xs.len());
+            for chunk in xs.chunks(self.batch) {
+                out.extend(self.run_chunk(chunk)?);
+            }
+            Ok(out)
         }
-        Ok(out)
-    }
-}
-
-/// A single-threaded PJRT runtime with a compile cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: HashMap<PathBuf, std::rc::Rc<Compiled>>,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        Ok(Runtime { client, cache: HashMap::new() })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A single-threaded PJRT runtime with a compile cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        cache: HashMap<PathBuf, std::rc::Rc<Compiled>>,
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
-    pub fn load(
-        &mut self,
-        path: impl AsRef<Path>,
-        batch: usize,
-        in_dim: usize,
-        out_dim: usize,
-    ) -> Result<std::rc::Rc<Compiled>> {
-        let path = path.as_ref().to_path_buf();
-        if let Some(c) = self.cache.get(&path) {
-            return Ok(c.clone());
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            Ok(Runtime { client, cache: HashMap::new() })
         }
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let compiled = std::rc::Rc::new(Compiled { exe, batch, in_dim, out_dim });
-        self.cache.insert(path, compiled.clone());
-        Ok(compiled)
-    }
 
-    pub fn cached_count(&self) -> usize {
-        self.cache.len()
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Load + run a packed SIMD-MAC unit artifact (two s32[words] inputs
-    /// -> s32[lanes] accumulators) — used by the runtime unit tests to
-    /// validate numerics against `sim::mac_model`.
-    pub fn run_mac_unit(
-        &mut self,
-        path: impl AsRef<Path>,
-        wa: &[i32],
-        wb: &[i32],
-        lanes: usize,
-    ) -> Result<Vec<i32>> {
-        let path = path.as_ref().to_path_buf();
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let la = xla::Literal::vec1(wa);
-        let lb = xla::Literal::vec1(wb);
-        let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        let v = out.to_vec::<i32>()?;
-        ensure!(v.len() == lanes, "lane count {} != {lanes}", v.len());
-        Ok(v)
+        /// `false`: this build executes real HLO-text artifacts.
+        pub fn is_stub() -> bool {
+            false
+        }
+
+        /// Load + compile an HLO-text artifact (cached by path).
+        pub fn load(
+            &mut self,
+            path: impl AsRef<Path>,
+            batch: usize,
+            in_dim: usize,
+            out_dim: usize,
+        ) -> Result<std::rc::Rc<Compiled>> {
+            let path = path.as_ref().to_path_buf();
+            if let Some(c) = self.cache.get(&path) {
+                return Ok(c.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            let compiled = std::rc::Rc::new(Compiled { exe, batch, in_dim, out_dim });
+            self.cache.insert(path, compiled.clone());
+            Ok(compiled)
+        }
+
+        pub fn cached_count(&self) -> usize {
+            self.cache.len()
+        }
+
+        /// Load + run a packed SIMD-MAC unit artifact (two `s32[words]`
+        /// inputs -> `s32[lanes]` accumulators) — used by the runtime
+        /// integration tests to validate numerics against
+        /// `sim::mac_model`.
+        pub fn run_mac_unit(
+            &mut self,
+            path: impl AsRef<Path>,
+            wa: &[i32],
+            wb: &[i32],
+            lanes: usize,
+        ) -> Result<Vec<i32>> {
+            let path = path.as_ref().to_path_buf();
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let la = xla::Literal::vec1(wa);
+            let lb = xla::Literal::vec1(wb);
+            let result = exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let v = out.to_vec::<i32>()?;
+            ensure!(v.len() == lanes, "lane count {} != {lanes}", v.len());
+            Ok(v)
+        }
     }
 }

@@ -4,7 +4,9 @@
 //! reference (`Model::quantized_forward`) — which the pytest suite in
 //! turn pins against the Pallas kernel and the jnp oracle.
 //!
-//! Requires `make artifacts` (skips with a message otherwise).
+//! Runs against `make artifacts` output when present, else the
+//! checked-in `artifacts-fixture/` (so a fresh checkout exercises the
+//! whole path); skips only if both are missing.
 
 use printed_bespoke::ml::codegen_rv32::{self, Rv32Variant};
 use printed_bespoke::ml::codegen_tpisa::{self, TpVariant};

@@ -1,6 +1,7 @@
 //! Report-level integration: every table/figure emitter runs on the
-//! real artifacts and reproduces the paper's qualitative claims
-//! (the quantitative bands are asserted by the benches).
+//! artifact tree (`make artifacts` output, or the checked-in
+//! `artifacts-fixture/` fallback) and reproduces the paper's qualitative
+//! claims (the quantitative bands are asserted by the benches).
 
 use printed_bespoke::dse::context::EvalContext;
 use printed_bespoke::dse::report;

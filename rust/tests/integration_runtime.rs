@@ -6,7 +6,12 @@
 //! * streaming path == bulk path on identical inputs;
 //! * metrics and batching behaviour.
 //!
-//! Requires `make artifacts` (skips otherwise).
+//! Runs against `make artifacts` output when present, else the
+//! checked-in `artifacts-fixture/` (the default stub runtime backend
+//! interprets its stub executables — see `runtime::pjrt`).  Skips when
+//! no tree is found, or when real HLO artifacts are present but the
+//! crate was built without `--features xla` (the stub backend cannot
+//! execute HLO text).
 
 use printed_bespoke::coordinator::router::Key;
 use printed_bespoke::coordinator::service::{Service, ServiceConfig};
@@ -19,7 +24,19 @@ use printed_bespoke::util::rng::Pcg32;
 
 fn manifest() -> Option<Manifest> {
     let dir = printed_bespoke::artifacts_dir().ok()?;
-    Manifest::load(&dir).ok()
+    let man = Manifest::load(&dir).ok()?;
+    // Backend/tree mismatch in either direction skips cleanly: the stub
+    // backend cannot execute real HLO text, and the xla backend cannot
+    // execute the fixture's JSON stub descriptors.
+    if Runtime::is_stub() != printed_bespoke::ml::fixtures::manifest_is_stub(&man) {
+        eprintln!(
+            "skipping: artifact tree does not match the compiled runtime backend \
+             (stub backend: {}; real HLO artifacts need --features xla)",
+            Runtime::is_stub()
+        );
+        return None;
+    }
+    Some(man)
 }
 
 #[test]

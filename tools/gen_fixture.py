@@ -1,0 +1,526 @@
+#!/usr/bin/env python3
+"""Generate the hermetic `artifacts-fixture/` tree.
+
+The fixture is a tiny, fully self-contained stand-in for the real AOT
+artifact tree (`make artifacts`, which needs JAX + the Pallas toolchain):
+the same manifest schema, the same six model names as the paper's
+evaluation (mlp_c/mlp_r/svm_c/svm_r over cardio/redwine/whitewine), but
+with miniature shapes and *stub* HLO files that the rust crate's default
+(no-`xla`) runtime backend interprets directly.
+
+Exactness contract
+------------------
+`rust/tests/integration_runtime.rs` asserts that the service reproduces
+the manifest's recorded accuracies to 1e-9, and the stub backend computes
+scores with `Model::quantized_forward` / `Model::float_forward`.  This
+script therefore replicates those two functions *bit-exactly*:
+
+* all dataset values live on a 1/256 grid (exactly representable in both
+  f32 and f64, so the CSV -> f32 -> f64 round trip in rust is lossless);
+* all weights live on a 1/64 grid (rust reads them as f64 directly);
+* `quantize` is round-half-up in f64 (`floor(v * 2^f + 0.5)`), `rescale`
+  is an arithmetic right shift with saturation (Python's `>>` on ints is
+  the same floor semantics as rust's `>>` on i64);
+* the float forward pass uses the identical operation order, so IEEE f64
+  rounding is identical even where results are not exact dyadics.
+
+Test sets are filtered so that p32/p16 predictions equal the float
+predictions for every model sharing the dataset (the paper: "no loss at
+32/16 bits"); p8 and p4 are left unfiltered so the precision-loss curves
+emerge naturally (p4 saturates hard, wines worst — as in the paper).
+
+Run from the repo root:  python3 tools/gen_fixture.py
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import random
+import struct
+import sys
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "artifacts-fixture")
+
+BATCH = 256
+PRECISIONS = [32, 16, 8, 4]
+MAC_UNIT_WORDS = 64
+
+# Fixed-point formats per precision: (fx of the input/hidden chain, fw).
+# Mirrors the shape of python/compile/quant.py's derived formats.
+FORMATS = {32: (12, 8), 16: (8, 6), 8: (6, 5), 4: (2, 2)}
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact replicas of rust/src/ml/{quant,model}.rs
+# ---------------------------------------------------------------------------
+
+def f32_exact(v: float) -> float:
+    """Assert v survives the f64 -> f32 -> f64 round trip unchanged."""
+    r = struct.unpack("f", struct.pack("f", v))[0]
+    assert r == v, f"{v} is not exactly representable in f32"
+    return v
+
+
+def quantize(v: float, f: int, n: int) -> int:
+    qmin, qmax = -(1 << (n - 1)), (1 << (n - 1)) - 1
+    q = math.floor(v * float(1 << f) + 0.5)
+    if q < qmin:
+        return qmin
+    if q > qmax:
+        return qmax
+    return int(q)
+
+
+def rescale(acc: int, shift: int, n: int) -> int:
+    v = (acc + (1 << (shift - 1))) >> shift if shift > 0 else acc
+    qmin, qmax = -(1 << (n - 1)), (1 << (n - 1)) - 1
+    return max(qmin, min(qmax, v))
+
+
+class Layer:
+    def __init__(self, w, b, relu):
+        self.w = w  # [K][N]
+        self.b = b  # [N]
+        self.relu = relu
+
+
+class Model:
+    def __init__(self, name, dataset, task, head, layers, n_classes, label_offset, ovo_pairs):
+        self.name = name
+        self.dataset = dataset
+        self.task = task
+        self.head = head
+        self.layers = layers
+        self.n_classes = n_classes
+        self.label_offset = label_offset
+        self.ovo_pairs = ovo_pairs
+        self.quantized = {}  # p -> [qlayer dict]
+        self.float_accuracy = 0.0
+
+    @property
+    def arch(self):
+        return [len(self.layers[0].w)] + [len(l.b) for l in self.layers]
+
+    def derive_quantized(self):
+        for p in PRECISIONS:
+            fx0, fw = FORMATS[p]
+            qls = []
+            fx = fx0
+            for i, layer in enumerate(self.layers):
+                last = i == len(self.layers) - 1
+                fy = 0 if last else fx0
+                shift = fx + fw - fy
+                qw = [[quantize(v, fw, p) for v in row] for row in layer.w]
+                qb = [quantize(v, fx + fw, 32) for v in layer.b]
+                qls.append({"fx": fx, "fw": fw, "fy": fy, "shift": shift, "qw": qw, "qb": qb})
+                fx = fy
+            self.quantized[p] = qls
+
+    # -- forward passes (replicas) ----------------------------------------
+
+    def head_scores(self, raw):
+        if self.head in ("argmax", "round"):
+            return list(raw)
+        votes = [0.0] * self.n_classes
+        for p_idx, (i, j) in enumerate(self.ovo_pairs):
+            if raw[p_idx] >= 0.0:
+                votes[i] += 1.0
+            else:
+                votes[j] += 1.0
+        return votes
+
+    def predict(self, scores):
+        if self.head == "round":
+            v = math.floor(scores[0] + 0.5)
+            lo = self.label_offset
+            hi = self.label_offset + self.n_classes - 1
+            return max(lo, min(hi, v))
+        best = 0
+        for i in range(len(scores)):
+            if scores[i] > scores[best]:
+                best = i
+        return best + self.label_offset
+
+    def float_forward(self, x):
+        h = list(x)
+        for layer in self.layers:
+            k, n = len(layer.w), len(layer.b)
+            nxt = [0.0] * n
+            for j in range(n):
+                acc = layer.b[j]
+                for kk in range(k):
+                    acc = acc + h[kk] * layer.w[kk][j]
+                nxt[j] = acc if not layer.relu or acc > 0.0 else max(acc, 0.0)
+            h = nxt
+        return self.head_scores(h)
+
+    def quantized_forward(self, x, p):
+        qls = self.quantized[p]
+        h = [quantize(v, qls[0]["fx"], p) for v in x]
+        raw = None
+        for i, (layer, ql) in enumerate(zip(self.layers, qls)):
+            k, n = len(ql["qw"]), len(ql["qb"])
+            assert len(h) == k
+            last = i == len(self.layers) - 1
+            nxt = []
+            for j in range(n):
+                acc = ql["qb"][j]
+                for kk in range(k):
+                    acc += h[kk] * ql["qw"][kk][j]
+                if last:
+                    nxt.append(acc)
+                else:
+                    y = rescale(acc, ql["shift"], p)
+                    if layer.relu and y < 0:
+                        y = 0
+                    nxt.append(y)
+            if last:
+                scale = float(1 << (ql["fx"] + ql["fw"]))
+                raw = [a / scale for a in nxt]
+            else:
+                h = nxt
+        return self.head_scores(raw)
+
+
+# ---------------------------------------------------------------------------
+# Grid helpers
+# ---------------------------------------------------------------------------
+
+def snap(v, denom):
+    return max(0.0, min(1.0, round(v * denom) / denom))
+
+
+def snap_w(v, denom=64):
+    r = round(v * denom) / denom
+    return 0.0 if r == 0.0 else r  # normalise -0.0
+
+
+# ---------------------------------------------------------------------------
+# Dataset + model construction
+# ---------------------------------------------------------------------------
+
+def build_cardio(rng):
+    """16 features, 3 classes: Gaussian-ish clusters; MLP + OvO SVM."""
+    k, n_hidden, n_classes = 16, 8, 3
+    while True:  # resample until the class centroids are well separated
+        cents = [[snap(0.15 + 0.7 * rng.random(), 32) for _ in range(k)]
+                 for _ in range(n_classes)]
+        dmin = min(
+            math.sqrt(sum((a - b) ** 2 for a, b in zip(cents[i], cents[j])))
+            for i in range(n_classes) for j in range(i + 1, n_classes))
+        if dmin >= 1.05:
+            break
+    cbar = [sum(c[i] for c in cents) / n_classes for i in range(k)]
+
+    alpha = 1.5
+    w1 = [[0.0] * n_hidden for _ in range(k)]
+    b1 = [0.0] * n_hidden
+    for j in range(n_classes):
+        col = [snap_w(alpha * (cents[j][i] - cbar[i])) for i in range(k)]
+        for i in range(k):
+            w1[i][j] = col[i]
+        b1[j] = snap_w(-sum(col[i] * 0.5 for i in range(k)) + 0.25)
+    for j in range(n_classes, n_hidden):
+        for i in range(k):
+            w1[i][j] = snap_w(rng.uniform(-0.2, 0.2))
+        b1[j] = snap_w(rng.uniform(-0.1, 0.1))
+    w2 = [[0.0] * n_classes for _ in range(n_hidden)]
+    for j in range(n_hidden):
+        for c in range(n_classes):
+            if j == c:
+                w2[j][c] = 1.25
+            else:
+                w2[j][c] = snap_w(rng.uniform(-0.1, 0.1))
+    b2 = [0.0] * n_classes
+    mlp = Model("mlp_c_cardio", "cardio", "classification", "argmax",
+                [Layer(w1, b1, True), Layer(w2, b2, False)], n_classes, 0, [])
+
+    pairs = [(0, 1), (0, 2), (1, 2)]
+    gamma = 1.0
+    ws = [[0.0] * len(pairs) for _ in range(k)]
+    bs = [0.0] * len(pairs)
+    for p_idx, (i, j) in enumerate(pairs):
+        col = [snap_w(gamma * (cents[i][t] - cents[j][t])) for t in range(k)]
+        for t in range(k):
+            ws[t][p_idx] = col[t]
+        mid = [(cents[i][t] + cents[j][t]) / 2.0 for t in range(k)]
+        bs[p_idx] = snap_w(-sum(col[t] * mid[t] for t in range(k)))
+    svm = Model("svm_c_cardio", "cardio", "classification", "ovo_vote",
+                [Layer(ws, bs, False)], n_classes, 0, [list(p) for p in pairs])
+
+    def sample(rng):
+        cls = rng.choices(range(n_classes), weights=[0.6, 0.25, 0.15])[0]
+        x = [snap(cents[cls][i] + rng.uniform(-0.22, 0.22), 256) for i in range(k)]
+        lab = cls
+        if rng.random() < 0.07:  # label noise (UCI cardio is far from clean)
+            lab = rng.choice([c for c in range(n_classes) if c != cls])
+        return x, lab
+
+    return [mlp, svm], sample
+
+
+def build_wine(rng, name, n_classes):
+    """10 features, quality regression (round head). MLP + linear SVM-R."""
+    k, n_hidden = 10, 6
+    offset = 3
+    qmid = offset + (n_classes - 1) / 2.0
+    span = (n_classes - 1) / 2.0
+    d = [snap_w(rng.choice([-1, 1]) * rng.uniform(0.3, 0.6)) for _ in range(k)]
+    d2 = sum(v * v for v in d)
+    # The samples place the quality signal at XSCALE * d, so the readout
+    # gain is span / (d2 * XSCALE) for a unit quality coefficient.
+    beta = span / (d2 * XSCALE)
+
+    # SVM-R: score = <g, x> + b ~ q.
+    g = [snap_w(beta * v) for v in d]
+    b = snap_w(qmid - sum(gi * 0.5 for gi in g), 64)
+    svm = Model(f"svm_r_{name}", name, "regression", "round",
+                [Layer([[gi] for gi in g], [b], False)], n_classes, offset, [])
+
+    # MLP-R: h0 = relu(<g,x>/4 + shift) stays positive; out = 4*h0 + c.
+    w1 = [[0.0] * n_hidden for _ in range(k)]
+    b1 = [0.0] * n_hidden
+    for i in range(k):
+        w1[i][0] = snap_w(g[i] / 4.0, 256)
+    b1[0] = snap_w(b / 4.0 - qmid / 4.0 + 1.0, 256)
+    for j in range(1, n_hidden):
+        for i in range(k):
+            w1[i][j] = snap_w(rng.uniform(-0.1, 0.1))
+        b1[j] = snap_w(rng.uniform(0.0, 0.2))
+    w2 = [[0.0] for _ in range(n_hidden)]
+    w2[0][0] = 4.0
+    for j in range(1, n_hidden):
+        w2[j][0] = snap_w(rng.uniform(-0.03, 0.03))
+    b2 = [snap_w(qmid - 4.0, 64)]
+    mlp = Model(f"mlp_r_{name}", name, "regression", "round",
+                [Layer(w1, b1, True), Layer(w2, b2, False)], n_classes, offset, [])
+
+    def sample(rng):
+        q = rng.choices(range(offset, offset + n_classes),
+                        weights=[math.exp(-0.5 * ((i - (n_classes - 1) / 2) / 1.1) ** 2)
+                                 for i in range(n_classes)])[0]
+        x = [snap(0.5 + (q - qmid) / span * d[i] * XSCALE + rng.uniform(-0.04, 0.04), 256)
+             for i in range(k)]
+        lab = q
+        if rng.random() < 0.08:  # label noise: off-by-one quality
+            lab = max(offset, min(offset + n_classes - 1, q + rng.choice([-1, 1])))
+        return x, lab
+
+    return [mlp, svm], sample
+
+
+# ---------------------------------------------------------------------------
+# Test-set generation with the p32/p16 == float filter
+# ---------------------------------------------------------------------------
+
+def make_test_set(rng, models, sample_fn, n_rows, margin_fn=None):
+    rows = []
+    attempts = 0
+    while len(rows) < n_rows:
+        attempts += 1
+        if attempts > n_rows * 400:
+            raise RuntimeError("filter too strict; loosen model/data design")
+        x, lab = sample_fn(rng)
+        for v in x:
+            f32_exact(v)
+        ok = True
+        for m in models:
+            fp = m.predict(m.float_forward(x))
+            if m.predict(m.quantized_forward(x, 32)) != fp:
+                ok = False
+                break
+            if m.predict(m.quantized_forward(x, 16)) != fp:
+                ok = False
+                break
+            if margin_fn is not None and not margin_fn(m, x):
+                ok = False
+                break
+        if ok:
+            rows.append((x, lab))
+    return rows
+
+
+XSCALE = 0.45  # quality-direction scale inside the wine feature vectors
+
+
+def wine_margin(m, x):
+    """Keep samples whose float score sits away from a rounding boundary."""
+    s = m.float_forward(x)[0]
+    return abs((s + 0.5) - math.floor(s + 0.5) - 0.5) > 0.2
+
+
+def accuracy(preds, labels):
+    hits = sum(1 for p, y in zip(preds, labels) if p == y)
+    return hits / len(labels)
+
+
+# ---------------------------------------------------------------------------
+# Emission
+# ---------------------------------------------------------------------------
+
+def jnum(v):
+    """JSON-safe float: repr round-trips exactly to the same f64."""
+    if isinstance(v, int):
+        return v
+    if v == 0.0:
+        return 0.0
+    return v
+
+
+def write_weights(model):
+    d = {
+        "name": model.name,
+        "dataset": model.dataset,
+        "task": model.task,
+        "head": model.head,
+        "arch": model.arch,
+        "n_classes": model.n_classes,
+        "label_offset": model.label_offset,
+        "ovo_pairs": model.ovo_pairs,
+        "calib": [1.0] * (len(model.layers) + 1),
+        "float_accuracy": jnum(model.float_accuracy),
+        "layers": [
+            {"w": [[jnum(v) for v in row] for row in l.w],
+             "b": [jnum(v) for v in l.b],
+             "relu": l.relu}
+            for l in model.layers
+        ],
+        "quantized": {str(p): model.quantized[p] for p in PRECISIONS},
+    }
+    path = os.path.join(OUT, "weights", f"{model.name}.json")
+    with open(path, "w") as f:
+        json.dump(d, f)
+    return f"weights/{model.name}.json"
+
+
+def write_stub(rel, payload):
+    path = os.path.join(OUT, rel)
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    return rel
+
+
+def write_csv(name, rows):
+    k = len(rows[0][0])
+    path = os.path.join(OUT, "data", f"{name}_test.csv")
+    with open(path, "w") as f:
+        f.write(",".join([f"f{i}" for i in range(k)] + ["label"]) + "\n")
+        for x, lab in rows:
+            f.write(",".join(repr(v) for v in x) + f",{lab}\n")
+
+
+def main():
+    rng = random.Random(0xB35)
+
+    for sub in ("data", "weights", "hlo"):
+        os.makedirs(os.path.join(OUT, sub), exist_ok=True)
+
+    cardio_models, cardio_sample = build_cardio(rng)
+    red_models, red_sample = build_wine(rng, "redwine", 6)
+    white_models, white_sample = build_wine(rng, "whitewine", 7)
+    for m in cardio_models + red_models + white_models:
+        m.derive_quantized()
+
+    sets = {
+        "cardio": make_test_set(rng, cardio_models, cardio_sample, 60),
+        "redwine": make_test_set(rng, red_models, red_sample, 48, wine_margin),
+        "whitewine": make_test_set(rng, white_models, white_sample, 48, wine_margin),
+    }
+
+    # Manifest order mirrors python/compile/train.py::train_all.
+    models = [cardio_models[0], red_models[0], white_models[0],
+              cardio_models[1], red_models[1], white_models[1]]
+
+    manifest = {"fixture": True, "batch": BATCH, "precisions": PRECISIONS, "models": []}
+    for m in models:
+        rows = sets[m.dataset]
+        labels = [lab for _, lab in rows]
+        fpreds = [m.predict(m.float_forward(x)) for x, _ in rows]
+        m.float_accuracy = accuracy(fpreds, labels)
+        quant_acc = {}
+        for p in PRECISIONS:
+            qpreds = [m.predict(m.quantized_forward(x, p)) for x, _ in rows]
+            quant_acc[str(p)] = jnum(accuracy(qpreds, labels))
+            if p >= 16:
+                assert qpreds == fpreds, f"{m.name} p{p} differs from float"
+        weights_rel = write_weights(m)
+        hlo = {"float": write_stub(
+            f"hlo/{m.name}_float.hlo.txt",
+            {"pbsp_hlo_stub": 1, "kind": "model",
+             "weights": f"../{weights_rel}", "variant": "float"})}
+        for p in PRECISIONS:
+            hlo[f"p{p}"] = write_stub(
+                f"hlo/{m.name}_p{p}.hlo.txt",
+                {"pbsp_hlo_stub": 1, "kind": "model",
+                 "weights": f"../{weights_rel}", "variant": f"p{p}"})
+        manifest["models"].append({
+            "name": m.name,
+            "dataset": m.dataset,
+            "task": m.task,
+            "head": m.head,
+            "arch": m.arch,
+            "n_classes": m.n_classes,
+            "label_offset": m.label_offset,
+            "n_test": len(rows),
+            "float_accuracy": jnum(m.float_accuracy),
+            "weights": weights_rel,
+            "hlo": hlo,
+            "quant_accuracy": quant_acc,
+        })
+
+    manifest["mac_units"] = {}
+    for p in PRECISIONS:
+        rel = write_stub(
+            f"hlo/simd_mac_unit_p{p}.hlo.txt",
+            {"pbsp_hlo_stub": 1, "kind": "mac_unit",
+             "datapath": 32, "precision": p, "words": MAC_UNIT_WORDS})
+        manifest["mac_units"][str(p)] = {"path": rel, "words": MAC_UNIT_WORDS}
+
+    for name, rows in sets.items():
+        write_csv(name, rows)
+
+    with open(os.path.join(OUT, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # -- self-verification: reparse everything and recompute ----------------
+    verify(manifest)
+
+    for e in manifest["models"]:
+        print(f"{e['name']:<18} arch {e['arch']}  float {e['float_accuracy']:.4f}  "
+              + "  ".join(f"p{p} {e['quant_accuracy'][str(p)]:.4f}" for p in PRECISIONS))
+    print(f"wrote {OUT}")
+
+
+def verify(manifest):
+    """Round-trip check: reparse emitted JSON/CSV and recompute accuracies."""
+    for e in manifest["models"]:
+        with open(os.path.join(OUT, e["weights"])) as f:
+            wj = json.load(f)
+        layers = [Layer(l["w"], l["b"], l["relu"]) for l in wj["layers"]]
+        m = Model(wj["name"], wj["dataset"], wj["task"], wj["head"], layers,
+                  wj["n_classes"], wj["label_offset"],
+                  [tuple(p) for p in wj["ovo_pairs"]])
+        m.quantized = {int(p): qls for p, qls in wj["quantized"].items()}
+        xs, ys = [], []
+        with open(os.path.join(OUT, "data", f"{e['dataset']}_test.csv")) as f:
+            header = f.readline()
+            assert header.strip().endswith("label")
+            for line in f:
+                vals = [float(t) for t in line.strip().split(",")]
+                x = [f32_exact(v) for v in vals[:-1]]
+                xs.append(x)
+                ys.append(int(vals[-1]))
+        fpreds = [m.predict(m.float_forward(x)) for x in xs]
+        assert accuracy(fpreds, ys) == e["float_accuracy"], e["name"]
+        for p in PRECISIONS:
+            qpreds = [m.predict(m.quantized_forward(x, p)) for x in xs]
+            got = accuracy(qpreds, ys)
+            want = e["quant_accuracy"][str(p)]
+            assert got == want, f"{e['name']} p{p}: {got} != {want}"
+    print("self-verification: reparsed accuracies match the manifest")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
