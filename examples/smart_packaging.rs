@@ -31,9 +31,11 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     let requests: usize = args.parse_or("requests", 1200)?;
     let batch: usize = args.parse_or("batch", 64)?;
+    let threads = args.threads()?;
     args.finish()?;
 
-    let svc = Service::start(ServiceConfig { max_batch: batch, linger_ms: 2 })?;
+    let cfg = ServiceConfig { max_batch: batch, linger_ms: 2, threads };
+    let svc = Service::start(cfg)?;
     println!(
         "smart-packaging line: {} stations, p{PRECISION} bespoke cores, batch {batch}",
         svc.models.len()

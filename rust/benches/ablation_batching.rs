@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     println!("max_batch   throughput [req/s]   p50 [ms]   p99 [ms]   mean batch");
     let mut rows = Vec::new();
     for max_batch in [1usize, 8, 32, 64, 128, 256] {
-        let svc = Service::start(ServiceConfig { max_batch, linger_ms: 1 })?;
+        let cfg = ServiceConfig { max_batch, linger_ms: 1, ..ServiceConfig::default() };
+        let svc = Service::start(cfg)?;
         let model = svc.models[0].clone();
         let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
         let key = Key::precision(&model.name, 8);

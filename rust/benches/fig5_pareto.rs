@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     assert!(front.iter().any(|l| l.contains('m')));
     println!("Fig 5 structure: OK");
 
-    bench("tpisa_sweep (14 configs x 6 models)", 0, 3, || {
+    bench(&format!("tpisa_sweep (14 configs x 6 models, threads={})", ctx.threads), 0, 3, || {
         std::hint::black_box(report::fig5(&ctx).unwrap());
     });
     Ok(())

@@ -10,7 +10,8 @@ use printed_bespoke::ml::dataset::Dataset;
 use printed_bespoke::util::bench::{bench, bench_throughput};
 
 fn main() -> anyhow::Result<()> {
-    let svc = Service::start(ServiceConfig { max_batch: 256, linger_ms: 1 })?;
+    let cfg = ServiceConfig { max_batch: 256, linger_ms: 1, ..ServiceConfig::default() };
+    let svc = Service::start(cfg)?;
     let model = svc.models[0].clone();
     let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
     let key = Key::precision(&model.name, 8);

@@ -1,6 +1,9 @@
 //! Bench: regenerate paper Table I (bespoke Zero-Riscy area/power gains,
 //! average speedup and accuracy loss across the six ML models) and
-//! verify the paper's orderings hold.
+//! verify the paper's orderings hold — then time the sweep at
+//! `threads = 1` vs `threads >= 4` to show the parallel evaluation
+//! engine's wall-clock win (the results themselves are bit-identical;
+//! see `tests/parallel_determinism.rs`).
 
 use printed_bespoke::dse::context::EvalContext;
 use printed_bespoke::dse::report;
@@ -34,8 +37,28 @@ fn main() -> anyhow::Result<()> {
     assert!(p16.acc_loss_pct < 0.5);
     println!("Table I orderings: OK");
 
-    bench("zr_table1 sweep (6 models x 5 variants)", 0, 3, || {
-        std::hint::black_box(report::table1(&ctx).unwrap());
+    // Wall clock: the same sweep, sequential vs parallel.  Warmup = 1
+    // so the per-context program caches are filled before timing.  The
+    // already-loaded ctx doubles as the parallel context when it has
+    // enough workers.
+    let seq_ctx = EvalContext::load_with_threads(8, 1)?;
+    let seq = bench("zr_table1 sweep (threads=1)", 1, 3, || {
+        std::hint::black_box(report::table1(&seq_ctx).unwrap());
     });
+    let wide_ctx;
+    let par_ctx = if ctx.threads >= 4 {
+        &ctx
+    } else {
+        wide_ctx = EvalContext::load_with_threads(8, 4)?;
+        &wide_ctx
+    };
+    let threads = par_ctx.threads;
+    let par = bench(&format!("zr_table1 sweep (threads={threads})"), 1, 3, || {
+        std::hint::black_box(report::table1(par_ctx).unwrap());
+    });
+    println!(
+        "parallel sweep speedup: x{:.2} (threads=1 -> threads={threads}, best-of-3)",
+        seq.min_ms / par.min_ms
+    );
     Ok(())
 }

@@ -18,7 +18,7 @@ fn main() -> anyhow::Result<()> {
     assert!(t.err_pct < 2.0, "err {}", t.err_pct);
     println!("Table II bands: OK");
 
-    bench("table2 (d8 sweep pair)", 0, 3, || {
+    bench(&format!("table2 (d8 sweep pair, threads={})", ctx.threads), 0, 3, || {
         std::hint::black_box(report::table2(&ctx).unwrap());
     });
     Ok(())

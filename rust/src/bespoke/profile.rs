@@ -1,6 +1,10 @@
 //! Utilization profiling (workflow step ③): run the application set on
 //! the baseline core and record which instructions, registers, CSRs and
 //! address ranges are actually exercised.
+//!
+//! Each workload runs as one thread-pool job; the per-workload profiles
+//! are merged in workload order, so the resulting [`Utilization`] is
+//! identical at any thread count.
 
 use anyhow::Result;
 
@@ -9,6 +13,7 @@ use crate::ml::model::Model;
 use crate::ml::{harness, microbench};
 use crate::sim::trace::Profile;
 use crate::sim::zero_riscy::{Halt, ZeroRiscy, ALL_MNEMONICS};
+use crate::util::threadpool::{self, ThreadPool};
 
 /// A utilization report over a workload set.
 #[derive(Debug, Clone)]
@@ -35,37 +40,72 @@ impl Utilization {
 }
 
 /// Profile the §III-A suite (MLP, DT, mul/div, insertion sort) on the
-/// baseline Zero-Riscy.
+/// baseline Zero-Riscy, using the process-wide pool.
 pub fn profile_suite() -> Result<Utilization> {
-    let mut merged = Profile::default();
-    let mut names = Vec::new();
-    for (name, prog) in microbench::suite()? {
+    profile_suite_on(threadpool::global())
+}
+
+/// [`profile_suite`] on an explicit pool: one job per workload,
+/// profiles merged in suite order.
+pub fn profile_suite_on(pool: &ThreadPool) -> Result<Utilization> {
+    let progs = microbench::suite()?;
+    let names: Vec<String> = progs.iter().map(|(n, _)| n.to_string()).collect();
+    let runs: Vec<Result<Profile>> = pool.par_map(progs, |(name, prog)| {
         let mut sim = ZeroRiscy::new(&prog, &[], RAM_BYTES, None);
         anyhow::ensure!(sim.run(10_000_000)? == Halt::Break, "{name} did not halt");
-        merged.merge(&sim.profile);
-        names.push(name.to_string());
+        Ok(sim.profile.clone())
+    });
+    let mut merged = Profile::default();
+    for r in runs {
+        merged.merge(&r?);
     }
     Ok(Utilization::from_profile(merged, names))
 }
 
 /// Profile the six ML models (baseline codegen) on the baseline core,
-/// over a few samples each.
+/// over a few samples each, using the process-wide pool.
 pub fn profile_models(models: &[Model], samples: &[Vec<Vec<f32>>]) -> Result<Utilization> {
+    profile_models_on(threadpool::global(), models, samples)
+}
+
+/// [`profile_models`] on an explicit pool: one job per model, profiles
+/// merged in model order.
+pub fn profile_models_on(
+    pool: &ThreadPool,
+    models: &[Model],
+    samples: &[Vec<Vec<f32>>],
+) -> Result<Utilization> {
+    let n = models.len().min(samples.len());
+    let idx: Vec<usize> = (0..n).collect();
+    let runs: Vec<Result<Profile>> = pool.par_map(idx, |i| {
+        let prog = codegen_rv32::generate(&models[i], Rv32Variant::Baseline)?;
+        let run = harness::run_rv32(&models[i], &prog, &samples[i])?;
+        Ok(run.profile)
+    });
     let mut merged = Profile::default();
     let mut names = Vec::new();
-    for (model, xs) in models.iter().zip(samples) {
-        let prog = codegen_rv32::generate(model, Rv32Variant::Baseline)?;
-        let run = harness::run_rv32(model, &prog, xs)?;
-        merged.merge(&run.profile);
-        names.push(model.name.clone());
+    for (i, r) in runs.into_iter().enumerate() {
+        merged.merge(&r?);
+        names.push(models[i].name.clone());
     }
     Ok(Utilization::from_profile(merged, names))
 }
 
-/// Combined utilization of the suite + models (the paper's workload set).
+/// Combined utilization of the suite + models (the paper's workload
+/// set), using the process-wide pool.
 pub fn profile_all(models: &[Model], samples: &[Vec<Vec<f32>>]) -> Result<Utilization> {
-    let mut u = profile_suite()?;
-    let m = profile_models(models, samples)?;
+    profile_all_on(threadpool::global(), models, samples)
+}
+
+/// [`profile_all`] on an explicit pool (the DSE sweeps pass their
+/// context's pool).
+pub fn profile_all_on(
+    pool: &ThreadPool,
+    models: &[Model],
+    samples: &[Vec<Vec<f32>>],
+) -> Result<Utilization> {
+    let mut u = profile_suite_on(pool)?;
+    let m = profile_models_on(pool, models, samples)?;
     u.profile.merge(&m.profile);
     let mut workloads = u.workloads.clone();
     workloads.extend(m.workloads);

@@ -94,6 +94,57 @@ mod tests {
         assert_eq!(q.len(), 3);
     }
 
+    /// Satellite: the linger window is inclusive — a queue becomes
+    /// ready exactly *at* `linger_ms`, not one tick later.
+    #[test]
+    fn linger_boundary_is_inclusive() {
+        let mut q = Queue::new(10, 5);
+        q.push(1);
+        let t0 = q.items.front().unwrap().enqueued;
+        assert!(!q.ready(t0 + Duration::from_millis(4)));
+        assert!(q.ready(t0 + Duration::from_millis(5)));
+        assert!(q.ready(t0 + Duration::from_millis(500)));
+    }
+
+    /// Satellite: `max_batch = 1` degenerates to immediate per-request
+    /// dispatch regardless of the linger window.
+    #[test]
+    fn max_batch_one_flushes_immediately() {
+        let mut q = Queue::new(1, 10_000);
+        q.push(7);
+        assert!(q.ready(Instant::now()));
+        assert_eq!(q.drain_batch().len(), 1);
+        assert!(!q.ready(Instant::now())); // empty again
+    }
+
+    /// Satellite: an empty queue is never ready (even at linger 0) and
+    /// drains to nothing.
+    #[test]
+    fn empty_queue_never_ready() {
+        let mut q: Queue<u8> = Queue::new(3, 0);
+        assert!(!q.ready(Instant::now()));
+        assert!(q.drain_batch().is_empty());
+        // Zero linger + one item: ready at once.
+        q.push(1);
+        assert!(q.ready(Instant::now()));
+    }
+
+    /// Satellite: overfull queue stays ready until drained below a full
+    /// batch, and drains split at exactly `max_batch`.
+    #[test]
+    fn overfull_queue_drains_in_max_batch_steps() {
+        let mut q = Queue::new(3, 10_000);
+        for i in 0..7 {
+            q.push(i);
+        }
+        assert!(q.ready(Instant::now()));
+        assert_eq!(q.drain_batch().len(), 3);
+        assert!(q.ready(Instant::now())); // 4 left: still a full batch
+        assert_eq!(q.drain_batch().len(), 3);
+        assert!(!q.ready(Instant::now())); // 1 left, linger not expired
+        assert_eq!(q.drain_batch().len(), 1);
+    }
+
     /// Property: FIFO order is preserved across arbitrary push/drain
     /// interleavings.
     #[test]

@@ -131,6 +131,47 @@ mod tests {
         assert!(r.flush_any().is_some());
     }
 
+    /// Satellite: a flooding key cannot starve the others — sparse keys
+    /// are served within the first rotation, and the hog still drains.
+    #[test]
+    fn round_robin_resists_flooding() {
+        let mut r: Router<u32> = Router::new(2, 0);
+        for i in 0..20 {
+            r.enqueue(Key::new("hog", "p16"), i);
+        }
+        r.enqueue(Key::new("a", "p16"), 100);
+        r.enqueue(Key::new("b", "p16"), 200);
+        let now = Instant::now();
+        let mut order = Vec::new();
+        while let Some((k, _)) = r.next_batch(now) {
+            order.push(k.model);
+        }
+        let a_pos = order.iter().position(|m| m == "a").unwrap();
+        let b_pos = order.iter().position(|m| m == "b").unwrap();
+        assert!(a_pos <= 2 && b_pos <= 2, "sparse keys starved: {order:?}");
+        assert_eq!(order.iter().filter(|m| *m == "hog").count(), 10);
+    }
+
+    /// Satellite: round-robin alternation under unequal queue depths —
+    /// the cursor advances past served keys and empty queues are
+    /// skipped without stalling the rotation.
+    #[test]
+    fn round_robin_alternates_under_unequal_load() {
+        let mut r: Router<u32> = Router::new(1, 0);
+        for i in 0..3 {
+            r.enqueue(Key::new("x", "p8"), i);
+        }
+        for i in 0..6 {
+            r.enqueue(Key::new("y", "p8"), i);
+        }
+        let now = Instant::now();
+        let mut order = Vec::new();
+        while let Some((k, _)) = r.next_batch(now) {
+            order.push(k.model);
+        }
+        assert_eq!(order, vec!["x", "y", "x", "y", "x", "y", "y", "y", "y"]);
+    }
+
     /// Property: every enqueued item is dispatched exactly once.
     #[test]
     fn prop_no_loss_no_duplication() {

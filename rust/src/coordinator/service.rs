@@ -4,8 +4,11 @@
 //!
 //! Two request paths:
 //!
-//! * **bulk** — `evaluate()` submits pre-chunked batches (accuracy
-//!   sweeps, the DSE, benches);
+//! * **bulk** — `evaluate()` pipelines pre-chunked batches to the
+//!   runtime worker (accuracy sweeps, the DSE, benches); `crosscheck`
+//!   drives this path from the service's thread pool, one job per
+//!   (model, precision), while the runtime worker itself stays
+//!   single-threaded;
 //! * **streaming** — `submit()` enqueues single samples which the
 //!   worker's router + dynamic batcher coalesce (the `serve` demo and
 //!   the smart-packaging example), with round-robin fairness across
@@ -13,7 +16,9 @@
 //!
 //! `crosscheck()` is the three-implementation consistency gate: for
 //! every (model, precision), PJRT scores (Pallas-kernel HLO) must match
-//! the rust quantised reference and the ISS-executed program.
+//! the rust quantised reference and the ISS-executed program.  Each
+//! (model, precision) pair is one pool job; the report lines gather in
+//! pair order, so the output is deterministic at any thread count.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -27,16 +32,20 @@ use crate::ml::dataset::Dataset;
 use crate::ml::manifest::Manifest;
 use crate::ml::model::Model;
 use crate::runtime::pjrt::Runtime;
+use crate::util::threadpool::{self, ThreadPool};
 
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     pub max_batch: usize,
     pub linger_ms: u64,
+    /// Pool size for `crosscheck`'s bulk-path fan-out (the `--threads`
+    /// knob); the PJRT runtime always stays on its one worker thread.
+    pub threads: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { max_batch: 256, linger_ms: 2 }
+        ServiceConfig { max_batch: 256, linger_ms: 2, threads: threadpool::default_threads() }
     }
 }
 
@@ -56,6 +65,8 @@ pub struct Service {
     pub models: Vec<Model>,
     pub metrics: metrics::Shared,
     cfg: ServiceConfig,
+    /// Facade-side pool: `crosscheck` fans the bulk path out over it.
+    pool: ThreadPool,
 }
 
 impl Service {
@@ -76,7 +87,8 @@ impl Service {
                 .spawn(move || worker_loop(rx, manifest, models, shared, cfg))
                 .context("spawn runtime worker")?
         };
-        Ok(Service { tx, worker: Some(worker), manifest, models, metrics: shared, cfg })
+        let pool = ThreadPool::new(cfg.threads.max(1));
+        Ok(Service { tx, worker: Some(worker), manifest, models, metrics: shared, cfg, pool })
     }
 
     pub fn model(&self, name: &str) -> Result<&Model> {
@@ -87,6 +99,9 @@ impl Service {
     }
 
     /// Bulk scores for a whole sample set at a precision (or "float").
+    /// All chunks are pipelined to the runtime worker before any reply
+    /// is collected, so the worker's queue stays full; concurrent
+    /// callers (e.g. `crosscheck`'s pool jobs) interleave safely.
     pub fn scores(&self, key: &Key, xs: &[Vec<f32>]) -> Result<Scores> {
         let mut out = Vec::with_capacity(xs.len());
         let chunk_size = self.manifest.batch;
@@ -185,45 +200,54 @@ impl Service {
 
     /// Three-way consistency check over `samples` per (model, precision):
     /// PJRT (Pallas HLO) vs rust quantised reference vs Zero-Riscy ISS.
+    /// One pool job per pair; lines gather in pair order.
     pub fn crosscheck(&self, samples: usize) -> Result<String> {
         use crate::ml::codegen_rv32::{self, Rv32Variant};
         use crate::ml::harness;
-        let mut lines = Vec::new();
-        let mut checked = 0usize;
+        let mut xs_per_model: Vec<Vec<Vec<f32>>> = Vec::new();
         for model in &self.models {
             let ds = Dataset::load(self.manifest.data_dir(), &model.dataset, "test")?;
-            let xs: Vec<Vec<f32>> = ds.x.iter().take(samples).cloned().collect();
+            xs_per_model.push(ds.x.into_iter().take(samples).collect());
+        }
+        let mut pairs: Vec<(usize, u32)> = Vec::new();
+        for mi in 0..self.models.len() {
             for &p in &self.manifest.precisions {
-                let key = Key::precision(&model.name, p);
-                let pjrt = self.scores(&key, &xs)?;
-                // Rust quantised reference.
+                pairs.push((mi, p));
+            }
+        }
+        let checked = pairs.len();
+        let results: Vec<Result<String>> = self.pool.par_map(pairs, |(mi, p)| {
+            let model = &self.models[mi];
+            let xs = &xs_per_model[mi];
+            let key = Key::precision(&model.name, p);
+            let pjrt = self.scores(&key, xs)?;
+            // Rust quantised reference.
+            for (i, x) in xs.iter().enumerate() {
+                let want = model.quantized_forward(x, p)?;
+                for (a, b) in pjrt[i].iter().zip(&want) {
+                    // PJRT computes in f32; the reference in f64.
+                    let tol = 1e-4 * (1.0 + b.abs());
+                    if (a - b).abs() > tol {
+                        bail!("{} p{p} sample {i}: PJRT {a} vs ref {b}", model.name);
+                    }
+                }
+            }
+            // ISS (SIMD variants exist for p <= 16).
+            if p <= 16 {
+                let prog = codegen_rv32::generate(model, Rv32Variant::Simd(p))?;
+                let run = harness::run_rv32(model, &prog, xs)?;
                 for (i, x) in xs.iter().enumerate() {
                     let want = model.quantized_forward(x, p)?;
-                    for (a, b) in pjrt[i].iter().zip(&want) {
-                        // PJRT computes in f32; the reference in f64.
-                        let tol = 1e-4 * (1.0 + b.abs());
-                        if (a - b).abs() > tol {
-                            bail!(
-                                "{} p{p} sample {i}: PJRT {a} vs ref {b}",
-                                model.name
-                            );
-                        }
+                    if run.scores[i] != want {
+                        bail!("{} p{p} sample {i}: ISS mismatch", model.name);
                     }
                 }
-                // ISS (SIMD variants exist for p <= 16).
-                if p <= 16 {
-                    let prog = codegen_rv32::generate(model, Rv32Variant::Simd(p))?;
-                    let run = harness::run_rv32(model, &prog, &xs)?;
-                    for (i, x) in xs.iter().enumerate() {
-                        let want = model.quantized_forward(x, p)?;
-                        if run.scores[i] != want {
-                            bail!("{} p{p} sample {i}: ISS mismatch", model.name);
-                        }
-                    }
-                }
-                checked += 1;
-                lines.push(format!("{} p{p}: ok ({} samples)", model.name, xs.len()));
             }
+            Ok(format!("{} p{p}: ok ({} samples)", model.name, xs.len()))
+        });
+        let mut lines = Vec::with_capacity(checked + 1);
+        for r in results {
+            lines.push(r?);
         }
         lines.push(format!(
             "crosscheck OK: {checked} (model, precision) pairs, 3 implementations agree"

@@ -1,12 +1,20 @@
 //! Shared evaluation context: artifacts, models, datasets and the
-//! technology, loaded once per run.
+//! technology, loaded once per run — plus the thread pool the sweeps
+//! scatter onto and the per-(model, variant) program cache, so codegen
+//! runs once per sweep instead of once per row.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use crate::hw::egfet::{egfet, Technology};
+use crate::ml::codegen_rv32::{self, Rv32Program, Rv32Variant};
+use crate::ml::codegen_tpisa::{self, TpIsaProgram, TpVariant};
 use crate::ml::dataset::Dataset;
 use crate::ml::manifest::Manifest;
 use crate::ml::model::Model;
+use crate::util::threadpool::{self, ThreadPool};
 
 /// Everything a sweep or report needs.
 pub struct EvalContext {
@@ -18,11 +26,22 @@ pub struct EvalContext {
     pub cycle_samples: Vec<Vec<Vec<f32>>>,
     /// Per-model full test sets (for end-to-end accuracy runs).
     pub test_sets: Vec<Dataset>,
+    /// Worker threads for the sweeps (the `--threads` knob).
+    pub threads: usize,
+    pool: ThreadPool,
+    rv32_programs: Mutex<BTreeMap<(usize, String), Arc<Rv32Program>>>,
+    tpisa_programs: Mutex<BTreeMap<(usize, String), Arc<TpIsaProgram>>>,
 }
 
 impl EvalContext {
-    /// Load from `artifacts/`, taking `n_cycle_samples` per model.
+    /// Load from `artifacts/`, taking `n_cycle_samples` per model, with
+    /// the default thread count ([`threadpool::default_threads`]).
     pub fn load(n_cycle_samples: usize) -> Result<EvalContext> {
+        Self::load_with_threads(n_cycle_samples, threadpool::default_threads())
+    }
+
+    /// Load with an explicit sweep-pool size (`--threads`).
+    pub fn load_with_threads(n_cycle_samples: usize, threads: usize) -> Result<EvalContext> {
         let dir = crate::artifacts_dir()?;
         let manifest = Manifest::load(&dir)?;
         let models: Vec<Model> =
@@ -34,7 +53,57 @@ impl EvalContext {
             cycle_samples.push(ds.x.iter().take(n_cycle_samples).cloned().collect());
             test_sets.push(ds);
         }
-        Ok(EvalContext { manifest, models, tech: egfet(), cycle_samples, test_sets })
+        let threads = threads.max(1);
+        Ok(EvalContext {
+            manifest,
+            models,
+            tech: egfet(),
+            cycle_samples,
+            test_sets,
+            threads,
+            pool: ThreadPool::new(threads),
+            rv32_programs: Mutex::new(BTreeMap::new()),
+            tpisa_programs: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// The pool the sweeps and reports scatter work onto.
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+
+    /// Code-generate (once) and cache the RV32 program of a
+    /// (model, variant) pair.
+    pub fn rv32_program(
+        &self,
+        model_idx: usize,
+        variant: Rv32Variant,
+    ) -> Result<Arc<Rv32Program>> {
+        let key = (model_idx, variant.label());
+        if let Some(p) = self.rv32_programs.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(p));
+        }
+        let prog = Arc::new(codegen_rv32::generate(&self.models[model_idx], variant)?);
+        let mut cache = self.rv32_programs.lock().unwrap();
+        Ok(Arc::clone(cache.entry(key).or_insert(prog)))
+    }
+
+    /// Code-generate (once) and cache the TP-ISA program of a
+    /// (model, datapath, variant) triple.  Generation failures are not
+    /// cached: callers use them to skip infeasible configurations.
+    pub fn tpisa_program(
+        &self,
+        model_idx: usize,
+        datapath: u32,
+        variant: TpVariant,
+    ) -> Result<Arc<TpIsaProgram>> {
+        let key = (model_idx, format!("d{datapath}-{}", variant.label()));
+        if let Some(p) = self.tpisa_programs.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(p));
+        }
+        let prog = Arc::new(codegen_tpisa::generate(&self.models[model_idx], datapath, variant)?);
+        let mut cache = self.tpisa_programs.lock().unwrap();
+        Ok(Arc::clone(cache.entry(key).or_insert(prog)))
     }
 
     /// Accuracy loss (float - quantised, percentage points) of a model

@@ -1,13 +1,21 @@
 //! Configuration sweeps: the Table I Zero-Riscy variants and the Fig. 5
 //! TP-ISA design space.
+//!
+//! Both sweeps shard their per-model ISS runs across the context's
+//! thread pool ([`EvalContext::pool`]).  Results are gathered in model
+//! order and aggregated by folding in that order, so every number (and
+//! every report byte) is identical at any thread count — see
+//! `tests/parallel_determinism.rs`.  Programs come from the context's
+//! (model, variant) cache, so codegen runs once per sweep even though
+//! several reports share the same configurations.
 
 use anyhow::Result;
 
 use super::context::EvalContext;
-use crate::bespoke::profile::{profile_all, Utilization};
+use crate::bespoke::profile::{profile_all_on, Utilization};
 use crate::bespoke::reduction::table1_variants;
 use crate::hw::synth::{synthesize, zero_riscy, MulOption, SynthReport};
-use crate::ml::codegen_rv32::{self, Rv32Variant};
+use crate::ml::codegen_rv32::Rv32Variant;
 use crate::ml::codegen_tpisa::{self, TpVariant};
 use crate::ml::harness;
 use crate::util::stats;
@@ -37,15 +45,21 @@ fn row_variant(name: &str) -> Rv32Variant {
     }
 }
 
-/// Measure mean cycles/sample of a variant across all models.
+/// Measure mean cycles/sample of a variant across all models: one pool
+/// job per model, gathered in model order.
 fn zr_cycles(ctx: &EvalContext, variant: Rv32Variant) -> Result<(Vec<f64>, f64)> {
+    let idx: Vec<usize> = (0..ctx.models.len()).collect();
+    let runs: Vec<Result<(f64, f64)>> = ctx.pool().par_map(idx, |i| {
+        let prog = ctx.rv32_program(i, variant)?;
+        let run = harness::run_rv32(&ctx.models[i], &prog, &ctx.cycle_samples[i])?;
+        Ok((run.cycles_per_sample, prog.rom_cells as f64))
+    });
     let mut per_model = Vec::new();
     let mut rom = Vec::new();
-    for (model, xs) in ctx.models.iter().zip(&ctx.cycle_samples) {
-        let prog = codegen_rv32::generate(model, variant)?;
-        let run = harness::run_rv32(model, &prog, xs)?;
-        per_model.push(run.cycles_per_sample);
-        rom.push(prog.rom_cells as f64);
+    for r in runs {
+        let (cycles, cells) = r?;
+        per_model.push(cycles);
+        rom.push(cells);
     }
     let rom_avg = stats::mean(&rom);
     Ok((per_model, rom_avg))
@@ -53,7 +67,7 @@ fn zr_cycles(ctx: &EvalContext, variant: Rv32Variant) -> Result<(Vec<f64>, f64)>
 
 /// Profile the workload set and produce the Table-I rows.
 pub fn zr_table1(ctx: &EvalContext) -> Result<(Utilization, Vec<ZrRow>)> {
-    let u = profile_all(&ctx.models, &ctx.cycle_samples)?;
+    let u = profile_all_on(ctx.pool(), &ctx.models, &ctx.cycle_samples)?;
     let base_synth = synthesize(&zero_riscy(), &ctx.tech);
     let (base_cycles, base_rom) = zr_cycles(ctx, Rv32Variant::Baseline)?;
 
@@ -111,24 +125,32 @@ pub struct TpPoint {
     pub synth: SynthReport,
 }
 
-/// Mean cycles/sample of a TP-ISA config across the models it can run;
-/// returns (per-model-index, cycles, rom_cells).
+/// Mean cycles/sample of a TP-ISA config across the models it can run
+/// (one pool job per model, gathered in model order); returns
+/// (per-model-index, cycles, rom_cells).
 fn tp_cycles(
     ctx: &EvalContext,
     d: u32,
     variant: TpVariant,
 ) -> Result<Vec<(usize, f64, f64)>> {
-    let mut out = Vec::new();
-    for (i, (model, xs)) in ctx.models.iter().zip(&ctx.cycle_samples).enumerate() {
+    let idx: Vec<usize> = (0..ctx.models.len()).collect();
+    let runs = ctx.pool().par_map(idx, |i| -> Result<Option<(usize, f64, f64)>> {
+        let model = &ctx.models[i];
         let p = codegen_tpisa::quant_precision(d, variant);
         if model.qlayers(p).is_err() {
-            continue;
+            return Ok(None);
         }
-        let Ok(prog) = codegen_tpisa::generate(model, d, variant) else {
-            continue; // e.g. multi-layer models on the 4-bit core
+        let Ok(prog) = ctx.tpisa_program(i, d, variant) else {
+            return Ok(None); // e.g. multi-layer models on the 4-bit core
         };
-        let run = harness::run_tpisa(model, &prog, xs)?;
-        out.push((i, run.cycles_per_sample, prog.rom_cells as f64));
+        let run = harness::run_tpisa(model, &prog, &ctx.cycle_samples[i])?;
+        Ok(Some((i, run.cycles_per_sample, prog.rom_cells as f64)))
+    });
+    let mut out = Vec::new();
+    for r in runs {
+        if let Some(entry) = r? {
+            out.push(entry);
+        }
     }
     Ok(out)
 }

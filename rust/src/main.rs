@@ -9,6 +9,11 @@
 //! pbsp serve [--requests N] [--batch N]         coordinator demo loop
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
 //! ```
+//!
+//! `report`, `eval`, `serve` and `crosscheck` all take `--threads N`
+//! (default: `PBSP_THREADS`, else the machine's parallelism) — the
+//! sweep/evaluation pool size.  Parallel results are bit-identical to
+//! `--threads 1`.
 
 use anyhow::{bail, Context, Result};
 use printed_bespoke::bespoke::profile::profile_suite;
@@ -93,8 +98,9 @@ fn cmd_profile(args: &Args) -> Result<()> {
 fn cmd_report(args: &Args) -> Result<()> {
     let what = args.positionals.get(1).map(String::as_str).unwrap_or("all").to_string();
     let samples = args.parse_or("samples", 8usize)?;
+    let threads = args.threads()?;
     args.finish()?;
-    let ctx = EvalContext::load(samples)?;
+    let ctx = EvalContext::load_with_threads(samples, threads)?;
     let print = |name: &str| -> Result<()> {
         match name {
             "fig1" => println!("{}", report::fig1(&ctx).text),
@@ -121,8 +127,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.require("model")?.to_string();
     let precision = args.parse_or("precision", 16u32)?;
     let backend = args.str_or("backend", "both");
+    let threads = args.threads()?;
     args.finish()?;
-    let ctx = EvalContext::load(4)?;
+    let ctx = EvalContext::load_with_threads(4, threads)?;
     let idx = ctx
         .models
         .iter()
@@ -130,7 +137,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .with_context(|| format!("unknown model {model:?}"))?;
     let ds = &ctx.test_sets[idx];
     if backend == "pjrt" || backend == "both" {
-        let svc = Service::start(ServiceConfig::default())?;
+        let svc = Service::start(ServiceConfig { threads, ..ServiceConfig::default() })?;
         let r = svc.evaluate(&model, precision, &ds.x, &ds.y)?;
         println!(
             "[pjrt] {} p{} accuracy {:.4} ({} samples, {:.2} ms/batch)",
@@ -143,7 +150,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
             m,
             printed_bespoke::ml::codegen_rv32::Rv32Variant::Simd(precision.min(16)),
         )?;
-        let run = printed_bespoke::ml::harness::run_rv32(m, &prog, &ds.x)?;
+        let run = printed_bespoke::ml::harness::run_rv32_on(ctx.pool(), m, &prog, &ds.x)?;
         println!(
             "[iss ] {} p{} accuracy {:.4} ({:.0} cycles/sample)",
             model,
@@ -158,8 +165,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.parse_or("requests", 200usize)?;
     let batch = args.parse_or("batch", 64usize)?;
+    let threads = args.threads()?;
     args.finish()?;
-    let cfg = ServiceConfig { max_batch: batch, ..ServiceConfig::default() };
+    let cfg = ServiceConfig { max_batch: batch, threads, ..ServiceConfig::default() };
     let svc = Service::start(cfg)?;
     let stats = svc.demo_load(requests)?;
     println!("{stats}");
@@ -168,8 +176,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_crosscheck(args: &Args) -> Result<()> {
     let samples = args.parse_or("samples", 16usize)?;
+    let threads = args.threads()?;
     args.finish()?;
-    let svc = Service::start(ServiceConfig::default())?;
+    let svc = Service::start(ServiceConfig { threads, ..ServiceConfig::default() })?;
     let report = svc.crosscheck(samples)?;
     println!("{report}");
     Ok(())

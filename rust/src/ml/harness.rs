@@ -6,6 +6,11 @@
 //! the bit-exactness cross-check target for the PJRT path: for every
 //! (model, precision) the ISS scores must equal the HLO executable's
 //! scores exactly.
+//!
+//! [`run_rv32_on`] / [`run_tpisa_on`] shard a batch across a thread
+//! pool (each sample runs in its own ISS instance anyway); the sharded
+//! results merge in sample order, so they are interchangeable with the
+//! sequential [`run_rv32`] / [`run_tpisa`].
 
 use anyhow::{ensure, Context, Result};
 
@@ -17,6 +22,7 @@ use crate::sim::mem::RAM_BASE;
 use crate::sim::tpisa::TpIsa;
 use crate::sim::trace::Profile;
 use crate::sim::zero_riscy::{Halt, ZeroRiscy};
+use crate::util::threadpool::ThreadPool;
 
 /// Result of running a batch through an ISS.
 #[derive(Debug, Clone)]
@@ -125,6 +131,56 @@ pub fn run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> Result<
     }
     let cps = profile.cycles as f64 / xs.len().max(1) as f64;
     Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+}
+
+/// Shard size for parallel batch runs: oversubscribe the pool 4x so
+/// uneven per-sample cost (ReLU/branch paths) load-balances.
+fn shard_size(n_samples: usize, threads: usize) -> usize {
+    n_samples.div_ceil(threads.max(1) * 4).max(1)
+}
+
+/// Fold sharded runs (in shard order) into one [`BatchRun`].  Scores,
+/// predictions and every profile counter come out identical to a
+/// sequential run over the concatenated samples — shard boundaries only
+/// change *when* profiles merge, and [`Profile::merge`] folds the same
+/// values in the same sample order either way.
+fn merge_runs(runs: Vec<Result<BatchRun>>, n_samples: usize) -> Result<BatchRun> {
+    let mut scores = Vec::with_capacity(n_samples);
+    let mut predictions = Vec::with_capacity(n_samples);
+    let mut profile = Profile::default();
+    for r in runs {
+        let r = r?;
+        scores.extend(r.scores);
+        predictions.extend(r.predictions);
+        profile.merge(&r.profile);
+    }
+    let cps = profile.cycles as f64 / n_samples.max(1) as f64;
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+}
+
+/// [`run_rv32`] with the samples sharded across `pool` (each shard is an
+/// independent ISS instance; results gather in sample order).
+pub fn run_rv32_on(
+    pool: &ThreadPool,
+    model: &Model,
+    prog: &Rv32Program,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
+    let shards: Vec<&[Vec<f32>]> = xs.chunks(shard_size(xs.len(), pool.threads())).collect();
+    let runs = pool.par_map(shards, |shard| run_rv32(model, prog, shard));
+    merge_runs(runs, xs.len())
+}
+
+/// [`run_tpisa`] with the samples sharded across `pool`.
+pub fn run_tpisa_on(
+    pool: &ThreadPool,
+    model: &Model,
+    prog: &TpIsaProgram,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
+    let shards: Vec<&[Vec<f32>]> = xs.chunks(shard_size(xs.len(), pool.threads())).collect();
+    let runs = pool.par_map(shards, |shard| run_tpisa(model, prog, shard));
+    merge_runs(runs, xs.len())
 }
 
 /// Convenience: accuracy of a batch run against labels.

@@ -90,6 +90,17 @@ impl Args {
         self.opt_str(name).ok_or_else(|| anyhow!("missing required option --{name}"))
     }
 
+    /// The shared `--threads` knob: explicit option, else `PBSP_THREADS`,
+    /// else the machine's parallelism
+    /// ([`crate::util::threadpool::default_threads`]).
+    pub fn threads(&self) -> Result<usize> {
+        let t = self.parse_or("threads", crate::util::threadpool::default_threads())?;
+        if t == 0 {
+            bail!("--threads must be positive");
+        }
+        Ok(t)
+    }
+
     /// Reject unknown options/flags (call after all accessors).
     pub fn finish(&self) -> Result<()> {
         let seen = self.consumed.borrow();
@@ -150,5 +161,15 @@ mod tests {
     fn require_missing() {
         let a = args("run");
         assert!(a.require("model").is_err());
+    }
+
+    #[test]
+    fn threads_knob() {
+        let a = args("report --threads 3");
+        assert_eq!(a.threads().unwrap(), 3);
+        assert!(a.finish().is_ok());
+        // Zero is rejected; absent falls back to a positive default.
+        assert!(args("report --threads 0").threads().is_err());
+        assert!(args("report").threads().unwrap() > 0);
     }
 }

@@ -1,30 +1,102 @@
-//! Fixed-size thread pool over std channels (offline substitute for tokio
-//! / rayon).  The coordinator's event loop and the DSE sweeps run on it.
+//! Fixed-size thread pool over std channels (offline substitute for
+//! tokio / rayon), plus the ordered scatter-gather [`ThreadPool::par_map`]
+//! the evaluation spine runs on.
+//!
+//! Who actually runs on the pool (kept in sync with ARCHITECTURE.md):
+//!
+//! * the DSE sweeps — `dse::sweep::{zr_table1, tpisa_sweep}` shard their
+//!   per-model ISS runs across the pool owned by
+//!   `dse::context::EvalContext` (the `--threads` knob);
+//! * workload profiling — `bespoke::profile::profile_all` and friends;
+//! * batch ISS harness runs — `ml::harness::{run_rv32_on, run_tpisa_on}`
+//!   shard samples;
+//! * the coordinator's bulk path — `coordinator::service::Service::crosscheck`
+//!   fans one verification job per (model, precision) out over the
+//!   pool, each driving the bulk `scores` path concurrently.
+//!
+//! The PJRT runtime does **not** run here: its handles are not `Send`,
+//! so it stays on the coordinator's dedicated worker thread
+//! (`coordinator::service`).
+//!
+//! Parallel results are gathered in input order and the aggregation
+//! types folded over them (`sim::trace::Profile`, `ml::harness::BatchRun`)
+//! merge in that order, so every report is bit-identical at any thread
+//! count — the determinism tests in `tests/parallel_determinism.rs`
+//! enforce this.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+type CaughtPanic = Box<dyn std::any::Any + Send + 'static>;
 
 /// A simple work-stealing-free pool: one shared queue, N workers.
 pub struct ThreadPool {
     tx: Option<Sender<Job>>,
+    /// Shared job queue.  Workers block on it; `par_map` gathers also
+    /// steal from it (via `try_lock`) while waiting, so nested
+    /// scatter-gathers make progress even with every worker busy.
+    queue: Arc<Mutex<Receiver<Job>>>,
     workers: Vec<JoinHandle<()>>,
+}
+
+/// Worker count used when no explicit `--threads` is given: the
+/// `PBSP_THREADS` environment variable if set to a positive integer,
+/// else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("PBSP_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4))
+}
+
+/// The process-wide shared pool, sized by [`default_threads`] — for
+/// callers that do not own an `EvalContext` (and its pool).
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Record one gathered result, remembering the lowest-indexed panic.
+fn record<R>(
+    out: &mut [Option<R>],
+    first_panic: &mut Option<(usize, CaughtPanic)>,
+    i: usize,
+    r: Result<R, CaughtPanic>,
+) {
+    match r {
+        Ok(v) => out[i] = Some(v),
+        Err(p) => {
+            if first_panic.as_ref().map_or(true, |(fi, _)| i < *fi) {
+                *first_panic = Some((i, p));
+            }
+        }
+    }
+}
+
+/// Pretend a borrowing job is `'static`.  Sound only because `par_map`
+/// receives every job's result before returning (see the SAFETY comment
+/// at its call site).
+unsafe fn erase_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
+    std::mem::transmute(job)
 }
 
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
         let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(Mutex::new(rx));
         let workers = (0..threads)
             .map(|i| {
-                let rx = Arc::clone(&rx);
+                let queue = Arc::clone(&queue);
                 std::thread::Builder::new()
                     .name(format!("pbsp-worker-{i}"))
                     .spawn(move || loop {
-                        let job = { rx.lock().unwrap().recv() };
+                        let job = { queue.lock().unwrap().recv() };
                         match job {
                             Ok(job) => job(),
                             Err(_) => break, // sender dropped: shut down
@@ -33,7 +105,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(tx), queue, workers }
     }
 
     /// Pool sized to the machine (at least 2).
@@ -42,38 +114,118 @@ impl ThreadPool {
         Self::new(n.max(2))
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(job))
-            .expect("workers alive");
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
     }
 
-    /// Map `items` through `f` in parallel, preserving order.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        self.send_job(Box::new(job));
+    }
+
+    fn send_job(&self, job: Job) {
+        self.tx.as_ref().expect("pool shut down").send(job).expect("workers alive");
+    }
+
+    /// Run one queued job on the calling thread if one is immediately
+    /// available; returns whether a job was run.  `try_lock` (not
+    /// `lock`): an idle worker holds the queue mutex while blocked in
+    /// `recv`, and waiting for it here could outlive our own results.
+    fn try_run_one(&self) -> bool {
+        let job = match self.queue.try_lock() {
+            Ok(q) => q.try_recv().ok(),
+            Err(_) => None,
+        };
+        match job {
+            Some(job) => {
+                job();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Scatter `items` across the pool and gather the results of `f` in
+    /// input order.
+    ///
+    /// Unlike [`ThreadPool::map`], the closure and the items may borrow
+    /// from the caller's stack: the call returns only after every job
+    /// has finished.  While gathering, the calling thread helps drain
+    /// the shared queue, so `par_map` may be nested (a job may itself
+    /// call `par_map` on the same pool) without deadlocking.
+    ///
+    /// If any job panics, the payload of the lowest-indexed failing
+    /// item is re-raised here — after all jobs have completed, so no
+    /// borrow escapes and the pool stays usable.
+    pub fn par_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let (rtx, rrx) = channel::<(usize, Result<R, CaughtPanic>)>();
+        {
+            let f = &f;
+            for (i, item) in items.into_iter().enumerate() {
+                let rtx = rtx.clone();
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                    let _ = rtx.send((i, r));
+                });
+                // SAFETY: the gather loop below blocks until all `n`
+                // results have been received, so every job — and every
+                // borrow of `f`, the items and the caller's stack it
+                // captures — completes before `par_map` returns.
+                self.send_job(unsafe { erase_lifetime(job) });
+            }
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, CaughtPanic)> = None;
+        let mut received = 0usize;
+        while received < n {
+            match rrx.try_recv() {
+                Ok((i, r)) => {
+                    received += 1;
+                    record(&mut out, &mut first_panic, i, r);
+                    continue;
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => {
+                    panic!("pool shut down with {} results outstanding", n - received)
+                }
+            }
+            if self.try_run_one() {
+                continue;
+            }
+            // Nothing runnable right now: park until a result lands.
+            match rrx.recv_timeout(Duration::from_millis(1)) {
+                Ok((i, r)) => {
+                    received += 1;
+                    record(&mut out, &mut first_panic, i, r);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("pool shut down with {} results outstanding", n - received)
+                }
+            }
+        }
+        if let Some((_, p)) = first_panic {
+            resume_unwind(p);
+        }
+        out.into_iter().map(|r| r.expect("result missing")).collect()
+    }
+
+    /// Map `items` through `f` in parallel, preserving order —
+    /// [`ThreadPool::par_map`] for owned (`'static`) data.
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
-        let f = Arc::new(f);
-        let (tx, rx): (Sender<(usize, R)>, Receiver<(usize, R)>) = channel();
-        let n = items.len();
-        for (i, item) in items.into_iter().enumerate() {
-            let tx = tx.clone();
-            let f = Arc::clone(&f);
-            self.execute(move || {
-                let r = f(item);
-                let _ = tx.send((i, r));
-            });
-        }
-        drop(tx);
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
-        }
-        out.into_iter().map(|r| r.expect("worker panicked")).collect()
+        self.par_map(items, f)
     }
 }
 
@@ -128,5 +280,60 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<i32> = pool.map(Vec::<i32>::new(), |i| i);
         assert!(out.is_empty());
+    }
+
+    /// Satellite: ordered scatter-gather over *borrowed* data.
+    #[test]
+    fn par_map_borrows_and_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let base: Vec<i64> = (0..100).collect();
+        let out = pool.par_map((0..100usize).collect::<Vec<_>>(), |i| base[i] * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<i64>>());
+    }
+
+    /// Satellite: panics propagate to the caller (lowest index wins)
+    /// and the pool survives them.
+    #[test]
+    fn par_map_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.par_map(vec![0, 1, 2, 3], |i| {
+                if i % 2 == 1 {
+                    panic!("boom {i}");
+                }
+                i
+            })
+        }));
+        let payload = r.expect_err("panic must propagate");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert_eq!(msg, "boom 1");
+        // The workers caught the panic, so the pool is still usable.
+        assert_eq!(pool.par_map(vec![1, 2], |i| i + 1), vec![2, 3]);
+    }
+
+    /// Nested `par_map` on the same pool must not deadlock, even with
+    /// fewer workers than outer jobs (the gather loop helps drain the
+    /// queue).
+    #[test]
+    fn par_map_nests_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        let out = pool.par_map((0..8).collect::<Vec<i32>>(), |i| {
+            pool.par_map((0..8).collect::<Vec<i32>>(), |j| i * 10 + j).iter().sum::<i32>()
+        });
+        let want: Vec<i32> = (0..8).map(|i| (0..8).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn par_map_single_thread_matches_sequential() {
+        let pool = ThreadPool::new(1);
+        let out = pool.par_map((0..20).collect::<Vec<u64>>(), |i| i * i);
+        assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() > 0);
+        assert!(global().threads() > 0);
     }
 }

@@ -14,6 +14,8 @@ use printed_bespoke::ml::dataset::Dataset;
 use printed_bespoke::ml::harness;
 use printed_bespoke::ml::manifest::Manifest;
 use printed_bespoke::ml::model::Model;
+use printed_bespoke::util::rng::Pcg32;
+use printed_bespoke::util::threadpool;
 
 fn load() -> Option<(Manifest, Vec<Model>)> {
     let dir = printed_bespoke::artifacts_dir().ok()?;
@@ -116,6 +118,118 @@ fn tpisa_4bit_unrolled_svm() {
     // Multi-layer models must be rejected cleanly on the 4-bit core.
     if let Some(mlp) = models.iter().find(|m| m.layers.len() > 1) {
         assert!(codegen_tpisa::generate(mlp, 4, TpVariant::Baseline).is_err());
+    }
+}
+
+/// Forward pass whose every multiply-accumulate goes through the
+/// `sim::mac_model` functional unit (32-bit datapath, p-bit lanes) —
+/// the third rust implementation of the numeric contract, independent
+/// of both `Model::quantized_forward` and the ISS-executed programs.
+fn mac_model_forward(model: &Model, x: &[f32], p: u32) -> Vec<f64> {
+    use printed_bespoke::hw::mac_unit::MacConfig;
+    use printed_bespoke::ml::quant::{pack_vec, quantize, rescale};
+    use printed_bespoke::sim::mac_model::MacState;
+    let qls = model.qlayers(p).unwrap();
+    let mut h: Vec<i64> = x.iter().map(|&v| quantize(v as f64, qls[0].fx, p)).collect();
+    let mut raw: Vec<f64> = Vec::new();
+    for (li, (layer, ql)) in model.layers.iter().zip(qls).enumerate() {
+        let k = ql.qw.len();
+        let n = ql.qb.len();
+        let last = li == model.layers.len() - 1;
+        let mut next = Vec::with_capacity(n);
+        for j in 0..n {
+            let col: Vec<i64> = (0..k).map(|kk| ql.qw[kk][j]).collect();
+            let aw = pack_vec(&h, p, 32);
+            let bw = pack_vec(&col, p, 32);
+            let mut st = MacState::new(MacConfig::new(32, p));
+            for (a, b) in aw.iter().zip(&bw) {
+                st.mac(*a, *b);
+            }
+            let acc = ql.qb[j].wrapping_add(st.total());
+            if last {
+                next.push(acc);
+            } else {
+                let mut y = rescale(acc, ql.shift, p);
+                if layer.relu {
+                    y = y.max(0);
+                }
+                next.push(y);
+            }
+        }
+        if last {
+            let scale = (1i64 << (ql.fx + ql.fw)) as f64;
+            raw = next.iter().map(|&a| a as f64 / scale).collect();
+        } else {
+            h = next;
+        }
+    }
+    model.head_scores(&raw)
+}
+
+/// Satellite: differential fuzz — for *random* in-range inputs (not the
+/// fixed test sets) on every fixture model/precision, three independent
+/// implementations agree bit-for-bit: the ISS-executed generated
+/// programs (RV32 SIMD and TP-ISA MAC), the `ml::quant`-based reference
+/// (`Model::quantized_forward`) and a `sim::mac_model`-driven forward
+/// pass.  The sharded harness must match the sequential one exactly.
+#[test]
+fn fuzz_differential_iss_quant_mac_model() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x0D1F_F0A5);
+    for model in &models {
+        // In-range inputs: random convex combinations of dataset rows
+        // (inside the data hull by construction, so the fixed-point
+        // headroom calibrated on the dataset still holds).
+        let ds = Dataset::load(man.data_dir(), &model.dataset, "test").unwrap();
+        for p in [32u32, 16, 8, 4] {
+            if model.qlayers(p).is_err() {
+                continue;
+            }
+            let xs: Vec<Vec<f32>> = (0..6)
+                .map(|_| {
+                    let a = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+                    let b = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+                    let t = rng.f64() as f32;
+                    a.iter().zip(b).map(|(&va, &vb)| va + t * (vb - va)).collect()
+                })
+                .collect();
+            let want: Vec<Vec<f64>> =
+                xs.iter().map(|x| model.quantized_forward(x, p).unwrap()).collect();
+            // Implementation 2: the SIMD MAC functional model.
+            for (i, x) in xs.iter().enumerate() {
+                assert_eq!(
+                    mac_model_forward(model, x, p),
+                    want[i],
+                    "{} p{p} sample {i}: mac_model vs quant reference",
+                    model.name
+                );
+            }
+            // Implementation 3a: RV32 SIMD codegen on the Zero-Riscy ISS
+            // (SIMD variants exist for p <= 16), sequential and sharded.
+            if p <= 16 {
+                let prog = codegen_rv32::generate(model, Rv32Variant::Simd(p)).unwrap();
+                let run = harness::run_rv32(model, &prog, &xs).unwrap();
+                assert_eq!(run.scores, want, "{} p{p}: rv32 ISS", model.name);
+                let par = harness::run_rv32_on(threadpool::global(), model, &prog, &xs).unwrap();
+                assert_eq!(par.scores, run.scores, "{} p{p}: sharded rv32", model.name);
+                assert_eq!(par.predictions, run.predictions);
+                assert_eq!(par.profile.cycles, run.profile.cycles);
+            }
+            // Implementation 3b: TP-ISA MAC codegen on the TP-ISA ISS
+            // (sub-width MAC configs exist for p <= 16 on the d32 core).
+            if p <= 16 {
+                let variant = TpVariant::Mac { precision: p };
+                let prog = codegen_tpisa::generate(model, 32, variant).unwrap();
+                let run = harness::run_tpisa(model, &prog, &xs).unwrap();
+                assert_eq!(run.scores, want, "{} d32 p{p}: tp-isa ISS", model.name);
+                let par = harness::run_tpisa_on(threadpool::global(), model, &prog, &xs).unwrap();
+                assert_eq!(par.scores, run.scores, "{} d32 p{p}: sharded tp-isa", model.name);
+                assert_eq!(par.profile.cycles, run.profile.cycles);
+            }
+        }
     }
 }
 

@@ -112,7 +112,8 @@ fn streaming_equals_bulk() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let svc = Service::start(ServiceConfig { max_batch: 16, linger_ms: 1 }).unwrap();
+    let cfg = ServiceConfig { max_batch: 16, linger_ms: 1, ..ServiceConfig::default() };
+    let svc = Service::start(cfg).unwrap();
     let model = &svc.models[3];
     let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test").unwrap();
     let xs: Vec<Vec<f32>> = ds.x.iter().take(50).cloned().collect();

@@ -1,0 +1,76 @@
+//! Satellite: the parallel evaluation engine must be *bit-identical* to
+//! sequential execution.  The Table-I and Fig.-5 sweeps run twice —
+//! `threads = 1` and `threads = 8` — and every report byte and every
+//! underlying f64 bit pattern must match.  This is the contract that
+//! lets every future scaling PR parallelise freely: sharded gathers
+//! merge in input order, so thread count can never leak into results.
+//!
+//! Runs against `make artifacts` output when present, else the
+//! checked-in `artifacts-fixture/`; skips only if both are missing.
+
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::dse::report;
+
+fn ctx(threads: usize) -> Option<EvalContext> {
+    EvalContext::load_with_threads(3, threads).ok()
+}
+
+#[test]
+fn zr_table1_is_thread_count_invariant() {
+    let (Some(c1), Some(c8)) = (ctx(1), ctx(8)) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let t1 = report::table1(&c1).unwrap();
+    let t8 = report::table1(&c8).unwrap();
+    // Byte-identical report text...
+    assert_eq!(t1.text, t8.text);
+    // ...and bit-identical floats underneath (text formatting rounds).
+    assert_eq!(t1.rows.len(), t8.rows.len());
+    for (a, b) in t1.rows.iter().zip(&t8.rows) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "{}: area", a.name);
+        assert_eq!(a.power_mw.to_bits(), b.power_mw.to_bits(), "{}: power", a.name);
+        assert_eq!(a.speedup_pct.to_bits(), b.speedup_pct.to_bits(), "{}: speedup", a.name);
+        assert_eq!(a.acc_loss_pct.to_bits(), b.acc_loss_pct.to_bits(), "{}: acc", a.name);
+        assert_eq!(a.rom_cells_avg.to_bits(), b.rom_cells_avg.to_bits(), "{}: rom", a.name);
+    }
+}
+
+#[test]
+fn tpisa_sweep_is_thread_count_invariant() {
+    let (Some(c1), Some(c8)) = (ctx(1), ctx(8)) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let f1 = report::fig5(&c1).unwrap();
+    let f8 = report::fig5(&c8).unwrap();
+    assert_eq!(f1.text, f8.text);
+    assert_eq!(f1.pareto, f8.pareto);
+    assert_eq!(f1.points.len(), f8.points.len());
+    for (a, b) in f1.points.iter().zip(&f8.points) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.cycles_avg.to_bits(), b.cycles_avg.to_bits(), "{}: cycles", a.label);
+        assert_eq!(a.speedup_pct.to_bits(), b.speedup_pct.to_bits(), "{}: speedup", a.label);
+        assert_eq!(a.err_pct.to_bits(), b.err_pct.to_bits(), "{}: err", a.label);
+        assert_eq!(
+            a.rom_cells_avg.to_bits(),
+            b.rom_cells_avg.to_bits(),
+            "{}: rom",
+            a.label
+        );
+    }
+}
+
+#[test]
+fn mem_report_is_thread_count_invariant() {
+    let (Some(c1), Some(c8)) = (ctx(1), ctx(8)) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let m1 = report::mem(&c1).unwrap();
+    let m8 = report::mem(&c8).unwrap();
+    assert_eq!(m1.text, m8.text);
+    assert_eq!(m1.mul_saving_pct.to_bits(), m8.mul_saving_pct.to_bits());
+    assert_eq!(m1.simd_saving_pct.to_bits(), m8.simd_saving_pct.to_bits());
+}
