@@ -2,7 +2,7 @@
 # tier-1 verification and needs nothing beyond a Rust toolchain: the
 # checked-in artifacts-fixture/ stands in for `make artifacts` output.
 
-.PHONY: all build test bench doc fmt fmt-check artifacts fixture python-test clean
+.PHONY: all build test bench doc fmt fmt-check serve loadgen artifacts fixture python-test clean
 
 all: build
 
@@ -26,6 +26,15 @@ fmt:
 
 fmt-check:
 	cargo fmt --check
+
+# HTTP inference frontend on a fixed local port (ctrl-c to stop).
+serve:
+	cargo run --release --bin pbsp -- serve --addr 127.0.0.1:8080
+
+# Deterministic device-fleet burst against an in-process frontend;
+# exits non-zero on any request error (the CI smoke gate).
+loadgen:
+	cargo run --release --bin pbsp -- loadgen --fleet 8 --requests 50 --seed 1
 
 # -- Artifacts ---------------------------------------------------------------
 

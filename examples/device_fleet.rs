@@ -1,0 +1,79 @@
+//! End-to-end driver: a fleet of printed devices reporting over HTTP.
+//!
+//! Where `smart_packaging.rs` streams readings through the coordinator
+//! *in process*, this example stands up the full network path the
+//! paper's §I scenario implies — disposable sensors (smart packaging,
+//! healthcare patches) pushing classifications to a backend:
+//!
+//!   device fleet ── HTTP/1.1 keep-alive ──► server (acceptor + pool)
+//!       ──► router/dynamic batcher ──► PJRT runtime worker
+//!
+//! Each simulated device owns one keep-alive connection and a PCG
+//! stream that decides which model it reports to and which test-set
+//! reading it sends, so a (seed, fleet) pair is fully reproducible.
+//! The example prints the manifest as served by `/v1/models`, the fleet
+//! latency/throughput report, per-model traffic, and both metric
+//! families from `/metrics`.
+//!
+//! Run: `cargo run --release --example device_fleet -- [--fleet N]`
+//! (hermetic: falls back to `artifacts-fixture/` without `make
+//! artifacts`).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::server::http::Client;
+use printed_bespoke::server::{loadgen, Server, ServerConfig};
+use printed_bespoke::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let fleet: usize = args.parse_or("fleet", 12)?;
+    let requests: usize = args.parse_or("requests", 40)?;
+    let seed: u64 = args.parse_or("seed", 7)?;
+    let think_ms: u64 = args.parse_or("think-ms", 2)?;
+    let threads = args.threads()?;
+    args.finish()?;
+
+    let svc = Arc::new(Service::start(ServiceConfig { threads, ..ServiceConfig::default() })?);
+    // fleet + headroom: the probe connection below holds a slot too
+    // (over-capacity connections are refused with 503 by design).
+    let scfg = ServerConfig { http_threads: fleet + 4, ..ServerConfig::default() };
+    let mut server = Server::start(Arc::clone(&svc), scfg)?;
+    println!("frontend listening on http://{}\n", server.addr());
+
+    // What a device integrator would fetch first: the served manifest.
+    let mut probe = Client::connect(server.addr())?;
+    let (status, manifest) = probe.get("/v1/models")?;
+    println!("GET /v1/models -> {status}\n{manifest}\n");
+
+    // The fleet: closed-loop devices with a little think-time jitter.
+    let cfg = loadgen::LoadgenConfig {
+        fleet,
+        requests_per_device: requests,
+        seed,
+        think_ms,
+        precision: 8,
+    };
+    let report = loadgen::run(server.addr(), &cfg)?;
+    println!("{}\n", report.summary());
+
+    // Per-model traffic mix (the PCG streams spread it evenly).
+    let mut per_model = std::collections::BTreeMap::<usize, usize>::new();
+    for r in &report.records {
+        *per_model.entry(r.model).or_default() += 1;
+    }
+    println!("traffic mix:");
+    for (mi, count) in &per_model {
+        println!("  {:<18} {:>5} readings", svc.models[*mi].name, count);
+    }
+
+    // Fresh connection: the probe's may have been idle-reaped while
+    // the fleet ran (keep-alive budget).
+    let mut probe = Client::connect(server.addr())?;
+    let (_, metrics) = probe.get("/metrics")?;
+    println!("\nGET /metrics\n{metrics}");
+    server.shutdown();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Serving-layer bench: end-to-end HTTP frontend throughput and
+//! latency under a closed-loop device fleet at sizes {1, 8, 64}
+//! (ISSUE 3 acceptance artifact).  Each fleet size gets a fresh
+//! service + frontend on an ephemeral port; the load generator reports
+//! requests/s and nearest-rank p50/p90/p99 over real sockets, and the
+//! coordinator line shows how well concurrent connections coalesced in
+//! the dynamic batcher (mean-batch > 1 at fleet >= 8).
+
+use std::sync::Arc;
+
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::server::{loadgen::LoadgenConfig, Server, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    // (fleet, requests per device): ~256-512 total requests per point.
+    for &(fleet, per_device) in &[(1usize, 256usize), (8, 64), (64, 8)] {
+        let svc = Arc::new(Service::start(ServiceConfig::default())?);
+        // +4 headroom: the warm-up run's connection may not have been
+        // reaped yet when the timed fleet connects (the acceptor
+        // refuses over-capacity connections with 503).
+        let scfg = ServerConfig { http_threads: fleet.max(8) + 4, ..ServerConfig::default() };
+        let mut server = Server::start(Arc::clone(&svc), scfg)?;
+
+        // Warm-up: compile every (model, p8) executable once so the
+        // timed run measures serving, not compilation.
+        let warm =
+            LoadgenConfig { fleet: 1, requests_per_device: 16, seed: 99, ..Default::default() };
+        printed_bespoke::server::loadgen::run(server.addr(), &warm)?;
+
+        let cfg = LoadgenConfig {
+            fleet,
+            requests_per_device: per_device,
+            seed: 42,
+            think_ms: 0,
+            precision: 8,
+        };
+        let r = printed_bespoke::server::loadgen::run(server.addr(), &cfg)?;
+        println!(
+            "fleet {fleet:>3} x {per_device:>3} reqs: {:>8.0} req/s  p50 {:>7.2} ms  \
+             p90 {:>7.2} ms  p99 {:>7.2} ms  errors {}",
+            r.rps, r.p50_ms, r.p90_ms, r.p99_ms, r.errors
+        );
+        server.shutdown();
+        println!("  coordinator: {}", svc.metrics.lock().unwrap().summary());
+        assert_eq!(r.errors, 0, "serving errors under fleet {fleet}");
+        assert!(r.rps > 0.0, "zero throughput under fleet {fleet}");
+    }
+    Ok(())
+}

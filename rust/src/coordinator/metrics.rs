@@ -1,19 +1,47 @@
 //! Coordinator metrics: request/batch counters, batch-size and latency
 //! distributions.  Shared between the service facade and the worker via
 //! `Arc<Mutex<_>>`; snapshots are cheap copies.
+//!
+//! Distributions are fixed-capacity seeded reservoirs ([`Reservoir`]),
+//! not unbounded vectors: under sustained
+//! serving traffic the old `Vec<f64>` fields grew without limit, while
+//! a reservoir keeps memory constant and still reports exact
+//! count/sum/mean plus sampled percentiles.  The reservoirs are
+//! deterministic for a given request sequence (owned PCG streams).
 
 use std::sync::{Arc, Mutex};
 
-use crate::util::stats;
+use crate::util::stats::Reservoir;
 
-#[derive(Debug, Default, Clone)]
+/// Retained sample size per distribution.  1024 points bound each
+/// reservoir to ~8 KiB while keeping p99 estimates stable.
+pub const RESERVOIR_CAP: usize = 1024;
+
+#[derive(Debug, Clone)]
 pub struct Metrics {
     pub requests: u64,
     pub batches: u64,
-    pub batch_sizes: Vec<f64>,
-    pub exec_ms: Vec<f64>,
-    pub queue_ms: Vec<f64>,
+    pub batch_sizes: Reservoir,
+    pub exec_ms: Reservoir,
+    /// Streaming-path queueing delay (enqueue -> dispatch), recorded
+    /// per request by the worker when a dynamic batch is cut.
+    pub queue_ms: Reservoir,
     pub compiles: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        // Distinct fixed streams per distribution so the three
+        // reservoirs stay independent but reproducible.
+        Metrics {
+            requests: 0,
+            batches: 0,
+            batch_sizes: Reservoir::new(RESERVOIR_CAP, 0xba7c),
+            exec_ms: Reservoir::new(RESERVOIR_CAP, 0xe8ec),
+            queue_ms: Reservoir::new(RESERVOIR_CAP, 0x9e0e),
+            compiles: 0,
+        }
+    }
 }
 
 impl Metrics {
@@ -24,11 +52,15 @@ impl Metrics {
         self.exec_ms.push(exec_ms);
     }
 
+    pub fn record_queue_ms(&mut self, ms: f64) {
+        self.queue_ms.push(ms);
+    }
+
     pub fn mean_batch_size(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             0.0
         } else {
-            stats::mean(&self.batch_sizes)
+            self.batch_sizes.mean()
         }
     }
 
@@ -36,7 +68,7 @@ impl Metrics {
         if self.exec_ms.is_empty() {
             0.0
         } else {
-            stats::mean(&self.exec_ms)
+            self.exec_ms.mean()
         }
     }
 
@@ -44,8 +76,8 @@ impl Metrics {
         let lat = if self.exec_ms.is_empty() {
             "n/a".to_string()
         } else {
-            let s = stats::summarize(&self.exec_ms);
-            format!("{:.2}/{:.2}/{:.2} ms (p50/p95/p99)", s.p50, s.p95, s.p99)
+            let p = self.exec_ms.percentiles(&[50.0, 95.0, 99.0]);
+            format!("{:.2}/{:.2}/{:.2} ms (p50/p95/p99)", p[0], p[1], p[2])
         };
         format!(
             "requests {} batches {} mean-batch {:.1} exec {lat} compiles {}",
@@ -78,5 +110,46 @@ mod tests {
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
         assert!((m.mean_exec_ms() - 2.0).abs() < 1e-12);
         assert!(m.summary().contains("requests 12"));
+    }
+
+    /// Regression (unbounded growth): sustained traffic must not grow
+    /// the distributions past the reservoir cap, while counters and
+    /// means stay exact.
+    #[test]
+    fn sustained_traffic_stays_bounded() {
+        let mut m = Metrics::default();
+        let n = 50_000u64;
+        for i in 0..n {
+            m.record_batch(2, (i % 10) as f64);
+            m.record_queue_ms((i % 5) as f64);
+        }
+        assert_eq!(m.requests, 2 * n);
+        assert_eq!(m.batches, n);
+        assert!(m.batch_sizes.samples().len() <= RESERVOIR_CAP);
+        assert!(m.exec_ms.samples().len() <= RESERVOIR_CAP);
+        assert!(m.queue_ms.samples().len() <= RESERVOIR_CAP);
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-12);
+        assert!((m.mean_exec_ms() - 4.5).abs() < 1e-12);
+        assert_eq!(m.queue_ms.count(), n);
+        // Percentiles remain available and in-range.
+        let p99 = m.exec_ms.percentile(99.0);
+        assert!((0.0..=9.0).contains(&p99));
+    }
+
+    /// Metrics fed the same request sequence are identical (seeded
+    /// reservoirs), so metric snapshots are reproducible.
+    #[test]
+    fn deterministic_for_a_request_sequence() {
+        let feed = || {
+            let mut m = Metrics::default();
+            for i in 0..5000usize {
+                m.record_batch(1 + (i % 7), (i % 13) as f64);
+            }
+            m
+        };
+        let (a, b) = (feed(), feed());
+        assert_eq!(a.exec_ms.samples(), b.exec_ms.samples());
+        assert_eq!(a.batch_sizes.samples(), b.batch_sizes.samples());
+        assert_eq!(a.summary(), b.summary());
     }
 }

@@ -354,7 +354,7 @@ fn worker_loop(
                             let _ = reply.send(r);
                         }
                         Job::Shutdown => {
-                            drain_router(&mut router, &mut runtime, &mut run_batch);
+                            drain_router(&mut router, &mut runtime, &mut run_batch, &shared);
                             return;
                         }
                     }
@@ -366,7 +366,7 @@ fn worker_loop(
                 // collected them); only a genuinely idle queue flushes
                 // early, collapsing single-request latency from
                 // ~linger+timeout to ~execute time.
-                drain_router(&mut router, &mut runtime, &mut run_batch);
+                drain_router(&mut router, &mut runtime, &mut run_batch, &shared);
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
@@ -374,10 +374,10 @@ fn worker_loop(
         // Dispatch ready batches (full or past their linger window).
         let now = Instant::now();
         while let Some((key, batch)) = router.next_batch(now) {
-            dispatch(&mut runtime, &key, batch, &mut run_batch);
+            dispatch(&mut runtime, &key, batch, &mut run_batch, &shared);
         }
     }
-    drain_router(&mut router, &mut runtime, &mut run_batch);
+    drain_router(&mut router, &mut runtime, &mut run_batch, &shared);
 }
 
 fn dispatch(
@@ -385,7 +385,16 @@ fn dispatch(
     key: &Key,
     batch: Vec<super::batcher::Pending<StreamReq>>,
     run_batch: &mut impl FnMut(&mut Runtime, &Key, &[Vec<f32>]) -> Result<Scores, String>,
+    shared: &metrics::Shared,
 ) {
+    // Streaming queueing delay (enqueue -> dispatch), per request.
+    let now = Instant::now();
+    {
+        let mut m = shared.lock().unwrap();
+        for p in &batch {
+            m.record_queue_ms(now.duration_since(p.enqueued).as_secs_f64() * 1e3);
+        }
+    }
     let xs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.x.clone()).collect();
     match run_batch(runtime, key, &xs) {
         Ok(scores) => {
@@ -405,8 +414,9 @@ fn drain_router(
     router: &mut Router<StreamReq>,
     runtime: &mut Runtime,
     run_batch: &mut impl FnMut(&mut Runtime, &Key, &[Vec<f32>]) -> Result<Scores, String>,
+    shared: &metrics::Shared,
 ) {
     while let Some((key, batch)) = router.flush_any() {
-        dispatch(runtime, &key, batch, run_batch);
+        dispatch(runtime, &key, batch, run_batch, shared);
     }
 }

@@ -13,7 +13,8 @@
 //!   cost modelling ([`hw`]), ISA toolchains ([`isa`]), cycle-approximate
 //!   simulators ([`sim`]), ML code generation ([`ml`]), utilization-driven
 //!   logic reduction ([`bespoke`]), design-space exploration ([`dse`]),
-//!   and a PJRT-backed evaluation service ([`runtime`], [`coordinator`]).
+//!   and a PJRT-backed evaluation service ([`runtime`], [`coordinator`])
+//!   fronted by an owned HTTP serving layer ([`server`]).
 //!
 //! Python never runs on the request path: after `make artifacts`, the
 //! rust binary is self-contained.
@@ -25,6 +26,7 @@ pub mod hw;
 pub mod isa;
 pub mod ml;
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod util;
 

@@ -7,13 +7,21 @@
 //! pbsp report <fig1|table1|fig4|fig5|table2|mem|all>
 //! pbsp eval --model <name> [--precision N] [--backend iss|pjrt|both]
 //! pbsp serve [--requests N] [--batch N]         coordinator demo loop
+//! pbsp serve --addr HOST:PORT [--http-threads N] [--duration-s N]
+//!                                               HTTP inference frontend
+//! pbsp loadgen --fleet N [--requests N] [--seed S] [--think-ms T]
+//!              [--addr HOST:PORT] [--out FILE]   device-fleet load test
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
 //! ```
 //!
-//! `report`, `eval`, `serve` and `crosscheck` all take `--threads N`
-//! (default: `PBSP_THREADS`, else the machine's parallelism) — the
-//! sweep/evaluation pool size.  Parallel results are bit-identical to
-//! `--threads 1`.
+//! `report`, `eval`, `serve`, `loadgen` and `crosscheck` all take
+//! `--threads N` (default: `PBSP_THREADS`, else the machine's
+//! parallelism) — the sweep/evaluation pool size.  Parallel results are
+//! bit-identical to `--threads 1`.
+
+use std::net::ToSocketAddrs;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use printed_bespoke::bespoke::profile::profile_suite;
@@ -21,6 +29,7 @@ use printed_bespoke::coordinator::service::{Service, ServiceConfig};
 use printed_bespoke::dse::{context::EvalContext, report};
 use printed_bespoke::hw::egfet::egfet;
 use printed_bespoke::hw::synth::{synthesize, tpisa, zero_riscy};
+use printed_bespoke::server::{loadgen, Server, ServerConfig};
 use printed_bespoke::util::cli::Args;
 
 fn main() {
@@ -38,6 +47,7 @@ fn run() -> Result<()> {
         Some("report") => cmd_report(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("crosscheck") => cmd_crosscheck(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
@@ -47,7 +57,8 @@ fn run() -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: pbsp <synth|profile|report|eval|serve|crosscheck> [options]";
+const USAGE: &str =
+    "usage: pbsp <synth|profile|report|eval|serve|loadgen|crosscheck> [options]";
 
 fn cmd_synth(args: &Args) -> Result<()> {
     let core = args.str_or("core", "zero-riscy");
@@ -165,12 +176,103 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.parse_or("requests", 200usize)?;
     let batch = args.parse_or("batch", 64usize)?;
+    let addr = args.opt_str("addr").map(String::from);
+    let http_threads = args.opt_parse::<usize>("http-threads")?;
+    let duration_s = args.parse_or("duration-s", 0u64)?;
     let threads = args.threads()?;
     args.finish()?;
     let cfg = ServiceConfig { max_batch: batch, threads, ..ServiceConfig::default() };
-    let svc = Service::start(cfg)?;
-    let stats = svc.demo_load(requests)?;
-    println!("{stats}");
+    let Some(addr) = addr else {
+        // Legacy in-process demo loop (no network).
+        let svc = Service::start(cfg)?;
+        let stats = svc.demo_load(requests)?;
+        println!("{stats}");
+        return Ok(());
+    };
+    // HTTP frontend mode: bind, serve until killed (or --duration-s).
+    let svc = Arc::new(Service::start(cfg)?);
+    let mut scfg = ServerConfig { addr, ..ServerConfig::default() };
+    match http_threads {
+        Some(t) => scfg.http_threads = t,
+        // Standalone serving: be generous — each worker just blocks on
+        // a socket, and over-capacity connections are refused with 503.
+        None => scfg.http_threads = scfg.http_threads.max(32),
+    }
+    let mut server = Server::start(Arc::clone(&svc), scfg)?;
+    println!("pbsp-http listening on http://{}", server.addr());
+    println!("  curl -s http://{}/healthz", server.addr());
+    println!(
+        "  curl -s -X POST http://{}/v1/score/{}/p8 -d '{{\"x\": [0.1, 0.2]}}'",
+        server.addr(),
+        svc.models.first().map(|m| m.name.as_str()).unwrap_or("MODEL")
+    );
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_s));
+    server.shutdown();
+    println!("server: {}", server.metrics.to_json());
+    println!("coordinator: {}", svc.metrics.lock().unwrap().summary());
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = loadgen::LoadgenConfig {
+        fleet: args.parse_or("fleet", 8usize)?,
+        requests_per_device: args.parse_or("requests", 50usize)?,
+        seed: args.parse_or("seed", 1u64)?,
+        think_ms: args.parse_or("think-ms", 0u64)?,
+        precision: args.parse_or("precision", 8u32)?,
+    };
+    let addr = args.opt_str("addr").map(String::from);
+    let out = args.opt_str("out").map(String::from);
+    let threads = args.threads()?;
+    args.finish()?;
+    let report = match addr {
+        // Drive an already-running external frontend.
+        Some(a) => {
+            let target = a
+                .to_socket_addrs()
+                .with_context(|| format!("resolve {a:?}"))?
+                .next()
+                .with_context(|| format!("{a:?} resolved to no address"))?;
+            loadgen::run(target, &cfg)?
+        }
+        // Self-contained: spin up service + frontend on an ephemeral
+        // port, run the fleet, shut down (the CI smoke path).
+        None => {
+            let svc = Arc::new(Service::start(ServiceConfig {
+                threads,
+                ..ServiceConfig::default()
+            })?);
+            // fleet + headroom so think-time reconnect churn never
+            // trips the acceptor's 503 capacity refusal.
+            let scfg = ServerConfig {
+                http_threads: cfg.fleet + 4,
+                ..ServerConfig::default()
+            };
+            let mut server = Server::start(Arc::clone(&svc), scfg)?;
+            println!("loadgen: in-process frontend on http://{}", server.addr());
+            let report = loadgen::run(server.addr(), &cfg)?;
+            server.shutdown();
+            println!("coordinator: {}", svc.metrics.lock().unwrap().summary());
+            report
+        }
+    };
+    println!("{}", report.summary());
+    if let Some(path) = out {
+        std::fs::write(&path, report.histogram())
+            .with_context(|| format!("writing {path}"))?;
+        println!("latency histogram written to {path}");
+    }
+    if report.records.is_empty() {
+        bail!("loadgen completed zero requests");
+    }
+    if report.errors > 0 {
+        bail!("loadgen saw {} errors", report.errors);
+    }
     Ok(())
 }
 

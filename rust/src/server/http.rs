@@ -1,0 +1,426 @@
+//! HTTP/1.1 wire format (offline substitute for hyper/axum): message
+//! framing over `TcpStream`, request/response views, and the small
+//! client the load generator and tests drive real sockets with.
+//!
+//! Scope is deliberately the serving subset the frontend needs:
+//! `Content-Length` framing only (no chunked transfer encoding), CRLF
+//! header sections, persistent connections by default (HTTP/1.1
+//! keep-alive) with `Connection: close` honoured.  Both sides of the
+//! conversation — [`HttpConn`] under the server's connection handlers
+//! and [`Client`] under the device fleet — share the same framing code.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Value;
+
+/// Cap on the header section of one message.
+pub const MAX_HEAD_BYTES: usize = 64 * 1024;
+/// Cap on one message body (a full-batch score request is ~100 KiB).
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+/// Deadline for finishing a message whose first bytes have arrived
+/// (slow-loris guard: a half-sent request cannot pin a worker forever).
+const MID_MESSAGE_DEADLINE: Duration = Duration::from_secs(30);
+
+/// One framed HTTP message: start line, headers (keys lower-cased),
+/// body.  Requests and responses differ only in the start line.
+#[derive(Debug)]
+pub struct Message {
+    pub start_line: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+/// Result of one [`HttpConn::read_message`] call.
+#[derive(Debug)]
+pub enum Outcome {
+    /// A complete message arrived.
+    Message(Message),
+    /// The peer closed the connection cleanly between messages.
+    Closed,
+    /// The socket read timed out this tick.  Any partial message stays
+    /// buffered in the connection, so the caller can check its own
+    /// conditions (shutdown flag, keep-alive budget) and simply call
+    /// `read_message` again to resume.
+    Idle,
+}
+
+/// A TCP connection with message framing and pipelining-safe buffering
+/// (bytes past the current message are kept for the next read).
+pub struct HttpConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    /// When the currently-buffered (incomplete) message started
+    /// arriving — the slow-loris deadline baseline, surviving across
+    /// `read_message` calls that return [`Outcome::Idle`].
+    msg_started: Option<Instant>,
+}
+
+impl HttpConn {
+    pub fn new(stream: TcpStream) -> HttpConn {
+        HttpConn { stream, buf: Vec::new(), msg_started: None }
+    }
+
+    pub fn set_read_timeout(&self, d: Duration) -> Result<()> {
+        self.stream.set_read_timeout(Some(d)).context("set_read_timeout")
+    }
+
+    /// Is an incomplete message currently buffered?  (Distinguishes a
+    /// truly idle keep-alive connection from one mid-upload.)
+    pub fn has_partial(&self) -> bool {
+        !self.buf.is_empty()
+    }
+
+    pub fn write_all(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes).context("socket write")?;
+        self.stream.flush().context("socket flush")
+    }
+
+    /// Read one complete message (head + `Content-Length` body).
+    ///
+    /// Returns [`Outcome::Idle`] after every read-timeout tick — even
+    /// mid-message — so a caller blocked on a slow peer regains control
+    /// each tick (shutdown responsiveness).  Partial data stays in the
+    /// buffer and the next call resumes; the head is cheap to re-scan.
+    pub fn read_message(&mut self) -> Result<Outcome> {
+        // Accumulate until the blank line ends the header section.
+        let head_end = loop {
+            if let Some(pos) = find_blank_line(&self.buf) {
+                break pos;
+            }
+            if self.buf.len() > MAX_HEAD_BYTES {
+                bail!("header section exceeds {MAX_HEAD_BYTES} bytes");
+            }
+            match self.fill()? {
+                Fill::Data => {}
+                Fill::Eof if self.buf.is_empty() => return Ok(Outcome::Closed),
+                Fill::Eof => bail!("connection closed mid-message"),
+                Fill::Idle => return Ok(Outcome::Idle),
+            }
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end]).context("non-UTF-8 header")?;
+        let (start_line, headers) = parse_head(head)?;
+        let body_len = match headers.get("content-length") {
+            Some(v) => v.trim().parse::<usize>().with_context(|| format!("content-length {v:?}"))?,
+            None => 0,
+        };
+        if body_len > MAX_BODY_BYTES {
+            bail!("body of {body_len} bytes exceeds {MAX_BODY_BYTES}");
+        }
+        let body_start = head_end + 4;
+        while self.buf.len() < body_start + body_len {
+            match self.fill()? {
+                Fill::Data => {}
+                Fill::Eof => bail!("connection closed mid-body"),
+                Fill::Idle => return Ok(Outcome::Idle), // resume from buf next call
+            }
+        }
+        let body = self.buf[body_start..body_start + body_len].to_vec();
+        // Keep any pipelined bytes for the next message; they already
+        // count against the next message's slow-loris deadline.
+        self.buf.drain(..body_start + body_len);
+        self.msg_started = if self.buf.is_empty() { None } else { Some(Instant::now()) };
+        Ok(Outcome::Message(Message { start_line, headers, body }))
+    }
+
+    /// One socket read into the buffer.
+    fn fill(&mut self) -> Result<Fill> {
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Ok(Fill::Eof),
+            Ok(n) => {
+                if self.buf.is_empty() {
+                    self.msg_started = Some(Instant::now());
+                }
+                self.buf.extend_from_slice(&tmp[..n]);
+                // Checked on the data path too: a byte-drip client
+                // cannot dodge the deadline by always making progress.
+                self.check_deadline()?;
+                Ok(Fill::Data)
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                self.check_deadline()?;
+                Ok(Fill::Idle)
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => Ok(Fill::Idle),
+            Err(e) => Err(e).context("socket read"),
+        }
+    }
+
+    /// Absolute per-message deadline, whatever the arrival pattern.
+    fn check_deadline(&self) -> Result<()> {
+        if let Some(t0) = self.msg_started {
+            if t0.elapsed() > MID_MESSAGE_DEADLINE {
+                bail!("message incomplete after {MID_MESSAGE_DEADLINE:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+enum Fill {
+    Data,
+    Eof,
+    Idle,
+}
+
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    if buf.len() < 4 {
+        return None;
+    }
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_head(head: &str) -> Result<(String, BTreeMap<String, String>)> {
+    let mut lines = head.split("\r\n");
+    let start_line = lines.next().ok_or_else(|| anyhow!("empty message head"))?.to_string();
+    if start_line.is_empty() {
+        bail!("empty start line");
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) =
+            line.split_once(':').ok_or_else(|| anyhow!("malformed header line {line:?}"))?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    Ok((start_line, headers))
+}
+
+// ---------------------------------------------------------------------------
+// Request / response views
+// ---------------------------------------------------------------------------
+
+/// A parsed request line + headers + body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn from_message(m: Message) -> Result<Request> {
+        let mut parts = m.start_line.split_whitespace();
+        let method = parts.next().ok_or_else(|| anyhow!("missing method"))?.to_string();
+        let path = parts.next().ok_or_else(|| anyhow!("missing request path"))?.to_string();
+        let version = parts.next().ok_or_else(|| anyhow!("missing HTTP version"))?;
+        if !version.starts_with("HTTP/1.") {
+            bail!("unsupported version {version:?}");
+        }
+        Ok(Request { method, path, headers: m.headers, body: m.body })
+    }
+
+    /// Did the client ask to drop keep-alive?
+    pub fn wants_close(&self) -> bool {
+        self.headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("non-UTF-8 body")
+    }
+}
+
+/// A response under construction; always `Content-Length`-framed.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, v: &Value) -> Response {
+        Response { status, content_type: "application/json", body: v.to_string().into_bytes() }
+    }
+
+    /// A JSON error envelope: `{"error": msg}`.
+    pub fn error(status: u16, msg: &str) -> Response {
+        Response::json(status, &Value::obj(vec![("error", Value::from(msg))]))
+    }
+
+    pub fn write_to(&self, conn: &mut HttpConn, close: bool) -> Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if close { "close" } else { "keep-alive" },
+        );
+        conn.write_all(head.as_bytes())?;
+        conn.write_all(&self.body)
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client (the device side: loadgen, tests, examples)
+// ---------------------------------------------------------------------------
+
+/// A minimal keep-alive HTTP client over one connection.
+pub struct Client {
+    conn: HttpConn,
+}
+
+impl Client {
+    pub fn connect(addr: SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream.set_write_timeout(Some(MID_MESSAGE_DEADLINE)).context("set_write_timeout")?;
+        let conn = HttpConn::new(stream);
+        // Per-read tick; request() keeps waiting while a response is
+        // outstanding, so the effective budget is MID_MESSAGE_DEADLINE.
+        conn.set_read_timeout(Duration::from_millis(100))?;
+        Ok(Client { conn })
+    }
+
+    pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
+        self.request("GET", path, None)
+    }
+
+    pub fn post(&mut self, path: &str, body: &str) -> Result<(u16, String)> {
+        self.request("POST", path, Some(body))
+    }
+
+    /// Send one request and block for the response (status, body).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nhost: pbsp\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        );
+        self.conn.write_all(head.as_bytes())?;
+        self.conn.write_all(body.as_bytes())?;
+        let started = Instant::now();
+        loop {
+            match self.conn.read_message()? {
+                Outcome::Message(m) => {
+                    let status = m
+                        .start_line
+                        .split_whitespace()
+                        .nth(1)
+                        .and_then(|s| s.parse::<u16>().ok())
+                        .ok_or_else(|| anyhow!("bad status line {:?}", m.start_line))?;
+                    let text = String::from_utf8(m.body).context("non-UTF-8 response body")?;
+                    return Ok((status, text));
+                }
+                Outcome::Closed => bail!("server closed the connection"),
+                Outcome::Idle => {
+                    if started.elapsed() > MID_MESSAGE_DEADLINE {
+                        bail!("no response within {MID_MESSAGE_DEADLINE:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn parses_head_and_framing() {
+        let (start, headers) =
+            parse_head("POST /v1/x HTTP/1.1\r\nContent-Length: 5\r\nX-A:  b ").unwrap();
+        assert_eq!(start, "POST /v1/x HTTP/1.1");
+        assert_eq!(headers["content-length"], "5");
+        assert_eq!(headers["x-a"], "b");
+        assert!(parse_head("").is_err());
+        assert!(parse_head("GET / HTTP/1.1\r\nnocolon").is_err());
+    }
+
+    #[test]
+    fn request_view_rejects_garbage() {
+        let msg = |line: &str| Message {
+            start_line: line.to_string(),
+            headers: BTreeMap::new(),
+            body: Vec::new(),
+        };
+        assert!(Request::from_message(msg("GET /p HTTP/1.1")).is_ok());
+        assert!(Request::from_message(msg("GET /p")).is_err());
+        assert!(Request::from_message(msg("GET /p SPDY/3")).is_err());
+    }
+
+    /// Framing over a real socket pair: two pipelined requests in one
+    /// write, bodies split across packets, keep-alive buffering.
+    #[test]
+    fn socket_framing_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // First request + start of the second in one segment.
+            s.write_all(b"POST /a HTTP/1.1\r\ncontent-length: 3\r\n\r\nabcPOST /b HTTP").unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(30));
+            s.write_all(b"/1.1\r\ncontent-length: 2\r\n\r\nxy").unwrap();
+            s.flush().unwrap();
+        });
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut conn = HttpConn::new(stream);
+        // Idle ticks (partial message buffered) are resumable.
+        let mut next = |conn: &mut HttpConn| loop {
+            match conn.read_message().unwrap() {
+                Outcome::Message(m) => break m,
+                Outcome::Idle => continue,
+                Outcome::Closed => panic!("unexpected close"),
+            }
+        };
+        let m1 = next(&mut conn);
+        assert_eq!(m1.start_line, "POST /a HTTP/1.1");
+        assert_eq!(m1.body, b"abc");
+        let m2 = next(&mut conn);
+        assert_eq!(m2.start_line, "POST /b HTTP/1.1");
+        assert_eq!(m2.body, b"xy");
+        writer.join().unwrap();
+        // Peer done: next read sees a clean close.
+        match conn.read_message().unwrap() {
+            Outcome::Closed => {}
+            other => panic!("want closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn idle_then_close_detected() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let mut conn = HttpConn::new(stream);
+        // Nothing sent yet: idle tick, not an error.
+        assert!(matches!(conn.read_message().unwrap(), Outcome::Idle));
+        drop(client);
+        assert!(matches!(conn.read_message().unwrap(), Outcome::Closed));
+    }
+}

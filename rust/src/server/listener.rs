@@ -1,0 +1,291 @@
+//! The TCP listener: a bounded acceptor thread that hands each
+//! connection to the shared `util::threadpool::ThreadPool`.
+//!
+//! Concurrency model: one pool job per *connection* (not per request) —
+//! a worker owns the connection for its keep-alive lifetime, reading
+//! requests in 100 ms ticks so it can notice shutdown and enforce the
+//! idle budget.  `http_threads` therefore bounds concurrent
+//! connections, and the bound is enforced at the acceptor: a connection
+//! arriving while every worker owns one is refused immediately with
+//! `503 Service Unavailable` (counted in `rejected_busy`) instead of
+//! queuing unboundedly behind busy workers — overload is visible
+//! backpressure, never silent starvation.  Idle connections are closed
+//! at `keep_alive_ms` (the device client reconnects, see
+//! `server::loadgen`).  The acceptor polls a non-blocking `accept` on a
+//! short tick, so shutdown is just: flip the flag, join the acceptor,
+//! drop the pool (handlers observe the flag within one read tick —
+//! `HttpConn::read_message` yields every tick even mid-message).
+
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::http::{HttpConn, Outcome, Request, Response};
+use super::routes;
+use crate::coordinator::service::Service;
+use crate::util::json::Value;
+use crate::util::threadpool::{self, ThreadPool};
+
+/// Read-tick granularity: how often a blocked handler re-checks the
+/// shutdown flag and its idle budget.
+const TICK_MS: u64 = 100;
+/// Acceptor poll tick (also the shutdown-join latency bound).
+const ACCEPT_TICK_MS: u64 = 10;
+/// Socket write budget: a client that stops reading its response
+/// cannot pin a worker (and its capacity slot) past this.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests, benches).
+    pub addr: String,
+    /// Connection-handler pool size = max concurrent connections.
+    pub http_threads: usize,
+    /// Idle keep-alive budget per connection before the server closes it.
+    pub keep_alive_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            http_threads: threadpool::default_threads().max(8),
+            keep_alive_ms: 2_000,
+        }
+    }
+}
+
+/// Server-side counters (the coordinator keeps its own — `/metrics`
+/// reports both).  Plain atomics: incremented from handler threads,
+/// snapshot without locking.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub connections: AtomicU64,
+    pub http_requests: AtomicU64,
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+    pub samples_scored: AtomicU64,
+    /// Connections refused with 503 because every handler was busy.
+    pub rejected_busy: AtomicU64,
+}
+
+impl ServerMetrics {
+    fn count_status(&self, status: u16) {
+        let counter = match status / 100 {
+            2 => &self.responses_2xx,
+            4 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_scored(&self, n: u64) {
+        self.samples_scored.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn to_json(&self) -> Value {
+        let get = |c: &AtomicU64| Value::from(c.load(Ordering::Relaxed) as i64);
+        Value::obj(vec![
+            ("connections", get(&self.connections)),
+            ("http_requests", get(&self.http_requests)),
+            ("responses_2xx", get(&self.responses_2xx)),
+            ("responses_4xx", get(&self.responses_4xx)),
+            ("responses_5xx", get(&self.responses_5xx)),
+            ("samples_scored", get(&self.samples_scored)),
+            ("rejected_busy", get(&self.rejected_busy)),
+        ])
+    }
+}
+
+/// The running HTTP frontend.  Dropping it shuts the listener down and
+/// joins every thread.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    /// Held so connection handlers outlive the acceptor; dropped (and
+    /// joined) after the acceptor stops feeding it.
+    pool: Option<Arc<ThreadPool>>,
+    pub metrics: Arc<ServerMetrics>,
+}
+
+impl Server {
+    pub fn start(svc: Arc<Service>, cfg: ServerConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(ServerMetrics::default());
+        let capacity = cfg.http_threads.max(1);
+        let pool = Arc::new(ThreadPool::new(capacity));
+        // Connections currently owned by handlers — the acceptor's
+        // admission gate (incremented here, decremented by the job).
+        let active = Arc::new(AtomicU64::new(0));
+        let acceptor = {
+            let shutdown = Arc::clone(&shutdown);
+            let metrics = Arc::clone(&metrics);
+            let pool = Arc::clone(&pool);
+            let active = Arc::clone(&active);
+            let keep_alive_ms = cfg.keep_alive_ms;
+            std::thread::Builder::new()
+                .name("pbsp-http-acceptor".into())
+                .spawn(move || loop {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // Handlers expect blocking reads with their
+                            // own timeout; some platforms let accepted
+                            // sockets inherit the listener's flag.
+                            if stream.set_nonblocking(false).is_err() {
+                                continue;
+                            }
+                            if active.load(Ordering::SeqCst) >= capacity as u64 {
+                                // Every handler is busy: refuse fast
+                                // instead of queuing behind them.  Only
+                                // rejected_busy counts this — no request
+                                // was read, so the response counters
+                                // stay reconcilable with http_requests.
+                                metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+                                let mut conn = HttpConn::new(stream);
+                                let _ = Response::error(
+                                    503,
+                                    "connection capacity reached; raise --http-threads",
+                                )
+                                .write_to(&mut conn, true);
+                                continue;
+                            }
+                            metrics.connections.fetch_add(1, Ordering::Relaxed);
+                            active.fetch_add(1, Ordering::SeqCst);
+                            let svc = Arc::clone(&svc);
+                            let metrics = Arc::clone(&metrics);
+                            let shutdown = Arc::clone(&shutdown);
+                            let active = Arc::clone(&active);
+                            pool.execute(move || {
+                                // Catch panics so a handler bug can
+                                // neither kill the pool worker nor leak
+                                // this connection's admission slot.
+                                let r = catch_unwind(AssertUnwindSafe(|| {
+                                    handle_connection(stream, svc, metrics, shutdown, keep_alive_ms)
+                                }));
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                if r.is_err() {
+                                    eprintln!("pbsp-http: connection handler panicked");
+                                }
+                            });
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(ACCEPT_TICK_MS));
+                        }
+                        Err(e) => {
+                            // Transient accept failure (e.g. EMFILE):
+                            // log, back off a tick, keep serving.
+                            eprintln!("pbsp-http: accept error: {e}");
+                            std::thread::sleep(Duration::from_millis(TICK_MS));
+                        }
+                    }
+                })
+                .context("spawn acceptor")?
+        };
+        Ok(Server { addr, shutdown, acceptor: Some(acceptor), pool: Some(pool), metrics })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, finish in-flight requests, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // Dropping the pool closes its queue and joins the handlers;
+        // they notice the flag within one read tick.
+        self.pool.take();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve one connection for its keep-alive lifetime.
+fn handle_connection(
+    stream: TcpStream,
+    svc: Arc<Service>,
+    metrics: Arc<ServerMetrics>,
+    shutdown: Arc<AtomicBool>,
+    keep_alive_ms: u64,
+) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err() {
+        return;
+    }
+    let mut conn = HttpConn::new(stream);
+    if conn.set_read_timeout(Duration::from_millis(TICK_MS)).is_err() {
+        return;
+    }
+    let mut idle_ms: u64 = 0;
+    loop {
+        match conn.read_message() {
+            Ok(Outcome::Idle) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                if conn.has_partial() {
+                    // Mid-message: a slow but progressing upload is
+                    // governed by the connection's 30 s mid-message
+                    // deadline, not the keep-alive budget.
+                    continue;
+                }
+                idle_ms += TICK_MS;
+                if idle_ms >= keep_alive_ms {
+                    break;
+                }
+            }
+            Ok(Outcome::Closed) => break,
+            Ok(Outcome::Message(msg)) => {
+                idle_ms = 0;
+                metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                let (resp, client_close) = match Request::from_message(msg) {
+                    Ok(req) => {
+                        let close = req.wants_close();
+                        (routes::route(&svc, &metrics, &req), close)
+                    }
+                    Err(e) => (Response::error(400, &format!("{e:#}")), true),
+                };
+                metrics.count_status(resp.status);
+                let closing = client_close || shutdown.load(Ordering::SeqCst);
+                if resp.write_to(&mut conn, closing).is_err() || closing {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Malformed request: best-effort 400, then drop.  It
+                // still counts as a request so responses never
+                // outnumber requests in /metrics.
+                metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+                metrics.count_status(400);
+                let _ = Response::error(400, &format!("{e:#}")).write_to(&mut conn, true);
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,338 @@
+//! Device-fleet load generator: N simulated printed devices (the
+//! paper's §I smart-packaging / disposable-healthcare scenario, one
+//! ultra-cheap sensor each) driving the HTTP frontend closed-loop over
+//! real sockets.
+//!
+//! Deterministic by construction: device `d` draws its model mix and
+//! sample indices from its own PCG stream `Pcg32::new(seed, d)`, and
+//! think-times from a *separate* stream (`Pcg32::new(seed, fleet + d)`)
+//! so the request sequence depends only on
+//! (seed, fleet, requests_per_device) — never on think_ms or response
+//! timing.  The e2e test replays every recorded request through direct
+//! `Service::submit` and asserts bit-identical scores.
+//!
+//! Latencies are end-to-end (serialize + socket + parse + batcher +
+//! runtime) and reported as nearest-rank percentiles
+//! (`util::stats::percentile_nearest`) plus a text histogram the CI
+//! smoke job uploads as an artifact.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::http::Client;
+use crate::ml::dataset::Dataset;
+use crate::ml::manifest::Manifest;
+use crate::util::json::Value;
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile_nearest_sorted;
+
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Number of simulated devices, each with one keep-alive connection.
+    pub fleet: usize,
+    /// Closed-loop requests per device.
+    pub requests_per_device: usize,
+    /// Master seed; device `d` uses PCG stream `d`.
+    pub seed: u64,
+    /// Upper bound on the uniform per-request think-time (0 = none).
+    pub think_ms: u64,
+    /// Precision variant to score at (`p{precision}`).
+    pub precision: u32,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig { fleet: 8, requests_per_device: 50, seed: 1, think_ms: 0, precision: 8 }
+    }
+}
+
+/// One successful scored request, with everything needed to replay it.
+#[derive(Debug, Clone)]
+pub struct DeviceRecord {
+    pub device: usize,
+    pub seq: usize,
+    /// Model index into the manifest's model list.
+    pub model: usize,
+    /// Sample index into that model's test set.
+    pub sample: usize,
+    pub scores: Vec<f64>,
+    pub latency_ms: f64,
+}
+
+/// Aggregate fleet results.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub records: Vec<DeviceRecord>,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub rps: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    cfg: LoadgenConfig,
+}
+
+impl Report {
+    pub fn summary(&self) -> String {
+        format!(
+            "loadgen: fleet {} x {} requests -> {} ok, errors {}, wall {:.3}s, {:.0} req/s\n\
+             latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+            self.cfg.fleet,
+            self.cfg.requests_per_device,
+            self.records.len(),
+            self.errors,
+            self.wall_s,
+            self.rps,
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms
+        )
+    }
+
+    /// Text latency histogram (16 linear buckets) for logging/upload.
+    pub fn histogram(&self) -> String {
+        let lat: Vec<f64> = self.records.iter().map(|r| r.latency_ms).collect();
+        let mut out = format!(
+            "# pbsp loadgen latency histogram (ms)\n\
+             # fleet {} x {} requests, seed {}, p{}\n\
+             # n {}  errors {}  p50 {:.3}  p90 {:.3}  p99 {:.3}  {:.0} req/s\n",
+            self.cfg.fleet,
+            self.cfg.requests_per_device,
+            self.cfg.seed,
+            self.cfg.precision,
+            lat.len(),
+            self.errors,
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms,
+            self.rps
+        );
+        if lat.is_empty() {
+            return out;
+        }
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &lat {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let buckets = 16usize;
+        let width = ((hi - lo) / buckets as f64).max(1e-9);
+        let mut counts = vec![0usize; buckets];
+        for &v in &lat {
+            let b = (((v - lo) / width) as usize).min(buckets - 1);
+            counts[b] += 1;
+        }
+        let peak = counts.iter().copied().max().unwrap_or(1).max(1);
+        for (b, &c) in counts.iter().enumerate() {
+            let bar = "#".repeat(c * 40 / peak);
+            out.push_str(&format!(
+                "{:>9.3}-{:<9.3} ms | {:>6} {bar}\n",
+                lo + b as f64 * width,
+                lo + (b + 1) as f64 * width,
+                c
+            ));
+        }
+        out
+    }
+}
+
+/// Run a fleet against a listening frontend.  Loads the artifact tree
+/// client-side (devices own their sensor data), spawns one OS thread
+/// per device, merges records in (device, seq) order.
+pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<Report> {
+    if cfg.fleet == 0 || cfg.requests_per_device == 0 {
+        bail!("fleet and requests_per_device must be positive");
+    }
+    let dir = crate::artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    let datasets: Vec<Dataset> = manifest
+        .models
+        .iter()
+        .map(|m| Dataset::load(manifest.data_dir(), &m.dataset, "test"))
+        .collect::<Result<_>>()?;
+    for (m, ds) in manifest.models.iter().zip(&datasets) {
+        if ds.is_empty() {
+            bail!("model {:?}: empty test set", m.name);
+        }
+    }
+    let names: Arc<Vec<String>> =
+        Arc::new(manifest.models.iter().map(|m| m.name.clone()).collect());
+    let datasets = Arc::new(datasets);
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..cfg.fleet)
+        .map(|d| {
+            let names = Arc::clone(&names);
+            let datasets = Arc::clone(&datasets);
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("pbsp-device-{d}"))
+                .spawn(move || device_loop(addr, d, &names, &datasets, &cfg))
+                .context("spawn device thread")
+        })
+        .collect::<Result<_>>()?;
+    let mut records = Vec::with_capacity(cfg.fleet * cfg.requests_per_device);
+    let mut errors = 0usize;
+    for h in handles {
+        let (recs, errs) = h.join().map_err(|_| anyhow!("device thread panicked"))?;
+        records.extend(recs);
+        errors += errs;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    records.sort_by_key(|r: &DeviceRecord| (r.device, r.seq));
+    let mut lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(Report {
+        rps: records.len() as f64 / wall_s.max(1e-9),
+        p50_ms: percentile_nearest_sorted(&lat, 50.0),
+        p90_ms: percentile_nearest_sorted(&lat, 90.0),
+        p99_ms: percentile_nearest_sorted(&lat, 99.0),
+        records,
+        errors,
+        wall_s,
+        cfg: cfg.clone(),
+    })
+}
+
+/// One device: keep-alive connection, closed-loop request sequence
+/// drawn from its own PCG stream.  Returns (records, error count).
+fn device_loop(
+    addr: SocketAddr,
+    device: usize,
+    names: &[String],
+    datasets: &[Dataset],
+    cfg: &LoadgenConfig,
+) -> (Vec<DeviceRecord>, usize) {
+    let mut rng = Pcg32::new(cfg.seed, device as u64);
+    // Think-times come from their own stream (offset past every
+    // device's request stream), so the request sequence is identical
+    // at any think_ms setting.
+    let mut think_rng = Pcg32::new(cfg.seed, (cfg.fleet + device) as u64);
+    let mut client = match Client::connect(addr) {
+        Ok(c) => Some(c),
+        Err(_) => None,
+    };
+    let mut records = Vec::with_capacity(cfg.requests_per_device);
+    let mut errors = 0usize;
+    for seq in 0..cfg.requests_per_device {
+        let model = rng.below(names.len() as u64) as usize;
+        let sample = rng.below(datasets[model].len() as u64) as usize;
+        let path = format!("/v1/score/{}/p{}", names[model], cfg.precision);
+        let body = score_body(&datasets[model].x[sample]);
+        let t = Instant::now();
+        match post_with_retry(&mut client, addr, &path, &body) {
+            Ok(text) => match parse_scores(&text) {
+                Ok(scores) => records.push(DeviceRecord {
+                    device,
+                    seq,
+                    model,
+                    sample,
+                    scores,
+                    latency_ms: t.elapsed().as_secs_f64() * 1e3,
+                }),
+                Err(_) => errors += 1,
+            },
+            Err(_) => errors += 1,
+        }
+        if cfg.think_ms > 0 {
+            let think = think_rng.below(cfg.think_ms + 1);
+            std::thread::sleep(Duration::from_millis(think));
+        }
+    }
+    (records, errors)
+}
+
+/// POST with one reconnect retry for *transport* failures: the server
+/// reaps idle keep-alive connections (think-time fleets), so a device
+/// whose connection was reaped reconnects and repeats — safe because
+/// scoring is read-only.  HTTP-level failures (including the server's
+/// 503 over-capacity refusal) are deterministic and surface as errors
+/// immediately.
+fn post_with_retry(
+    client: &mut Option<Client>,
+    addr: SocketAddr,
+    path: &str,
+    body: &str,
+) -> Result<String> {
+    for _attempt in 0..2 {
+        if client.is_none() {
+            *client = Some(Client::connect(addr)?);
+        }
+        let c = client.as_mut().expect("client just connected");
+        match c.post(path, body) {
+            Ok((200, text)) => return Ok(text),
+            Ok((status, text)) => bail!("HTTP {status}: {text}"),
+            Err(_) => *client = None, // dead connection: reconnect once
+        }
+    }
+    bail!("request failed after reconnect")
+}
+
+fn score_body(x: &[f32]) -> String {
+    let row = Value::Arr(x.iter().map(|&v| Value::Num(v as f64)).collect());
+    Value::obj(vec![("x", row)]).to_string()
+}
+
+fn parse_scores(text: &str) -> Result<Vec<f64>> {
+    Value::parse(text)?.get("scores")?.as_f64_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::percentile_nearest;
+
+    #[test]
+    fn score_body_roundtrips_f32_exactly() {
+        let x = [0.1f32, -3.5, 2.0, 1e-7];
+        let body = score_body(&x);
+        let v = Value::parse(&body).unwrap();
+        let back: Vec<f32> =
+            v.get("x").unwrap().as_f64_vec().unwrap().into_iter().map(|f| f as f32).collect();
+        assert_eq!(back, x, "JSON number round-trip must be exact for f32 inputs");
+    }
+
+    #[test]
+    fn device_sequences_are_deterministic_and_distinct() {
+        let draw = |seed, device: usize| {
+            let mut rng = Pcg32::new(seed, device as u64);
+            (0..16).map(|_| (rng.below(6), rng.below(40))).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(1, 0), draw(1, 0));
+        assert_ne!(draw(1, 0), draw(1, 1));
+        assert_ne!(draw(1, 0), draw(2, 0));
+    }
+
+    #[test]
+    fn histogram_renders_counts() {
+        let cfg = LoadgenConfig::default();
+        let records: Vec<DeviceRecord> = (0..10)
+            .map(|i| DeviceRecord {
+                device: 0,
+                seq: i,
+                model: 0,
+                sample: i,
+                scores: vec![0.0],
+                latency_ms: (i + 1) as f64,
+            })
+            .collect();
+        let lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
+        let report = Report {
+            rps: 10.0,
+            p50_ms: percentile_nearest(&lat, 50.0),
+            p90_ms: percentile_nearest(&lat, 90.0),
+            p99_ms: percentile_nearest(&lat, 99.0),
+            records,
+            errors: 0,
+            wall_s: 1.0,
+            cfg,
+        };
+        let h = report.histogram();
+        assert!(h.contains("# n 10  errors 0"));
+        assert!(h.lines().count() > 10, "16 buckets expected:\n{h}");
+        assert!(report.summary().contains("errors 0"));
+    }
+}

@@ -1,0 +1,32 @@
+//! The serving layer: a zero-dependency HTTP/1.1 inference frontend
+//! over the coordinator, plus the device-fleet load generator that
+//! drives it.
+//!
+//! This is the network entry point for the paper's §I deployment shape
+//! — fleets of ultra-cheap printed sensors (smart packaging, disposable
+//! healthcare) whose readings are classified centrally.  The stack:
+//!
+//! * [`http`] — owned HTTP/1.1 wire format (`Content-Length` framing,
+//!   keep-alive) in the `util/` offline-substrate style, shared by the
+//!   server and the client;
+//! * [`routes`] — the endpoint surface: `POST
+//!   /v1/score/{model}/{precision}` (single sample or batch JSON),
+//!   `GET /v1/models`, `GET /metrics`, `GET /healthz`;
+//! * [`listener`] — a tick-polled acceptor thread handing each
+//!   connection to a `util::threadpool::ThreadPool` worker for its
+//!   keep-alive lifetime;
+//! * [`loadgen`] — a deterministic (PCG-per-device) closed-loop fleet
+//!   simulator with nearest-rank latency percentiles.
+//!
+//! Scoring rides the coordinator's *streaming* `Service::submit` path,
+//! so concurrent connections coalesce in the dynamic batcher into real
+//! batches, and every HTTP response is bit-identical to an in-process
+//! `submit` of the same sample (`tests/serve_http.rs` enforces this
+//! over real sockets).
+
+pub mod http;
+pub mod listener;
+pub mod loadgen;
+pub mod routes;
+
+pub use listener::{Server, ServerConfig, ServerMetrics};

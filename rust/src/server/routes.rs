@@ -1,0 +1,285 @@
+//! Request routing: maps the HTTP surface onto the coordinator.
+//!
+//! | endpoint | method | body | backed by |
+//! |---|---|---|---|
+//! | `/healthz` | GET | — | service liveness |
+//! | `/v1/models` | GET | — | the artifact manifest |
+//! | `/metrics` | GET | — | coordinator + server counters |
+//! | `/v1/score/{model}/{precision}` | POST | `{"x": [...]}` or `{"xs": [[...], ...]}` | `Service::submit` (streaming path) |
+//!
+//! Scoring goes through the *streaming* submit path on purpose: every
+//! sample is one router/batcher request, so concurrent connections
+//! coalesce into real dynamic batches exactly like in-process callers —
+//! and responses are bit-identical to direct `Service::submit` (the
+//! JSON number round-trip is exact: shortest-repr f64 both ways).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::http::{Request, Response};
+use super::listener::ServerMetrics;
+use crate::coordinator::router::Key;
+use crate::coordinator::service::Service;
+use crate::util::json::Value;
+use crate::util::stats::Reservoir;
+
+/// Dispatch one request.  Never panics; every outcome is a `Response`.
+pub fn route(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(svc),
+        ("GET", "/v1/models") => models(svc),
+        ("GET", "/metrics") => metrics_snapshot(svc, metrics),
+        (_, "/healthz") | (_, "/v1/models") | (_, "/metrics") => {
+            Response::error(405, &format!("{} expects GET", req.path))
+        }
+        (method, path) if path.starts_with("/v1/score/") => {
+            if method != "POST" {
+                return Response::error(405, "scoring expects POST");
+            }
+            match score(svc, metrics, req) {
+                Ok(resp) => resp,
+                Err(e) => e,
+            }
+        }
+        (method, path) => Response::error(404, &format!("no route for {method} {path}")),
+    }
+}
+
+fn healthz(svc: &Service) -> Response {
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("status", Value::from("ok")),
+            ("models", Value::from(svc.models.len())),
+        ]),
+    )
+}
+
+fn models(svc: &Service) -> Response {
+    let man = &svc.manifest;
+    let models: Vec<Value> = man
+        .models
+        .iter()
+        .map(|e| {
+            Value::obj(vec![
+                ("name", Value::from(e.name.as_str())),
+                ("dataset", Value::from(e.dataset.as_str())),
+                ("arch", Value::Arr(e.arch.iter().map(|&a| Value::from(a)).collect())),
+                ("n_test", Value::from(e.n_test)),
+                ("float_accuracy", Value::from(e.float_accuracy)),
+                (
+                    "variants",
+                    Value::Arr(e.hlo.keys().map(|k| Value::from(k.as_str())).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &Value::obj(vec![
+            ("batch", Value::from(man.batch)),
+            (
+                "precisions",
+                Value::Arr(man.precisions.iter().map(|&p| Value::from(p as i64)).collect()),
+            ),
+            ("models", Value::Arr(models)),
+        ]),
+    )
+}
+
+fn metrics_snapshot(svc: &Service, server: &ServerMetrics) -> Response {
+    let m = svc.metrics.lock().unwrap().clone();
+    let coordinator = Value::obj(vec![
+        ("requests", Value::from(m.requests as i64)),
+        ("batches", Value::from(m.batches as i64)),
+        ("compiles", Value::from(m.compiles as i64)),
+        ("mean_batch", finite(m.mean_batch_size())),
+        ("exec_ms", dist_json(&m.exec_ms)),
+        ("queue_ms", dist_json(&m.queue_ms)),
+        ("batch_size", dist_json(&m.batch_sizes)),
+    ]);
+    Response::json(
+        200,
+        &Value::obj(vec![("coordinator", coordinator), ("server", server.to_json())]),
+    )
+}
+
+/// Distribution snapshot from a reservoir (nearest-rank percentiles,
+/// one sort per distribution).
+fn dist_json(r: &Reservoir) -> Value {
+    let p = r.percentiles(&[50.0, 95.0, 99.0]);
+    Value::obj(vec![
+        ("count", Value::from(r.count() as i64)),
+        ("mean", finite(r.mean())),
+        ("min", finite(r.min())),
+        ("max", finite(r.max())),
+        ("p50", finite(p[0])),
+        ("p95", finite(p[1])),
+        ("p99", finite(p[2])),
+    ])
+}
+
+/// NaN/inf have no JSON encoding; empty distributions report null.
+fn finite(v: f64) -> Value {
+    if v.is_finite() {
+        Value::Num(v)
+    } else {
+        Value::Null
+    }
+}
+
+/// `/v1/score/{model}/{precision}` -> (model, variant key).  The
+/// precision segment accepts `p8`-style variant keys, bare digits
+/// (`8` -> `p8`), and `float`.
+pub fn parse_score_path(path: &str) -> Result<(String, String)> {
+    let rest = path.strip_prefix("/v1/score/").ok_or_else(|| anyhow!("not a score path"))?;
+    let (model, precision) = rest
+        .split_once('/')
+        .ok_or_else(|| anyhow!("expected /v1/score/{{model}}/{{precision}}"))?;
+    if model.is_empty() || precision.is_empty() || precision.contains('/') {
+        bail!("expected /v1/score/{{model}}/{{precision}}");
+    }
+    let variant = if precision == "float" || precision.starts_with('p') {
+        precision.to_string()
+    } else if precision.bytes().all(|b| b.is_ascii_digit()) {
+        format!("p{precision}")
+    } else {
+        bail!("bad precision segment {precision:?} (want pN, N or float)");
+    };
+    Ok((model.to_string(), variant))
+}
+
+/// Errors are returned as ready-to-send responses so `route` can stay
+/// a total function.
+fn score(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Result<Response, Response> {
+    let (model_name, variant) =
+        parse_score_path(&req.path).map_err(|e| Response::error(404, &format!("{e:#}")))?;
+    let entry = svc
+        .manifest
+        .model(&model_name)
+        .map_err(|_| Response::error(404, &format!("unknown model {model_name:?}")))?;
+    if !entry.hlo.contains_key(&variant) {
+        return Err(Response::error(
+            404,
+            &format!("model {model_name:?} has no variant {variant:?}"),
+        ));
+    }
+    let body = req.body_str().map_err(|e| Response::error(400, &format!("{e:#}")))?;
+    let v = Value::parse(body).map_err(|e| Response::error(400, &format!("bad JSON: {e:#}")))?;
+    let (rows, single) = parse_rows(&v).map_err(|e| Response::error(400, &format!("{e:#}")))?;
+    let in_dim = entry.arch[0];
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != in_dim {
+            return Err(Response::error(
+                400,
+                &format!("sample {i}: {} features, model takes {in_dim}", row.len()),
+            ));
+        }
+    }
+    // Streaming path: submit every sample, then gather — concurrent
+    // connections coalesce in the dynamic batcher meanwhile.
+    let key = Key::new(&model_name, &variant);
+    let mut pending = Vec::with_capacity(rows.len());
+    for row in rows {
+        let rx = svc
+            .submit(key.clone(), row)
+            .map_err(|e| Response::error(500, &format!("{e:#}")))?;
+        pending.push(rx);
+    }
+    let mut scores: Vec<Vec<f64>> = Vec::with_capacity(pending.len());
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(s)) => scores.push(s),
+            Ok(Err(e)) => return Err(Response::error(500, &e)),
+            Err(_) => return Err(Response::error(500, "runtime worker gone")),
+        }
+    }
+    metrics.add_scored(scores.len() as u64);
+    let model = svc.model(&model_name).map_err(|e| Response::error(500, &format!("{e:#}")))?;
+    let preds: Vec<i64> = scores.iter().map(|s| model.predict(s)).collect();
+    let common = vec![
+        ("model", Value::from(model_name.as_str())),
+        ("variant", Value::from(variant.as_str())),
+    ];
+    let resp = if single {
+        let mut pairs = common;
+        pairs.push(("scores", Value::arr_f64(&scores[0])));
+        pairs.push(("prediction", Value::from(preds[0])));
+        Value::obj(pairs)
+    } else {
+        let mut pairs = common;
+        pairs.push(("scores", Value::Arr(scores.iter().map(|s| Value::arr_f64(s)).collect())));
+        pairs.push(("predictions", Value::Arr(preds.iter().map(|&p| Value::from(p)).collect())));
+        Value::obj(pairs)
+    };
+    Ok(Response::json(200, &resp))
+}
+
+/// Body decode: `{"x": [...]}` (single) or `{"xs": [[...], ...]}`
+/// (batch).  Returns the rows plus whether the request was single-form.
+fn parse_rows(v: &Value) -> Result<(Vec<Vec<f32>>, bool)> {
+    if let Some(x) = v.opt("x") {
+        let row: Vec<f32> = x.as_f64_vec()?.into_iter().map(|f| f as f32).collect();
+        return Ok((vec![row], true));
+    }
+    if let Some(xs) = v.opt("xs") {
+        let rows: Vec<Vec<f32>> = xs
+            .as_f64_mat()?
+            .into_iter()
+            .map(|r| r.into_iter().map(|f| f as f32).collect())
+            .collect();
+        if rows.is_empty() {
+            bail!("\"xs\" must contain at least one sample");
+        }
+        return Ok((rows, false));
+    }
+    bail!("body must carry \"x\" (single sample) or \"xs\" (batch)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_path_forms() {
+        assert_eq!(
+            parse_score_path("/v1/score/mlp_c/p8").unwrap(),
+            ("mlp_c".to_string(), "p8".to_string())
+        );
+        assert_eq!(
+            parse_score_path("/v1/score/svm_r/16").unwrap(),
+            ("svm_r".to_string(), "p16".to_string())
+        );
+        assert_eq!(
+            parse_score_path("/v1/score/mlp_c/float").unwrap(),
+            ("mlp_c".to_string(), "float".to_string())
+        );
+        assert!(parse_score_path("/v1/score/mlp_c").is_err());
+        assert!(parse_score_path("/v1/score//p8").is_err());
+        assert!(parse_score_path("/v1/score/m/p8/extra").is_err());
+        assert!(parse_score_path("/v1/score/m/byte").is_err());
+        assert!(parse_score_path("/other").is_err());
+    }
+
+    #[test]
+    fn row_decode_forms() {
+        let single = Value::parse(r#"{"x": [1, 2.5]}"#).unwrap();
+        let (rows, is_single) = parse_rows(&single).unwrap();
+        assert!(is_single);
+        assert_eq!(rows, vec![vec![1.0f32, 2.5]]);
+
+        let batch = Value::parse(r#"{"xs": [[1, 2], [3, 4]]}"#).unwrap();
+        let (rows, is_single) = parse_rows(&batch).unwrap();
+        assert!(!is_single);
+        assert_eq!(rows.len(), 2);
+
+        assert!(parse_rows(&Value::parse(r#"{"xs": []}"#).unwrap()).is_err());
+        assert!(parse_rows(&Value::parse(r#"{"y": [1]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn finite_guards_json() {
+        assert_eq!(finite(1.5), Value::Num(1.5));
+        assert_eq!(finite(f64::NAN), Value::Null);
+        assert_eq!(finite(f64::INFINITY), Value::Null);
+    }
+}

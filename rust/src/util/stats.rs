@@ -1,4 +1,7 @@
-//! Small statistics helpers used by the benchmark harness and reports.
+//! Small statistics helpers used by the benchmark harness, the
+//! coordinator/server metrics and reports.
+
+use super::rng::Pcg32;
 
 /// Summary statistics of a sample.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,6 +44,27 @@ pub fn percentile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Nearest-rank percentile (`q` in [0, 100]) over an *unsorted* sample;
+/// returns NaN on an empty slice.  Unlike [`percentile`], it never
+/// interpolates: the result is always an observed value, which is what
+/// latency reporting wants (an interpolated "p99" can be a latency no
+/// request ever saw).
+pub fn percentile_nearest(xs: &[f64], q: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_nearest_sorted(&sorted, q)
+}
+
+/// [`percentile_nearest`] over an already-sorted sample — callers
+/// querying several percentiles sort once and index repeatedly.
+pub fn percentile_nearest_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty(), "empty sample");
     let mut sorted = xs.to_vec();
@@ -63,6 +87,112 @@ pub fn geomean(xs: &[f64]) -> f64 {
         return f64::NAN;
     }
     (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Fixed-capacity uniform sample of an unbounded stream (Vitter's
+/// Algorithm R) plus exact running count/sum/min/max, so means stay
+/// exact and percentiles stay available while memory stays bounded.
+///
+/// Replacement choices come from an owned PCG stream, so two reservoirs
+/// with the same seed fed the same values are identical — metrics built
+/// on this stay deterministic for a given request sequence.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    sample: Vec<f64>,
+    rng: Pcg32,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0);
+        Reservoir {
+            cap,
+            seen: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            sample: Vec::new(),
+            rng: Pcg32::seeded(seed),
+        }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.sample.len() < self.cap {
+            self.sample.push(v);
+        } else {
+            // Keep each of the `seen` values with probability cap/seen.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.sample[j as usize] = v;
+            }
+        }
+    }
+
+    /// Total values observed (not the retained sample size).
+    pub fn count(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seen == 0
+    }
+
+    /// Exact running sum over *all* observed values.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean over all observed values (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.seen as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.seen == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Nearest-rank percentile estimated from the retained sample
+    /// (exact while `count() <= cap`; NaN when empty).
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_nearest(&self.sample, q)
+    }
+
+    /// Several percentiles from a single sort of the retained sample.
+    pub fn percentiles(&self, qs: &[f64]) -> Vec<f64> {
+        let mut sorted = self.sample.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        qs.iter().map(|&q| percentile_nearest_sorted(&sorted, q)).collect()
+    }
+
+    /// The retained sample (unsorted, insertion/replacement order).
+    pub fn samples(&self) -> &[f64] {
+        &self.sample
+    }
 }
 
 #[cfg(test)]
@@ -98,5 +228,86 @@ mod tests {
     fn geomean_of_speedups() {
         assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
         assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_empty_is_nan() {
+        assert!(percentile_nearest(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn nearest_rank_single_element() {
+        for q in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile_nearest(&[7.5], q), 7.5);
+        }
+    }
+
+    #[test]
+    fn nearest_rank_never_interpolates() {
+        // Interpolation boundaries: on [1, 2, 3, 4] the interpolating
+        // percentile would return 2.5 at q=50; nearest-rank must pick
+        // an observed value at every boundary.
+        let xs = [4.0, 2.0, 1.0, 3.0]; // unsorted on purpose
+        assert_eq!(percentile_nearest(&xs, 0.0), 1.0); // rank clamps to 1
+        assert_eq!(percentile_nearest(&xs, 25.0), 1.0);
+        assert_eq!(percentile_nearest(&xs, 25.1), 2.0);
+        assert_eq!(percentile_nearest(&xs, 50.0), 2.0);
+        assert_eq!(percentile_nearest(&xs, 50.1), 3.0);
+        assert_eq!(percentile_nearest(&xs, 75.0), 3.0);
+        assert_eq!(percentile_nearest(&xs, 75.1), 4.0);
+        assert_eq!(percentile_nearest(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn reservoir_exact_below_capacity() {
+        let mut r = Reservoir::new(8, 1);
+        assert!(r.is_empty() && r.mean().is_nan() && r.percentile(50.0).is_nan());
+        for v in [3.0, 1.0, 2.0] {
+            r.push(v);
+        }
+        assert_eq!(r.count(), 3);
+        assert_eq!(r.sum(), 6.0);
+        assert_eq!(r.mean(), 2.0);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), 3.0);
+        assert_eq!(r.percentile(50.0), 2.0);
+        assert_eq!(r.percentiles(&[50.0, 100.0]), vec![2.0, 3.0]);
+        assert_eq!(r.samples().len(), 3);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_exact_aggregates() {
+        let cap = 16;
+        let mut r = Reservoir::new(cap, 42);
+        let n = 10_000u64;
+        for i in 1..=n {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples().len(), cap);
+        assert_eq!(r.count(), n);
+        // Sum and mean are exact even though the sample is capped.
+        assert_eq!(r.sum(), (n * (n + 1) / 2) as f64);
+        assert_eq!(r.min(), 1.0);
+        assert_eq!(r.max(), n as f64);
+        // Every retained value is from the stream, and the median
+        // estimate lands in the bulk of the distribution.
+        for &v in r.samples() {
+            assert!((1.0..=n as f64).contains(&v));
+        }
+        let p50 = r.percentile(50.0);
+        assert!((1.0..=n as f64).contains(&p50));
+    }
+
+    #[test]
+    fn reservoir_is_deterministic_for_a_seed() {
+        let feed = |seed| {
+            let mut r = Reservoir::new(4, seed);
+            for i in 0..1000 {
+                r.push((i * 7 % 113) as f64);
+            }
+            r.samples().to_vec()
+        };
+        assert_eq!(feed(9), feed(9));
+        assert_ne!(feed(9), feed(10)); // astronomically unlikely to collide
     }
 }

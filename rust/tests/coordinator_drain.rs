@@ -1,0 +1,105 @@
+//! Coordinator shutdown/drain regression (ISSUE 3 satellite): in-flight
+//! `submit()` requests during `Service` drop must either complete or
+//! return an error — never hang the caller.  The worker's shutdown path
+//! drains the router (every queued reply is sent) and dropping the job
+//! channel drops any unsent reply senders (receivers see `Err`), so
+//! every receiver resolves; these tests pin that contract with bounded
+//! waits.
+
+use std::sync::mpsc::channel;
+use std::time::Duration;
+
+use printed_bespoke::coordinator::router::Key;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::runtime::pjrt::Runtime;
+
+fn manifest() -> Option<Manifest> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    if Runtime::is_stub() != printed_bespoke::ml::fixtures::manifest_is_stub(&man) {
+        eprintln!("skipping: artifact tree does not match the compiled runtime backend");
+        return None;
+    }
+    Some(man)
+}
+
+const RESOLVE_WITHIN: Duration = Duration::from_secs(30);
+
+/// Drop the service with a wall of streaming requests in flight — a
+/// slow multi-batch backlog across every model (each first use also
+/// compiles).  Every receiver must resolve within the bound.
+#[test]
+fn inflight_submits_resolve_on_drop() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // Small batches + long linger: the backlog is cut into many
+    // batches and queues linger, so the drop genuinely races execution.
+    let cfg = ServiceConfig { max_batch: 4, linger_ms: 50, ..ServiceConfig::default() };
+    let svc = Service::start(cfg).unwrap();
+    let mut pending = Vec::new();
+    for entry in &man.models {
+        let ds = Dataset::load(man.data_dir(), &entry.dataset, "test").unwrap();
+        for i in 0..24 {
+            let key = Key::precision(&entry.name, 8);
+            let x = ds.x[i % ds.len()].clone();
+            pending.push(svc.submit(key, x).unwrap());
+        }
+    }
+    // Drop on a helper thread so a hanging drop fails the test instead
+    // of wedging it.
+    let (done_tx, done_rx) = channel();
+    let dropper = std::thread::spawn(move || {
+        drop(svc);
+        let _ = done_tx.send(());
+    });
+    for (i, rx) in pending.into_iter().enumerate() {
+        match rx.recv_timeout(RESOLVE_WITHIN) {
+            Ok(_reply) => {} // completed (Ok scores) or error — both fine
+            Err(e) => panic!("request {i} hung across Service drop: {e}"),
+        }
+    }
+    done_rx
+        .recv_timeout(RESOLVE_WITHIN)
+        .expect("Service::drop itself hung");
+    dropper.join().unwrap();
+}
+
+/// Same contract with a slow bulk job in flight on another thread:
+/// streaming submits queued behind it must resolve even though the
+/// facade handle is released mid-flight (the last `Arc` owner — the
+/// bulk thread — runs the actual drop/drain).
+#[test]
+fn submits_behind_bulk_work_resolve_on_drop() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let svc = std::sync::Arc::new(Service::start(ServiceConfig::default()).unwrap());
+    let entry = &man.models[0];
+    let ds = Dataset::load(man.data_dir(), &entry.dataset, "test").unwrap();
+    let key = Key::precision(&entry.name, 8);
+    // A multi-chunk bulk job keeps the worker busy on its own thread.
+    let bulk = {
+        let svc = std::sync::Arc::clone(&svc);
+        let key = key.clone();
+        let xs: Vec<Vec<f32>> = (0..512).map(|i| ds.x[i % ds.len()].clone()).collect();
+        std::thread::spawn(move || svc.scores(&key, &xs).map(|s| s.len()))
+    };
+    // Streaming submits race the bulk job for the worker.
+    let pending: Vec<_> = (0..16)
+        .map(|i| svc.submit(key.clone(), ds.x[i % ds.len()].clone()).unwrap())
+        .collect();
+    drop(svc); // release our handle while everything is in flight
+    for (i, rx) in pending.into_iter().enumerate() {
+        assert!(
+            rx.recv_timeout(RESOLVE_WITHIN).is_ok(),
+            "streaming request {i} hung behind bulk work across drop"
+        );
+    }
+    let n = bulk.join().unwrap().expect("bulk path failed");
+    assert_eq!(n, 512);
+}
