@@ -1,40 +1,225 @@
 //! Perf bench (L3 hot path): ISS simulation rate in instructions/second
-//! for both cores, plus per-sample inference cost per variant.  Used by
-//! the EXPERIMENTS.md §Perf iteration log.
+//! (MIPS) per (core, variant), in three configurations:
+//!
+//! * `legacy`      — the pre-rework per-sample path (fresh simulator per
+//!   sample: program re-encode, RAM/dmem realloc, per-byte/word
+//!   preloads, full profiling) — the *before* number;
+//! * `full`        — reused simulator + prepared image, `FullProfile`;
+//! * `cycles-only` — reused simulator + `CyclesOnly` tracer: the path
+//!   the DSE sweeps, crosscheck and accuracy runs actually take.
+//!
+//! Emits `BENCH_iss.json` with every number so CI can archive the
+//! before/after trajectory.  The `->` summary lines report the
+//! cycles-only MIPS (the production hot path).
 
 use printed_bespoke::dse::context::EvalContext;
-use printed_bespoke::ml::codegen_rv32::{self, Rv32Variant};
-use printed_bespoke::ml::codegen_tpisa::{self, TpVariant};
+use printed_bespoke::ml::codegen_rv32::{
+    self, InputFormat, Rv32Program, Rv32Variant, INPUT_OFF, RAM_BYTES, SCORES_OFF,
+};
+use printed_bespoke::ml::codegen_tpisa::{self, TpIsaProgram, TpVariant};
 use printed_bespoke::ml::harness;
+use printed_bespoke::ml::model::Model;
+use printed_bespoke::ml::quant::{pack_vec, quantize};
+use printed_bespoke::sim::mem::RAM_BASE;
+use printed_bespoke::sim::tpisa::TpIsa;
+use printed_bespoke::sim::trace::CyclesOnly;
+use printed_bespoke::sim::zero_riscy::{Halt, ZeroRiscy};
 use printed_bespoke::util::bench::bench;
+
+struct Row {
+    core: &'static str,
+    variant: String,
+    samples: usize,
+    mips_legacy: f64,
+    mips_full: f64,
+    mips_cycles_only: f64,
+}
+
+/// The pre-rework RV32 harness: fresh simulator + per-byte preload per
+/// sample.  Returns retired instructions (for the MIPS denominator).
+fn legacy_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> u64 {
+    let p = prog.variant.quant_precision();
+    let fx = model.qlayers(p).unwrap()[0].fx;
+    let mut instrs = 0u64;
+    for x in xs {
+        let mut sim =
+            ZeroRiscy::new(&prog.code, &prog.rom_data, RAM_BYTES, prog.variant.mac_config());
+        let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+        let mut input = Vec::new();
+        match prog.input_format {
+            InputFormat::I16 => {
+                for q in qx {
+                    input.extend_from_slice(&(q as i16).to_le_bytes());
+                }
+            }
+            InputFormat::Packed(prec) => {
+                for w in pack_vec(&qx, prec, 32) {
+                    input.extend_from_slice(&(w as u32).to_le_bytes());
+                }
+            }
+        }
+        for (i, b) in input.iter().enumerate() {
+            sim.mem.store_u8(RAM_BASE + INPUT_OFF as u32 + i as u32, *b).unwrap();
+        }
+        assert_eq!(sim.run(50_000_000).unwrap(), Halt::Break);
+        let mut raw = Vec::with_capacity(prog.n_scores);
+        for j in 0..prog.n_scores {
+            let addr = RAM_BASE + SCORES_OFF as u32 + 4 * j as u32;
+            let acc = sim.mem.load_u32(addr).unwrap() as i32 as i64;
+            raw.push(acc as f64 / prog.score_scale);
+        }
+        let s = model.head_scores(&raw);
+        std::hint::black_box(model.predict(&s));
+        instrs += sim.profile.instructions;
+    }
+    instrs
+}
+
+/// The pre-rework TP-ISA harness: fresh simulator + per-word constant
+/// and input preload per sample.
+fn legacy_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> u64 {
+    let p = prog.quant_precision;
+    let fx = model.qlayers(p).unwrap()[0].fx;
+    let mut instrs = 0u64;
+    for x in xs {
+        let mut sim = TpIsa::new(prog.datapath, &prog.code, prog.dmem_words, prog.mac_config());
+        for (addr, v) in prog.dmem_image.iter().enumerate() {
+            sim.dmem.store(addr as i64, *v).unwrap();
+        }
+        let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+        let words: Vec<u64> = if prog.packed_input {
+            pack_vec(&qx, p, prog.datapath)
+        } else {
+            qx.iter().map(|&q| q as u64).collect()
+        };
+        for (i, w) in words.iter().enumerate() {
+            sim.dmem.store(prog.input_base as i64 + i as i64, *w).unwrap();
+        }
+        let halt = sim.run(500_000_000).unwrap();
+        assert_eq!(halt, printed_bespoke::sim::tpisa::Halt::Halted);
+        let nacc = (32 / prog.datapath).max(1) as usize;
+        let mut raw = Vec::with_capacity(prog.n_scores);
+        for j in 0..prog.n_scores {
+            let mut acc: u64 = 0;
+            for wi in 0..nacc {
+                let chunk = sim.dmem.load((prog.score_base + j * nacc + wi) as i64).unwrap();
+                acc |= chunk << (prog.datapath * wi as u32);
+            }
+            let acc = printed_bespoke::sim::mac_model::sext(acc, 32);
+            raw.push(acc as f64 / prog.score_scale);
+        }
+        let s = model.head_scores(&raw);
+        std::hint::black_box(model.predict(&s));
+        instrs += sim.profile.instructions;
+    }
+    instrs
+}
+
+fn mips(instrs: u64, min_ms: f64) -> f64 {
+    instrs as f64 / (min_ms / 1e3) / 1e6
+}
 
 fn main() -> anyhow::Result<()> {
     let ctx = EvalContext::load(32)?;
     let model = &ctx.models[0]; // mlp_c_cardio: the largest program
     let xs = &ctx.cycle_samples[0];
+    let mut rows: Vec<Row> = Vec::new();
 
     // Zero-Riscy ISS rate.
     for variant in [Rv32Variant::Baseline, Rv32Variant::Simd(8)] {
         let prog = codegen_rv32::generate(model, variant)?;
+        let label = variant.label();
         let mut instrs = 0u64;
-        let r = bench(&format!("zero-riscy ISS {} x{}", variant.label(), xs.len()), 1, 10, || {
+        let r_legacy = bench(&format!("zr {label} legacy fresh-sim x{}", xs.len()), 1, 10, || {
+            instrs = legacy_rv32(model, &prog, xs);
+        });
+        let m_legacy = mips(instrs, r_legacy.min_ms);
+        let r_full = bench(&format!("zr {label} reused full-profile x{}", xs.len()), 1, 10, || {
             let run = harness::run_rv32(model, &prog, xs).unwrap();
             instrs = run.profile.instructions;
         });
-        let ips = instrs as f64 / (r.min_ms / 1e3);
-        println!("{:<40} {:>12.2} M instr/s", format!("  -> {}", variant.label()), ips / 1e6);
+        let m_full = mips(instrs, r_full.min_ms);
+        let r_cyc = bench(&format!("zr {label} reused cycles-only x{}", xs.len()), 1, 10, || {
+            let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs).unwrap();
+            instrs = run.profile.instructions;
+        });
+        let m_cyc = mips(instrs, r_cyc.min_ms);
+        println!("{:<40} {:>12.2} M instr/s", format!("  -> {label}"), m_cyc);
+        println!(
+            "{:<40} legacy {m_legacy:.2} | full {m_full:.2} | cycles-only {m_cyc:.2} MIPS \
+             (x{:.2} vs legacy)",
+            format!("     {label}"),
+            m_cyc / m_legacy
+        );
+        rows.push(Row {
+            core: "zero-riscy",
+            variant: label,
+            samples: xs.len(),
+            mips_legacy: m_legacy,
+            mips_full: m_full,
+            mips_cycles_only: m_cyc,
+        });
     }
 
     // TP-ISA ISS rate (software-multiply baseline is the heavy one).
     for (d, variant) in [(8u32, TpVariant::Baseline), (8, TpVariant::Mac { precision: 8 })] {
         let prog = codegen_tpisa::generate(model, d, variant)?;
+        let label = format!("d{d} {}", variant.label());
         let mut instrs = 0u64;
-        let r = bench(&format!("tp-isa d{d} ISS {} x{}", variant.label(), xs.len()), 1, 5, || {
+        let r_legacy = bench(&format!("tp {label} legacy fresh-sim x{}", xs.len()), 1, 5, || {
+            instrs = legacy_tpisa(model, &prog, xs);
+        });
+        let m_legacy = mips(instrs, r_legacy.min_ms);
+        let r_full = bench(&format!("tp {label} reused full-profile x{}", xs.len()), 1, 5, || {
             let run = harness::run_tpisa(model, &prog, xs).unwrap();
             instrs = run.profile.instructions;
         });
-        let ips = instrs as f64 / (r.min_ms / 1e3);
-        println!("{:<40} {:>12.2} M instr/s", format!("  -> {}", variant.label()), ips / 1e6);
+        let m_full = mips(instrs, r_full.min_ms);
+        let r_cyc = bench(&format!("tp {label} reused cycles-only x{}", xs.len()), 1, 5, || {
+            let run = harness::run_tpisa_traced::<CyclesOnly>(model, &prog, xs).unwrap();
+            instrs = run.profile.instructions;
+        });
+        let m_cyc = mips(instrs, r_cyc.min_ms);
+        println!("{:<40} {:>12.2} M instr/s", format!("  -> {label}"), m_cyc);
+        println!(
+            "{:<40} legacy {m_legacy:.2} | full {m_full:.2} | cycles-only {m_cyc:.2} MIPS \
+             (x{:.2} vs legacy)",
+            format!("     {label}"),
+            m_cyc / m_legacy
+        );
+        rows.push(Row {
+            core: "tp-isa",
+            variant: label,
+            samples: xs.len(),
+            mips_legacy: m_legacy,
+            mips_full: m_full,
+            mips_cycles_only: m_cyc,
+        });
     }
+
+    // Archive the before/after numbers.
+    let mut json = String::new();
+    json.push_str("{\n  \"bench\": \"perf_iss\",\n  \"unit\": \"MIPS\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"core\": \"{}\", \"variant\": \"{}\", \"samples\": {}, \
+             \"mips_legacy\": {:.3}, \"mips_full\": {:.3}, \"mips_cycles_only\": {:.3}, \
+             \"speedup_vs_legacy\": {:.3}}}{}\n",
+            r.core,
+            r.variant,
+            r.samples,
+            r.mips_legacy,
+            r.mips_full,
+            r.mips_cycles_only,
+            r.mips_cycles_only / r.mips_legacy,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the emission at the workspace root, where CI picks it up.
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_iss.json");
+    std::fs::write(&out, &json)?;
+    println!("wrote {} ({} configurations)", out.display(), rows.len());
     Ok(())
 }

@@ -5,6 +5,12 @@
 //! Each workload runs as one thread-pool job; the per-workload profiles
 //! are merged in workload order, so the resulting [`Utilization`] is
 //! identical at any thread count.
+//!
+//! This pass is the one consumer that needs the ISS's **full** trace
+//! (instruction histogram, register bitmask, PC/BAR reach), so it runs
+//! the simulators in `FullProfile` mode — the cycle sweeps and
+//! accuracy/crosscheck runs use the `CyclesOnly` fast path instead
+//! (see `sim::trace::TraceMode`).
 
 use anyhow::Result;
 

@@ -204,6 +204,7 @@ impl Service {
     pub fn crosscheck(&self, samples: usize) -> Result<String> {
         use crate::ml::codegen_rv32::{self, Rv32Variant};
         use crate::ml::harness;
+        use crate::sim::trace::CyclesOnly;
         let mut xs_per_model: Vec<Vec<Vec<f32>>> = Vec::new();
         for model in &self.models {
             let ds = Dataset::load(self.manifest.data_dir(), &model.dataset, "test")?;
@@ -232,10 +233,11 @@ impl Service {
                     }
                 }
             }
-            // ISS (SIMD variants exist for p <= 16).
+            // ISS (SIMD variants exist for p <= 16).  The check only
+            // consumes scores, so skip the utilization profiling work.
             if p <= 16 {
                 let prog = codegen_rv32::generate(model, Rv32Variant::Simd(p))?;
-                let run = harness::run_rv32(model, &prog, xs)?;
+                let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs)?;
                 for (i, x) in xs.iter().enumerate() {
                     let want = model.quantized_forward(x, p)?;
                     if run.scores[i] != want {

@@ -2,6 +2,12 @@
 //! technology, loaded once per run — plus the thread pool the sweeps
 //! scatter onto and the per-(model, variant) program cache, so codegen
 //! runs once per sweep instead of once per row.
+//!
+//! Each cached program carries its `Arc`-shared prepared execution
+//! image (`sim::PreparedRv32` / `sim::PreparedTpIsa`: pre-encoded ROM,
+//! initial dmem, static mnemonics), so every sweep row and every pool
+//! worker constructs simulators from the same image — the per-sample
+//! encode/preload cost is paid exactly once per (model, variant).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

@@ -8,6 +8,12 @@
 //! `tests/parallel_determinism.rs`.  Programs come from the context's
 //! (model, variant) cache, so codegen runs once per sweep even though
 //! several reports share the same configurations.
+//!
+//! The cycle sweeps only consume `cycles_per_sample` and ROM cells, so
+//! they run the ISS in [`CyclesOnly`] mode (no per-retire profiling
+//! work; bit-identical cycles — see `tests/iss_equivalence.rs`).  The
+//! utilization profile that feeds the bespoke reduction still comes
+//! from `bespoke::profile`'s `FullProfile` runs.
 
 use anyhow::Result;
 
@@ -18,6 +24,7 @@ use crate::hw::synth::{synthesize, zero_riscy, MulOption, SynthReport};
 use crate::ml::codegen_rv32::Rv32Variant;
 use crate::ml::codegen_tpisa::{self, TpVariant};
 use crate::ml::harness;
+use crate::sim::trace::CyclesOnly;
 use crate::util::stats;
 
 /// One Table-I row.
@@ -51,7 +58,8 @@ fn zr_cycles(ctx: &EvalContext, variant: Rv32Variant) -> Result<(Vec<f64>, f64)>
     let idx: Vec<usize> = (0..ctx.models.len()).collect();
     let runs: Vec<Result<(f64, f64)>> = ctx.pool().par_map(idx, |i| {
         let prog = ctx.rv32_program(i, variant)?;
-        let run = harness::run_rv32(&ctx.models[i], &prog, &ctx.cycle_samples[i])?;
+        let run =
+            harness::run_rv32_traced::<CyclesOnly>(&ctx.models[i], &prog, &ctx.cycle_samples[i])?;
         Ok((run.cycles_per_sample, prog.rom_cells as f64))
     });
     let mut per_model = Vec::new();
@@ -143,7 +151,7 @@ fn tp_cycles(
         let Ok(prog) = ctx.tpisa_program(i, d, variant) else {
             return Ok(None); // e.g. multi-layer models on the 4-bit core
         };
-        let run = harness::run_tpisa(model, &prog, &ctx.cycle_samples[i])?;
+        let run = harness::run_tpisa_traced::<CyclesOnly>(model, &prog, &ctx.cycle_samples[i])?;
         Ok(Some((i, run.cycles_per_sample, prog.rom_cells as f64)))
     });
     let mut out = Vec::new();

@@ -101,7 +101,9 @@ pub enum CsrOp {
 
 impl Instr {
     /// Dense, stable per-mnemonic id (the profiler's histogram index —
-    /// the retire hot path must not hash or compare strings).
+    /// the retire hot path must not hash or compare strings).  Sits on
+    /// the `FullProfile` retire path of `sim::zero_riscy`.
+    #[inline]
     pub fn mnemonic_id(&self) -> usize {
         match *self {
             Instr::Lui { .. } => 0,
@@ -123,6 +125,7 @@ impl Instr {
     }
 
     /// Stable mnemonic (profiling histograms key on this).
+    #[inline]
     pub fn mnemonic(&self) -> &'static str {
         match self {
             Instr::Lui { .. } => "lui",

@@ -72,7 +72,9 @@ pub enum Instr {
 
 impl Instr {
     /// Dense per-mnemonic id (profiler histogram index; see
-    /// `rv32::Instr::mnemonic_id`).
+    /// `rv32::Instr::mnemonic_id`).  Sits on the `FullProfile` retire
+    /// path of `sim::tpisa`.
+    #[inline]
     pub fn mnemonic_id(&self) -> usize {
         match self {
             Instr::Ldi { .. } => 0,
@@ -104,6 +106,7 @@ impl Instr {
         }
     }
 
+    #[inline]
     pub fn mnemonic(&self) -> &'static str {
         match self {
             Instr::Ldi { .. } => "ldi",

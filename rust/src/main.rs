@@ -30,6 +30,7 @@ use printed_bespoke::dse::{context::EvalContext, report};
 use printed_bespoke::hw::egfet::egfet;
 use printed_bespoke::hw::synth::{synthesize, tpisa, zero_riscy};
 use printed_bespoke::server::{loadgen, Server, ServerConfig};
+use printed_bespoke::sim::trace::CyclesOnly;
 use printed_bespoke::util::cli::Args;
 
 fn main() {
@@ -161,7 +162,13 @@ fn cmd_eval(args: &Args) -> Result<()> {
             m,
             printed_bespoke::ml::codegen_rv32::Rv32Variant::Simd(precision.min(16)),
         )?;
-        let run = printed_bespoke::ml::harness::run_rv32_on(ctx.pool(), m, &prog, &ds.x)?;
+        // Accuracy only needs scores + cycle counts: cycles-only trace.
+        let run = printed_bespoke::ml::harness::run_rv32_on_traced::<CyclesOnly>(
+            ctx.pool(),
+            m,
+            &prog,
+            &ds.x,
+        )?;
         println!(
             "[iss ] {} p{} accuracy {:.4} ({:.0} cycles/sample)",
             model,

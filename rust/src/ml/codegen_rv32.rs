@@ -18,6 +18,8 @@
 //!   written as i32 words to the scores region; the harness dequantises
 //!   with the last layer's `2^-(fx+fw)` scale and applies the head.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use super::model::{Model, QLayer};
@@ -26,6 +28,7 @@ use crate::hw::mac_unit::MacConfig;
 use crate::isa::rv32::Instr;
 use crate::isa::rv32_asm::Asm;
 use crate::sim::mem::RAM_BASE;
+use crate::sim::prepared::PreparedRv32;
 
 /// Fixed ROM offset where constant data is placed (code must fit below).
 pub const DATA_BASE: u32 = 0x2000;
@@ -85,6 +88,10 @@ pub enum InputFormat {
 pub struct Rv32Program {
     pub code: Vec<Instr>,
     pub rom_data: Vec<u8>,
+    /// Shared prepared image (encoded ROM, static mnemonics, MAC
+    /// config, `RAM_BYTES` of RAM) — built once here so the harness
+    /// constructs simulators without re-encoding the program.
+    pub prepared: Arc<PreparedRv32>,
     pub variant: Rv32Variant,
     pub n_scores: usize,
     pub input_format: InputFormat,
@@ -268,9 +275,11 @@ pub fn generate(model: &Model, variant: Rv32Variant) -> Result<Rv32Program> {
     rom_data.extend_from_slice(&data);
 
     let lastq = &qls[last_idx];
+    let prepared = Arc::new(PreparedRv32::new(&code, &rom_data, RAM_BYTES, variant.mac_config()));
     Ok(Rv32Program {
         code,
         rom_data,
+        prepared,
         variant,
         n_scores: model.raw_outputs(),
         input_format: match variant {

@@ -31,6 +31,8 @@
 //! const_base ..      weights, biases, rounding constants
 //! ```
 
+use std::sync::Arc;
+
 use anyhow::{ensure, Result};
 
 use super::model::{Model, QLayer};
@@ -38,6 +40,7 @@ use super::quant::{pack_vec, qlimits};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::tpisa::{Asm, Instr};
 use crate::isa::MacOp;
+use crate::sim::prepared::PreparedTpIsa;
 
 /// Program variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,6 +56,14 @@ impl TpVariant {
             TpVariant::Mac { precision } => format!("mac-p{precision}"),
         }
     }
+
+    /// The MAC unit a `datapath`-bit core running this variant carries.
+    pub fn mac_config(&self, datapath: u32) -> Option<MacConfig> {
+        match self {
+            TpVariant::Baseline => None,
+            TpVariant::Mac { precision } => Some(MacConfig::new(datapath, *precision)),
+        }
+    }
 }
 
 /// A generated TP-ISA program plus its I/O contract.
@@ -61,6 +72,10 @@ pub struct TpIsaProgram {
     pub code: Vec<Instr>,
     /// Initial data-memory image (constants; input region zeroed).
     pub dmem_image: Vec<u64>,
+    /// Shared prepared image (code + masked initial dmem + MAC config)
+    /// — built once here so the harness constructs simulators with a
+    /// memcpy instead of per-word constant stores.
+    pub prepared: Arc<PreparedTpIsa>,
     pub datapath: u32,
     pub variant: TpVariant,
     pub quant_precision: u32,
@@ -76,10 +91,7 @@ pub struct TpIsaProgram {
 
 impl TpIsaProgram {
     pub fn mac_config(&self) -> Option<MacConfig> {
-        match self.variant {
-            TpVariant::Baseline => None,
-            TpVariant::Mac { precision } => Some(MacConfig::new(self.datapath, precision)),
-        }
+        self.variant.mac_config(self.datapath)
     }
 }
 
@@ -230,10 +242,13 @@ pub fn generate(model: &Model, datapath: u32, variant: TpVariant) -> Result<TpIs
 
     let lastq = &qls[last_idx];
     let const_bytes = (consts.len() * d as usize).div_ceil(8);
+    let prepared =
+        Arc::new(PreparedTpIsa::new(d, &code, dmem_image.clone(), variant.mac_config(d)));
     Ok(TpIsaProgram {
         rom_cells: code.len() * 2 + const_bytes,
         code,
         dmem_image,
+        prepared,
         datapath: d,
         variant,
         quant_precision: p,

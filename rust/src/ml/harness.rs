@@ -7,20 +7,43 @@
 //! (model, precision) the ISS scores must equal the HLO executable's
 //! scores exactly.
 //!
+//! Per-sample cost model (§Perf iteration 3): each batch reuses **one**
+//! simulator built from the program's `Arc`-shared prepared image —
+//! [`crate::sim::PreparedRv32`] / [`crate::sim::PreparedTpIsa`] — and
+//! [`reset()`](crate::sim::zero_riscy::ZeroRiscy::reset)s it between
+//! samples (a memcpy of the initial memory image), so no per-sample
+//! program clone, ROM encode, allocation or per-word constant preload
+//! remains.  Input preload and score readout go through the bulk
+//! `Mem::write_ram`/`read_ram` (`WordMem::write_words`/`read_words`)
+//! helpers — one bounds check per transfer instead of one `Result` per
+//! byte/word.
+//!
+//! The `*_traced` variants are generic over a
+//! [`TraceMode`](crate::sim::trace::TraceMode):
+//! [`FullProfile`](crate::sim::trace::FullProfile) reproduces the
+//! complete utilization profile (the bespoke reduction pass needs it),
+//! [`CyclesOnly`](crate::sim::trace::CyclesOnly) skips the per-retire
+//! histogram / register-bitmask / max-PC work for callers that only
+//! consume scores, predictions and cycle counts (the DSE sweeps, the
+//! coordinator crosscheck, accuracy runs).  Both modes produce
+//! bit-identical scores, predictions and cycle counts —
+//! `tests/iss_equivalence.rs` pins this.
+//!
 //! [`run_rv32_on`] / [`run_tpisa_on`] shard a batch across a thread
-//! pool (each sample runs in its own ISS instance anyway); the sharded
-//! results merge in sample order, so they are interchangeable with the
+//! pool (each shard reuses its own ISS instance); the sharded results
+//! merge in sample order, so they are interchangeable with the
 //! sequential [`run_rv32`] / [`run_tpisa`].
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
-use super::codegen_rv32::{InputFormat, Rv32Program, RAM_BYTES, SCORES_OFF};
+use super::codegen_rv32::{InputFormat, Rv32Program, INPUT_OFF, SCORES_OFF};
 use super::codegen_tpisa::TpIsaProgram;
 use super::model::Model;
 use super::quant::{pack_vec, quantize};
-use crate::sim::mem::RAM_BASE;
 use crate::sim::tpisa::TpIsa;
-use crate::sim::trace::Profile;
+use crate::sim::trace::{FullProfile, Profile, TraceMode};
 use crate::sim::zero_riscy::{Halt, ZeroRiscy};
 use crate::util::threadpool::ThreadPool;
 
@@ -30,10 +53,20 @@ pub struct BatchRun {
     /// Uniform score vectors (post-head), one per sample.
     pub scores: Vec<Vec<f64>>,
     pub predictions: Vec<i64>,
-    /// Aggregated execution profile.
+    /// Aggregated execution profile (complete under `FullProfile`;
+    /// cycles/instructions/event counters only under `CyclesOnly`).
     pub profile: Profile,
     /// Cycles per sample (mean).
     pub cycles_per_sample: f64,
+}
+
+fn empty_run() -> BatchRun {
+    BatchRun {
+        scores: Vec::new(),
+        predictions: Vec::new(),
+        profile: Profile::default(),
+        cycles_per_sample: 0.0,
+    }
 }
 
 /// Quantise + lay out one input vector per the program's contract.
@@ -57,79 +90,105 @@ fn input_words_rv32(model: &Model, prog: &Rv32Program, x: &[f32]) -> Result<Vec<
     Ok(bytes)
 }
 
-/// Run a batch of samples through the Zero-Riscy ISS.
+/// Run a batch of samples through the Zero-Riscy ISS with full
+/// profiling (the pre-rework behaviour).
 pub fn run_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> Result<BatchRun> {
+    run_rv32_traced::<FullProfile>(model, prog, xs)
+}
+
+/// [`run_rv32`] generic over the tracing mode.
+pub fn run_rv32_traced<M: TraceMode>(
+    model: &Model,
+    prog: &Rv32Program,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
+    if xs.is_empty() {
+        return Ok(empty_run());
+    }
     let mut scores = Vec::with_capacity(xs.len());
     let mut predictions = Vec::with_capacity(xs.len());
-    let mut profile = Profile::default();
-    for x in xs {
-        let mut sim =
-            ZeroRiscy::new(&prog.code, &prog.rom_data, RAM_BYTES, prog.variant.mac_config());
-        let input = input_words_rv32(model, prog, x)?;
-        for (i, b) in input.iter().enumerate() {
-            sim.mem
-                .store_u8(RAM_BASE + super::codegen_rv32::INPUT_OFF as u32 + i as u32, *b)?;
+    let mut sim = ZeroRiscy::from_prepared(Arc::clone(&prog.prepared));
+    for (si, x) in xs.iter().enumerate() {
+        if si > 0 {
+            sim.reset();
         }
-        let halt = sim.run(50_000_000).context("ISS run")?;
+        let input = input_words_rv32(model, prog, x)?;
+        sim.mem.write_ram(INPUT_OFF as usize, &input)?;
+        let halt = sim.run_traced::<M>(50_000_000).context("ISS run")?;
         ensure!(halt == Halt::Break, "program did not halt cleanly: {halt:?}");
         let mut raw = Vec::with_capacity(prog.n_scores);
-        for j in 0..prog.n_scores {
-            let acc =
-                sim.mem.load_u32(RAM_BASE + SCORES_OFF as u32 + 4 * j as u32)? as i32 as i64;
-            raw.push(acc as f64 / prog.score_scale);
+        {
+            let bytes = sim.mem.read_ram(SCORES_OFF as usize, 4 * prog.n_scores)?;
+            for j in 0..prog.n_scores {
+                let b = &bytes[4 * j..4 * j + 4];
+                let acc = i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as i64;
+                raw.push(acc as f64 / prog.score_scale);
+            }
         }
         let s = model.head_scores(&raw);
         predictions.push(model.predict(&s));
         scores.push(s);
-        profile.merge(&sim.profile);
     }
-    let cps = profile.cycles as f64 / xs.len().max(1) as f64;
+    // One reused simulator accumulates the whole batch's profile — the
+    // same totals as merging per-sample profiles in sample order.
+    let profile = sim.profile;
+    let cps = profile.cycles as f64 / xs.len() as f64;
     Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
 }
 
-/// Run a batch through the TP-ISA ISS.
+/// Run a batch through the TP-ISA ISS with full profiling.
 pub fn run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> Result<BatchRun> {
+    run_tpisa_traced::<FullProfile>(model, prog, xs)
+}
+
+/// [`run_tpisa`] generic over the tracing mode.
+pub fn run_tpisa_traced<M: TraceMode>(
+    model: &Model,
+    prog: &TpIsaProgram,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
+    if xs.is_empty() {
+        return Ok(empty_run());
+    }
     let p = prog.quant_precision;
     let fx = model.qlayers(p)?[0].fx;
+    let nacc = (32 / prog.datapath).max(1) as usize;
     let mut scores = Vec::with_capacity(xs.len());
     let mut predictions = Vec::with_capacity(xs.len());
-    let mut profile = Profile::default();
-    for x in xs {
-        let mut sim = TpIsa::new(prog.datapath, &prog.code, prog.dmem_words, prog.mac_config());
-        // Preload constants (weights, biases, rounding constants).
-        for (addr, v) in prog.dmem_image.iter().enumerate() {
-            sim.dmem.store(addr as i64, *v)?;
+    let mut sim = TpIsa::from_prepared(Arc::clone(&prog.prepared));
+    for (si, x) in xs.iter().enumerate() {
+        if si > 0 {
+            // Memcpy-restores the constants the prepared image carries.
+            sim.reset();
         }
-        // Input.
         let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
         let words: Vec<u64> = if prog.packed_input {
             pack_vec(&qx, p, prog.datapath)
         } else {
             qx.iter().map(|&q| q as u64).collect()
         };
-        for (i, w) in words.iter().enumerate() {
-            sim.dmem.store(prog.input_base as i64 + i as i64, *w)?;
-        }
-        let halt = sim.run(500_000_000).context("TP-ISA run")?;
+        sim.dmem.write_words(prog.input_base, &words)?;
+        let halt = sim.run_traced::<M>(500_000_000).context("TP-ISA run")?;
         ensure!(halt == crate::sim::tpisa::Halt::Halted, "did not halt: {halt:?}");
         // Scores: nacc d-bit chunks per output, little-endian.
-        let nacc = (32 / prog.datapath).max(1) as usize;
         let mut raw = Vec::with_capacity(prog.n_scores);
-        for j in 0..prog.n_scores {
-            let mut acc: u64 = 0;
-            for wi in 0..nacc {
-                let chunk = sim.dmem.load((prog.score_base + j * nacc + wi) as i64)?;
-                acc |= chunk << (prog.datapath * wi as u32);
+        {
+            let chunks = sim.dmem.read_words(prog.score_base, prog.n_scores * nacc)?;
+            for j in 0..prog.n_scores {
+                let mut acc: u64 = 0;
+                for (wi, &chunk) in chunks[j * nacc..(j + 1) * nacc].iter().enumerate() {
+                    acc |= chunk << (prog.datapath * wi as u32);
+                }
+                let acc = crate::sim::mac_model::sext(acc, 32);
+                raw.push(acc as f64 / prog.score_scale);
             }
-            let acc = crate::sim::mac_model::sext(acc, 32);
-            raw.push(acc as f64 / prog.score_scale);
         }
         let s = model.head_scores(&raw);
         predictions.push(model.predict(&s));
         scores.push(s);
-        profile.merge(&sim.profile);
     }
-    let cps = profile.cycles as f64 / xs.len().max(1) as f64;
+    let profile = sim.profile;
+    let cps = profile.cycles as f64 / xs.len() as f64;
     Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
 }
 
@@ -158,16 +217,26 @@ fn merge_runs(runs: Vec<Result<BatchRun>>, n_samples: usize) -> Result<BatchRun>
     Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
 }
 
-/// [`run_rv32`] with the samples sharded across `pool` (each shard is an
-/// independent ISS instance; results gather in sample order).
+/// [`run_rv32`] with the samples sharded across `pool` (each shard
+/// reuses one ISS instance; results gather in sample order).
 pub fn run_rv32_on(
     pool: &ThreadPool,
     model: &Model,
     prog: &Rv32Program,
     xs: &[Vec<f32>],
 ) -> Result<BatchRun> {
+    run_rv32_on_traced::<FullProfile>(pool, model, prog, xs)
+}
+
+/// [`run_rv32_on`] generic over the tracing mode.
+pub fn run_rv32_on_traced<M: TraceMode>(
+    pool: &ThreadPool,
+    model: &Model,
+    prog: &Rv32Program,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
     let shards: Vec<&[Vec<f32>]> = xs.chunks(shard_size(xs.len(), pool.threads())).collect();
-    let runs = pool.par_map(shards, |shard| run_rv32(model, prog, shard));
+    let runs = pool.par_map(shards, |shard| run_rv32_traced::<M>(model, prog, shard));
     merge_runs(runs, xs.len())
 }
 
@@ -178,8 +247,18 @@ pub fn run_tpisa_on(
     prog: &TpIsaProgram,
     xs: &[Vec<f32>],
 ) -> Result<BatchRun> {
+    run_tpisa_on_traced::<FullProfile>(pool, model, prog, xs)
+}
+
+/// [`run_tpisa_on`] generic over the tracing mode.
+pub fn run_tpisa_on_traced<M: TraceMode>(
+    pool: &ThreadPool,
+    model: &Model,
+    prog: &TpIsaProgram,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
     let shards: Vec<&[Vec<f32>]> = xs.chunks(shard_size(xs.len(), pool.threads())).collect();
-    let runs = pool.par_map(shards, |shard| run_tpisa(model, prog, shard));
+    let runs = pool.par_map(shards, |shard| run_tpisa_traced::<M>(model, prog, shard));
     merge_runs(runs, xs.len())
 }
 

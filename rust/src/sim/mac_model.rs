@@ -43,12 +43,17 @@ impl MacState {
         self.cfg.lanes() as usize
     }
 
+    /// Zero all accumulators — both the `maccl` instruction and the
+    /// simulator `reset()` path (the accumulators are the unit's only
+    /// mutable state, so clear == full reset).
     pub fn clear(&mut self) {
         self.acc.iter_mut().for_each(|a| *a = 0);
     }
 
     /// Execute one MAC instruction on packed operand words (masked to
-    /// the datapath width).
+    /// the datapath width).  Sits in the ISS inner loop of every SIMD
+    /// variant.
+    #[inline]
     pub fn mac(&mut self, a: u64, b: u64) {
         let d = self.cfg.datapath;
         let p = self.cfg.precision;

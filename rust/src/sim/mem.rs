@@ -8,74 +8,143 @@
 //!
 //! Zero-Riscy addresses bytes (little-endian); TP-ISA uses its own
 //! word-addressed data memory (`WordMem`) of d-bit cells.
+//!
+//! Performance contract (§Perf iteration 3): the ROM is `Arc`-shared
+//! with the prepared program image (never copied per simulator), the
+//! in-range access path is branch + slice index with **no** error
+//! machinery inlined, and all error construction lives in `#[cold]`
+//! out-of-line helpers.  Bulk transfers ([`Mem::write_ram`] /
+//! [`Mem::read_ram`] / [`WordMem::write_words`] / [`WordMem::read_words`])
+//! give the harness one bounds check per batch instead of one `Result`
+//! per byte/word.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use anyhow::Result;
 
 pub const RAM_BASE: u32 = 0x0001_0000;
 
-/// Byte-addressed ROM + RAM for the RV32 core.
+#[cold]
+#[inline(never)]
+fn load_fault(addr: u32) -> anyhow::Error {
+    anyhow::anyhow!("load from invalid address {addr:#010x}")
+}
+
+#[cold]
+#[inline(never)]
+fn store_fault(addr: u32) -> anyhow::Error {
+    anyhow::anyhow!("store to invalid address {addr:#010x}")
+}
+
+#[cold]
+#[inline(never)]
+fn word_load_fault(addr: i64) -> anyhow::Error {
+    anyhow::anyhow!("TP-ISA load from invalid word address {addr}")
+}
+
+#[cold]
+#[inline(never)]
+fn word_store_fault(addr: i64) -> anyhow::Error {
+    anyhow::anyhow!("TP-ISA store to invalid word address {addr}")
+}
+
+/// Byte-addressed ROM + RAM for the RV32 core.  The ROM is shared
+/// (read-only) with the prepared program image; only RAM is owned.
 #[derive(Debug, Clone)]
 pub struct Mem {
-    pub rom: Vec<u8>,
+    pub rom: Arc<Vec<u8>>,
     pub ram: Vec<u8>,
 }
 
 impl Mem {
-    pub fn new(rom: Vec<u8>, ram_bytes: usize) -> Mem {
-        Mem { rom, ram: vec![0; ram_bytes] }
+    pub fn new(rom: impl Into<Arc<Vec<u8>>>, ram_bytes: usize) -> Mem {
+        Mem { rom: rom.into(), ram: vec![0; ram_bytes] }
     }
 
+    /// Zero RAM in place (the ROM is immutable) — the reset path of a
+    /// reused simulator.
+    pub fn reset(&mut self) {
+        self.ram.fill(0);
+    }
+
+    #[inline]
     fn slot(&mut self, addr: u32, len: usize) -> Result<&mut [u8]> {
-        let a = addr as usize;
         if addr >= RAM_BASE {
-            let off = a - RAM_BASE as usize;
-            if off + len <= self.ram.len() {
-                return Ok(&mut self.ram[off..off + len]);
+            let off = (addr - RAM_BASE) as usize;
+            if let Some(s) = self.ram.get_mut(off..off + len) {
+                return Ok(s);
             }
         }
-        bail!("store to invalid address {addr:#010x}")
+        Err(store_fault(addr))
     }
 
+    #[inline]
     fn view(&self, addr: u32, len: usize) -> Result<&[u8]> {
         let a = addr as usize;
         if addr >= RAM_BASE {
             let off = a - RAM_BASE as usize;
-            if off + len <= self.ram.len() {
-                return Ok(&self.ram[off..off + len]);
+            if let Some(s) = self.ram.get(off..off + len) {
+                return Ok(s);
             }
-        } else if a + len <= self.rom.len() {
-            return Ok(&self.rom[a..a + len]);
+        } else if let Some(s) = self.rom.get(a..a + len) {
+            return Ok(s);
         }
-        bail!("load from invalid address {addr:#010x}")
+        Err(load_fault(addr))
     }
 
+    #[inline]
     pub fn load_u8(&self, addr: u32) -> Result<u8> {
         Ok(self.view(addr, 1)?[0])
     }
 
+    #[inline]
     pub fn load_u16(&self, addr: u32) -> Result<u16> {
         let b = self.view(addr, 2)?;
         Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
+    #[inline]
     pub fn load_u32(&self, addr: u32) -> Result<u32> {
         let b = self.view(addr, 4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
+    #[inline]
     pub fn store_u8(&mut self, addr: u32, v: u8) -> Result<()> {
         self.slot(addr, 1)?[0] = v;
         Ok(())
     }
 
+    #[inline]
     pub fn store_u16(&mut self, addr: u32, v: u16) -> Result<()> {
         self.slot(addr, 2)?.copy_from_slice(&v.to_le_bytes());
         Ok(())
     }
 
+    #[inline]
     pub fn store_u32(&mut self, addr: u32, v: u32) -> Result<()> {
         self.slot(addr, 4)?.copy_from_slice(&v.to_le_bytes());
         Ok(())
+    }
+
+    /// Bulk write into RAM at `offset` bytes past [`RAM_BASE`] — the
+    /// harness's input-preload path.
+    pub fn write_ram(&mut self, offset: usize, bytes: &[u8]) -> Result<()> {
+        match self.ram.get_mut(offset..offset + bytes.len()) {
+            Some(s) => {
+                s.copy_from_slice(bytes);
+                Ok(())
+            }
+            None => Err(store_fault(RAM_BASE.wrapping_add(offset as u32))),
+        }
+    }
+
+    /// Bulk read of `len` bytes of RAM at `offset` bytes past
+    /// [`RAM_BASE`] — the harness's score-readout path.
+    pub fn read_ram(&self, offset: usize, len: usize) -> Result<&[u8]> {
+        self.ram
+            .get(offset..offset + len)
+            .ok_or_else(|| load_fault(RAM_BASE.wrapping_add(offset as u32)))
     }
 }
 
@@ -108,20 +177,24 @@ impl WordMem {
         }
     }
 
+    #[inline]
     pub fn load(&self, addr: i64) -> Result<u64> {
-        if addr < 0 || addr as usize >= self.words.len() {
-            bail!("TP-ISA load from invalid word address {addr}");
+        match usize::try_from(addr).ok().and_then(|a| self.words.get(a)) {
+            Some(&v) => Ok(v),
+            None => Err(word_load_fault(addr)),
         }
-        Ok(self.words[addr as usize])
     }
 
+    #[inline]
     pub fn store(&mut self, addr: i64, v: u64) -> Result<()> {
-        if addr < 0 || addr as usize >= self.words.len() {
-            bail!("TP-ISA store to invalid word address {addr}");
-        }
         let m = self.mask();
-        self.words[addr as usize] = v & m;
-        Ok(())
+        match usize::try_from(addr).ok().and_then(|a| self.words.get_mut(a)) {
+            Some(slot) => {
+                *slot = v & m;
+                Ok(())
+            }
+            None => Err(word_store_fault(addr)),
+        }
     }
 
     /// Write a signed value (masked to the cell width).
@@ -132,6 +205,33 @@ impl WordMem {
     /// Read a sign-extended value.
     pub fn load_signed(&self, addr: i64) -> Result<i64> {
         Ok(super::mac_model::sext(self.load(addr)?, self.width))
+    }
+
+    /// Bulk masked write of `vals` at word address `base` — the
+    /// harness's input-preload path.
+    pub fn write_words(&mut self, base: usize, vals: &[u64]) -> Result<()> {
+        let m = self.mask();
+        match self.words.get_mut(base..base + vals.len()) {
+            Some(s) => {
+                for (slot, &v) in s.iter_mut().zip(vals) {
+                    *slot = v & m;
+                }
+                Ok(())
+            }
+            None => Err(word_store_fault(base as i64)),
+        }
+    }
+
+    /// Bulk read of `len` words at word address `base` — the harness's
+    /// score-readout path.
+    pub fn read_words(&self, base: usize, len: usize) -> Result<&[u64]> {
+        self.words.get(base..base + len).ok_or_else(|| word_load_fault(base as i64))
+    }
+
+    /// Memcpy-restore the whole memory from a prepared initial image
+    /// (values already masked; `image.len()` must equal [`Self::len`]).
+    pub fn restore(&mut self, image: &[u64]) {
+        self.words.copy_from_slice(image);
     }
 }
 
@@ -165,6 +265,25 @@ mod tests {
     }
 
     #[test]
+    fn bulk_ram_roundtrip_and_reset() {
+        let mut m = Mem::new(vec![], 16);
+        m.write_ram(4, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(m.load_u32(RAM_BASE + 4).unwrap(), 0x0403_0201);
+        assert_eq!(m.read_ram(4, 4).unwrap(), &[1, 2, 3, 4]);
+        assert!(m.write_ram(14, &[0; 4]).is_err());
+        assert!(m.read_ram(13, 4).is_err());
+        m.reset();
+        assert_eq!(m.load_u32(RAM_BASE + 4).unwrap(), 0);
+    }
+
+    #[test]
+    fn rom_is_shared_not_copied() {
+        let rom = Arc::new(vec![7u8; 8]);
+        let m = Mem::new(Arc::clone(&rom), 4);
+        assert!(Arc::ptr_eq(&m.rom, &rom));
+    }
+
+    #[test]
     fn word_mem_masks_to_width() {
         let mut m = WordMem::new(8, 16);
         m.store(3, 0x1ff).unwrap();
@@ -174,5 +293,17 @@ mod tests {
         assert_eq!(m.load_signed(4).unwrap(), -2);
         assert!(m.load(16).is_err());
         assert!(m.store(-1, 0).is_err());
+    }
+
+    #[test]
+    fn word_mem_bulk_and_restore() {
+        let mut m = WordMem::new(8, 8);
+        m.write_words(2, &[0x1ff, 7]).unwrap();
+        assert_eq!(m.read_words(2, 2).unwrap(), &[0xff, 7]);
+        assert!(m.write_words(7, &[0, 0]).is_err());
+        assert!(m.read_words(7, 2).is_err());
+        let image = vec![1u64, 2, 3, 4, 5, 6, 7, 8];
+        m.restore(&image);
+        assert_eq!(m.read_words(0, 8).unwrap(), image.as_slice());
     }
 }

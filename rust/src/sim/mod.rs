@@ -4,14 +4,23 @@
 //! * [`mem`] — ROM/RAM model with the program image layout.
 //! * [`mac_model`] — the bit-exact functional model of the SIMD MAC
 //!   unit, mirrored by the Pallas kernel (`kernels/simd_mac.py`).
+//! * [`prepared`] — sample-invariant program images ([`PreparedRv32`],
+//!   [`PreparedTpIsa`]): pre-decoded code, pre-encoded ROM bytes and
+//!   the initial TP-ISA data-memory image, built once per
+//!   (model, variant) and `Arc`-shared by every simulator instance.
 //! * [`trace`] — execution profiles: instruction histograms, register
 //!   and CSR utilization, PC reach — the inputs to the bespoke
-//!   reduction pass.
+//!   reduction pass — plus the compile-time [`TraceMode`]s
+//!   ([`FullProfile`] / [`CyclesOnly`]) the run loops are generic over.
 //! * [`zero_riscy`] — RV32IM 2-stage pipeline timing model.
 //! * [`tpisa`] — the minimal width-configurable printed core.
 
 pub mod mac_model;
 pub mod mem;
+pub mod prepared;
 pub mod tpisa;
 pub mod trace;
 pub mod zero_riscy;
+
+pub use prepared::{PreparedRv32, PreparedTpIsa};
+pub use trace::{CyclesOnly, FullProfile, TraceMode};

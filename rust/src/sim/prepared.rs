@@ -1,0 +1,148 @@
+//! Prepared program images: everything about a program that is
+//! invariant across samples, built **once** per (model, variant) and
+//! `Arc`-shared by every simulator instance that runs it.
+//!
+//! Before this existed, every harness sample paid to re-clone the
+//! decoded instruction vector, re-`encode()` the ROM byte image and
+//! re-preload the TP-ISA constant data through per-word bounds-checked
+//! stores.  A [`PreparedRv32`] / [`PreparedTpIsa`] hoists all of that
+//! out of the per-sample path: constructing a simulator from a prepared
+//! image is two `Arc` clones plus one RAM allocation, and
+//! [`crate::sim::zero_riscy::ZeroRiscy::reset`] /
+//! [`crate::sim::tpisa::TpIsa::reset`] restore the initial state with a
+//! memcpy so one simulator can run a whole shard of samples.
+//!
+//! The images live inside the codegen outputs (`ml::codegen_rv32::Rv32Program`,
+//! `ml::codegen_tpisa::TpIsaProgram`), which the `dse::context`
+//! program cache already Arc-shares across sweep rows and threads.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use crate::hw::mac_unit::MacConfig;
+use crate::isa::{rv32, tpisa};
+
+/// Immutable per-program state of the Zero-Riscy ISS: the pre-decoded
+/// program, the pre-encoded ROM byte image (code, padding, constant
+/// data), the RAM size, the MAC configuration and the static mnemonic
+/// set the profiler seeds from.
+#[derive(Debug, Clone)]
+pub struct PreparedRv32 {
+    /// Pre-decoded program (index = pc / 4).
+    pub code: Vec<rv32::Instr>,
+    /// Encoded ROM image: code, 4-byte-aligned padding, constant data.
+    /// `Arc`-shared with every simulator's read-only `Mem::rom`.
+    pub rom: Arc<Vec<u8>>,
+    pub ram_bytes: usize,
+    pub mac: Option<MacConfig>,
+    /// Mnemonics present in the program image (static utilization).
+    pub static_mnemonics: BTreeSet<&'static str>,
+}
+
+impl PreparedRv32 {
+    /// Encode the ROM image and collect the static mnemonic set.
+    /// `code` is placed at ROM address 0; `rom_data` follows 4-byte
+    /// aligned; RAM is `ram_bytes`.
+    pub fn new(
+        code: &[rv32::Instr],
+        rom_data: &[u8],
+        ram_bytes: usize,
+        mac: Option<MacConfig>,
+    ) -> PreparedRv32 {
+        let mut rom = Vec::with_capacity(code.len() * 4 + rom_data.len());
+        for i in code {
+            rom.extend_from_slice(&i.encode().to_le_bytes());
+        }
+        while rom.len() % 4 != 0 {
+            rom.push(0);
+        }
+        rom.extend_from_slice(rom_data);
+        let static_mnemonics = code.iter().map(|i| i.mnemonic()).collect();
+        let (code, rom) = (code.to_vec(), Arc::new(rom));
+        PreparedRv32 { code, rom, ram_bytes, mac, static_mnemonics }
+    }
+
+    /// Byte offset where constant data begins in ROM.
+    pub fn data_base(&self) -> u32 {
+        (self.code.len() * 4) as u32
+    }
+}
+
+/// Immutable per-program state of the TP-ISA ISS: the program, the
+/// initial data-memory image (constants placed, input region zeroed,
+/// every word masked to the datapath width) and the MAC configuration.
+#[derive(Debug, Clone)]
+pub struct PreparedTpIsa {
+    /// Datapath width in bits (d ∈ {4, 8, 16, 32}).
+    pub width: u32,
+    pub code: Vec<tpisa::Instr>,
+    /// Initial data-memory image; `reset()` memcpy-restores it.
+    pub init_dmem: Vec<u64>,
+    pub mac: Option<MacConfig>,
+    /// Mnemonics present in the program image (static utilization).
+    pub static_mnemonics: BTreeSet<&'static str>,
+}
+
+impl PreparedTpIsa {
+    /// Build from a code image and an initial data-memory image
+    /// (`init_dmem.len()` is the data-memory size in words; values are
+    /// masked to the datapath width here, once, so restores are a
+    /// plain copy).
+    pub fn new(
+        width: u32,
+        code: &[tpisa::Instr],
+        mut init_dmem: Vec<u64>,
+        mac: Option<MacConfig>,
+    ) -> PreparedTpIsa {
+        assert!(width >= 1 && width <= 64);
+        if let Some(cfg) = &mac {
+            assert_eq!(cfg.datapath, width, "MAC datapath must match the core");
+        }
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        for w in &mut init_dmem {
+            *w &= mask;
+        }
+        let static_mnemonics = code.iter().map(|i| i.mnemonic()).collect();
+        PreparedTpIsa { width, code: code.to_vec(), init_dmem, mac, static_mnemonics }
+    }
+
+    /// Compatibility constructor: a zeroed data memory of `dmem_words`
+    /// (the pre-rework `TpIsa::new` contract — callers preload
+    /// constants themselves).
+    pub fn with_zero_dmem(
+        width: u32,
+        code: &[tpisa::Instr],
+        dmem_words: usize,
+        mac: Option<MacConfig>,
+    ) -> PreparedTpIsa {
+        Self::new(width, code, vec![0; dmem_words], mac)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rv32_rom_image_matches_manual_encode() {
+        use crate::isa::rv32_asm::assemble;
+        let code = assemble("addi t0, t0, 1\nebreak").unwrap();
+        let p = PreparedRv32::new(&code, &[0xaa, 0xbb], 64, None);
+        assert_eq!(p.rom.len(), 8 + 2);
+        assert_eq!(p.data_base(), 8);
+        assert_eq!(&p.rom[8..], &[0xaa, 0xbb]);
+        let word = u32::from_le_bytes([p.rom[0], p.rom[1], p.rom[2], p.rom[3]]);
+        assert_eq!(word, code[0].encode());
+        assert!(p.static_mnemonics.contains("addi"));
+        assert!(p.static_mnemonics.contains("ebreak"));
+        assert!(!p.static_mnemonics.contains("mul"));
+    }
+
+    #[test]
+    fn tpisa_init_dmem_is_masked() {
+        let code = [tpisa::Instr::Halt];
+        let p = PreparedTpIsa::new(8, &code, vec![0x1ff, 0x42, u64::MAX], None);
+        assert_eq!(p.init_dmem, vec![0xff, 0x42, 0xff]);
+        assert!(p.static_mnemonics.contains("halt"));
+    }
+}

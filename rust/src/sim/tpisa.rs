@@ -12,15 +12,30 @@
 //! multi-word arithmetic (ADC/SBC/SLC/SRC), which is how the baseline
 //! core multiplies — "the whole operation is scheduled to the ALU"
 //! (paper §III-B).
+//!
+//! Hot-loop architecture (§Perf iteration 3): the program and the
+//! initial data-memory image live in an `Arc`-shared [`PreparedTpIsa`]
+//! (constants preloaded once, not per sample), [`TpIsa::reset`]
+//! memcpy-restores that image so one simulator runs a whole batch, and
+//! [`TpIsa::run_traced`] is generic over a [`TraceMode`].
 
-use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
 
 use super::mac_model::MacState;
 use super::mem::WordMem;
-use super::trace::Profile;
+use super::prepared::PreparedTpIsa;
+use super::trace::{FullProfile, Profile, TraceMode};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::tpisa::Instr;
 use crate::isa::MacOp;
+
+#[cold]
+#[inline(never)]
+fn pc_fault(pc: i64, len: usize) -> anyhow::Error {
+    anyhow::anyhow!("PC {pc} outside program ({len} instrs)")
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Halt {
@@ -43,39 +58,72 @@ pub struct TpIsa {
     pub zero: bool,
     pub dmem: WordMem,
     pub mac: Option<MacState>,
-    program: Vec<Instr>,
+    /// Shared prepared program image (code + initial dmem image).
+    prepared: Arc<PreparedTpIsa>,
     pub profile: Profile,
 }
 
 impl TpIsa {
+    /// Build a simulator with a zeroed data memory (callers preload
+    /// constants themselves).  Batch callers should build one
+    /// [`PreparedTpIsa`] — with the constants in its initial dmem
+    /// image — and use [`TpIsa::from_prepared`] instead.
     pub fn new(width: u32, code: &[Instr], dmem_words: usize, mac: Option<MacConfig>) -> Self {
-        if let Some(cfg) = &mac {
-            assert_eq!(cfg.datapath, width, "MAC datapath must match the core");
-        }
+        Self::from_prepared(Arc::new(PreparedTpIsa::with_zero_dmem(width, code, dmem_words, mac)))
+    }
+
+    /// Build a simulator over a shared prepared image: the data memory
+    /// is copied from the image's preloaded constants — no per-word
+    /// bounds-checked stores.
+    pub fn from_prepared(prepared: Arc<PreparedTpIsa>) -> Self {
+        let mut dmem = WordMem::new(prepared.width, prepared.init_dmem.len());
+        dmem.restore(&prepared.init_dmem);
         let mut profile = Profile::default();
-        for i in code {
-            profile.static_mnemonics.insert(i.mnemonic());
-        }
+        profile.static_mnemonics = prepared.static_mnemonics.clone();
         TpIsa {
-            width,
+            width: prepared.width,
             regs: [0; 8],
             pc: 0,
             carry: false,
             zero: false,
-            dmem: WordMem::new(width, dmem_words),
-            mac: mac.map(MacState::new),
-            program: code.to_vec(),
+            dmem,
+            mac: prepared.mac.map(MacState::new),
+            prepared,
             profile,
         }
     }
 
+    /// Restore the initial machine state (zero registers and flags,
+    /// data memory memcpy-restored from the prepared image, cleared
+    /// MAC accumulators, pc = 0) so the simulator can run the next
+    /// sample without being reconstructed.
+    ///
+    /// The profile is deliberately **not** cleared: it keeps
+    /// accumulating across runs, exactly as if each run's fresh profile
+    /// had been folded in with [`Profile::merge`].
+    pub fn reset(&mut self) {
+        self.regs = [0; 8];
+        self.pc = 0;
+        self.carry = false;
+        self.zero = false;
+        self.dmem.restore(&self.prepared.init_dmem);
+        if let Some(m) = &mut self.mac {
+            m.clear();
+        }
+    }
+
+    /// The shared prepared image this simulator executes.
+    pub fn prepared(&self) -> &Arc<PreparedTpIsa> {
+        &self.prepared
+    }
+
     pub fn code_len(&self) -> usize {
-        self.program.len()
+        self.prepared.code.len()
     }
 
     /// Program ROM footprint in bytes (2 bytes per instruction).
     pub fn rom_code_bytes(&self) -> usize {
-        self.program.len() * 2
+        self.prepared.code.len() * 2
     }
 
     fn mask(&self) -> u64 {
@@ -86,13 +134,19 @@ impl TpIsa {
         }
     }
 
-    fn set(&mut self, r: u8, v: u64) {
+    #[inline(always)]
+    fn set<M: TraceMode>(&mut self, r: u8, v: u64) {
         self.regs[r as usize] = v & self.mask();
-        self.profile.record_reg(r);
+        if M::PROFILE {
+            self.profile.record_reg(r);
+        }
     }
 
-    fn get(&mut self, r: u8) -> u64 {
-        self.profile.record_reg(r);
+    #[inline(always)]
+    fn get<M: TraceMode>(&mut self, r: u8) -> u64 {
+        if M::PROFILE {
+            self.profile.record_reg(r);
+        }
         self.regs[r as usize]
     }
 
@@ -100,7 +154,17 @@ impl TpIsa {
         self.zero = v & self.mask() == 0;
     }
 
+    /// Run until halt or `fuel` instructions, with full profiling.
     pub fn run(&mut self, fuel: u64) -> Result<Halt> {
+        self.run_traced::<FullProfile>(fuel)
+    }
+
+    /// [`TpIsa::run`] generic over the tracing mode: with
+    /// [`CyclesOnly`](super::trace::CyclesOnly) the per-retire
+    /// histogram, register-bitmask and max-PC updates compile away.
+    pub fn run_traced<M: TraceMode>(&mut self, fuel: u64) -> Result<Halt> {
+        let prepared = Arc::clone(&self.prepared);
+        let code: &[Instr] = &prepared.code;
         let mask = self.mask();
         let msb = 1u64 << (self.width - 1);
         let mut executed = 0u64;
@@ -109,110 +173,114 @@ impl TpIsa {
                 return Ok(Halt::Fuel);
             }
             executed += 1;
-            if self.pc < 0 || self.pc as usize >= self.program.len() {
-                bail!("PC {} outside program ({} instrs)", self.pc, self.program.len());
+            let instr = match usize::try_from(self.pc).ok().and_then(|i| code.get(i)) {
+                Some(&i) => i,
+                None => return Err(pc_fault(self.pc, code.len())),
+            };
+            if M::PROFILE {
+                self.profile.record_instr(instr.mnemonic_id(), instr.mnemonic());
+                self.profile.max_pc = self.profile.max_pc.max(self.pc as u32 * 2);
+            } else {
+                self.profile.instructions += 1;
             }
-            let instr = self.program[self.pc as usize];
-            self.profile.record_instr(instr.mnemonic_id(), instr.mnemonic());
-            self.profile.max_pc = self.profile.max_pc.max(self.pc as u32 * 2);
             let mut next = self.pc + 1;
             let mut cost = 2u64;
 
             match instr {
                 Instr::Ldi { r1, imm } => {
                     let v = (imm as i64 as u64) & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Add { r1, r2 } => {
-                    let (a, b) = (self.get(r1), self.get(r2));
+                    let (a, b) = (self.get::<M>(r1), self.get::<M>(r2));
                     let s = a + b;
                     self.carry = s > mask;
                     let v = s & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Adc { r1, r2 } => {
-                    let (a, b) = (self.get(r1), self.get(r2));
+                    let (a, b) = (self.get::<M>(r1), self.get::<M>(r2));
                     let s = a + b + self.carry as u64;
                     self.carry = s > mask;
                     let v = s & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Sub { r1, r2 } => {
-                    let (a, b) = (self.get(r1), self.get(r2));
+                    let (a, b) = (self.get::<M>(r1), self.get::<M>(r2));
                     let s = a.wrapping_sub(b);
                     self.carry = b > a; // borrow
                     let v = s & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Sbc { r1, r2 } => {
-                    let (a, b) = (self.get(r1), self.get(r2));
+                    let (a, b) = (self.get::<M>(r1), self.get::<M>(r2));
                     let bb = b + self.carry as u64;
                     let s = a.wrapping_sub(bb);
                     self.carry = bb > a;
                     let v = s & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::And { r1, r2 } => {
-                    let v = self.get(r1) & self.get(r2);
-                    self.set(r1, v);
+                    let v = self.get::<M>(r1) & self.get::<M>(r2);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Or { r1, r2 } => {
-                    let v = self.get(r1) | self.get(r2);
-                    self.set(r1, v);
+                    let v = self.get::<M>(r1) | self.get::<M>(r2);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Xor { r1, r2 } => {
-                    let v = self.get(r1) ^ self.get(r2);
-                    self.set(r1, v);
+                    let v = self.get::<M>(r1) ^ self.get::<M>(r2);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Shl { r1 } => {
-                    let a = self.get(r1);
+                    let a = self.get::<M>(r1);
                     self.carry = a & msb != 0;
                     let v = (a << 1) & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Shr { r1 } => {
-                    let a = self.get(r1);
+                    let a = self.get::<M>(r1);
                     self.carry = a & 1 != 0;
                     let v = a >> 1;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Sra { r1 } => {
-                    let a = self.get(r1);
+                    let a = self.get::<M>(r1);
                     self.carry = a & 1 != 0;
                     let v = ((a >> 1) | (a & msb)) & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Slc { r1 } => {
-                    let a = self.get(r1);
+                    let a = self.get::<M>(r1);
                     let cin = self.carry as u64;
                     self.carry = a & msb != 0;
                     let v = ((a << 1) | cin) & mask;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Src { r1 } => {
-                    let a = self.get(r1);
+                    let a = self.get::<M>(r1);
                     let cin = self.carry as u64;
                     self.carry = a & 1 != 0;
                     let v = (a >> 1) | (cin * msb);
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Ld { r1, r2, imm } => {
-                    let addr = self.get(r2) as i64 + imm as i64;
+                    let addr = self.get::<M>(r2) as i64 + imm as i64;
                     let v = self.dmem.load(addr)?;
-                    self.set(r1, v);
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                     self.profile.loads += 1;
                     self.profile.max_ram_offset =
@@ -220,8 +288,8 @@ impl TpIsa {
                     cost += 1;
                 }
                 Instr::St { r1, r2, imm } => {
-                    let addr = self.get(r2) as i64 + imm as i64;
-                    let v = self.get(r1);
+                    let addr = self.get::<M>(r2) as i64 + imm as i64;
+                    let v = self.get::<M>(r1);
                     self.dmem.store(addr, v)?;
                     self.profile.stores += 1;
                     self.profile.max_ram_offset =
@@ -229,17 +297,17 @@ impl TpIsa {
                     cost += 1;
                 }
                 Instr::Addi { r1, imm } => {
-                    let v = (self.get(r1).wrapping_add(imm as i64 as u64)) & mask;
-                    self.set(r1, v);
+                    let v = (self.get::<M>(r1).wrapping_add(imm as i64 as u64)) & mask;
+                    self.set::<M>(r1, v);
                     self.set_z(v);
                 }
                 Instr::Mov { r1, r2 } => {
-                    let v = self.get(r2);
-                    self.set(r1, v);
+                    let v = self.get::<M>(r2);
+                    self.set::<M>(r1, v);
                 }
                 Instr::Sxt { r1, r2 } => {
-                    let v = if self.get(r2) & msb != 0 { mask } else { 0 };
-                    self.set(r1, v);
+                    let v = if self.get::<M>(r2) & msb != 0 { mask } else { 0 };
+                    self.set::<M>(r1, v);
                 }
                 Instr::Clc => self.carry = false,
                 Instr::Bz { off } => {
@@ -281,8 +349,10 @@ impl TpIsa {
                         MacOp::Mac => {
                             let a = self.regs[r1 as usize];
                             let b = self.regs[r2 as usize];
-                            self.profile.record_reg(r1);
-                            self.profile.record_reg(r2);
+                            if M::PROFILE {
+                                self.profile.record_reg(r1);
+                                self.profile.record_reg(r2);
+                            }
                             let mac = self
                                 .mac
                                 .as_mut()
@@ -300,7 +370,7 @@ impl TpIsa {
                                 .as_ref()
                                 .context("MACRD on a core without a MAC unit")?;
                             let v = mac.read_total_chunk(r2 as u32, width);
-                            self.set(r1, v);
+                            self.set::<M>(r1, v);
                         }
                         MacOp::MacClr => {
                             self.mac
@@ -526,6 +596,59 @@ mod tests {
         assert_eq!(sim.regs[3], 0);
         assert_eq!(sim.regs[4], 0);
         assert_eq!(sim.regs[5], 0);
+    }
+
+    #[test]
+    fn reset_restores_prepared_dmem() {
+        // Program reads a constant from dmem, doubles it in place.
+        let mut a = Asm::new();
+        a.ldi(0, 2); // addr of the constant
+        a.push(Instr::Ld { r1: 1, r2: 0, imm: 0 });
+        a.push(Instr::Add { r1: 1, r2: 1 });
+        a.push(Instr::St { r1: 1, r2: 0, imm: 0 });
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let prepared = Arc::new(PreparedTpIsa::new(8, &prog, vec![0, 0, 21, 0], None));
+        let mut sim = TpIsa::from_prepared(Arc::clone(&prepared));
+        sim.run(100).unwrap();
+        assert_eq!(sim.dmem.load(2).unwrap(), 42);
+        let cycles_once = sim.profile.cycles;
+        sim.reset();
+        // The mutated constant is back, registers and flags cleared.
+        assert_eq!(sim.dmem.load(2).unwrap(), 21);
+        assert_eq!(sim.regs, [0; 8]);
+        assert!(!sim.carry && !sim.zero);
+        sim.run(100).unwrap();
+        assert_eq!(sim.dmem.load(2).unwrap(), 42);
+        assert_eq!(sim.profile.cycles, 2 * cycles_once);
+    }
+
+    #[test]
+    fn cycles_only_matches_full_profile() {
+        let mut a = Asm::new();
+        a.ldi(0, 10);
+        a.ldi(1, 0);
+        a.label("loop");
+        a.push(Instr::Add { r1: 1, r2: 0 });
+        a.push(Instr::Addi { r1: 0, imm: -1 });
+        a.bnz("loop");
+        a.push(Instr::St { r1: 1, r2: 0, imm: 1 });
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let prepared = Arc::new(PreparedTpIsa::with_zero_dmem(8, &prog, 4, None));
+        let mut full = TpIsa::from_prepared(Arc::clone(&prepared));
+        assert_eq!(full.run_traced::<FullProfile>(1000).unwrap(), Halt::Halted);
+        let mut cyc = TpIsa::from_prepared(prepared);
+        assert_eq!(cyc.run_traced::<crate::sim::trace::CyclesOnly>(1000).unwrap(), Halt::Halted);
+        assert_eq!(cyc.regs, full.regs);
+        assert_eq!(cyc.profile.cycles, full.profile.cycles);
+        assert_eq!(cyc.profile.instructions, full.profile.instructions);
+        assert_eq!(cyc.profile.stores, full.profile.stores);
+        assert_eq!(cyc.profile.branches_taken, full.profile.branches_taken);
+        assert!(cyc.profile.instr_counts().is_empty());
+        assert_eq!(cyc.profile.regs_used, 0);
+        assert_eq!(cyc.profile.max_pc, 0);
+        assert!(full.profile.count("add") > 0);
     }
 
     #[test]

@@ -4,6 +4,50 @@
 
 use std::collections::BTreeMap;
 
+/// Compile-time tracing mode of the ISS run loops.
+///
+/// Both simulators' `run_traced` loops are generic over a `TraceMode`,
+/// so the per-retire profiling work (histogram update, register
+/// bitmask, max-PC tracking) monomorphizes away entirely when the
+/// caller only needs scores and cycle counts — there is no runtime
+/// branch, no function-pointer call, and no dead profile buffer in the
+/// hot loop (§Perf iteration 3).  Cheap aggregate counters (cycles,
+/// instructions, loads/stores, mul/mac ops, branches taken, BAR reach)
+/// are maintained in every mode, so `cycles_per_sample` and the MIPS
+/// metric stay available.
+///
+/// Who uses which mode:
+///
+/// * [`FullProfile`] — the bespoke reduction pass
+///   (`bespoke::profile`), which needs the complete utilization
+///   picture, and every pre-existing `run()` call site.
+/// * [`CyclesOnly`] — the DSE cycle sweeps (`dse::sweep`), the
+///   coordinator crosscheck, and accuracy/serving runs, which consume
+///   only scores, predictions and cycle counts.
+pub trait TraceMode {
+    /// Whether per-retire profiling (instruction histogram, register
+    /// bitmask, max-PC) is compiled into the run loop.
+    const PROFILE: bool;
+}
+
+/// Full utilization tracing — reproduces the pre-rework [`Profile`]
+/// exactly (bit-identical histograms, register masks and PC reach).
+pub struct FullProfile;
+
+impl TraceMode for FullProfile {
+    const PROFILE: bool = true;
+}
+
+/// Scores-and-cycles tracing: the retire path skips the histogram,
+/// `record_reg` and `max_pc` updates.  The resulting [`Profile`] has
+/// exact `cycles`/`instructions`/event counters and an empty
+/// histogram/register mask.
+pub struct CyclesOnly;
+
+impl TraceMode for CyclesOnly {
+    const PROFILE: bool = false;
+}
+
 /// Accumulated profile of one or more program executions.
 ///
 /// The dynamic histogram is stored as a flat array indexed by the

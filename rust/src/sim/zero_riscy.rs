@@ -11,15 +11,32 @@
 //!
 //! The simulator optionally carries a [`MacState`] (the synthesised
 //! core's MAC configuration) and an execution [`Profile`].
+//!
+//! Hot-loop architecture (§Perf iteration 3): the program lives in an
+//! `Arc`-shared [`PreparedRv32`] (no per-simulator clone or
+//! re-encode), [`ZeroRiscy::reset`] memcpy-restores the initial state
+//! so one simulator can run a whole batch, and [`ZeroRiscy::run_traced`]
+//! is generic over a [`TraceMode`] so profile bookkeeping monomorphizes
+//! away when the caller only needs scores and cycles.  All error
+//! construction is `#[cold]` and out of line.
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use super::mac_model::MacState;
 use super::mem::{Mem, RAM_BASE};
-use super::trace::Profile;
+use super::prepared::PreparedRv32;
+use super::trace::{FullProfile, Profile, TraceMode};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::rv32::*;
 use crate::isa::MacOp;
+
+#[cold]
+#[inline(never)]
+fn fetch_fault(pc: u32) -> anyhow::Error {
+    anyhow::anyhow!("PC {pc:#010x} outside program")
+}
 
 /// Why execution stopped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,8 +55,8 @@ pub struct ZeroRiscy {
     pub pc: u32,
     pub mem: Mem,
     pub mac: Option<MacState>,
-    /// Pre-decoded program (index = pc / 4).
-    program: Vec<Instr>,
+    /// Shared prepared program image (pre-decoded code + encoded ROM).
+    prepared: Arc<PreparedRv32>,
     pub profile: Profile,
 }
 
@@ -56,52 +73,87 @@ pub const ALL_MNEMONICS: &[&str] = &[
 impl ZeroRiscy {
     /// Build a simulator for a program image.  `code` is placed at ROM
     /// address 0; `rom_data` follows 4-byte aligned; RAM is `ram_bytes`.
+    ///
+    /// Prepares the image on the spot; batch callers should build one
+    /// [`PreparedRv32`] and use [`ZeroRiscy::from_prepared`] instead.
     pub fn new(code: &[Instr], rom_data: &[u8], ram_bytes: usize, mac: Option<MacConfig>) -> Self {
-        let mut rom = Vec::with_capacity(code.len() * 4 + rom_data.len());
-        for i in code {
-            rom.extend_from_slice(&i.encode().to_le_bytes());
-        }
-        while rom.len() % 4 != 0 {
-            rom.push(0);
-        }
-        rom.extend_from_slice(rom_data);
+        Self::from_prepared(Arc::new(PreparedRv32::new(code, rom_data, ram_bytes, mac)))
+    }
+
+    /// Build a simulator over a shared prepared image: two `Arc`
+    /// clones plus one RAM allocation — no program copy, no encode.
+    pub fn from_prepared(prepared: Arc<PreparedRv32>) -> Self {
         let mut profile = Profile::default();
-        for i in code {
-            profile.static_mnemonics.insert(i.mnemonic());
-        }
+        profile.static_mnemonics = prepared.static_mnemonics.clone();
         ZeroRiscy {
             regs: [0; 32],
             pc: 0,
-            mem: Mem::new(rom, ram_bytes),
-            mac: mac.map(MacState::new),
-            program: code.to_vec(),
+            mem: Mem::new(Arc::clone(&prepared.rom), prepared.ram_bytes),
+            mac: prepared.mac.map(MacState::new),
+            prepared,
             profile,
         }
     }
 
+    /// Restore the initial machine state (zero registers and RAM,
+    /// cleared MAC accumulators, pc = 0) so the simulator can run the
+    /// next sample without being reconstructed.
+    ///
+    /// The profile is deliberately **not** cleared: it keeps
+    /// accumulating across runs, exactly as if each run's fresh profile
+    /// had been folded in with [`Profile::merge`].
+    pub fn reset(&mut self) {
+        self.regs = [0; 32];
+        self.pc = 0;
+        self.mem.reset();
+        if let Some(m) = &mut self.mac {
+            m.clear();
+        }
+    }
+
+    /// The shared prepared image this simulator executes.
+    pub fn prepared(&self) -> &Arc<PreparedRv32> {
+        &self.prepared
+    }
+
     /// Byte offset where constant data begins in ROM.
     pub fn data_base(&self) -> u32 {
-        (self.program.len() * 4) as u32
+        self.prepared.data_base()
     }
 
     pub fn rom_bytes(&self) -> usize {
         self.mem.rom.len()
     }
 
-    fn set_reg(&mut self, r: Reg, v: u32) {
+    #[inline(always)]
+    fn set_reg<M: TraceMode>(&mut self, r: Reg, v: u32) {
         if r != 0 {
             self.regs[r as usize] = v;
         }
-        self.profile.record_reg(r);
+        if M::PROFILE {
+            self.profile.record_reg(r);
+        }
     }
 
-    fn reg(&mut self, r: Reg) -> u32 {
-        self.profile.record_reg(r);
+    #[inline(always)]
+    fn reg<M: TraceMode>(&mut self, r: Reg) -> u32 {
+        if M::PROFILE {
+            self.profile.record_reg(r);
+        }
         self.regs[r as usize]
     }
 
-    /// Run until halt or `fuel` instructions.
+    /// Run until halt or `fuel` instructions, with full profiling.
     pub fn run(&mut self, fuel: u64) -> Result<Halt> {
+        self.run_traced::<FullProfile>(fuel)
+    }
+
+    /// [`ZeroRiscy::run`] generic over the tracing mode: with
+    /// [`CyclesOnly`](super::trace::CyclesOnly) the per-retire
+    /// histogram, register-bitmask and max-PC updates compile away.
+    pub fn run_traced<M: TraceMode>(&mut self, fuel: u64) -> Result<Halt> {
+        let prepared = Arc::clone(&self.prepared);
+        let code: &[Instr] = &prepared.code;
         let mut executed = 0u64;
         loop {
             if executed >= fuel {
@@ -109,33 +161,39 @@ impl ZeroRiscy {
             }
             executed += 1;
             let idx = (self.pc / 4) as usize;
-            let instr = *self
-                .program
-                .get(idx)
-                .with_context(|| format!("PC {:#010x} outside program", self.pc))?;
-            self.profile.record_instr(instr.mnemonic_id(), instr.mnemonic());
-            self.profile.max_pc = self.profile.max_pc.max(self.pc);
+            let instr = match code.get(idx) {
+                Some(&i) => i,
+                None => return Err(fetch_fault(self.pc)),
+            };
+            if M::PROFILE {
+                self.profile.record_instr(instr.mnemonic_id(), instr.mnemonic());
+                self.profile.max_pc = self.profile.max_pc.max(self.pc);
+            } else {
+                self.profile.instructions += 1;
+            }
             let mut next_pc = self.pc.wrapping_add(4);
             let mut cost = 1u64;
 
             match instr {
-                Instr::Lui { rd, imm } => self.set_reg(rd, imm as u32),
-                Instr::Auipc { rd, imm } => self.set_reg(rd, self.pc.wrapping_add(imm as u32)),
+                Instr::Lui { rd, imm } => self.set_reg::<M>(rd, imm as u32),
+                Instr::Auipc { rd, imm } => {
+                    self.set_reg::<M>(rd, self.pc.wrapping_add(imm as u32))
+                }
                 Instr::Jal { rd, offset } => {
-                    self.set_reg(rd, next_pc);
+                    self.set_reg::<M>(rd, next_pc);
                     next_pc = self.pc.wrapping_add(offset as u32);
                     cost += 2;
                     self.profile.branches_taken += 1;
                 }
                 Instr::Jalr { rd, rs1, offset } => {
-                    let t = self.reg(rs1).wrapping_add(offset as u32) & !1;
-                    self.set_reg(rd, next_pc);
+                    let t = self.reg::<M>(rs1).wrapping_add(offset as u32) & !1;
+                    self.set_reg::<M>(rd, next_pc);
                     next_pc = t;
                     cost += 2;
                     self.profile.branches_taken += 1;
                 }
                 Instr::Branch { op, rs1, rs2, offset } => {
-                    let (a, b) = (self.reg(rs1), self.reg(rs2));
+                    let (a, b) = (self.reg::<M>(rs1), self.reg::<M>(rs2));
                     let taken = match op {
                         BranchOp::Beq => a == b,
                         BranchOp::Bne => a != b,
@@ -151,7 +209,7 @@ impl ZeroRiscy {
                     }
                 }
                 Instr::Load { op, rd, rs1, offset } => {
-                    let addr = self.reg(rs1).wrapping_add(offset as u32);
+                    let addr = self.reg::<M>(rs1).wrapping_add(offset as u32);
                     let v = match op {
                         LoadOp::Lb => self.mem.load_u8(addr)? as i8 as i32 as u32,
                         LoadOp::Lbu => self.mem.load_u8(addr)? as u32,
@@ -159,14 +217,14 @@ impl ZeroRiscy {
                         LoadOp::Lhu => self.mem.load_u16(addr)? as u32,
                         LoadOp::Lw => self.mem.load_u32(addr)?,
                     };
-                    self.set_reg(rd, v);
+                    self.set_reg::<M>(rd, v);
                     self.note_ram(addr);
                     cost += 1;
                     self.profile.loads += 1;
                 }
                 Instr::Store { op, rs2, rs1, offset } => {
-                    let addr = self.reg(rs1).wrapping_add(offset as u32);
-                    let v = self.reg(rs2);
+                    let addr = self.reg::<M>(rs1).wrapping_add(offset as u32);
+                    let v = self.reg::<M>(rs2);
                     match op {
                         StoreOp::Sb => self.mem.store_u8(addr, v as u8)?,
                         StoreOp::Sh => self.mem.store_u16(addr, v as u16)?,
@@ -177,18 +235,18 @@ impl ZeroRiscy {
                     self.profile.stores += 1;
                 }
                 Instr::OpImm { op, rd, rs1, imm } => {
-                    let a = self.reg(rs1);
+                    let a = self.reg::<M>(rs1);
                     let v = alu(op, a, imm as u32);
-                    self.set_reg(rd, v);
+                    self.set_reg::<M>(rd, v);
                 }
                 Instr::Op { op, rd, rs1, rs2 } => {
-                    let (a, b) = (self.reg(rs1), self.reg(rs2));
-                    self.set_reg(rd, alu(op, a, b));
+                    let (a, b) = (self.reg::<M>(rs1), self.reg::<M>(rs2));
+                    self.set_reg::<M>(rd, alu(op, a, b));
                 }
                 Instr::MulDiv { op, rd, rs1, rs2 } => {
-                    let (a, b) = (self.reg(rs1), self.reg(rs2));
+                    let (a, b) = (self.reg::<M>(rs1), self.reg::<M>(rs2));
                     let v = muldiv(op, a, b);
-                    self.set_reg(rd, v);
+                    self.set_reg::<M>(rd, v);
                     match op {
                         MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => {
                             cost += 2; // 3-cycle multi-stage multiplier
@@ -200,8 +258,8 @@ impl ZeroRiscy {
                 Instr::Csr { rd, rs1, .. } => {
                     // Minimal CSR file: reads return 0 (the bespoke flow
                     // only needs to *observe* CSR usage).
-                    let _ = self.reg(rs1);
-                    self.set_reg(rd, 0);
+                    let _ = self.reg::<M>(rs1);
+                    self.set_reg::<M>(rd, 0);
                     self.profile.csr_used = true;
                 }
                 Instr::Ecall => {
@@ -223,14 +281,16 @@ impl ZeroRiscy {
                         MacOp::Mac => {
                             let a = self.regs[rs1 as usize];
                             let b = self.regs[rs2 as usize];
-                            self.profile.record_reg(rs1);
-                            self.profile.record_reg(rs2);
+                            if M::PROFILE {
+                                self.profile.record_reg(rs1);
+                                self.profile.record_reg(rs2);
+                            }
                             mac.mac(a as u64, b as u64);
                             self.profile.mac_ops += 1;
                         }
                         MacOp::MacRd => {
                             let v = mac.read(rs1 as usize);
-                            self.set_reg(rd, v);
+                            self.set_reg::<M>(rd, v);
                         }
                         MacOp::MacClr => mac.clear(),
                     }
@@ -450,6 +510,82 @@ mod tests {
         assert_eq!(sim.profile.branches_taken, 2);
         assert!(sim.profile.unused_mnemonics(ALL_MNEMONICS).contains(&"mulh"));
         assert!(!sim.profile.csr_used);
+    }
+
+    #[test]
+    fn reset_reproduces_fresh_run() {
+        let prog = assemble(&format!(
+            r#"
+                li   t0, {RAM_BASE}
+                li   t1, 77
+                sw   t1, 0(t0)
+                lw   t2, 0(t0)
+                ebreak
+            "#
+        ))
+        .unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[], 64, Some(MacConfig::new(32, 32))));
+        let mut reused = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+        reused.run(1000).unwrap();
+        let first_cycles = reused.profile.cycles;
+        reused.reset();
+        assert_eq!(reused.pc, 0);
+        assert_eq!(reused.regs, [0; 32]);
+        assert_eq!(reused.mem.load_u32(RAM_BASE).unwrap(), 0);
+        reused.run(1000).unwrap();
+
+        let mut fresh = ZeroRiscy::from_prepared(prepared);
+        fresh.run(1000).unwrap();
+        assert_eq!(reused.regs, fresh.regs);
+        assert_eq!(reused.mem.ram, fresh.mem.ram);
+        // The accumulated profile equals two merged fresh runs.
+        assert_eq!(reused.profile.cycles, 2 * first_cycles);
+        assert_eq!(reused.profile.cycles, 2 * fresh.profile.cycles);
+        assert_eq!(reused.profile.instructions, 2 * fresh.profile.instructions);
+    }
+
+    #[test]
+    fn cycles_only_matches_full_profile() {
+        let prog = assemble(
+            r#"
+                li   t0, 6
+                li   t1, 0
+            l:  add  t1, t1, t0
+                addi t0, t0, -1
+                bnez t0, l
+                mul  t2, t1, t1
+                ebreak
+            "#,
+        )
+        .unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[], 64, None));
+        let mut full = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+        assert_eq!(full.run_traced::<FullProfile>(1000).unwrap(), Halt::Break);
+        let mut cyc = ZeroRiscy::from_prepared(prepared);
+        assert_eq!(cyc.run_traced::<crate::sim::trace::CyclesOnly>(1000).unwrap(), Halt::Break);
+        // Identical architectural state and cycle/instruction counts...
+        assert_eq!(cyc.regs, full.regs);
+        assert_eq!(cyc.profile.cycles, full.profile.cycles);
+        assert_eq!(cyc.profile.instructions, full.profile.instructions);
+        assert_eq!(cyc.profile.mul_ops, full.profile.mul_ops);
+        assert_eq!(cyc.profile.branches_taken, full.profile.branches_taken);
+        // ...with the per-retire profiling work skipped.
+        assert!(cyc.profile.instr_counts().is_empty());
+        assert_eq!(cyc.profile.regs_used, 0);
+        assert_eq!(cyc.profile.max_pc, 0);
+        assert!(full.profile.count("add") > 0);
+        assert!(full.profile.max_pc > 0);
+    }
+
+    #[test]
+    fn prepared_image_is_shared_not_copied() {
+        let prog = assemble("ebreak").unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[1, 2, 3], 64, None));
+        let a = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+        let b = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+        assert!(Arc::ptr_eq(a.prepared(), b.prepared()));
+        assert!(Arc::ptr_eq(&a.mem.rom, &b.mem.rom));
+        assert_eq!(a.rom_bytes(), 4 + 3);
     }
 
     #[test]

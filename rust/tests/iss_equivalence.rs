@@ -1,0 +1,303 @@
+//! Satellite: the ISS execution-core rework (shared prepared programs,
+//! reset-reused simulators, monomorphized tracers) must be
+//! **bit-identical** to the pre-rework implementation.
+//!
+//! Three contracts, pinned differentially across random samples, all
+//! six fixture models and both ISAs:
+//!
+//! 1. `CyclesOnly` and `FullProfile` runs produce bit-identical scores,
+//!    predictions, cycle and instruction counts;
+//! 2. a `reset()`-reused simulator (what the harness does) equals a
+//!    freshly constructed simulator per sample (what the pre-rework
+//!    harness did) — including the complete merged `FullProfile`
+//!    (histogram, register bitmask, PC/BAR reach, every counter);
+//! 3. sharded pool runs at 1 and 8 workers equal the sequential run in
+//!    both tracing modes (CI additionally runs this file under
+//!    `PBSP_THREADS=1` and `8`).
+//!
+//! The "legacy" reference below replicates the pre-rework harness
+//! line-for-line: one `ZeroRiscy::new`/`TpIsa::new` per sample (full
+//! program re-encode), per-byte / per-word preloads, per-sample profile
+//! merge.  Runs against `make artifacts` output when present, else the
+//! checked-in `artifacts-fixture/`; skips only if both are missing.
+
+use printed_bespoke::ml::codegen_rv32::{
+    self, InputFormat, Rv32Program, Rv32Variant, INPUT_OFF, RAM_BYTES, SCORES_OFF,
+};
+use printed_bespoke::ml::codegen_tpisa::{self, TpIsaProgram, TpVariant};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::harness::{self, BatchRun};
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::ml::model::Model;
+use printed_bespoke::ml::quant::{pack_vec, quantize};
+use printed_bespoke::sim::mem::RAM_BASE;
+use printed_bespoke::sim::tpisa::TpIsa;
+use printed_bespoke::sim::trace::{CyclesOnly, FullProfile, Profile};
+use printed_bespoke::sim::zero_riscy::{Halt, ZeroRiscy};
+use printed_bespoke::util::rng::Pcg32;
+use printed_bespoke::util::threadpool::ThreadPool;
+
+fn load() -> Option<(Manifest, Vec<Model>)> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    let models = man.models.iter().map(|e| Model::load(&e.weights).unwrap()).collect();
+    Some((man, models))
+}
+
+/// Random in-range inputs: convex combinations of dataset rows (inside
+/// the data hull, so fixed-point headroom holds).
+fn random_samples(man: &Manifest, model: &Model, rng: &mut Pcg32, n: usize) -> Vec<Vec<f32>> {
+    let ds = Dataset::load(man.data_dir(), &model.dataset, "test").unwrap();
+    (0..n)
+        .map(|_| {
+            let a = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+            let b = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+            let t = rng.f64() as f32;
+            a.iter().zip(b).map(|(&va, &vb)| va + t * (vb - va)).collect()
+        })
+        .collect()
+}
+
+/// The pre-rework RV32 harness, verbatim: fresh simulator per sample,
+/// per-byte input preload, per-word score readout, per-sample merge.
+fn legacy_run_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> BatchRun {
+    let p = prog.variant.quant_precision();
+    let fx = model.qlayers(p).unwrap()[0].fx;
+    let mut scores = Vec::new();
+    let mut predictions = Vec::new();
+    let mut profile = Profile::default();
+    for x in xs {
+        let mut sim =
+            ZeroRiscy::new(&prog.code, &prog.rom_data, RAM_BYTES, prog.variant.mac_config());
+        let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+        let mut input = Vec::new();
+        match prog.input_format {
+            InputFormat::I16 => {
+                for q in qx {
+                    input.extend_from_slice(&(q as i16).to_le_bytes());
+                }
+            }
+            InputFormat::Packed(prec) => {
+                for w in pack_vec(&qx, prec, 32) {
+                    input.extend_from_slice(&(w as u32).to_le_bytes());
+                }
+            }
+        }
+        for (i, b) in input.iter().enumerate() {
+            sim.mem.store_u8(RAM_BASE + INPUT_OFF as u32 + i as u32, *b).unwrap();
+        }
+        assert_eq!(sim.run(50_000_000).unwrap(), Halt::Break);
+        let mut raw = Vec::with_capacity(prog.n_scores);
+        for j in 0..prog.n_scores {
+            let addr = RAM_BASE + SCORES_OFF as u32 + 4 * j as u32;
+            let acc = sim.mem.load_u32(addr).unwrap() as i32 as i64;
+            raw.push(acc as f64 / prog.score_scale);
+        }
+        let s = model.head_scores(&raw);
+        predictions.push(model.predict(&s));
+        scores.push(s);
+        profile.merge(&sim.profile);
+    }
+    let cps = profile.cycles as f64 / xs.len().max(1) as f64;
+    BatchRun { scores, predictions, profile, cycles_per_sample: cps }
+}
+
+/// The pre-rework TP-ISA harness, verbatim.
+fn legacy_run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> BatchRun {
+    let p = prog.quant_precision;
+    let fx = model.qlayers(p).unwrap()[0].fx;
+    let mut scores = Vec::new();
+    let mut predictions = Vec::new();
+    let mut profile = Profile::default();
+    for x in xs {
+        let mut sim = TpIsa::new(prog.datapath, &prog.code, prog.dmem_words, prog.mac_config());
+        for (addr, v) in prog.dmem_image.iter().enumerate() {
+            sim.dmem.store(addr as i64, *v).unwrap();
+        }
+        let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+        let words: Vec<u64> = if prog.packed_input {
+            pack_vec(&qx, p, prog.datapath)
+        } else {
+            qx.iter().map(|&q| q as u64).collect()
+        };
+        for (i, w) in words.iter().enumerate() {
+            sim.dmem.store(prog.input_base as i64 + i as i64, *w).unwrap();
+        }
+        assert_eq!(sim.run(500_000_000).unwrap(), printed_bespoke::sim::tpisa::Halt::Halted);
+        let nacc = (32 / prog.datapath).max(1) as usize;
+        let mut raw = Vec::with_capacity(prog.n_scores);
+        for j in 0..prog.n_scores {
+            let mut acc: u64 = 0;
+            for wi in 0..nacc {
+                let chunk = sim.dmem.load((prog.score_base + j * nacc + wi) as i64).unwrap();
+                acc |= chunk << (prog.datapath * wi as u32);
+            }
+            let acc = printed_bespoke::sim::mac_model::sext(acc, 32);
+            raw.push(acc as f64 / prog.score_scale);
+        }
+        let s = model.head_scores(&raw);
+        predictions.push(model.predict(&s));
+        scores.push(s);
+        profile.merge(&sim.profile);
+    }
+    let cps = profile.cycles as f64 / xs.len().max(1) as f64;
+    BatchRun { scores, predictions, profile, cycles_per_sample: cps }
+}
+
+/// Bit-level equality of score matrices.
+fn assert_scores_eq(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: sample count");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{what} sample {i}: score count");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what} sample {i} score {j}: {va} vs {vb}");
+        }
+    }
+}
+
+/// Every observable of two full profiles.
+fn assert_profiles_eq(a: &Profile, b: &Profile, what: &str) {
+    assert_eq!(a.instr_counts(), b.instr_counts(), "{what}: histogram");
+    assert_eq!(a.static_mnemonics, b.static_mnemonics, "{what}: static mnemonics");
+    assert_eq!(a.regs_used, b.regs_used, "{what}: regs_used");
+    assert_eq!(a.max_pc, b.max_pc, "{what}: max_pc");
+    assert_eq!(a.csr_used, b.csr_used, "{what}: csr_used");
+    assert_eq!(a.syscalls_used, b.syscalls_used, "{what}: syscalls_used");
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.instructions, b.instructions, "{what}: instructions");
+    assert_eq!(a.loads, b.loads, "{what}: loads");
+    assert_eq!(a.stores, b.stores, "{what}: stores");
+    assert_eq!(a.mul_ops, b.mul_ops, "{what}: mul_ops");
+    assert_eq!(a.mac_ops, b.mac_ops, "{what}: mac_ops");
+    assert_eq!(a.branches_taken, b.branches_taken, "{what}: branches_taken");
+    assert_eq!(a.max_ram_offset, b.max_ram_offset, "{what}: max_ram_offset");
+}
+
+const RV32_VARIANTS: [Rv32Variant; 5] = [
+    Rv32Variant::Baseline,
+    Rv32Variant::Mac32,
+    Rv32Variant::Simd(16),
+    Rv32Variant::Simd(8),
+    Rv32Variant::Simd(4),
+];
+
+#[test]
+fn rv32_reused_and_traced_runs_match_legacy() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x1550_E9_01);
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 5);
+        for variant in RV32_VARIANTS {
+            let what = format!("{} {variant:?}", model.name);
+            let prog = codegen_rv32::generate(model, variant).unwrap();
+            let legacy = legacy_run_rv32(model, &prog, &xs);
+            let full = harness::run_rv32(model, &prog, &xs).unwrap();
+            // (2) reset-reuse == fresh-per-sample, full profile included.
+            assert_scores_eq(&full.scores, &legacy.scores, &what);
+            assert_eq!(full.predictions, legacy.predictions, "{what}: predictions");
+            assert_profiles_eq(&full.profile, &legacy.profile, &what);
+            assert_eq!(
+                full.cycles_per_sample.to_bits(),
+                legacy.cycles_per_sample.to_bits(),
+                "{what}: cycles/sample"
+            );
+            // (1) CyclesOnly == FullProfile on everything it reports.
+            let cyc = harness::run_rv32_traced::<CyclesOnly>(model, &prog, &xs).unwrap();
+            assert_scores_eq(&cyc.scores, &full.scores, &what);
+            assert_eq!(cyc.predictions, full.predictions, "{what}: cyc predictions");
+            assert_eq!(cyc.profile.cycles, full.profile.cycles, "{what}: cyc cycles");
+            assert_eq!(
+                cyc.profile.instructions,
+                full.profile.instructions,
+                "{what}: cyc instructions"
+            );
+            assert!(cyc.profile.instr_counts().is_empty(), "{what}: cyc histogram");
+        }
+    }
+}
+
+#[test]
+fn tpisa_reused_and_traced_runs_match_legacy() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x1550_E9_02);
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 4);
+        let mut configs: Vec<(u32, TpVariant)> = Vec::new();
+        for d in [8u32, 16, 32] {
+            configs.push((d, TpVariant::Baseline));
+            configs.push((d, TpVariant::Mac { precision: d.min(16) }));
+        }
+        configs.push((4, TpVariant::Baseline));
+        configs.push((4, TpVariant::Mac { precision: 4 }));
+        for (d, variant) in configs {
+            let p = codegen_tpisa::quant_precision(d, variant);
+            if model.qlayers(p).is_err() {
+                continue;
+            }
+            let Ok(prog) = codegen_tpisa::generate(model, d, variant) else {
+                continue; // e.g. multi-layer models on the 4-bit core
+            };
+            let what = format!("{} d{d} {variant:?}", model.name);
+            let legacy = legacy_run_tpisa(model, &prog, &xs);
+            let full = harness::run_tpisa(model, &prog, &xs).unwrap();
+            assert_scores_eq(&full.scores, &legacy.scores, &what);
+            assert_eq!(full.predictions, legacy.predictions, "{what}: predictions");
+            assert_profiles_eq(&full.profile, &legacy.profile, &what);
+            let cyc = harness::run_tpisa_traced::<CyclesOnly>(model, &prog, &xs).unwrap();
+            assert_scores_eq(&cyc.scores, &full.scores, &what);
+            assert_eq!(cyc.predictions, full.predictions, "{what}: cyc predictions");
+            assert_eq!(cyc.profile.cycles, full.profile.cycles, "{what}: cyc cycles");
+            assert_eq!(
+                cyc.profile.instructions,
+                full.profile.instructions,
+                "{what}: cyc instructions"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_runs_match_sequential_in_both_modes() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x1550_E9_03);
+    let pools = [ThreadPool::new(1), ThreadPool::new(8)];
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 9);
+        let prog = codegen_rv32::generate(model, Rv32Variant::Simd(8)).unwrap();
+        let seq_full = harness::run_rv32(model, &prog, &xs).unwrap();
+        let seq_cyc = harness::run_rv32_traced::<CyclesOnly>(model, &prog, &xs).unwrap();
+        let tprog = codegen_tpisa::generate(model, 32, TpVariant::Mac { precision: 8 }).unwrap();
+        let tseq_full = harness::run_tpisa(model, &tprog, &xs).unwrap();
+        let tseq_cyc = harness::run_tpisa_traced::<CyclesOnly>(model, &tprog, &xs).unwrap();
+        for pool in &pools {
+            let what = format!("{} ({} workers)", model.name, pool.threads());
+            let par_full =
+                harness::run_rv32_on_traced::<FullProfile>(pool, model, &prog, &xs).unwrap();
+            assert_scores_eq(&par_full.scores, &seq_full.scores, &what);
+            assert_eq!(par_full.predictions, seq_full.predictions, "{what}: predictions");
+            assert_profiles_eq(&par_full.profile, &seq_full.profile, &what);
+            let par_cyc =
+                harness::run_rv32_on_traced::<CyclesOnly>(pool, model, &prog, &xs).unwrap();
+            assert_scores_eq(&par_cyc.scores, &seq_cyc.scores, &what);
+            assert_eq!(par_cyc.profile.cycles, seq_cyc.profile.cycles, "{what}: cyc cycles");
+
+            let tpar_full =
+                harness::run_tpisa_on_traced::<FullProfile>(pool, model, &tprog, &xs).unwrap();
+            assert_scores_eq(&tpar_full.scores, &tseq_full.scores, &what);
+            assert_profiles_eq(&tpar_full.profile, &tseq_full.profile, &what);
+            let tpar_cyc =
+                harness::run_tpisa_on_traced::<CyclesOnly>(pool, model, &tprog, &xs).unwrap();
+            assert_scores_eq(&tpar_cyc.scores, &tseq_cyc.scores, &what);
+            assert_eq!(tpar_cyc.profile.cycles, tseq_cyc.profile.cycles, "{what}: cyc cycles");
+        }
+    }
+}
