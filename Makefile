@@ -2,7 +2,7 @@
 # tier-1 verification and needs nothing beyond a Rust toolchain: the
 # checked-in artifacts-fixture/ stands in for `make artifacts` output.
 
-.PHONY: all build test bench doc fmt fmt-check serve loadgen artifacts fixture python-test clean
+.PHONY: all build test bench bench-diff doc fmt fmt-check serve loadgen artifacts fixture python-test clean
 
 all: build
 
@@ -17,6 +17,13 @@ test:
 # Paper tables/figures + perf counters (see the bench table in README.md).
 bench:
 	cargo bench
+
+# ISS throughput gate: rerun the perf bench and compare against the
+# committed baseline (fails on >20% translated-vs-interpreted speedup
+# regression; add --absolute for same-host MIPS comparison).
+bench-diff:
+	cargo bench --bench perf_iss
+	python3 tools/bench_diff.py BENCH_iss.baseline.json BENCH_iss.json
 
 doc:
 	cargo doc --no-deps

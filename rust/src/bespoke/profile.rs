@@ -10,14 +10,17 @@
 //! (instruction histogram, register bitmask, PC/BAR reach), so it runs
 //! the simulators in `FullProfile` mode — the cycle sweeps and
 //! accuracy/crosscheck runs use the `CyclesOnly` fast path instead
-//! (see `sim::trace::TraceMode`).
+//! (see `sim::trace::TraceMode`).  Both tracing modes execute on the
+//! block-translated engine (`run_translated`), whose full profiles are
+//! bit-identical to the per-instruction interpreter
+//! (`tests/iss_equivalence.rs`).
 
 use anyhow::Result;
 
 use crate::ml::codegen_rv32::{self, Rv32Variant, RAM_BYTES};
 use crate::ml::model::Model;
 use crate::ml::{harness, microbench};
-use crate::sim::trace::Profile;
+use crate::sim::trace::{FullProfile, Profile};
 use crate::sim::zero_riscy::{Halt, ZeroRiscy, ALL_MNEMONICS};
 use crate::util::threadpool::{self, ThreadPool};
 
@@ -58,7 +61,8 @@ pub fn profile_suite_on(pool: &ThreadPool) -> Result<Utilization> {
     let names: Vec<String> = progs.iter().map(|(n, _)| n.to_string()).collect();
     let runs: Vec<Result<Profile>> = pool.par_map(progs, |(name, prog)| {
         let mut sim = ZeroRiscy::new(&prog, &[], RAM_BYTES, None);
-        anyhow::ensure!(sim.run(10_000_000)? == Halt::Break, "{name} did not halt");
+        let halt = sim.run_translated::<FullProfile>(10_000_000)?;
+        anyhow::ensure!(halt == Halt::Break, "{name} did not halt");
         Ok(sim.profile.clone())
     });
     let mut merged = Profile::default();

@@ -234,7 +234,8 @@ impl Service {
                 }
             }
             // ISS (SIMD variants exist for p <= 16).  The check only
-            // consumes scores, so skip the utilization profiling work.
+            // consumes scores, so skip the utilization profiling work;
+            // the harness dispatches on the block-translated engine.
             if p <= 16 {
                 let prog = codegen_rv32::generate(model, Rv32Variant::Simd(p))?;
                 let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs)?;

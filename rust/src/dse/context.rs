@@ -5,9 +5,11 @@
 //!
 //! Each cached program carries its `Arc`-shared prepared execution
 //! image (`sim::PreparedRv32` / `sim::PreparedTpIsa`: pre-encoded ROM,
-//! initial dmem, static mnemonics), so every sweep row and every pool
+//! initial dmem, static mnemonics, and the pre-translated basic-block
+//! cache of `sim::translate`), so every sweep row and every pool
 //! worker constructs simulators from the same image — the per-sample
-//! encode/preload cost is paid exactly once per (model, variant).
+//! encode/preload cost *and* the block translation are paid exactly
+//! once per (model, variant).
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

@@ -13,7 +13,10 @@
 //! they run the ISS in [`CyclesOnly`] mode (no per-retire profiling
 //! work; bit-identical cycles — see `tests/iss_equivalence.rs`).  The
 //! utilization profile that feeds the bespoke reduction still comes
-//! from `bespoke::profile`'s `FullProfile` runs.
+//! from `bespoke::profile`'s `FullProfile` runs.  Both modes execute on
+//! the block-translated engine (`sim::translate` + `run_translated`
+//! via `ml::harness`), so every sweep row dispatches per basic block
+//! with fused superinstructions instead of per instruction.
 
 use anyhow::Result;
 

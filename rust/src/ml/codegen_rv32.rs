@@ -89,8 +89,9 @@ pub struct Rv32Program {
     pub code: Vec<Instr>,
     pub rom_data: Vec<u8>,
     /// Shared prepared image (encoded ROM, static mnemonics, MAC
-    /// config, `RAM_BYTES` of RAM) — built once here so the harness
-    /// constructs simulators without re-encoding the program.
+    /// config, `RAM_BYTES` of RAM, pre-translated block cache) — built
+    /// once here so the harness constructs simulators without
+    /// re-encoding or re-translating the program.
     pub prepared: Arc<PreparedRv32>,
     pub variant: Rv32Variant,
     pub n_scores: usize,
@@ -100,6 +101,17 @@ pub struct Rv32Program {
     /// ROM cells actually occupied (code + data), for the §IV-B memory
     /// analysis.
     pub rom_cells: usize,
+}
+
+impl Rv32Program {
+    /// Block-cache statistics of the pre-translated image (blocks,
+    /// fused superinstructions, coverage) — the generated idioms
+    /// (`lw/lw/mac`, `lh/lh/mul/add`, `addi` stride bumps) sit on known
+    /// instruction boundaries, so the translator's peephole pass must
+    /// fuse them; `perf_iss` reports these numbers per model.
+    pub fn translate_stats(&self) -> &crate::sim::translate::TranslateStats {
+        &self.prepared.translated.stats
+    }
 }
 
 // Register conventions.
@@ -430,6 +442,38 @@ mod tests {
             assert!(!prog.code.is_empty());
             assert_eq!(prog.n_scores, 1);
             assert!(prog.rom_cells > 0);
+        }
+    }
+
+    /// Idiom-boundary contract with `sim::translate`: every variant's
+    /// emitted program translates completely (no untranslatable
+    /// blocks), and the hot idioms fuse — `lw/lw/mac` for the MAC
+    /// variants, `lh/lh/mul/add` for the baseline.
+    #[test]
+    fn generated_idioms_translate_and_fuse() {
+        let m = tiny_model();
+        for v in [
+            Rv32Variant::Baseline,
+            Rv32Variant::Mac32,
+            Rv32Variant::Simd(16),
+            Rv32Variant::Simd(8),
+            Rv32Variant::Simd(4),
+        ] {
+            let prog = generate(&m, v).unwrap();
+            let stats = prog.translate_stats();
+            assert_eq!(stats.untranslatable_blocks, 0, "{v:?}");
+            assert_eq!(stats.translated_instructions, stats.instructions, "{v:?}");
+            assert!(stats.fused > 0, "{v:?}: no fused superinstructions");
+            let fused_dot = prog.prepared.translated.blocks.iter().any(|b| {
+                b.uops.iter().any(|u| {
+                    matches!(
+                        u,
+                        crate::sim::translate::UopRv32::Load2Mac { .. }
+                            | crate::sim::translate::UopRv32::Load2MulAdd { .. }
+                    )
+                })
+            });
+            assert!(fused_dot, "{v:?}: dot-product idiom did not fuse");
         }
     }
 

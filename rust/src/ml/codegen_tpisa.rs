@@ -93,6 +93,15 @@ impl TpIsaProgram {
     pub fn mac_config(&self) -> Option<MacConfig> {
         self.variant.mac_config(self.datapath)
     }
+
+    /// Block-cache statistics of the pre-translated image — the
+    /// generated idioms (the soft-multiply shift-add kernel, the
+    /// `ld/ld/mac` bodies, the `ld/<alu>/st` accumulator updates) sit
+    /// on known instruction boundaries, so the translator's peephole
+    /// pass must fuse them; `perf_iss` reports these numbers per model.
+    pub fn translate_stats(&self) -> &crate::sim::translate::TranslateStats {
+        &self.prepared.translated.stats
+    }
 }
 
 /// Quantisation precision a variant runs at (baseline: the datapath
@@ -615,4 +624,63 @@ fn emit_output_unrolled(
         a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::translate::UopTpIsa;
+
+    fn tiny_model() -> Model {
+        Model::from_json(&crate::ml::model::tests::tiny_model_json()).unwrap()
+    }
+
+    /// Idiom-boundary contract with `sim::translate`: the emitted
+    /// programs translate completely, and the hot idioms fuse —
+    /// `ld/<alu>/st` accumulator updates for the soft-multiply
+    /// baseline, `ld/ld/mac` for the MAC variant.
+    #[test]
+    fn generated_idioms_translate_and_fuse() {
+        let m = tiny_model();
+        for (variant, want_mac_fuse) in
+            [(TpVariant::Baseline, false), (TpVariant::Mac { precision: 8 }, true)]
+        {
+            let prog = generate(&m, 8, variant).unwrap();
+            let stats = prog.translate_stats();
+            assert_eq!(stats.untranslatable_blocks, 0, "{variant:?}");
+            assert_eq!(stats.translated_instructions, stats.instructions, "{variant:?}");
+            assert!(stats.fused > 0, "{variant:?}: no fused superinstructions");
+            let mut saw_ld2mac = false;
+            let mut saw_ldopst = false;
+            for b in &prog.prepared.translated.blocks {
+                for u in b.uops.iter() {
+                    match u {
+                        UopTpIsa::Ld2Mac { .. } => saw_ld2mac = true,
+                        UopTpIsa::LdOpSt { .. } => saw_ldopst = true,
+                        _ => {}
+                    }
+                }
+            }
+            if want_mac_fuse {
+                assert!(saw_ld2mac, "{variant:?}: ld/ld/mac did not fuse");
+            } else {
+                assert!(saw_ldopst, "{variant:?}: ld/<alu>/st did not fuse");
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_and_mac_programs_agree_on_scores() {
+        use crate::ml::harness;
+        let m = tiny_model();
+        let xs = vec![vec![0.5f32, 0.25], vec![0.1, -0.3]];
+        let base = generate(&m, 8, TpVariant::Baseline).unwrap();
+        let mac = generate(&m, 8, TpVariant::Mac { precision: 8 }).unwrap();
+        let rb = harness::run_tpisa(&m, &base, &xs).unwrap();
+        let rm = harness::run_tpisa(&m, &mac, &xs).unwrap();
+        assert_eq!(rb.predictions, rm.predictions);
+        for (a, b) in rb.scores.iter().zip(&rm.scores) {
+            assert_eq!(a, b);
+        }
+    }
 }

@@ -29,6 +29,15 @@
 //! bit-identical scores, predictions and cycle counts —
 //! `tests/iss_equivalence.rs` pins this.
 //!
+//! Since §Perf iteration 4 every batch executes on the *translated*
+//! engine ([`ZeroRiscy::run_translated`] / [`TpIsa::run_translated`]):
+//! the prepared image carries a basic-block cache with fused
+//! superinstructions for the codegen idioms, so the harness dispatches
+//! per block instead of per instruction.  Scores, predictions, cycles
+//! and full profiles are bit-identical to the interpreted loop —
+//! `tests/iss_equivalence.rs` pins that differentially, including on
+//! branch-adversarial fuzz programs.
+//!
 //! [`run_rv32_on`] / [`run_tpisa_on`] shard a batch across a thread
 //! pool (each shard reuses its own ISS instance); the sharded results
 //! merge in sample order, so they are interchangeable with the
@@ -70,7 +79,9 @@ fn empty_run() -> BatchRun {
 }
 
 /// Quantise + lay out one input vector per the program's contract.
-fn input_words_rv32(model: &Model, prog: &Rv32Program, x: &[f32]) -> Result<Vec<u8>> {
+/// Public so the perf bench preloads exactly what the harness would —
+/// the I/O contract has one definition, not a per-caller copy.
+pub fn input_bytes_rv32(model: &Model, prog: &Rv32Program, x: &[f32]) -> Result<Vec<u8>> {
     let p = prog.variant.quant_precision();
     let fx = model.qlayers(p)?[0].fx;
     let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
@@ -112,9 +123,9 @@ pub fn run_rv32_traced<M: TraceMode>(
         if si > 0 {
             sim.reset();
         }
-        let input = input_words_rv32(model, prog, x)?;
+        let input = input_bytes_rv32(model, prog, x)?;
         sim.mem.write_ram(INPUT_OFF as usize, &input)?;
-        let halt = sim.run_traced::<M>(50_000_000).context("ISS run")?;
+        let halt = sim.run_translated::<M>(50_000_000).context("ISS run")?;
         ensure!(halt == Halt::Break, "program did not halt cleanly: {halt:?}");
         let mut raw = Vec::with_capacity(prog.n_scores);
         {
@@ -136,6 +147,19 @@ pub fn run_rv32_traced<M: TraceMode>(
     Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
 }
 
+/// Quantise + pack one input vector per the TP-ISA program's contract.
+/// Public for the same reason as [`input_bytes_rv32`].
+pub fn input_words_tpisa(model: &Model, prog: &TpIsaProgram, x: &[f32]) -> Result<Vec<u64>> {
+    let p = prog.quant_precision;
+    let fx = model.qlayers(p)?[0].fx;
+    let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
+    Ok(if prog.packed_input {
+        pack_vec(&qx, p, prog.datapath)
+    } else {
+        qx.iter().map(|&q| q as u64).collect()
+    })
+}
+
 /// Run a batch through the TP-ISA ISS with full profiling.
 pub fn run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> Result<BatchRun> {
     run_tpisa_traced::<FullProfile>(model, prog, xs)
@@ -150,8 +174,6 @@ pub fn run_tpisa_traced<M: TraceMode>(
     if xs.is_empty() {
         return Ok(empty_run());
     }
-    let p = prog.quant_precision;
-    let fx = model.qlayers(p)?[0].fx;
     let nacc = (32 / prog.datapath).max(1) as usize;
     let mut scores = Vec::with_capacity(xs.len());
     let mut predictions = Vec::with_capacity(xs.len());
@@ -161,14 +183,9 @@ pub fn run_tpisa_traced<M: TraceMode>(
             // Memcpy-restores the constants the prepared image carries.
             sim.reset();
         }
-        let qx: Vec<i64> = x.iter().map(|&v| quantize(v as f64, fx, p)).collect();
-        let words: Vec<u64> = if prog.packed_input {
-            pack_vec(&qx, p, prog.datapath)
-        } else {
-            qx.iter().map(|&q| q as u64).collect()
-        };
+        let words = input_words_tpisa(model, prog, x)?;
         sim.dmem.write_words(prog.input_base, &words)?;
-        let halt = sim.run_traced::<M>(500_000_000).context("TP-ISA run")?;
+        let halt = sim.run_translated::<M>(500_000_000).context("TP-ISA run")?;
         ensure!(halt == crate::sim::tpisa::Halt::Halted, "did not halt: {halt:?}");
         // Scores: nacc d-bit chunks per output, little-endian.
         let mut raw = Vec::with_capacity(prog.n_scores);

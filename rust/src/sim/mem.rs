@@ -16,7 +16,10 @@
 //! out-of-line helpers.  Bulk transfers ([`Mem::write_ram`] /
 //! [`Mem::read_ram`] / [`WordMem::write_words`] / [`WordMem::read_words`])
 //! give the harness one bounds check per batch instead of one `Result`
-//! per byte/word.
+//! per byte/word.  The block-translated run loops (§Perf iteration 4,
+//! `sim::translate`) keep every load/store on these same accessors —
+//! fused superinstructions change dispatch, not memory semantics — so
+//! fault addresses and messages are identical in both engines.
 
 use std::sync::Arc;
 

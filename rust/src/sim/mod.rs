@@ -8,19 +8,32 @@
 //!   [`PreparedTpIsa`]): pre-decoded code, pre-encoded ROM bytes and
 //!   the initial TP-ISA data-memory image, built once per
 //!   (model, variant) and `Arc`-shared by every simulator instance.
+//! * [`translate`] — basic-block pre-translation of prepared images:
+//!   straight-line micro-op blocks with block-level aggregated
+//!   bookkeeping and peephole-fused superinstructions for the codegen
+//!   hot idioms (`lw/lw/mac`, `lh/lh/mul/add`, TP-ISA soft-multiply
+//!   and `ld/ld/mac` kernels).
 //! * [`trace`] — execution profiles: instruction histograms, register
 //!   and CSR utilization, PC reach — the inputs to the bespoke
 //!   reduction pass — plus the compile-time [`TraceMode`]s
 //!   ([`FullProfile`] / [`CyclesOnly`]) the run loops are generic over.
 //! * [`zero_riscy`] — RV32IM 2-stage pipeline timing model.
 //! * [`tpisa`] — the minimal width-configurable printed core.
+//!
+//! Both cores expose two run loops over the same prepared image: the
+//! per-instruction `run_traced` (the reference interpreter) and the
+//! block-dispatching `run_translated` (the production hot path) —
+//! bit-identical in scores, cycles and profiles, pinned by
+//! `tests/iss_equivalence.rs`.
 
 pub mod mac_model;
 pub mod mem;
 pub mod prepared;
 pub mod tpisa;
 pub mod trace;
+pub mod translate;
 pub mod zero_riscy;
 
 pub use prepared::{PreparedRv32, PreparedTpIsa};
 pub use trace::{CyclesOnly, FullProfile, TraceMode};
+pub use translate::ExecStats;

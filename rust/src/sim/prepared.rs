@@ -19,6 +19,7 @@
 use std::collections::BTreeSet;
 use std::sync::Arc;
 
+use super::translate::{self, TranslatedRv32, TranslatedTpIsa};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::{rv32, tpisa};
 
@@ -36,7 +37,12 @@ pub struct PreparedRv32 {
     pub ram_bytes: usize,
     pub mac: Option<MacConfig>,
     /// Mnemonics present in the program image (static utilization).
-    pub static_mnemonics: BTreeSet<&'static str>,
+    /// `Arc`-shared with every simulator's profile — construction is a
+    /// pointer copy, not a `BTreeSet` rebuild.
+    pub static_mnemonics: Arc<BTreeSet<&'static str>>,
+    /// Pre-translated basic-block cache (built once here, ridden by
+    /// [`crate::sim::zero_riscy::ZeroRiscy::run_translated`]).
+    pub translated: TranslatedRv32,
 }
 
 impl PreparedRv32 {
@@ -57,9 +63,10 @@ impl PreparedRv32 {
             rom.push(0);
         }
         rom.extend_from_slice(rom_data);
-        let static_mnemonics = code.iter().map(|i| i.mnemonic()).collect();
+        let static_mnemonics = Arc::new(code.iter().map(|i| i.mnemonic()).collect());
+        let translated = translate::translate_rv32(code, mac.is_some());
         let (code, rom) = (code.to_vec(), Arc::new(rom));
-        PreparedRv32 { code, rom, ram_bytes, mac, static_mnemonics }
+        PreparedRv32 { code, rom, ram_bytes, mac, static_mnemonics, translated }
     }
 
     /// Byte offset where constant data begins in ROM.
@@ -80,7 +87,11 @@ pub struct PreparedTpIsa {
     pub init_dmem: Vec<u64>,
     pub mac: Option<MacConfig>,
     /// Mnemonics present in the program image (static utilization).
-    pub static_mnemonics: BTreeSet<&'static str>,
+    /// `Arc`-shared with every simulator's profile.
+    pub static_mnemonics: Arc<BTreeSet<&'static str>>,
+    /// Pre-translated basic-block cache (built once here, ridden by
+    /// [`crate::sim::tpisa::TpIsa::run_translated`]).
+    pub translated: TranslatedTpIsa,
 }
 
 impl PreparedTpIsa {
@@ -102,8 +113,9 @@ impl PreparedTpIsa {
         for w in &mut init_dmem {
             *w &= mask;
         }
-        let static_mnemonics = code.iter().map(|i| i.mnemonic()).collect();
-        PreparedTpIsa { width, code: code.to_vec(), init_dmem, mac, static_mnemonics }
+        let static_mnemonics = Arc::new(code.iter().map(|i| i.mnemonic()).collect());
+        let translated = translate::translate_tpisa(code, mac.is_some());
+        PreparedTpIsa { width, code: code.to_vec(), init_dmem, mac, static_mnemonics, translated }
     }
 
     /// Compatibility constructor: a zeroed data memory of `dmem_words`

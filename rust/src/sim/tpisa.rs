@@ -18,6 +18,14 @@
 //! (constants preloaded once, not per sample), [`TpIsa::reset`]
 //! memcpy-restores that image so one simulator runs a whole batch, and
 //! [`TpIsa::run_traced`] is generic over a [`TraceMode`].
+//!
+//! §Perf iteration 4 adds [`TpIsa::run_translated`]: dispatch per
+//! pre-translated basic block (`sim::translate`) with fused
+//! superinstructions for the soft-multiply shift-add kernel and the
+//! `ld/ld/mac` bodies, falling back to the per-instruction interpreter
+//! step for untranslatable blocks, out-of-range PCs and fuel tails —
+//! bit-identical in scores, cycles and profiles
+//! (`tests/iss_equivalence.rs`).
 
 use std::sync::Arc;
 
@@ -27,6 +35,7 @@ use super::mac_model::MacState;
 use super::mem::WordMem;
 use super::prepared::PreparedTpIsa;
 use super::trace::{FullProfile, Profile, TraceMode};
+use super::translate::{CondTp, ExecStats, TermTpIsa, UopTpIsa, NO_BLOCK};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::tpisa::Instr;
 use crate::isa::MacOp;
@@ -61,6 +70,9 @@ pub struct TpIsa {
     /// Shared prepared program image (code + initial dmem image).
     prepared: Arc<PreparedTpIsa>,
     pub profile: Profile,
+    /// Translated-engine counters (blocks dispatched, fallback steps).
+    /// Accumulates across [`TpIsa::reset`], like the profile.
+    pub exec_stats: ExecStats,
 }
 
 impl TpIsa {
@@ -74,12 +86,13 @@ impl TpIsa {
 
     /// Build a simulator over a shared prepared image: the data memory
     /// is copied from the image's preloaded constants — no per-word
-    /// bounds-checked stores.
+    /// bounds-checked stores, no `BTreeSet` rebuild (the static
+    /// mnemonic set is `Arc`-shared).
     pub fn from_prepared(prepared: Arc<PreparedTpIsa>) -> Self {
         let mut dmem = WordMem::new(prepared.width, prepared.init_dmem.len());
         dmem.restore(&prepared.init_dmem);
         let mut profile = Profile::default();
-        profile.static_mnemonics = prepared.static_mnemonics.clone();
+        profile.static_mnemonics = Arc::clone(&prepared.static_mnemonics);
         TpIsa {
             width: prepared.width,
             regs: [0; 8],
@@ -90,6 +103,7 @@ impl TpIsa {
             mac: prepared.mac.map(MacState::new),
             prepared,
             profile,
+            exec_stats: ExecStats::default(),
         }
     }
 
@@ -162,6 +176,9 @@ impl TpIsa {
     /// [`TpIsa::run`] generic over the tracing mode: with
     /// [`CyclesOnly`](super::trace::CyclesOnly) the per-retire
     /// histogram, register-bitmask and max-PC updates compile away.
+    ///
+    /// This is the per-instruction *reference* loop; the production hot
+    /// path is [`TpIsa::run_translated`], which is bit-identical.
     pub fn run_traced<M: TraceMode>(&mut self, fuel: u64) -> Result<Halt> {
         let prepared = Arc::clone(&self.prepared);
         let code: &[Instr] = &prepared.code;
@@ -173,6 +190,23 @@ impl TpIsa {
                 return Ok(Halt::Fuel);
             }
             executed += 1;
+            if let Some(h) = self.step_traced::<M>(code, mask, msb)? {
+                return Ok(h);
+            }
+        }
+    }
+
+    /// Fetch, profile, execute and retire exactly one instruction — the
+    /// body of [`TpIsa::run_traced`], shared with the translated
+    /// engine's fallback path.  Returns `Some` on halt.
+    #[inline(always)]
+    fn step_traced<M: TraceMode>(
+        &mut self,
+        code: &[Instr],
+        mask: u64,
+        msb: u64,
+    ) -> Result<Option<Halt>> {
+        {
             let instr = match usize::try_from(self.pc).ok().and_then(|i| code.get(i)) {
                 Some(&i) => i,
                 None => return Err(pc_fault(self.pc, code.len())),
@@ -382,12 +416,295 @@ impl TpIsa {
                 }
                 Instr::Halt => {
                     self.profile.cycles += 1;
-                    return Ok(Halt::Halted);
+                    return Ok(Some(Halt::Halted));
                 }
             }
             self.profile.cycles += cost;
             self.pc = next;
         }
+        Ok(None)
+    }
+
+    /// Run until halt or `fuel` instructions, dispatching per
+    /// pre-translated basic block (`sim::translate`): one fuel check,
+    /// one cycle/instruction add, one histogram delta and one
+    /// register-mask OR per block, with the soft-multiply and
+    /// `ld/ld/mac` idioms fused into superinstructions.  Falls back to
+    /// the per-instruction interpreter step for untranslatable blocks
+    /// (MAC on a MAC-less core), out-of-range PCs and fuel tails — so
+    /// halts and `Halt::Fuel` states are bit-identical to the
+    /// interpreter, and a fault returns the same `Err` with the same
+    /// registers/dmem (the profile and `pc` are unspecified after an
+    /// `Err`, which every consumer propagates — see `sim::translate`'s
+    /// error contract).
+    pub fn run_translated<M: TraceMode>(&mut self, fuel: u64) -> Result<Halt> {
+        let prepared = Arc::clone(&self.prepared);
+        let code: &[Instr] = &prepared.code;
+        let trans = &prepared.translated;
+        let blocks = trans.blocks.as_slice();
+        let leaders: &[u32] = &trans.leaders;
+        let mask = self.mask();
+        let msb = 1u64 << (self.width - 1);
+        let mut executed = 0u64;
+        loop {
+            let mut bid = NO_BLOCK;
+            if let Ok(i) = usize::try_from(self.pc) {
+                if let Some(&b) = leaders.get(i) {
+                    bid = b;
+                }
+            }
+            if bid != NO_BLOCK {
+                let b = &blocks[bid as usize];
+                if fuel - executed >= b.n_instrs as u64 {
+                    executed += b.n_instrs as u64;
+                    self.exec_stats.blocks += 1;
+                    for u in b.uops.iter() {
+                        self.exec_uop(u, mask, msb)?;
+                    }
+                    {
+                        let p = &mut self.profile;
+                        p.cycles += b.base_cycles;
+                        p.instructions += b.n_instrs as u64;
+                        p.loads += b.loads;
+                        p.stores += b.stores;
+                        p.mac_ops += b.mac_ops;
+                        p.branches_taken += b.branches_taken;
+                        if M::PROFILE {
+                            p.regs_used |= b.reg_mask;
+                            p.max_pc = p.max_pc.max(b.last_pc as u32 * 2);
+                            p.record_block(&b.counts);
+                        }
+                    }
+                    match b.term {
+                        TermTpIsa::FallThrough => self.pc = b.next_pc,
+                        TermTpIsa::Jmp { target } => self.pc = target,
+                        TermTpIsa::Branch { cond, target } => {
+                            let taken = match cond {
+                                CondTp::Z => self.zero,
+                                CondTp::Nz => !self.zero,
+                                CondTp::C => self.carry,
+                                CondTp::Nc => !self.carry,
+                            };
+                            if taken {
+                                self.profile.cycles += 1;
+                                self.profile.branches_taken += 1;
+                                self.pc = target;
+                            } else {
+                                self.pc = b.next_pc;
+                            }
+                        }
+                        TermTpIsa::Halt => {
+                            self.pc = b.last_pc;
+                            return Ok(Halt::Halted);
+                        }
+                    }
+                    continue;
+                }
+            }
+            // Fallback: one interpreted step (untranslatable block,
+            // out-of-range PC, or fuel tail inside a block).
+            if executed >= fuel {
+                return Ok(Halt::Fuel);
+            }
+            executed += 1;
+            self.exec_stats.fallback_instrs += 1;
+            if let Some(h) = self.step_traced::<M>(code, mask, msb)? {
+                return Ok(h);
+            }
+        }
+    }
+
+    /// Execute one register-only data instruction (flag-exact, no
+    /// profile bookkeeping — the block aggregates carry it).
+    #[inline(always)]
+    fn exec_data(&mut self, i: &Instr, mask: u64, msb: u64) {
+        match *i {
+            Instr::Ldi { r1, imm } => {
+                let v = (imm as i64 as u64) & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Add { r1, r2 } => {
+                let (a, b) = (self.regs[r1 as usize], self.regs[r2 as usize]);
+                let s = a + b;
+                self.carry = s > mask;
+                let v = s & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Adc { r1, r2 } => {
+                let (a, b) = (self.regs[r1 as usize], self.regs[r2 as usize]);
+                let s = a + b + self.carry as u64;
+                self.carry = s > mask;
+                let v = s & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Sub { r1, r2 } => {
+                let (a, b) = (self.regs[r1 as usize], self.regs[r2 as usize]);
+                let s = a.wrapping_sub(b);
+                self.carry = b > a; // borrow
+                let v = s & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Sbc { r1, r2 } => {
+                let (a, b) = (self.regs[r1 as usize], self.regs[r2 as usize]);
+                let bb = b + self.carry as u64;
+                let s = a.wrapping_sub(bb);
+                self.carry = bb > a;
+                let v = s & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::And { r1, r2 } => {
+                let v = self.regs[r1 as usize] & self.regs[r2 as usize];
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Or { r1, r2 } => {
+                let v = self.regs[r1 as usize] | self.regs[r2 as usize];
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Xor { r1, r2 } => {
+                let v = self.regs[r1 as usize] ^ self.regs[r2 as usize];
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Shl { r1 } => {
+                let a = self.regs[r1 as usize];
+                self.carry = a & msb != 0;
+                let v = (a << 1) & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Shr { r1 } => {
+                let a = self.regs[r1 as usize];
+                self.carry = a & 1 != 0;
+                let v = a >> 1;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Sra { r1 } => {
+                let a = self.regs[r1 as usize];
+                self.carry = a & 1 != 0;
+                let v = ((a >> 1) | (a & msb)) & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Slc { r1 } => {
+                let a = self.regs[r1 as usize];
+                let cin = self.carry as u64;
+                self.carry = a & msb != 0;
+                let v = ((a << 1) | cin) & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Src { r1 } => {
+                let a = self.regs[r1 as usize];
+                let cin = self.carry as u64;
+                self.carry = a & 1 != 0;
+                let v = (a >> 1) | (cin * msb);
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Addi { r1, imm } => {
+                let v = (self.regs[r1 as usize].wrapping_add(imm as i64 as u64)) & mask;
+                self.regs[r1 as usize] = v;
+                self.zero = v == 0;
+            }
+            Instr::Mov { r1, r2 } => {
+                self.regs[r1 as usize] = self.regs[r2 as usize];
+            }
+            Instr::Sxt { r1, r2 } => {
+                let v = if self.regs[r2 as usize] & msb != 0 { mask } else { 0 };
+                self.regs[r1 as usize] = v;
+            }
+            Instr::Clc => self.carry = false,
+            _ => unreachable!("non-data instruction in Data micro-op"),
+        }
+    }
+
+    /// Execute one load (data effects + BAR reach; the block aggregates
+    /// carry the `loads` counter and cycle cost).
+    #[inline(always)]
+    fn exec_ld(&mut self, r1: u8, r2: u8, imm: i8) -> Result<()> {
+        let addr = self.regs[r2 as usize] as i64 + imm as i64;
+        let v = self.dmem.load(addr)?;
+        self.regs[r1 as usize] = v;
+        self.zero = v == 0;
+        self.profile.max_ram_offset = self.profile.max_ram_offset.max(addr.max(0) as u32);
+        Ok(())
+    }
+
+    /// Execute one store.
+    #[inline(always)]
+    fn exec_st(&mut self, r1: u8, r2: u8, imm: i8) -> Result<()> {
+        let addr = self.regs[r2 as usize] as i64 + imm as i64;
+        let v = self.regs[r1 as usize];
+        self.dmem.store(addr, v)?;
+        self.profile.max_ram_offset = self.profile.max_ram_offset.max(addr.max(0) as u32);
+        Ok(())
+    }
+
+    /// Execute one MAC-extension op (data effects only).
+    #[inline(always)]
+    fn exec_mac_op(&mut self, op: MacOp, r1: u8, r2: u8, mask: u64) -> Result<()> {
+        let width = self.width;
+        match op {
+            MacOp::Mac => {
+                let a = self.regs[r1 as usize];
+                let b = self.regs[r2 as usize];
+                let mac = self
+                    .mac
+                    .as_mut()
+                    .context("MAC instruction on a core without a MAC unit")?;
+                mac.mac(a, b);
+            }
+            MacOp::MacRd => {
+                let mac = self.mac.as_ref().context("MACRD on a core without a MAC unit")?;
+                let v = mac.read_total_chunk(r2 as u32, width);
+                self.regs[r1 as usize] = v & mask;
+            }
+            MacOp::MacClr => {
+                self.mac.as_mut().context("MACCL on a core without a MAC unit")?.clear();
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one translated micro-op.  Performs the same
+    /// architectural steps in the same order as the interpreter, so
+    /// flags, aliasing and fault ordering are preserved.
+    #[inline(always)]
+    fn exec_uop(&mut self, u: &UopTpIsa, mask: u64, msb: u64) -> Result<()> {
+        match u {
+            UopTpIsa::Data(i) => self.exec_data(i, mask, msb),
+            UopTpIsa::Data2(a, b) => {
+                self.exec_data(a, mask, msb);
+                self.exec_data(b, mask, msb);
+            }
+            UopTpIsa::Data3(a, b, c) => {
+                self.exec_data(a, mask, msb);
+                self.exec_data(b, mask, msb);
+                self.exec_data(c, mask, msb);
+            }
+            UopTpIsa::Ld { r1, r2, imm } => self.exec_ld(*r1, *r2, *imm)?,
+            UopTpIsa::St { r1, r2, imm } => self.exec_st(*r1, *r2, *imm)?,
+            UopTpIsa::Mac { op, r1, r2 } => self.exec_mac_op(*op, *r1, *r2, mask)?,
+            UopTpIsa::Ld2Mac { a, b, r1, r2 } => {
+                self.exec_ld(a.0, a.1, a.2)?;
+                self.exec_ld(b.0, b.1, b.2)?;
+                self.exec_mac_op(MacOp::Mac, *r1, *r2, mask)?;
+            }
+            UopTpIsa::LdOpSt { r1, r2, imm, op } => {
+                self.exec_ld(*r1, *r2, *imm)?;
+                self.exec_data(op, mask, msb);
+                self.exec_st(*r1, *r2, *imm)?;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -649,6 +966,84 @@ mod tests {
         assert_eq!(cyc.profile.regs_used, 0);
         assert_eq!(cyc.profile.max_pc, 0);
         assert!(full.profile.count("add") > 0);
+    }
+
+    /// Interpreted and translated runs of the same prepared image must
+    /// agree on every observable, including mid-run `Halt::Fuel` states.
+    fn assert_translated_matches(prepared: &Arc<PreparedTpIsa>, fuel: u64) {
+        let mut interp = TpIsa::from_prepared(Arc::clone(prepared));
+        let hi = interp.run_traced::<FullProfile>(fuel).unwrap();
+        let mut trans = TpIsa::from_prepared(Arc::clone(prepared));
+        let ht = trans.run_translated::<FullProfile>(fuel).unwrap();
+        assert_eq!(hi, ht);
+        assert_eq!(interp.regs, trans.regs);
+        assert_eq!(interp.pc, trans.pc);
+        assert_eq!(interp.carry, trans.carry);
+        assert_eq!(interp.zero, trans.zero);
+        let n = interp.dmem.len();
+        assert_eq!(interp.dmem.read_words(0, n).unwrap(), trans.dmem.read_words(0, n).unwrap());
+        assert_eq!(interp.profile.cycles, trans.profile.cycles);
+        assert_eq!(interp.profile.instructions, trans.profile.instructions);
+        assert_eq!(interp.profile.instr_counts(), trans.profile.instr_counts());
+        assert_eq!(interp.profile.regs_used, trans.profile.regs_used);
+        assert_eq!(interp.profile.max_pc, trans.profile.max_pc);
+        assert_eq!(interp.profile.branches_taken, trans.profile.branches_taken);
+        assert_eq!(interp.profile.loads, trans.profile.loads);
+        assert_eq!(interp.profile.stores, trans.profile.stores);
+        assert_eq!(interp.profile.max_ram_offset, trans.profile.max_ram_offset);
+    }
+
+    #[test]
+    fn translated_matches_interpreted_softmul_loop() {
+        // A countdown loop exercising the shift-add kernel shapes:
+        // shl/slc pairs, add/adc accumulate, carry branches.
+        let mut a = Asm::new();
+        a.ldi(0, 21);
+        a.ldi(1, 0);
+        a.ldi(5, 6);
+        a.label("loop");
+        a.push(Instr::Shl { r1: 0 });
+        a.push(Instr::Slc { r1: 1 });
+        a.bnc("noadd");
+        a.push(Instr::Add { r1: 1, r2: 0 });
+        a.label("noadd");
+        a.push(Instr::St { r1: 1, r2: 2, imm: 3 });
+        a.push(Instr::Ld { r1: 3, r2: 2, imm: 3 });
+        a.push(Instr::Addi { r1: 5, imm: -1 });
+        a.bnz("loop");
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let prepared = Arc::new(PreparedTpIsa::with_zero_dmem(8, &prog, 8, None));
+        assert_translated_matches(&prepared, 1_000_000);
+        for fuel in [1, 2, 5, 9, 17, 30] {
+            assert_translated_matches(&prepared, fuel);
+        }
+    }
+
+    #[test]
+    fn translated_mac_program_runs_on_blocks() {
+        let mut a = Asm::new();
+        a.push(Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 });
+        a.ldi(0, 3);
+        a.ldi(1, 4);
+        a.push(Instr::St { r1: 0, r2: 2, imm: 4 });
+        a.push(Instr::St { r1: 1, r2: 2, imm: 5 });
+        a.push(Instr::Ld { r1: 0, r2: 2, imm: 4 });
+        a.push(Instr::Ld { r1: 1, r2: 2, imm: 5 });
+        a.push(Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 });
+        a.push(Instr::Mac { op: MacOp::MacRd, r1: 3, r2: 0 });
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let prepared =
+            Arc::new(PreparedTpIsa::with_zero_dmem(8, &prog, 8, Some(MacConfig::new(8, 8))));
+        assert!(prepared.translated.stats.fused > 0);
+        let mut sim = TpIsa::from_prepared(Arc::clone(&prepared));
+        assert_eq!(sim.run_translated::<FullProfile>(100).unwrap(), Halt::Halted);
+        assert_eq!(sim.regs[3], 12);
+        assert_eq!(sim.profile.mac_ops, 1);
+        assert!(sim.exec_stats.blocks > 0);
+        assert_eq!(sim.exec_stats.fallback_instrs, 0);
+        assert_translated_matches(&prepared, 1000);
     }
 
     #[test]

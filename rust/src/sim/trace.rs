@@ -3,6 +3,7 @@
 //! range a workload actually uses.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Compile-time tracing mode of the ISS run loops.
 ///
@@ -60,8 +61,10 @@ pub struct Profile {
     counts: Vec<u64>,
     /// id -> mnemonic (recorded on first retire of each id).
     names: Vec<&'static str>,
-    /// Static mnemonics present in the program image.
-    pub static_mnemonics: std::collections::BTreeSet<&'static str>,
+    /// Static mnemonics present in the program image — `Arc`-shared
+    /// with the prepared image, so simulator construction is a pointer
+    /// copy instead of a `BTreeSet` rebuild.
+    pub static_mnemonics: Arc<std::collections::BTreeSet<&'static str>>,
     /// Bitmask of registers read or written.
     pub regs_used: u32,
     /// Highest PC fetched (byte address).
@@ -95,6 +98,24 @@ impl Profile {
             self.names[id] = mnemonic;
         }
         self.instructions += 1;
+    }
+
+    /// Apply a translated block's histogram delta: one add per distinct
+    /// mnemonic in the block instead of one per retire (the caller adds
+    /// `instructions` separately).  Ids follow `Instr::mnemonic_id`.
+    #[inline]
+    pub fn record_block(&mut self, counts: &[(u16, &'static str, u32)]) {
+        for &(id, mnemonic, n) in counts {
+            let id = id as usize;
+            if id >= self.counts.len() {
+                self.counts.resize(id + 1, 0);
+                self.names.resize(id + 1, "");
+            }
+            self.counts[id] += n as u64;
+            if self.names[id].is_empty() {
+                self.names[id] = mnemonic;
+            }
+        }
     }
 
     /// Cold path: add a count by name (merging, tests).
@@ -152,7 +173,14 @@ impl Profile {
         for (m, c) in other.instr_counts() {
             self.add_count(m, c);
         }
-        self.static_mnemonics.extend(&other.static_mnemonics);
+        if !other.static_mnemonics.is_empty() {
+            if self.static_mnemonics.is_empty() {
+                self.static_mnemonics = Arc::clone(&other.static_mnemonics);
+            } else if !Arc::ptr_eq(&self.static_mnemonics, &other.static_mnemonics) {
+                Arc::make_mut(&mut self.static_mnemonics)
+                    .extend(other.static_mnemonics.iter().copied());
+            }
+        }
         self.regs_used |= other.regs_used;
         self.max_pc = self.max_pc.max(other.max_pc);
         self.csr_used |= other.csr_used;

@@ -1,0 +1,999 @@
+//! Basic-block pre-translation of prepared program images (§Perf
+//! iteration 4).
+//!
+//! The per-instruction `run_traced` loops pay a fetch bounds check, a
+//! full `match` dispatch, cycle/instruction accounting and a PC update
+//! for **every retired instruction**, even though `ml::codegen_*` emit
+//! a small, known set of straight-line idioms (the paper's §III-B SIMD
+//! MAC inner loops, `lw/lw/mac` dot-product steps, TP-ISA soft-multiply
+//! shift-add kernels).  This module discovers the basic blocks of a
+//! pre-decoded program **once**, at `Prepared{Rv32,TpIsa}` build time,
+//! and lowers each into a [`BlockRv32`] / [`BlockTpIsa`]: a
+//! straight-line micro-op sequence with *block-level aggregated
+//! bookkeeping* — one fuel check, one cycle/instruction add and one
+//! per-mnemonic histogram delta per block instead of per instruction —
+//! plus peephole-fused superinstructions for the codegen hot idioms.
+//!
+//! Fusion rules (all purely syntactic; fused execution performs the
+//! same architectural steps in the same order, so register aliasing,
+//! flags and faults behave identically):
+//!
+//! * RV32 — `load/load/mac` (the SIMD and MAC32 dot-product step, both
+//!   looped and unrolled), `lh/lh/mul/add` (the baseline inner
+//!   product), and runs of 2–3 register-only ALU ops (`addi` pointer
+//!   stride bumps, `li` pairs, `slli/or` nibble packing).
+//! * TP-ISA — `ld/ld/mac` (the MAC kernels, looped and the unrolled
+//!   4-bit body), `ld/<alu>/st` read-modify-write on one memory word
+//!   (the soft-multiply accumulate and the epilogue shift loops), and
+//!   runs of 2–3 register-only ALU ops (the shift-add kernel's
+//!   `shl/slc` + `add/adc` pairs, `ldc` constant chains).
+//!
+//! Bit-identity argument (pinned differentially by
+//! `tests/iss_equivalence.rs`):
+//!
+//! * blocks contain no internal control transfers, and every *static*
+//!   branch/jump target is a block leader, so a block either runs to
+//!   its terminator or the whole run aborts with the same error;
+//! * all per-retire bookkeeping is a sum (cycles, instructions, event
+//!   counters, histogram deltas) or a monotone join (`regs_used` OR
+//!   mask, `max_pc` max) over the block's instructions, so applying it
+//!   once per block yields the same totals;
+//! * data-dependent observables (RAM/dmem contents, `max_ram_offset`,
+//!   flags, MAC accumulators, taken-branch cycles) stay in the
+//!   executed micro-ops;
+//! * anything the translator cannot prove static — a dynamic `jalr`
+//!   landing mid-block, a misaligned PC from a half-word-aligned RV32
+//!   branch, a `mac` on a core without a MAC unit, or fuel expiring
+//!   inside a block — falls back to the per-instruction interpreter
+//!   (`step_traced`), which *is* the reference loop.
+//!
+//! Contract on **errors**: a fault aborts the whole run with the same
+//! `Err` (same message, same fault address/PC in it) in both engines,
+//! and registers/memory match because the micro-ops perform the same
+//! architectural steps in the same order — but the *profile aggregates*
+//! and the simulator's `pc` field are unspecified after an `Err`
+//! (block bookkeeping applies only when a block completes).  Every
+//! consumer propagates `Err` and discards the simulator, so only the
+//! successful-run observables are pinned bit-identical.
+//!
+//! Maintenance invariant: the micro-op executors (`exec_*` in
+//! `sim::zero_riscy` / `sim::tpisa`) restate each instruction's data
+//! semantics without the per-retire bookkeeping.  Any semantic change
+//! to an interpreter arm MUST be mirrored there — the differential
+//! fuzz in `tests/iss_equivalence.rs` is the tripwire.
+//!
+//! The translated image lives inside [`super::prepared::PreparedRv32`]
+//! / [`super::prepared::PreparedTpIsa`], so it is built once per
+//! (model, variant) and `Arc`-shared through the `dse::context` program
+//! cache exactly like the ROM image.
+
+use std::collections::BTreeMap;
+
+use crate::isa::rv32::{self, AluOp, BranchOp, LoadOp, MulOp, StoreOp};
+use crate::isa::tpisa;
+use crate::isa::MacOp;
+
+/// Sentinel in the leader tables: this instruction index does not start
+/// a translated block (mid-block, or its block is untranslatable).
+pub const NO_BLOCK: u32 = u32::MAX;
+
+/// Static translation statistics of one prepared image (the bench's
+/// block-cache numbers).
+#[derive(Debug, Clone, Default)]
+pub struct TranslateStats {
+    /// Instructions in the program image.
+    pub instructions: usize,
+    /// Translated basic blocks.
+    pub blocks: usize,
+    /// Instructions covered by translated blocks.
+    pub translated_instructions: usize,
+    /// Fused superinstructions emitted across all blocks.
+    pub fused: usize,
+    /// Blocks left untranslated (e.g. `mac` on a core without a MAC
+    /// unit) — executed by the per-instruction fallback.
+    pub untranslatable_blocks: usize,
+}
+
+/// Runtime counters of the translated engine.  Kept on the simulator —
+/// deliberately *not* in [`super::trace::Profile`], so translated and
+/// interpreted profiles stay bit-comparable.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Translated blocks dispatched.
+    pub blocks: u64,
+    /// Instructions retired through the per-instruction fallback
+    /// (mid-block entries, untranslatable blocks, fuel tails).
+    pub fallback_instrs: u64,
+}
+
+// ---------------------------------------------------------------------------
+// RV32
+// ---------------------------------------------------------------------------
+
+/// A register-only RV32 micro-op (no memory access, no `Result`).
+#[derive(Debug, Clone, Copy)]
+pub enum SimpleRv32 {
+    /// `lui` / `auipc` (PC folded in at translation time) / CSR reads
+    /// (always 0 in our minimal CSR file).
+    SetReg { rd: u8, v: u32 },
+    OpImm { op: AluOp, rd: u8, rs1: u8, imm: i32 },
+    Op { op: AluOp, rd: u8, rs1: u8, rs2: u8 },
+}
+
+/// A decoded load, reused by the fused dot-product micro-ops.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadRv32 {
+    pub op: LoadOp,
+    pub rd: u8,
+    pub rs1: u8,
+    pub offset: i32,
+}
+
+/// One straight-line micro-op of a translated RV32 block.
+#[derive(Debug, Clone)]
+pub enum UopRv32 {
+    Simple(SimpleRv32),
+    /// Fused pair/triple of register-only ops.
+    Alu2(SimpleRv32, SimpleRv32),
+    Alu3(SimpleRv32, SimpleRv32, SimpleRv32),
+    Load(LoadRv32),
+    Store { op: StoreOp, rs2: u8, rs1: u8, offset: i32 },
+    MulDiv { op: MulOp, rd: u8, rs1: u8, rs2: u8 },
+    Mac { op: MacOp, rd: u8, rs1: u8, rs2: u8 },
+    /// Fused dot-product step: two loads feeding a `mac rs1, rs2`
+    /// (the SIMD `lw/lw/mac` and MAC32 `lh/lh/mac` inner loops).
+    Load2Mac { a: LoadRv32, b: LoadRv32, rs1: u8, rs2: u8 },
+    /// Fused baseline inner-product step: `lh/lh/mul/add`.
+    /// Tuples are `(rd, rs1, rs2)`.
+    Load2MulAdd { a: LoadRv32, b: LoadRv32, mul: (u8, u8, u8), add: (u8, u8, u8) },
+}
+
+/// How a translated RV32 block ends.
+#[derive(Debug, Clone, Copy)]
+pub enum TermRv32 {
+    /// Straight-line fall-through into the next leader.
+    FallThrough,
+    Jal { rd: u8, target: u32, link: u32 },
+    Jalr { rd: u8, rs1: u8, offset: i32, link: u32 },
+    /// Conditional branch; not-taken falls through to the block's
+    /// `next_pc`.
+    Branch { op: BranchOp, rs1: u8, rs2: u8, target: u32 },
+    Ebreak,
+    Ecall,
+}
+
+/// One translated RV32 basic block: micro-ops plus the block-level
+/// aggregated bookkeeping the run loop applies once per execution.
+#[derive(Debug, Clone)]
+pub struct BlockRv32 {
+    /// Instructions the block retires per execution.
+    pub n_instrs: u32,
+    /// Cycle cost excluding the conditional-branch taken penalty
+    /// (unconditional jumps' +2 is included).
+    pub base_cycles: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub mul_ops: u64,
+    pub mac_ops: u64,
+    /// Unconditional taken transfers (`jal`/`jalr`) per execution.
+    pub branches_taken: u64,
+    pub csr_used: bool,
+    /// OR of every `record_reg` the interpreter would make.
+    pub reg_mask: u32,
+    /// Byte PC of the last (highest) instruction in the block.
+    pub last_pc: u32,
+    /// Byte PC after the block (fall-through / branch-not-taken).
+    pub next_pc: u32,
+    /// Histogram delta: (mnemonic id, mnemonic, count).
+    pub counts: Box<[(u16, &'static str, u32)]>,
+    /// Straight-line body, terminator excluded.
+    pub uops: Box<[UopRv32]>,
+    pub term: TermRv32,
+}
+
+/// Block cache of one prepared RV32 program.
+#[derive(Debug, Clone)]
+pub struct TranslatedRv32 {
+    pub blocks: Vec<BlockRv32>,
+    /// Instruction index → block id (`NO_BLOCK` when not a leader).
+    pub leaders: Box<[u32]>,
+    pub stats: TranslateStats,
+}
+
+fn rv32_is_control(i: &rv32::Instr) -> bool {
+    matches!(
+        i,
+        rv32::Instr::Jal { .. }
+            | rv32::Instr::Jalr { .. }
+            | rv32::Instr::Branch { .. }
+            | rv32::Instr::Ecall
+            | rv32::Instr::Ebreak
+    )
+}
+
+/// Fixed cycle cost of one instruction, excluding the conditional
+/// branch-taken penalty (mirrors `ZeroRiscy::run_traced`).
+fn rv32_base_cost(i: &rv32::Instr) -> u64 {
+    match i {
+        rv32::Instr::Load { .. } | rv32::Instr::Store { .. } => 2,
+        rv32::Instr::Jal { .. } | rv32::Instr::Jalr { .. } => 3,
+        rv32::Instr::MulDiv { op, .. } => match op {
+            MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu => 3,
+            _ => 37,
+        },
+        _ => 1,
+    }
+}
+
+/// OR-mask of every `record_reg` call the interpreter makes for one
+/// instruction (`FullProfile` mode).
+fn rv32_reg_mask(i: &rv32::Instr) -> u32 {
+    let b = |r: u8| 1u32 << r;
+    match *i {
+        rv32::Instr::Lui { rd, .. } | rv32::Instr::Auipc { rd, .. } => b(rd),
+        rv32::Instr::Jal { rd, .. } => b(rd),
+        rv32::Instr::Jalr { rd, rs1, .. } => b(rd) | b(rs1),
+        rv32::Instr::Branch { rs1, rs2, .. } => b(rs1) | b(rs2),
+        rv32::Instr::Load { rd, rs1, .. } => b(rd) | b(rs1),
+        rv32::Instr::Store { rs2, rs1, .. } => b(rs1) | b(rs2),
+        rv32::Instr::OpImm { rd, rs1, .. } => b(rd) | b(rs1),
+        rv32::Instr::Op { rd, rs1, rs2, .. } | rv32::Instr::MulDiv { rd, rs1, rs2, .. } => {
+            b(rd) | b(rs1) | b(rs2)
+        }
+        rv32::Instr::Csr { rd, rs1, .. } => b(rd) | b(rs1),
+        rv32::Instr::Ecall | rv32::Instr::Ebreak | rv32::Instr::Fence => 0,
+        rv32::Instr::Mac { op, rd, rs1, rs2 } => match op {
+            MacOp::Mac => b(rs1) | b(rs2),
+            MacOp::MacRd => b(rd),
+            MacOp::MacClr => 0,
+        },
+    }
+}
+
+/// Lower a straight-line body to micro-ops, fusing the codegen idioms.
+fn lower_rv32_body(body: &[rv32::Instr], base_pc: u32, stats: &mut TranslateStats) -> Vec<UopRv32> {
+    // Pass 1: fuse the memory-anchored idioms, lower the rest 1:1.
+    let mut uops: Vec<UopRv32> = Vec::with_capacity(body.len());
+    let mut k = 0usize;
+    while k < body.len() {
+        // lw/lw/mac (SIMD + MAC32 dot-product step).
+        if k + 2 < body.len() {
+            if let (
+                rv32::Instr::Load { op: opa, rd: rda, rs1: ra, offset: offa },
+                rv32::Instr::Load { op: opb, rd: rdb, rs1: rb, offset: offb },
+                rv32::Instr::Mac { op: MacOp::Mac, rs1, rs2, .. },
+            ) = (body[k], body[k + 1], body[k + 2])
+            {
+                uops.push(UopRv32::Load2Mac {
+                    a: LoadRv32 { op: opa, rd: rda, rs1: ra, offset: offa },
+                    b: LoadRv32 { op: opb, rd: rdb, rs1: rb, offset: offb },
+                    rs1,
+                    rs2,
+                });
+                stats.fused += 1;
+                k += 3;
+                continue;
+            }
+        }
+        // lh/lh/mul/add (baseline inner-product step).
+        if k + 3 < body.len() {
+            if let (
+                rv32::Instr::Load { op: opa, rd: rda, rs1: ra, offset: offa },
+                rv32::Instr::Load { op: opb, rd: rdb, rs1: rb, offset: offb },
+                rv32::Instr::MulDiv { op: MulOp::Mul, rd: mrd, rs1: mr1, rs2: mr2 },
+                rv32::Instr::Op { op: AluOp::Add, rd: ard, rs1: ar1, rs2: ar2 },
+            ) = (body[k], body[k + 1], body[k + 2], body[k + 3])
+            {
+                uops.push(UopRv32::Load2MulAdd {
+                    a: LoadRv32 { op: opa, rd: rda, rs1: ra, offset: offa },
+                    b: LoadRv32 { op: opb, rd: rdb, rs1: rb, offset: offb },
+                    mul: (mrd, mr1, mr2),
+                    add: (ard, ar1, ar2),
+                });
+                stats.fused += 1;
+                k += 4;
+                continue;
+            }
+        }
+        let pc = base_pc.wrapping_add((k as u32) * 4);
+        match body[k] {
+            rv32::Instr::Lui { rd, imm } => {
+                uops.push(UopRv32::Simple(SimpleRv32::SetReg { rd, v: imm as u32 }));
+            }
+            rv32::Instr::Auipc { rd, imm } => {
+                // PC is static inside a block: fold it in now.
+                uops.push(UopRv32::Simple(SimpleRv32::SetReg {
+                    rd,
+                    v: pc.wrapping_add(imm as u32),
+                }));
+            }
+            rv32::Instr::Csr { rd, .. } => {
+                // Minimal CSR file: reads return 0 (csr_used is part of
+                // the block's aggregated bookkeeping).
+                uops.push(UopRv32::Simple(SimpleRv32::SetReg { rd, v: 0 }));
+            }
+            rv32::Instr::Fence => {} // no architectural effect
+            rv32::Instr::OpImm { op, rd, rs1, imm } => {
+                uops.push(UopRv32::Simple(SimpleRv32::OpImm { op, rd, rs1, imm }));
+            }
+            rv32::Instr::Op { op, rd, rs1, rs2 } => {
+                uops.push(UopRv32::Simple(SimpleRv32::Op { op, rd, rs1, rs2 }));
+            }
+            rv32::Instr::Load { op, rd, rs1, offset } => {
+                uops.push(UopRv32::Load(LoadRv32 { op, rd, rs1, offset }));
+            }
+            rv32::Instr::Store { op, rs2, rs1, offset } => {
+                uops.push(UopRv32::Store { op, rs2, rs1, offset });
+            }
+            rv32::Instr::MulDiv { op, rd, rs1, rs2 } => {
+                uops.push(UopRv32::MulDiv { op, rd, rs1, rs2 });
+            }
+            rv32::Instr::Mac { op, rd, rs1, rs2 } => {
+                uops.push(UopRv32::Mac { op, rd, rs1, rs2 });
+            }
+            rv32::Instr::Jal { .. }
+            | rv32::Instr::Jalr { .. }
+            | rv32::Instr::Branch { .. }
+            | rv32::Instr::Ecall
+            | rv32::Instr::Ebreak => {
+                unreachable!("control transfer in block body")
+            }
+        }
+        k += 1;
+    }
+    // Pass 2: coalesce adjacent register-only ops into pairs/triples
+    // (addi stride bumps, li chains, slli/or packing).
+    let mut out: Vec<UopRv32> = Vec::with_capacity(uops.len());
+    let mut k = 0usize;
+    while k < uops.len() {
+        let simple = |u: &UopRv32| -> Option<SimpleRv32> {
+            match u {
+                UopRv32::Simple(s) => Some(*s),
+                _ => None,
+            }
+        };
+        if let Some(a) = simple(&uops[k]) {
+            if k + 2 < uops.len() {
+                if let (Some(b), Some(c)) = (simple(&uops[k + 1]), simple(&uops[k + 2])) {
+                    out.push(UopRv32::Alu3(a, b, c));
+                    stats.fused += 1;
+                    k += 3;
+                    continue;
+                }
+            }
+            if k + 1 < uops.len() {
+                if let Some(b) = simple(&uops[k + 1]) {
+                    out.push(UopRv32::Alu2(a, b));
+                    stats.fused += 1;
+                    k += 2;
+                    continue;
+                }
+            }
+        }
+        out.push(uops[k].clone());
+        k += 1;
+    }
+    out
+}
+
+/// Discover basic blocks in a pre-decoded RV32 program and translate
+/// each.  `has_mac` gates translation of MAC-bearing blocks: without a
+/// MAC unit they stay on the interpreter so the "MAC instruction on a
+/// core without a MAC unit" error surfaces at exactly the same retire.
+pub fn translate_rv32(code: &[rv32::Instr], has_mac: bool) -> TranslatedRv32 {
+    let n = code.len();
+    let mut is_leader = vec![false; n];
+    if n > 0 {
+        is_leader[0] = true;
+    }
+    // Wrapped-u32 target arithmetic, exactly like the interpreter's
+    // `pc.wrapping_add(offset)`; only aligned, in-range targets become
+    // leaders (misaligned PCs single-step at runtime).
+    let mark = |is_leader: &mut Vec<bool>, pc: u32, offset: i32| {
+        let target = pc.wrapping_add(offset as u32);
+        if target % 4 == 0 {
+            let idx = (target / 4) as usize;
+            if idx < n {
+                is_leader[idx] = true;
+            }
+        }
+    };
+    for (i, ins) in code.iter().enumerate() {
+        let pc = (i as u32) * 4;
+        match *ins {
+            rv32::Instr::Jal { offset, .. } => mark(&mut is_leader, pc, offset),
+            rv32::Instr::Branch { offset, .. } => mark(&mut is_leader, pc, offset),
+            _ => {}
+        }
+        if rv32_is_control(ins) && i + 1 < n {
+            is_leader[i + 1] = true;
+        }
+    }
+
+    let mut blocks = Vec::new();
+    let mut leaders = vec![NO_BLOCK; n];
+    let mut stats = TranslateStats { instructions: n, ..TranslateStats::default() };
+    let mut i = 0usize;
+    while i < n {
+        debug_assert!(is_leader[i]);
+        // The block spans [i ..= j]; `terminated` iff code[j] is a
+        // control transfer (else it falls through into the next leader).
+        let mut j = i;
+        let terminated = loop {
+            if rv32_is_control(&code[j]) {
+                break true;
+            }
+            if j + 1 >= n || is_leader[j + 1] {
+                break false;
+            }
+            j += 1;
+        };
+        let instrs = &code[i..=j];
+        if !has_mac && instrs.iter().any(|x| matches!(x, rv32::Instr::Mac { .. })) {
+            stats.untranslatable_blocks += 1;
+            i = j + 1;
+            continue;
+        }
+
+        let mut counts: BTreeMap<u16, (&'static str, u32)> = BTreeMap::new();
+        let mut block = BlockRv32 {
+            n_instrs: instrs.len() as u32,
+            base_cycles: 0,
+            loads: 0,
+            stores: 0,
+            mul_ops: 0,
+            mac_ops: 0,
+            branches_taken: 0,
+            csr_used: false,
+            reg_mask: 0,
+            last_pc: (j as u32) * 4,
+            next_pc: ((j as u32) * 4).wrapping_add(4),
+            counts: Box::new([]),
+            uops: Box::new([]),
+            term: TermRv32::FallThrough,
+        };
+        for ins in instrs {
+            block.base_cycles += rv32_base_cost(ins);
+            block.reg_mask |= rv32_reg_mask(ins);
+            match ins {
+                rv32::Instr::Load { .. } => block.loads += 1,
+                rv32::Instr::Store { .. } => block.stores += 1,
+                rv32::Instr::MulDiv { op, .. } => {
+                    if matches!(op, MulOp::Mul | MulOp::Mulh | MulOp::Mulhsu | MulOp::Mulhu) {
+                        block.mul_ops += 1;
+                    }
+                }
+                rv32::Instr::Mac { op: MacOp::Mac, .. } => block.mac_ops += 1,
+                rv32::Instr::Csr { .. } => block.csr_used = true,
+                rv32::Instr::Jal { .. } | rv32::Instr::Jalr { .. } => block.branches_taken += 1,
+                _ => {}
+            }
+            let e = counts.entry(ins.mnemonic_id() as u16).or_insert((ins.mnemonic(), 0));
+            e.1 += 1;
+        }
+        block.counts =
+            counts.into_iter().map(|(id, (name, c))| (id, name, c)).collect::<Vec<_>>().into();
+
+        let term_pc = (j as u32) * 4;
+        let body = if terminated { &code[i..j] } else { instrs };
+        block.uops = lower_rv32_body(body, (i as u32) * 4, &mut stats).into();
+        block.term = if terminated {
+            match code[j] {
+                rv32::Instr::Jal { rd, offset } => TermRv32::Jal {
+                    rd,
+                    target: term_pc.wrapping_add(offset as u32),
+                    link: block.next_pc,
+                },
+                rv32::Instr::Jalr { rd, rs1, offset } => {
+                    TermRv32::Jalr { rd, rs1, offset, link: block.next_pc }
+                }
+                rv32::Instr::Branch { op, rs1, rs2, offset } => TermRv32::Branch {
+                    op,
+                    rs1,
+                    rs2,
+                    target: term_pc.wrapping_add(offset as u32),
+                },
+                rv32::Instr::Ebreak => TermRv32::Ebreak,
+                rv32::Instr::Ecall => TermRv32::Ecall,
+                _ => unreachable!("non-control terminator"),
+            }
+        } else {
+            TermRv32::FallThrough
+        };
+
+        leaders[i] = blocks.len() as u32;
+        stats.blocks += 1;
+        stats.translated_instructions += instrs.len();
+        blocks.push(block);
+        i = j + 1;
+    }
+    TranslatedRv32 { blocks, leaders: leaders.into(), stats }
+}
+
+// ---------------------------------------------------------------------------
+// TP-ISA
+// ---------------------------------------------------------------------------
+
+/// One straight-line micro-op of a translated TP-ISA block.  Register
+/// -only instructions ride along verbatim (`Data*`) — their executor is
+/// the flag-exact single-instruction ALU.
+#[derive(Debug, Clone)]
+pub enum UopTpIsa {
+    Data(tpisa::Instr),
+    /// Fused pair/triple of register-only ops (shift-add kernel
+    /// `shl/slc`, `add/adc`, `ldc` chains).
+    Data2(tpisa::Instr, tpisa::Instr),
+    Data3(tpisa::Instr, tpisa::Instr, tpisa::Instr),
+    Ld { r1: u8, r2: u8, imm: i8 },
+    St { r1: u8, r2: u8, imm: i8 },
+    Mac { op: MacOp, r1: u8, r2: u8 },
+    /// Fused `ld/ld/mac` dot-product step (looped and unrolled MAC
+    /// bodies).  Load tuples are `(r1, r2, imm)`.
+    Ld2Mac { a: (u8, u8, i8), b: (u8, u8, i8), r1: u8, r2: u8 },
+    /// Fused read-modify-write of one memory word:
+    /// `ld r1,(r2)imm; <alu on r1>; st r1,(r2)imm` — the soft-multiply
+    /// accumulate and epilogue shift-loop idiom.
+    LdOpSt { r1: u8, r2: u8, imm: i8, op: tpisa::Instr },
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum CondTp {
+    Z,
+    Nz,
+    C,
+    Nc,
+}
+
+/// How a translated TP-ISA block ends.
+#[derive(Debug, Clone, Copy)]
+pub enum TermTpIsa {
+    FallThrough,
+    Jmp { target: i64 },
+    Branch { cond: CondTp, target: i64 },
+    Halt,
+}
+
+/// One translated TP-ISA basic block.
+#[derive(Debug, Clone)]
+pub struct BlockTpIsa {
+    pub n_instrs: u32,
+    /// Cycle cost excluding the conditional-branch taken penalty
+    /// (`jmp`'s +1 is included).
+    pub base_cycles: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub mac_ops: u64,
+    /// Unconditional taken transfers (`jmp`) per execution.
+    pub branches_taken: u64,
+    pub reg_mask: u32,
+    /// Instruction-index PC of the last instruction in the block.
+    pub last_pc: i64,
+    /// PC after the block (fall-through / branch-not-taken).
+    pub next_pc: i64,
+    pub counts: Box<[(u16, &'static str, u32)]>,
+    pub uops: Box<[UopTpIsa]>,
+    pub term: TermTpIsa,
+}
+
+/// Block cache of one prepared TP-ISA program.
+#[derive(Debug, Clone)]
+pub struct TranslatedTpIsa {
+    pub blocks: Vec<BlockTpIsa>,
+    pub leaders: Box<[u32]>,
+    pub stats: TranslateStats,
+}
+
+fn tp_is_control(i: &tpisa::Instr) -> bool {
+    matches!(
+        i,
+        tpisa::Instr::Bz { .. }
+            | tpisa::Instr::Bnz { .. }
+            | tpisa::Instr::Bc { .. }
+            | tpisa::Instr::Bnc { .. }
+            | tpisa::Instr::Jmp { .. }
+            | tpisa::Instr::Halt
+    )
+}
+
+/// Fixed cycle cost, excluding the conditional branch-taken penalty
+/// (mirrors `TpIsa::run_traced`).
+fn tp_base_cost(i: &tpisa::Instr) -> u64 {
+    match i {
+        tpisa::Instr::Ld { .. } | tpisa::Instr::St { .. } => 3,
+        tpisa::Instr::Jmp { .. } => 3,
+        tpisa::Instr::Halt => 1,
+        _ => 2,
+    }
+}
+
+/// OR-mask of every `record_reg` call the interpreter makes for one
+/// TP-ISA instruction.
+fn tp_reg_mask(i: &tpisa::Instr) -> u32 {
+    let b = |r: u8| 1u32 << r;
+    match *i {
+        tpisa::Instr::Ldi { r1, .. } => b(r1),
+        tpisa::Instr::Add { r1, r2 }
+        | tpisa::Instr::Adc { r1, r2 }
+        | tpisa::Instr::Sub { r1, r2 }
+        | tpisa::Instr::Sbc { r1, r2 }
+        | tpisa::Instr::And { r1, r2 }
+        | tpisa::Instr::Or { r1, r2 }
+        | tpisa::Instr::Xor { r1, r2 } => b(r1) | b(r2),
+        tpisa::Instr::Shl { r1 }
+        | tpisa::Instr::Shr { r1 }
+        | tpisa::Instr::Sra { r1 }
+        | tpisa::Instr::Slc { r1 }
+        | tpisa::Instr::Src { r1 } => b(r1),
+        tpisa::Instr::Ld { r1, r2, .. } => b(r1) | b(r2),
+        tpisa::Instr::St { r1, r2, .. } => b(r1) | b(r2),
+        tpisa::Instr::Addi { r1, .. } => b(r1),
+        tpisa::Instr::Mov { r1, r2 } | tpisa::Instr::Sxt { r1, r2 } => b(r1) | b(r2),
+        tpisa::Instr::Clc
+        | tpisa::Instr::Bz { .. }
+        | tpisa::Instr::Bnz { .. }
+        | tpisa::Instr::Bc { .. }
+        | tpisa::Instr::Bnc { .. }
+        | tpisa::Instr::Jmp { .. }
+        | tpisa::Instr::Halt => 0,
+        tpisa::Instr::Mac { op, r1, r2 } => match op {
+            MacOp::Mac => b(r1) | b(r2),
+            MacOp::MacRd => b(r1),
+            MacOp::MacClr => 0,
+        },
+    }
+}
+
+/// Register-only TP-ISA data op (no memory, no MAC, no control)?
+fn tp_is_data(i: &tpisa::Instr) -> bool {
+    !tp_is_control(i)
+        && !matches!(
+            i,
+            tpisa::Instr::Ld { .. } | tpisa::Instr::St { .. } | tpisa::Instr::Mac { .. }
+        )
+}
+
+/// Lower a straight-line TP-ISA body to micro-ops, fusing the codegen
+/// idioms.
+fn lower_tp_body(body: &[tpisa::Instr], stats: &mut TranslateStats) -> Vec<UopTpIsa> {
+    let mut uops: Vec<UopTpIsa> = Vec::with_capacity(body.len());
+    let mut k = 0usize;
+    while k < body.len() {
+        // ld/ld/mac (MAC dot-product step).
+        if k + 2 < body.len() {
+            if let (
+                tpisa::Instr::Ld { r1: ra, r2: pa, imm: ia },
+                tpisa::Instr::Ld { r1: rb, r2: pb, imm: ib },
+                tpisa::Instr::Mac { op: MacOp::Mac, r1, r2 },
+            ) = (body[k], body[k + 1], body[k + 2])
+            {
+                uops.push(UopTpIsa::Ld2Mac { a: (ra, pa, ia), b: (rb, pb, ib), r1, r2 });
+                stats.fused += 1;
+                k += 3;
+                continue;
+            }
+        }
+        // ld/<alu>/st on the same word (soft-mul accumulate, epilogue
+        // shift loops).  Sequential execution keeps aliasing and flags
+        // exact, so the only conditions are the shapes and the shared
+        // (r1, r2, imm).
+        if k + 2 < body.len() {
+            if let (
+                tpisa::Instr::Ld { r1: la, r2: lp, imm: li },
+                mid,
+                tpisa::Instr::St { r1: sa, r2: sp, imm: si },
+            ) = (body[k], body[k + 1], body[k + 2])
+            {
+                if tp_is_data(&mid) && la == sa && lp == sp && li == si {
+                    uops.push(UopTpIsa::LdOpSt { r1: la, r2: lp, imm: li, op: mid });
+                    stats.fused += 1;
+                    k += 3;
+                    continue;
+                }
+            }
+        }
+        match body[k] {
+            tpisa::Instr::Ld { r1, r2, imm } => uops.push(UopTpIsa::Ld { r1, r2, imm }),
+            tpisa::Instr::St { r1, r2, imm } => uops.push(UopTpIsa::St { r1, r2, imm }),
+            tpisa::Instr::Mac { op, r1, r2 } => uops.push(UopTpIsa::Mac { op, r1, r2 }),
+            ins if tp_is_data(&ins) => uops.push(UopTpIsa::Data(ins)),
+            ins => unreachable!("control transfer {ins:?} in block body"),
+        }
+        k += 1;
+    }
+    // Coalesce adjacent register-only ops into pairs/triples.
+    let mut out: Vec<UopTpIsa> = Vec::with_capacity(uops.len());
+    let mut k = 0usize;
+    while k < uops.len() {
+        let data = |u: &UopTpIsa| -> Option<tpisa::Instr> {
+            match u {
+                UopTpIsa::Data(i) => Some(*i),
+                _ => None,
+            }
+        };
+        if let Some(a) = data(&uops[k]) {
+            if k + 2 < uops.len() {
+                if let (Some(b), Some(c)) = (data(&uops[k + 1]), data(&uops[k + 2])) {
+                    out.push(UopTpIsa::Data3(a, b, c));
+                    stats.fused += 1;
+                    k += 3;
+                    continue;
+                }
+            }
+            if k + 1 < uops.len() {
+                if let Some(b) = data(&uops[k + 1]) {
+                    out.push(UopTpIsa::Data2(a, b));
+                    stats.fused += 1;
+                    k += 2;
+                    continue;
+                }
+            }
+        }
+        out.push(uops[k].clone());
+        k += 1;
+    }
+    out
+}
+
+/// Discover and translate the basic blocks of a TP-ISA program.
+/// TP-ISA has no dynamic jumps, so every reachable block entry is a
+/// static leader; the runtime fallback only handles untranslatable
+/// (MAC-without-unit) blocks, out-of-range PCs and fuel tails.
+pub fn translate_tpisa(code: &[tpisa::Instr], has_mac: bool) -> TranslatedTpIsa {
+    let n = code.len();
+    let mut is_leader = vec![false; n];
+    if n > 0 {
+        is_leader[0] = true;
+    }
+    let mark = |is_leader: &mut Vec<bool>, i: usize, off: i64| {
+        let target = i as i64 + off;
+        if target >= 0 && (target as usize) < n {
+            is_leader[target as usize] = true;
+        }
+    };
+    for (i, ins) in code.iter().enumerate() {
+        match *ins {
+            tpisa::Instr::Bz { off } | tpisa::Instr::Bnz { off } | tpisa::Instr::Jmp { off } => {
+                mark(&mut is_leader, i, off as i64)
+            }
+            tpisa::Instr::Bc { off } | tpisa::Instr::Bnc { off } => {
+                mark(&mut is_leader, i, off as i64)
+            }
+            _ => {}
+        }
+        if tp_is_control(ins) && i + 1 < n {
+            is_leader[i + 1] = true;
+        }
+    }
+
+    let mut blocks = Vec::new();
+    let mut leaders = vec![NO_BLOCK; n];
+    let mut stats = TranslateStats { instructions: n, ..TranslateStats::default() };
+    let mut i = 0usize;
+    while i < n {
+        debug_assert!(is_leader[i]);
+        let mut j = i;
+        let terminated = loop {
+            if tp_is_control(&code[j]) {
+                break true;
+            }
+            if j + 1 >= n || is_leader[j + 1] {
+                break false;
+            }
+            j += 1;
+        };
+        let instrs = &code[i..=j];
+        if !has_mac && instrs.iter().any(|x| matches!(x, tpisa::Instr::Mac { .. })) {
+            stats.untranslatable_blocks += 1;
+            i = j + 1;
+            continue;
+        }
+
+        let mut counts: BTreeMap<u16, (&'static str, u32)> = BTreeMap::new();
+        let mut block = BlockTpIsa {
+            n_instrs: instrs.len() as u32,
+            base_cycles: 0,
+            loads: 0,
+            stores: 0,
+            mac_ops: 0,
+            branches_taken: 0,
+            reg_mask: 0,
+            last_pc: j as i64,
+            next_pc: j as i64 + 1,
+            counts: Box::new([]),
+            uops: Box::new([]),
+            term: TermTpIsa::FallThrough,
+        };
+        for ins in instrs {
+            block.base_cycles += tp_base_cost(ins);
+            block.reg_mask |= tp_reg_mask(ins);
+            match ins {
+                tpisa::Instr::Ld { .. } => block.loads += 1,
+                tpisa::Instr::St { .. } => block.stores += 1,
+                tpisa::Instr::Mac { op: MacOp::Mac, .. } => block.mac_ops += 1,
+                tpisa::Instr::Jmp { .. } => block.branches_taken += 1,
+                _ => {}
+            }
+            let e = counts.entry(ins.mnemonic_id() as u16).or_insert((ins.mnemonic(), 0));
+            e.1 += 1;
+        }
+        block.counts =
+            counts.into_iter().map(|(id, (name, c))| (id, name, c)).collect::<Vec<_>>().into();
+
+        let body = if terminated { &code[i..j] } else { instrs };
+        block.uops = lower_tp_body(body, &mut stats).into();
+        block.term = if terminated {
+            let pc = j as i64;
+            match code[j] {
+                tpisa::Instr::Bz { off } => {
+                    TermTpIsa::Branch { cond: CondTp::Z, target: pc + off as i64 }
+                }
+                tpisa::Instr::Bnz { off } => {
+                    TermTpIsa::Branch { cond: CondTp::Nz, target: pc + off as i64 }
+                }
+                tpisa::Instr::Bc { off } => {
+                    TermTpIsa::Branch { cond: CondTp::C, target: pc + off as i64 }
+                }
+                tpisa::Instr::Bnc { off } => {
+                    TermTpIsa::Branch { cond: CondTp::Nc, target: pc + off as i64 }
+                }
+                tpisa::Instr::Jmp { off } => TermTpIsa::Jmp { target: pc + off as i64 },
+                tpisa::Instr::Halt => TermTpIsa::Halt,
+                _ => unreachable!("non-control terminator"),
+            }
+        } else {
+            TermTpIsa::FallThrough
+        };
+
+        leaders[i] = blocks.len() as u32;
+        stats.blocks += 1;
+        stats.translated_instructions += instrs.len();
+        blocks.push(block);
+        i = j + 1;
+    }
+    TranslatedTpIsa { blocks, leaders: leaders.into(), stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::rv32_asm::assemble;
+
+    #[test]
+    fn rv32_blocks_tile_the_program() {
+        let code = assemble(
+            r#"
+                li   t0, 10
+                li   t1, 0
+            loop:
+                add  t1, t1, t0
+                addi t0, t0, -1
+                bnez t0, loop
+                ebreak
+            "#,
+        )
+        .unwrap();
+        let t = translate_rv32(&code, false);
+        // Leaders: 0 (entry), 2 (branch target), 5 (after branch).
+        assert_eq!(t.stats.blocks, 3);
+        assert_eq!(t.stats.translated_instructions, code.len());
+        assert_eq!(t.stats.untranslatable_blocks, 0);
+        assert_eq!(t.leaders[0], 0);
+        assert_eq!(t.leaders[1], NO_BLOCK);
+        assert_eq!(t.leaders[2], 1);
+        assert_eq!(t.leaders[5], 2);
+        // Loop block: add/addi fuse into an Alu2, bne terminates.
+        let b = &t.blocks[1];
+        assert_eq!(b.n_instrs, 3);
+        assert!(matches!(b.term, TermRv32::Branch { target: 8, .. }));
+        // base: add(1) + addi(1) + bne-not-taken(1).
+        assert_eq!(b.base_cycles, 3);
+        assert_eq!(b.last_pc, 16);
+        assert_eq!(b.next_pc, 20);
+    }
+
+    #[test]
+    fn rv32_fuses_dot_product_idioms() {
+        let code = assemble(
+            r#"
+                lw  t0, 0(s0)
+                lw  t1, 0(s1)
+                mac t0, t1
+                addi s0, s0, 4
+                addi s1, s1, 4
+                addi a1, a1, -1
+                ebreak
+            "#,
+        )
+        .unwrap();
+        let t = translate_rv32(&code, true);
+        assert_eq!(t.stats.blocks, 1);
+        let b = &t.blocks[0];
+        assert!(matches!(b.term, TermRv32::Ebreak));
+        assert_eq!(b.uops.len(), 2, "{:?}", b.uops);
+        assert!(matches!(b.uops[0], UopRv32::Load2Mac { .. }));
+        assert!(matches!(b.uops[1], UopRv32::Alu3(..)));
+        assert_eq!(b.mac_ops, 1);
+        assert_eq!(b.loads, 2);
+        // lw(2) + lw(2) + mac(1) + 3*addi(1) + ebreak(1).
+        assert_eq!(b.base_cycles, 9);
+    }
+
+    #[test]
+    fn rv32_mac_without_unit_is_untranslatable() {
+        let code = assemble("mac t0, t1\nebreak").unwrap();
+        let t = translate_rv32(&code, false);
+        assert_eq!(t.stats.untranslatable_blocks, 1);
+        assert_eq!(t.leaders[0], NO_BLOCK);
+        let t = translate_rv32(&code, true);
+        assert_eq!(t.stats.untranslatable_blocks, 0);
+        assert_eq!(t.leaders[0], 0);
+    }
+
+    #[test]
+    fn rv32_misaligned_targets_do_not_become_leaders() {
+        use crate::isa::rv32::{AluOp, BranchOp, Instr};
+        let code = vec![
+            Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 },
+            Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 6 },
+            Instr::OpImm { op: AluOp::Add, rd: 6, rs1: 6, imm: 1 },
+            Instr::Ebreak,
+        ];
+        let t = translate_rv32(&code, false);
+        // The branch target (pc 10) is misaligned: no leader at idx 2
+        // beyond the fall-through one.
+        assert_eq!(t.leaders.iter().filter(|&&b| b != NO_BLOCK).count(), t.stats.blocks);
+        assert!(t.blocks.len() >= 2);
+    }
+
+    #[test]
+    fn tpisa_translates_softmul_shapes() {
+        use crate::isa::tpisa::{Asm, Instr};
+        let mut a = Asm::new();
+        a.ldi(3, 0);
+        a.ldi(5, 7);
+        a.label("smul");
+        a.push(Instr::Shr { r1: 2 });
+        a.bnc("skip");
+        a.push(Instr::Add { r1: 3, r2: 0 });
+        a.push(Instr::Adc { r1: 4, r2: 1 });
+        a.label("skip");
+        a.push(Instr::Shl { r1: 0 });
+        a.push(Instr::Slc { r1: 1 });
+        a.push(Instr::Addi { r1: 5, imm: -1 });
+        a.bnz("smul");
+        a.push(Instr::Halt);
+        let code = a.finish().unwrap();
+        let t = translate_tpisa(&code, false);
+        assert_eq!(t.stats.untranslatable_blocks, 0);
+        assert_eq!(t.stats.translated_instructions, code.len());
+        // The add/adc pair and shl/slc/addi run must fuse.
+        assert!(t.stats.fused >= 2, "fused {}", t.stats.fused);
+        let shift_block = &t.blocks[t.leaders[code.len() - 5] as usize];
+        assert!(matches!(shift_block.uops[0], UopTpIsa::Data3(..)));
+        assert!(matches!(shift_block.term, TermTpIsa::Branch { cond: CondTp::Nz, .. }));
+    }
+
+    #[test]
+    fn tpisa_fuses_ld_op_st_and_ld2mac() {
+        use crate::isa::tpisa::Instr;
+        let code = vec![
+            Instr::Ld { r1: 0, r2: 2, imm: 1 },
+            Instr::Add { r1: 0, r2: 3 },
+            Instr::St { r1: 0, r2: 2, imm: 1 },
+            Instr::Ld { r1: 0, r2: 7, imm: 0 },
+            Instr::Ld { r1: 1, r2: 6, imm: 0 },
+            Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 },
+            Instr::Halt,
+        ];
+        let t = translate_tpisa(&code, true);
+        let b = &t.blocks[0];
+        assert_eq!(b.uops.len(), 2, "{:?}", b.uops);
+        assert!(matches!(b.uops[0], UopTpIsa::LdOpSt { .. }));
+        assert!(matches!(b.uops[1], UopTpIsa::Ld2Mac { .. }));
+        // 3*(ld/st: 3) + add(2) + ld(3)+ld(3)+mac(2) + halt(1).
+        assert_eq!(b.base_cycles, 3 + 2 + 3 + 3 + 3 + 2 + 1);
+        assert_eq!(b.loads, 3);
+        assert_eq!(b.stores, 1);
+        assert_eq!(b.mac_ops, 1);
+    }
+}

@@ -19,6 +19,15 @@
 //! is generic over a [`TraceMode`] so profile bookkeeping monomorphizes
 //! away when the caller only needs scores and cycles.  All error
 //! construction is `#[cold]` and out of line.
+//!
+//! §Perf iteration 4 adds [`ZeroRiscy::run_translated`]: dispatch per
+//! pre-translated basic block (`sim::translate`) — one fuel check, one
+//! cycle/instruction add and one histogram delta per *block*, with
+//! fused superinstructions for the codegen idioms — falling back to
+//! the per-instruction [`ZeroRiscy::run_traced`] step for mid-block
+//! entries (dynamic `jalr`, misaligned PCs), untranslatable blocks and
+//! fuel tails.  Bit-identical to the interpreter in scores, cycles and
+//! profiles (`tests/iss_equivalence.rs`).
 
 use std::sync::Arc;
 
@@ -28,6 +37,7 @@ use super::mac_model::MacState;
 use super::mem::{Mem, RAM_BASE};
 use super::prepared::PreparedRv32;
 use super::trace::{FullProfile, Profile, TraceMode};
+use super::translate::{ExecStats, LoadRv32, SimpleRv32, TermRv32, UopRv32, NO_BLOCK};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::rv32::*;
 use crate::isa::MacOp;
@@ -58,6 +68,9 @@ pub struct ZeroRiscy {
     /// Shared prepared program image (pre-decoded code + encoded ROM).
     prepared: Arc<PreparedRv32>,
     pub profile: Profile,
+    /// Translated-engine counters (blocks dispatched, fallback steps).
+    /// Accumulates across [`ZeroRiscy::reset`], like the profile.
+    pub exec_stats: ExecStats,
 }
 
 /// All mnemonics the decoder can produce — the universe against which
@@ -80,11 +93,12 @@ impl ZeroRiscy {
         Self::from_prepared(Arc::new(PreparedRv32::new(code, rom_data, ram_bytes, mac)))
     }
 
-    /// Build a simulator over a shared prepared image: two `Arc`
-    /// clones plus one RAM allocation — no program copy, no encode.
+    /// Build a simulator over a shared prepared image: three `Arc`
+    /// clones (ROM, image, static-mnemonic set) plus one RAM allocation
+    /// — no program copy, no encode, no `BTreeSet` rebuild.
     pub fn from_prepared(prepared: Arc<PreparedRv32>) -> Self {
         let mut profile = Profile::default();
-        profile.static_mnemonics = prepared.static_mnemonics.clone();
+        profile.static_mnemonics = Arc::clone(&prepared.static_mnemonics);
         ZeroRiscy {
             regs: [0; 32],
             pc: 0,
@@ -92,6 +106,7 @@ impl ZeroRiscy {
             mac: prepared.mac.map(MacState::new),
             prepared,
             profile,
+            exec_stats: ExecStats::default(),
         }
     }
 
@@ -151,6 +166,9 @@ impl ZeroRiscy {
     /// [`ZeroRiscy::run`] generic over the tracing mode: with
     /// [`CyclesOnly`](super::trace::CyclesOnly) the per-retire
     /// histogram, register-bitmask and max-PC updates compile away.
+    ///
+    /// This is the per-instruction *reference* loop; the production hot
+    /// path is [`ZeroRiscy::run_translated`], which is bit-identical.
     pub fn run_traced<M: TraceMode>(&mut self, fuel: u64) -> Result<Halt> {
         let prepared = Arc::clone(&self.prepared);
         let code: &[Instr] = &prepared.code;
@@ -160,6 +178,18 @@ impl ZeroRiscy {
                 return Ok(Halt::Fuel);
             }
             executed += 1;
+            if let Some(h) = self.step_traced::<M>(code)? {
+                return Ok(h);
+            }
+        }
+    }
+
+    /// Fetch, profile, execute and retire exactly one instruction — the
+    /// body of [`ZeroRiscy::run_traced`], shared with the translated
+    /// engine's fallback path.  Returns `Some` on halt.
+    #[inline(always)]
+    fn step_traced<M: TraceMode>(&mut self, code: &[Instr]) -> Result<Option<Halt>> {
+        {
             let idx = (self.pc / 4) as usize;
             let instr = match code.get(idx) {
                 Some(&i) => i,
@@ -265,11 +295,11 @@ impl ZeroRiscy {
                 Instr::Ecall => {
                     self.profile.syscalls_used = true;
                     self.profile.cycles += cost;
-                    return Ok(Halt::Ecall);
+                    return Ok(Some(Halt::Ecall));
                 }
                 Instr::Ebreak => {
                     self.profile.cycles += cost;
-                    return Ok(Halt::Break);
+                    return Ok(Some(Halt::Break));
                 }
                 Instr::Fence => {}
                 Instr::Mac { op, rd, rs1, rs2 } => {
@@ -299,6 +329,232 @@ impl ZeroRiscy {
             self.profile.cycles += cost;
             self.pc = next_pc;
         }
+        Ok(None)
+    }
+
+    /// Run until halt or `fuel` instructions, dispatching per
+    /// pre-translated basic block (`sim::translate`): one fuel check,
+    /// one cycle/instruction add, one histogram delta and one
+    /// register-mask OR per block, with the codegen hot idioms fused
+    /// into superinstructions.  Falls back to the per-instruction
+    /// interpreter step whenever the PC is not a translated
+    /// leader (dynamic `jalr` landing mid-block, misaligned PCs from
+    /// half-word-aligned branches, MAC blocks on a MAC-less core) or
+    /// the remaining fuel cannot cover a whole block — so halts and
+    /// `Halt::Fuel` states are bit-identical to the interpreter, and a
+    /// fault returns the same `Err` with the same registers/RAM (the
+    /// profile and `pc` are unspecified after an `Err`, which every
+    /// consumer propagates — see `sim::translate`'s error contract).
+    pub fn run_translated<M: TraceMode>(&mut self, fuel: u64) -> Result<Halt> {
+        let prepared = Arc::clone(&self.prepared);
+        let code: &[Instr] = &prepared.code;
+        let trans = &prepared.translated;
+        let blocks = trans.blocks.as_slice();
+        let leaders: &[u32] = &trans.leaders;
+        let mut executed = 0u64;
+        loop {
+            let mut bid = NO_BLOCK;
+            if self.pc & 3 == 0 {
+                if let Some(&b) = leaders.get((self.pc >> 2) as usize) {
+                    bid = b;
+                }
+            }
+            if bid != NO_BLOCK {
+                let b = &blocks[bid as usize];
+                if fuel - executed >= b.n_instrs as u64 {
+                    executed += b.n_instrs as u64;
+                    self.exec_stats.blocks += 1;
+                    for u in b.uops.iter() {
+                        self.exec_uop(u)?;
+                    }
+                    {
+                        let p = &mut self.profile;
+                        p.cycles += b.base_cycles;
+                        p.instructions += b.n_instrs as u64;
+                        p.loads += b.loads;
+                        p.stores += b.stores;
+                        p.mul_ops += b.mul_ops;
+                        p.mac_ops += b.mac_ops;
+                        p.branches_taken += b.branches_taken;
+                        if b.csr_used {
+                            p.csr_used = true;
+                        }
+                        if M::PROFILE {
+                            p.regs_used |= b.reg_mask;
+                            p.max_pc = p.max_pc.max(b.last_pc);
+                            p.record_block(&b.counts);
+                        }
+                    }
+                    match b.term {
+                        TermRv32::FallThrough => self.pc = b.next_pc,
+                        TermRv32::Jal { rd, target, link } => {
+                            if rd != 0 {
+                                self.regs[rd as usize] = link;
+                            }
+                            self.pc = target;
+                        }
+                        TermRv32::Jalr { rd, rs1, offset, link } => {
+                            let t = self.regs[rs1 as usize].wrapping_add(offset as u32) & !1;
+                            if rd != 0 {
+                                self.regs[rd as usize] = link;
+                            }
+                            self.pc = t;
+                        }
+                        TermRv32::Branch { op, rs1, rs2, target } => {
+                            let (a, v) = (self.regs[rs1 as usize], self.regs[rs2 as usize]);
+                            let taken = match op {
+                                BranchOp::Beq => a == v,
+                                BranchOp::Bne => a != v,
+                                BranchOp::Blt => (a as i32) < (v as i32),
+                                BranchOp::Bge => (a as i32) >= (v as i32),
+                                BranchOp::Bltu => a < v,
+                                BranchOp::Bgeu => a >= v,
+                            };
+                            if taken {
+                                self.profile.cycles += 2;
+                                self.profile.branches_taken += 1;
+                                self.pc = target;
+                            } else {
+                                self.pc = b.next_pc;
+                            }
+                        }
+                        TermRv32::Ebreak => {
+                            self.pc = b.last_pc;
+                            return Ok(Halt::Break);
+                        }
+                        TermRv32::Ecall => {
+                            self.pc = b.last_pc;
+                            self.profile.syscalls_used = true;
+                            return Ok(Halt::Ecall);
+                        }
+                    }
+                    continue;
+                }
+            }
+            // Fallback: one interpreted step (mid-block entry,
+            // untranslatable block, or fuel tail inside a block).
+            if executed >= fuel {
+                return Ok(Halt::Fuel);
+            }
+            executed += 1;
+            self.exec_stats.fallback_instrs += 1;
+            if let Some(h) = self.step_traced::<M>(code)? {
+                return Ok(h);
+            }
+        }
+    }
+
+    /// Register write without profile bookkeeping (the translated
+    /// engine applies the block's precomputed register mask instead).
+    #[inline(always)]
+    fn uset(&mut self, r: Reg, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    /// Execute one load (data effects + BAR reach only; the block
+    /// aggregates carry the `loads` counter and cycle cost).
+    #[inline(always)]
+    fn exec_load(&mut self, l: &LoadRv32) -> Result<()> {
+        let addr = self.regs[l.rs1 as usize].wrapping_add(l.offset as u32);
+        let v = match l.op {
+            LoadOp::Lb => self.mem.load_u8(addr)? as i8 as i32 as u32,
+            LoadOp::Lbu => self.mem.load_u8(addr)? as u32,
+            LoadOp::Lh => self.mem.load_u16(addr)? as i16 as i32 as u32,
+            LoadOp::Lhu => self.mem.load_u16(addr)? as u32,
+            LoadOp::Lw => self.mem.load_u32(addr)?,
+        };
+        self.uset(l.rd, v);
+        self.note_ram(addr);
+        Ok(())
+    }
+
+    /// Execute one register-only micro-op.
+    #[inline(always)]
+    fn exec_simple(&mut self, s: &SimpleRv32) {
+        match *s {
+            SimpleRv32::SetReg { rd, v } => self.uset(rd, v),
+            SimpleRv32::OpImm { op, rd, rs1, imm } => {
+                let a = self.regs[rs1 as usize];
+                self.uset(rd, alu(op, a, imm as u32));
+            }
+            SimpleRv32::Op { op, rd, rs1, rs2 } => {
+                let (a, v) = (self.regs[rs1 as usize], self.regs[rs2 as usize]);
+                self.uset(rd, alu(op, a, v));
+            }
+        }
+    }
+
+    /// Execute one MAC-extension op (data effects only).
+    #[inline(always)]
+    fn exec_mac(&mut self, op: MacOp, rd: Reg, rs1: Reg, rs2: Reg) -> Result<()> {
+        let mac = self.mac.as_mut().context("MAC instruction on a core without a MAC unit")?;
+        match op {
+            MacOp::Mac => {
+                let a = self.regs[rs1 as usize];
+                let v = self.regs[rs2 as usize];
+                mac.mac(a as u64, v as u64);
+            }
+            MacOp::MacRd => {
+                let v = mac.read(rs1 as usize);
+                self.uset(rd, v);
+            }
+            MacOp::MacClr => mac.clear(),
+        }
+        Ok(())
+    }
+
+    /// Execute one translated micro-op.  Performs exactly the same
+    /// architectural steps in the same order as the interpreter, so
+    /// register aliasing and fault ordering are preserved; all
+    /// per-retire accounting lives in the block aggregates.
+    #[inline(always)]
+    fn exec_uop(&mut self, u: &UopRv32) -> Result<()> {
+        match u {
+            UopRv32::Simple(s) => self.exec_simple(s),
+            UopRv32::Alu2(a, b) => {
+                self.exec_simple(a);
+                self.exec_simple(b);
+            }
+            UopRv32::Alu3(a, b, c) => {
+                self.exec_simple(a);
+                self.exec_simple(b);
+                self.exec_simple(c);
+            }
+            UopRv32::Load(l) => self.exec_load(l)?,
+            UopRv32::Store { op, rs2, rs1, offset } => {
+                let addr = self.regs[*rs1 as usize].wrapping_add(*offset as u32);
+                let v = self.regs[*rs2 as usize];
+                match op {
+                    StoreOp::Sb => self.mem.store_u8(addr, v as u8)?,
+                    StoreOp::Sh => self.mem.store_u16(addr, v as u16)?,
+                    StoreOp::Sw => self.mem.store_u32(addr, v)?,
+                }
+                self.note_ram(addr);
+            }
+            UopRv32::MulDiv { op, rd, rs1, rs2 } => {
+                let (a, v) = (self.regs[*rs1 as usize], self.regs[*rs2 as usize]);
+                self.uset(*rd, muldiv(*op, a, v));
+            }
+            UopRv32::Mac { op, rd, rs1, rs2 } => self.exec_mac(*op, *rd, *rs1, *rs2)?,
+            UopRv32::Load2Mac { a, b, rs1, rs2 } => {
+                self.exec_load(a)?;
+                self.exec_load(b)?;
+                self.exec_mac(MacOp::Mac, 0, *rs1, *rs2)?;
+            }
+            UopRv32::Load2MulAdd { a, b, mul, add } => {
+                self.exec_load(a)?;
+                self.exec_load(b)?;
+                let (mrd, mr1, mr2) = *mul;
+                let v = muldiv(MulOp::Mul, self.regs[mr1 as usize], self.regs[mr2 as usize]);
+                self.uset(mrd, v);
+                let (ard, ar1, ar2) = *add;
+                let s = self.regs[ar1 as usize].wrapping_add(self.regs[ar2 as usize]);
+                self.uset(ard, s);
+            }
+        }
+        Ok(())
     }
 
     fn note_ram(&mut self, addr: u32) {
@@ -586,6 +842,90 @@ mod tests {
         assert!(Arc::ptr_eq(a.prepared(), b.prepared()));
         assert!(Arc::ptr_eq(&a.mem.rom, &b.mem.rom));
         assert_eq!(a.rom_bytes(), 4 + 3);
+    }
+
+    /// Interpreted and translated runs of the same prepared image must
+    /// agree on every observable, including mid-run `Halt::Fuel` states.
+    fn assert_translated_matches(text: &str, fuel: u64) {
+        let prog = assemble(text).unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[], 4096, None));
+        let mut interp = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+        let hi = interp.run_traced::<FullProfile>(fuel).unwrap();
+        let mut trans = ZeroRiscy::from_prepared(prepared);
+        let ht = trans.run_translated::<FullProfile>(fuel).unwrap();
+        assert_eq!(hi, ht);
+        assert_eq!(interp.regs, trans.regs);
+        assert_eq!(interp.pc, trans.pc);
+        assert_eq!(interp.mem.ram, trans.mem.ram);
+        assert_eq!(interp.profile.cycles, trans.profile.cycles);
+        assert_eq!(interp.profile.instructions, trans.profile.instructions);
+        assert_eq!(interp.profile.instr_counts(), trans.profile.instr_counts());
+        assert_eq!(interp.profile.regs_used, trans.profile.regs_used);
+        assert_eq!(interp.profile.max_pc, trans.profile.max_pc);
+        assert_eq!(interp.profile.branches_taken, trans.profile.branches_taken);
+        assert_eq!(interp.profile.loads, trans.profile.loads);
+        assert_eq!(interp.profile.stores, trans.profile.stores);
+        assert_eq!(interp.profile.max_ram_offset, trans.profile.max_ram_offset);
+    }
+
+    #[test]
+    fn translated_matches_interpreted_loop_program() {
+        let text = format!(
+            r#"
+                li   t0, 10
+                li   t1, 0
+                li   s2, {RAM_BASE}
+            loop:
+                add  t1, t1, t0
+                sw   t1, 8(s2)
+                lw   t2, 8(s2)
+                addi t0, t0, -1
+                bnez t0, loop
+                mul  t3, t1, t2
+                ebreak
+            "#
+        );
+        assert_translated_matches(&text, 1_000_000);
+        // Fuel expiring inside the loop body must leave identical state.
+        for fuel in [1, 3, 7, 12, 23] {
+            assert_translated_matches(&text, fuel);
+        }
+    }
+
+    #[test]
+    fn translated_runs_mac_and_reports_block_stats() {
+        let mut a = Asm::new();
+        a.li(8, RAM_BASE as i32);
+        a.maccl();
+        a.li(10, 3);
+        a.li(11, 4);
+        a.sw(10, 8, 0);
+        a.sw(11, 8, 4);
+        a.lw(5, 8, 0);
+        a.lw(6, 8, 4);
+        a.mac(5, 6);
+        a.macrd(12, 0);
+        a.ebreak();
+        let prog = a.finish().unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[], 64, Some(MacConfig::new(32, 32))));
+        assert!(prepared.translated.stats.fused > 0);
+        assert_eq!(prepared.translated.stats.untranslatable_blocks, 0);
+        let mut sim = ZeroRiscy::from_prepared(prepared);
+        assert_eq!(sim.run_translated::<FullProfile>(100).unwrap(), Halt::Break);
+        assert_eq!(sim.regs[12], 12);
+        assert_eq!(sim.profile.mac_ops, 1);
+        assert!(sim.exec_stats.blocks > 0);
+        assert_eq!(sim.exec_stats.fallback_instrs, 0);
+    }
+
+    #[test]
+    fn translated_falls_back_for_mac_without_unit() {
+        let prog = assemble("mac a0, a1\nebreak").unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[], 64, None));
+        let mut sim = ZeroRiscy::from_prepared(prepared);
+        let err = sim.run_translated::<FullProfile>(10).unwrap_err();
+        assert!(err.to_string().contains("MAC instruction"), "{err}");
+        assert!(sim.exec_stats.fallback_instrs > 0);
     }
 
     #[test]

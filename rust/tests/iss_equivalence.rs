@@ -20,6 +20,17 @@
 //! program re-encode), per-byte / per-word preloads, per-sample profile
 //! merge.  Runs against `make artifacts` output when present, else the
 //! checked-in `artifacts-fixture/`; skips only if both are missing.
+//!
+//! Since §Perf iteration 4 the harness executes on the **translated**
+//! engine (`run_translated`: block dispatch + fused superinstructions),
+//! so the model-fixture tests below differentially pin the translated
+//! engine against the per-instruction interpreter across all six
+//! models, both ISAs, both trace modes and pools {1, 8}.  The fuzz
+//! tests at the bottom pin the same equivalence on *adversarial*
+//! control flow the codegen never emits: branch-dense random programs,
+//! `jalr`s landing mid-block, misaligned branch targets that
+//! self-overlap the instruction stream, MAC ops without a MAC unit,
+//! and fuel exhaustion inside a block.
 
 use printed_bespoke::ml::codegen_rv32::{
     self, InputFormat, Rv32Program, Rv32Variant, INPUT_OFF, RAM_BYTES, SCORES_OFF,
@@ -27,6 +38,13 @@ use printed_bespoke::ml::codegen_rv32::{
 use printed_bespoke::ml::codegen_tpisa::{self, TpIsaProgram, TpVariant};
 use printed_bespoke::ml::dataset::Dataset;
 use printed_bespoke::ml::harness::{self, BatchRun};
+use std::sync::Arc;
+
+use printed_bespoke::hw::mac_unit::MacConfig;
+use printed_bespoke::isa::rv32;
+use printed_bespoke::isa::rv32_asm::Asm;
+use printed_bespoke::isa::tpisa;
+use printed_bespoke::isa::MacOp;
 use printed_bespoke::ml::manifest::Manifest;
 use printed_bespoke::ml::model::Model;
 use printed_bespoke::ml::quant::{pack_vec, quantize};
@@ -34,6 +52,7 @@ use printed_bespoke::sim::mem::RAM_BASE;
 use printed_bespoke::sim::tpisa::TpIsa;
 use printed_bespoke::sim::trace::{CyclesOnly, FullProfile, Profile};
 use printed_bespoke::sim::zero_riscy::{Halt, ZeroRiscy};
+use printed_bespoke::sim::{PreparedRv32, PreparedTpIsa};
 use printed_bespoke::util::rng::Pcg32;
 use printed_bespoke::util::threadpool::ThreadPool;
 
@@ -300,4 +319,419 @@ fn sharded_runs_match_sequential_in_both_modes() {
             assert_eq!(tpar_cyc.profile.cycles, tseq_cyc.profile.cycles, "{what}: cyc cycles");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Adversarial fuzz: translated engine vs per-instruction interpreter on
+// control flow the codegen never emits.
+// ---------------------------------------------------------------------------
+
+/// Run one RV32 program through the interpreter and the translated
+/// engine with the same fuel and assert every observable agrees.
+/// On error both must fail with the same message (faults surface
+/// through the shared fallback/step helpers).
+fn compare_rv32(code: &[rv32::Instr], fuel: u64, mac: Option<MacConfig>, what: &str) {
+    let prepared = Arc::new(PreparedRv32::new(code, &[], 0x400, mac));
+    let mut interp = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    let ri = interp.run_traced::<FullProfile>(fuel);
+    let mut trans = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    let rt = trans.run_translated::<FullProfile>(fuel);
+    match (ri, rt) {
+        (Ok(hi), Ok(ht)) => {
+            assert_eq!(hi, ht, "{what}: halt kind");
+            assert_eq!(interp.regs, trans.regs, "{what}: regs");
+            assert_eq!(interp.pc, trans.pc, "{what}: pc");
+            assert_eq!(interp.mem.ram, trans.mem.ram, "{what}: ram");
+            assert_profiles_eq(&interp.profile, &trans.profile, what);
+        }
+        (Err(ei), Err(et)) => {
+            assert_eq!(ei.to_string(), et.to_string(), "{what}: error");
+        }
+        (ri, rt) => panic!("{what}: divergent outcome {ri:?} vs {rt:?}"),
+    }
+    // CyclesOnly mode: same architectural state and aggregate counters.
+    let mut ci = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    let rci = ci.run_traced::<CyclesOnly>(fuel);
+    let mut ct = ZeroRiscy::from_prepared(prepared);
+    let rct = ct.run_translated::<CyclesOnly>(fuel);
+    match (rci, rct) {
+        (Ok(hi), Ok(ht)) => {
+            assert_eq!(hi, ht, "{what}: cyc halt kind");
+            assert_eq!(ci.regs, ct.regs, "{what}: cyc regs");
+            assert_eq!(ci.mem.ram, ct.mem.ram, "{what}: cyc ram");
+            assert_eq!(ci.profile.cycles, ct.profile.cycles, "{what}: cyc cycles");
+            assert_eq!(
+                ci.profile.instructions,
+                ct.profile.instructions,
+                "{what}: cyc instructions"
+            );
+            assert!(ct.profile.instr_counts().is_empty(), "{what}: cyc histogram");
+        }
+        (Err(ei), Err(et)) => {
+            assert_eq!(ei.to_string(), et.to_string(), "{what}: cyc error");
+        }
+        (ri, rt) => panic!("{what}: cyc divergent outcome {ri:?} vs {rt:?}"),
+    }
+}
+
+/// A random branch-dense RV32 program: segments of random data ops
+/// joined by random branches/jumps between segment labels, plus
+/// occasional `jalr`s to *already-placed* labels (dynamic targets the
+/// translator cannot see — they land mid-block at runtime).  Loads and
+/// stores stay inside RAM so the common case halts or burns fuel
+/// rather than faulting.
+fn random_rv32_program(rng: &mut Pcg32) -> Vec<rv32::Instr> {
+    use rv32::{AluOp, BranchOp, LoadOp, MulOp, StoreOp};
+    let mut a = Asm::new();
+    let segs = rng.range_usize(3, 8);
+    a.li(8, RAM_BASE as i32); // s0: RAM base (kept read-only below)
+    a.li(9, RAM_BASE as i32 + 128); // s1: second RAM window
+    // Labels every segment; jalr targets must already be placed.
+    let mut placed: Vec<(String, usize)> = Vec::new();
+    let pool: [u8; 10] = [5, 6, 7, 10, 11, 12, 13, 14, 15, 0];
+    let reg = |rng: &mut Pcg32| pool[rng.range_usize(0, pool.len() - 1)];
+    let wreg = |rng: &mut Pcg32| pool[rng.range_usize(0, pool.len() - 2)]; // no x0 dest
+    for s in 0..segs {
+        let name = format!("s{s}");
+        placed.push((name.clone(), a.here()));
+        a.label(&name);
+        for _ in 0..rng.range_usize(1, 5) {
+            match rng.range_usize(0, 9) {
+                0 => {
+                    let rd = wreg(rng);
+                    let rs = reg(rng);
+                    a.addi(rd, rs, rng.range_i64(-64, 64) as i32);
+                }
+                1 => {
+                    let op = *rng.choice(&[
+                        AluOp::Add,
+                        AluOp::Sub,
+                        AluOp::Xor,
+                        AluOp::Or,
+                        AluOp::And,
+                        AluOp::Slt,
+                        AluOp::Sltu,
+                    ]);
+                    a.push(rv32::Instr::Op { op, rd: wreg(rng), rs1: reg(rng), rs2: reg(rng) });
+                }
+                2 => {
+                    let op = *rng.choice(&[AluOp::Sll, AluOp::Srl, AluOp::Sra]);
+                    a.push(rv32::Instr::OpImm {
+                        op,
+                        rd: wreg(rng),
+                        rs1: reg(rng),
+                        imm: rng.range_i64(0, 31) as i32,
+                    });
+                }
+                3 => {
+                    a.push(rv32::Instr::Lui {
+                        rd: wreg(rng),
+                        imm: (rng.range_i64(0, 0xfffff) as i32) << 12,
+                    });
+                }
+                4 => {
+                    let op = *rng.choice(&[
+                        MulOp::Mul,
+                        MulOp::Mulh,
+                        MulOp::Div,
+                        MulOp::Rem,
+                        MulOp::Divu,
+                        MulOp::Remu,
+                    ]);
+                    a.push(rv32::Instr::MulDiv { op, rd: wreg(rng), rs1: reg(rng), rs2: reg(rng) });
+                }
+                5 | 6 => {
+                    let op = *rng.choice(&[
+                        LoadOp::Lw,
+                        LoadOp::Lh,
+                        LoadOp::Lhu,
+                        LoadOp::Lb,
+                        LoadOp::Lbu,
+                    ]);
+                    let base = *rng.choice(&[8u8, 9]);
+                    a.push(rv32::Instr::Load {
+                        op,
+                        rd: wreg(rng),
+                        rs1: base,
+                        offset: rng.range_i64(0, 120) as i32,
+                    });
+                }
+                7 => {
+                    let op = *rng.choice(&[StoreOp::Sw, StoreOp::Sh, StoreOp::Sb]);
+                    let base = *rng.choice(&[8u8, 9]);
+                    a.push(rv32::Instr::Store {
+                        op,
+                        rs2: reg(rng),
+                        rs1: base,
+                        offset: rng.range_i64(0, 120) as i32,
+                    });
+                }
+                8 => {
+                    // ROM read: the program is always longer than 16
+                    // bytes, so small x0-relative offsets stay in code.
+                    a.push(rv32::Instr::Load {
+                        op: LoadOp::Lhu,
+                        rd: wreg(rng),
+                        rs1: 0,
+                        offset: rng.range_i64(0, 12) as i32,
+                    });
+                }
+                _ => {
+                    a.nop();
+                }
+            }
+        }
+        // Segment terminator.
+        match rng.range_usize(0, 9) {
+            0..=4 => {
+                let op = *rng.choice(&[
+                    BranchOp::Beq,
+                    BranchOp::Bne,
+                    BranchOp::Blt,
+                    BranchOp::Bge,
+                    BranchOp::Bltu,
+                    BranchOp::Bgeu,
+                ]);
+                let t = rng.range_usize(0, segs); // may be "end"
+                let target = if t == segs { "end".to_string() } else { format!("s{t}") };
+                a.branch(op, reg(rng), reg(rng), &target);
+            }
+            5 => {
+                let t = rng.range_usize(0, segs);
+                let target = if t == segs { "end".to_string() } else { format!("s{t}") };
+                a.j(&target);
+            }
+            6 => {
+                // jalr to an already-placed label: a dynamic target the
+                // translator cannot mark as a leader.
+                let (_, idx) = placed[rng.range_usize(0, placed.len() - 1)].clone();
+                a.li(7, (idx * 4) as i32);
+                a.push(rv32::Instr::Jalr { rd: 1, rs1: 7, offset: 0 });
+            }
+            _ => {} // fall through
+        }
+    }
+    a.label("end");
+    a.ebreak();
+    a.finish().unwrap()
+}
+
+#[test]
+fn rv32_fuzz_translated_matches_interpreted() {
+    let mut rng = Pcg32::seeded(0x1550_E9_10);
+    for case in 0..60 {
+        let code = random_rv32_program(&mut rng);
+        let fuel = *rng.choice(&[37u64, 150, 600, 2500]);
+        compare_rv32(&code, fuel, None, &format!("fuzz case {case} fuel {fuel}"));
+    }
+}
+
+/// Misaligned branch targets: a half-word-aligned offset lands the PC
+/// between instruction words, so the retired stream self-overlaps —
+/// the translator must refuse the block path and single-step.
+#[test]
+fn rv32_misaligned_and_self_overlapping_streams() {
+    use rv32::{AluOp, BranchOp, Instr};
+    // beq +6 from pc 4 lands at pc 10: idx floor(10/4) = 2, then
+    // pc walks 10, 14, 18 — fetching idx 2, 3, 4 with shifted PCs.
+    let code = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 },
+        Instr::Branch { op: BranchOp::Beq, rs1: 0, rs2: 0, offset: 6 },
+        Instr::OpImm { op: AluOp::Add, rd: 6, rs1: 6, imm: 1 },
+        Instr::OpImm { op: AluOp::Add, rd: 7, rs1: 7, imm: 2 },
+        Instr::Ebreak,
+    ];
+    compare_rv32(&code, 1000, None, "misaligned beq");
+
+    // jal to a half-word boundary inside a loop body.
+    let code = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 40 },
+        Instr::Jal { rd: 0, offset: 10 }, // pc 4 -> 14
+        Instr::OpImm { op: AluOp::Add, rd: 6, rs1: 6, imm: 3 },
+        Instr::OpImm { op: AluOp::Add, rd: 7, rs1: 7, imm: 5 },
+        Instr::OpImm { op: AluOp::Add, rd: 10, rs1: 10, imm: 7 },
+        Instr::Ebreak,
+    ];
+    compare_rv32(&code, 1000, None, "misaligned jal");
+
+    // Backward misaligned branch forming a self-overlapping loop that
+    // only fuel can stop.
+    let code = vec![
+        Instr::OpImm { op: AluOp::Add, rd: 5, rs1: 0, imm: 1 },
+        Instr::OpImm { op: AluOp::Add, rd: 6, rs1: 5, imm: 2 },
+        Instr::Branch { op: BranchOp::Bge, rs1: 6, rs2: 0, offset: -6 },
+        Instr::Ebreak,
+    ];
+    compare_rv32(&code, 333, None, "self-overlapping loop");
+}
+
+/// MAC instructions on a MAC-less core error identically (the block is
+/// untranslatable, so the fallback interpreter raises the error at the
+/// same retire), and with a unit the fused path computes identically.
+#[test]
+fn rv32_mac_blocks_translated_and_untranslatable() {
+    use printed_bespoke::isa::rv32::Instr;
+    let mut a = Asm::new();
+    a.li(8, RAM_BASE as i32);
+    a.li(5, 3);
+    a.li(6, 4);
+    a.sw(5, 8, 0);
+    a.sw(6, 8, 4);
+    a.maccl();
+    a.lw(5, 8, 0);
+    a.lw(6, 8, 4);
+    a.mac(5, 6);
+    a.macrd(10, 0);
+    a.ebreak();
+    let code = a.finish().unwrap();
+    compare_rv32(&code, 1000, Some(MacConfig::new(32, 32)), "mac with unit");
+    compare_rv32(&code, 1000, None, "mac without unit");
+    // MacRd/MacClr without a preceding mac, on a bare Mac instr vec.
+    let code = vec![Instr::Mac { op: MacOp::MacRd, rd: 5, rs1: 0, rs2: 0 }, Instr::Ebreak];
+    compare_rv32(&code, 10, Some(MacConfig::new(32, 16)), "bare macrd");
+    compare_rv32(&code, 10, None, "bare macrd no unit");
+}
+
+/// Run one TP-ISA program both ways and compare every observable.
+fn compare_tpisa(code: &[tpisa::Instr], fuel: u64, mac: Option<MacConfig>, what: &str) {
+    let prepared = Arc::new(PreparedTpIsa::with_zero_dmem(8, code, 512, mac));
+    let mut interp = TpIsa::from_prepared(Arc::clone(&prepared));
+    let ri = interp.run_traced::<FullProfile>(fuel);
+    let mut trans = TpIsa::from_prepared(Arc::clone(&prepared));
+    let rt = trans.run_translated::<FullProfile>(fuel);
+    match (ri, rt) {
+        (Ok(hi), Ok(ht)) => {
+            assert_eq!(hi, ht, "{what}: halt kind");
+            assert_eq!(interp.regs, trans.regs, "{what}: regs");
+            assert_eq!(interp.pc, trans.pc, "{what}: pc");
+            assert_eq!(interp.carry, trans.carry, "{what}: carry");
+            assert_eq!(interp.zero, trans.zero, "{what}: zero");
+            let n = interp.dmem.len();
+            assert_eq!(
+                interp.dmem.read_words(0, n).unwrap(),
+                trans.dmem.read_words(0, n).unwrap(),
+                "{what}: dmem"
+            );
+            assert_profiles_eq(&interp.profile, &trans.profile, what);
+        }
+        (Err(ei), Err(et)) => {
+            assert_eq!(ei.to_string(), et.to_string(), "{what}: error");
+        }
+        (ri, rt) => panic!("{what}: divergent outcome {ri:?} vs {rt:?}"),
+    }
+    let mut ci = TpIsa::from_prepared(Arc::clone(&prepared));
+    let rci = ci.run_traced::<CyclesOnly>(fuel);
+    let mut ct = TpIsa::from_prepared(prepared);
+    let rct = ct.run_translated::<CyclesOnly>(fuel);
+    match (rci, rct) {
+        (Ok(hi), Ok(ht)) => {
+            assert_eq!(hi, ht, "{what}: cyc halt kind");
+            assert_eq!(ci.regs, ct.regs, "{what}: cyc regs");
+            assert_eq!(ci.profile.cycles, ct.profile.cycles, "{what}: cyc cycles");
+            assert_eq!(
+                ci.profile.instructions,
+                ct.profile.instructions,
+                "{what}: cyc instructions"
+            );
+        }
+        (Err(ei), Err(et)) => {
+            assert_eq!(ei.to_string(), et.to_string(), "{what}: cyc error");
+        }
+        (ri, rt) => panic!("{what}: cyc divergent outcome {ri:?} vs {rt:?}"),
+    }
+}
+
+/// A random TP-ISA instruction stream: all data/memory ops plus
+/// branches with mostly-in-range offsets (occasionally out of range to
+/// pin fault equality) and sprinkled Halt/Mac instructions.
+fn random_tpisa_program(rng: &mut Pcg32, with_mac: bool) -> Vec<tpisa::Instr> {
+    use tpisa::Instr;
+    let n = rng.range_usize(20, 60);
+    let mut code = Vec::with_capacity(n + 1);
+    let r = |rng: &mut Pcg32| rng.range_usize(0, 7) as u8;
+    for i in 0..n {
+        let off_to = |rng: &mut Pcg32, i: usize| -> i16 {
+            // Mostly land inside the program; 1-in-16 shoots outside.
+            if rng.range_usize(0, 15) == 0 {
+                *rng.choice(&[-200i64, 500]) as i16
+            } else {
+                (rng.range_i64(0, n as i64) - i as i64) as i16
+            }
+        };
+        let ins = match rng.range_usize(0, 20) {
+            0 => Instr::Ldi { r1: r(rng), imm: rng.range_i64(-32, 31) as i8 },
+            1 => Instr::Add { r1: r(rng), r2: r(rng) },
+            2 => Instr::Adc { r1: r(rng), r2: r(rng) },
+            3 => Instr::Sub { r1: r(rng), r2: r(rng) },
+            4 => Instr::Sbc { r1: r(rng), r2: r(rng) },
+            5 => Instr::And { r1: r(rng), r2: r(rng) },
+            6 => Instr::Or { r1: r(rng), r2: r(rng) },
+            7 => Instr::Xor { r1: r(rng), r2: r(rng) },
+            8 => *rng.choice(&[
+                Instr::Shl { r1: r(rng) },
+                Instr::Shr { r1: r(rng) },
+                Instr::Sra { r1: r(rng) },
+                Instr::Slc { r1: r(rng) },
+                Instr::Src { r1: r(rng) },
+            ]),
+            9 | 10 => Instr::Ld { r1: r(rng), r2: r(rng), imm: rng.range_i64(0, 63) as i8 },
+            11 => Instr::St { r1: r(rng), r2: r(rng), imm: rng.range_i64(0, 63) as i8 },
+            12 => Instr::Addi { r1: r(rng), imm: rng.range_i64(-32, 31) as i8 },
+            13 => Instr::Mov { r1: r(rng), r2: r(rng) },
+            14 => Instr::Sxt { r1: r(rng), r2: r(rng) },
+            15 => Instr::Clc,
+            16 => Instr::Bz { off: off_to(rng, i) },
+            17 => Instr::Bnz { off: off_to(rng, i) },
+            18 => *rng.choice(&[
+                Instr::Bc { off: rng.range_i64(-8, 8) as i8 },
+                Instr::Bnc { off: rng.range_i64(-8, 8) as i8 },
+            ]),
+            19 => Instr::Jmp { off: off_to(rng, i) },
+            _ => {
+                if with_mac && rng.range_usize(0, 3) == 0 {
+                    let chunk = rng.range_usize(0, 3) as u8;
+                    *rng.choice(&[
+                        Instr::Mac { op: MacOp::Mac, r1: r(rng), r2: r(rng) },
+                        Instr::Mac { op: MacOp::MacRd, r1: r(rng), r2: chunk },
+                        Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 },
+                    ])
+                } else {
+                    Instr::Halt
+                }
+            }
+        };
+        code.push(ins);
+    }
+    code.push(tpisa::Instr::Halt);
+    code
+}
+
+#[test]
+fn tpisa_fuzz_translated_matches_interpreted() {
+    let mut rng = Pcg32::seeded(0x1550_E9_11);
+    for case in 0..60 {
+        // Alternate: MAC streams with a unit, MAC streams without one
+        // (untranslatable blocks must error at the same retire), and
+        // plain data/branch streams.
+        let with_mac = case % 3 != 2;
+        let code = random_tpisa_program(&mut rng, with_mac);
+        let fuel = *rng.choice(&[29u64, 120, 700, 3000]);
+        let mac = if case % 3 == 0 { Some(MacConfig::new(8, 8)) } else { None };
+        compare_tpisa(&code, fuel, mac, &format!("tp fuzz case {case} fuel {fuel}"));
+    }
+}
+
+/// MAC stream without a unit: the whole block is untranslatable, so the
+/// fallback interpreter raises the identical error at the same retire.
+#[test]
+fn tpisa_mac_without_unit_errors_identically() {
+    use tpisa::Instr;
+    let code = vec![
+        Instr::Ldi { r1: 0, imm: 3 },
+        Instr::Ldi { r1: 1, imm: 4 },
+        Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 },
+        Instr::Halt,
+    ];
+    compare_tpisa(&code, 100, None, "tp mac without unit");
+    compare_tpisa(&code, 100, Some(MacConfig::new(8, 8)), "tp mac with unit");
 }

@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_iss.json against the committed baseline.
+
+Joins the two result sets on (core, model, variant) and prints a
+markdown speedup table (suitable for $GITHUB_STEP_SUMMARY).  The gate:
+
+* the translated-vs-interpreted speedup of every baseline configuration
+  must not regress by more than --max-regression (default 20%) — this
+  ratio is host-independent, so it is the default CI gate;
+* every configuration present in the baseline must be present in the
+  fresh results;
+* with --absolute, the absolute translated MIPS is additionally gated
+  against the baseline at the same tolerance (only meaningful when both
+  files come from the same host class).
+
+A baseline carrying `"placeholder": true` (the seed snapshot, whose
+numbers are estimates, not measurements) is report-only: the table is
+printed, violations are listed as warnings, and the exit status is 0.
+Committing a measured BENCH_iss.json as the baseline (which has no
+placeholder flag) arms the gate.
+
+Exit status 0 = pass / placeholder report, 1 = regression / missing
+configuration, 2 = usage or file error.
+
+Usage:
+    tools/bench_diff.py BENCH_iss.baseline.json BENCH_iss.json \
+        [--max-regression 0.20] [--absolute]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    rows = {}
+    for r in doc.get("results", []):
+        key = (r.get("core", "?"), r.get("model", "?"), r.get("variant", "?"))
+        rows[key] = r
+    if not rows:
+        print(f"bench_diff: {path} contains no results", file=sys.stderr)
+        sys.exit(2)
+    return doc, rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="allowed fractional drop vs baseline (default 0.20)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate absolute translated MIPS (same-host runs only)")
+    args = ap.parse_args()
+
+    base_doc, base = load_results(args.baseline)
+    _, fresh = load_results(args.fresh)
+    tol = args.max_regression
+    placeholder = bool(base_doc.get("placeholder"))
+
+    print("## ISS translated-vs-interpreted speedup\n")
+    print("| core | model | variant | interp MIPS | translated MIPS "
+          "| speedup (fresh) | speedup (baseline) | fallback rate | status |")
+    print("|---|---|---|---:|---:|---:|---:|---:|---|")
+
+    failures = []
+    for key in sorted(base):
+        b = base[key]
+        f = fresh.get(key)
+        core, model, variant = key
+        b_speed = b.get("speedup_translated_vs_interp", 0.0)
+        if f is None:
+            failures.append(f"{key}: missing from fresh results")
+            print(f"| {core} | {model} | {variant} | — | — | — "
+                  f"| {b_speed:.2f}x | — | MISSING |")
+            continue
+        f_speed = f.get("speedup_translated_vs_interp", 0.0)
+        f_interp = f.get("mips_interp_cycles_only", 0.0)
+        f_trans = f.get("mips_translated_cycles_only", 0.0)
+        fallback = f.get("fallback_rate", 0.0)
+        problems = []
+        if f_speed < b_speed * (1.0 - tol):
+            problems.append("SPEEDUP REGRESSION")
+            failures.append(
+                f"{key}: translated-vs-interp speedup {f_speed:.2f}x "
+                f"< {(1.0 - tol):.2f} * baseline {b_speed:.2f}x")
+        if args.absolute:
+            b_trans = b.get("mips_translated_cycles_only", 0.0)
+            if f_trans < b_trans * (1.0 - tol):
+                problems.append("MIPS REGRESSION")
+                failures.append(
+                    f"{key}: translated MIPS {f_trans:.1f} "
+                    f"< {(1.0 - tol):.2f} * baseline {b_trans:.1f}")
+        status = " + ".join(problems) if problems else "ok"
+        print(f"| {core} | {model} | {variant} | {f_interp:.1f} | {f_trans:.1f} "
+              f"| {f_speed:.2f}x | {b_speed:.2f}x | {fallback:.4f} | {status} |")
+
+    extra = sorted(set(fresh) - set(base))
+    for key in extra:
+        f = fresh[key]
+        core, model, variant = key
+        print(f"| {core} | {model} | {variant} "
+              f"| {f.get('mips_interp_cycles_only', 0.0):.1f} "
+              f"| {f.get('mips_translated_cycles_only', 0.0):.1f} "
+              f"| {f.get('speedup_translated_vs_interp', 0.0):.2f}x | new | "
+              f"{f.get('fallback_rate', 0.0):.4f} | new |")
+
+    print()
+    if failures:
+        kind = "warning(s) [placeholder baseline, not enforced]" if placeholder \
+            else "regression(s)"
+        print(f"**{len(failures)} {kind} beyond {tol * 100:.0f}% tolerance:**\n")
+        for msg in failures:
+            print(f"* {msg}")
+        if placeholder:
+            print("\nBaseline is a placeholder (estimated numbers): reporting only. "
+                  "Commit a measured BENCH_iss.json as BENCH_iss.baseline.json to arm "
+                  "the gate.")
+            return 0
+        return 1
+    if placeholder:
+        print(f"All {len(base)} placeholder-baseline configurations within "
+              f"{tol * 100:.0f}% tolerance (gate unarmed until a measured baseline "
+              "is committed).")
+    else:
+        print(f"All {len(base)} baseline configurations within "
+              f"{tol * 100:.0f}% tolerance.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
