@@ -11,15 +11,23 @@
 //!   `run_traced::<CyclesOnly>` — the PR 4 *after* number and the
 //!   baseline the translated engine is gated against (≥2× on the
 //!   straight-line-dominant MLP/SVM models);
-//! * `full`       — block-translated `run_translated::<FullProfile>`;
-//! * `translated` — block-translated `run_translated::<CyclesOnly>`:
-//!   the path every production consumer (harness, DSE sweeps,
-//!   crosscheck, serving) actually takes.
+//! * `full`       — block-translated `run_translated::<FullProfile>`,
+//!   one sample at a time (`run_rv32_scalar_traced`);
+//! * `translated` — block-translated `run_translated::<CyclesOnly>`,
+//!   one sample at a time — the PR 5 *before* number and the
+//!   configuration the translated-vs-interpreted gate ratios against;
+//! * `batched`    — the batched lockstep engine (`sim::batch` via
+//!   `run_rv32_batched` / `run_tpisa_batched`, one sample per lane,
+//!   `BATCH` lanes): the path every production consumer (harness, DSE
+//!   sweeps, crosscheck, serving) takes since §Perf iteration 5,
+//!   measured in both trace modes.
 //!
 //! Also reports the per-model block-cache statistics: translated
-//! blocks, fused superinstructions, static coverage, and the dynamic
+//! blocks, fused superinstructions, static coverage, the dynamic
 //! fallback rate (fraction of retired instructions that took the
-//! per-instruction fallback).
+//! per-instruction fallback), and the batched engine's divergence rate
+//! (fallback share of retired instructions across all lanes — lanes
+//! that leave lockstep drain on the scalar path).
 //!
 //! Emits `BENCH_iss.json`; CI diffs it against the committed
 //! `BENCH_iss.baseline.json` via `tools/bench_diff.py`, failing on a
@@ -34,10 +42,14 @@ use printed_bespoke::ml::harness;
 use printed_bespoke::ml::model::Model;
 use printed_bespoke::sim::mem::RAM_BASE;
 use printed_bespoke::sim::tpisa::TpIsa;
-use printed_bespoke::sim::trace::CyclesOnly;
+use printed_bespoke::sim::trace::{CyclesOnly, FullProfile, Profile};
 use printed_bespoke::sim::zero_riscy::{Halt, ZeroRiscy};
-use printed_bespoke::sim::ExecStats;
+use printed_bespoke::sim::{BatchRv32, BatchTpIsa, ExecStats};
 use printed_bespoke::util::bench::bench;
+
+/// Lanes per batched dispatch — matches `harness::BATCH_LANES` clamped
+/// to the 32-sample bench set, i.e. one lane per sample.
+const BATCH: usize = 32;
 
 struct Row {
     core: &'static str,
@@ -48,10 +60,14 @@ struct Row {
     mips_interp: f64,
     mips_full: f64,
     mips_translated: f64,
+    mips_batched_full: f64,
+    mips_batched_cycles_only: f64,
+    batch_size: usize,
     blocks: usize,
     fused: usize,
     static_coverage: f64,
     fallback_rate: f64,
+    divergence_rate: f64,
 }
 
 /// The pre-rework RV32 harness cost model: fresh simulator + per-byte
@@ -115,6 +131,24 @@ fn translated_stats_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> 
     (sim.exec_stats, sim.profile.instructions)
 }
 
+/// One batched lockstep pass (one lane per sample), to harvest the
+/// divergence counters — the fallback share across all lanes, i.e. the
+/// fraction of retired instructions that left lockstep and drained on
+/// the scalar path.
+fn batched_stats_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> (ExecStats, u64) {
+    let mut batch = BatchRv32::new(Arc::clone(&prog.prepared), xs.len());
+    for (i, x) in xs.iter().enumerate() {
+        let input = harness::input_bytes_rv32(model, prog, x).unwrap();
+        batch.lane_mut(i).mem.write_ram(INPUT_OFF as usize, &input).unwrap();
+    }
+    for res in batch.run::<CyclesOnly>(xs.len(), 50_000_000) {
+        assert_eq!(res.unwrap(), Halt::Break);
+    }
+    let mut p = Profile::default();
+    batch.fold_profile(&mut p);
+    (batch.exec_stats(), p.instructions)
+}
+
 /// The pre-rework TP-ISA harness cost model: fresh simulator +
 /// per-word constant and input preload + full profiling per sample,
 /// built from the shared prepared image (no block-translation charge —
@@ -172,6 +206,21 @@ fn translated_stats_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -
     (sim.exec_stats, sim.profile.instructions)
 }
 
+/// One batched TP-ISA lockstep pass for the divergence counters.
+fn batched_stats_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> (ExecStats, u64) {
+    let mut batch = BatchTpIsa::new(Arc::clone(&prog.prepared), xs.len());
+    for (i, x) in xs.iter().enumerate() {
+        let words = harness::input_words_tpisa(model, prog, x).unwrap();
+        batch.lane_mut(i).dmem.write_words(prog.input_base, &words).unwrap();
+    }
+    for res in batch.run::<CyclesOnly>(xs.len(), 500_000_000) {
+        assert_eq!(res.unwrap(), printed_bespoke::sim::tpisa::Halt::Halted);
+    }
+    let mut p = Profile::default();
+    batch.fold_profile(&mut p);
+    (batch.exec_stats(), p.instructions)
+}
+
 fn mips(instrs: u64, min_ms: f64) -> f64 {
     instrs as f64 / (min_ms / 1e3) / 1e6
 }
@@ -204,23 +253,34 @@ fn main() -> anyhow::Result<()> {
             });
             let m_interp = mips(instrs, r_interp.min_ms);
             let r_full = bench(&format!("{name} translated full x{}", xs.len()), 1, 10, || {
-                let run = harness::run_rv32(model, &prog, xs).unwrap();
+                let run = harness::run_rv32_scalar_traced::<FullProfile>(model, &prog, xs).unwrap();
                 instrs = run.profile.instructions;
             });
             let m_full = mips(instrs, r_full.min_ms);
             let r_trans = bench(&format!("{name} translated cycles-only x{}", xs.len()), 1, 10, || {
-                let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs).unwrap();
+                let run = harness::run_rv32_scalar_traced::<CyclesOnly>(model, &prog, xs).unwrap();
                 instrs = run.profile.instructions;
             });
             let m_trans = mips(instrs, r_trans.min_ms);
+            let r_bfull = bench(&format!("{name} batched full x{}", xs.len()), 1, 10, || {
+                let run = harness::run_rv32_batched::<FullProfile>(model, &prog, xs, BATCH).unwrap();
+                instrs = run.profile.instructions;
+            });
+            let m_bfull = mips(instrs, r_bfull.min_ms);
+            let r_batch = bench(&format!("{name} batched cycles-only x{}", xs.len()), 1, 10, || {
+                let run = harness::run_rv32_batched::<CyclesOnly>(model, &prog, xs, BATCH).unwrap();
+                instrs = run.profile.instructions;
+            });
+            let m_batch = mips(instrs, r_batch.min_ms);
             let (dyn_stats, dyn_instrs) = translated_stats_rv32(model, &prog, xs);
+            let (b_stats, b_instrs) = batched_stats_rv32(model, &prog, xs);
             let st = prog.translate_stats();
             println!(
-                "{:<44} legacy {m_legacy:.2} | interp {m_interp:.2} | translated {m_trans:.2} \
-                 MIPS (x{:.2} vs interp, x{:.2} vs legacy)",
+                "{:<44} legacy {m_legacy:.2} | interp {m_interp:.2} | translated {m_trans:.2} | \
+                 batched {m_batch:.2} MIPS (x{:.2} vs interp, x{:.2} vs translated)",
                 format!("  -> {name}"),
                 m_trans / m_interp,
-                m_trans / m_legacy
+                m_batch / m_trans
             );
             rows.push(Row {
                 core: "zero-riscy",
@@ -231,10 +291,14 @@ fn main() -> anyhow::Result<()> {
                 mips_interp: m_interp,
                 mips_full: m_full,
                 mips_translated: m_trans,
+                mips_batched_full: m_bfull,
+                mips_batched_cycles_only: m_batch,
+                batch_size: BATCH.min(xs.len()),
                 blocks: st.blocks,
                 fused: st.fused,
                 static_coverage: st.translated_instructions as f64 / st.instructions.max(1) as f64,
                 fallback_rate: dyn_stats.fallback_instrs as f64 / dyn_instrs.max(1) as f64,
+                divergence_rate: b_stats.fallback_instrs as f64 / b_instrs.max(1) as f64,
             });
         }
     }
@@ -259,23 +323,38 @@ fn main() -> anyhow::Result<()> {
             });
             let m_interp = mips(instrs, r_interp.min_ms);
             let r_full = bench(&format!("{name} translated full x{}", xs.len()), 1, 5, || {
-                let run = harness::run_tpisa(model, &prog, xs).unwrap();
+                let run =
+                    harness::run_tpisa_scalar_traced::<FullProfile>(model, &prog, xs).unwrap();
                 instrs = run.profile.instructions;
             });
             let m_full = mips(instrs, r_full.min_ms);
             let r_trans = bench(&format!("{name} translated cycles-only x{}", xs.len()), 1, 5, || {
-                let run = harness::run_tpisa_traced::<CyclesOnly>(model, &prog, xs).unwrap();
+                let run =
+                    harness::run_tpisa_scalar_traced::<CyclesOnly>(model, &prog, xs).unwrap();
                 instrs = run.profile.instructions;
             });
             let m_trans = mips(instrs, r_trans.min_ms);
+            let r_bfull = bench(&format!("{name} batched full x{}", xs.len()), 1, 5, || {
+                let run =
+                    harness::run_tpisa_batched::<FullProfile>(model, &prog, xs, BATCH).unwrap();
+                instrs = run.profile.instructions;
+            });
+            let m_bfull = mips(instrs, r_bfull.min_ms);
+            let r_batch = bench(&format!("{name} batched cycles-only x{}", xs.len()), 1, 5, || {
+                let run =
+                    harness::run_tpisa_batched::<CyclesOnly>(model, &prog, xs, BATCH).unwrap();
+                instrs = run.profile.instructions;
+            });
+            let m_batch = mips(instrs, r_batch.min_ms);
             let (dyn_stats, dyn_instrs) = translated_stats_tpisa(model, &prog, xs);
+            let (b_stats, b_instrs) = batched_stats_tpisa(model, &prog, xs);
             let st = prog.translate_stats();
             println!(
-                "{:<44} legacy {m_legacy:.2} | interp {m_interp:.2} | translated {m_trans:.2} \
-                 MIPS (x{:.2} vs interp, x{:.2} vs legacy)",
+                "{:<44} legacy {m_legacy:.2} | interp {m_interp:.2} | translated {m_trans:.2} | \
+                 batched {m_batch:.2} MIPS (x{:.2} vs interp, x{:.2} vs translated)",
                 format!("  -> {name}"),
                 m_trans / m_interp,
-                m_trans / m_legacy
+                m_batch / m_trans
             );
             rows.push(Row {
                 core: "tp-isa",
@@ -286,10 +365,14 @@ fn main() -> anyhow::Result<()> {
                 mips_interp: m_interp,
                 mips_full: m_full,
                 mips_translated: m_trans,
+                mips_batched_full: m_bfull,
+                mips_batched_cycles_only: m_batch,
+                batch_size: BATCH.min(xs.len()),
                 blocks: st.blocks,
                 fused: st.fused,
                 static_coverage: st.translated_instructions as f64 / st.instructions.max(1) as f64,
                 fallback_rate: dyn_stats.fallback_instrs as f64 / dyn_instrs.max(1) as f64,
+                divergence_rate: b_stats.fallback_instrs as f64 / b_instrs.max(1) as f64,
             });
         }
     }
@@ -302,9 +385,11 @@ fn main() -> anyhow::Result<()> {
             "    {{\"core\": \"{}\", \"model\": \"{}\", \"variant\": \"{}\", \"samples\": {}, \
              \"mips_legacy\": {:.3}, \"mips_interp_cycles_only\": {:.3}, \
              \"mips_translated_full\": {:.3}, \"mips_translated_cycles_only\": {:.3}, \
+             \"mips_batched_full\": {:.3}, \"mips_batched_cycles_only\": {:.3}, \
              \"speedup_translated_vs_interp\": {:.3}, \"speedup_vs_legacy\": {:.3}, \
+             \"speedup_batched_vs_translated\": {:.3}, \"batch_size\": {}, \
              \"blocks\": {}, \"fused_superinstructions\": {}, \"static_coverage\": {:.4}, \
-             \"fallback_rate\": {:.6}}}{}\n",
+             \"fallback_rate\": {:.6}, \"divergence_rate\": {:.6}}}{}\n",
             r.core,
             r.model,
             r.variant,
@@ -313,12 +398,17 @@ fn main() -> anyhow::Result<()> {
             r.mips_interp,
             r.mips_full,
             r.mips_translated,
+            r.mips_batched_full,
+            r.mips_batched_cycles_only,
             r.mips_translated / r.mips_interp,
             r.mips_translated / r.mips_legacy,
+            r.mips_batched_cycles_only / r.mips_translated,
+            r.batch_size,
             r.blocks,
             r.fused,
             r.static_coverage,
             r.fallback_rate,
+            r.divergence_rate,
             if i + 1 < rows.len() { "," } else { "" }
         ));
     }

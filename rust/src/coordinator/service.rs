@@ -19,6 +19,14 @@
 //! the rust quantised reference and the ISS-executed program.  Each
 //! (model, precision) pair is one pool job; the report lines gather in
 //! pair order, so the output is deterministic at any thread count.
+//!
+//! With [`ServiceConfig::iss`] set, quantised (`p ≤ 16`) batches score
+//! on the batched lockstep ISS (`sim::batch` through `ml::harness`)
+//! instead of PJRT: the dynamic batcher's coalesced batch maps one
+//! sample per lane, so serving traffic exercises the real generated
+//! programs end-to-end.  `crosscheck` pins those scores to the
+//! quantised reference bit-exactly, so the switch is observationally
+//! transparent for quantised variants.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
@@ -41,12 +49,32 @@ pub struct ServiceConfig {
     /// Pool size for `crosscheck`'s bulk-path fan-out (the `--threads`
     /// knob); the PJRT runtime always stays on its one worker thread.
     pub threads: usize,
+    /// Score quantised variants (`p{N}`, N ≤ 16) on the batched
+    /// lockstep ISS (`sim::batch` via `ml::harness`) instead of the
+    /// PJRT runtime — every coalesced batch executes lane-parallel on
+    /// the generated SIMD-MAC program.  Bit-identical to the PJRT path
+    /// for those variants because `crosscheck` pins ISS scores to the
+    /// quantised reference exactly; float (and p > 16) requests still
+    /// go to PJRT.
+    pub iss: bool,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { max_batch: 256, linger_ms: 2, threads: threadpool::default_threads() }
+        ServiceConfig {
+            max_batch: 256,
+            linger_ms: 2,
+            threads: threadpool::default_threads(),
+            iss: false,
+        }
     }
+}
+
+/// The precision a key must score at for the ISS backend to take it
+/// (SIMD-MAC codegen variants exist for p ≤ 16).
+fn iss_precision(key: &Key) -> Option<u32> {
+    let p = key.variant.strip_prefix('p')?.parse::<u32>().ok()?;
+    (p <= 16).then_some(p)
 }
 
 type Scores = Vec<Vec<f64>>;
@@ -314,11 +342,52 @@ fn worker_loop(
             .unwrap_or(1)
     };
     let mut router: Router<StreamReq> = Router::new(cfg.max_batch, cfg.linger_ms);
+    // Worker-local cache of generated ISS programs (one codegen per
+    // (model, precision), Arc-shared prepared image inside).
+    let mut iss_progs: std::collections::BTreeMap<
+        String,
+        std::sync::Arc<crate::ml::codegen_rv32::Rv32Program>,
+    > = std::collections::BTreeMap::new();
 
     let mut run_batch = |runtime: &mut Runtime,
                          key: &Key,
                          xs: &[Vec<f32>]|
      -> Result<Scores, String> {
+        if cfg.iss {
+            if let Some(p) = iss_precision(key) {
+                use crate::ml::codegen_rv32::{self, Rv32Variant};
+                use crate::ml::harness;
+                use crate::sim::trace::CyclesOnly;
+                let model = models
+                    .iter()
+                    .find(|m| m.name == key.model)
+                    .ok_or_else(|| format!("unknown model {:?}", key.model))?;
+                let cache_key = format!("{}/{}", key.model, key.variant);
+                let (prog, fresh) = match iss_progs.get(&cache_key) {
+                    Some(prog) => (std::sync::Arc::clone(prog), false),
+                    None => {
+                        let prog = std::sync::Arc::new(
+                            codegen_rv32::generate(model, Rv32Variant::Simd(p))
+                                .map_err(|e| format!("{e:#}"))?,
+                        );
+                        iss_progs.insert(cache_key, std::sync::Arc::clone(&prog));
+                        (prog, true)
+                    }
+                };
+                let t0 = Instant::now();
+                // One lane per sample on the lockstep engine; the
+                // dynamic batcher's coalesced batch IS the lane batch.
+                let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs)
+                    .map_err(|e| format!("{e:#}"))?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let mut m = shared.lock().unwrap();
+                m.record_batch(xs.len(), ms);
+                if fresh {
+                    m.compiles += 1;
+                }
+                return Ok(run.scores);
+            }
+        }
         let (path, in_dim) = Router::<StreamReq>::resolve(&manifest, key).map_err(|e| e.to_string())?;
         let fresh = runtime.cached_count();
         let exe = runtime

@@ -9,7 +9,9 @@
 //! cache of `sim::translate`), so every sweep row and every pool
 //! worker constructs simulators from the same image — the per-sample
 //! encode/preload cost *and* the block translation are paid exactly
-//! once per (model, variant).
+//! once per (model, variant).  The harness runs each shard as a lane
+//! batch on the same image (`sim::batch`), so a sweep row's samples
+//! share block fetch/decode too.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

@@ -16,7 +16,11 @@
 //! from `bespoke::profile`'s `FullProfile` runs.  Both modes execute on
 //! the block-translated engine (`sim::translate` + `run_translated`
 //! via `ml::harness`), so every sweep row dispatches per basic block
-//! with fused superinstructions instead of per instruction.
+//! with fused superinstructions instead of per instruction — and since
+//! §Perf iteration 5 each shard runs as a lane batch (`sim::batch`), so
+//! a row's samples share one block fetch per dispatch.  The numbers are
+//! unchanged: per-sample cycles are pinned bit-identical to the scalar
+//! engine by `tests/iss_batch_equivalence.rs`.
 
 use anyhow::Result;
 

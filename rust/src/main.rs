@@ -6,13 +6,19 @@
 //! pbsp profile                                  §III-A utilization report
 //! pbsp report <fig1|table1|fig4|fig5|table2|mem|all>
 //! pbsp eval --model <name> [--precision N] [--backend iss|pjrt|both]
-//! pbsp serve [--requests N] [--batch N]         coordinator demo loop
+//! pbsp serve [--requests N] [--batch N] [--iss]  coordinator demo loop
 //! pbsp serve --addr HOST:PORT [--http-threads N] [--duration-s N]
 //!                                               HTTP inference frontend
 //! pbsp loadgen --fleet N [--requests N] [--seed S] [--think-ms T]
 //!              [--addr HOST:PORT] [--out FILE]   device-fleet load test
+//!              [--iss] [--verify]
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
 //! ```
+//!
+//! `--iss` scores quantised (`p ≤ 16`) requests on the batched lockstep
+//! ISS (`sim::batch`) instead of the PJRT runtime; `--verify` (loadgen,
+//! in-process mode) replays every fleet record through direct
+//! `Service::scores` and requires bit-identical scores.
 //!
 //! `report`, `eval`, `serve`, `loadgen` and `crosscheck` all take
 //! `--threads N` (default: `PBSP_THREADS`, else the machine's
@@ -186,9 +192,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let addr = args.opt_str("addr").map(String::from);
     let http_threads = args.opt_parse::<usize>("http-threads")?;
     let duration_s = args.parse_or("duration-s", 0u64)?;
+    let iss = args.flag("iss");
     let threads = args.threads()?;
     args.finish()?;
-    let cfg = ServiceConfig { max_batch: batch, threads, ..ServiceConfig::default() };
+    let cfg = ServiceConfig { max_batch: batch, threads, iss, ..ServiceConfig::default() };
     let Some(addr) = addr else {
         // Legacy in-process demo loop (no network).
         let svc = Service::start(cfg)?;
@@ -235,11 +242,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let addr = args.opt_str("addr").map(String::from);
     let out = args.opt_str("out").map(String::from);
+    let iss = args.flag("iss");
+    let verify = args.flag("verify");
     let threads = args.threads()?;
     args.finish()?;
     let report = match addr {
         // Drive an already-running external frontend.
         Some(a) => {
+            if verify {
+                bail!("--verify needs the in-process frontend (drop --addr)");
+            }
             let target = a
                 .to_socket_addrs()
                 .with_context(|| format!("resolve {a:?}"))?
@@ -252,6 +264,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         None => {
             let svc = Arc::new(Service::start(ServiceConfig {
                 threads,
+                iss,
                 ..ServiceConfig::default()
             })?);
             // fleet + headroom so think-time reconnect churn never
@@ -265,6 +278,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let report = loadgen::run(server.addr(), &cfg)?;
             server.shutdown();
             println!("coordinator: {}", svc.metrics.lock().unwrap().summary());
+            if verify {
+                verify_records(&svc, &report, cfg.precision)?;
+            }
             report
         }
     };
@@ -280,6 +296,47 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if report.errors > 0 {
         bail!("loadgen saw {} errors", report.errors);
     }
+    Ok(())
+}
+
+/// Replay every fleet record through in-process [`Service::scores`] and
+/// require the HTTP-served scores to be bit-identical (the fleet JSON
+/// round-trips f64 exactly, so any drift is a real divergence).  With
+/// `--iss` this pins the whole chain — HTTP frontend → dynamic batcher
+/// → batched lockstep ISS — against a direct in-process run.
+fn verify_records(svc: &Service, report: &loadgen::Report, precision: u32) -> Result<()> {
+    use printed_bespoke::coordinator::router::Key;
+    use printed_bespoke::ml::dataset::Dataset;
+    // Group records per model so each replay is one bulk batch.
+    let mut by_model: Vec<Vec<&loadgen::DeviceRecord>> = vec![Vec::new(); svc.models.len()];
+    for r in &report.records {
+        by_model[r.model].push(r);
+    }
+    let mut checked = 0usize;
+    for (mi, recs) in by_model.iter().enumerate() {
+        if recs.is_empty() {
+            continue;
+        }
+        let model = &svc.models[mi];
+        let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
+        let xs: Vec<Vec<f32>> = recs.iter().map(|r| ds.x[r.sample].clone()).collect();
+        let got = svc.scores(&Key::precision(&model.name, precision), &xs)?;
+        for (r, g) in recs.iter().zip(&got) {
+            if &r.scores != g {
+                bail!(
+                    "verify: device {} seq {} ({} sample {}): served {:?} vs in-process {:?}",
+                    r.device,
+                    r.seq,
+                    model.name,
+                    r.sample,
+                    r.scores,
+                    g
+                );
+            }
+        }
+        checked += recs.len();
+    }
+    println!("verify ok: {checked} records bit-identical to in-process scoring");
     Ok(())
 }
 

@@ -38,8 +38,21 @@
 //! `tests/iss_equivalence.rs` pins that differentially, including on
 //! branch-adversarial fuzz programs.
 //!
+//! Since §Perf iteration 5 the default entry points
+//! ([`run_rv32_traced`] / [`run_tpisa_traced`]) execute each shard as a
+//! *batch of lanes* on the lockstep engine
+//! ([`BatchRv32`](crate::sim::batch::BatchRv32) /
+//! [`BatchTpIsa`](crate::sim::batch::BatchTpIsa)): up to [`BATCH_LANES`]
+//! samples share one prepared image, each translated block is fetched
+//! once and retired lane-parallel, and diverging lanes drain on the
+//! scalar path and rejoin.  The pre-batching per-sample loops survive
+//! verbatim as [`run_rv32_scalar_traced`] / [`run_tpisa_scalar_traced`]
+//! — they are the reference the batched path is differentially pinned
+//! against (`tests/iss_batch_equivalence.rs`: bit-identical scores,
+//! predictions, cycles, instructions and full profiles per sample).
+//!
 //! [`run_rv32_on`] / [`run_tpisa_on`] shard a batch across a thread
-//! pool (each shard reuses its own ISS instance); the sharded results
+//! pool (each shard runs as one lane batch); the sharded results
 //! merge in sample order, so they are interchangeable with the
 //! sequential [`run_rv32`] / [`run_tpisa`].
 
@@ -51,10 +64,16 @@ use super::codegen_rv32::{InputFormat, Rv32Program, INPUT_OFF, SCORES_OFF};
 use super::codegen_tpisa::TpIsaProgram;
 use super::model::Model;
 use super::quant::{pack_vec, quantize};
+use crate::sim::batch::{BatchRv32, BatchTpIsa};
 use crate::sim::tpisa::TpIsa;
 use crate::sim::trace::{FullProfile, Profile, TraceMode};
 use crate::sim::zero_riscy::{Halt, ZeroRiscy};
 use crate::util::threadpool::ThreadPool;
+
+/// Default lane count of the batched lockstep engine: wide enough to
+/// amortize block fetch/decode across samples, narrow enough that the
+/// per-lane RAM images stay cache-resident.
+pub const BATCH_LANES: usize = 64;
 
 /// Result of running a batch through an ISS.
 #[derive(Debug, Clone)]
@@ -107,8 +126,72 @@ pub fn run_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> Result<Ba
     run_rv32_traced::<FullProfile>(model, prog, xs)
 }
 
-/// [`run_rv32`] generic over the tracing mode.
+/// [`run_rv32`] generic over the tracing mode.  Executes on the
+/// batched lockstep engine with the default [`BATCH_LANES`] width.
 pub fn run_rv32_traced<M: TraceMode>(
+    model: &Model,
+    prog: &Rv32Program,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
+    run_rv32_batched::<M>(model, prog, xs, BATCH_LANES)
+}
+
+/// One sample per lane on [`BatchRv32`], chunking `xs` by `lanes`.
+/// Public (with an explicit lane count) so the differential suite can
+/// sweep batch widths; scores, predictions, cycles and profiles are
+/// bit-identical to [`run_rv32_scalar_traced`] per sample.
+pub fn run_rv32_batched<M: TraceMode>(
+    model: &Model,
+    prog: &Rv32Program,
+    xs: &[Vec<f32>],
+    lanes: usize,
+) -> Result<BatchRun> {
+    if xs.is_empty() {
+        return Ok(empty_run());
+    }
+    let lanes = lanes.clamp(1, xs.len());
+    let mut scores = Vec::with_capacity(xs.len());
+    let mut predictions = Vec::with_capacity(xs.len());
+    let mut batch = BatchRv32::new(Arc::clone(&prog.prepared), lanes);
+    for (ci, chunk) in xs.chunks(lanes).enumerate() {
+        if ci > 0 {
+            batch.reset();
+        }
+        for (i, x) in chunk.iter().enumerate() {
+            let input = input_bytes_rv32(model, prog, x)?;
+            batch.lane_mut(i).mem.write_ram(INPUT_OFF as usize, &input)?;
+        }
+        let results = batch.run::<M>(chunk.len(), 50_000_000);
+        // Readout scans lanes in sample order, so the first failing
+        // sample surfaces the same error a scalar sweep would.
+        for (i, res) in results.into_iter().enumerate() {
+            let halt = res.context("ISS run")?;
+            ensure!(halt == Halt::Break, "program did not halt cleanly: {halt:?}");
+            let mut raw = Vec::with_capacity(prog.n_scores);
+            {
+                let bytes = batch.lane(i).mem.read_ram(SCORES_OFF as usize, 4 * prog.n_scores)?;
+                for j in 0..prog.n_scores {
+                    let b = &bytes[4 * j..4 * j + 4];
+                    let acc = i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as i64;
+                    raw.push(acc as f64 / prog.score_scale);
+                }
+            }
+            let s = model.head_scores(&raw);
+            predictions.push(model.predict(&s));
+            scores.push(s);
+        }
+    }
+    let mut profile = Profile::default();
+    batch.fold_profile(&mut profile);
+    let cps = profile.cycles as f64 / xs.len() as f64;
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+}
+
+/// The pre-batching per-sample loop: one reused scalar simulator, one
+/// `run_translated` per sample.  This is the reference semantics the
+/// batched path is pinned against (`tests/iss_batch_equivalence.rs`)
+/// and the per-sample-latency row of the perf bench.
+pub fn run_rv32_scalar_traced<M: TraceMode>(
     model: &Model,
     prog: &Rv32Program,
     xs: &[Vec<f32>],
@@ -165,8 +248,72 @@ pub fn run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> Result<
     run_tpisa_traced::<FullProfile>(model, prog, xs)
 }
 
-/// [`run_tpisa`] generic over the tracing mode.
+/// [`run_tpisa`] generic over the tracing mode.  Executes on the
+/// batched lockstep engine with the default [`BATCH_LANES`] width.
 pub fn run_tpisa_traced<M: TraceMode>(
+    model: &Model,
+    prog: &TpIsaProgram,
+    xs: &[Vec<f32>],
+) -> Result<BatchRun> {
+    run_tpisa_batched::<M>(model, prog, xs, BATCH_LANES)
+}
+
+/// One sample per lane on [`BatchTpIsa`], chunking `xs` by `lanes`;
+/// the TP-ISA twin of [`run_rv32_batched`].
+pub fn run_tpisa_batched<M: TraceMode>(
+    model: &Model,
+    prog: &TpIsaProgram,
+    xs: &[Vec<f32>],
+    lanes: usize,
+) -> Result<BatchRun> {
+    if xs.is_empty() {
+        return Ok(empty_run());
+    }
+    let lanes = lanes.clamp(1, xs.len());
+    let nacc = (32 / prog.datapath).max(1) as usize;
+    let mut scores = Vec::with_capacity(xs.len());
+    let mut predictions = Vec::with_capacity(xs.len());
+    let mut batch = BatchTpIsa::new(Arc::clone(&prog.prepared), lanes);
+    for (ci, chunk) in xs.chunks(lanes).enumerate() {
+        if ci > 0 {
+            // Memcpy-restores the constants the prepared image carries.
+            batch.reset();
+        }
+        for (i, x) in chunk.iter().enumerate() {
+            let words = input_words_tpisa(model, prog, x)?;
+            batch.lane_mut(i).dmem.write_words(prog.input_base, &words)?;
+        }
+        let results = batch.run::<M>(chunk.len(), 500_000_000);
+        for (i, res) in results.into_iter().enumerate() {
+            let halt = res.context("TP-ISA run")?;
+            ensure!(halt == crate::sim::tpisa::Halt::Halted, "did not halt: {halt:?}");
+            // Scores: nacc d-bit chunks per output, little-endian.
+            let mut raw = Vec::with_capacity(prog.n_scores);
+            {
+                let chunks = batch.lane(i).dmem.read_words(prog.score_base, prog.n_scores * nacc)?;
+                for j in 0..prog.n_scores {
+                    let mut acc: u64 = 0;
+                    for (wi, &chunk) in chunks[j * nacc..(j + 1) * nacc].iter().enumerate() {
+                        acc |= chunk << (prog.datapath * wi as u32);
+                    }
+                    let acc = crate::sim::mac_model::sext(acc, 32);
+                    raw.push(acc as f64 / prog.score_scale);
+                }
+            }
+            let s = model.head_scores(&raw);
+            predictions.push(model.predict(&s));
+            scores.push(s);
+        }
+    }
+    let mut profile = Profile::default();
+    batch.fold_profile(&mut profile);
+    let cps = profile.cycles as f64 / xs.len() as f64;
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+}
+
+/// The pre-batching per-sample TP-ISA loop — the scalar reference the
+/// batched path is pinned against.
+pub fn run_tpisa_scalar_traced<M: TraceMode>(
     model: &Model,
     prog: &TpIsaProgram,
     xs: &[Vec<f32>],

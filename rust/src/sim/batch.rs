@@ -1,0 +1,700 @@
+//! Batched lockstep execution of translated blocks (§Perf iteration 5).
+//!
+//! Inference programs have near-static control flow: every sample of a
+//! (model, variant) walks (almost) the same basic-block sequence.  The
+//! paper's SIMD MAC exploits that regularity *across vector elements*;
+//! this module plays the identical card one level up, *across samples*
+//! — structure-of-arrays style: one shared `Prepared*` image, N
+//! register files, N RAM/dmem lanes and N fuel counters, with each
+//! [`TranslatedRv32`](super::translate::TranslatedRv32) /
+//! [`TranslatedTpIsa`](super::translate::TranslatedTpIsa) block fetched
+//! and decoded **once** and its micro-ops retired lane-parallel.
+//!
+//! # Scheduling and divergence
+//!
+//! Each round picks the **lowest PC among running lanes** as the group
+//! leader and executes every lane sitting at that PC (a SIMT-style
+//! reconvergence heuristic: lanes that fell behind at a forward branch
+//! catch up to the join point before the front advances, so the lockstep
+//! group re-forms as soon as control flow reconverges).  Lanes at other
+//! PCs simply wait — their state is untouched, so waiting is free and
+//! exact.  Within a group:
+//!
+//! * if the leader PC is a translated block leader, each member passes
+//!   the *same per-lane fuel check* as the scalar engine; members with
+//!   enough fuel retire the block micro-op-major (one decode, N lanes),
+//!   while fuel-starved members take one scalar fallback step;
+//! * a lane whose micro-op faults retires with that `Err` and is masked
+//!   out of the remaining micro-ops — sibling lanes never observe it;
+//! * if the leader PC is not a block leader (dynamic `jalr` landing
+//!   mid-block, misaligned PC, untranslatable block), every member
+//!   drains one step on the scalar `step_traced` interpreter path.
+//!
+//! Every member makes progress (or retires) each round, so the loop
+//! cannot livelock; divergence and rejoin need no bookkeeping beyond
+//! the per-round regrouping.
+//!
+//! # Bit-identity
+//!
+//! A lane's state evolution is a pure function of its own state — lanes
+//! share only the immutable prepared image — and whenever a lane *is*
+//! scheduled, the decision procedure (leader lookup, fuel check, block
+//! vs fallback) and the retire primitives (`exec_uop`, `apply_block`,
+//! `apply_term`, `step_traced`) are exactly the scalar
+//! `run_translated`'s, in the same order.  So every lane is
+//! bit-identical to a scalar run of the same sample: registers, memory,
+//! halt/error, profile and `ExecStats` (`tests/iss_batch_equivalence.rs`
+//! pins this differentially, including on divergence-adversarial fuzz).
+//!
+//! # Profiles
+//!
+//! Under a [`TraceMode`] with `LANE_PROFILE = true` (FullProfile) block
+//! aggregates go to each lane's own profile — each equals its scalar
+//! run exactly.  With `LANE_PROFILE = false` (CyclesOnly) the
+//! aggregates are booked **once per dispatch** on a batch-shared
+//! profile, scaled by the lockstep member count; lane-variant costs
+//! (taken branches, fallback steps) stay on the lane profiles.  The
+//! counters are additive and commutative, so [`BatchRv32::fold_profile`]
+//! (shared + every lane) equals the scalar totals either way.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::prepared::{PreparedRv32, PreparedTpIsa};
+use super::tpisa::{Halt as HaltTp, TpIsa};
+use super::trace::{Profile, TraceMode};
+use super::translate::{BlockRv32, BlockTpIsa, ExecStats, NO_BLOCK};
+use super::zero_riscy::{Halt as HaltRv32, ZeroRiscy};
+use crate::isa::rv32::Instr as InstrRv32;
+use crate::isa::tpisa::Instr as InstrTp;
+
+/// Book a block's aggregates on the batch-shared profile, scaled by the
+/// lockstep member count (the `LANE_PROFILE = false` path; such modes
+/// never profile per retire, so the histogram/reg-mask/max-PC parts do
+/// not apply here).
+fn apply_block_rv32_shared(p: &mut Profile, b: &BlockRv32, k: u64) {
+    p.cycles += b.base_cycles * k;
+    p.instructions += b.n_instrs as u64 * k;
+    p.loads += b.loads * k;
+    p.stores += b.stores * k;
+    p.mul_ops += b.mul_ops * k;
+    p.mac_ops += b.mac_ops * k;
+    p.branches_taken += b.branches_taken * k;
+    if b.csr_used {
+        p.csr_used = true;
+    }
+}
+
+/// TP-ISA twin of [`apply_block_rv32_shared`] (no `mul_ops`/`csr_used`
+/// — the ISA has neither).
+fn apply_block_tpisa_shared(p: &mut Profile, b: &BlockTpIsa, k: u64) {
+    p.cycles += b.base_cycles * k;
+    p.instructions += b.n_instrs as u64 * k;
+    p.loads += b.loads * k;
+    p.stores += b.stores * k;
+    p.mac_ops += b.mac_ops * k;
+    p.branches_taken += b.branches_taken * k;
+}
+
+/// N Zero-Riscy lanes over one shared prepared image, executed in
+/// lockstep per translated block.
+pub struct BatchRv32 {
+    prepared: Arc<PreparedRv32>,
+    lanes: Vec<ZeroRiscy>,
+    /// Per-lane retired-instruction count for the current run (the
+    /// scalar engine's `executed` fuel cursor, one per lane).
+    executed: Vec<u64>,
+    /// Per-lane outcome; `Some` = retired for the current run.
+    done: Vec<Option<Result<HaltRv32>>>,
+    /// Batch-shared block aggregates (`LANE_PROFILE = false` modes).
+    /// Accumulates across runs, like a simulator profile.
+    shared: Profile,
+    /// Current lockstep group (lane indices), reused across rounds.
+    members: Vec<usize>,
+}
+
+impl BatchRv32 {
+    /// Build `lanes` simulators over one shared prepared image.
+    pub fn new(prepared: Arc<PreparedRv32>, lanes: usize) -> Self {
+        assert!(lanes > 0, "batch needs at least one lane");
+        BatchRv32 {
+            lanes: (0..lanes).map(|_| ZeroRiscy::from_prepared(Arc::clone(&prepared))).collect(),
+            executed: vec![0; lanes],
+            done: (0..lanes).map(|_| None).collect(),
+            shared: Profile::default(),
+            members: Vec::with_capacity(lanes),
+            prepared,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lane `i`'s simulator (sample readout: registers, RAM, profile).
+    pub fn lane(&self, i: usize) -> &ZeroRiscy {
+        &self.lanes[i]
+    }
+
+    /// Lane `i`'s simulator, mutable (per-sample input preload).
+    pub fn lane_mut(&mut self, i: usize) -> &mut ZeroRiscy {
+        &mut self.lanes[i]
+    }
+
+    /// Reset every lane to the initial machine state (profiles keep
+    /// accumulating, exactly like the scalar harness reuse pattern).
+    pub fn reset(&mut self) {
+        for lane in &mut self.lanes {
+            lane.reset();
+        }
+    }
+
+    /// Run lanes `0..active` in lockstep until each halts, faults or
+    /// exhausts its own `fuel`.  Returns per-lane outcomes in lane
+    /// order; lanes `active..` are untouched.
+    pub fn run<M: TraceMode>(&mut self, active: usize, fuel: u64) -> Vec<Result<HaltRv32>> {
+        assert!(active <= self.lanes.len(), "active lanes exceed batch width");
+        let prepared = Arc::clone(&self.prepared);
+        let code: &[InstrRv32] = &prepared.code;
+        let trans = &prepared.translated;
+        let blocks = trans.blocks.as_slice();
+        let leaders: &[u32] = &trans.leaders;
+        for i in 0..active {
+            self.executed[i] = 0;
+            self.done[i] = None;
+        }
+        loop {
+            // Group leader: the lowest PC among running lanes.
+            let mut lead = u32::MAX;
+            let mut any = false;
+            for i in 0..active {
+                if self.done[i].is_none() {
+                    any = true;
+                    lead = lead.min(self.lanes[i].pc);
+                }
+            }
+            if !any {
+                break;
+            }
+            self.members.clear();
+            for i in 0..active {
+                if self.done[i].is_none() && self.lanes[i].pc == lead {
+                    self.members.push(i);
+                }
+            }
+            let mut bid = NO_BLOCK;
+            if lead & 3 == 0 {
+                if let Some(&b) = leaders.get((lead >> 2) as usize) {
+                    bid = b;
+                }
+            }
+            if bid != NO_BLOCK {
+                let b = &blocks[bid as usize];
+                let need = b.n_instrs as u64;
+                // Per-lane fuel check, exactly the scalar dispatch
+                // condition: starved members leave the lockstep group
+                // and take one scalar fallback step instead.
+                let mut w = 0;
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    if fuel - self.executed[i] >= need {
+                        self.members[w] = i;
+                        w += 1;
+                    } else {
+                        self.step_lane::<M>(i, code, fuel);
+                    }
+                }
+                self.members.truncate(w);
+                // Scalar dispatch order: fuel and block counter first,
+                // then micro-ops, then aggregates, then the terminator.
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    self.executed[i] += need;
+                    self.lanes[i].exec_stats.blocks += 1;
+                }
+                // Micro-op-major lockstep: one decode, all lanes.  A
+                // faulting lane retires with its `Err` and is masked
+                // out; siblings never observe it.
+                for u in b.uops.iter() {
+                    let mut w = 0;
+                    for mi in 0..self.members.len() {
+                        let i = self.members[mi];
+                        match self.lanes[i].exec_uop(u) {
+                            Ok(()) => {
+                                self.members[w] = i;
+                                w += 1;
+                            }
+                            Err(e) => self.done[i] = Some(Err(e)),
+                        }
+                    }
+                    self.members.truncate(w);
+                    if self.members.is_empty() {
+                        break;
+                    }
+                }
+                if M::LANE_PROFILE {
+                    for mi in 0..self.members.len() {
+                        let i = self.members[mi];
+                        self.lanes[i].apply_block::<M>(b);
+                    }
+                } else {
+                    apply_block_rv32_shared(&mut self.shared, b, self.members.len() as u64);
+                }
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    if let Some(h) = self.lanes[i].apply_term(b) {
+                        self.done[i] = Some(Ok(h));
+                    }
+                }
+            } else {
+                // Not a block leader (dynamic jalr mid-block target,
+                // misaligned PC, untranslatable block): drain one
+                // scalar interpreter step per member.
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    self.step_lane::<M>(i, code, fuel);
+                }
+            }
+        }
+        (0..active).map(|i| self.done[i].take().expect("lane retired")).collect()
+    }
+
+    /// One scalar fallback step for lane `i` — the scalar engine's
+    /// fallback tail, verbatim: fuel check, fallback counter, one
+    /// `step_traced`.
+    fn step_lane<M: TraceMode>(&mut self, i: usize, code: &[InstrRv32], fuel: u64) {
+        if self.executed[i] >= fuel {
+            self.done[i] = Some(Ok(HaltRv32::Fuel));
+            return;
+        }
+        self.executed[i] += 1;
+        self.lanes[i].exec_stats.fallback_instrs += 1;
+        match self.lanes[i].step_traced::<M>(code) {
+            Ok(None) => {}
+            Ok(Some(h)) => self.done[i] = Some(Ok(h)),
+            Err(e) => self.done[i] = Some(Err(e)),
+        }
+    }
+
+    /// Merge the batch-shared profile and every lane profile into
+    /// `into` — the batch total, equal to the scalar per-sample totals
+    /// (the aggregates are additive and commutative).
+    pub fn fold_profile(&self, into: &mut Profile) {
+        into.merge(&self.shared);
+        for lane in &self.lanes {
+            into.merge(&lane.profile);
+        }
+    }
+
+    /// Summed translated-engine counters across lanes; the fallback
+    /// share of retired instructions is the batch's divergence rate.
+    pub fn exec_stats(&self) -> ExecStats {
+        let mut s = ExecStats::default();
+        for lane in &self.lanes {
+            s.blocks += lane.exec_stats.blocks;
+            s.fallback_instrs += lane.exec_stats.fallback_instrs;
+        }
+        s
+    }
+}
+
+/// N TP-ISA lanes over one shared prepared image, executed in lockstep
+/// per translated block.  Mirrors [`BatchRv32`]; see the module docs.
+pub struct BatchTpIsa {
+    prepared: Arc<PreparedTpIsa>,
+    lanes: Vec<TpIsa>,
+    executed: Vec<u64>,
+    done: Vec<Option<Result<HaltTp>>>,
+    shared: Profile,
+    members: Vec<usize>,
+}
+
+impl BatchTpIsa {
+    /// Build `lanes` simulators over one shared prepared image.
+    pub fn new(prepared: Arc<PreparedTpIsa>, lanes: usize) -> Self {
+        assert!(lanes > 0, "batch needs at least one lane");
+        BatchTpIsa {
+            lanes: (0..lanes).map(|_| TpIsa::from_prepared(Arc::clone(&prepared))).collect(),
+            executed: vec![0; lanes],
+            done: (0..lanes).map(|_| None).collect(),
+            shared: Profile::default(),
+            members: Vec::with_capacity(lanes),
+            prepared,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lane `i`'s simulator (sample readout).
+    pub fn lane(&self, i: usize) -> &TpIsa {
+        &self.lanes[i]
+    }
+
+    /// Lane `i`'s simulator, mutable (per-sample input preload).
+    pub fn lane_mut(&mut self, i: usize) -> &mut TpIsa {
+        &mut self.lanes[i]
+    }
+
+    /// Reset every lane (dmem memcpy-restored from the prepared image;
+    /// profiles keep accumulating).
+    pub fn reset(&mut self) {
+        for lane in &mut self.lanes {
+            lane.reset();
+        }
+    }
+
+    /// Run lanes `0..active` in lockstep until each halts, faults or
+    /// exhausts its own `fuel`.  Returns per-lane outcomes in lane
+    /// order; lanes `active..` are untouched.
+    pub fn run<M: TraceMode>(&mut self, active: usize, fuel: u64) -> Vec<Result<HaltTp>> {
+        assert!(active <= self.lanes.len(), "active lanes exceed batch width");
+        let prepared = Arc::clone(&self.prepared);
+        let code: &[InstrTp] = &prepared.code;
+        let trans = &prepared.translated;
+        let blocks = trans.blocks.as_slice();
+        let leaders: &[u32] = &trans.leaders;
+        let mask = if prepared.width == 64 { u64::MAX } else { (1u64 << prepared.width) - 1 };
+        let msb = 1u64 << (prepared.width - 1);
+        for i in 0..active {
+            self.executed[i] = 0;
+            self.done[i] = None;
+        }
+        loop {
+            let mut lead = i64::MAX;
+            let mut any = false;
+            for i in 0..active {
+                if self.done[i].is_none() {
+                    any = true;
+                    lead = lead.min(self.lanes[i].pc);
+                }
+            }
+            if !any {
+                break;
+            }
+            self.members.clear();
+            for i in 0..active {
+                if self.done[i].is_none() && self.lanes[i].pc == lead {
+                    self.members.push(i);
+                }
+            }
+            let mut bid = NO_BLOCK;
+            if let Ok(idx) = usize::try_from(lead) {
+                if let Some(&b) = leaders.get(idx) {
+                    bid = b;
+                }
+            }
+            if bid != NO_BLOCK {
+                let b = &blocks[bid as usize];
+                let need = b.n_instrs as u64;
+                let mut w = 0;
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    if fuel - self.executed[i] >= need {
+                        self.members[w] = i;
+                        w += 1;
+                    } else {
+                        self.step_lane::<M>(i, code, mask, msb, fuel);
+                    }
+                }
+                self.members.truncate(w);
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    self.executed[i] += need;
+                    self.lanes[i].exec_stats.blocks += 1;
+                }
+                for u in b.uops.iter() {
+                    let mut w = 0;
+                    for mi in 0..self.members.len() {
+                        let i = self.members[mi];
+                        match self.lanes[i].exec_uop(u, mask, msb) {
+                            Ok(()) => {
+                                self.members[w] = i;
+                                w += 1;
+                            }
+                            Err(e) => self.done[i] = Some(Err(e)),
+                        }
+                    }
+                    self.members.truncate(w);
+                    if self.members.is_empty() {
+                        break;
+                    }
+                }
+                if M::LANE_PROFILE {
+                    for mi in 0..self.members.len() {
+                        let i = self.members[mi];
+                        self.lanes[i].apply_block::<M>(b);
+                    }
+                } else {
+                    apply_block_tpisa_shared(&mut self.shared, b, self.members.len() as u64);
+                }
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    if let Some(h) = self.lanes[i].apply_term(b) {
+                        self.done[i] = Some(Ok(h));
+                    }
+                }
+            } else {
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    self.step_lane::<M>(i, code, mask, msb, fuel);
+                }
+            }
+        }
+        (0..active).map(|i| self.done[i].take().expect("lane retired")).collect()
+    }
+
+    /// One scalar fallback step for lane `i` — the scalar engine's
+    /// fallback tail, verbatim.
+    fn step_lane<M: TraceMode>(
+        &mut self,
+        i: usize,
+        code: &[InstrTp],
+        mask: u64,
+        msb: u64,
+        fuel: u64,
+    ) {
+        if self.executed[i] >= fuel {
+            self.done[i] = Some(Ok(HaltTp::Fuel));
+            return;
+        }
+        self.executed[i] += 1;
+        self.lanes[i].exec_stats.fallback_instrs += 1;
+        match self.lanes[i].step_traced::<M>(code, mask, msb) {
+            Ok(None) => {}
+            Ok(Some(h)) => self.done[i] = Some(Ok(h)),
+            Err(e) => self.done[i] = Some(Err(e)),
+        }
+    }
+
+    /// Merge the batch-shared profile and every lane profile into
+    /// `into` — the batch total, equal to the scalar per-sample totals.
+    pub fn fold_profile(&self, into: &mut Profile) {
+        into.merge(&self.shared);
+        for lane in &self.lanes {
+            into.merge(&lane.profile);
+        }
+    }
+
+    /// Summed translated-engine counters across lanes.
+    pub fn exec_stats(&self) -> ExecStats {
+        let mut s = ExecStats::default();
+        for lane in &self.lanes {
+            s.blocks += lane.exec_stats.blocks;
+            s.fallback_instrs += lane.exec_stats.fallback_instrs;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::rv32_asm::assemble;
+    use crate::sim::mem::RAM_BASE;
+    use crate::sim::trace::{CyclesOnly, FullProfile};
+
+    /// A data-dependent countdown: RAM[0] holds n, the loop trip count,
+    /// so every lane diverges at a different iteration.
+    fn countdown_rv32() -> Arc<PreparedRv32> {
+        let text = format!(
+            r#"
+                li   s0, {RAM_BASE}
+                lw   t0, 0(s0)
+                li   t1, 0
+            loop:
+                beqz t0, done
+                add  t1, t1, t0
+                addi t0, t0, -1
+                j    loop
+            done:
+                sw   t1, 4(s0)
+                ebreak
+            "#
+        );
+        let prog = assemble(&text).unwrap();
+        Arc::new(PreparedRv32::new(&prog, &[], 64, None))
+    }
+
+    fn scalar_rv32(prepared: &Arc<PreparedRv32>, n: u32, fuel: u64) -> (ZeroRiscy, Result<HaltRv32>) {
+        let mut sim = ZeroRiscy::from_prepared(Arc::clone(prepared));
+        sim.mem.store_u32(RAM_BASE, n).unwrap();
+        let r = sim.run_translated::<FullProfile>(fuel);
+        (sim, r)
+    }
+
+    #[test]
+    fn rv32_divergent_lanes_match_scalar_runs() {
+        let prepared = countdown_rv32();
+        let inputs = [0u32, 3, 10, 1, 7];
+        let mut batch = BatchRv32::new(Arc::clone(&prepared), inputs.len());
+        for (i, &n) in inputs.iter().enumerate() {
+            batch.lane_mut(i).mem.store_u32(RAM_BASE, n).unwrap();
+        }
+        let results = batch.run::<FullProfile>(inputs.len(), 10_000);
+        for (i, (r, &n)) in results.into_iter().zip(&inputs).enumerate() {
+            assert_eq!(r.unwrap(), HaltRv32::Break, "lane {i}");
+            let (sref, rref) = scalar_rv32(&prepared, n, 10_000);
+            assert_eq!(rref.unwrap(), HaltRv32::Break);
+            assert_eq!(batch.lane(i).regs, sref.regs, "lane {i}: regs");
+            assert_eq!(batch.lane(i).pc, sref.pc, "lane {i}: pc");
+            assert_eq!(batch.lane(i).mem.ram, sref.mem.ram, "lane {i}: ram");
+            assert_eq!(batch.lane(i).profile.cycles, sref.profile.cycles, "lane {i}: cycles");
+            assert_eq!(
+                batch.lane(i).profile.instr_counts(),
+                sref.profile.instr_counts(),
+                "lane {i}: histogram"
+            );
+            assert_eq!(batch.lane(i).exec_stats.blocks, sref.exec_stats.blocks, "lane {i}");
+            assert_eq!(
+                batch.lane(i).exec_stats.fallback_instrs,
+                sref.exec_stats.fallback_instrs,
+                "lane {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn rv32_per_lane_fuel_and_folded_cycles_only_profile() {
+        let prepared = countdown_rv32();
+        let inputs = [1u32, 200, 2, 150];
+        // Small fuel: the long lanes burn out mid-loop, short ones halt.
+        let fuel = 60;
+        let mut batch = BatchRv32::new(Arc::clone(&prepared), inputs.len());
+        for (i, &n) in inputs.iter().enumerate() {
+            batch.lane_mut(i).mem.store_u32(RAM_BASE, n).unwrap();
+        }
+        let results = batch.run::<CyclesOnly>(inputs.len(), fuel);
+        let mut want = Profile::default();
+        for (i, (r, &n)) in results.into_iter().zip(&inputs).enumerate() {
+            let mut sref = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+            sref.mem.store_u32(RAM_BASE, n).unwrap();
+            let halt = sref.run_translated::<CyclesOnly>(fuel).unwrap();
+            assert_eq!(r.unwrap(), halt, "lane {i}: halt kind");
+            assert_eq!(batch.lane(i).regs, sref.regs, "lane {i}: regs");
+            assert_eq!(batch.lane(i).mem.ram, sref.mem.ram, "lane {i}: ram");
+            want.merge(&sref.profile);
+        }
+        let mut got = Profile::default();
+        batch.fold_profile(&mut got);
+        assert_eq!(got.cycles, want.cycles);
+        assert_eq!(got.instructions, want.instructions);
+        assert_eq!(got.loads, want.loads);
+        assert_eq!(got.stores, want.stores);
+        assert_eq!(got.branches_taken, want.branches_taken);
+        assert!(got.instr_counts().is_empty());
+    }
+
+    #[test]
+    fn rv32_poisoned_lane_does_not_perturb_siblings() {
+        // MAC on a MAC-less core: every lane faults identically, but
+        // the point is that a faulting lane's siblings still match
+        // their scalar runs.  Mix in a lane that never reaches the MAC.
+        let text = format!(
+            r#"
+                li   s0, {RAM_BASE}
+                lw   t0, 0(s0)
+                beqz t0, done
+                mac  t0, t0
+            done:
+                ebreak
+            "#
+        );
+        let prog = assemble(&text).unwrap();
+        let prepared = Arc::new(PreparedRv32::new(&prog, &[], 64, None));
+        let inputs = [0u32, 1, 0];
+        let mut batch = BatchRv32::new(Arc::clone(&prepared), inputs.len());
+        for (i, &n) in inputs.iter().enumerate() {
+            batch.lane_mut(i).mem.store_u32(RAM_BASE, n).unwrap();
+        }
+        let results = batch.run::<FullProfile>(inputs.len(), 1000);
+        for (i, (r, &n)) in results.into_iter().zip(&inputs).enumerate() {
+            let (sref, rref) = scalar_rv32(&prepared, n, 1000);
+            match (r, rref) {
+                (Ok(h), Ok(hr)) => {
+                    assert_eq!(h, hr, "lane {i}: halt kind");
+                    assert_eq!(batch.lane(i).regs, sref.regs, "lane {i}: regs");
+                    assert_eq!(batch.lane(i).mem.ram, sref.mem.ram, "lane {i}: ram");
+                }
+                (Err(e), Err(er)) => {
+                    assert_eq!(e.to_string(), er.to_string(), "lane {i}: error");
+                }
+                (r, rr) => panic!("lane {i}: divergent outcome {r:?} vs {rr:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn tpisa_divergent_lanes_match_scalar_runs() {
+        use crate::isa::tpisa::{Asm, Instr};
+        // dmem[0] holds n; sum a countdown into r1 (n = 0 wraps through
+        // the full 8-bit range, so lanes diverge by hundreds of steps).
+        let mut a = Asm::new();
+        a.ldi(2, 0);
+        a.push(Instr::Ld { r1: 0, r2: 2, imm: 0 });
+        a.ldi(1, 0);
+        a.label("loop");
+        a.push(Instr::Add { r1: 1, r2: 0 });
+        a.push(Instr::Addi { r1: 0, imm: -1 });
+        a.bnz("loop");
+        a.push(Instr::St { r1: 1, r2: 2, imm: 1 });
+        a.push(Instr::Halt);
+        let prog = a.finish().unwrap();
+        let prepared = Arc::new(PreparedTpIsa::with_zero_dmem(8, &prog, 8, None));
+        let inputs = [3u64, 0, 10, 1];
+        let mut batch = BatchTpIsa::new(Arc::clone(&prepared), inputs.len());
+        for (i, &n) in inputs.iter().enumerate() {
+            batch.lane_mut(i).dmem.store(0, n).unwrap();
+        }
+        let results = batch.run::<FullProfile>(inputs.len(), 100_000);
+        for (i, (r, &n)) in results.into_iter().zip(&inputs).enumerate() {
+            assert_eq!(r.unwrap(), HaltTp::Halted, "lane {i}");
+            let mut sref = TpIsa::from_prepared(Arc::clone(&prepared));
+            sref.dmem.store(0, n).unwrap();
+            assert_eq!(sref.run_translated::<FullProfile>(100_000).unwrap(), HaltTp::Halted);
+            assert_eq!(batch.lane(i).regs, sref.regs, "lane {i}: regs");
+            assert_eq!(batch.lane(i).pc, sref.pc, "lane {i}: pc");
+            assert_eq!(batch.lane(i).carry, sref.carry, "lane {i}: carry");
+            assert_eq!(batch.lane(i).zero, sref.zero, "lane {i}: zero");
+            let words = sref.dmem.len();
+            assert_eq!(
+                batch.lane(i).dmem.read_words(0, words).unwrap(),
+                sref.dmem.read_words(0, words).unwrap(),
+                "lane {i}: dmem"
+            );
+            assert_eq!(batch.lane(i).profile.cycles, sref.profile.cycles, "lane {i}: cycles");
+            assert_eq!(batch.lane(i).exec_stats.blocks, sref.exec_stats.blocks, "lane {i}");
+            assert_eq!(
+                batch.lane(i).exec_stats.fallback_instrs,
+                sref.exec_stats.fallback_instrs,
+                "lane {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn reset_reuses_lanes_like_the_scalar_harness() {
+        let prepared = countdown_rv32();
+        let mut batch = BatchRv32::new(Arc::clone(&prepared), 2);
+        for (i, n) in [4u32, 6].into_iter().enumerate() {
+            batch.lane_mut(i).mem.store_u32(RAM_BASE, n).unwrap();
+        }
+        for r in batch.run::<FullProfile>(2, 10_000) {
+            assert_eq!(r.unwrap(), HaltRv32::Break);
+        }
+        let cycles_once: u64 = batch.lane(0).profile.cycles + batch.lane(1).profile.cycles;
+        batch.reset();
+        assert_eq!(batch.lane(0).mem.load_u32(RAM_BASE).unwrap(), 0);
+        for (i, n) in [4u32, 6].into_iter().enumerate() {
+            batch.lane_mut(i).mem.store_u32(RAM_BASE, n).unwrap();
+        }
+        for r in batch.run::<FullProfile>(2, 10_000) {
+            assert_eq!(r.unwrap(), HaltRv32::Break);
+        }
+        let mut folded = Profile::default();
+        batch.fold_profile(&mut folded);
+        assert_eq!(folded.cycles, 2 * cycles_once);
+    }
+}

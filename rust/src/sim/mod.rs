@@ -19,13 +19,20 @@
 //!   ([`FullProfile`] / [`CyclesOnly`]) the run loops are generic over.
 //! * [`zero_riscy`] — RV32IM 2-stage pipeline timing model.
 //! * [`tpisa`] — the minimal width-configurable printed core.
+//! * [`batch`] — batched lockstep execution ([`BatchRv32`],
+//!   [`BatchTpIsa`]): N lanes over one shared prepared image, each
+//!   translated block fetched once and retired lane-parallel, with
+//!   divergent lanes drained on the scalar path and rejoined.
 //!
 //! Both cores expose two run loops over the same prepared image: the
 //! per-instruction `run_traced` (the reference interpreter) and the
 //! block-dispatching `run_translated` (the production hot path) —
 //! bit-identical in scores, cycles and profiles, pinned by
-//! `tests/iss_equivalence.rs`.
+//! `tests/iss_equivalence.rs`.  The batched engine is a third,
+//! lane-parallel consumer of the same primitives, pinned against the
+//! scalar engines by `tests/iss_batch_equivalence.rs`.
 
+pub mod batch;
 pub mod mac_model;
 pub mod mem;
 pub mod prepared;
@@ -34,6 +41,7 @@ pub mod trace;
 pub mod translate;
 pub mod zero_riscy;
 
+pub use batch::{BatchRv32, BatchTpIsa};
 pub use prepared::{PreparedRv32, PreparedTpIsa};
 pub use trace::{CyclesOnly, FullProfile, TraceMode};
 pub use translate::ExecStats;

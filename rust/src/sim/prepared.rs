@@ -15,6 +15,11 @@
 //! The images live inside the codegen outputs (`ml::codegen_rv32::Rv32Program`,
 //! `ml::codegen_tpisa::TpIsaProgram`), which the `dse::context`
 //! program cache already Arc-shares across sweep rows and threads.
+//!
+//! The batched lockstep engine (`sim::batch`) leans on the same
+//! sharing structure-of-arrays-wide: one prepared image, N lanes — the
+//! image (and its translated block cache) is fetched once per block
+//! dispatch while only the per-lane RAM/dmem/register state replicates.
 
 use std::collections::BTreeSet;
 use std::sync::Arc;

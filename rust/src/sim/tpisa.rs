@@ -26,6 +26,13 @@
 //! step for untranslatable blocks, out-of-range PCs and fuel tails —
 //! bit-identical in scores, cycles and profiles
 //! (`tests/iss_equivalence.rs`).
+//!
+//! §Perf iteration 5 layers the batched lockstep engine
+//! (`sim::batch::BatchTpIsa`) on the same building blocks: N lanes over
+//! one shared image, each retiring the crate-visible
+//! `exec_uop`/`apply_block`/`apply_term`/`step_traced` primitives in
+//! exactly the scalar order — bit-identical per lane to a scalar
+//! [`TpIsa::run_translated`] run (`tests/iss_batch_equivalence.rs`).
 
 use std::sync::Arc;
 
@@ -35,7 +42,7 @@ use super::mac_model::MacState;
 use super::mem::WordMem;
 use super::prepared::PreparedTpIsa;
 use super::trace::{FullProfile, Profile, TraceMode};
-use super::translate::{CondTp, ExecStats, TermTpIsa, UopTpIsa, NO_BLOCK};
+use super::translate::{BlockTpIsa, CondTp, ExecStats, TermTpIsa, UopTpIsa, NO_BLOCK};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::tpisa::Instr;
 use crate::isa::MacOp;
@@ -140,7 +147,7 @@ impl TpIsa {
         self.prepared.code.len() * 2
     }
 
-    fn mask(&self) -> u64 {
+    pub(crate) fn mask(&self) -> u64 {
         if self.width == 64 {
             u64::MAX
         } else {
@@ -198,9 +205,10 @@ impl TpIsa {
 
     /// Fetch, profile, execute and retire exactly one instruction — the
     /// body of [`TpIsa::run_traced`], shared with the translated
-    /// engine's fallback path.  Returns `Some` on halt.
+    /// engine's fallback path and the batched engine's masked-lane
+    /// drain (`sim::batch`).  Returns `Some` on halt.
     #[inline(always)]
-    fn step_traced<M: TraceMode>(
+    pub(crate) fn step_traced<M: TraceMode>(
         &mut self,
         code: &[Instr],
         mask: u64,
@@ -461,42 +469,9 @@ impl TpIsa {
                     for u in b.uops.iter() {
                         self.exec_uop(u, mask, msb)?;
                     }
-                    {
-                        let p = &mut self.profile;
-                        p.cycles += b.base_cycles;
-                        p.instructions += b.n_instrs as u64;
-                        p.loads += b.loads;
-                        p.stores += b.stores;
-                        p.mac_ops += b.mac_ops;
-                        p.branches_taken += b.branches_taken;
-                        if M::PROFILE {
-                            p.regs_used |= b.reg_mask;
-                            p.max_pc = p.max_pc.max(b.last_pc as u32 * 2);
-                            p.record_block(&b.counts);
-                        }
-                    }
-                    match b.term {
-                        TermTpIsa::FallThrough => self.pc = b.next_pc,
-                        TermTpIsa::Jmp { target } => self.pc = target,
-                        TermTpIsa::Branch { cond, target } => {
-                            let taken = match cond {
-                                CondTp::Z => self.zero,
-                                CondTp::Nz => !self.zero,
-                                CondTp::C => self.carry,
-                                CondTp::Nc => !self.carry,
-                            };
-                            if taken {
-                                self.profile.cycles += 1;
-                                self.profile.branches_taken += 1;
-                                self.pc = target;
-                            } else {
-                                self.pc = b.next_pc;
-                            }
-                        }
-                        TermTpIsa::Halt => {
-                            self.pc = b.last_pc;
-                            return Ok(Halt::Halted);
-                        }
+                    self.apply_block::<M>(b);
+                    if let Some(h) = self.apply_term(b) {
+                        return Ok(h);
                     }
                     continue;
                 }
@@ -512,6 +487,57 @@ impl TpIsa {
                 return Ok(h);
             }
         }
+    }
+
+    /// Book a translated block's aggregate counters on this simulator's
+    /// profile (see the RV32 twin `ZeroRiscy::apply_block`; the TP-ISA
+    /// aggregates carry no `mul_ops`/`csr_used` — the ISA has neither).
+    #[inline(always)]
+    pub(crate) fn apply_block<M: TraceMode>(&mut self, b: &BlockTpIsa) {
+        let p = &mut self.profile;
+        p.cycles += b.base_cycles;
+        p.instructions += b.n_instrs as u64;
+        p.loads += b.loads;
+        p.stores += b.stores;
+        p.mac_ops += b.mac_ops;
+        p.branches_taken += b.branches_taken;
+        if M::PROFILE {
+            p.regs_used |= b.reg_mask;
+            p.max_pc = p.max_pc.max(b.last_pc as u32 * 2);
+            p.record_block(&b.counts);
+        }
+    }
+
+    /// Execute a translated block's terminator: resolve the next PC
+    /// (taken-branch costs go to this simulator's own profile) and
+    /// report a halt if the block ends the program.  Shared by
+    /// [`TpIsa::run_translated`] and the batched lockstep engine.
+    #[inline(always)]
+    pub(crate) fn apply_term(&mut self, b: &BlockTpIsa) -> Option<Halt> {
+        match b.term {
+            TermTpIsa::FallThrough => self.pc = b.next_pc,
+            TermTpIsa::Jmp { target } => self.pc = target,
+            TermTpIsa::Branch { cond, target } => {
+                let taken = match cond {
+                    CondTp::Z => self.zero,
+                    CondTp::Nz => !self.zero,
+                    CondTp::C => self.carry,
+                    CondTp::Nc => !self.carry,
+                };
+                if taken {
+                    self.profile.cycles += 1;
+                    self.profile.branches_taken += 1;
+                    self.pc = target;
+                } else {
+                    self.pc = b.next_pc;
+                }
+            }
+            TermTpIsa::Halt => {
+                self.pc = b.last_pc;
+                return Some(Halt::Halted);
+            }
+        }
+        None
     }
 
     /// Execute one register-only data instruction (flag-exact, no
@@ -676,9 +702,11 @@ impl TpIsa {
 
     /// Execute one translated micro-op.  Performs the same
     /// architectural steps in the same order as the interpreter, so
-    /// flags, aliasing and fault ordering are preserved.
+    /// flags, aliasing and fault ordering are preserved.  `pub(crate)`
+    /// so the batched lockstep engine can retire one micro-op across
+    /// many lanes.
     #[inline(always)]
-    fn exec_uop(&mut self, u: &UopTpIsa, mask: u64, msb: u64) -> Result<()> {
+    pub(crate) fn exec_uop(&mut self, u: &UopTpIsa, mask: u64, msb: u64) -> Result<()> {
         match u {
             UopTpIsa::Data(i) => self.exec_data(i, mask, msb),
             UopTpIsa::Data2(a, b) => {

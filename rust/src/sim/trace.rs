@@ -29,6 +29,17 @@ pub trait TraceMode {
     /// Whether per-retire profiling (instruction histogram, register
     /// bitmask, max-PC) is compiled into the run loop.
     const PROFILE: bool;
+    /// Where the batched lockstep engine (`sim::batch`) books a
+    /// translated block's aggregate counters: `true` applies them to
+    /// each lane's own profile (so every lane profile equals its scalar
+    /// run exactly), `false` applies them **once per block dispatch**,
+    /// scaled by the lockstep lane count, to a batch-shared profile —
+    /// the aggregates are additive and commutative, so the folded total
+    /// (shared + per-lane) is identical either way, but the shared path
+    /// touches one profile instead of N in the hot loop.  Lane-variant
+    /// costs (taken-branch extras, fallback steps) always stay on the
+    /// lane profile.
+    const LANE_PROFILE: bool;
 }
 
 /// Full utilization tracing — reproduces the pre-rework [`Profile`]
@@ -37,6 +48,7 @@ pub struct FullProfile;
 
 impl TraceMode for FullProfile {
     const PROFILE: bool = true;
+    const LANE_PROFILE: bool = true;
 }
 
 /// Scores-and-cycles tracing: the retire path skips the histogram,
@@ -47,6 +59,7 @@ pub struct CyclesOnly;
 
 impl TraceMode for CyclesOnly {
     const PROFILE: bool = false;
+    const LANE_PROFILE: bool = false;
 }
 
 /// Accumulated profile of one or more program executions.

@@ -60,7 +60,12 @@
 //! `sim::zero_riscy` / `sim::tpisa`) restate each instruction's data
 //! semantics without the per-retire bookkeeping.  Any semantic change
 //! to an interpreter arm MUST be mirrored there — the differential
-//! fuzz in `tests/iss_equivalence.rs` is the tripwire.
+//! fuzz in `tests/iss_equivalence.rs` is the tripwire.  The batched
+//! lockstep engine (`sim::batch`) is a third consumer of the same
+//! blocks — it dispatches one block across N lanes via the shared
+//! `exec_uop`/`apply_block`/`apply_term` primitives, so it inherits any
+//! fix to them automatically; `tests/iss_batch_equivalence.rs` is its
+//! tripwire.
 //!
 //! The translated image lives inside [`super::prepared::PreparedRv32`]
 //! / [`super::prepared::PreparedTpIsa`], so it is built once per

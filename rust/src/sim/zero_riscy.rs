@@ -28,6 +28,14 @@
 //! entries (dynamic `jalr`, misaligned PCs), untranslatable blocks and
 //! fuel tails.  Bit-identical to the interpreter in scores, cycles and
 //! profiles (`tests/iss_equivalence.rs`).
+//!
+//! §Perf iteration 5 layers the batched lockstep engine
+//! (`sim::batch::BatchRv32`) on the same building blocks: N lanes over
+//! one shared image, each retiring the crate-visible
+//! `exec_uop`/`apply_block`/`apply_term`/`step_traced` primitives below
+//! in exactly the scalar order — so every lane is bit-identical to a
+//! scalar [`ZeroRiscy::run_translated`] run
+//! (`tests/iss_batch_equivalence.rs`).
 
 use std::sync::Arc;
 
@@ -37,7 +45,7 @@ use super::mac_model::MacState;
 use super::mem::{Mem, RAM_BASE};
 use super::prepared::PreparedRv32;
 use super::trace::{FullProfile, Profile, TraceMode};
-use super::translate::{ExecStats, LoadRv32, SimpleRv32, TermRv32, UopRv32, NO_BLOCK};
+use super::translate::{BlockRv32, ExecStats, LoadRv32, SimpleRv32, TermRv32, UopRv32, NO_BLOCK};
 use crate::hw::mac_unit::MacConfig;
 use crate::isa::rv32::*;
 use crate::isa::MacOp;
@@ -186,9 +194,10 @@ impl ZeroRiscy {
 
     /// Fetch, profile, execute and retire exactly one instruction — the
     /// body of [`ZeroRiscy::run_traced`], shared with the translated
-    /// engine's fallback path.  Returns `Some` on halt.
+    /// engine's fallback path and the batched engine's masked-lane
+    /// drain (`sim::batch`).  Returns `Some` on halt.
     #[inline(always)]
-    fn step_traced<M: TraceMode>(&mut self, code: &[Instr]) -> Result<Option<Halt>> {
+    pub(crate) fn step_traced<M: TraceMode>(&mut self, code: &[Instr]) -> Result<Option<Halt>> {
         {
             let idx = (self.pc / 4) as usize;
             let instr = match code.get(idx) {
@@ -367,66 +376,9 @@ impl ZeroRiscy {
                     for u in b.uops.iter() {
                         self.exec_uop(u)?;
                     }
-                    {
-                        let p = &mut self.profile;
-                        p.cycles += b.base_cycles;
-                        p.instructions += b.n_instrs as u64;
-                        p.loads += b.loads;
-                        p.stores += b.stores;
-                        p.mul_ops += b.mul_ops;
-                        p.mac_ops += b.mac_ops;
-                        p.branches_taken += b.branches_taken;
-                        if b.csr_used {
-                            p.csr_used = true;
-                        }
-                        if M::PROFILE {
-                            p.regs_used |= b.reg_mask;
-                            p.max_pc = p.max_pc.max(b.last_pc);
-                            p.record_block(&b.counts);
-                        }
-                    }
-                    match b.term {
-                        TermRv32::FallThrough => self.pc = b.next_pc,
-                        TermRv32::Jal { rd, target, link } => {
-                            if rd != 0 {
-                                self.regs[rd as usize] = link;
-                            }
-                            self.pc = target;
-                        }
-                        TermRv32::Jalr { rd, rs1, offset, link } => {
-                            let t = self.regs[rs1 as usize].wrapping_add(offset as u32) & !1;
-                            if rd != 0 {
-                                self.regs[rd as usize] = link;
-                            }
-                            self.pc = t;
-                        }
-                        TermRv32::Branch { op, rs1, rs2, target } => {
-                            let (a, v) = (self.regs[rs1 as usize], self.regs[rs2 as usize]);
-                            let taken = match op {
-                                BranchOp::Beq => a == v,
-                                BranchOp::Bne => a != v,
-                                BranchOp::Blt => (a as i32) < (v as i32),
-                                BranchOp::Bge => (a as i32) >= (v as i32),
-                                BranchOp::Bltu => a < v,
-                                BranchOp::Bgeu => a >= v,
-                            };
-                            if taken {
-                                self.profile.cycles += 2;
-                                self.profile.branches_taken += 1;
-                                self.pc = target;
-                            } else {
-                                self.pc = b.next_pc;
-                            }
-                        }
-                        TermRv32::Ebreak => {
-                            self.pc = b.last_pc;
-                            return Ok(Halt::Break);
-                        }
-                        TermRv32::Ecall => {
-                            self.pc = b.last_pc;
-                            self.profile.syscalls_used = true;
-                            return Ok(Halt::Ecall);
-                        }
+                    self.apply_block::<M>(b);
+                    if let Some(h) = self.apply_term(b) {
+                        return Ok(h);
                     }
                     continue;
                 }
@@ -442,6 +394,90 @@ impl ZeroRiscy {
                 return Ok(h);
             }
         }
+    }
+
+    /// Book a translated block's aggregate counters on this simulator's
+    /// profile: one cycle/instruction add, one histogram delta and one
+    /// register-mask OR per block.  Shared by [`run_translated`] and
+    /// the batched lockstep engine (`sim::batch`) — which, under a
+    /// [`TraceMode`] with `LANE_PROFILE = false`, books these on a
+    /// batch-shared profile instead via
+    /// [`apply_block_shared`](super::batch::BatchRv32).
+    ///
+    /// [`run_translated`]: ZeroRiscy::run_translated
+    #[inline(always)]
+    pub(crate) fn apply_block<M: TraceMode>(&mut self, b: &BlockRv32) {
+        let p = &mut self.profile;
+        p.cycles += b.base_cycles;
+        p.instructions += b.n_instrs as u64;
+        p.loads += b.loads;
+        p.stores += b.stores;
+        p.mul_ops += b.mul_ops;
+        p.mac_ops += b.mac_ops;
+        p.branches_taken += b.branches_taken;
+        if b.csr_used {
+            p.csr_used = true;
+        }
+        if M::PROFILE {
+            p.regs_used |= b.reg_mask;
+            p.max_pc = p.max_pc.max(b.last_pc);
+            p.record_block(&b.counts);
+        }
+    }
+
+    /// Execute a translated block's terminator: resolve the next PC
+    /// (lane-variant costs — taken-branch flush, syscall flag — go to
+    /// this simulator's own profile) and report a halt if the block
+    /// ends the program.  Shared by [`run_translated`] and the batched
+    /// lockstep engine.
+    ///
+    /// [`run_translated`]: ZeroRiscy::run_translated
+    #[inline(always)]
+    pub(crate) fn apply_term(&mut self, b: &BlockRv32) -> Option<Halt> {
+        match b.term {
+            TermRv32::FallThrough => self.pc = b.next_pc,
+            TermRv32::Jal { rd, target, link } => {
+                if rd != 0 {
+                    self.regs[rd as usize] = link;
+                }
+                self.pc = target;
+            }
+            TermRv32::Jalr { rd, rs1, offset, link } => {
+                let t = self.regs[rs1 as usize].wrapping_add(offset as u32) & !1;
+                if rd != 0 {
+                    self.regs[rd as usize] = link;
+                }
+                self.pc = t;
+            }
+            TermRv32::Branch { op, rs1, rs2, target } => {
+                let (a, v) = (self.regs[rs1 as usize], self.regs[rs2 as usize]);
+                let taken = match op {
+                    BranchOp::Beq => a == v,
+                    BranchOp::Bne => a != v,
+                    BranchOp::Blt => (a as i32) < (v as i32),
+                    BranchOp::Bge => (a as i32) >= (v as i32),
+                    BranchOp::Bltu => a < v,
+                    BranchOp::Bgeu => a >= v,
+                };
+                if taken {
+                    self.profile.cycles += 2;
+                    self.profile.branches_taken += 1;
+                    self.pc = target;
+                } else {
+                    self.pc = b.next_pc;
+                }
+            }
+            TermRv32::Ebreak => {
+                self.pc = b.last_pc;
+                return Some(Halt::Break);
+            }
+            TermRv32::Ecall => {
+                self.pc = b.last_pc;
+                self.profile.syscalls_used = true;
+                return Some(Halt::Ecall);
+            }
+        }
+        None
     }
 
     /// Register write without profile bookkeeping (the translated
@@ -509,8 +545,10 @@ impl ZeroRiscy {
     /// architectural steps in the same order as the interpreter, so
     /// register aliasing and fault ordering are preserved; all
     /// per-retire accounting lives in the block aggregates.
+    /// `pub(crate)` so the batched lockstep engine can retire one
+    /// micro-op across many lanes.
     #[inline(always)]
-    fn exec_uop(&mut self, u: &UopRv32) -> Result<()> {
+    pub(crate) fn exec_uop(&mut self, u: &UopRv32) -> Result<()> {
         match u {
             UopRv32::Simple(s) => self.exec_simple(s),
             UopRv32::Alu2(a, b) => {

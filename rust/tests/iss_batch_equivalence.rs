@@ -1,0 +1,636 @@
+//! Satellite: the batched lockstep engine (`sim::batch`) must be
+//! **bit-identical** to the scalar translated engine, per lane, on
+//! every observable — which (via `tests/iss_equivalence.rs`) also pins
+//! it to the per-instruction interpreter and the pre-rework harness.
+//!
+//! Four contracts, pinned differentially:
+//!
+//! 1. model fixtures: `run_*_batched` equals `run_*_scalar_traced` on
+//!    scores, predictions, cycles, instructions and the complete merged
+//!    `FullProfile`, across all six models, both cores, lane counts
+//!    {1, 3, 8, 64} including non-divisor tails, in both trace modes;
+//! 2. the pool-sharded entry points (what the sweeps use, CI runs this
+//!    file under `PBSP_THREADS=1` and `8`) ride the batched path and
+//!    still equal the scalar sequential run at 1 and 8 workers;
+//! 3. adversarial fuzz: random branch-dense programs (data-dependent
+//!    branches, `jalr`s to dynamic mid-block targets, MAC ops) run with
+//!    per-lane divergent memory images — every lane must match its own
+//!    isolated scalar reference in outcome (halt kind *or* error
+//!    message), registers, PC, memory, flags, profile and translated
+//!    counters; a poisoned lane (fault, fuel exhaustion) never perturbs
+//!    its siblings;
+//! 4. directed divergence: per-lane fuel exhaustion mid-batch and
+//!    MAC-without-unit faults on a shared in-flight block.
+//!
+//! Runs against `make artifacts` output when present, else the
+//! checked-in `artifacts-fixture/`; the fuzz tests need no artifacts.
+
+use std::sync::Arc;
+
+use printed_bespoke::hw::mac_unit::MacConfig;
+use printed_bespoke::isa::rv32;
+use printed_bespoke::isa::rv32_asm::Asm;
+use printed_bespoke::isa::tpisa;
+use printed_bespoke::isa::MacOp;
+use printed_bespoke::ml::codegen_rv32::{self, Rv32Variant};
+use printed_bespoke::ml::codegen_tpisa::{self, TpVariant};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::harness;
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::ml::model::Model;
+use printed_bespoke::sim::mem::RAM_BASE;
+use printed_bespoke::sim::tpisa::TpIsa;
+use printed_bespoke::sim::trace::{CyclesOnly, FullProfile, Profile};
+use printed_bespoke::sim::zero_riscy::ZeroRiscy;
+use printed_bespoke::sim::{BatchRv32, BatchTpIsa, PreparedRv32, PreparedTpIsa};
+use printed_bespoke::util::rng::Pcg32;
+use printed_bespoke::util::threadpool::ThreadPool;
+
+fn load() -> Option<(Manifest, Vec<Model>)> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    let models = man.models.iter().map(|e| Model::load(&e.weights).unwrap()).collect();
+    Some((man, models))
+}
+
+/// Random in-range inputs: convex combinations of dataset rows.
+fn random_samples(man: &Manifest, model: &Model, rng: &mut Pcg32, n: usize) -> Vec<Vec<f32>> {
+    let ds = Dataset::load(man.data_dir(), &model.dataset, "test").unwrap();
+    (0..n)
+        .map(|_| {
+            let a = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+            let b = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+            let t = rng.f64() as f32;
+            a.iter().zip(b).map(|(&va, &vb)| va + t * (vb - va)).collect()
+        })
+        .collect()
+}
+
+/// Bit-level equality of score matrices.
+fn assert_scores_eq(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: sample count");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{what} sample {i}: score count");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what} sample {i} score {j}: {va} vs {vb}");
+        }
+    }
+}
+
+/// Every observable of two full profiles.
+fn assert_profiles_eq(a: &Profile, b: &Profile, what: &str) {
+    assert_eq!(a.instr_counts(), b.instr_counts(), "{what}: histogram");
+    assert_eq!(a.static_mnemonics, b.static_mnemonics, "{what}: static mnemonics");
+    assert_eq!(a.regs_used, b.regs_used, "{what}: regs_used");
+    assert_eq!(a.max_pc, b.max_pc, "{what}: max_pc");
+    assert_eq!(a.csr_used, b.csr_used, "{what}: csr_used");
+    assert_eq!(a.syscalls_used, b.syscalls_used, "{what}: syscalls_used");
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.instructions, b.instructions, "{what}: instructions");
+    assert_eq!(a.loads, b.loads, "{what}: loads");
+    assert_eq!(a.stores, b.stores, "{what}: stores");
+    assert_eq!(a.mul_ops, b.mul_ops, "{what}: mul_ops");
+    assert_eq!(a.mac_ops, b.mac_ops, "{what}: mac_ops");
+    assert_eq!(a.branches_taken, b.branches_taken, "{what}: branches_taken");
+    assert_eq!(a.max_ram_offset, b.max_ram_offset, "{what}: max_ram_offset");
+}
+
+/// Lane widths the model tests sweep: 1 (degenerate scalar), 3 and 8
+/// leave non-divisor tails on the 10-sample batches, 64 clamps to the
+/// sample count (the serving fleet width).
+const LANES: [usize; 4] = [1, 3, 8, 64];
+
+// ---------------------------------------------------------------------------
+// (1) + (2): model fixtures, both cores, both trace modes, pools {1, 8}.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rv32_batched_matches_scalar_across_lane_counts() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x1550_E9_30);
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 10);
+        for variant in [Rv32Variant::Baseline, Rv32Variant::Simd(8)] {
+            let prog = codegen_rv32::generate(model, variant).unwrap();
+            let scalar_full = harness::run_rv32_scalar_traced::<FullProfile>(model, &prog, &xs)
+                .unwrap();
+            let scalar_cyc =
+                harness::run_rv32_scalar_traced::<CyclesOnly>(model, &prog, &xs).unwrap();
+            for lanes in LANES {
+                let what = format!("{} {variant:?} lanes {lanes}", model.name);
+                let full =
+                    harness::run_rv32_batched::<FullProfile>(model, &prog, &xs, lanes).unwrap();
+                assert_scores_eq(&full.scores, &scalar_full.scores, &what);
+                assert_eq!(full.predictions, scalar_full.predictions, "{what}: predictions");
+                assert_profiles_eq(&full.profile, &scalar_full.profile, &what);
+                assert_eq!(
+                    full.cycles_per_sample.to_bits(),
+                    scalar_full.cycles_per_sample.to_bits(),
+                    "{what}: cycles/sample"
+                );
+                let cyc =
+                    harness::run_rv32_batched::<CyclesOnly>(model, &prog, &xs, lanes).unwrap();
+                assert_scores_eq(&cyc.scores, &scalar_cyc.scores, &what);
+                assert_eq!(cyc.predictions, scalar_cyc.predictions, "{what}: cyc predictions");
+                assert_eq!(cyc.profile.cycles, scalar_cyc.profile.cycles, "{what}: cyc cycles");
+                assert_eq!(
+                    cyc.profile.instructions,
+                    scalar_cyc.profile.instructions,
+                    "{what}: cyc instructions"
+                );
+                assert!(cyc.profile.instr_counts().is_empty(), "{what}: cyc histogram");
+            }
+            // The default entry points ride the batched path.
+            let deflt = harness::run_rv32(model, &prog, &xs).unwrap();
+            let what = format!("{} {variant:?} default", model.name);
+            assert_scores_eq(&deflt.scores, &scalar_full.scores, &what);
+            assert_profiles_eq(&deflt.profile, &scalar_full.profile, &what);
+        }
+    }
+}
+
+#[test]
+fn tpisa_batched_matches_scalar_across_lane_counts() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x1550_E9_31);
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 10);
+        let configs =
+            [(8u32, TpVariant::Baseline), (8, TpVariant::Mac { precision: 8 }), (32, TpVariant::Mac { precision: 8 })];
+        for (d, variant) in configs {
+            let p = codegen_tpisa::quant_precision(d, variant);
+            if model.qlayers(p).is_err() {
+                continue;
+            }
+            let Ok(prog) = codegen_tpisa::generate(model, d, variant) else {
+                continue;
+            };
+            let scalar_full = harness::run_tpisa_scalar_traced::<FullProfile>(model, &prog, &xs)
+                .unwrap();
+            let scalar_cyc =
+                harness::run_tpisa_scalar_traced::<CyclesOnly>(model, &prog, &xs).unwrap();
+            for lanes in LANES {
+                let what = format!("{} d{d} {variant:?} lanes {lanes}", model.name);
+                let full =
+                    harness::run_tpisa_batched::<FullProfile>(model, &prog, &xs, lanes).unwrap();
+                assert_scores_eq(&full.scores, &scalar_full.scores, &what);
+                assert_eq!(full.predictions, scalar_full.predictions, "{what}: predictions");
+                assert_profiles_eq(&full.profile, &scalar_full.profile, &what);
+                let cyc =
+                    harness::run_tpisa_batched::<CyclesOnly>(model, &prog, &xs, lanes).unwrap();
+                assert_scores_eq(&cyc.scores, &scalar_cyc.scores, &what);
+                assert_eq!(cyc.profile.cycles, scalar_cyc.profile.cycles, "{what}: cyc cycles");
+                assert_eq!(
+                    cyc.profile.instructions,
+                    scalar_cyc.profile.instructions,
+                    "{what}: cyc instructions"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_pool_runs_ride_the_batched_path() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0x1550_E9_32);
+    let pools = [ThreadPool::new(1), ThreadPool::new(8)];
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 9);
+        let prog = codegen_rv32::generate(model, Rv32Variant::Simd(8)).unwrap();
+        let scalar = harness::run_rv32_scalar_traced::<FullProfile>(model, &prog, &xs).unwrap();
+        let tprog = codegen_tpisa::generate(model, 32, TpVariant::Mac { precision: 8 }).unwrap();
+        let tscalar = harness::run_tpisa_scalar_traced::<FullProfile>(model, &tprog, &xs).unwrap();
+        for pool in &pools {
+            let what = format!("{} ({} workers)", model.name, pool.threads());
+            let par = harness::run_rv32_on_traced::<FullProfile>(pool, model, &prog, &xs).unwrap();
+            assert_scores_eq(&par.scores, &scalar.scores, &what);
+            assert_eq!(par.predictions, scalar.predictions, "{what}: predictions");
+            assert_profiles_eq(&par.profile, &scalar.profile, &what);
+            let tpar =
+                harness::run_tpisa_on_traced::<FullProfile>(pool, model, &tprog, &xs).unwrap();
+            assert_scores_eq(&tpar.scores, &tscalar.scores, &what);
+            assert_profiles_eq(&tpar.profile, &tscalar.profile, &what);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (3): adversarial fuzz — shared program, divergent per-lane memory.
+// ---------------------------------------------------------------------------
+
+/// Run `code` over `lanes` divergent RAM images both batched and as
+/// isolated scalar references, and assert every lane observable agrees
+/// — in both trace modes.  `FullProfile` compares the complete per-lane
+/// profile; `CyclesOnly` compares architectural state per lane and the
+/// folded aggregate profile against the merged scalar ones.
+fn compare_batch_rv32(
+    code: &[rv32::Instr],
+    rams: &[Vec<u8>],
+    fuel: u64,
+    mac: Option<MacConfig>,
+    what: &str,
+) {
+    let prepared = Arc::new(PreparedRv32::new(code, &[], 0x400, mac));
+
+    // Isolated scalar references, one per lane, on the same engine the
+    // batch retires through (`run_translated`).
+    let refs: Vec<(ZeroRiscy, Result<printed_bespoke::sim::zero_riscy::Halt, String>)> = rams
+        .iter()
+        .map(|ram| {
+            let mut sim = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+            sim.mem.write_ram(0, ram).unwrap();
+            let r = sim.run_translated::<FullProfile>(fuel).map_err(|e| e.to_string());
+            (sim, r)
+        })
+        .collect();
+
+    let mut batch = BatchRv32::new(Arc::clone(&prepared), rams.len());
+    for (i, ram) in rams.iter().enumerate() {
+        batch.lane_mut(i).mem.write_ram(0, ram).unwrap();
+    }
+    let results = batch.run::<FullProfile>(rams.len(), fuel);
+    for (i, (sref, rref)) in refs.iter().enumerate() {
+        match (&results[i], rref) {
+            (Ok(hb), Ok(hr)) => assert_eq!(hb, hr, "{what} lane {i}: halt kind"),
+            (Err(eb), Err(er)) => {
+                assert_eq!(&eb.to_string(), er, "{what} lane {i}: error message");
+            }
+            (rb, rr) => panic!("{what} lane {i}: divergent outcome {rb:?} vs {rr:?}"),
+        }
+        assert_eq!(batch.lane(i).regs, sref.regs, "{what} lane {i}: regs");
+        assert_eq!(batch.lane(i).pc, sref.pc, "{what} lane {i}: pc");
+        assert_eq!(batch.lane(i).mem.ram, sref.mem.ram, "{what} lane {i}: ram");
+        assert_profiles_eq(
+            &batch.lane(i).profile,
+            &sref.profile,
+            &format!("{what} lane {i}"),
+        );
+        assert_eq!(
+            batch.lane(i).exec_stats.blocks,
+            sref.exec_stats.blocks,
+            "{what} lane {i}: blocks"
+        );
+        assert_eq!(
+            batch.lane(i).exec_stats.fallback_instrs,
+            sref.exec_stats.fallback_instrs,
+            "{what} lane {i}: fallback"
+        );
+    }
+
+    // CyclesOnly: per-lane architectural state plus the folded
+    // aggregates (the shared block bookkeeping must sum to exactly the
+    // per-lane totals the scalar engine books).
+    let crefs: Vec<ZeroRiscy> = rams
+        .iter()
+        .map(|ram| {
+            let mut sim = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+            sim.mem.write_ram(0, ram).unwrap();
+            let _ = sim.run_translated::<CyclesOnly>(fuel);
+            sim
+        })
+        .collect();
+    let mut cbatch = BatchRv32::new(prepared, rams.len());
+    for (i, ram) in rams.iter().enumerate() {
+        cbatch.lane_mut(i).mem.write_ram(0, ram).unwrap();
+    }
+    let _ = cbatch.run::<CyclesOnly>(rams.len(), fuel);
+    let mut folded = Profile::default();
+    cbatch.fold_profile(&mut folded);
+    let mut merged = Profile::default();
+    for (i, sref) in crefs.iter().enumerate() {
+        assert_eq!(cbatch.lane(i).regs, sref.regs, "{what} lane {i}: cyc regs");
+        assert_eq!(cbatch.lane(i).mem.ram, sref.mem.ram, "{what} lane {i}: cyc ram");
+        merged.merge(&sref.profile);
+    }
+    assert_eq!(folded.cycles, merged.cycles, "{what}: folded cycles");
+    assert_eq!(folded.instructions, merged.instructions, "{what}: folded instructions");
+    assert!(folded.instr_counts().is_empty(), "{what}: cyc histogram");
+}
+
+/// A random branch-dense RV32 program whose control flow depends on
+/// RAM contents (so divergent lane images diverge the lanes): segments
+/// of random data ops joined by branches on loaded values, `jalr`s to
+/// already-placed labels (dynamic targets landing mid-block), and MAC
+/// ops on every third case (poisoned on MAC-less cores).
+fn random_divergent_rv32(rng: &mut Pcg32, with_mac: bool) -> Vec<rv32::Instr> {
+    use rv32::{AluOp, BranchOp, LoadOp, StoreOp};
+    let mut a = Asm::new();
+    let segs = rng.range_usize(3, 7);
+    a.li(8, RAM_BASE as i32); // s0: RAM base, read-only below
+    let mut placed: Vec<usize> = Vec::new();
+    let pool: [u8; 7] = [5, 6, 7, 10, 11, 12, 13];
+    let reg = |rng: &mut Pcg32| pool[rng.range_usize(0, pool.len() - 1)];
+    for s in 0..segs {
+        placed.push(a.here());
+        a.label(&format!("s{s}"));
+        for _ in 0..rng.range_usize(1, 4) {
+            match rng.range_usize(0, 6) {
+                0 => {
+                    let rd = reg(rng);
+                    let rs = reg(rng);
+                    a.addi(rd, rs, rng.range_i64(-64, 64) as i32);
+                }
+                1 => {
+                    let op = *rng.choice(&[AluOp::Add, AluOp::Sub, AluOp::Xor, AluOp::And]);
+                    a.push(rv32::Instr::Op { op, rd: reg(rng), rs1: reg(rng), rs2: reg(rng) });
+                }
+                2 | 3 => {
+                    // Lane-divergent value: load from the per-lane image.
+                    let op = *rng.choice(&[LoadOp::Lw, LoadOp::Lbu, LoadOp::Lhu]);
+                    a.push(rv32::Instr::Load {
+                        op,
+                        rd: reg(rng),
+                        rs1: 8,
+                        offset: rng.range_i64(0, 60) as i32,
+                    });
+                }
+                4 => {
+                    let op = *rng.choice(&[StoreOp::Sw, StoreOp::Sb]);
+                    a.push(rv32::Instr::Store {
+                        op,
+                        rs2: reg(rng),
+                        rs1: 8,
+                        offset: rng.range_i64(64, 120) as i32,
+                    });
+                }
+                5 => {
+                    if with_mac {
+                        a.mac(reg(rng), reg(rng));
+                    } else {
+                        a.nop();
+                    }
+                }
+                _ => {
+                    a.nop();
+                }
+            }
+        }
+        // Terminator: usually a data-dependent branch, sometimes a
+        // dynamic jalr to an already-placed (mid-block) target.
+        match rng.range_usize(0, 9) {
+            0..=5 => {
+                let op = *rng.choice(&[
+                    BranchOp::Beq,
+                    BranchOp::Bne,
+                    BranchOp::Blt,
+                    BranchOp::Bge,
+                    BranchOp::Bltu,
+                ]);
+                let t = rng.range_usize(0, segs);
+                let target = if t == segs { "end".to_string() } else { format!("s{t}") };
+                a.branch(op, reg(rng), reg(rng), &target);
+            }
+            6 => {
+                let idx = placed[rng.range_usize(0, placed.len() - 1)];
+                a.li(7, (idx * 4) as i32);
+                a.push(rv32::Instr::Jalr { rd: 1, rs1: 7, offset: 0 });
+            }
+            _ => {} // fall through
+        }
+    }
+    a.label("end");
+    a.ebreak();
+    a.finish().unwrap()
+}
+
+#[test]
+fn rv32_fuzz_batched_lanes_match_isolated_scalars() {
+    let mut rng = Pcg32::seeded(0x1550_E9_33);
+    for case in 0..40 {
+        // Every third case sprinkles MAC ops; half of those run on a
+        // MAC-less core, so whole lanes fault mid-batch and must drain
+        // with the exact scalar error while siblings keep retiring.
+        let with_mac = case % 3 == 0;
+        let mac = if with_mac && case % 6 == 0 { Some(MacConfig::new(32, 32)) } else { None };
+        let code = random_divergent_rv32(&mut rng, with_mac);
+        let lanes = rng.range_usize(2, 6);
+        let rams: Vec<Vec<u8>> = (0..lanes)
+            .map(|_| (0..64).map(|_| rng.range_i64(0, 255) as u8).collect())
+            .collect();
+        // Small fuels exhaust individual lanes mid-batch; larger ones
+        // let most lanes halt.
+        let fuel = *rng.choice(&[37u64, 150, 600, 2500]);
+        compare_batch_rv32(&code, &rams, fuel, mac, &format!("fuzz case {case} fuel {fuel}"));
+    }
+}
+
+/// Directed: a countdown loop whose trip count is the lane's RAM word.
+/// Lanes with huge counters exhaust their fuel mid-batch (`Halt::Fuel`)
+/// while small-counter siblings halt cleanly — per-lane fuel is the
+/// scalar contract, not a shared pool.
+#[test]
+fn rv32_per_lane_fuel_exhaustion_mid_batch() {
+    use rv32::BranchOp;
+    let mut a = Asm::new();
+    a.li(8, RAM_BASE as i32);
+    a.lw(5, 8, 0);
+    a.label("loop");
+    a.branch(BranchOp::Beq, 5, 0, "end");
+    a.addi(5, 5, -1);
+    a.addi(6, 6, 1);
+    a.j("loop");
+    a.label("end");
+    a.sw(6, 8, 4);
+    a.ebreak();
+    let code = a.finish().unwrap();
+    let counters: [u32; 5] = [1, 100_000, 2, 100_000, 0];
+    let rams: Vec<Vec<u8>> = counters.iter().map(|c| c.to_le_bytes().to_vec()).collect();
+    for fuel in [37u64, 150, 600] {
+        compare_batch_rv32(&code, &rams, fuel, None, &format!("fuel partition {fuel}"));
+    }
+}
+
+/// Directed: lanes whose RAM flag routes them into a MAC instruction on
+/// a MAC-less core fault with the scalar error message; clean siblings
+/// sharing the in-flight block are untouched.
+#[test]
+fn rv32_poisoned_mac_lane_matches_scalar_error() {
+    use rv32::BranchOp;
+    let mut a = Asm::new();
+    a.li(8, RAM_BASE as i32);
+    a.lw(5, 8, 0);
+    a.branch(BranchOp::Beq, 5, 0, "clean");
+    a.li(10, 3);
+    a.li(11, 4);
+    a.mac(10, 11); // faults without a MAC unit
+    a.label("clean");
+    a.addi(6, 6, 7);
+    a.sw(6, 8, 8);
+    a.ebreak();
+    let code = a.finish().unwrap();
+    let rams: Vec<Vec<u8>> =
+        [0u32, 1, 0, 1, 0].iter().map(|c| c.to_le_bytes().to_vec()).collect();
+    compare_batch_rv32(&code, &rams, 1000, None, "poisoned mac lanes");
+    // With a unit the same program is uniform and must also agree.
+    compare_batch_rv32(&code, &rams, 1000, Some(MacConfig::new(32, 32)), "mac lanes with unit");
+}
+
+/// TP-ISA twin of [`compare_batch_rv32`]: divergent per-lane dmem
+/// images, isolated scalar references, both trace modes.
+fn compare_batch_tpisa(
+    code: &[tpisa::Instr],
+    dmems: &[Vec<u64>],
+    fuel: u64,
+    mac: Option<MacConfig>,
+    what: &str,
+) {
+    let prepared = Arc::new(PreparedTpIsa::with_zero_dmem(8, code, 512, mac));
+    let refs: Vec<(TpIsa, Result<printed_bespoke::sim::tpisa::Halt, String>)> = dmems
+        .iter()
+        .map(|img| {
+            let mut sim = TpIsa::from_prepared(Arc::clone(&prepared));
+            sim.dmem.write_words(0, img).unwrap();
+            let r = sim.run_translated::<FullProfile>(fuel).map_err(|e| e.to_string());
+            (sim, r)
+        })
+        .collect();
+    let mut batch = BatchTpIsa::new(Arc::clone(&prepared), dmems.len());
+    for (i, img) in dmems.iter().enumerate() {
+        batch.lane_mut(i).dmem.write_words(0, img).unwrap();
+    }
+    let results = batch.run::<FullProfile>(dmems.len(), fuel);
+    for (i, (sref, rref)) in refs.iter().enumerate() {
+        match (&results[i], rref) {
+            (Ok(hb), Ok(hr)) => assert_eq!(hb, hr, "{what} lane {i}: halt kind"),
+            (Err(eb), Err(er)) => {
+                assert_eq!(&eb.to_string(), er, "{what} lane {i}: error message");
+            }
+            (rb, rr) => panic!("{what} lane {i}: divergent outcome {rb:?} vs {rr:?}"),
+        }
+        assert_eq!(batch.lane(i).regs, sref.regs, "{what} lane {i}: regs");
+        assert_eq!(batch.lane(i).pc, sref.pc, "{what} lane {i}: pc");
+        assert_eq!(batch.lane(i).carry, sref.carry, "{what} lane {i}: carry");
+        assert_eq!(batch.lane(i).zero, sref.zero, "{what} lane {i}: zero");
+        let n = sref.dmem.len();
+        assert_eq!(
+            batch.lane(i).dmem.read_words(0, n).unwrap(),
+            sref.dmem.read_words(0, n).unwrap(),
+            "{what} lane {i}: dmem"
+        );
+        assert_profiles_eq(
+            &batch.lane(i).profile,
+            &sref.profile,
+            &format!("{what} lane {i}"),
+        );
+    }
+
+    let crefs: Vec<TpIsa> = dmems
+        .iter()
+        .map(|img| {
+            let mut sim = TpIsa::from_prepared(Arc::clone(&prepared));
+            sim.dmem.write_words(0, img).unwrap();
+            let _ = sim.run_translated::<CyclesOnly>(fuel);
+            sim
+        })
+        .collect();
+    let mut cbatch = BatchTpIsa::new(prepared, dmems.len());
+    for (i, img) in dmems.iter().enumerate() {
+        cbatch.lane_mut(i).dmem.write_words(0, img).unwrap();
+    }
+    let _ = cbatch.run::<CyclesOnly>(dmems.len(), fuel);
+    let mut folded = Profile::default();
+    cbatch.fold_profile(&mut folded);
+    let mut merged = Profile::default();
+    for (i, sref) in crefs.iter().enumerate() {
+        assert_eq!(cbatch.lane(i).regs, sref.regs, "{what} lane {i}: cyc regs");
+        merged.merge(&sref.profile);
+    }
+    assert_eq!(folded.cycles, merged.cycles, "{what}: folded cycles");
+    assert_eq!(folded.instructions, merged.instructions, "{what}: folded instructions");
+}
+
+/// A random TP-ISA stream whose early loads pull lane-divergent dmem
+/// words into the registers that later branches test.
+fn random_divergent_tpisa(rng: &mut Pcg32, with_mac: bool) -> Vec<tpisa::Instr> {
+    use tpisa::Instr;
+    let n = rng.range_usize(20, 50);
+    let mut code = Vec::with_capacity(n + 9);
+    let r = |rng: &mut Pcg32| rng.range_usize(0, 7) as u8;
+    // Prologue: seed every register from the per-lane image.
+    for reg in 0u8..8 {
+        code.push(Instr::Ld { r1: reg, r2: reg, imm: reg as i8 });
+    }
+    for i in 0..n {
+        let off_to = |rng: &mut Pcg32, i: usize| -> i16 {
+            if rng.range_usize(0, 15) == 0 {
+                *rng.choice(&[-200i64, 500]) as i16
+            } else {
+                (rng.range_i64(0, n as i64) - i as i64) as i16
+            }
+        };
+        let ins = match rng.range_usize(0, 12) {
+            0 => Instr::Ldi { r1: r(rng), imm: rng.range_i64(-32, 31) as i8 },
+            1 => Instr::Add { r1: r(rng), r2: r(rng) },
+            2 => Instr::Sub { r1: r(rng), r2: r(rng) },
+            3 => Instr::Xor { r1: r(rng), r2: r(rng) },
+            4 | 5 => Instr::Ld { r1: r(rng), r2: r(rng), imm: rng.range_i64(0, 63) as i8 },
+            6 => Instr::St { r1: r(rng), r2: r(rng), imm: rng.range_i64(0, 63) as i8 },
+            7 => Instr::Addi { r1: r(rng), imm: rng.range_i64(-32, 31) as i8 },
+            8 => Instr::Bz { off: off_to(rng, i) },
+            9 => Instr::Bnz { off: off_to(rng, i) },
+            10 => Instr::Jmp { off: off_to(rng, i) },
+            _ => {
+                if with_mac && rng.range_usize(0, 2) == 0 {
+                    *rng.choice(&[
+                        Instr::Mac { op: MacOp::Mac, r1: r(rng), r2: r(rng) },
+                        Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 },
+                    ])
+                } else {
+                    Instr::Halt
+                }
+            }
+        };
+        code.push(ins);
+    }
+    code.push(tpisa::Instr::Halt);
+    code
+}
+
+#[test]
+fn tpisa_fuzz_batched_lanes_match_isolated_scalars() {
+    let mut rng = Pcg32::seeded(0x1550_E9_34);
+    for case in 0..40 {
+        let with_mac = case % 3 == 0;
+        let mac = if with_mac && case % 6 == 0 { Some(MacConfig::new(8, 8)) } else { None };
+        let code = random_divergent_tpisa(&mut rng, with_mac);
+        let lanes = rng.range_usize(2, 5);
+        let dmems: Vec<Vec<u64>> = (0..lanes)
+            .map(|_| (0..64).map(|_| rng.range_i64(0, 255) as u64).collect())
+            .collect();
+        let fuel = *rng.choice(&[29u64, 120, 700, 3000]);
+        compare_batch_tpisa(&code, &dmems, fuel, mac, &format!("tp fuzz case {case} fuel {fuel}"));
+    }
+}
+
+/// Directed TP-ISA divergence: an 8-bit countdown whose trip count is
+/// the lane's dmem word — a zero counter wraps through 256 iterations,
+/// so lanes spread across the whole loop and regroup at the join.
+#[test]
+fn tpisa_per_lane_counters_diverge_and_rejoin() {
+    use tpisa::Instr;
+    let code = vec![
+        Instr::Ldi { r1: 1, imm: 0 },
+        Instr::Ld { r1: 0, r2: 1, imm: 0 }, // r0 = lane counter
+        Instr::Ldi { r1: 2, imm: 1 },
+        // loop: r0 -= 1; r3 += 1; bnz loop
+        Instr::Sub { r1: 0, r2: 2 },
+        Instr::Addi { r1: 3, imm: 1 },
+        Instr::Bnz { off: -2 },
+        Instr::St { r1: 3, r2: 1, imm: 1 },
+        Instr::Halt,
+    ];
+    let dmems: Vec<Vec<u64>> = [3u64, 0, 10, 1, 200].iter().map(|&c| vec![c]).collect();
+    for fuel in [29u64, 120, 100_000] {
+        compare_batch_tpisa(&code, &dmems, fuel, None, &format!("tp counters fuel {fuel}"));
+    }
+}
