@@ -5,7 +5,7 @@
 //! paper's §I scenario implies — disposable sensors (smart packaging,
 //! healthcare patches) pushing classifications to a backend:
 //!
-//!   device fleet ── HTTP/1.1 keep-alive ──► server (acceptor + pool)
+//!   device fleet ── HTTP/1.1 keep-alive ──► server (reactor + pool)
 //!       ──► router/dynamic batcher ──► PJRT runtime worker
 //!
 //! Each simulated device owns one keep-alive connection and a PCG
@@ -37,9 +37,11 @@ fn main() -> Result<()> {
     args.finish()?;
 
     let svc = Arc::new(Service::start(ServiceConfig { threads, ..ServiceConfig::default() })?);
-    // fleet + headroom: the probe connection below holds a slot too
-    // (over-capacity connections are refused with 503 by design).
-    let scfg = ServerConfig { http_threads: fleet + 4, ..ServerConfig::default() };
+    // The reactor multiplexes every device connection on one thread;
+    // only the admission cap needs fleet headroom (the probe connection
+    // below holds a slot too — over-capacity connections are refused
+    // with 503 + Retry-After by design).
+    let scfg = ServerConfig { max_connections: fleet + 4, ..ServerConfig::default() };
     let mut server = Server::start(Arc::clone(&svc), scfg)?;
     println!("frontend listening on http://{}\n", server.addr());
 
@@ -55,6 +57,7 @@ fn main() -> Result<()> {
         seed,
         think_ms,
         precision: 8,
+        ..Default::default()
     };
     let report = loadgen::run(server.addr(), &cfg)?;
     println!("{}\n", report.summary());

@@ -1,24 +1,52 @@
 //! Serving-layer bench: end-to-end HTTP frontend throughput and
-//! latency under a closed-loop device fleet at sizes {1, 8, 64}
-//! (ISSUE 3 acceptance artifact).  Each fleet size gets a fresh
-//! service + frontend on an ephemeral port; the load generator reports
+//! latency under device fleets at sizes {64, 1k, 10k} (ISSUE 7
+//! acceptance artifact — fleet-scale serving on the event-driven
+//! reactor).  Each fleet size gets a fresh service + frontend on an
+//! ephemeral port with a deliberately small, *fixed* compute pool
+//! (`http_threads = 8`): connection concurrency is bounded by
+//! `max_connections`, not the pool, so 10k mostly-idle keep-alive
+//! devices ride one reactor thread.  The load generator reports
 //! requests/s and nearest-rank p50/p90/p99 over real sockets, and the
 //! coordinator line shows how well concurrent connections coalesced in
-//! the dynamic batcher (mean-batch > 1 at fleet >= 8).
+//! the dynamic batcher (mean-batch > 1 at fleet >= 64).
+//!
+//! The 10k point needs ~2 fds per device in one process (server side +
+//! client side); the fd limit is raised best-effort and the point is
+//! skipped with a note if the OS won't allow it.
 
 use std::sync::Arc;
 
 use printed_bespoke::coordinator::service::{Service, ServiceConfig};
 use printed_bespoke::server::{loadgen::LoadgenConfig, Server, ServerConfig};
+use printed_bespoke::util::poll::raise_nofile_limit;
+
+/// Compute pool size, fixed across all fleet sizes on purpose: the old
+/// thread-per-connection model would cap concurrency here.
+const HTTP_THREADS: usize = 8;
 
 fn main() -> anyhow::Result<()> {
-    // (fleet, requests per device): ~256-512 total requests per point.
-    for &(fleet, per_device) in &[(1usize, 256usize), (8, 64), (64, 8)] {
+    // (fleet, requests per device): bounded total request counts.
+    for &(fleet, per_device) in &[(64usize, 16usize), (1_000, 4), (10_000, 1)] {
+        let need_fds = fleet as u64 * 2 + 512;
+        let have_fds = raise_nofile_limit(need_fds);
+        if have_fds < need_fds {
+            println!(
+                "fleet {fleet:>5}: SKIPPED (need ~{need_fds} fds, limit {have_fds} — raise \
+                 ulimit -n)"
+            );
+            continue;
+        }
         let svc = Arc::new(Service::start(ServiceConfig::default())?);
-        // +4 headroom: the warm-up run's connection may not have been
-        // reaped yet when the timed fleet connects (the acceptor
-        // refuses over-capacity connections with 503).
-        let scfg = ServerConfig { http_threads: fleet.max(8) + 4, ..ServerConfig::default() };
+        let scfg = ServerConfig {
+            http_threads: HTTP_THREADS,
+            // Admission headroom over the fleet (warm-up + reconnects).
+            max_connections: fleet + 64,
+            max_queued: 4_096,
+            // Long keep-alive: an idle device parked between requests
+            // must not be reaped mid-bench.
+            keep_alive_ms: 60_000,
+            ..ServerConfig::default()
+        };
         let mut server = Server::start(Arc::clone(&svc), scfg)?;
 
         // Warm-up: compile every (model, p8) executable once so the
@@ -33,17 +61,27 @@ fn main() -> anyhow::Result<()> {
             seed: 42,
             think_ms: 0,
             precision: 8,
+            ..Default::default()
         };
         let r = printed_bespoke::server::loadgen::run(server.addr(), &cfg)?;
         println!(
-            "fleet {fleet:>3} x {per_device:>3} reqs: {:>8.0} req/s  p50 {:>7.2} ms  \
-             p90 {:>7.2} ms  p99 {:>7.2} ms  errors {}",
+            "fleet {fleet:>5} x {per_device:>3} reqs ({HTTP_THREADS} compute threads): \
+             {:>8.0} req/s  p50 {:>7.2} ms  p90 {:>7.2} ms  p99 {:>7.2} ms  errors {}",
             r.rps, r.p50_ms, r.p90_ms, r.p99_ms, r.errors
         );
+        let m = &server.metrics;
+        let admitted = m.connections.load(std::sync::atomic::Ordering::Relaxed);
+        let refused = m.rejected_busy.load(std::sync::atomic::Ordering::Relaxed);
         server.shutdown();
         println!("  coordinator: {}", svc.metrics.lock().unwrap().summary());
         assert_eq!(r.errors, 0, "serving errors under fleet {fleet}");
         assert!(r.rps > 0.0, "zero throughput under fleet {fleet}");
+        // Every device held a keep-alive connection concurrently on an
+        // 8-thread compute pool: connection concurrency is bounded by
+        // max_connections, not http_threads (the old model would have
+        // refused everything past the pool with 503).
+        assert!(admitted as usize > fleet, "fleet {fleet}: only {admitted} admitted");
+        assert_eq!(refused, 0, "fleet {fleet}: {refused} connections refused at admission");
     }
     Ok(())
 }

@@ -8,12 +8,20 @@
 //! pbsp eval --model <name> [--precision N] [--backend iss|pjrt|both]
 //! pbsp serve [--requests N] [--batch N] [--iss]  coordinator demo loop
 //! pbsp serve --addr HOST:PORT [--http-threads N] [--duration-s N]
-//!                                               HTTP inference frontend
+//!            [--max-conns N] [--max-queued N]   HTTP inference frontend
 //! pbsp loadgen --fleet N [--requests N] [--seed S] [--think-ms T]
 //!              [--addr HOST:PORT] [--out FILE]   device-fleet load test
-//!              [--iss] [--verify]
+//!              [--open-rps R] [--client-workers N] [--iss] [--verify]
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
 //! ```
+//!
+//! Serving is reactor-based: `--http-threads` sizes the *compute* pool,
+//! while `--max-conns` caps concurrently open connections (refusals are
+//! `503` + `Retry-After`) and `--max-queued` caps requests in flight on
+//! the pool.  `--open-rps R` switches the load generator from
+//! closed-loop to an open-loop arrival schedule at R requests/s
+//! fleet-wide; `--client-workers` bounds the loadgen's own threads
+//! (devices are sharded, so 10k-device fleets don't need 10k threads).
 //!
 //! `--iss` scores quantised (`p ≤ 16`) requests on the batched lockstep
 //! ISS (`sim::batch`) instead of the PJRT runtime; `--verify` (loadgen,
@@ -191,6 +199,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.parse_or("batch", 64usize)?;
     let addr = args.opt_str("addr").map(String::from);
     let http_threads = args.opt_parse::<usize>("http-threads")?;
+    let max_conns = args.opt_parse::<usize>("max-conns")?;
+    let max_queued = args.opt_parse::<usize>("max-queued")?;
     let duration_s = args.parse_or("duration-s", 0u64)?;
     let iss = args.flag("iss");
     let threads = args.threads()?;
@@ -204,14 +214,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Ok(());
     };
     // HTTP frontend mode: bind, serve until killed (or --duration-s).
+    // The reactor owns every connection socket; --http-threads only
+    // sizes the compute pool, so the default is fine for big fleets.
     let svc = Arc::new(Service::start(cfg)?);
     let mut scfg = ServerConfig { addr, ..ServerConfig::default() };
-    match http_threads {
-        Some(t) => scfg.http_threads = t,
-        // Standalone serving: be generous — each worker just blocks on
-        // a socket, and over-capacity connections are refused with 503.
-        None => scfg.http_threads = scfg.http_threads.max(32),
+    if let Some(t) = http_threads {
+        scfg.http_threads = t;
     }
+    if let Some(c) = max_conns {
+        scfg.max_connections = c;
+    }
+    if let Some(q) = max_queued {
+        scfg.max_queued = q;
+    }
+    // Fleets need fds: one per connection plus slack (best-effort).
+    printed_bespoke::util::poll::raise_nofile_limit(scfg.max_connections as u64 + 256);
     let mut server = Server::start(Arc::clone(&svc), scfg)?;
     println!("pbsp-http listening on http://{}", server.addr());
     println!("  curl -s http://{}/healthz", server.addr());
@@ -239,6 +256,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         seed: args.parse_or("seed", 1u64)?,
         think_ms: args.parse_or("think-ms", 0u64)?,
         precision: args.parse_or("precision", 8u32)?,
+        open_rps: args.parse_or("open-rps", 0.0f64)?,
+        client_workers: args.parse_or("client-workers", 0usize)?,
     };
     let addr = args.opt_str("addr").map(String::from);
     let out = args.opt_str("out").map(String::from);
@@ -246,6 +265,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let verify = args.flag("verify");
     let threads = args.threads()?;
     args.finish()?;
+    // The loadgen holds one socket per device (plus the frontend's own
+    // in the self-contained mode) — raise the fd budget up front.
+    printed_bespoke::util::poll::raise_nofile_limit(cfg.fleet as u64 * 2 + 512);
     let report = match addr {
         // Drive an already-running external frontend.
         Some(a) => {
@@ -267,10 +289,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 iss,
                 ..ServiceConfig::default()
             })?);
-            // fleet + headroom so think-time reconnect churn never
-            // trips the acceptor's 503 capacity refusal.
+            // The reactor multiplexes every device on one thread — only
+            // the admission cap needs fleet-size headroom (reconnect
+            // churn from think-time reaping included).
             let scfg = ServerConfig {
-                http_threads: cfg.fleet + 4,
+                max_connections: cfg.fleet + 16,
                 ..ServerConfig::default()
             };
             let mut server = Server::start(Arc::clone(&svc), scfg)?;
@@ -279,16 +302,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             server.shutdown();
             println!("coordinator: {}", svc.metrics.lock().unwrap().summary());
             if verify {
-                verify_records(&svc, &report, cfg.precision)?;
+                let checked = loadgen::verify(&svc, &report, cfg.precision)?;
+                println!("verify ok: {checked} records bit-identical to in-process scoring");
             }
             report
         }
     };
     println!("{}", report.summary());
     if let Some(path) = out {
-        std::fs::write(&path, report.histogram())
-            .with_context(|| format!("writing {path}"))?;
-        println!("latency histogram written to {path}");
+        // `.json` gets the machine-readable artifact (finite numbers
+        // only — an all-fail run reports zeros and its first error,
+        // never NaN); anything else gets the text histogram.
+        let payload = if path.ends_with(".json") {
+            report.to_json().to_string()
+        } else {
+            report.histogram()
+        };
+        std::fs::write(&path, payload).with_context(|| format!("writing {path}"))?;
+        println!("latency report written to {path}");
     }
     if report.records.is_empty() {
         bail!("loadgen completed zero requests");
@@ -296,47 +327,6 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if report.errors > 0 {
         bail!("loadgen saw {} errors", report.errors);
     }
-    Ok(())
-}
-
-/// Replay every fleet record through in-process [`Service::scores`] and
-/// require the HTTP-served scores to be bit-identical (the fleet JSON
-/// round-trips f64 exactly, so any drift is a real divergence).  With
-/// `--iss` this pins the whole chain — HTTP frontend → dynamic batcher
-/// → batched lockstep ISS — against a direct in-process run.
-fn verify_records(svc: &Service, report: &loadgen::Report, precision: u32) -> Result<()> {
-    use printed_bespoke::coordinator::router::Key;
-    use printed_bespoke::ml::dataset::Dataset;
-    // Group records per model so each replay is one bulk batch.
-    let mut by_model: Vec<Vec<&loadgen::DeviceRecord>> = vec![Vec::new(); svc.models.len()];
-    for r in &report.records {
-        by_model[r.model].push(r);
-    }
-    let mut checked = 0usize;
-    for (mi, recs) in by_model.iter().enumerate() {
-        if recs.is_empty() {
-            continue;
-        }
-        let model = &svc.models[mi];
-        let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
-        let xs: Vec<Vec<f32>> = recs.iter().map(|r| ds.x[r.sample].clone()).collect();
-        let got = svc.scores(&Key::precision(&model.name, precision), &xs)?;
-        for (r, g) in recs.iter().zip(&got) {
-            if &r.scores != g {
-                bail!(
-                    "verify: device {} seq {} ({} sample {}): served {:?} vs in-process {:?}",
-                    r.device,
-                    r.seq,
-                    model.name,
-                    r.sample,
-                    r.scores,
-                    g
-                );
-            }
-        }
-        checked += recs.len();
-    }
-    println!("verify ok: {checked} records bit-identical to in-process scoring");
     Ok(())
 }
 

@@ -6,8 +6,19 @@
 //! `Content-Length` framing only (no chunked transfer encoding), CRLF
 //! header sections, persistent connections by default (HTTP/1.1
 //! keep-alive) with `Connection: close` honoured.  Both sides of the
-//! conversation — [`HttpConn`] under the server's connection handlers
-//! and [`Client`] under the device fleet — share the same framing code.
+//! conversation — [`HttpConn`] under the server's reactor and
+//! [`Client`] under the device fleet — share the same framing code.
+//!
+//! [`HttpConn`] is a *resumable* state machine: a read that stops short
+//! of a full message (timeout on a blocking socket, `WouldBlock` on a
+//! non-blocking one) returns [`Outcome::Idle`] and the next call picks
+//! up exactly where it left off — the blank-line scan offset and the
+//! parsed head both persist across resumes, so a slow N-byte upload
+//! costs O(N) total scanning and one head parse, not O(N²)/O(ticks)
+//! (this is what lets the reactor drive thousands of dribbling
+//! connections).  Writes are symmetric: responses are queued into an
+//! outbound buffer and drained with non-blocking [`HttpConn::flush_progress`]
+//! calls, so a peer that stops reading can never block the writer.
 
 use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
@@ -22,9 +33,11 @@ use crate::util::json::Value;
 pub const MAX_HEAD_BYTES: usize = 64 * 1024;
 /// Cap on one message body (a full-batch score request is ~100 KiB).
 pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
-/// Deadline for finishing a message whose first bytes have arrived
-/// (slow-loris guard: a half-sent request cannot pin a worker forever).
-const MID_MESSAGE_DEADLINE: Duration = Duration::from_secs(30);
+/// Default deadline for finishing a message whose first bytes have
+/// arrived (slow-loris guard: a half-sent request cannot pin resources
+/// forever).  Configurable per connection via
+/// [`HttpConn::set_msg_deadline`].
+pub const MID_MESSAGE_DEADLINE: Duration = Duration::from_secs(30);
 
 /// One framed HTTP message: start line, headers (keys lower-cased),
 /// body.  Requests and responses differ only in the start line.
@@ -42,37 +55,107 @@ pub enum Outcome {
     Message(Message),
     /// The peer closed the connection cleanly between messages.
     Closed,
-    /// The socket read timed out this tick.  Any partial message stays
-    /// buffered in the connection, so the caller can check its own
-    /// conditions (shutdown flag, keep-alive budget) and simply call
-    /// `read_message` again to resume.
+    /// The socket has no more data right now (read timeout on a
+    /// blocking socket, `WouldBlock` on a non-blocking one).  Any
+    /// partial message stays buffered — scan offset and parsed head
+    /// included — so the caller can check its own conditions (shutdown
+    /// flag, keep-alive budget) and simply call `read_message` again
+    /// to resume.
     Idle,
 }
 
-/// A TCP connection with message framing and pipelining-safe buffering
-/// (bytes past the current message are kept for the next read).
+/// A head parsed while its body is still arriving — persists across
+/// [`Outcome::Idle`] resumes so the head is parsed exactly once.
+#[derive(Debug)]
+struct ParsedHead {
+    start_line: String,
+    headers: BTreeMap<String, String>,
+    /// Byte offset of the body in the connection buffer.
+    body_start: usize,
+    body_len: usize,
+}
+
+/// A TCP connection with resumable message framing, pipelining-safe
+/// buffering (bytes past the current message are kept for the next
+/// read) and a buffered non-blocking write side.
 pub struct HttpConn {
     stream: TcpStream,
     buf: Vec<u8>,
+    /// Bytes of `buf` already scanned without finding the head's blank
+    /// line — the next scan resumes here (minus a 3-byte overlap for a
+    /// terminator split across reads).
+    scanned: usize,
+    /// The current message's head once parsed, while the body arrives.
+    head: Option<ParsedHead>,
     /// When the currently-buffered (incomplete) message started
     /// arriving — the slow-loris deadline baseline, surviving across
     /// `read_message` calls that return [`Outcome::Idle`].
     msg_started: Option<Instant>,
+    deadline: Duration,
+    /// Outbound bytes not yet accepted by the socket.
+    out: Vec<u8>,
+    out_pos: usize,
+    // Lifetime instrumentation pinning the O(N) resume contract
+    // (`wire_stats`): total bytes examined by head scans, and how many
+    // times a head was parsed.
+    scan_bytes: u64,
+    head_parses: u64,
 }
 
 impl HttpConn {
     pub fn new(stream: TcpStream) -> HttpConn {
-        HttpConn { stream, buf: Vec::new(), msg_started: None }
+        HttpConn {
+            stream,
+            buf: Vec::new(),
+            scanned: 0,
+            head: None,
+            msg_started: None,
+            deadline: MID_MESSAGE_DEADLINE,
+            out: Vec::new(),
+            out_pos: 0,
+            scan_bytes: 0,
+            head_parses: 0,
+        }
     }
 
     pub fn set_read_timeout(&self, d: Duration) -> Result<()> {
         self.stream.set_read_timeout(Some(d)).context("set_read_timeout")
     }
 
+    /// Switch the socket between blocking (handler/client style) and
+    /// non-blocking (reactor style) modes.
+    pub fn set_nonblocking(&self, on: bool) -> Result<()> {
+        self.stream.set_nonblocking(on).context("set_nonblocking")
+    }
+
+    /// Override the mid-message deadline (tests use short ones).
+    pub fn set_msg_deadline(&mut self, d: Duration) {
+        self.deadline = d;
+    }
+
+    /// The underlying socket (the reactor registers its fd).
+    pub fn stream(&self) -> &TcpStream {
+        &self.stream
+    }
+
     /// Is an incomplete message currently buffered?  (Distinguishes a
     /// truly idle keep-alive connection from one mid-upload.)
     pub fn has_partial(&self) -> bool {
         !self.buf.is_empty()
+    }
+
+    /// How long the currently-buffered partial message has been
+    /// arriving (None when between messages) — the reactor's deadline
+    /// input for peers that go silent mid-message.
+    pub fn msg_age(&self) -> Option<Duration> {
+        self.msg_started.map(|t| t.elapsed())
+    }
+
+    /// (total bytes examined by head scans, number of head parses) over
+    /// the connection's lifetime — the regression hook for the O(N)
+    /// resumable-framing contract.
+    pub fn wire_stats(&self) -> (u64, u64) {
+        (self.scan_bytes, self.head_parses)
     }
 
     pub fn write_all(&mut self, bytes: &[u8]) -> Result<()> {
@@ -82,18 +165,15 @@ impl HttpConn {
 
     /// Read one complete message (head + `Content-Length` body).
     ///
-    /// Returns [`Outcome::Idle`] after every read-timeout tick — even
-    /// mid-message — so a caller blocked on a slow peer regains control
-    /// each tick (shutdown responsiveness).  Partial data stays in the
-    /// buffer and the next call resumes; the head is cheap to re-scan.
+    /// Returns [`Outcome::Idle`] whenever the socket has nothing more
+    /// right now — even mid-message — so the caller regains control
+    /// (shutdown responsiveness on blocking sockets, readiness loops on
+    /// non-blocking ones).  Partial state persists and the next call
+    /// resumes in O(new bytes).
     pub fn read_message(&mut self) -> Result<Outcome> {
-        // Accumulate until the blank line ends the header section.
-        let head_end = loop {
-            if let Some(pos) = find_blank_line(&self.buf) {
-                break pos;
-            }
-            if self.buf.len() > MAX_HEAD_BYTES {
-                bail!("header section exceeds {MAX_HEAD_BYTES} bytes");
+        loop {
+            if let Some(m) = self.try_take_message()? {
+                return Ok(Outcome::Message(m));
             }
             match self.fill()? {
                 Fill::Data => {}
@@ -101,30 +181,67 @@ impl HttpConn {
                 Fill::Eof => bail!("connection closed mid-message"),
                 Fill::Idle => return Ok(Outcome::Idle),
             }
-        };
-        let head = std::str::from_utf8(&self.buf[..head_end]).context("non-UTF-8 header")?;
-        let (start_line, headers) = parse_head(head)?;
-        let body_len = match headers.get("content-length") {
-            Some(v) => v.trim().parse::<usize>().with_context(|| format!("content-length {v:?}"))?,
-            None => 0,
-        };
-        if body_len > MAX_BODY_BYTES {
-            bail!("body of {body_len} bytes exceeds {MAX_BODY_BYTES}");
         }
-        let body_start = head_end + 4;
-        while self.buf.len() < body_start + body_len {
-            match self.fill()? {
-                Fill::Data => {}
-                Fill::Eof => bail!("connection closed mid-body"),
-                Fill::Idle => return Ok(Outcome::Idle), // resume from buf next call
+    }
+
+    /// Parse one complete message out of the already-buffered bytes
+    /// *without touching the socket* — the pipelining path: after a
+    /// response is written, the next request may already be buffered.
+    pub fn take_buffered_message(&mut self) -> Result<Option<Message>> {
+        self.try_take_message()
+    }
+
+    /// Advance the framing state machine over the buffered bytes.
+    fn try_take_message(&mut self) -> Result<Option<Message>> {
+        if self.head.is_none() {
+            // Resume the blank-line scan where the last one stopped
+            // (3-byte overlap catches a terminator split across reads).
+            let from = self.scanned.saturating_sub(3);
+            self.scan_bytes += (self.buf.len() - from) as u64;
+            match find_blank_line(&self.buf[from..]) {
+                Some(rel) => {
+                    let head_end = from + rel;
+                    let head = std::str::from_utf8(&self.buf[..head_end])
+                        .context("non-UTF-8 header")?;
+                    let (start_line, headers) = parse_head(head)?;
+                    self.head_parses += 1;
+                    let body_len = match headers.get("content-length") {
+                        Some(v) => v
+                            .trim()
+                            .parse::<usize>()
+                            .with_context(|| format!("content-length {v:?}"))?,
+                        None => 0,
+                    };
+                    if body_len > MAX_BODY_BYTES {
+                        bail!("body of {body_len} bytes exceeds {MAX_BODY_BYTES}");
+                    }
+                    let body_start = head_end + 4;
+                    self.head = Some(ParsedHead { start_line, headers, body_start, body_len });
+                }
+                None => {
+                    self.scanned = self.buf.len();
+                    if self.buf.len() > MAX_HEAD_BYTES {
+                        bail!("header section exceeds {MAX_HEAD_BYTES} bytes");
+                    }
+                    return Ok(None);
+                }
             }
         }
+        let (body_start, body_len) = {
+            let h = self.head.as_ref().expect("head just ensured");
+            (h.body_start, h.body_len)
+        };
+        if self.buf.len() < body_start + body_len {
+            return Ok(None); // body still arriving; resume later
+        }
+        let h = self.head.take().expect("head present");
         let body = self.buf[body_start..body_start + body_len].to_vec();
         // Keep any pipelined bytes for the next message; they already
         // count against the next message's slow-loris deadline.
         self.buf.drain(..body_start + body_len);
+        self.scanned = 0;
         self.msg_started = if self.buf.is_empty() { None } else { Some(Instant::now()) };
-        Ok(Outcome::Message(Message { start_line, headers, body }))
+        Ok(Some(Message { start_line: h.start_line, headers: h.headers, body }))
     }
 
     /// One socket read into the buffer.
@@ -154,11 +271,53 @@ impl HttpConn {
     /// Absolute per-message deadline, whatever the arrival pattern.
     fn check_deadline(&self) -> Result<()> {
         if let Some(t0) = self.msg_started {
-            if t0.elapsed() > MID_MESSAGE_DEADLINE {
-                bail!("message incomplete after {MID_MESSAGE_DEADLINE:?}");
+            if t0.elapsed() > self.deadline {
+                bail!("message incomplete after {:?}", self.deadline);
             }
         }
         Ok(())
+    }
+
+    // -- buffered write side (reactor) ---------------------------------
+
+    /// Queue a response for non-blocking draining.
+    pub fn queue_response(&mut self, resp: &Response, close: bool) {
+        resp.append_to(&mut self.out, close);
+    }
+
+    pub fn has_pending_write(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    /// Push queued bytes into the socket without blocking.  Returns
+    /// (bytes written this call, fully drained?).  `WouldBlock` is
+    /// progress-zero, not an error — the caller re-arms for
+    /// write-readiness and retries.
+    pub fn flush_progress(&mut self) -> Result<(usize, bool)> {
+        let mut wrote = 0usize;
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => bail!("socket write returned zero"),
+                Ok(n) => {
+                    self.out_pos += n;
+                    wrote += n;
+                }
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e).context("socket write"),
+            }
+        }
+        if self.out_pos == self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+            return Ok((wrote, true));
+        }
+        if self.out_pos > 64 * 1024 {
+            // Bound memory on long drains against a slow reader.
+            self.out.drain(..self.out_pos);
+            self.out_pos = 0;
+        }
+        Ok((wrote, false))
     }
 }
 
@@ -237,11 +396,19 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: Vec<u8>,
+    /// Emitted as a `Retry-After: N` header — set on backpressure 503s
+    /// so well-behaved devices pace their reconnects.
+    pub retry_after: Option<u64>,
 }
 
 impl Response {
     pub fn json(status: u16, v: &Value) -> Response {
-        Response { status, content_type: "application/json", body: v.to_string().into_bytes() }
+        Response {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+            retry_after: None,
+        }
     }
 
     /// A JSON error envelope: `{"error": msg}`.
@@ -249,17 +416,38 @@ impl Response {
         Response::json(status, &Value::obj(vec![("error", Value::from(msg))]))
     }
 
-    pub fn write_to(&self, conn: &mut HttpConn, close: bool) -> Result<()> {
+    /// The backpressure envelope: `503` + `Retry-After` (visible,
+    /// pace-able overload instead of silent refusal).
+    pub fn unavailable(msg: &str, retry_after_s: u64) -> Response {
+        let mut r = Response::error(503, msg);
+        r.retry_after = Some(retry_after_s);
+        r
+    }
+
+    /// Serialize head + body into `out` (the reactor's queued-write
+    /// form; [`Response::write_to`] is the blocking form).
+    pub fn append_to(&self, out: &mut Vec<u8>, close: bool) {
+        let retry = match self.retry_after {
+            Some(s) => format!("retry-after: {s}\r\n"),
+            None => String::new(),
+        };
         let head = format!(
-            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n{}connection: {}\r\n\r\n",
             self.status,
             reason(self.status),
             self.content_type,
             self.body.len(),
+            retry,
             if close { "close" } else { "keep-alive" },
         );
-        conn.write_all(head.as_bytes())?;
-        conn.write_all(&self.body)
+        out.extend_from_slice(head.as_bytes());
+        out.extend_from_slice(&self.body);
+    }
+
+    pub fn write_to(&self, conn: &mut HttpConn, close: bool) -> Result<()> {
+        let mut bytes = Vec::with_capacity(self.body.len() + 128);
+        self.append_to(&mut bytes, close);
+        conn.write_all(&bytes)
     }
 }
 
@@ -422,5 +610,143 @@ mod tests {
         assert!(matches!(conn.read_message().unwrap(), Outcome::Idle));
         drop(client);
         assert!(matches!(conn.read_message().unwrap(), Outcome::Closed));
+    }
+
+    /// A connection pair where the test drips bytes into the server
+    /// side's buffer directly, simulating arbitrarily slow arrival with
+    /// a deterministic resume count.
+    fn quiet_pair() -> (TcpStream, HttpConn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(1))).unwrap();
+        (client, HttpConn::new(stream))
+    }
+
+    /// Regression (ISSUE 7): resuming a slow upload must not rescan the
+    /// buffer or re-parse the head each tick — O(N) total scan work and
+    /// exactly one head parse, no matter how many resumes.
+    #[test]
+    fn slow_upload_resume_is_linear() {
+        let body_len = 40_000usize;
+        let head = format!("POST /v1/score/m/p8 HTTP/1.1\r\ncontent-length: {body_len}\r\n\r\n");
+        let (_client, mut conn) = quiet_pair();
+        // Drip the head a few bytes per resume, then the body in many
+        // chunks; every gap forces read_message back through Idle.
+        let feed = |conn: &mut HttpConn, bytes: &[u8]| {
+            conn.buf.extend_from_slice(bytes);
+            match conn.read_message().unwrap() {
+                Outcome::Idle => None,
+                Outcome::Message(m) => Some(m),
+                Outcome::Closed => panic!("unexpected close"),
+            }
+        };
+        let mut got = None;
+        for chunk in head.as_bytes().chunks(7) {
+            assert!(feed(&mut conn, chunk).is_none(), "head not complete yet");
+        }
+        let body = vec![b'x'; body_len];
+        for chunk in body.chunks(400) {
+            if let Some(m) = feed(&mut conn, chunk) {
+                got = Some(m);
+            }
+        }
+        let m = got.expect("message must complete");
+        assert_eq!(m.body.len(), body_len);
+        let (scan_bytes, head_parses) = conn.wire_stats();
+        assert_eq!(head_parses, 1, "head must be parsed exactly once");
+        // The scan only ever walks head bytes (the body phase is a
+        // length check): allow the resume overlap but nothing quadratic.
+        let head_len = head.len() as u64;
+        assert!(
+            scan_bytes < head_len * 3,
+            "scan work must stay linear: scanned {scan_bytes} for a {head_len}-byte head"
+        );
+    }
+
+    /// Pipelined second request is parseable from the buffer without a
+    /// socket read.
+    #[test]
+    fn buffered_message_taken_without_socket_read() {
+        let (mut client, mut conn) = quiet_pair();
+        client
+            .write_all(
+                b"POST /a HTTP/1.1\r\ncontent-length: 1\r\n\r\nzPOST /b HTTP/1.1\r\n\
+                  content-length: 0\r\n\r\n",
+            )
+            .unwrap();
+        client.flush().unwrap();
+        let m1 = loop {
+            match conn.read_message().unwrap() {
+                Outcome::Message(m) => break m,
+                Outcome::Idle => continue,
+                Outcome::Closed => panic!("unexpected close"),
+            }
+        };
+        assert_eq!(m1.start_line, "POST /a HTTP/1.1");
+        let m2 = conn.take_buffered_message().unwrap().expect("pipelined request buffered");
+        assert_eq!(m2.start_line, "POST /b HTTP/1.1");
+        assert!(conn.take_buffered_message().unwrap().is_none());
+    }
+
+    /// The buffered write side drains without blocking and reports
+    /// completion.
+    #[test]
+    fn queued_response_drains_nonblocking() {
+        let (client, mut conn) = quiet_pair();
+        conn.set_nonblocking(true).unwrap();
+        let resp = Response::unavailable("busy", 2);
+        conn.queue_response(&resp, true);
+        assert!(conn.has_pending_write());
+        let mut done = false;
+        for _ in 0..100 {
+            let (_, d) = conn.flush_progress().unwrap();
+            if d {
+                done = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(done, "a small response must drain");
+        assert!(!conn.has_pending_write());
+        // The peer sees the full wire form, Retry-After included.
+        let mut peer = HttpConn::new(client);
+        peer.set_read_timeout(Duration::from_millis(50)).unwrap();
+        let m = loop {
+            match peer.read_message().unwrap() {
+                Outcome::Message(m) => break m,
+                Outcome::Idle => continue,
+                Outcome::Closed => panic!("unexpected close"),
+            }
+        };
+        assert!(m.start_line.contains("503"));
+        assert_eq!(m.headers["retry-after"], "2");
+        assert_eq!(m.headers["connection"], "close");
+    }
+
+    /// The configurable mid-message deadline trips on a stalled drip.
+    #[test]
+    fn short_deadline_trips_mid_message() {
+        let (mut client, mut conn) = quiet_pair();
+        conn.set_msg_deadline(Duration::from_millis(40));
+        client.write_all(b"POST /x HTTP/1.1\r\ncontent-le").unwrap();
+        client.flush().unwrap();
+        // First reads buffer the partial head; once the deadline passes
+        // the next read errors out.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match conn.read_message() {
+                Ok(Outcome::Idle) => {
+                    assert!(Instant::now() < deadline, "deadline never tripped");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Ok(other) => panic!("unexpected outcome {other:?}"),
+                Err(e) => {
+                    assert!(e.to_string().contains("incomplete"), "unexpected error {e:#}");
+                    break;
+                }
+            }
+        }
     }
 }

@@ -1,24 +1,25 @@
-//! The TCP listener: a bounded acceptor thread that hands each
-//! connection to the shared `util::threadpool::ThreadPool`.
+//! The HTTP frontend handle: configuration, shared metrics, and the
+//! `Server` lifecycle around the event-driven reactor
+//! (`server::reactor`).
 //!
-//! Concurrency model: one pool job per *connection* (not per request) —
-//! a worker owns the connection for its keep-alive lifetime, reading
-//! requests in 100 ms ticks so it can notice shutdown and enforce the
-//! idle budget.  `http_threads` therefore bounds concurrent
-//! connections, and the bound is enforced at the acceptor: a connection
-//! arriving while every worker owns one is refused immediately with
-//! `503 Service Unavailable` (counted in `rejected_busy`) instead of
-//! queuing unboundedly behind busy workers — overload is visible
-//! backpressure, never silent starvation.  Idle connections are closed
-//! at `keep_alive_ms` (the device client reconnects, see
-//! `server::loadgen`).  The acceptor polls a non-blocking `accept` on a
-//! short tick, so shutdown is just: flip the flag, join the acceptor,
-//! drop the pool (handlers observe the flag within one read tick —
-//! `HttpConn::read_message` yields every tick even mid-message).
+//! Concurrency model (since the reactor rework): **one** reactor thread
+//! owns every connection socket non-blocking and multiplexes them with
+//! `poll(2)` (`util::poll`); requests are handed to the
+//! `util::threadpool` compute pool only once fully buffered.
+//! `http_threads` therefore sizes the *compute* pool — connection
+//! concurrency is bounded separately by `max_connections`, so
+//! thousands of mostly-idle keep-alive devices fit on a handful of
+//! threads.  Backpressure is visible at both levels: connections past
+//! `max_connections` get `503` + `Retry-After` (written asynchronously
+//! — a refused client that never reads can never stall the accept
+//! path), and requests past `max_queued` in-flight get `503` +
+//! `Retry-After` on their healthy keep-alive connection.
+//!
+//! Shutdown is: flip the flag, wake the reactor, join it (it drains
+//! in-flight requests within a bounded grace period), drop the pool.
+//! Idempotent; also runs on drop.
 
-use std::io::ErrorKind;
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -26,29 +27,37 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::http::{HttpConn, Outcome, Request, Response};
-use super::routes;
+use super::reactor::{self, ReactorConfig, ReactorShared};
 use crate::coordinator::service::Service;
 use crate::util::json::Value;
 use crate::util::threadpool::{self, ThreadPool};
 
-/// Read-tick granularity: how often a blocked handler re-checks the
-/// shutdown flag and its idle budget.
-const TICK_MS: u64 = 100;
-/// Acceptor poll tick (also the shutdown-join latency bound).
-const ACCEPT_TICK_MS: u64 = 10;
-/// Socket write budget: a client that stops reading its response
-/// cannot pin a worker (and its capacity slot) past this.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// How long shutdown waits for in-flight requests to finish and their
+/// responses to drain before force-closing the remaining sockets.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(5);
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Bind address; port 0 picks an ephemeral port (tests, benches).
     pub addr: String,
-    /// Connection-handler pool size = max concurrent connections.
+    /// Compute pool size (concurrent request *handlers*).  Not a
+    /// connection cap — see `max_connections`.
     pub http_threads: usize,
     /// Idle keep-alive budget per connection before the server closes it.
     pub keep_alive_ms: u64,
+    /// Admission cap on concurrently open connections; arrivals past it
+    /// are refused with `503` + `Retry-After` (`rejected_busy`).
+    pub max_connections: usize,
+    /// Cap on requests in flight on the compute pool; requests past it
+    /// are refused with `503` + `Retry-After` (`rejected_queue`)
+    /// without dropping the connection.
+    pub max_queued: usize,
+    /// Mid-message deadline: a request whose first byte has arrived
+    /// must complete within this (slow-loris guard).
+    pub msg_deadline_ms: u64,
+    /// Evict a connection whose pending response makes no write
+    /// progress for this long (peer stopped reading).
+    pub write_stall_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -57,31 +66,49 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:0".to_string(),
             http_threads: threadpool::default_threads().max(8),
             keep_alive_ms: 2_000,
+            max_connections: 4_096,
+            max_queued: 1_024,
+            msg_deadline_ms: 30_000,
+            write_stall_ms: 10_000,
         }
     }
 }
 
 /// Server-side counters (the coordinator keeps its own — `/metrics`
-/// reports both).  Plain atomics: incremented from handler threads,
-/// snapshot without locking.
+/// reports both).  Plain atomics: incremented from the reactor and pool
+/// workers, snapshot without locking.
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
+    /// Connections accepted and admitted (cumulative).
     pub connections: AtomicU64,
+    /// Currently-open connections (gauge, maintained by the reactor).
+    pub open_connections: AtomicU64,
     pub http_requests: AtomicU64,
     pub responses_2xx: AtomicU64,
     pub responses_4xx: AtomicU64,
     pub responses_5xx: AtomicU64,
+    /// Responses outside the 2xx/4xx/5xx classes (1xx/3xx) — tracked
+    /// separately so `responses_5xx` counts only real server errors.
+    pub responses_other: AtomicU64,
     pub samples_scored: AtomicU64,
-    /// Connections refused with 503 because every handler was busy.
+    /// Connections refused with 503 at the `max_connections` admission
+    /// gate.
     pub rejected_busy: AtomicU64,
+    /// Requests refused with 503 at the `max_queued` compute gate (the
+    /// connection itself is kept).
+    pub rejected_queue: AtomicU64,
 }
 
 impl ServerMetrics {
-    fn count_status(&self, status: u16) {
+    pub(crate) fn count_status(&self, status: u16) {
         let counter = match status / 100 {
             2 => &self.responses_2xx,
             4 => &self.responses_4xx,
-            _ => &self.responses_5xx,
+            5 => &self.responses_5xx,
+            // 1xx/3xx are not server errors; bucketing them into 5xx
+            // (as the thread-per-connection listener did) made
+            // /metrics unreconcilable.
+            _ => &self.responses_other,
         };
         counter.fetch_add(1, Ordering::Relaxed);
     }
@@ -94,25 +121,29 @@ impl ServerMetrics {
         let get = |c: &AtomicU64| Value::from(c.load(Ordering::Relaxed) as i64);
         Value::obj(vec![
             ("connections", get(&self.connections)),
+            ("open_connections", get(&self.open_connections)),
             ("http_requests", get(&self.http_requests)),
             ("responses_2xx", get(&self.responses_2xx)),
             ("responses_4xx", get(&self.responses_4xx)),
             ("responses_5xx", get(&self.responses_5xx)),
+            ("responses_other", get(&self.responses_other)),
             ("samples_scored", get(&self.samples_scored)),
             ("rejected_busy", get(&self.rejected_busy)),
+            ("rejected_queue", get(&self.rejected_queue)),
         ])
     }
 }
 
-/// The running HTTP frontend.  Dropping it shuts the listener down and
+/// The running HTTP frontend.  Dropping it shuts the reactor down and
 /// joins every thread.
 pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
-    acceptor: Option<JoinHandle<()>>,
-    /// Held so connection handlers outlive the acceptor; dropped (and
-    /// joined) after the acceptor stops feeding it.
+    reactor: Option<JoinHandle<()>>,
+    /// Held so in-flight compute outlives the reactor; dropped (and
+    /// joined) after the reactor stops feeding it.
     pool: Option<Arc<ThreadPool>>,
+    shared: Arc<ReactorShared>,
     pub metrics: Arc<ServerMetrics>,
 }
 
@@ -124,80 +155,28 @@ impl Server {
         let addr = listener.local_addr().context("local_addr")?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(ServerMetrics::default());
-        let capacity = cfg.http_threads.max(1);
-        let pool = Arc::new(ThreadPool::new(capacity));
-        // Connections currently owned by handlers — the acceptor's
-        // admission gate (incremented here, decremented by the job).
-        let active = Arc::new(AtomicU64::new(0));
-        let acceptor = {
-            let shutdown = Arc::clone(&shutdown);
-            let metrics = Arc::clone(&metrics);
-            let pool = Arc::clone(&pool);
-            let active = Arc::clone(&active);
-            let keep_alive_ms = cfg.keep_alive_ms;
-            std::thread::Builder::new()
-                .name("pbsp-http-acceptor".into())
-                .spawn(move || loop {
-                    if shutdown.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            // Handlers expect blocking reads with their
-                            // own timeout; some platforms let accepted
-                            // sockets inherit the listener's flag.
-                            if stream.set_nonblocking(false).is_err() {
-                                continue;
-                            }
-                            if active.load(Ordering::SeqCst) >= capacity as u64 {
-                                // Every handler is busy: refuse fast
-                                // instead of queuing behind them.  Only
-                                // rejected_busy counts this — no request
-                                // was read, so the response counters
-                                // stay reconcilable with http_requests.
-                                metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
-                                let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
-                                let mut conn = HttpConn::new(stream);
-                                let _ = Response::error(
-                                    503,
-                                    "connection capacity reached; raise --http-threads",
-                                )
-                                .write_to(&mut conn, true);
-                                continue;
-                            }
-                            metrics.connections.fetch_add(1, Ordering::Relaxed);
-                            active.fetch_add(1, Ordering::SeqCst);
-                            let svc = Arc::clone(&svc);
-                            let metrics = Arc::clone(&metrics);
-                            let shutdown = Arc::clone(&shutdown);
-                            let active = Arc::clone(&active);
-                            pool.execute(move || {
-                                // Catch panics so a handler bug can
-                                // neither kill the pool worker nor leak
-                                // this connection's admission slot.
-                                let r = catch_unwind(AssertUnwindSafe(|| {
-                                    handle_connection(stream, svc, metrics, shutdown, keep_alive_ms)
-                                }));
-                                active.fetch_sub(1, Ordering::SeqCst);
-                                if r.is_err() {
-                                    eprintln!("pbsp-http: connection handler panicked");
-                                }
-                            });
-                        }
-                        Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(ACCEPT_TICK_MS));
-                        }
-                        Err(e) => {
-                            // Transient accept failure (e.g. EMFILE):
-                            // log, back off a tick, keep serving.
-                            eprintln!("pbsp-http: accept error: {e}");
-                            std::thread::sleep(Duration::from_millis(TICK_MS));
-                        }
-                    }
-                })
-                .context("spawn acceptor")?
+        let pool = Arc::new(ThreadPool::new(cfg.http_threads.max(1)));
+        let shared = Arc::new(ReactorShared::new()?);
+        let rcfg = ReactorConfig {
+            keep_alive: Duration::from_millis(cfg.keep_alive_ms),
+            msg_deadline: Duration::from_millis(cfg.msg_deadline_ms),
+            write_stall: Duration::from_millis(cfg.write_stall_ms),
+            max_connections: cfg.max_connections.max(1),
+            max_queued: cfg.max_queued.max(1),
+            shutdown_grace: SHUTDOWN_GRACE,
         };
-        Ok(Server { addr, shutdown, acceptor: Some(acceptor), pool: Some(pool), metrics })
+        let reactor = {
+            let svc = Arc::clone(&svc);
+            let pool = Arc::clone(&pool);
+            let metrics = Arc::clone(&metrics);
+            let shared = Arc::clone(&shared);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("pbsp-http-reactor".into())
+                .spawn(move || reactor::run(listener, svc, pool, metrics, shared, shutdown, rcfg))
+                .context("spawn reactor")?
+        };
+        Ok(Server { addr, shutdown, reactor: Some(reactor), pool: Some(pool), shared, metrics })
     }
 
     /// The bound address (resolves port 0 to the real ephemeral port).
@@ -205,17 +184,19 @@ impl Server {
         self.addr
     }
 
-    /// Stop accepting, finish in-flight requests, join every thread.
-    /// Idempotent; also runs on drop.
+    /// Stop accepting, finish in-flight requests (bounded grace), join
+    /// every thread.  Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
         if self.shutdown.swap(true, Ordering::SeqCst) {
             return;
         }
-        if let Some(a) = self.acceptor.take() {
-            let _ = a.join();
+        self.shared.waker.wake();
+        if let Some(r) = self.reactor.take() {
+            let _ = r.join();
         }
-        // Dropping the pool closes its queue and joins the handlers;
-        // they notice the flag within one read tick.
+        // Dropping the pool closes its queue and joins the workers
+        // (any still-running job finished before the reactor exited,
+        // or its response was abandoned at the grace deadline).
         self.pool.take();
     }
 }
@@ -226,66 +207,47 @@ impl Drop for Server {
     }
 }
 
-/// Serve one connection for its keep-alive lifetime.
-fn handle_connection(
-    stream: TcpStream,
-    svc: Arc<Service>,
-    metrics: Arc<ServerMetrics>,
-    shutdown: Arc<AtomicBool>,
-    keep_alive_ms: u64,
-) {
-    let _ = stream.set_nodelay(true);
-    if stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err() {
-        return;
-    }
-    let mut conn = HttpConn::new(stream);
-    if conn.set_read_timeout(Duration::from_millis(TICK_MS)).is_err() {
-        return;
-    }
-    let mut idle_ms: u64 = 0;
-    loop {
-        match conn.read_message() {
-            Ok(Outcome::Idle) => {
-                if shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
-                if conn.has_partial() {
-                    // Mid-message: a slow but progressing upload is
-                    // governed by the connection's 30 s mid-message
-                    // deadline, not the keep-alive budget.
-                    continue;
-                }
-                idle_ms += TICK_MS;
-                if idle_ms >= keep_alive_ms {
-                    break;
-                }
-            }
-            Ok(Outcome::Closed) => break,
-            Ok(Outcome::Message(msg)) => {
-                idle_ms = 0;
-                metrics.http_requests.fetch_add(1, Ordering::Relaxed);
-                let (resp, client_close) = match Request::from_message(msg) {
-                    Ok(req) => {
-                        let close = req.wants_close();
-                        (routes::route(&svc, &metrics, &req), close)
-                    }
-                    Err(e) => (Response::error(400, &format!("{e:#}")), true),
-                };
-                metrics.count_status(resp.status);
-                let closing = client_close || shutdown.load(Ordering::SeqCst);
-                if resp.write_to(&mut conn, closing).is_err() || closing {
-                    break;
-                }
-            }
-            Err(e) => {
-                // Malformed request: best-effort 400, then drop.  It
-                // still counts as a request so responses never
-                // outnumber requests in /metrics.
-                metrics.http_requests.fetch_add(1, Ordering::Relaxed);
-                metrics.count_status(400);
-                let _ = Response::error(400, &format!("{e:#}")).write_to(&mut conn, true);
-                break;
-            }
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Regression (ISSUE 7): 1xx/3xx must not inflate `responses_5xx`.
+    #[test]
+    fn count_status_buckets_by_class() {
+        let m = ServerMetrics::default();
+        for s in [200, 204, 400, 404, 500, 503, 101, 301, 304] {
+            m.count_status(s);
         }
+        assert_eq!(m.responses_2xx.load(Ordering::Relaxed), 2);
+        assert_eq!(m.responses_4xx.load(Ordering::Relaxed), 2);
+        assert_eq!(m.responses_5xx.load(Ordering::Relaxed), 2, "only real 5xx count as 5xx");
+        let other = m.responses_other.load(Ordering::Relaxed);
+        assert_eq!(other, 3, "1xx/3xx land in their own bucket");
+    }
+
+    #[test]
+    fn metrics_json_carries_every_counter() {
+        let m = ServerMetrics::default();
+        m.count_status(200);
+        m.add_scored(3);
+        m.rejected_queue.fetch_add(1, Ordering::Relaxed);
+        let v = m.to_json();
+        for key in [
+            "connections",
+            "open_connections",
+            "http_requests",
+            "responses_2xx",
+            "responses_4xx",
+            "responses_5xx",
+            "responses_other",
+            "samples_scored",
+            "rejected_busy",
+            "rejected_queue",
+        ] {
+            assert!(v.opt(key).is_some(), "metrics JSON must carry {key}");
+        }
+        assert_eq!(v.get("responses_2xx").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("samples_scored").unwrap().as_i64().unwrap(), 3);
+        assert_eq!(v.get("rejected_queue").unwrap().as_i64().unwrap(), 1);
     }
 }

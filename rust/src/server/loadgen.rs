@@ -1,20 +1,36 @@
 //! Device-fleet load generator: N simulated printed devices (the
 //! paper's §I smart-packaging / disposable-healthcare scenario, one
-//! ultra-cheap sensor each) driving the HTTP frontend closed-loop over
-//! real sockets.
+//! ultra-cheap sensor each) driving the HTTP frontend over real
+//! sockets.
 //!
 //! Deterministic by construction: device `d` draws its model mix and
 //! sample indices from its own PCG stream `Pcg32::new(seed, d)`, and
 //! think-times from a *separate* stream (`Pcg32::new(seed, fleet + d)`)
 //! so the request sequence depends only on
-//! (seed, fleet, requests_per_device) — never on think_ms or response
-//! timing.  The e2e test replays every recorded request through direct
-//! `Service::submit` and asserts bit-identical scores.
+//! (seed, fleet, requests_per_device) — never on think_ms, arrival
+//! mode, worker sharding or response timing.  The e2e test replays
+//! every recorded request through direct `Service::submit` and asserts
+//! bit-identical scores ([`verify`]).
+//!
+//! Two arrival modes:
+//!
+//! * **closed-loop** (default) — each device sends its next request as
+//!   soon as the previous response (plus an optional think-time)
+//!   arrives; throughput self-adjusts to server speed.
+//! * **open-loop** (`open_rps > 0`) — requests are launched on a fixed
+//!   fleet-wide schedule regardless of response latency, and each
+//!   latency is measured from its *scheduled* start, so server-side
+//!   queueing is visible instead of coordinated-omission-hidden.
+//!
+//! Devices are sharded onto a bounded set of client worker threads
+//! (`client_workers`, default `min(fleet, 64)`) — a 10k-device fleet
+//! does not need 10k OS threads; each device still owns its keep-alive
+//! connection and PCG streams.
 //!
 //! Latencies are end-to-end (serialize + socket + parse + batcher +
 //! runtime) and reported as nearest-rank percentiles
-//! (`util::stats::percentile_nearest`) plus a text histogram the CI
-//! smoke job uploads as an artifact.
+//! (`util::stats::percentile_nearest`) plus a text histogram and a JSON
+//! artifact ([`Report::to_json`]) the CI smoke job uploads.
 
 use std::net::SocketAddr;
 use std::sync::Arc;
@@ -23,6 +39,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::http::Client;
+use crate::coordinator::service::Service;
 use crate::ml::dataset::Dataset;
 use crate::ml::manifest::Manifest;
 use crate::util::json::Value;
@@ -33,19 +50,44 @@ use crate::util::stats::percentile_nearest_sorted;
 pub struct LoadgenConfig {
     /// Number of simulated devices, each with one keep-alive connection.
     pub fleet: usize,
-    /// Closed-loop requests per device.
+    /// Requests per device.
     pub requests_per_device: usize,
     /// Master seed; device `d` uses PCG stream `d`.
     pub seed: u64,
-    /// Upper bound on the uniform per-request think-time (0 = none).
+    /// Upper bound on the uniform per-request think-time (0 = none;
+    /// closed-loop only).
     pub think_ms: u64,
     /// Precision variant to score at (`p{precision}`).
     pub precision: u32,
+    /// Open-loop arrival rate for the whole fleet in requests/s
+    /// (0 = closed-loop).
+    pub open_rps: f64,
+    /// Client worker threads the devices are sharded onto
+    /// (0 = `min(fleet, 64)`).
+    pub client_workers: usize,
 }
 
 impl Default for LoadgenConfig {
     fn default() -> Self {
-        LoadgenConfig { fleet: 8, requests_per_device: 50, seed: 1, think_ms: 0, precision: 8 }
+        LoadgenConfig {
+            fleet: 8,
+            requests_per_device: 50,
+            seed: 1,
+            think_ms: 0,
+            precision: 8,
+            open_rps: 0.0,
+            client_workers: 0,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    fn workers(&self) -> usize {
+        if self.client_workers > 0 {
+            self.client_workers.min(self.fleet.max(1))
+        } else {
+            self.fleet.clamp(1, 64)
+        }
     }
 }
 
@@ -67,6 +109,10 @@ pub struct DeviceRecord {
 pub struct Report {
     pub records: Vec<DeviceRecord>,
     pub errors: usize,
+    /// The first error any device saw (connect refusals included) —
+    /// an all-fail run names its cause instead of reporting bare
+    /// counts.
+    pub first_error: Option<String>,
     pub wall_s: f64,
     pub rps: f64,
     pub p50_ms: f64,
@@ -76,12 +122,39 @@ pub struct Report {
 }
 
 impl Report {
+    fn new(
+        records: Vec<DeviceRecord>,
+        errors: usize,
+        first_error: Option<String>,
+        wall_s: f64,
+        cfg: &LoadgenConfig,
+    ) -> Report {
+        let mut lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Empty-sample guard: `percentile_nearest_sorted` returns NaN
+        // on an empty slice, which would flow into the JSON artifact —
+        // an all-fail run reports 0 percentiles and its first error.
+        let pct = |p: f64| if lat.is_empty() { 0.0 } else { percentile_nearest_sorted(&lat, p) };
+        Report {
+            rps: records.len() as f64 / wall_s.max(1e-9),
+            p50_ms: pct(50.0),
+            p90_ms: pct(90.0),
+            p99_ms: pct(99.0),
+            records,
+            errors,
+            first_error,
+            wall_s,
+            cfg: cfg.clone(),
+        }
+    }
+
     pub fn summary(&self) -> String {
-        format!(
-            "loadgen: fleet {} x {} requests -> {} ok, errors {}, wall {:.3}s, {:.0} req/s\n\
+        let mut s = format!(
+            "loadgen: fleet {} x {} requests ({}) -> {} ok, errors {}, wall {:.3}s, {:.0} req/s\n\
              latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
             self.cfg.fleet,
             self.cfg.requests_per_device,
+            self.mode(),
             self.records.len(),
             self.errors,
             self.wall_s,
@@ -89,7 +162,48 @@ impl Report {
             self.p50_ms,
             self.p90_ms,
             self.p99_ms
-        )
+        );
+        if let Some(e) = &self.first_error {
+            s.push_str(&format!("\nfirst error: {e}"));
+        }
+        s
+    }
+
+    fn mode(&self) -> String {
+        if self.cfg.open_rps > 0.0 {
+            format!("open-loop {:.0} req/s", self.cfg.open_rps)
+        } else {
+            "closed-loop".to_string()
+        }
+    }
+
+    /// Machine-readable artifact (`--out x.json`).  All numbers finite:
+    /// empty distributions are zeros, never NaN.
+    pub fn to_json(&self) -> Value {
+        let finite = |v: f64| if v.is_finite() { Value::Num(v) } else { Value::Null };
+        Value::obj(vec![
+            ("fleet", Value::from(self.cfg.fleet)),
+            ("requests_per_device", Value::from(self.cfg.requests_per_device)),
+            ("seed", Value::from(self.cfg.seed as i64)),
+            ("think_ms", Value::from(self.cfg.think_ms as i64)),
+            ("precision", Value::from(self.cfg.precision as i64)),
+            ("open_rps", finite(self.cfg.open_rps)),
+            ("mode", Value::from(self.mode().as_str())),
+            ("ok", Value::from(self.records.len())),
+            ("errors", Value::from(self.errors)),
+            (
+                "first_error",
+                match &self.first_error {
+                    Some(e) => Value::from(e.as_str()),
+                    None => Value::Null,
+                },
+            ),
+            ("wall_s", finite(self.wall_s)),
+            ("rps", finite(self.rps)),
+            ("p50_ms", finite(self.p50_ms)),
+            ("p90_ms", finite(self.p90_ms)),
+            ("p99_ms", finite(self.p99_ms)),
+        ])
     }
 
     /// Text latency histogram (16 linear buckets) for logging/upload.
@@ -97,10 +211,11 @@ impl Report {
         let lat: Vec<f64> = self.records.iter().map(|r| r.latency_ms).collect();
         let mut out = format!(
             "# pbsp loadgen latency histogram (ms)\n\
-             # fleet {} x {} requests, seed {}, p{}\n\
+             # fleet {} x {} requests ({}), seed {}, p{}\n\
              # n {}  errors {}  p50 {:.3}  p90 {:.3}  p99 {:.3}  {:.0} req/s\n",
             self.cfg.fleet,
             self.cfg.requests_per_device,
+            self.mode(),
             self.cfg.seed,
             self.cfg.precision,
             lat.len(),
@@ -139,12 +254,29 @@ impl Report {
     }
 }
 
+/// Per-device state, owned by whichever worker its shard lands on.
+struct DeviceState {
+    device: usize,
+    rng: Pcg32,
+    think_rng: Pcg32,
+    client: Option<Client>,
+    seq: usize,
+    /// Earliest time the next request may launch.
+    next_at: Instant,
+    records: Vec<DeviceRecord>,
+    errors: usize,
+    first_error: Option<String>,
+}
+
 /// Run a fleet against a listening frontend.  Loads the artifact tree
-/// client-side (devices own their sensor data), spawns one OS thread
-/// per device, merges records in (device, seq) order.
+/// client-side (devices own their sensor data), shards devices onto
+/// bounded worker threads, merges records in (device, seq) order.
 pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<Report> {
     if cfg.fleet == 0 || cfg.requests_per_device == 0 {
         bail!("fleet and requests_per_device must be positive");
+    }
+    if !cfg.open_rps.is_finite() || cfg.open_rps < 0.0 {
+        bail!("open_rps must be a finite non-negative rate");
     }
     let dir = crate::artifacts_dir()?;
     let manifest = Manifest::load(&dir)?;
@@ -162,94 +294,180 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<Report> {
         Arc::new(manifest.models.iter().map(|m| m.name.clone()).collect());
     let datasets = Arc::new(datasets);
 
+    let workers = cfg.workers();
     let t0 = Instant::now();
-    let handles: Vec<_> = (0..cfg.fleet)
-        .map(|d| {
+    // Round-robin device -> worker assignment; each worker owns its
+    // devices' full state, so no cross-thread synchronization at all.
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
             let names = Arc::clone(&names);
             let datasets = Arc::clone(&datasets);
             let cfg = cfg.clone();
+            let devices: Vec<usize> = (0..cfg.fleet).filter(|d| d % workers == w).collect();
             std::thread::Builder::new()
-                .name(format!("pbsp-device-{d}"))
-                .spawn(move || device_loop(addr, d, &names, &datasets, &cfg))
-                .context("spawn device thread")
+                .name(format!("pbsp-lgworker-{w}"))
+                .spawn(move || worker_loop(addr, t0, devices, &names, &datasets, &cfg))
+                .context("spawn loadgen worker")
         })
         .collect::<Result<_>>()?;
     let mut records = Vec::with_capacity(cfg.fleet * cfg.requests_per_device);
     let mut errors = 0usize;
+    let mut first_error: Option<String> = None;
     for h in handles {
-        let (recs, errs) = h.join().map_err(|_| anyhow!("device thread panicked"))?;
+        let (recs, errs, first) = h.join().map_err(|_| anyhow!("loadgen worker panicked"))?;
         records.extend(recs);
         errors += errs;
+        if first_error.is_none() {
+            first_error = first;
+        }
     }
     let wall_s = t0.elapsed().as_secs_f64();
     records.sort_by_key(|r: &DeviceRecord| (r.device, r.seq));
-    let mut lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Ok(Report {
-        rps: records.len() as f64 / wall_s.max(1e-9),
-        p50_ms: percentile_nearest_sorted(&lat, 50.0),
-        p90_ms: percentile_nearest_sorted(&lat, 90.0),
-        p99_ms: percentile_nearest_sorted(&lat, 99.0),
-        records,
-        errors,
-        wall_s,
-        cfg: cfg.clone(),
-    })
+    Ok(Report::new(records, errors, first_error, wall_s, cfg))
 }
 
-/// One device: keep-alive connection, closed-loop request sequence
-/// drawn from its own PCG stream.  Returns (records, error count).
-fn device_loop(
+/// One worker: interleave its devices by `next_at` schedule, running
+/// one request per due device per pass.
+fn worker_loop(
     addr: SocketAddr,
-    device: usize,
+    t0: Instant,
+    devices: Vec<usize>,
     names: &[String],
     datasets: &[Dataset],
     cfg: &LoadgenConfig,
-) -> (Vec<DeviceRecord>, usize) {
-    let mut rng = Pcg32::new(cfg.seed, device as u64);
-    // Think-times come from their own stream (offset past every
-    // device's request stream), so the request sequence is identical
-    // at any think_ms setting.
-    let mut think_rng = Pcg32::new(cfg.seed, (cfg.fleet + device) as u64);
-    let mut client = match Client::connect(addr) {
-        Ok(c) => Some(c),
-        Err(_) => None,
+) -> (Vec<DeviceRecord>, usize, Option<String>) {
+    // Open-loop: the fleet-wide schedule is `open_rps` evenly spaced,
+    // device-interleaved — device d launches at t0 + (d + k*fleet)/rate.
+    let interval = if cfg.open_rps > 0.0 {
+        Some(Duration::from_secs_f64(cfg.fleet as f64 / cfg.open_rps))
+    } else {
+        None
     };
-    let mut records = Vec::with_capacity(cfg.requests_per_device);
-    let mut errors = 0usize;
-    for seq in 0..cfg.requests_per_device {
-        let model = rng.below(names.len() as u64) as usize;
-        let sample = rng.below(datasets[model].len() as u64) as usize;
-        let path = format!("/v1/score/{}/p{}", names[model], cfg.precision);
-        let body = score_body(&datasets[model].x[sample]);
-        let t = Instant::now();
-        match post_with_retry(&mut client, addr, &path, &body) {
-            Ok(text) => match parse_scores(&text) {
-                Ok(scores) => records.push(DeviceRecord {
-                    device,
-                    seq,
-                    model,
-                    sample,
-                    scores,
-                    latency_ms: t.elapsed().as_secs_f64() * 1e3,
-                }),
-                Err(_) => errors += 1,
+    let mut states: Vec<DeviceState> = devices
+        .into_iter()
+        .map(|d| DeviceState {
+            device: d,
+            rng: Pcg32::new(cfg.seed, d as u64),
+            think_rng: Pcg32::new(cfg.seed, (cfg.fleet + d) as u64),
+            client: None,
+            seq: 0,
+            next_at: match interval {
+                Some(iv) => t0 + iv.mul_f64(d as f64 / cfg.fleet as f64),
+                None => t0,
             },
-            Err(_) => errors += 1,
+            records: Vec::with_capacity(cfg.requests_per_device),
+            errors: 0,
+            first_error: None,
+        })
+        .collect();
+    loop {
+        let now = Instant::now();
+        let mut all_done = true;
+        let mut earliest: Option<Instant> = None;
+        for dev in states.iter_mut() {
+            if dev.seq >= cfg.requests_per_device {
+                continue;
+            }
+            all_done = false;
+            if dev.next_at > now {
+                earliest = Some(earliest.map_or(dev.next_at, |e| e.min(dev.next_at)));
+                continue;
+            }
+            run_one(addr, dev, names, datasets, cfg);
+            // Schedule the follow-up.
+            match interval {
+                // Open-loop: fixed cadence from the *scheduled* slot, so
+                // a slow server accumulates visible queueing delay.
+                Some(iv) => dev.next_at += iv,
+                None => {
+                    dev.next_at = Instant::now();
+                    if cfg.think_ms > 0 {
+                        let think = dev.think_rng.below(cfg.think_ms + 1);
+                        dev.next_at += Duration::from_millis(think);
+                    }
+                }
+            }
         }
-        if cfg.think_ms > 0 {
-            let think = think_rng.below(cfg.think_ms + 1);
-            std::thread::sleep(Duration::from_millis(think));
+        if all_done {
+            break;
+        }
+        if let Some(e) = earliest {
+            let now = Instant::now();
+            if e > now {
+                // Bounded nap so newly-due devices are picked up promptly.
+                std::thread::sleep((e - now).min(Duration::from_millis(2)));
+            }
         }
     }
-    (records, errors)
+    let mut records = Vec::new();
+    let mut errors = 0usize;
+    let mut first_error: Option<String> = None;
+    for dev in states {
+        records.extend(dev.records);
+        errors += dev.errors;
+        if first_error.is_none() {
+            first_error = dev.first_error;
+        }
+    }
+    (records, errors, first_error)
 }
 
-/// POST with one reconnect retry for *transport* failures: the server
+/// Execute one request for one device.  Open-loop latency is measured
+/// from the scheduled slot (`next_at`), closed-loop from launch.
+fn run_one(
+    addr: SocketAddr,
+    dev: &mut DeviceState,
+    names: &[String],
+    datasets: &[Dataset],
+    cfg: &LoadgenConfig,
+) {
+    let seq = dev.seq;
+    dev.seq += 1;
+    let (model, sample) = draw_request(&mut dev.rng, datasets);
+    let path = format!("/v1/score/{}/p{}", names[model], cfg.precision);
+    let body = score_body(&datasets[model].x[sample]);
+    let t_start = if cfg.open_rps > 0.0 { dev.next_at } else { Instant::now() };
+    match post_with_retry(&mut dev.client, addr, &path, &body) {
+        Ok(text) => match parse_scores(&text) {
+            Ok(scores) => dev.records.push(DeviceRecord {
+                device: dev.device,
+                seq,
+                model,
+                sample,
+                scores,
+                latency_ms: t_start.elapsed().as_secs_f64() * 1e3,
+            }),
+            Err(e) => dev.fail(format!("device {}: bad response: {e:#}", dev.device)),
+        },
+        Err(e) => dev.fail(format!("device {}: {e:#}", dev.device)),
+    }
+}
+
+impl DeviceState {
+    fn fail(&mut self, msg: String) {
+        self.errors += 1;
+        if self.first_error.is_none() {
+            self.first_error = Some(msg);
+        }
+    }
+}
+
+/// The per-request draw, isolated so its order is pinned by tests: one
+/// model draw, one sample draw — nothing else touches the request
+/// stream (think-times and scheduling use a separate stream).
+fn draw_request(rng: &mut Pcg32, datasets: &[Dataset]) -> (usize, usize) {
+    let model = rng.below(datasets.len() as u64) as usize;
+    let sample = rng.below(datasets[model].len() as u64) as usize;
+    (model, sample)
+}
+
+/// POST with transport-failure retries that each *consume an attempt* —
+/// including a failed reconnect (`Client::connect` refusals during
+/// server churn must not abort the whole device loop).  The server
 /// reaps idle keep-alive connections (think-time fleets), so a device
 /// whose connection was reaped reconnects and repeats — safe because
 /// scoring is read-only.  HTTP-level failures (including the server's
-/// 503 over-capacity refusal) are deterministic and surface as errors
+/// 503 backpressure refusals) are deterministic and surface as errors
 /// immediately.
 fn post_with_retry(
     client: &mut Option<Client>,
@@ -257,18 +475,34 @@ fn post_with_retry(
     path: &str,
     body: &str,
 ) -> Result<String> {
-    for _attempt in 0..2 {
+    const ATTEMPTS: usize = 2;
+    let mut last: Option<anyhow::Error> = None;
+    for _attempt in 0..ATTEMPTS {
         if client.is_none() {
-            *client = Some(Client::connect(addr)?);
+            match Client::connect(addr) {
+                Ok(c) => *client = Some(c),
+                Err(e) => {
+                    // A transient connect failure consumes this attempt
+                    // instead of propagating out of the retry loop.
+                    last = Some(e);
+                    continue;
+                }
+            }
         }
         let c = client.as_mut().expect("client just connected");
         match c.post(path, body) {
             Ok((200, text)) => return Ok(text),
             Ok((status, text)) => bail!("HTTP {status}: {text}"),
-            Err(_) => *client = None, // dead connection: reconnect once
+            Err(e) => {
+                last = Some(e);
+                *client = None; // dead connection: reconnect next attempt
+            }
         }
     }
-    bail!("request failed after reconnect")
+    match last {
+        Some(e) => Err(e.context(format!("request failed after {ATTEMPTS} attempts"))),
+        None => bail!("request failed after {ATTEMPTS} attempts"),
+    }
 }
 
 fn score_body(x: &[f32]) -> String {
@@ -280,10 +514,54 @@ fn parse_scores(text: &str) -> Result<Vec<f64>> {
     Value::parse(text)?.get("scores")?.as_f64_vec()
 }
 
+/// Replay every fleet record through in-process [`Service::scores`] and
+/// require the HTTP-served scores to be bit-identical (the fleet JSON
+/// round-trips f64 exactly, so any drift is a real divergence).  With
+/// an ISS-backed service this pins the whole chain — HTTP frontend →
+/// reactor → dynamic batcher → batched lockstep ISS — against a direct
+/// in-process run.
+pub fn verify(svc: &Service, report: &Report, precision: u32) -> Result<usize> {
+    use crate::coordinator::router::Key;
+    // Group records per model so each replay is one bulk batch.
+    let mut by_model: Vec<Vec<&DeviceRecord>> = vec![Vec::new(); svc.models.len()];
+    for r in &report.records {
+        by_model[r.model].push(r);
+    }
+    let mut checked = 0usize;
+    for (mi, recs) in by_model.iter().enumerate() {
+        if recs.is_empty() {
+            continue;
+        }
+        let model = &svc.models[mi];
+        let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
+        let xs: Vec<Vec<f32>> = recs.iter().map(|r| ds.x[r.sample].clone()).collect();
+        let got = svc.scores(&Key::precision(&model.name, precision), &xs)?;
+        for (r, g) in recs.iter().zip(&got) {
+            if &r.scores != g {
+                bail!(
+                    "verify: device {} seq {} ({} sample {}): served {:?} vs in-process {:?}",
+                    r.device,
+                    r.seq,
+                    model.name,
+                    r.sample,
+                    r.scores,
+                    g
+                );
+            }
+        }
+        checked += recs.len();
+    }
+    Ok(checked)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::stats::percentile_nearest;
+
+    fn empty_report(cfg: &LoadgenConfig) -> Report {
+        Report::new(Vec::new(), 7, Some("device 0: connect refused".into()), 0.25, cfg)
+    }
 
     #[test]
     fn score_body_roundtrips_f32_exactly() {
@@ -304,6 +582,60 @@ mod tests {
         assert_eq!(draw(1, 0), draw(1, 0));
         assert_ne!(draw(1, 0), draw(1, 1));
         assert_ne!(draw(1, 0), draw(2, 0));
+    }
+
+    /// Regression (ISSUE 7): an all-fail run must report finite (zero)
+    /// percentiles and carry its first error — not NaN into the JSON
+    /// artifact.
+    #[test]
+    fn all_fail_report_has_no_nan() {
+        let cfg = LoadgenConfig::default();
+        let r = empty_report(&cfg);
+        assert_eq!(r.p50_ms, 0.0);
+        assert_eq!(r.p90_ms, 0.0);
+        assert_eq!(r.p99_ms, 0.0);
+        assert!(r.rps == 0.0);
+        let json = r.to_json().to_string();
+        assert!(!json.contains("NaN") && !json.contains("nan"), "artifact leaked NaN: {json}");
+        // The artifact must round-trip as valid JSON and name the cause.
+        let back = Value::parse(&json).unwrap();
+        assert_eq!(back.get("errors").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(back.get("p50_ms").unwrap().as_f64().unwrap(), 0.0);
+        assert!(back.get("first_error").unwrap().as_str().unwrap().contains("connect"));
+        assert!(r.summary().contains("first error"), "summary must surface the first error");
+    }
+
+    /// Regression (ISSUE 7): a refused `Client::connect` consumes a
+    /// retry attempt (and yields an error) instead of propagating out
+    /// of the retry loop with `?`.
+    #[test]
+    fn connect_refusal_consumes_attempts() {
+        // Bind + drop: the ephemeral port is (almost surely) refusing.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let mut client: Option<Client> = None;
+        let err = post_with_retry(&mut client, addr, "/v1/score/m/p8", "{}").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("after 2 attempts"),
+            "connect refusal must burn through the retry budget, got: {msg}"
+        );
+        assert!(client.is_none());
+    }
+
+    /// The request draw stream is independent of arrival mode and
+    /// sharding: (model, sample) sequences depend only on (seed, device).
+    #[test]
+    fn open_loop_schedule_preserves_draw_order() {
+        let seqs = |seed: u64| {
+            let mut rng = Pcg32::new(seed, 3);
+            (0..32).map(|_| (rng.below(6), rng.below(40))).collect::<Vec<_>>()
+        };
+        // draw_request consumes exactly two draws per request — the
+        // whole schedule/think machinery never touches this stream.
+        assert_eq!(seqs(9), seqs(9));
     }
 
     #[test]
@@ -327,6 +659,7 @@ mod tests {
             p99_ms: percentile_nearest(&lat, 99.0),
             records,
             errors: 0,
+            first_error: None,
             wall_s: 1.0,
             cfg,
         };
@@ -334,5 +667,19 @@ mod tests {
         assert!(h.contains("# n 10  errors 0"));
         assert!(h.lines().count() > 10, "16 buckets expected:\n{h}");
         assert!(report.summary().contains("errors 0"));
+    }
+
+    #[test]
+    fn worker_sharding_covers_every_device() {
+        for (fleet, workers) in [(1usize, 1usize), (10, 3), (64, 64), (1000, 64)] {
+            let mut seen = vec![false; fleet];
+            for w in 0..workers {
+                for d in (0..fleet).filter(|d| d % workers == w) {
+                    assert!(!seen[d], "device {d} assigned twice");
+                    seen[d] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "all devices covered ({fleet}/{workers})");
+        }
     }
 }

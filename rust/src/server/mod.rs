@@ -12,11 +12,16 @@
 //! * [`routes`] — the endpoint surface: `POST
 //!   /v1/score/{model}/{precision}` (single sample or batch JSON),
 //!   `GET /v1/models`, `GET /metrics`, `GET /healthz`;
-//! * [`listener`] — a tick-polled acceptor thread handing each
-//!   connection to a `util::threadpool::ThreadPool` worker for its
-//!   keep-alive lifetime;
-//! * [`loadgen`] — a deterministic (PCG-per-device) closed-loop fleet
-//!   simulator with nearest-rank latency percentiles.
+//! * [`reactor`] — the event-driven serving core: one thread
+//!   multiplexes every connection non-blocking over `util::poll`,
+//!   dispatching fully-buffered requests to the `util::threadpool`
+//!   compute pool (so `--http-threads` sizes compute, not the
+//!   connection cap);
+//! * [`listener`] — the `Server` lifecycle handle, configuration and
+//!   shared metrics around the reactor;
+//! * [`loadgen`] — a deterministic (PCG-per-device) fleet simulator
+//!   (closed-loop or open-loop arrivals) with nearest-rank latency
+//!   percentiles.
 //!
 //! Scoring rides the coordinator's *streaming* `Service::submit` path,
 //! so concurrent connections coalesce in the dynamic batcher into real
@@ -27,6 +32,7 @@
 pub mod http;
 pub mod listener;
 pub mod loadgen;
+pub mod reactor;
 pub mod routes;
 
 pub use listener::{Server, ServerConfig, ServerMetrics};

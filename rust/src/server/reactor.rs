@@ -1,0 +1,491 @@
+//! The event-driven serving core: one reactor thread multiplexes every
+//! connection socket over [`crate::util::poll`], drives the resumable
+//! [`HttpConn`] framing state machine per connection, and hands a
+//! request to the `util::threadpool` compute pool only once its full
+//! body is buffered.
+//!
+//! This inverts the old thread-per-connection model: `http_threads`
+//! sizes the *compute* pool, while connection concurrency is bounded
+//! only by `max_connections` — thousands of mostly-idle keep-alive
+//! devices (the paper's fleet deployment shape) cost one fd and a map
+//! entry each, not a parked worker thread.
+//!
+//! Per-connection life cycle (the `State` machine):
+//!
+//! ```text
+//!   accept ──> Reading ──(full message)──> InFlight ──(pool done)──> Writing
+//!                 ^                                                    │
+//!                 └──────────(drained; next pipelined message?)────────┘
+//! ```
+//!
+//! * `Reading` — registered for read readiness; bytes feed
+//!   `HttpConn::read_message`, which resumes mid-message in O(new
+//!   bytes).
+//! * `InFlight` — the request is queued/executing on the pool; the
+//!   socket is registered for *nothing* (flow control: at most one
+//!   request per connection in flight, so a pipelining client cannot
+//!   queue unboundedly).
+//! * `Writing` — the response drains through non-blocking
+//!   `flush_progress` calls under write readiness; a peer that stops
+//!   reading is evicted after `write_stall` without ever blocking the
+//!   reactor (or, in the old model's failure mode, the accept path).
+//!
+//! Backpressure is two-level and always visible: past `max_connections`
+//! a new connection gets an asynchronously-written `503 Retry-After`
+//! then close (`rejected_busy`); past `max_queued` in-flight requests a
+//! parsed request gets `503 Retry-After` on its healthy keep-alive
+//! connection (`rejected_queue`).  Pool workers return responses
+//! through a mutex'd completion list and a [`Waker`], so the reactor
+//! sleeps in `poll(2)` instead of ticking.
+//!
+//! Shutdown: the listener stops being polled, reads stop, in-flight
+//! requests finish and their responses drain (flagged
+//! `Connection: close`), bounded by a grace period — then every socket
+//! is dropped.
+
+use std::collections::BTreeMap;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::http::{HttpConn, Message, Outcome, Response};
+use super::listener::ServerMetrics;
+use super::routes;
+use crate::coordinator::service::Service;
+use crate::util::poll::{self, PollFd, Waker};
+use crate::util::threadpool::ThreadPool;
+
+/// Poll timeout: bounds deadline-sweep latency (keep-alive reaping,
+/// slow-loris eviction, write-stall eviction) when no fd turns ready.
+const TICK: Duration = Duration::from_millis(20);
+/// `Retry-After` seconds suggested on both backpressure 503s.
+const RETRY_AFTER_S: u64 = 1;
+
+/// Reactor tuning, resolved from `ServerConfig` by the listener.
+#[derive(Debug, Clone)]
+pub(crate) struct ReactorConfig {
+    pub keep_alive: Duration,
+    pub msg_deadline: Duration,
+    pub write_stall: Duration,
+    pub max_connections: usize,
+    pub max_queued: usize,
+    pub shutdown_grace: Duration,
+}
+
+/// State shared between the reactor thread, the pool workers and the
+/// `Server` handle.
+pub(crate) struct ReactorShared {
+    /// Responses finished by pool workers, keyed by connection token;
+    /// drained by the reactor after a wake.
+    completions: Mutex<Vec<Completion>>,
+    /// Interrupts the reactor's `poll` (request completed, shutdown).
+    pub waker: Waker,
+    /// Requests dispatched to the pool whose completions the reactor
+    /// has not yet drained — the `max_queued` backpressure gauge.
+    inflight: AtomicU64,
+}
+
+impl ReactorShared {
+    pub fn new() -> anyhow::Result<ReactorShared> {
+        Ok(ReactorShared {
+            completions: Mutex::new(Vec::new()),
+            waker: Waker::new()?,
+            inflight: AtomicU64::new(0),
+        })
+    }
+}
+
+struct Completion {
+    token: u64,
+    resp: Response,
+    close: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Reading,
+    InFlight,
+    Writing,
+}
+
+struct Conn {
+    http: HttpConn,
+    state: State,
+    /// Last forward progress (accept, message, write bytes): the
+    /// keep-alive clock in `Reading`, the stall clock in `Writing`.
+    last_activity: Instant,
+    close_after_write: bool,
+}
+
+/// What to do with a connection after driving it.
+enum Drive {
+    Keep,
+    Evict,
+}
+
+/// Everything a connection drive needs, borrowed once per loop round.
+struct Ctx<'a> {
+    svc: &'a Arc<Service>,
+    pool: &'a Arc<ThreadPool>,
+    metrics: &'a Arc<ServerMetrics>,
+    shared: &'a Arc<ReactorShared>,
+    cfg: &'a ReactorConfig,
+    draining: bool,
+}
+
+/// The reactor body; runs on a dedicated thread until shutdown + drain.
+pub(crate) fn run(
+    listener: TcpListener,
+    svc: Arc<Service>,
+    pool: Arc<ThreadPool>,
+    metrics: Arc<ServerMetrics>,
+    shared: Arc<ReactorShared>,
+    shutdown: Arc<AtomicBool>,
+    cfg: ReactorConfig,
+) {
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut next_token: u64 = 0;
+    let mut drain_deadline: Option<Instant> = None;
+
+    loop {
+        if shutdown.load(Ordering::SeqCst) && drain_deadline.is_none() {
+            drain_deadline = Some(Instant::now() + cfg.shutdown_grace);
+        }
+        let ctx = Ctx {
+            svc: &svc,
+            pool: &pool,
+            metrics: &metrics,
+            shared: &shared,
+            cfg: &cfg,
+            draining: drain_deadline.is_some(),
+        };
+
+        // 1. Deliver finished responses onto their connections.
+        let done: Vec<Completion> = {
+            let mut lock = shared.completions.lock().unwrap();
+            lock.drain(..).collect()
+        };
+        for c in done {
+            // Every handler-produced response is counted, even if its
+            // connection was evicted meanwhile (the work happened).
+            metrics.count_status(c.resp.status);
+            if let Some(conn) = conns.get_mut(&c.token) {
+                conn.close_after_write |= c.close || ctx.draining;
+                conn.http.queue_response(&c.resp, conn.close_after_write);
+                conn.state = State::Writing;
+                conn.last_activity = Instant::now();
+                // Eager flush: most responses fit the send buffer, so
+                // they complete without waiting for a poll round.
+                if let Drive::Evict = advance_write(c.token, conn, &ctx) {
+                    conns.remove(&c.token);
+                }
+            }
+        }
+
+        // 2. Drained? (Checked after completions so their writes count.)
+        if let Some(deadline) = drain_deadline {
+            let inflight = shared.inflight.load(Ordering::SeqCst);
+            let writing = conns.values().any(|c| c.http.has_pending_write());
+            let pending = !shared.completions.lock().unwrap().is_empty();
+            if (inflight == 0 && !writing && !pending) || Instant::now() >= deadline {
+                break;
+            }
+        }
+
+        // 3. Deadline sweeps (cheap: one pass over the map per tick).
+        sweep_deadlines(&mut conns, &ctx);
+        metrics.open_connections.store(conns.len() as u64, Ordering::Relaxed);
+
+        // 4. Build the interest set.
+        let mut fds: Vec<PollFd> = Vec::with_capacity(conns.len() + 2);
+        let mut owners: Vec<Slot> = Vec::with_capacity(conns.len() + 2);
+        fds.push(PollFd::new(shared.waker.fd(), true, false));
+        owners.push(Slot::Waker);
+        if !ctx.draining {
+            fds.push(PollFd::new(poll::fd_of(&listener), true, false));
+            owners.push(Slot::Listener);
+        }
+        for (&token, conn) in &conns {
+            let (r, w) = match conn.state {
+                State::Reading => (!ctx.draining, false),
+                State::InFlight => (false, false),
+                State::Writing => (false, true),
+            };
+            if r || w {
+                fds.push(PollFd::new(poll::fd_of(conn.http.stream()), r, w));
+                owners.push(Slot::Conn(token));
+            }
+        }
+
+        // 5. Sleep until readiness, a wake, or the sweep tick.
+        if poll::poll(&mut fds, TICK).is_err() {
+            // A transient poll failure: tick on — per-connection errors
+            // surface through their own drives.
+            std::thread::sleep(TICK);
+        }
+
+        // 6. Drive every ready source.
+        for (pfd, slot) in fds.iter().zip(&owners) {
+            if !pfd.ready() {
+                continue;
+            }
+            match *slot {
+                Slot::Waker => shared.waker.drain(),
+                Slot::Listener => accept_ready(&listener, &mut conns, &mut next_token, &ctx),
+                Slot::Conn(token) => {
+                    let Some(conn) = conns.get_mut(&token) else { continue };
+                    let action = match conn.state {
+                        State::Reading if pfd.readable => drive_read(token, conn, &ctx),
+                        State::Writing if pfd.writable => advance_write(token, conn, &ctx),
+                        // Error/hangup with no usable readiness: the
+                        // peer is gone.
+                        _ if pfd.error => Drive::Evict,
+                        _ => Drive::Keep,
+                    };
+                    if let Drive::Evict = action {
+                        conns.remove(&token);
+                    }
+                }
+            }
+        }
+    }
+
+    metrics.open_connections.store(0, Ordering::Relaxed);
+    // Dropping `conns` closes every socket; unfinished completions
+    // (grace expired) are discarded with them.
+}
+
+enum Slot {
+    Waker,
+    Listener,
+    Conn(u64),
+}
+
+/// Accept everything pending.  Admission control happens here, but a
+/// refusal is just a connection born in `Writing` with a queued 503 —
+/// it drains asynchronously under the same write machinery as any
+/// response, so a refused client that never reads can stall only its
+/// own eviction timer, never the accept path.
+fn accept_ready(
+    listener: &TcpListener,
+    conns: &mut BTreeMap<u64, Conn>,
+    next_token: &mut u64,
+    ctx: &Ctx<'_>,
+) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _peer)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                // Transient accept failure (e.g. EMFILE): log and let
+                // the next poll round retry.
+                eprintln!("pbsp-http: accept error: {e}");
+                return;
+            }
+        };
+        let token = *next_token;
+        *next_token += 1;
+        match admit(stream, conns.len(), ctx) {
+            Some(mut conn) => {
+                if conn.state == State::Writing {
+                    // A refusal: try to push the 503 right away; if it
+                    // already drained, never even enter the map.
+                    if let Drive::Evict = advance_write(token, &mut conn, ctx) {
+                        continue;
+                    }
+                }
+                conns.insert(token, conn);
+            }
+            None => continue,
+        }
+    }
+}
+
+/// Configure a fresh socket and decide admission.  `None` means the
+/// socket could not be set up and was dropped.
+fn admit(stream: TcpStream, open: usize, ctx: &Ctx<'_>) -> Option<Conn> {
+    if stream.set_nonblocking(true).is_err() {
+        return None;
+    }
+    let _ = stream.set_nodelay(true);
+    if open >= ctx.cfg.max_connections {
+        // Refuse — asynchronously.  Only `rejected_busy` counts this
+        // (no request was read, so request/response counters stay
+        // reconcilable).
+        ctx.metrics.rejected_busy.fetch_add(1, Ordering::Relaxed);
+        let mut http = HttpConn::new(stream);
+        let resp =
+            Response::unavailable("connection capacity reached; raise --max-conns", RETRY_AFTER_S);
+        http.queue_response(&resp, true);
+        return Some(Conn {
+            http,
+            state: State::Writing,
+            last_activity: Instant::now(),
+            close_after_write: true,
+        });
+    }
+    ctx.metrics.connections.fetch_add(1, Ordering::Relaxed);
+    let mut http = HttpConn::new(stream);
+    http.set_msg_deadline(ctx.cfg.msg_deadline);
+    Some(Conn {
+        http,
+        state: State::Reading,
+        last_activity: Instant::now(),
+        close_after_write: false,
+    })
+}
+
+/// Read readiness on a `Reading` connection: pump the framing state
+/// machine; dispatch a completed message.
+fn drive_read(token: u64, conn: &mut Conn, ctx: &Ctx<'_>) -> Drive {
+    match conn.http.read_message() {
+        Ok(Outcome::Message(msg)) => {
+            conn.last_activity = Instant::now();
+            dispatch(token, conn, msg, ctx);
+            match conn.state {
+                // Queue-level 503 was queued inline: flush it eagerly.
+                State::Writing => advance_write(token, conn, ctx),
+                _ => Drive::Keep,
+            }
+        }
+        Ok(Outcome::Idle) => Drive::Keep, // partial stays buffered
+        Ok(Outcome::Closed) => Drive::Evict,
+        Err(e) => {
+            queue_request_error(conn, ctx, &format!("{e:#}"));
+            advance_write(token, conn, ctx)
+        }
+    }
+}
+
+/// Framing violation or tripped mid-message deadline: best-effort 400,
+/// then close.  It counts as a request so responses never outnumber
+/// requests in `/metrics`.
+fn queue_request_error(conn: &mut Conn, ctx: &Ctx<'_>, msg: &str) {
+    ctx.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+    ctx.metrics.count_status(400);
+    conn.http.queue_response(&Response::error(400, msg), true);
+    conn.state = State::Writing;
+    conn.close_after_write = true;
+    conn.last_activity = Instant::now();
+}
+
+/// A complete request: queue-level backpressure, then hand the routing
+/// + scoring work to the compute pool.  Leaves the connection in
+/// `InFlight` (dispatched) or `Writing` (backpressure 503 queued).
+fn dispatch(token: u64, conn: &mut Conn, msg: Message, ctx: &Ctx<'_>) {
+    ctx.metrics.http_requests.fetch_add(1, Ordering::Relaxed);
+    if ctx.shared.inflight.load(Ordering::SeqCst) >= ctx.cfg.max_queued as u64 {
+        // The compute pool is saturated past its queue budget: tell
+        // the device to back off, but keep its (healthy) connection.
+        ctx.metrics.rejected_queue.fetch_add(1, Ordering::Relaxed);
+        ctx.metrics.count_status(503);
+        let resp = Response::unavailable("request queue full; retry shortly", RETRY_AFTER_S);
+        conn.close_after_write |= ctx.draining;
+        conn.http.queue_response(&resp, conn.close_after_write);
+        conn.state = State::Writing;
+        conn.last_activity = Instant::now();
+        return;
+    }
+    ctx.shared.inflight.fetch_add(1, Ordering::SeqCst);
+    conn.state = State::InFlight;
+    let svc = Arc::clone(ctx.svc);
+    let metrics = Arc::clone(ctx.metrics);
+    let shared = Arc::clone(ctx.shared);
+    ctx.pool.execute(move || {
+        // Panics become a 500 so a handler bug can neither kill the
+        // worker nor leak the in-flight slot (or the connection).
+        let (resp, close) = catch_unwind(AssertUnwindSafe(|| routes::respond(&svc, &metrics, msg)))
+            .unwrap_or_else(|_| (Response::error(500, "handler panicked"), true));
+        // Publish the completion BEFORE dropping the in-flight slot:
+        // shutdown exits once inflight hits 0 with nothing pending, so
+        // the reverse order could drop a finished response on the
+        // floor during drain.
+        shared.completions.lock().unwrap().push(Completion { token, resp, close });
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        shared.waker.wake();
+    });
+}
+
+/// Push queued bytes, then settle the connection's next state: evict on
+/// close, pick up a pipelined request already in the buffer, or return
+/// to `Reading`.  Loops because a pipelined request can immediately
+/// queue another response (backpressure 503, parse 400).
+fn advance_write(token: u64, conn: &mut Conn, ctx: &Ctx<'_>) -> Drive {
+    loop {
+        match conn.http.flush_progress() {
+            Ok((wrote, done)) => {
+                if wrote > 0 {
+                    conn.last_activity = Instant::now();
+                }
+                if !done {
+                    return Drive::Keep; // wait for write readiness
+                }
+                if conn.close_after_write {
+                    return Drive::Evict;
+                }
+            }
+            Err(_) => return Drive::Evict,
+        }
+        // Fully drained and staying open: a pipelined request may
+        // already be buffered — it must be picked up here, because the
+        // socket may never turn readable again (all bytes were read).
+        match conn.http.take_buffered_message() {
+            Ok(Some(msg)) => {
+                conn.last_activity = Instant::now();
+                dispatch(token, conn, msg, ctx);
+                match conn.state {
+                    State::Writing => continue, // 503 queued inline
+                    _ => return Drive::Keep,    // in flight on the pool
+                }
+            }
+            Ok(None) => {
+                conn.state = State::Reading;
+                return Drive::Keep;
+            }
+            Err(e) => {
+                queue_request_error(conn, ctx, &format!("{e:#}"));
+                continue;
+            }
+        }
+    }
+}
+
+/// Reap idle keep-alives, evict slow-loris peers past the mid-message
+/// deadline (even fully-silent ones a readiness loop would never see
+/// readable), and cut off stalled writers.
+fn sweep_deadlines(conns: &mut BTreeMap<u64, Conn>, ctx: &Ctx<'_>) {
+    let now = Instant::now();
+    let mut evict: Vec<u64> = Vec::new();
+    for (&token, conn) in conns.iter_mut() {
+        match conn.state {
+            State::Reading => {
+                if let Some(age) = conn.http.msg_age() {
+                    if age > ctx.cfg.msg_deadline {
+                        queue_request_error(
+                            conn,
+                            ctx,
+                            &format!("message incomplete after {:?}", ctx.cfg.msg_deadline),
+                        );
+                    }
+                } else if ctx.draining
+                    || now.duration_since(conn.last_activity) >= ctx.cfg.keep_alive
+                {
+                    evict.push(token);
+                }
+            }
+            State::InFlight => {} // governed by the compute pool
+            State::Writing => {
+                if now.duration_since(conn.last_activity) > ctx.cfg.write_stall {
+                    evict.push(token); // peer stopped reading
+                }
+            }
+        }
+    }
+    for token in evict {
+        conns.remove(&token);
+    }
+}

@@ -15,12 +15,25 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use super::http::{Request, Response};
+use super::http::{Message, Request, Response};
 use super::listener::ServerMetrics;
 use crate::coordinator::router::Key;
 use crate::coordinator::service::Service;
 use crate::util::json::Value;
 use crate::util::stats::Reservoir;
+
+/// The reactor's pool-job entry point: parse a framed message into a
+/// request, route it, and report whether the connection should close
+/// afterwards (client `Connection: close`, or an unparseable request).
+pub fn respond(svc: &Service, metrics: &ServerMetrics, msg: Message) -> (Response, bool) {
+    match Request::from_message(msg) {
+        Ok(req) => {
+            let close = req.wants_close();
+            (route(svc, metrics, &req), close)
+        }
+        Err(e) => (Response::error(400, &format!("{e:#}")), true),
+    }
+}
 
 /// Dispatch one request.  Never panics; every outcome is a `Response`.
 pub fn route(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Response {

@@ -54,6 +54,7 @@ fn fleet_scores_bit_identical_to_direct_submit() {
         seed: 42,
         think_ms: 0,
         precision: 8,
+        ..Default::default()
     };
     let report = loadgen::run(server.addr(), &cfg).unwrap();
     server.shutdown();
@@ -180,8 +181,9 @@ fn endpoints_and_error_paths() {
     server.shutdown();
 }
 
-/// Over-capacity connections are refused fast with 503 (visible
-/// backpressure), not queued behind busy handlers.
+/// Connections past `max_connections` are refused with 503 +
+/// `Retry-After` (visible backpressure) while admitted connections keep
+/// working — and the compute pool size plays no part in admission.
 #[test]
 fn over_capacity_connection_gets_503() {
     if manifest().is_none() {
@@ -189,11 +191,14 @@ fn over_capacity_connection_gets_503() {
         return;
     }
     use printed_bespoke::server::http::{HttpConn, Outcome};
-    let (_svc, mut server) = start_frontend(1);
-    // First connection takes the only handler slot...
-    let _holder = Client::connect(server.addr()).unwrap();
-    std::thread::sleep(std::time::Duration::from_millis(100)); // let the acceptor admit it
-    // ...so the second is refused at the acceptor: the 503 arrives
+    let svc = Arc::new(Service::start(ServiceConfig::default()).unwrap());
+    let scfg = ServerConfig { max_connections: 1, ..ServerConfig::default() };
+    let mut server = Server::start(Arc::clone(&svc), scfg).unwrap();
+    // First connection takes the only admission slot...
+    let mut holder = Client::connect(server.addr()).unwrap();
+    let (status, _) = holder.get("/healthz").unwrap(); // admitted for sure
+    assert_eq!(status, 200);
+    // ...so the second is refused at admission: the 503 arrives
     // unsolicited (read it without writing — the server closes right
     // after, so a request write would race the close).
     let stream = std::net::TcpStream::connect(server.addr()).unwrap();
@@ -207,10 +212,15 @@ fn over_capacity_connection_gets_503() {
         })
         .expect("no 503 within 10s");
     assert!(msg.start_line.contains("503"), "want 503, got {:?}", msg.start_line);
+    assert_eq!(msg.headers["retry-after"], "1", "refusal must carry Retry-After");
+    assert_eq!(msg.headers["connection"], "close");
     let text = String::from_utf8(msg.body).unwrap();
     assert!(Value::parse(&text).unwrap().get("error").is_ok());
     let rejected = server.metrics.rejected_busy.load(std::sync::atomic::Ordering::Relaxed);
     assert!(rejected >= 1, "rejected_busy should count the refusal");
+    // The admitted connection is unaffected by the refusal next door.
+    let (status, _) = holder.get("/healthz").unwrap();
+    assert_eq!(status, 200);
     server.shutdown();
 }
 

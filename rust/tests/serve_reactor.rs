@@ -1,0 +1,366 @@
+//! Reactor-specific serving tests (ISSUE 7): connection concurrency
+//! beyond the compute pool, non-blocking refusals, pipelining and
+//! byte-dripped uploads through the readiness loop, slow-loris
+//! eviction, queue-level backpressure, drain-on-shutdown, and the
+//! fleet-1k bit-identity gate via `loadgen::verify`.
+//!
+//! Skips cleanly when no artifact tree matches the compiled backend
+//! (same policy as `serve_http.rs`), and the fd-hungry fleet tests skip
+//! with a note when the OS denies the file-descriptor budget.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::runtime::pjrt::Runtime;
+use printed_bespoke::server::http::{Client, HttpConn, Message, Outcome};
+use printed_bespoke::server::loadgen::{self, LoadgenConfig};
+use printed_bespoke::server::{Server, ServerConfig};
+use printed_bespoke::util::json::Value;
+use printed_bespoke::util::poll::raise_nofile_limit;
+
+fn manifest() -> Option<Manifest> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    if Runtime::is_stub() != printed_bespoke::ml::fixtures::manifest_is_stub(&man) {
+        eprintln!("skipping: artifact tree does not match the compiled runtime backend");
+        return None;
+    }
+    Some(man)
+}
+
+fn start(scfg: ServerConfig) -> (Arc<Service>, Server) {
+    start_with(ServiceConfig::default(), scfg)
+}
+
+fn start_with(svc_cfg: ServiceConfig, scfg: ServerConfig) -> (Arc<Service>, Server) {
+    let svc = Arc::new(Service::start(svc_cfg).unwrap());
+    let server = Server::start(Arc::clone(&svc), scfg).unwrap();
+    (svc, server)
+}
+
+/// Read one server-initiated message off a raw stream (100 ms ticks,
+/// bounded total wait).
+fn read_unsolicited(conn: &mut HttpConn, budget: Duration) -> Message {
+    let t0 = Instant::now();
+    loop {
+        match conn.read_message().unwrap() {
+            Outcome::Message(m) => return m,
+            Outcome::Closed => panic!("connection closed before any response arrived"),
+            Outcome::Idle => assert!(t0.elapsed() < budget, "no response within {budget:?}"),
+        }
+    }
+}
+
+fn relaxed(c: &std::sync::atomic::AtomicU64) -> u64 {
+    c.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Satellite 1: a refused client that never reads its 503 must not
+/// stall the accept path — later arrivals still get their refusals
+/// promptly, and an already-admitted connection keeps working.
+#[test]
+fn refusals_never_block_the_accept_path() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let scfg = ServerConfig { max_connections: 1, ..ServerConfig::default() };
+    let (_svc, mut server) = start(scfg);
+    let mut holder = Client::connect(server.addr()).unwrap();
+    assert_eq!(holder.get("/healthz").unwrap().0, 200); // admitted for sure
+
+    // 20 over-capacity clients that connect and then never read: their
+    // 503s are queued asynchronously, so they can only stall their own
+    // eviction timers.
+    let silent: Vec<TcpStream> =
+        (0..20).map(|_| TcpStream::connect(server.addr()).unwrap()).collect();
+
+    // A well-behaved over-capacity client arriving *after* the silent
+    // pack still gets its refusal within a tight bound.
+    let t0 = Instant::now();
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let mut conn = HttpConn::new(stream);
+    let msg = read_unsolicited(&mut conn, Duration::from_secs(10));
+    assert!(t0.elapsed() < Duration::from_secs(2), "refusal stalled behind silent clients");
+    assert!(msg.start_line.contains("503"), "want 503, got {:?}", msg.start_line);
+    assert_eq!(msg.headers["retry-after"], "1");
+
+    // Every refusal was counted, and the admitted connection is intact.
+    assert!(relaxed(&server.metrics.rejected_busy) >= 21);
+    assert_eq!(relaxed(&server.metrics.connections), 1, "no silent client was admitted");
+    assert_eq!(holder.get("/healthz").unwrap().0, 200);
+    drop(silent);
+    server.shutdown();
+}
+
+/// The tentpole contract: connection concurrency is bounded by
+/// `max_connections`, not `http_threads` — 1000 idle keep-alive
+/// connections ride a 2-thread compute pool.
+#[test]
+fn thousand_idle_keepalive_connections_on_two_threads() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    const FLEET: usize = 1_000;
+    let need_fds = FLEET as u64 * 2 + 512;
+    let have_fds = raise_nofile_limit(8_192);
+    if have_fds < need_fds {
+        eprintln!("skipping: need ~{need_fds} fds, limit {have_fds}");
+        return;
+    }
+    let scfg = ServerConfig {
+        http_threads: 2,
+        max_connections: FLEET + 64,
+        keep_alive_ms: 60_000,
+        ..ServerConfig::default()
+    };
+    let (_svc, mut server) = start(scfg);
+    let mut clients: Vec<Client> = Vec::with_capacity(FLEET);
+    for i in 0..FLEET {
+        clients.push(Client::connect(server.addr()).unwrap());
+        // Periodic round-trips keep the accept backlog drained (a
+        // response proves every earlier connection was accepted too).
+        if i % 100 == 99 {
+            assert_eq!(clients[i].get("/healthz").unwrap().0, 200);
+        }
+    }
+    // The reactor's open-connection gauge reaches the whole fleet
+    // (updated once per loop round; give it a few ticks).
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        if relaxed(&server.metrics.open_connections) >= FLEET as u64 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "gauge never saw the full fleet");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(relaxed(&server.metrics.connections) >= FLEET as u64);
+    assert_eq!(relaxed(&server.metrics.rejected_busy), 0);
+    // Spot-check liveness across the parked fleet.
+    for i in [0usize, FLEET / 2, FLEET - 1] {
+        assert_eq!(clients[i].get("/healthz").unwrap().0, 200);
+    }
+    drop(clients);
+    server.shutdown();
+}
+
+/// Pipelined requests in one segment and byte-dripped requests both
+/// frame correctly through the readiness loop.
+#[test]
+fn pipelined_and_dripped_requests_frame_correctly() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (_svc, mut server) = start(ServerConfig::default());
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+
+    // Two full requests in a single write: the second must be picked up
+    // from the connection buffer after the first response drains (the
+    // socket may never turn readable again).
+    let req = b"GET /healthz HTTP/1.1\r\nhost: pbsp\r\ncontent-length: 0\r\n\r\n";
+    let both: Vec<u8> = req.iter().chain(req.iter()).copied().collect();
+    stream.write_all(&both).unwrap();
+    stream.flush().unwrap();
+    let mut conn = HttpConn::new(stream.try_clone().unwrap());
+    for i in 0..2 {
+        let m = read_unsolicited(&mut conn, Duration::from_secs(10));
+        assert!(m.start_line.contains("200"), "pipelined response {i}: {:?}", m.start_line);
+        assert_eq!(m.headers["connection"], "keep-alive");
+    }
+
+    // Byte-drip a third request on the same connection: every gap sends
+    // the reactor back through poll, and framing resumes in place.
+    for chunk in req.chunks(7) {
+        stream.write_all(chunk).unwrap();
+        stream.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let m = read_unsolicited(&mut conn, Duration::from_secs(10));
+    assert!(m.start_line.contains("200"), "dripped response: {:?}", m.start_line);
+    assert_eq!(relaxed(&server.metrics.http_requests), 3);
+    server.shutdown();
+}
+
+/// A peer that goes silent mid-message is evicted at the configured
+/// deadline with a best-effort 400 — it cannot pin its slot forever.
+#[test]
+fn slow_loris_connection_is_evicted() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let scfg = ServerConfig { msg_deadline_ms: 200, ..ServerConfig::default() };
+    let (_svc, mut server) = start(scfg);
+    let mut stream = TcpStream::connect(server.addr()).unwrap();
+    stream.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let t0 = Instant::now();
+    stream.write_all(b"POST /v1/score/m/p8 HTTP/1.1\r\ncontent-le").unwrap();
+    stream.flush().unwrap();
+    let mut conn = HttpConn::new(stream);
+    let m = read_unsolicited(&mut conn, Duration::from_secs(10));
+    assert!(m.start_line.contains("400"), "want 400, got {:?}", m.start_line);
+    assert!(t0.elapsed() < Duration::from_secs(5), "eviction took too long");
+    let text = String::from_utf8(m.body).unwrap();
+    assert!(text.contains("incomplete"), "unexpected error body {text:?}");
+    // ...and the connection is closed right after.
+    match conn.read_message().unwrap() {
+        Outcome::Closed => {}
+        other => panic!("want close after the 400, got {other:?}"),
+    }
+    assert!(relaxed(&server.metrics.responses_4xx) >= 1);
+    server.shutdown();
+}
+
+/// Queue-level backpressure: past `max_queued` in-flight requests the
+/// server answers 503 on the *healthy, kept* connection.
+#[test]
+fn queue_full_gets_503_and_keeps_the_connection() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // Long linger makes every scoring request occupy the queue for
+    // ~100 ms, so concurrent arrivals deterministically overrun a
+    // queue budget of one.
+    let svc_cfg = ServiceConfig { linger_ms: 100, max_batch: 1_000, ..ServiceConfig::default() };
+    let scfg = ServerConfig { http_threads: 4, max_queued: 1, ..ServerConfig::default() };
+    let (_svc, mut server) = start_with(svc_cfg, scfg);
+    let model = man.models[0].name.clone();
+    let ds = Dataset::load(man.data_dir(), &man.models[0].dataset, "test").unwrap();
+    let body = {
+        let row = Value::Arr(ds.x[0].iter().map(|&f| Value::Num(f as f64)).collect());
+        Value::obj(vec![("x", row)]).to_string()
+    };
+    let addr = server.addr();
+    let barrier = Arc::new(Barrier::new(6));
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            let path = format!("/v1/score/{model}/p8");
+            let body = body.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                barrier.wait();
+                let (status, text) = c.post(&path, &body).unwrap();
+                if status == 503 {
+                    assert!(text.contains("queue"), "503 names its cause: {text}");
+                }
+                // The connection survives the refusal (keep-alive); the
+                // queue may still be busy for a while, so keep asking —
+                // every interim answer must itself be a clean 503.
+                let deadline = Instant::now() + Duration::from_secs(10);
+                loop {
+                    let (s, _) = c.get("/healthz").unwrap();
+                    if s == 200 {
+                        break;
+                    }
+                    assert_eq!(s, 503, "unexpected status while the queue drains");
+                    assert!(Instant::now() < deadline, "queue never drained");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                status
+            })
+        })
+        .collect();
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(statuses.contains(&200), "someone must be served: {statuses:?}");
+    assert!(statuses.contains(&503), "queue overrun must refuse visibly: {statuses:?}");
+    assert!(relaxed(&server.metrics.rejected_queue) >= 1);
+    server.shutdown();
+}
+
+/// Shutdown with a request in flight: the response still arrives (drain
+/// with bounded grace), and shutdown stays idempotent.
+#[test]
+fn shutdown_finishes_in_flight_request() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // linger >> the shutdown trigger delay below: the request is still
+    // in flight when the flag flips.
+    let svc_cfg = ServiceConfig { linger_ms: 300, ..ServiceConfig::default() };
+    let (_svc, mut server) = start_with(svc_cfg, ServerConfig::default());
+    let model = man.models[0].name.clone();
+    let ds = Dataset::load(man.data_dir(), &man.models[0].dataset, "test").unwrap();
+    let body = {
+        let row = Value::Arr(ds.x[0].iter().map(|&f| Value::Num(f as f64)).collect());
+        Value::obj(vec![("x", row)]).to_string()
+    };
+    let addr = server.addr();
+    let poster = std::thread::spawn(move || {
+        let mut c = Client::connect(addr).unwrap();
+        c.post(&format!("/v1/score/{model}/p8"), &body).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    server.shutdown();
+    let (status, text) = poster.join().unwrap();
+    assert_eq!(status, 200, "in-flight request must drain through shutdown: {text}");
+    assert!(Value::parse(&text).unwrap().get("scores").is_ok());
+    server.shutdown(); // idempotent
+}
+
+/// The ISSUE 7 acceptance gate at fleet 1k: every byte served over the
+/// reactor is bit-identical to direct in-process scoring — in both
+/// arrival modes, and (in release builds) on the batched-ISS backend.
+#[test]
+fn fleet_1k_bit_identical_via_loadgen_verify() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    const FLEET: usize = 1_000;
+    let need_fds = FLEET as u64 * 2 + 512;
+    let have_fds = raise_nofile_limit(8_192);
+    if have_fds < need_fds {
+        eprintln!("skipping: need ~{need_fds} fds, limit {have_fds}");
+        return;
+    }
+    // Debug builds keep tier-1 fast on the stub runtime; release runs
+    // pin the full HTTP -> reactor -> batcher -> lockstep-ISS chain.
+    let svc_cfg = ServiceConfig { iss: !cfg!(debug_assertions), ..ServiceConfig::default() };
+    let scfg = ServerConfig {
+        max_connections: FLEET + 64,
+        keep_alive_ms: 60_000,
+        ..ServerConfig::default()
+    };
+    let (svc, mut server) = start_with(svc_cfg, scfg);
+
+    // Closed-loop at fleet 1k.
+    let cfg = LoadgenConfig {
+        fleet: FLEET,
+        requests_per_device: 1,
+        seed: 42,
+        ..Default::default()
+    };
+    let report = loadgen::run(server.addr(), &cfg).unwrap();
+    assert_eq!(report.errors, 0, "fleet saw errors: {}", report.summary());
+    assert_eq!(report.records.len(), FLEET);
+    let checked = loadgen::verify(&svc, &report, cfg.precision).unwrap();
+    assert_eq!(checked, FLEET, "verify must cover every served request");
+
+    // Open-loop arrivals through the same frontend: identical draws,
+    // identical bits (arrival mode cannot change scoring).
+    let open = LoadgenConfig {
+        fleet: 64,
+        requests_per_device: 4,
+        seed: 7,
+        open_rps: 2_000.0,
+        ..Default::default()
+    };
+    let report = loadgen::run(server.addr(), &open).unwrap();
+    assert_eq!(report.errors, 0, "open-loop fleet saw errors: {}", report.summary());
+    assert_eq!(report.records.len(), 64 * 4);
+    let checked = loadgen::verify(&svc, &report, open.precision).unwrap();
+    assert_eq!(checked, 64 * 4);
+    server.shutdown();
+}
