@@ -69,7 +69,7 @@ fn main() -> Result<()> {
     let mut hits = vec![0usize; stations.len()];
     let mut counts = vec![0usize; stations.len()];
     for (s, idx, t, rx) in pending {
-        let scores = rx.recv().context("reply")?.map_err(|e| anyhow!(e))?;
+        let scores = rx.recv().context("reply")?.map_err(|e| anyhow!(e))?.scores;
         lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
         let pred = svc.models[s].predict(&scores);
         counts[s] += 1;

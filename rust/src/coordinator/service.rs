@@ -40,6 +40,7 @@ use crate::ml::dataset::Dataset;
 use crate::ml::manifest::Manifest;
 use crate::ml::model::Model;
 use crate::runtime::pjrt::Runtime;
+use crate::util::telemetry;
 use crate::util::threadpool::{self, ThreadPool};
 
 #[derive(Debug, Clone)]
@@ -79,9 +80,23 @@ fn iss_precision(key: &Key) -> Option<u32> {
 
 type Scores = Vec<Vec<f64>>;
 
+/// Streaming reply: the scores plus the request's trip through the
+/// coordinator, so the serving layer can attach batching detail to
+/// trace spans without a second metrics round-trip.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub scores: Vec<f64>,
+    /// Enqueue → batch-cut wait in the dynamic batcher.
+    pub queue_us: u64,
+    /// Backend execution time of the batch this request rode in.
+    pub exec_us: u64,
+    /// Size of that batch.
+    pub batch: u32,
+}
+
 enum Job {
     Bulk { key: Key, xs: Vec<Vec<f32>>, reply: Sender<Result<Scores, String>> },
-    One { key: Key, x: Vec<f32>, reply: Sender<Result<Vec<f64>, String>> },
+    One { key: Key, x: Vec<f32>, reply: Sender<Result<Scored, String>> },
     Shutdown,
 }
 
@@ -152,7 +167,7 @@ impl Service {
     }
 
     /// Submit one streaming request; returns the reply receiver.
-    pub fn submit(&self, key: Key, x: Vec<f32>) -> Result<Receiver<Result<Vec<f64>, String>>> {
+    pub fn submit(&self, key: Key, x: Vec<f32>) -> Result<Receiver<Result<Scored, String>>> {
         let (rtx, rrx) = channel();
         self.tx.send(Job::One { key, x, reply: rtx }).map_err(|_| anyhow!("worker gone"))?;
         Ok(rrx)
@@ -317,7 +332,36 @@ pub struct EvalResult {
 
 struct StreamReq {
     x: Vec<f32>,
-    reply: Sender<Result<Vec<f64>, String>>,
+    reply: Sender<Result<Scored, String>>,
+}
+
+/// Worker-side telemetry handles: registered once at worker start, hit
+/// lock-free afterwards.  The labelled request counters are cached per
+/// (model, variant) so the registry mutex is taken once per key, not
+/// per batch.
+struct WorkerTel {
+    occupancy: std::sync::Arc<telemetry::Gauge>,
+    requests: std::collections::BTreeMap<String, std::sync::Arc<telemetry::Counter>>,
+}
+
+impl WorkerTel {
+    fn new() -> WorkerTel {
+        WorkerTel {
+            occupancy: telemetry::global()
+                .gauge("pbsp_batcher_occupancy", "streaming requests waiting in the dynamic batcher"),
+            requests: std::collections::BTreeMap::new(),
+        }
+    }
+
+    fn requests_for(&mut self, key: &Key) -> &telemetry::Counter {
+        self.requests.entry(format!("{}/{}", key.model, key.variant)).or_insert_with(|| {
+            telemetry::global().counter_with(
+                "pbsp_coordinator_requests_total",
+                &[("model", &key.model), ("variant", &key.variant)],
+                "streaming requests dispatched, by model and variant",
+            )
+        })
+    }
 }
 
 fn worker_loop(
@@ -342,6 +386,22 @@ fn worker_loop(
             .unwrap_or(1)
     };
     let mut router: Router<StreamReq> = Router::new(cfg.max_batch, cfg.linger_ms);
+    let mut tel = WorkerTel::new();
+    // Dark-corner counters for the translated ISS backend: block
+    // dispatches, fused-superinstruction uops, and interpreter-fallback
+    // instructions (the translation-divergence metric).
+    let iss_tel = {
+        let t = telemetry::global();
+        (
+            t.counter("pbsp_iss_blocks_total", "translated blocks dispatched by the ISS backend"),
+            t.counter("pbsp_iss_fused_uops_total", "fused superinstruction uops executed by the ISS backend"),
+            t.counter(
+                "pbsp_iss_fallback_instrs_total",
+                "instructions the ISS executed via the per-instruction interpreter fallback",
+            ),
+            t.counter("pbsp_iss_samples_total", "samples scored on the ISS backend"),
+        )
+    };
     // Worker-local cache of generated ISS programs (one codegen per
     // (model, precision), Arc-shared prepared image inside).
     let mut iss_progs: std::collections::BTreeMap<
@@ -380,6 +440,11 @@ fn worker_loop(
                 let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs)
                     .map_err(|e| format!("{e:#}"))?;
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let (blocks, fused, fallback, samples) = &iss_tel;
+                blocks.add(run.exec_stats.blocks);
+                fused.add(run.exec_stats.fused_uops);
+                fallback.add(run.exec_stats.fallback_instrs);
+                samples.add(xs.len() as u64);
                 let mut m = shared.lock().unwrap();
                 m.record_batch(xs.len(), ms);
                 if fresh {
@@ -414,11 +479,13 @@ fn worker_loop(
                 let _ = reply.send(r);
             }
             Ok(Job::One { key, x, reply }) => {
+                tel.occupancy.add(1);
                 router.enqueue(key, StreamReq { x, reply });
                 // Opportunistically drain everything already queued.
                 while let Ok(job) = rx.try_recv() {
                     match job {
                         Job::One { key, x, reply } => {
+                            tel.occupancy.add(1);
                             router.enqueue(key, StreamReq { x, reply })
                         }
                         Job::Bulk { key, xs, reply } => {
@@ -426,7 +493,7 @@ fn worker_loop(
                             let _ = reply.send(r);
                         }
                         Job::Shutdown => {
-                            drain_router(&mut router, &mut runtime, &mut run_batch, &shared);
+                            drain_router(&mut router, &mut runtime, &mut run_batch, &shared, &mut tel);
                             return;
                         }
                     }
@@ -438,7 +505,7 @@ fn worker_loop(
                 // collected them); only a genuinely idle queue flushes
                 // early, collapsing single-request latency from
                 // ~linger+timeout to ~execute time.
-                drain_router(&mut router, &mut runtime, &mut run_batch, &shared);
+                drain_router(&mut router, &mut runtime, &mut run_batch, &shared, &mut tel);
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
@@ -446,10 +513,10 @@ fn worker_loop(
         // Dispatch ready batches (full or past their linger window).
         let now = Instant::now();
         while let Some((key, batch)) = router.next_batch(now) {
-            dispatch(&mut runtime, &key, batch, &mut run_batch, &shared);
+            dispatch(&mut runtime, &key, batch, &mut run_batch, &shared, &mut tel);
         }
     }
-    drain_router(&mut router, &mut runtime, &mut run_batch, &shared);
+    drain_router(&mut router, &mut runtime, &mut run_batch, &shared, &mut tel);
 }
 
 fn dispatch(
@@ -458,20 +525,35 @@ fn dispatch(
     batch: Vec<super::batcher::Pending<StreamReq>>,
     run_batch: &mut impl FnMut(&mut Runtime, &Key, &[Vec<f32>]) -> Result<Scores, String>,
     shared: &metrics::Shared,
+    tel: &mut WorkerTel,
 ) {
     // Streaming queueing delay (enqueue -> dispatch), per request.
     let now = Instant::now();
+    let queue_us: Vec<u64> = batch
+        .iter()
+        .map(|p| now.duration_since(p.enqueued).as_micros() as u64)
+        .collect();
     {
         let mut m = shared.lock().unwrap();
-        for p in &batch {
-            m.record_queue_ms(now.duration_since(p.enqueued).as_secs_f64() * 1e3);
+        for us in &queue_us {
+            m.record_queue_ms(*us as f64 / 1e3);
         }
     }
+    tel.occupancy.sub(batch.len() as i64);
+    tel.requests_for(key).add(batch.len() as u64);
     let xs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.x.clone()).collect();
+    let t0 = Instant::now();
     match run_batch(runtime, key, &xs) {
         Ok(scores) => {
-            for (p, s) in batch.into_iter().zip(scores) {
-                let _ = p.payload.reply.send(Ok(s));
+            let exec_us = t0.elapsed().as_micros() as u64;
+            let n = xs.len() as u32;
+            for ((p, s), q) in batch.into_iter().zip(scores).zip(queue_us) {
+                let _ = p.payload.reply.send(Ok(Scored {
+                    scores: s,
+                    queue_us: q,
+                    exec_us,
+                    batch: n,
+                }));
             }
         }
         Err(e) => {
@@ -487,8 +569,9 @@ fn drain_router(
     runtime: &mut Runtime,
     run_batch: &mut impl FnMut(&mut Runtime, &Key, &[Vec<f32>]) -> Result<Scores, String>,
     shared: &metrics::Shared,
+    tel: &mut WorkerTel,
 ) {
     while let Some((key, batch)) = router.flush_any() {
-        dispatch(runtime, &key, batch, run_batch, shared);
+        dispatch(runtime, &key, batch, run_batch, shared, tel);
     }
 }

@@ -9,9 +9,11 @@
 //! pbsp serve [--requests N] [--batch N] [--iss]  coordinator demo loop
 //! pbsp serve --addr HOST:PORT [--http-threads N] [--duration-s N]
 //!            [--max-conns N] [--max-queued N]   HTTP inference frontend
+//!            [--trace-sample N] [--log-json FILE] [--stats-interval-s S]
 //! pbsp loadgen --fleet N [--requests N] [--seed S] [--think-ms T]
 //!              [--addr HOST:PORT] [--out FILE]   device-fleet load test
 //!              [--open-rps R] [--client-workers N] [--iss] [--verify]
+//!              [--trace-sample N] [--log-json FILE]
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
 //! ```
 //!
@@ -26,7 +28,15 @@
 //! `--iss` scores quantised (`p ≤ 16`) requests on the batched lockstep
 //! ISS (`sim::batch`) instead of the PJRT runtime; `--verify` (loadgen,
 //! in-process mode) replays every fleet record through direct
-//! `Service::scores` and requires bit-identical scores.
+//! `Service::scores` and requires bit-identical scores, then reconciles
+//! the fleet's counts against the server's `/metrics` counters.
+//!
+//! Observability: `--trace-sample N` emits a structured JSON span for
+//! every Nth request (accept → parse → queue → batch-cut → execute →
+//! write) to `--log-json FILE` (stderr when omitted);
+//! `--stats-interval-s S` prints a one-line server + coordinator
+//! summary every S seconds; `GET /metrics` serves JSON and
+//! `GET /metrics?format=prometheus` the Prometheus text exposition.
 //!
 //! `report`, `eval`, `serve`, `loadgen` and `crosscheck` all take
 //! `--threads N` (default: `PBSP_THREADS`, else the machine's
@@ -202,6 +212,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_conns = args.opt_parse::<usize>("max-conns")?;
     let max_queued = args.opt_parse::<usize>("max-queued")?;
     let duration_s = args.parse_or("duration-s", 0u64)?;
+    let trace_sample = args.parse_or("trace-sample", 0u64)?;
+    let trace_log = args.opt_str("log-json").map(String::from);
+    let stats_interval_s = args.parse_or("stats-interval-s", 0u64)?;
     let iss = args.flag("iss");
     let threads = args.threads()?;
     args.finish()?;
@@ -217,7 +230,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // The reactor owns every connection socket; --http-threads only
     // sizes the compute pool, so the default is fine for big fleets.
     let svc = Arc::new(Service::start(cfg)?);
-    let mut scfg = ServerConfig { addr, ..ServerConfig::default() };
+    let mut scfg =
+        ServerConfig { addr, trace_sample, trace_log, ..ServerConfig::default() };
     if let Some(t) = http_threads {
         scfg.http_threads = t;
     }
@@ -237,6 +251,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.addr(),
         svc.models.first().map(|m| m.name.as_str()).unwrap_or("MODEL")
     );
+    if stats_interval_s > 0 {
+        // Detached observer: one summary line per interval from the
+        // lock-free server counters and the coordinator's metrics.  It
+        // only reads shared state, so letting process exit reap it is
+        // fine (no join on shutdown).
+        let svc = Arc::clone(&svc);
+        let metrics = Arc::clone(&server.metrics);
+        let _detached = std::thread::Builder::new()
+            .name("pbsp-stats".into())
+            .spawn(move || {
+                use std::sync::atomic::Ordering;
+                loop {
+                    std::thread::sleep(Duration::from_secs(stats_interval_s));
+                    let c = |a: &std::sync::atomic::AtomicU64| a.load(Ordering::Relaxed);
+                    println!(
+                        "stats: conns {} (open {})  requests {}  2xx {}  4xx {}  5xx {}  \
+                         rejected {}/{}  evicted {}/{}/{} (idle/read/write) | {}",
+                        c(&metrics.connections),
+                        c(&metrics.open_connections),
+                        c(&metrics.http_requests),
+                        c(&metrics.responses_2xx),
+                        c(&metrics.responses_4xx),
+                        c(&metrics.responses_5xx),
+                        c(&metrics.rejected_busy),
+                        c(&metrics.rejected_queue),
+                        c(&metrics.evicted_idle),
+                        c(&metrics.evicted_read),
+                        c(&metrics.evicted_write),
+                        svc.metrics.lock().unwrap().summary()
+                    );
+                }
+            })
+            .context("spawn stats printer")?;
+    }
     if duration_s == 0 {
         loop {
             std::thread::sleep(Duration::from_secs(3600));
@@ -261,6 +309,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let addr = args.opt_str("addr").map(String::from);
     let out = args.opt_str("out").map(String::from);
+    let trace_sample = args.parse_or("trace-sample", 0u64)?;
+    let trace_log = args.opt_str("log-json").map(String::from);
     let iss = args.flag("iss");
     let verify = args.flag("verify");
     let threads = args.threads()?;
@@ -273,6 +323,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         Some(a) => {
             if verify {
                 bail!("--verify needs the in-process frontend (drop --addr)");
+            }
+            if trace_sample > 0 || trace_log.is_some() {
+                bail!("--trace-sample/--log-json configure the in-process frontend (drop --addr, or pass them to the external `pbsp serve`)");
             }
             let target = a
                 .to_socket_addrs()
@@ -294,6 +347,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             // churn from think-time reaping included).
             let scfg = ServerConfig {
                 max_connections: cfg.fleet + 16,
+                trace_sample,
+                trace_log,
                 ..ServerConfig::default()
             };
             let mut server = Server::start(Arc::clone(&svc), scfg)?;

@@ -68,6 +68,7 @@ use crate::sim::batch::{BatchRv32, BatchTpIsa};
 use crate::sim::tpisa::TpIsa;
 use crate::sim::trace::{FullProfile, Profile, TraceMode};
 use crate::sim::zero_riscy::{Halt, ZeroRiscy};
+use crate::sim::ExecStats;
 use crate::util::threadpool::ThreadPool;
 
 /// Default lane count of the batched lockstep engine: wide enough to
@@ -86,6 +87,10 @@ pub struct BatchRun {
     pub profile: Profile,
     /// Cycles per sample (mean).
     pub cycles_per_sample: f64,
+    /// Translated-engine counters summed over the batch (block
+    /// dispatches, fused superinstructions, scalar fallbacks) — the
+    /// telemetry feed for `coordinator::service`'s ISS counters.
+    pub exec_stats: ExecStats,
 }
 
 fn empty_run() -> BatchRun {
@@ -94,6 +99,7 @@ fn empty_run() -> BatchRun {
         predictions: Vec::new(),
         profile: Profile::default(),
         cycles_per_sample: 0.0,
+        exec_stats: ExecStats::default(),
     }
 }
 
@@ -183,8 +189,9 @@ pub fn run_rv32_batched<M: TraceMode>(
     }
     let mut profile = Profile::default();
     batch.fold_profile(&mut profile);
+    let exec_stats = batch.exec_stats();
     let cps = profile.cycles as f64 / xs.len() as f64;
-    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats })
 }
 
 /// The pre-batching per-sample loop: one reused scalar simulator, one
@@ -225,9 +232,10 @@ pub fn run_rv32_scalar_traced<M: TraceMode>(
     }
     // One reused simulator accumulates the whole batch's profile — the
     // same totals as merging per-sample profiles in sample order.
+    let exec_stats = sim.exec_stats;
     let profile = sim.profile;
     let cps = profile.cycles as f64 / xs.len() as f64;
-    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats })
 }
 
 /// Quantise + pack one input vector per the TP-ISA program's contract.
@@ -307,8 +315,9 @@ pub fn run_tpisa_batched<M: TraceMode>(
     }
     let mut profile = Profile::default();
     batch.fold_profile(&mut profile);
+    let exec_stats = batch.exec_stats();
     let cps = profile.cycles as f64 / xs.len() as f64;
-    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats })
 }
 
 /// The pre-batching per-sample TP-ISA loop — the scalar reference the
@@ -351,9 +360,10 @@ pub fn run_tpisa_scalar_traced<M: TraceMode>(
         predictions.push(model.predict(&s));
         scores.push(s);
     }
+    let exec_stats = sim.exec_stats;
     let profile = sim.profile;
     let cps = profile.cycles as f64 / xs.len() as f64;
-    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats })
 }
 
 /// Shard size for parallel batch runs: oversubscribe the pool 4x so
@@ -371,14 +381,16 @@ fn merge_runs(runs: Vec<Result<BatchRun>>, n_samples: usize) -> Result<BatchRun>
     let mut scores = Vec::with_capacity(n_samples);
     let mut predictions = Vec::with_capacity(n_samples);
     let mut profile = Profile::default();
+    let mut exec_stats = ExecStats::default();
     for r in runs {
         let r = r?;
         scores.extend(r.scores);
         predictions.extend(r.predictions);
         profile.merge(&r.profile);
+        exec_stats.merge(&r.exec_stats);
     }
     let cps = profile.cycles as f64 / n_samples.max(1) as f64;
-    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps })
+    Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats })
 }
 
 /// [`run_rv32`] with the samples sharded across `pool` (each shard

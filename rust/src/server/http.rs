@@ -46,6 +46,10 @@ pub struct Message {
     pub start_line: String,
     pub headers: BTreeMap<String, String>,
     pub body: Vec<u8>,
+    /// First byte → complete frame (None when the whole message was
+    /// already buffered, e.g. a pipelined request) — the "read" stage
+    /// of a request trace span.
+    pub read_age: Option<Duration>,
 }
 
 /// Result of one [`HttpConn::read_message`] call.
@@ -236,12 +240,13 @@ impl HttpConn {
         }
         let h = self.head.take().expect("head present");
         let body = self.buf[body_start..body_start + body_len].to_vec();
+        let read_age = self.msg_started.map(|t| t.elapsed());
         // Keep any pipelined bytes for the next message; they already
         // count against the next message's slow-loris deadline.
         self.buf.drain(..body_start + body_len);
         self.scanned = 0;
         self.msg_started = if self.buf.is_empty() { None } else { Some(Instant::now()) };
-        Ok(Some(Message { start_line: h.start_line, headers: h.headers, body }))
+        Ok(Some(Message { start_line: h.start_line, headers: h.headers, body, read_age }))
     }
 
     /// One socket read into the buffer.
@@ -552,6 +557,7 @@ mod tests {
             start_line: line.to_string(),
             headers: BTreeMap::new(),
             body: Vec::new(),
+            read_age: None,
         };
         assert!(Request::from_message(msg("GET /p HTTP/1.1")).is_ok());
         assert!(Request::from_message(msg("GET /p")).is_err());

@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::reactor::{self, ReactorConfig, ReactorShared};
+use super::reactor::{self, ReactorConfig, ReactorShared, TraceSink};
 use crate::coordinator::service::Service;
 use crate::util::json::Value;
 use crate::util::threadpool::{self, ThreadPool};
@@ -58,6 +58,11 @@ pub struct ServerConfig {
     /// Evict a connection whose pending response makes no write
     /// progress for this long (peer stopped reading).
     pub write_stall_ms: u64,
+    /// Emit a structured trace span for every Nth pool-dispatched
+    /// request (0 disables tracing).
+    pub trace_sample: u64,
+    /// Where sampled spans go as JSON lines; `None` writes to stderr.
+    pub trace_log: Option<String>,
 }
 
 impl Default for ServerConfig {
@@ -70,6 +75,8 @@ impl Default for ServerConfig {
             max_queued: 1_024,
             msg_deadline_ms: 30_000,
             write_stall_ms: 10_000,
+            trace_sample: 0,
+            trace_log: None,
         }
     }
 }
@@ -97,6 +104,15 @@ pub struct ServerMetrics {
     /// Requests refused with 503 at the `max_queued` compute gate (the
     /// connection itself is kept).
     pub rejected_queue: AtomicU64,
+    /// Connections reaped by the deadline sweep past their keep-alive
+    /// budget (no partial message buffered).
+    pub evicted_idle: AtomicU64,
+    /// Connections cut off mid-message by the slow-loris deadline (the
+    /// sweep queues a best-effort 400 first).
+    pub evicted_read: AtomicU64,
+    /// Connections evicted because a pending response made no write
+    /// progress for `write_stall_ms` (peer stopped reading).
+    pub evicted_write: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -130,6 +146,9 @@ impl ServerMetrics {
             ("samples_scored", get(&self.samples_scored)),
             ("rejected_busy", get(&self.rejected_busy)),
             ("rejected_queue", get(&self.rejected_queue)),
+            ("evicted_idle", get(&self.evicted_idle)),
+            ("evicted_read", get(&self.evicted_read)),
+            ("evicted_write", get(&self.evicted_write)),
         ])
     }
 }
@@ -164,6 +183,12 @@ impl Server {
             max_connections: cfg.max_connections.max(1),
             max_queued: cfg.max_queued.max(1),
             shutdown_grace: SHUTDOWN_GRACE,
+            trace_sample: cfg.trace_sample,
+        };
+        let sink = if cfg.trace_sample > 0 {
+            Some(Arc::new(TraceSink::open(cfg.trace_log.as_deref())?))
+        } else {
+            None
         };
         let reactor = {
             let svc = Arc::clone(&svc);
@@ -173,7 +198,9 @@ impl Server {
             let shutdown = Arc::clone(&shutdown);
             std::thread::Builder::new()
                 .name("pbsp-http-reactor".into())
-                .spawn(move || reactor::run(listener, svc, pool, metrics, shared, shutdown, rcfg))
+                .spawn(move || {
+                    reactor::run(listener, svc, pool, metrics, shared, shutdown, rcfg, sink)
+                })
                 .context("spawn reactor")?
         };
         Ok(Server { addr, shutdown, reactor: Some(reactor), pool: Some(pool), shared, metrics })
@@ -243,6 +270,9 @@ mod tests {
             "samples_scored",
             "rejected_busy",
             "rejected_queue",
+            "evicted_idle",
+            "evicted_read",
+            "evicted_write",
         ] {
             assert!(v.opt(key).is_some(), "metrics JSON must carry {key}");
         }

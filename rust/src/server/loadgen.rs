@@ -118,6 +118,10 @@ pub struct Report {
     pub p50_ms: f64,
     pub p90_ms: f64,
     pub p99_ms: f64,
+    /// The frontend's `/metrics` snapshot, scraped while the server is
+    /// still up (after every worker joined).  `None` when the scrape
+    /// failed — the fleet result stands on its own either way.
+    pub server_metrics: Option<Value>,
     cfg: LoadgenConfig,
 }
 
@@ -144,6 +148,7 @@ impl Report {
             errors,
             first_error,
             wall_s,
+            server_metrics: None,
             cfg: cfg.clone(),
         }
     }
@@ -203,6 +208,10 @@ impl Report {
             ("p50_ms", finite(self.p50_ms)),
             ("p90_ms", finite(self.p90_ms)),
             ("p99_ms", finite(self.p99_ms)),
+            (
+                "server_metrics",
+                self.server_metrics.clone().unwrap_or(Value::Null),
+            ),
         ])
     }
 
@@ -323,7 +332,16 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<Report> {
     }
     let wall_s = t0.elapsed().as_secs_f64();
     records.sort_by_key(|r: &DeviceRecord| (r.device, r.seq));
-    Ok(Report::new(records, errors, first_error, wall_s, cfg))
+    let mut report = Report::new(records, errors, first_error, wall_s, cfg);
+    // Scrape the frontend's /metrics while it is still listening so the
+    // JSON artifact carries the server-side view of the run (`verify`
+    // reconciles it against the fleet's own counts).  Best-effort: a
+    // failed scrape leaves the field null, it never fails a done run.
+    report.server_metrics = Client::connect(addr)
+        .and_then(|mut c| c.get("/metrics"))
+        .ok()
+        .and_then(|(status, text)| if status == 200 { Value::parse(&text).ok() } else { None });
+    Ok(report)
 }
 
 /// One worker: interleave its devices by `next_at` schedule, running
@@ -551,6 +569,20 @@ pub fn verify(svc: &Service, report: &Report, precision: u32) -> Result<usize> {
         }
         checked += recs.len();
     }
+    // Counter reconciliation: every successful fleet record rode one
+    // HTTP request, so the server must have counted at least that many
+    // (keep-alive probes, retries and the /metrics scrape itself only
+    // push the server-side count higher).
+    if let Some(sm) = &report.server_metrics {
+        let served = sm.get("server")?.get("http_requests")?.as_i64()?;
+        if (served as usize) < report.records.len() {
+            bail!(
+                "verify: server counted {served} http requests but the fleet recorded {} \
+                 successes — counters do not reconcile",
+                report.records.len()
+            );
+        }
+    }
     Ok(checked)
 }
 
@@ -603,6 +635,9 @@ mod tests {
         assert_eq!(back.get("p50_ms").unwrap().as_f64().unwrap(), 0.0);
         assert!(back.get("first_error").unwrap().as_str().unwrap().contains("connect"));
         assert!(r.summary().contains("first error"), "summary must surface the first error");
+        // An unscraped report still carries the key (null), so the CI
+        // artifact schema is stable whether or not the scrape landed.
+        assert!(back.opt("server_metrics").is_some(), "artifact must carry server_metrics");
     }
 
     /// Regression (ISSUE 7): a refused `Client::connect` consumes a
@@ -661,6 +696,7 @@ mod tests {
             errors: 0,
             first_error: None,
             wall_s: 1.0,
+            server_metrics: None,
             cfg,
         };
         let h = report.histogram();

@@ -53,9 +53,11 @@ use std::time::{Duration, Instant};
 
 use super::http::{HttpConn, Message, Outcome, Response};
 use super::listener::ServerMetrics;
-use super::routes;
+use super::routes::{self, HandlerTrace};
 use crate::coordinator::service::Service;
+use crate::util::json::Value;
 use crate::util::poll::{self, PollFd, Waker};
+use crate::util::telemetry;
 use crate::util::threadpool::ThreadPool;
 
 /// Poll timeout: bounds deadline-sweep latency (keep-alive reaping,
@@ -73,6 +75,37 @@ pub(crate) struct ReactorConfig {
     pub max_connections: usize,
     pub max_queued: usize,
     pub shutdown_grace: Duration,
+    /// Trace every Nth pool-dispatched request (0 = tracing off).
+    pub trace_sample: u64,
+}
+
+/// Where sampled trace spans go, one JSON line per span.  Shared with
+/// pool-worker-free abandon: only the reactor writes, but the sink is
+/// behind a mutex anyway so a future writer cannot interleave lines.
+pub(crate) struct TraceSink {
+    out: Mutex<Box<dyn std::io::Write + Send>>,
+}
+
+impl TraceSink {
+    /// `None` logs spans to stderr; `Some(path)` truncates and writes
+    /// the file.
+    pub fn open(path: Option<&str>) -> anyhow::Result<TraceSink> {
+        use anyhow::Context;
+        let out: Box<dyn std::io::Write + Send> = match path {
+            Some(p) => Box::new(
+                std::fs::File::create(p).with_context(|| format!("create trace log {p}"))?,
+            ),
+            None => Box::new(std::io::stderr()),
+        };
+        Ok(TraceSink { out: Mutex::new(out) })
+    }
+
+    fn write_line(&self, line: &str) {
+        use std::io::Write;
+        let mut o = self.out.lock().unwrap();
+        let _ = writeln!(o, "{line}");
+        let _ = o.flush();
+    }
 }
 
 /// State shared between the reactor thread, the pool workers and the
@@ -86,6 +119,9 @@ pub(crate) struct ReactorShared {
     /// Requests dispatched to the pool whose completions the reactor
     /// has not yet drained — the `max_queued` backpressure gauge.
     inflight: AtomicU64,
+    /// Pool-dispatched request ordinal, the trace-sampling clock (only
+    /// advanced while tracing is on).
+    trace_seq: AtomicU64,
 }
 
 impl ReactorShared {
@@ -94,6 +130,7 @@ impl ReactorShared {
             completions: Mutex::new(Vec::new()),
             waker: Waker::new()?,
             inflight: AtomicU64::new(0),
+            trace_seq: AtomicU64::new(0),
         })
     }
 }
@@ -102,6 +139,8 @@ struct Completion {
     token: u64,
     resp: Response,
     close: bool,
+    /// Handler-side timings when the request was sampled for tracing.
+    trace: Option<HandlerTrace>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -118,6 +157,23 @@ struct Conn {
     /// keep-alive clock in `Reading`, the stall clock in `Writing`.
     last_activity: Instant,
     close_after_write: bool,
+    /// The in-flight request's trace span draft, when sampled.  Emitted
+    /// once the response fully drains; dropped silently if the
+    /// connection dies first.
+    span: Option<Span>,
+}
+
+/// Reactor-side half of a request trace span (the handler half arrives
+/// with the completion).
+struct Span {
+    seq: u64,
+    /// First byte → complete frame, from the framing layer.
+    read_us: u64,
+    /// When the request was handed to the compute pool.
+    dispatched: Instant,
+    /// When the finished response was queued onto the connection.
+    write_start: Instant,
+    handler: Option<HandlerTrace>,
 }
 
 /// What to do with a connection after driving it.
@@ -133,10 +189,12 @@ struct Ctx<'a> {
     metrics: &'a Arc<ServerMetrics>,
     shared: &'a Arc<ReactorShared>,
     cfg: &'a ReactorConfig,
+    sink: Option<&'a TraceSink>,
     draining: bool,
 }
 
 /// The reactor body; runs on a dedicated thread until shutdown + drain.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run(
     listener: TcpListener,
     svc: Arc<Service>,
@@ -145,12 +203,21 @@ pub(crate) fn run(
     shared: Arc<ReactorShared>,
     shutdown: Arc<AtomicBool>,
     cfg: ReactorConfig,
+    sink: Option<Arc<TraceSink>>,
 ) {
     let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
     let mut next_token: u64 = 0;
     let mut drain_deadline: Option<Instant> = None;
+    // Reactor dark corners: how long each loop round takes (poll wait
+    // included) and how many completions each round delivers.
+    let tel = telemetry::global();
+    let round_us =
+        tel.histogram("pbsp_reactor_poll_round_us", "reactor loop round duration in us, poll wait included");
+    let completions_depth =
+        tel.gauge("pbsp_reactor_completions_depth", "completions delivered in the latest reactor round");
 
     loop {
+        let round_t0 = Instant::now();
         if shutdown.load(Ordering::SeqCst) && drain_deadline.is_none() {
             drain_deadline = Some(Instant::now() + cfg.shutdown_grace);
         }
@@ -160,6 +227,7 @@ pub(crate) fn run(
             metrics: &metrics,
             shared: &shared,
             cfg: &cfg,
+            sink: sink.as_deref(),
             draining: drain_deadline.is_some(),
         };
 
@@ -168,6 +236,7 @@ pub(crate) fn run(
             let mut lock = shared.completions.lock().unwrap();
             lock.drain(..).collect()
         };
+        completions_depth.set(done.len() as i64);
         for c in done {
             // Every handler-produced response is counted, even if its
             // connection was evicted meanwhile (the work happened).
@@ -177,6 +246,10 @@ pub(crate) fn run(
                 conn.http.queue_response(&c.resp, conn.close_after_write);
                 conn.state = State::Writing;
                 conn.last_activity = Instant::now();
+                if let Some(span) = conn.span.as_mut() {
+                    span.handler = c.trace;
+                    span.write_start = Instant::now();
+                }
                 // Eager flush: most responses fit the send buffer, so
                 // they complete without waiting for a poll round.
                 if let Drive::Evict = advance_write(c.token, conn, &ctx) {
@@ -251,6 +324,7 @@ pub(crate) fn run(
                 }
             }
         }
+        round_us.observe(round_t0.elapsed().as_micros() as u64);
     }
 
     metrics.open_connections.store(0, Ordering::Relaxed);
@@ -326,6 +400,7 @@ fn admit(stream: TcpStream, open: usize, ctx: &Ctx<'_>) -> Option<Conn> {
             state: State::Writing,
             last_activity: Instant::now(),
             close_after_write: true,
+            span: None,
         });
     }
     ctx.metrics.connections.fetch_add(1, Ordering::Relaxed);
@@ -336,6 +411,7 @@ fn admit(stream: TcpStream, open: usize, ctx: &Ctx<'_>) -> Option<Conn> {
         state: State::Reading,
         last_activity: Instant::now(),
         close_after_write: false,
+        span: None,
     })
 }
 
@@ -392,19 +468,44 @@ fn dispatch(token: u64, conn: &mut Conn, msg: Message, ctx: &Ctx<'_>) {
     }
     ctx.shared.inflight.fetch_add(1, Ordering::SeqCst);
     conn.state = State::InFlight;
+    // Trace sampling: every Nth pool-dispatched request opens a span
+    // draft on its connection; the handler half rides back with the
+    // completion and the span is emitted once the response drains.
+    let seq = if ctx.cfg.trace_sample > 0 && ctx.sink.is_some() {
+        let n = ctx.shared.trace_seq.fetch_add(1, Ordering::Relaxed);
+        (n % ctx.cfg.trace_sample == 0).then_some(n)
+    } else {
+        None
+    };
+    let sampled = seq.is_some();
+    if let Some(seq) = seq {
+        conn.span = Some(Span {
+            seq,
+            read_us: msg.read_age.map(|d| d.as_micros() as u64).unwrap_or(0),
+            dispatched: Instant::now(),
+            write_start: Instant::now(),
+            handler: None,
+        });
+    }
     let svc = Arc::clone(ctx.svc);
     let metrics = Arc::clone(ctx.metrics);
     let shared = Arc::clone(ctx.shared);
+    let enqueued = Instant::now();
     ctx.pool.execute(move || {
+        let mut ht = if sampled { Some(HandlerTrace::default()) } else { None };
+        if let Some(t) = ht.as_mut() {
+            t.queue_us = enqueued.elapsed().as_micros() as u64;
+        }
         // Panics become a 500 so a handler bug can neither kill the
         // worker nor leak the in-flight slot (or the connection).
-        let (resp, close) = catch_unwind(AssertUnwindSafe(|| routes::respond(&svc, &metrics, msg)))
-            .unwrap_or_else(|_| (Response::error(500, "handler panicked"), true));
+        let (resp, close) =
+            catch_unwind(AssertUnwindSafe(|| routes::respond(&svc, &metrics, msg, ht.as_mut())))
+                .unwrap_or_else(|_| (Response::error(500, "handler panicked"), true));
         // Publish the completion BEFORE dropping the in-flight slot:
         // shutdown exits once inflight hits 0 with nothing pending, so
         // the reverse order could drop a finished response on the
         // floor during drain.
-        shared.completions.lock().unwrap().push(Completion { token, resp, close });
+        shared.completions.lock().unwrap().push(Completion { token, resp, close, trace: ht });
         shared.inflight.fetch_sub(1, Ordering::SeqCst);
         shared.waker.wake();
     });
@@ -423,6 +524,10 @@ fn advance_write(token: u64, conn: &mut Conn, ctx: &Ctx<'_>) -> Drive {
                 }
                 if !done {
                     return Drive::Keep; // wait for write readiness
+                }
+                // Fully drained: a sampled request's span is complete.
+                if let Some(span) = conn.span.take() {
+                    emit_span(token, &span, ctx);
                 }
                 if conn.close_after_write {
                     return Drive::Evict;
@@ -456,7 +561,9 @@ fn advance_write(token: u64, conn: &mut Conn, ctx: &Ctx<'_>) -> Drive {
 
 /// Reap idle keep-alives, evict slow-loris peers past the mid-message
 /// deadline (even fully-silent ones a readiness loop would never see
-/// readable), and cut off stalled writers.
+/// readable), and cut off stalled writers.  Each eviction class keeps
+/// its own counter so `/metrics` can tell an idle fleet from an attack
+/// from a stopped reader.
 fn sweep_deadlines(conns: &mut BTreeMap<u64, Conn>, ctx: &Ctx<'_>) {
     let now = Instant::now();
     let mut evict: Vec<u64> = Vec::new();
@@ -465,6 +572,7 @@ fn sweep_deadlines(conns: &mut BTreeMap<u64, Conn>, ctx: &Ctx<'_>) {
             State::Reading => {
                 if let Some(age) = conn.http.msg_age() {
                     if age > ctx.cfg.msg_deadline {
+                        ctx.metrics.evicted_read.fetch_add(1, Ordering::Relaxed);
                         queue_request_error(
                             conn,
                             ctx,
@@ -474,12 +582,14 @@ fn sweep_deadlines(conns: &mut BTreeMap<u64, Conn>, ctx: &Ctx<'_>) {
                 } else if ctx.draining
                     || now.duration_since(conn.last_activity) >= ctx.cfg.keep_alive
                 {
+                    ctx.metrics.evicted_idle.fetch_add(1, Ordering::Relaxed);
                     evict.push(token);
                 }
             }
             State::InFlight => {} // governed by the compute pool
             State::Writing => {
                 if now.duration_since(conn.last_activity) > ctx.cfg.write_stall {
+                    ctx.metrics.evicted_write.fetch_add(1, Ordering::Relaxed);
                     evict.push(token); // peer stopped reading
                 }
             }
@@ -488,4 +598,32 @@ fn sweep_deadlines(conns: &mut BTreeMap<u64, Conn>, ctx: &Ctx<'_>) {
     for token in evict {
         conns.remove(&token);
     }
+}
+
+/// Serialize one finished span as a JSON line.  Six timed stages:
+/// read (first byte → full frame), queue (dispatch → pool pickup),
+/// parse (request decode), batch (dynamic-batcher wait), exec (backend
+/// run), write (response queue → drained).
+fn emit_span(token: u64, span: &Span, ctx: &Ctx<'_>) {
+    let Some(sink) = ctx.sink else { return };
+    let h = span.handler.clone().unwrap_or_default();
+    let write_us = span.write_start.elapsed().as_micros() as u64;
+    let total_us = span.read_us + span.dispatched.elapsed().as_micros() as u64;
+    let v = Value::obj(vec![
+        ("span", Value::from("request")),
+        ("seq", Value::from(span.seq as i64)),
+        ("conn", Value::from(token as i64)),
+        ("model", Value::from(h.model.as_str())),
+        ("variant", Value::from(h.variant.as_str())),
+        ("status", Value::from(h.status as i64)),
+        ("batch", Value::from(h.batch as i64)),
+        ("read_us", Value::from(span.read_us as i64)),
+        ("queue_us", Value::from(h.queue_us as i64)),
+        ("parse_us", Value::from(h.parse_us as i64)),
+        ("batch_us", Value::from(h.batch_us as i64)),
+        ("exec_us", Value::from(h.exec_us as i64)),
+        ("write_us", Value::from(write_us as i64)),
+        ("total_us", Value::from(total_us as i64)),
+    ]);
+    sink.write_line(&v.to_string());
 }

@@ -4,7 +4,7 @@
 //! |---|---|---|---|
 //! | `/healthz` | GET | — | service liveness |
 //! | `/v1/models` | GET | — | the artifact manifest |
-//! | `/metrics` | GET | — | coordinator + server counters |
+//! | `/metrics` | GET | — | coordinator + server counters (JSON; `?format=prometheus` for text exposition) |
 //! | `/v1/score/{model}/{precision}` | POST | `{"x": [...]}` or `{"xs": [[...], ...]}` | `Service::submit` (streaming path) |
 //!
 //! Scoring goes through the *streaming* submit path on purpose: every
@@ -12,6 +12,9 @@
 //! coalesce into real dynamic batches exactly like in-process callers —
 //! and responses are bit-identical to direct `Service::submit` (the
 //! JSON number round-trip is exact: shortest-repr f64 both ways).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -21,34 +24,81 @@ use crate::coordinator::router::Key;
 use crate::coordinator::service::Service;
 use crate::util::json::Value;
 use crate::util::stats::Reservoir;
+use crate::util::telemetry::{self, prom_counter, prom_gauge};
+
+/// Handler-side timings of one sampled request, filled in while the
+/// request executes; the reactor merges it into the connection's trace
+/// span and emits the span once the response has drained.
+#[derive(Debug, Default, Clone)]
+pub struct HandlerTrace {
+    /// Dispatch → pool pickup (compute-pool queue wait).
+    pub queue_us: u64,
+    /// Request-line + body JSON decode and validation.
+    pub parse_us: u64,
+    /// Enqueue → batch-cut wait in the coordinator's dynamic batcher
+    /// (max across the request's samples).
+    pub batch_us: u64,
+    /// Backend execution of the batch the request rode in (max across
+    /// the request's samples).
+    pub exec_us: u64,
+    /// Size of that batch.
+    pub batch: u32,
+    pub status: u16,
+    pub model: String,
+    pub variant: String,
+}
 
 /// The reactor's pool-job entry point: parse a framed message into a
 /// request, route it, and report whether the connection should close
 /// afterwards (client `Connection: close`, or an unparseable request).
-pub fn respond(svc: &Service, metrics: &ServerMetrics, msg: Message) -> (Response, bool) {
-    match Request::from_message(msg) {
+/// `trace` is `Some` when the request was sampled for a trace span.
+pub fn respond(
+    svc: &Service,
+    metrics: &ServerMetrics,
+    msg: Message,
+    mut trace: Option<&mut HandlerTrace>,
+) -> (Response, bool) {
+    let (resp, close) = match Request::from_message(msg) {
         Ok(req) => {
             let close = req.wants_close();
-            (route(svc, metrics, &req), close)
+            (route(svc, metrics, &req, trace.as_deref_mut()), close)
         }
         Err(e) => (Response::error(400, &format!("{e:#}")), true),
+    };
+    if let Some(t) = trace {
+        t.status = resp.status;
     }
+    (resp, close)
 }
 
 /// Dispatch one request.  Never panics; every outcome is a `Response`.
-pub fn route(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
+pub fn route(
+    svc: &Service,
+    metrics: &ServerMetrics,
+    req: &Request,
+    trace: Option<&mut HandlerTrace>,
+) -> Response {
+    // The query string only selects representations (`/metrics`), so
+    // routing dispatches on the bare path.
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    match (req.method.as_str(), path) {
         ("GET", "/healthz") => healthz(svc),
         ("GET", "/v1/models") => models(svc),
+        ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => {
+            metrics_prometheus(svc, metrics)
+        }
         ("GET", "/metrics") => metrics_snapshot(svc, metrics),
         (_, "/healthz") | (_, "/v1/models") | (_, "/metrics") => {
-            Response::error(405, &format!("{} expects GET", req.path))
+            Response::error(405, &format!("{path} expects GET"))
         }
         (method, path) if path.starts_with("/v1/score/") => {
             if method != "POST" {
                 return Response::error(405, "scoring expects POST");
             }
-            match score(svc, metrics, req) {
+            match score(svc, metrics, req, path, trace) {
                 Ok(resp) => resp,
                 Err(e) => e,
             }
@@ -112,8 +162,45 @@ fn metrics_snapshot(svc: &Service, server: &ServerMetrics) -> Response {
     ]);
     Response::json(
         200,
-        &Value::obj(vec![("coordinator", coordinator), ("server", server.to_json())]),
+        &Value::obj(vec![
+            ("coordinator", coordinator),
+            ("server", server.to_json()),
+            ("telemetry", telemetry::global().to_json()),
+        ]),
     )
+}
+
+/// `/metrics?format=prometheus`: the full registry (pool, batcher, ISS,
+/// reactor series) plus hand-rendered samples for the per-instance
+/// `ServerMetrics` atomics and the coordinator's lock-guarded counters,
+/// which live outside the registry.
+fn metrics_prometheus(svc: &Service, server: &ServerMetrics) -> Response {
+    let mut out = String::new();
+    telemetry::global().render_prometheus(&mut out);
+    let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    prom_counter(&mut out, "pbsp_server_connections_total", "connections accepted and admitted", c(&server.connections));
+    prom_gauge(&mut out, "pbsp_server_open_connections", "currently-open connections", c(&server.open_connections) as f64);
+    prom_counter(&mut out, "pbsp_server_http_requests_total", "HTTP requests read off connections", c(&server.http_requests));
+    prom_counter(&mut out, "pbsp_server_responses_2xx_total", "2xx responses", c(&server.responses_2xx));
+    prom_counter(&mut out, "pbsp_server_responses_4xx_total", "4xx responses", c(&server.responses_4xx));
+    prom_counter(&mut out, "pbsp_server_responses_5xx_total", "5xx responses", c(&server.responses_5xx));
+    prom_counter(&mut out, "pbsp_server_responses_other_total", "1xx/3xx responses", c(&server.responses_other));
+    prom_counter(&mut out, "pbsp_server_samples_scored_total", "samples scored over HTTP", c(&server.samples_scored));
+    prom_counter(&mut out, "pbsp_server_rejected_busy_total", "connections refused at the max-connections gate", c(&server.rejected_busy));
+    prom_counter(&mut out, "pbsp_server_rejected_queue_total", "requests refused at the max-queued gate", c(&server.rejected_queue));
+    prom_counter(&mut out, "pbsp_server_evicted_idle_total", "connections reaped past their keep-alive budget", c(&server.evicted_idle));
+    prom_counter(&mut out, "pbsp_server_evicted_read_total", "connections cut off mid-message past the slow-loris deadline", c(&server.evicted_read));
+    prom_counter(&mut out, "pbsp_server_evicted_write_total", "connections evicted for a stalled response write", c(&server.evicted_write));
+    let m = svc.metrics.lock().unwrap().clone();
+    prom_counter(&mut out, "pbsp_coordinator_batches_total", "dynamic batches executed", m.batches);
+    prom_counter(&mut out, "pbsp_coordinator_compiles_total", "executable compiles (PJRT loads + ISS codegens)", m.compiles);
+    prom_gauge(&mut out, "pbsp_coordinator_mean_batch", "mean dispatched batch size", m.mean_batch_size());
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4",
+        body: out.into_bytes(),
+        retry_after: None,
+    }
 }
 
 /// Distribution snapshot from a reservoir (nearest-rank percentiles,
@@ -163,9 +250,16 @@ pub fn parse_score_path(path: &str) -> Result<(String, String)> {
 
 /// Errors are returned as ready-to-send responses so `route` can stay
 /// a total function.
-fn score(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Result<Response, Response> {
+fn score(
+    svc: &Service,
+    metrics: &ServerMetrics,
+    req: &Request,
+    path: &str,
+    mut trace: Option<&mut HandlerTrace>,
+) -> Result<Response, Response> {
+    let t_parse = Instant::now();
     let (model_name, variant) =
-        parse_score_path(&req.path).map_err(|e| Response::error(404, &format!("{e:#}")))?;
+        parse_score_path(path).map_err(|e| Response::error(404, &format!("{e:#}")))?;
     let entry = svc
         .manifest
         .model(&model_name)
@@ -188,6 +282,11 @@ fn score(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Result<Respon
             ));
         }
     }
+    if let Some(t) = trace.as_deref_mut() {
+        t.parse_us = t_parse.elapsed().as_micros() as u64;
+        t.model = model_name.clone();
+        t.variant = variant.clone();
+    }
     // Streaming path: submit every sample, then gather — concurrent
     // connections coalesce in the dynamic batcher meanwhile.
     let key = Key::new(&model_name, &variant);
@@ -201,7 +300,14 @@ fn score(svc: &Service, metrics: &ServerMetrics, req: &Request) -> Result<Respon
     let mut scores: Vec<Vec<f64>> = Vec::with_capacity(pending.len());
     for rx in pending {
         match rx.recv() {
-            Ok(Ok(s)) => scores.push(s),
+            Ok(Ok(s)) => {
+                if let Some(t) = trace.as_deref_mut() {
+                    t.batch_us = t.batch_us.max(s.queue_us);
+                    t.exec_us = t.exec_us.max(s.exec_us);
+                    t.batch = t.batch.max(s.batch);
+                }
+                scores.push(s.scores);
+            }
             Ok(Err(e)) => return Err(Response::error(500, &e)),
             Err(_) => return Err(Response::error(500, "runtime worker gone")),
         }

@@ -212,6 +212,7 @@ impl BatchRv32 {
                     let i = self.members[mi];
                     self.executed[i] += need;
                     self.lanes[i].exec_stats.blocks += 1;
+                    self.lanes[i].exec_stats.fused_uops += b.fused as u64;
                 }
                 // Micro-op-major lockstep: one decode, all lanes.  A
                 // faulting lane retires with its `Err` and is masked
@@ -292,8 +293,7 @@ impl BatchRv32 {
     pub fn exec_stats(&self) -> ExecStats {
         let mut s = ExecStats::default();
         for lane in &self.lanes {
-            s.blocks += lane.exec_stats.blocks;
-            s.fallback_instrs += lane.exec_stats.fallback_instrs;
+            s.merge(&lane.exec_stats);
         }
         s
     }
@@ -404,6 +404,7 @@ impl BatchTpIsa {
                     let i = self.members[mi];
                     self.executed[i] += need;
                     self.lanes[i].exec_stats.blocks += 1;
+                    self.lanes[i].exec_stats.fused_uops += b.fused as u64;
                 }
                 for u in b.uops.iter() {
                     let mut w = 0;
@@ -482,8 +483,7 @@ impl BatchTpIsa {
     pub fn exec_stats(&self) -> ExecStats {
         let mut s = ExecStats::default();
         for lane in &self.lanes {
-            s.blocks += lane.exec_stats.blocks;
-            s.fallback_instrs += lane.exec_stats.fallback_instrs;
+            s.merge(&lane.exec_stats);
         }
         s
     }
@@ -548,6 +548,11 @@ mod tests {
                 "lane {i}: histogram"
             );
             assert_eq!(batch.lane(i).exec_stats.blocks, sref.exec_stats.blocks, "lane {i}");
+            assert_eq!(
+                batch.lane(i).exec_stats.fused_uops,
+                sref.exec_stats.fused_uops,
+                "lane {i}"
+            );
             assert_eq!(
                 batch.lane(i).exec_stats.fallback_instrs,
                 sref.exec_stats.fallback_instrs,
@@ -666,6 +671,11 @@ mod tests {
             );
             assert_eq!(batch.lane(i).profile.cycles, sref.profile.cycles, "lane {i}: cycles");
             assert_eq!(batch.lane(i).exec_stats.blocks, sref.exec_stats.blocks, "lane {i}");
+            assert_eq!(
+                batch.lane(i).exec_stats.fused_uops,
+                sref.exec_stats.fused_uops,
+                "lane {i}"
+            );
             assert_eq!(
                 batch.lane(i).exec_stats.fallback_instrs,
                 sref.exec_stats.fallback_instrs,

@@ -466,6 +466,7 @@ impl TpIsa {
                 if fuel - executed >= b.n_instrs as u64 {
                     executed += b.n_instrs as u64;
                     self.exec_stats.blocks += 1;
+                    self.exec_stats.fused_uops += b.fused as u64;
                     for u in b.uops.iter() {
                         self.exec_uop(u, mask, msb)?;
                     }

@@ -106,9 +106,21 @@ pub struct TranslateStats {
 pub struct ExecStats {
     /// Translated blocks dispatched.
     pub blocks: u64,
+    /// Fused superinstructions executed (one per fused uop per block
+    /// dispatch) — the dynamic counterpart of [`TranslateStats::fused`].
+    pub fused_uops: u64,
     /// Instructions retired through the per-instruction fallback
     /// (mid-block entries, untranslatable blocks, fuel tails).
     pub fallback_instrs: u64,
+}
+
+impl ExecStats {
+    /// Fold another run's counters in (shard merges in `ml::harness`).
+    pub fn merge(&mut self, other: &ExecStats) {
+        self.blocks += other.blocks;
+        self.fused_uops += other.fused_uops;
+        self.fallback_instrs += other.fallback_instrs;
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -191,6 +203,9 @@ pub struct BlockRv32 {
     pub next_pc: u32,
     /// Histogram delta: (mnemonic id, mnemonic, count).
     pub counts: Box<[(u16, &'static str, u32)]>,
+    /// Fused superinstructions in the body (the per-dispatch
+    /// [`ExecStats::fused_uops`] delta).
+    pub fused: u32,
     /// Straight-line body, terminator excluded.
     pub uops: Box<[UopRv32]>,
     pub term: TermRv32,
@@ -454,6 +469,7 @@ pub fn translate_rv32(code: &[rv32::Instr], has_mac: bool) -> TranslatedRv32 {
             last_pc: (j as u32) * 4,
             next_pc: ((j as u32) * 4).wrapping_add(4),
             counts: Box::new([]),
+            fused: 0,
             uops: Box::new([]),
             term: TermRv32::FallThrough,
         };
@@ -481,7 +497,9 @@ pub fn translate_rv32(code: &[rv32::Instr], has_mac: bool) -> TranslatedRv32 {
 
         let term_pc = (j as u32) * 4;
         let body = if terminated { &code[i..j] } else { instrs };
+        let fused_before = stats.fused;
         block.uops = lower_rv32_body(body, (i as u32) * 4, &mut stats).into();
+        block.fused = (stats.fused - fused_before) as u32;
         block.term = if terminated {
             match code[j] {
                 rv32::Instr::Jal { rd, offset } => TermRv32::Jal {
@@ -576,6 +594,9 @@ pub struct BlockTpIsa {
     /// PC after the block (fall-through / branch-not-taken).
     pub next_pc: i64,
     pub counts: Box<[(u16, &'static str, u32)]>,
+    /// Fused superinstructions in the body (the per-dispatch
+    /// [`ExecStats::fused_uops`] delta).
+    pub fused: u32,
     pub uops: Box<[UopTpIsa]>,
     pub term: TermTpIsa,
 }
@@ -805,6 +826,7 @@ pub fn translate_tpisa(code: &[tpisa::Instr], has_mac: bool) -> TranslatedTpIsa 
             last_pc: j as i64,
             next_pc: j as i64 + 1,
             counts: Box::new([]),
+            fused: 0,
             uops: Box::new([]),
             term: TermTpIsa::FallThrough,
         };
@@ -825,7 +847,9 @@ pub fn translate_tpisa(code: &[tpisa::Instr], has_mac: bool) -> TranslatedTpIsa 
             counts.into_iter().map(|(id, (name, c))| (id, name, c)).collect::<Vec<_>>().into();
 
         let body = if terminated { &code[i..j] } else { instrs };
+        let fused_before = stats.fused;
         block.uops = lower_tp_body(body, &mut stats).into();
+        block.fused = (stats.fused - fused_before) as u32;
         block.term = if terminated {
             let pc = j as i64;
             match code[j] {
@@ -921,6 +945,44 @@ mod tests {
         assert_eq!(b.loads, 2);
         // lw(2) + lw(2) + mac(1) + 3*addi(1) + ebreak(1).
         assert_eq!(b.base_cycles, 9);
+        // Load2Mac + Alu3 fuse in this one block; the per-block count
+        // is the image total (telemetry's per-dispatch fused delta).
+        assert_eq!(b.fused as usize, t.stats.fused);
+        assert_eq!(b.fused, 2);
+    }
+
+    /// Per-block fused counts tile the image total for both ISAs.
+    #[test]
+    fn per_block_fused_sums_to_stats() {
+        let code = assemble(
+            r#"
+            loop:
+                lw  t0, 0(s0)
+                lw  t1, 0(s1)
+                mac t0, t1
+                addi s0, s0, 4
+                addi s1, s1, 4
+                bnez a1, loop
+                ebreak
+            "#,
+        )
+        .unwrap();
+        let t = translate_rv32(&code, true);
+        let sum: usize = t.blocks.iter().map(|b| b.fused as usize).sum();
+        assert_eq!(sum, t.stats.fused);
+        assert!(t.stats.fused >= 1);
+
+        use crate::isa::tpisa::Instr;
+        let tcode = vec![
+            Instr::Ld { r1: 0, r2: 7, imm: 0 },
+            Instr::Ld { r1: 1, r2: 6, imm: 0 },
+            Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 },
+            Instr::Halt,
+        ];
+        let tt = translate_tpisa(&tcode, true);
+        let tsum: usize = tt.blocks.iter().map(|b| b.fused as usize).sum();
+        assert_eq!(tsum, tt.stats.fused);
+        assert!(tt.stats.fused >= 1);
     }
 
     #[test]

@@ -14,4 +14,5 @@ pub mod poll;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod telemetry;
 pub mod threadpool;

@@ -1,0 +1,514 @@
+//! Process-wide telemetry: named lock-free counters, gauges, and
+//! fixed-bucket log₂ histograms behind one registry, rendered as JSON
+//! or Prometheus text exposition (`GET /metrics?format=prometheus`).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **No `Mutex` on hot paths.**  Counters are sharded over
+//!    cache-line-padded atomics (a thread increments only its own
+//!    shard; `get()` sums).  Gauges and histogram buckets are single
+//!    relaxed atomics.  The registry's `Mutex` is taken only at
+//!    registration (once per metric per subsystem start) and at scrape
+//!    time.
+//! 2. **Strictly side-channel.**  Nothing here feeds back into
+//!    scheduling, scoring, or batching decisions — bit-identity of
+//!    every scoring path is unaffected by telemetry being on.
+//! 3. **Zero dependencies.**  The Prometheus text format is simple
+//!    enough to emit by hand (`# HELP`/`# TYPE` + samples; histograms
+//!    as cumulative `_bucket{le=...}` + `_sum` + `_count`).
+//!
+//! Registration is get-or-create: any subsystem may ask for
+//! `pbsp_pool_queue_depth` and all of them share the one series.  That
+//! makes the registry process-global (`telemetry::global()`) without
+//! ownership plumbing — a deliberate trade: multiple servers in one
+//! process (tests) accumulate into shared series, which scrapes must
+//! treat as monotone counters, exactly as Prometheus semantics demand.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Value;
+
+/// Counter shard count: enough that a handful of pool workers plus the
+/// reactor rarely collide, small enough that `get()` stays trivial.
+const SHARDS: usize = 16;
+
+/// One cache line per shard so two threads' increments never false-share.
+#[repr(align(64))]
+#[derive(Default)]
+struct PaddedU64(AtomicU64);
+
+/// Each thread sticks to one shard, assigned round-robin on first use.
+fn shard_of_thread() -> usize {
+    use std::cell::Cell;
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+    }
+    SHARD.with(|s| {
+        let mut i = s.get();
+        if i == usize::MAX {
+            i = NEXT.fetch_add(1, Ordering::Relaxed) % SHARDS;
+            s.set(i);
+        }
+        i
+    })
+}
+
+/// Monotone counter, sharded per thread.  `add` is one relaxed
+/// `fetch_add` on a thread-private cache line.
+pub struct Counter {
+    shards: [PaddedU64; SHARDS],
+}
+
+impl Counter {
+    fn new() -> Counter {
+        Counter { shards: Default::default() }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.shards[shard_of_thread()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Up-down gauge (queue depths, occupancy).  Signed so transient
+/// dec-before-inc interleavings can't wrap.
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.v.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count for [`Histogram`]: bucket `i` holds values with ≤ `i`
+/// significant bits, i.e. upper bound `2^i - 1`; the last bucket is
+/// `+Inf`.  31 finite buckets cover 0 .. ~2^30 µs (~18 minutes) — far
+/// past any request this server serves.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Fixed-bucket log₂ histogram of `u64` observations (microseconds by
+/// convention here).  `observe` is three relaxed `fetch_add`s; no
+/// allocation, no lock, no float math.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: u64) {
+        let b = (u64::BITS - v.leading_zeros()) as usize;
+        self.buckets[b.min(HIST_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket counts (not cumulative); index = significant bits.
+    pub fn snapshot(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Entry {
+    metric: Metric,
+    help: &'static str,
+}
+
+/// Named metric registry.  The map lock is taken only on
+/// register/scrape; handles returned from registration are plain
+/// `Arc`s the caller stores and hits lock-free.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a counter series.  Panics if the name is already
+    /// registered as a different kind (a code bug, not a runtime state).
+    pub fn counter(&self, name: &str, help: &'static str) -> Arc<Counter> {
+        let mut map = self.entries.lock().unwrap();
+        let e = map.entry(name.to_string()).or_insert_with(|| Entry {
+            metric: Metric::Counter(Arc::new(Counter::new())),
+            help,
+        });
+        match &e.metric {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("telemetry: {name} already registered as a non-counter"),
+        }
+    }
+
+    /// Labelled counter: the series key is `name{k="v",...}`, with
+    /// labels sorted by the caller's order (keep it stable).
+    pub fn counter_with(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        help: &'static str,
+    ) -> Arc<Counter> {
+        self.counter(&series_key(name, labels), help)
+    }
+
+    pub fn gauge(&self, name: &str, help: &'static str) -> Arc<Gauge> {
+        let mut map = self.entries.lock().unwrap();
+        let e = map.entry(name.to_string()).or_insert_with(|| Entry {
+            metric: Metric::Gauge(Arc::new(Gauge::new())),
+            help,
+        });
+        match &e.metric {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("telemetry: {name} already registered as a non-gauge"),
+        }
+    }
+
+    pub fn histogram(&self, name: &str, help: &'static str) -> Arc<Histogram> {
+        let mut map = self.entries.lock().unwrap();
+        let e = map.entry(name.to_string()).or_insert_with(|| Entry {
+            metric: Metric::Histogram(Arc::new(Histogram::new())),
+            help,
+        });
+        match &e.metric {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("telemetry: {name} already registered as a non-histogram"),
+        }
+    }
+
+    /// Prometheus text exposition for every registered series, grouped
+    /// by base name (`# HELP`/`# TYPE` once per name, then samples).
+    pub fn render_prometheus(&self, out: &mut String) {
+        let map = self.entries.lock().unwrap();
+        // Group label variants under their base name so one HELP/TYPE
+        // header covers all of them (exposition-format requirement).
+        let mut groups: BTreeMap<&str, Vec<(&str, &Entry)>> = BTreeMap::new();
+        for (key, entry) in map.iter() {
+            let base = key.split('{').next().unwrap_or(key);
+            groups.entry(base).or_default().push((key, entry));
+        }
+        for (base, series) in groups {
+            let (kind, help) = match &series[0].1.metric {
+                Metric::Counter(_) => ("counter", series[0].1.help),
+                Metric::Gauge(_) => ("gauge", series[0].1.help),
+                Metric::Histogram(_) => ("histogram", series[0].1.help),
+            };
+            push_header(out, base, kind, help);
+            for (key, entry) in series {
+                match &entry.metric {
+                    Metric::Counter(c) => {
+                        out.push_str(key);
+                        out.push(' ');
+                        out.push_str(&c.get().to_string());
+                        out.push('\n');
+                    }
+                    Metric::Gauge(g) => {
+                        out.push_str(key);
+                        out.push(' ');
+                        out.push_str(&g.get().to_string());
+                        out.push('\n');
+                    }
+                    Metric::Histogram(h) => push_histogram(out, key, h),
+                }
+            }
+        }
+    }
+
+    /// Flat JSON view: counters/gauges as numbers, histograms as
+    /// `{count, sum}` objects.  Series keys keep their label suffix.
+    pub fn to_json(&self) -> Value {
+        let map = self.entries.lock().unwrap();
+        let mut obj = std::collections::BTreeMap::new();
+        for (key, entry) in map.iter() {
+            let v = match &entry.metric {
+                Metric::Counter(c) => Value::from(c.get() as i64),
+                Metric::Gauge(g) => Value::from(g.get()),
+                Metric::Histogram(h) => Value::obj(vec![
+                    ("count", Value::from(h.count() as i64)),
+                    ("sum", Value::from(h.sum() as i64)),
+                ]),
+            };
+            obj.insert(key.clone(), v);
+        }
+        Value::Obj(obj)
+    }
+}
+
+fn series_key(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut key = String::with_capacity(name.len() + 16 * labels.len());
+    key.push_str(name);
+    key.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            key.push(',');
+        }
+        key.push_str(k);
+        key.push_str("=\"");
+        // Escape per the exposition format (our label values are model
+        // and variant names, but stay correct anyway).
+        for ch in v.chars() {
+            match ch {
+                '\\' => key.push_str("\\\\"),
+                '"' => key.push_str("\\\""),
+                '\n' => key.push_str("\\n"),
+                c => key.push(c),
+            }
+        }
+        key.push('"');
+    }
+    key.push('}');
+    key
+}
+
+fn push_header(out: &mut String, name: &str, kind: &str, help: &'static str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+fn push_histogram(out: &mut String, key: &str, h: &Histogram) {
+    // `key` may carry labels; bucket lines splice `le` into the set.
+    let (base, labels) = match key.split_once('{') {
+        Some((b, rest)) => (b, rest.trim_end_matches('}')),
+        None => (key, ""),
+    };
+    let snapshot = h.snapshot();
+    let mut cumulative = 0u64;
+    for (i, n) in snapshot.iter().enumerate() {
+        cumulative += n;
+        let le = if i == HIST_BUCKETS - 1 {
+            "+Inf".to_string()
+        } else {
+            ((1u64 << i) - 1).to_string()
+        };
+        out.push_str(base);
+        out.push_str("_bucket{");
+        if !labels.is_empty() {
+            out.push_str(labels);
+            out.push(',');
+        }
+        out.push_str("le=\"");
+        out.push_str(&le);
+        out.push_str("\"} ");
+        out.push_str(&cumulative.to_string());
+        out.push('\n');
+    }
+    for (suffix, v) in [("_sum", h.sum()), ("_count", h.count())] {
+        out.push_str(base);
+        out.push_str(suffix);
+        if !labels.is_empty() {
+            out.push('{');
+            out.push_str(labels);
+            out.push('}');
+        }
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+}
+
+/// Append a hand-rendered counter sample (used by `/metrics` for
+/// per-instance `ServerMetrics`/coordinator values that live outside
+/// the registry).
+pub fn prom_counter(out: &mut String, name: &str, help: &'static str, v: u64) {
+    push_header(out, name, "counter", help);
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&v.to_string());
+    out.push('\n');
+}
+
+/// Append a hand-rendered gauge sample (see [`prom_counter`]).
+pub fn prom_gauge(out: &mut String, name: &str, help: &'static str, v: f64) {
+    push_header(out, name, "gauge", help);
+    out.push_str(name);
+    out.push(' ');
+    if v.is_finite() {
+        // Integral gauges print as integers (avoids "3.0"-style noise).
+        if v == v.trunc() && v.abs() < 1e15 {
+            out.push_str(&(v as i64).to_string());
+        } else {
+            out.push_str(&format!("{v}"));
+        }
+    } else {
+        out.push_str("NaN");
+    }
+    out.push('\n');
+}
+
+/// The process-global registry every subsystem registers into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_sums_across_threads() {
+        let r = Registry::new();
+        let c = r.counter("t_counter_total", "help");
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn get_or_create_returns_the_same_series() {
+        let r = Registry::new();
+        r.counter("t_shared_total", "help").add(2);
+        r.counter("t_shared_total", "help").add(3);
+        assert_eq!(r.counter("t_shared_total", "help").get(), 5);
+    }
+
+    #[test]
+    fn gauge_tracks_up_and_down() {
+        let r = Registry::new();
+        let g = r.gauge("t_depth", "help");
+        g.add(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+        g.set(-1);
+        assert_eq!(g.get(), -1);
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let r = Registry::new();
+        let h = r.histogram("t_us", "help");
+        for v in [0, 1, 2, 3, 1000, u64::MAX] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        let s = h.snapshot();
+        assert_eq!(s[0], 1, "0 has zero significant bits");
+        assert_eq!(s[1], 1, "1 has one");
+        assert_eq!(s[2], 2, "2 and 3 have two");
+        assert_eq!(s[10], 1, "1000 has ten");
+        assert_eq!(s[HIST_BUCKETS - 1], 1, "u64::MAX lands in +Inf");
+    }
+
+    #[test]
+    fn prometheus_rendering_is_well_formed() {
+        let r = Registry::new();
+        r.counter("t_reqs_total", "requests").add(7);
+        r.counter_with("t_by_model_total", &[("model", "mlp_c"), ("variant", "p8")], "by model")
+            .add(2);
+        r.gauge("t_depth", "depth").set(4);
+        r.histogram("t_lat_us", "latency").observe(5);
+        let mut out = String::new();
+        r.render_prometheus(&mut out);
+        assert!(out.contains("# HELP t_reqs_total requests\n"));
+        assert!(out.contains("# TYPE t_reqs_total counter\n"));
+        assert!(out.contains("t_reqs_total 7\n"));
+        assert!(out.contains("t_by_model_total{model=\"mlp_c\",variant=\"p8\"} 2\n"));
+        assert!(out.contains("# TYPE t_depth gauge\n"));
+        assert!(out.contains("t_depth 4\n"));
+        assert!(out.contains("# TYPE t_lat_us histogram\n"));
+        assert!(out.contains("t_lat_us_bucket{le=\"7\"} 1\n"), "5 lands in the ≤7 bucket:\n{out}");
+        assert!(out.contains("t_lat_us_bucket{le=\"+Inf\"} 1\n"));
+        assert!(out.contains("t_lat_us_sum 5\n"));
+        assert!(out.contains("t_lat_us_count 1\n"));
+        // HELP/TYPE precede the first sample of their series.
+        let help_at = out.find("# HELP t_reqs_total").unwrap();
+        let sample_at = out.find("\nt_reqs_total 7").unwrap();
+        assert!(help_at < sample_at);
+    }
+
+    #[test]
+    fn histogram_bucket_counts_are_cumulative_in_text() {
+        let r = Registry::new();
+        let h = r.histogram("t_cum_us", "help");
+        h.observe(1); // bucket 1 (le 1)
+        h.observe(100); // bucket 7 (le 127)
+        let mut out = String::new();
+        r.render_prometheus(&mut out);
+        assert!(out.contains("t_cum_us_bucket{le=\"1\"} 1\n"));
+        assert!(out.contains("t_cum_us_bucket{le=\"127\"} 2\n"));
+        assert!(out.contains("t_cum_us_bucket{le=\"+Inf\"} 2\n"));
+    }
+
+    #[test]
+    fn json_view_carries_every_series() {
+        let r = Registry::new();
+        r.counter("t_a_total", "a").add(1);
+        r.gauge("t_b", "b").set(2);
+        r.histogram("t_c_us", "c").observe(3);
+        let v = r.to_json();
+        assert_eq!(v.get("t_a_total").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(v.get("t_b").unwrap().as_i64().unwrap(), 2);
+        assert_eq!(v.get("t_c_us").unwrap().get("count").unwrap().as_i64().unwrap(), 1);
+    }
+}

@@ -30,6 +30,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::util::telemetry::{self, Counter, Gauge};
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
 type CaughtPanic = Box<dyn std::any::Any + Send + 'static>;
 
@@ -41,6 +43,10 @@ pub struct ThreadPool {
     /// scatter-gathers make progress even with every worker busy.
     queue: Arc<Mutex<Receiver<Job>>>,
     workers: Vec<JoinHandle<()>>,
+    /// Telemetry handles (process-global series — every pool in the
+    /// process shares them; see `util::telemetry`).
+    depth: Arc<Gauge>,
+    helped: Arc<Counter>,
 }
 
 /// Worker count used when no explicit `--threads` is given: the
@@ -88,24 +94,38 @@ unsafe fn erase_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Job {
 impl ThreadPool {
     pub fn new(threads: usize) -> Self {
         assert!(threads > 0);
+        let reg = telemetry::global();
+        let depth = reg.gauge("pbsp_pool_queue_depth", "jobs queued but not yet started");
+        let jobs =
+            reg.counter("pbsp_pool_worker_jobs_total", "jobs completed by pool worker threads");
+        let helped = reg.counter(
+            "pbsp_pool_help_runs_total",
+            "jobs run by gathering threads helping drain the queue (par_map)",
+        );
         let (tx, rx) = channel::<Job>();
         let queue = Arc::new(Mutex::new(rx));
         let workers = (0..threads)
             .map(|i| {
                 let queue = Arc::clone(&queue);
+                let depth = Arc::clone(&depth);
+                let jobs = Arc::clone(&jobs);
                 std::thread::Builder::new()
                     .name(format!("pbsp-worker-{i}"))
                     .spawn(move || loop {
                         let job = { queue.lock().unwrap().recv() };
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                depth.sub(1);
+                                job();
+                                jobs.inc();
+                            }
                             Err(_) => break, // sender dropped: shut down
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), queue, workers }
+        ThreadPool { tx: Some(tx), queue, workers, depth, helped }
     }
 
     /// Pool sized to the machine (at least 2).
@@ -124,6 +144,7 @@ impl ThreadPool {
     }
 
     fn send_job(&self, job: Job) {
+        self.depth.add(1);
         self.tx.as_ref().expect("pool shut down").send(job).expect("workers alive");
     }
 
@@ -138,7 +159,9 @@ impl ThreadPool {
         };
         match job {
             Some(job) => {
+                self.depth.sub(1);
                 job();
+                self.helped.inc();
                 true
             }
             None => false,

@@ -122,7 +122,8 @@ fn streaming_equals_bulk() {
     let pending: Vec<_> = xs.iter().map(|x| svc.submit(key.clone(), x.clone()).unwrap()).collect();
     for (i, rx) in pending.into_iter().enumerate() {
         let got = rx.recv().unwrap().unwrap();
-        assert_eq!(got, bulk[i], "sample {i} differs between streaming and bulk");
+        assert_eq!(got.scores, bulk[i], "sample {i} differs between streaming and bulk");
+        assert!(got.batch >= 1, "reply must carry the batch size it rode in");
     }
     let m = svc.metrics.lock().unwrap().clone();
     assert!(m.batches >= 4, "batching should have occurred: {}", m.summary());

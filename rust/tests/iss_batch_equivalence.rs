@@ -281,6 +281,11 @@ fn compare_batch_rv32(
             "{what} lane {i}: blocks"
         );
         assert_eq!(
+            batch.lane(i).exec_stats.fused_uops,
+            sref.exec_stats.fused_uops,
+            "{what} lane {i}: fused"
+        );
+        assert_eq!(
             batch.lane(i).exec_stats.fallback_instrs,
             sref.exec_stats.fallback_instrs,
             "{what} lane {i}: fallback"

@@ -118,7 +118,8 @@ fn legacy_run_rv32(model: &Model, prog: &Rv32Program, xs: &[Vec<f32>]) -> BatchR
         profile.merge(&sim.profile);
     }
     let cps = profile.cycles as f64 / xs.len().max(1) as f64;
-    BatchRun { scores, predictions, profile, cycles_per_sample: cps }
+    let exec_stats = printed_bespoke::sim::ExecStats::default();
+    BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats }
 }
 
 /// The pre-rework TP-ISA harness, verbatim.
@@ -160,7 +161,8 @@ fn legacy_run_tpisa(model: &Model, prog: &TpIsaProgram, xs: &[Vec<f32>]) -> Batc
         profile.merge(&sim.profile);
     }
     let cps = profile.cycles as f64 / xs.len().max(1) as f64;
-    BatchRun { scores, predictions, profile, cycles_per_sample: cps }
+    let exec_stats = printed_bespoke::sim::ExecStats::default();
+    BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats }
 }
 
 /// Bit-level equality of score matrices.

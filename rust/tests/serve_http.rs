@@ -76,7 +76,8 @@ fn fleet_scores_bit_identical_to_direct_submit() {
             .unwrap()
             .recv()
             .unwrap()
-            .unwrap();
+            .unwrap()
+            .scores;
         assert_eq!(
             r.scores, want,
             "device {} seq {} ({} sample {}): HTTP scores differ from direct submit",
@@ -129,7 +130,8 @@ fn endpoints_and_error_paths() {
         .unwrap()
         .recv()
         .unwrap()
-        .unwrap();
+        .unwrap()
+        .scores;
     assert_eq!(got, want);
     let pred = v.get("prediction").unwrap().as_i64().unwrap();
     assert_eq!(pred, svc.model(&model.name).unwrap().predict(&want));

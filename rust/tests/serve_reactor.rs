@@ -217,6 +217,35 @@ fn slow_loris_connection_is_evicted() {
         other => panic!("want close after the 400, got {other:?}"),
     }
     assert!(relaxed(&server.metrics.responses_4xx) >= 1);
+    assert!(
+        relaxed(&server.metrics.evicted_read) >= 1,
+        "slow-loris eviction must land in its own counter"
+    );
+    assert_eq!(relaxed(&server.metrics.evicted_idle), 0, "no idle reap happened here");
+    server.shutdown();
+}
+
+/// A keep-alive connection that goes idle past its budget is reaped by
+/// the deadline sweep — and the reap lands in `evicted_idle`, not one
+/// of the failure counters.
+#[test]
+fn idle_keepalive_is_reaped_and_counted() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let scfg = ServerConfig { keep_alive_ms: 100, ..ServerConfig::default() };
+    let (_svc, mut server) = start(scfg);
+    let mut c = Client::connect(server.addr()).unwrap();
+    assert_eq!(c.get("/healthz").unwrap().0, 200);
+    // Go silent: the sweep reaps the connection past 100 ms idle.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while relaxed(&server.metrics.evicted_idle) == 0 {
+        assert!(Instant::now() < deadline, "idle connection never reaped");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(relaxed(&server.metrics.evicted_read), 0);
+    assert_eq!(relaxed(&server.metrics.evicted_write), 0);
     server.shutdown();
 }
 

@@ -1,0 +1,269 @@
+//! End-to-end telemetry acceptance (ISSUE 8): Prometheus exposition
+//! shape and counter monotonicity over real sockets, scrape liveness
+//! while a device fleet is hammering the same reactor, and sampled
+//! request-trace spans carrying every pipeline stage.
+//!
+//! Skips cleanly when no artifact tree matches the compiled backend
+//! (same policy as `serve_http.rs`).
+
+use std::sync::Arc;
+
+use printed_bespoke::coordinator::service::{Service, ServiceConfig};
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::runtime::pjrt::Runtime;
+use printed_bespoke::server::http::Client;
+use printed_bespoke::server::loadgen::{self, LoadgenConfig};
+use printed_bespoke::server::{Server, ServerConfig};
+use printed_bespoke::util::json::Value;
+
+fn manifest() -> Option<Manifest> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    if Runtime::is_stub() != printed_bespoke::ml::fixtures::manifest_is_stub(&man) {
+        eprintln!("skipping: artifact tree does not match the compiled runtime backend");
+        return None;
+    }
+    Some(man)
+}
+
+fn start_frontend(scfg: ServerConfig) -> (Arc<Service>, Server) {
+    let svc = Arc::new(Service::start(ServiceConfig::default()).unwrap());
+    let server = Server::start(Arc::clone(&svc), scfg).unwrap();
+    (svc, server)
+}
+
+fn score_body(man: &Manifest) -> (String, String) {
+    use printed_bespoke::ml::dataset::Dataset;
+    let model = &man.models[0];
+    let ds = Dataset::load(man.data_dir(), &model.dataset, "test").unwrap();
+    let row = Value::Arr(ds.x[0].iter().map(|&f| Value::Num(f as f64)).collect());
+    (format!("/v1/score/{}/p8", model.name), Value::obj(vec![("x", row)]).to_string())
+}
+
+/// Pull one sample value out of an exposition body by metric name
+/// (label-less series only).
+fn sample(text: &str, name: &str) -> Option<f64> {
+    text.lines()
+        .find(|l| l.starts_with(name) && l.as_bytes().get(name.len()) == Some(&b' '))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+}
+
+/// Golden exposition: `/metrics?format=prometheus` is well-formed text
+/// exposition (HELP/TYPE headers, parseable samples, no duplicate
+/// headers), names every dark-corner series the issue promises, and its
+/// counters are monotone across scrapes.
+#[test]
+fn prometheus_exposition_is_wellformed_and_monotonic() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (_svc, mut server) = start_frontend(ServerConfig::default());
+    let mut c = Client::connect(server.addr()).unwrap();
+    let (path, body) = score_body(&man);
+    for _ in 0..3 {
+        let (status, text) = c.post(&path, &body).unwrap();
+        assert_eq!(status, 200, "{text}");
+    }
+
+    let (status, first) = c.get("/metrics?format=prometheus").unwrap();
+    assert_eq!(status, 200);
+
+    // Every promised series is present.
+    for name in [
+        "pbsp_server_http_requests_total",
+        "pbsp_server_evicted_idle_total",
+        "pbsp_server_evicted_read_total",
+        "pbsp_server_evicted_write_total",
+        "pbsp_server_rejected_busy_total",
+        "pbsp_pool_queue_depth",
+        "pbsp_pool_worker_jobs_total",
+        "pbsp_batcher_occupancy",
+        "pbsp_coordinator_requests_total",
+        "pbsp_coordinator_batches_total",
+        "pbsp_iss_blocks_total",
+        "pbsp_iss_fused_uops_total",
+        "pbsp_iss_fallback_instrs_total",
+        "pbsp_reactor_poll_round_us",
+        "pbsp_reactor_completions_depth",
+    ] {
+        assert!(
+            first.contains(&format!("# HELP {name} ")),
+            "exposition must carry HELP for {name}:\n{first}"
+        );
+        assert!(
+            first.contains(&format!("# TYPE {name} ")),
+            "exposition must carry TYPE for {name}:\n{first}"
+        );
+    }
+    // The labelled per-(model,variant) request counter has a real series.
+    assert!(
+        first.contains("pbsp_coordinator_requests_total{model=\""),
+        "labelled coordinator series missing:\n{first}"
+    );
+    // Histogram shape: buckets, +Inf terminal, sum and count.
+    for suffix in ["_bucket{le=\"", "_bucket{le=\"+Inf\"}", "_sum", "_count"] {
+        assert!(
+            first.contains(&format!("pbsp_reactor_poll_round_us{suffix}")),
+            "poll-round histogram missing {suffix}:\n{first}"
+        );
+    }
+
+    // Line-level well-formedness: comments are HELP/TYPE only, each
+    // sample line is `name[{labels}] value` with a finite numeric value,
+    // and no metric emits its headers twice.
+    let mut headers = std::collections::BTreeSet::new();
+    for line in first.lines().filter(|l| !l.is_empty()) {
+        if let Some(rest) = line.strip_prefix("# ") {
+            assert!(
+                rest.starts_with("HELP ") || rest.starts_with("TYPE "),
+                "unexpected comment line: {line}"
+            );
+            assert!(headers.insert(rest.to_string()), "duplicate header: {line}");
+            continue;
+        }
+        let cut = line.rfind(' ').unwrap_or_else(|| panic!("unparseable sample: {line}"));
+        let (name, value) = (&line[..cut], &line[cut + 1..]);
+        assert!(!name.is_empty() && name.starts_with("pbsp_"), "bad sample name: {line}");
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("bad sample value: {line}"));
+        assert!(v.is_finite(), "non-finite sample: {line}");
+    }
+
+    // Counter monotonicity across scrapes with traffic in between.
+    let before = sample(&first, "pbsp_server_http_requests_total").unwrap();
+    let jobs_before = sample(&first, "pbsp_pool_worker_jobs_total").unwrap();
+    for _ in 0..2 {
+        let (status, _) = c.post(&path, &body).unwrap();
+        assert_eq!(status, 200);
+    }
+    let (status, second) = c.get("/metrics?format=prometheus").unwrap();
+    assert_eq!(status, 200);
+    let after = sample(&second, "pbsp_server_http_requests_total").unwrap();
+    let jobs_after = sample(&second, "pbsp_pool_worker_jobs_total").unwrap();
+    assert!(after >= before + 2.0, "http_requests_total must advance: {before} -> {after}");
+    assert!(jobs_after >= jobs_before, "pool jobs counter went backwards");
+
+    // JSON stays the default format and now carries the registry too.
+    let (status, text) = c.get("/metrics").unwrap();
+    assert_eq!(status, 200);
+    let v = Value::parse(&text).unwrap();
+    assert!(v.get("telemetry").is_ok(), "/metrics JSON must embed the registry");
+    server.shutdown();
+}
+
+/// Scrapes must stay live while a big fleet saturates the reactor: a
+/// scraper thread alternates both `/metrics` formats on its own
+/// keep-alive connection for the whole run, and every scrape answers.
+#[test]
+fn metrics_scrape_survives_fleet_load() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let fleet = 1000usize;
+    printed_bespoke::util::poll::raise_nofile_limit(fleet as u64 * 2 + 512);
+    let svc = Arc::new(Service::start(ServiceConfig::default()).unwrap());
+    let scfg = ServerConfig { max_connections: fleet + 16, ..ServerConfig::default() };
+    let mut server = Server::start(Arc::clone(&svc), scfg).unwrap();
+    let addr = server.addr();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let scraper = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let mut scrapes = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                for path in ["/metrics", "/metrics?format=prometheus"] {
+                    let (status, text) = c.get(path).unwrap();
+                    assert_eq!(status, 200, "scrape {path} failed mid-load: {text}");
+                }
+                scrapes += 1;
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            scrapes
+        })
+    };
+
+    let cfg = LoadgenConfig {
+        fleet,
+        requests_per_device: 2,
+        seed: 7,
+        client_workers: 32,
+        ..LoadgenConfig::default()
+    };
+    let report = loadgen::run(addr, &cfg).unwrap();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let scrapes = scraper.join().expect("scraper thread must not die under load");
+    assert!(scrapes >= 1, "scraper never completed a pass");
+    assert_eq!(report.errors, 0, "fleet saw errors: {}", report.summary());
+    assert_eq!(report.records.len(), fleet * 2);
+    // The in-run scrape is recorded in the artifact and reconciles.
+    let sm = report.server_metrics.as_ref().expect("report must carry scraped metrics");
+    let served = sm.get("server").unwrap().get("http_requests").unwrap().as_i64().unwrap();
+    assert!(
+        served as usize >= report.records.len(),
+        "server counted {served} requests for {} fleet successes",
+        report.records.len()
+    );
+    server.shutdown();
+}
+
+/// `trace_sample: 1` emits exactly one JSON span per request with every
+/// pipeline stage timed (read/queue/parse/batch/execute/write).
+#[test]
+fn trace_spans_cover_every_stage() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let log = std::env::temp_dir().join(format!("pbsp-trace-{}.jsonl", std::process::id()));
+    let scfg = ServerConfig {
+        trace_sample: 1,
+        trace_log: Some(log.to_str().unwrap().to_string()),
+        ..ServerConfig::default()
+    };
+    let (_svc, mut server) = start_frontend(scfg);
+    let mut c = Client::connect(server.addr()).unwrap();
+    let (path, body) = score_body(&man);
+    let n_scores = 4usize;
+    for _ in 0..n_scores {
+        let (status, text) = c.post(&path, &body).unwrap();
+        assert_eq!(status, 200, "{text}");
+    }
+    let (status, _) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    server.shutdown();
+
+    let text = std::fs::read_to_string(&log).unwrap();
+    let _ = std::fs::remove_file(&log);
+    let spans: Vec<Value> = text.lines().map(|l| Value::parse(l).unwrap()).collect();
+    assert_eq!(spans.len(), n_scores + 1, "one span per request at sample rate 1:\n{text}");
+    let model = &man.models[0].name;
+    let mut seqs = Vec::new();
+    for s in &spans {
+        assert_eq!(s.get("span").unwrap().as_str().unwrap(), "request");
+        seqs.push(s.get("seq").unwrap().as_i64().unwrap());
+        for stage in
+            ["read_us", "queue_us", "parse_us", "batch_us", "exec_us", "write_us", "total_us"]
+        {
+            let v = s.get(stage).unwrap_or_else(|_| panic!("span missing {stage}: {s}"));
+            assert!(v.as_i64().unwrap() >= 0, "negative {stage}: {s}");
+        }
+        assert!(s.get("conn").is_ok() && s.get("status").is_ok());
+    }
+    // Sequence numbers are the sampler's own: dense from 0 at rate 1.
+    seqs.sort_unstable();
+    assert_eq!(seqs, (0..=n_scores as i64).collect::<Vec<_>>());
+    let scored: Vec<&Value> = spans
+        .iter()
+        .filter(|s| s.get("model").unwrap().as_str().unwrap() == *model)
+        .collect();
+    assert_eq!(scored.len(), n_scores, "scored spans must carry the model name");
+    for s in scored {
+        assert_eq!(s.get("status").unwrap().as_i64().unwrap(), 200);
+        assert_eq!(s.get("variant").unwrap().as_str().unwrap(), "p8");
+        assert!(s.get("batch").unwrap().as_i64().unwrap() >= 1, "batch size missing: {s}");
+    }
+}
