@@ -7,6 +7,10 @@
 //! * [`reduction`] — maps a utilization profile to a reduced
 //!   [`crate::hw::synth::CoreSpec`]: unit removal, ISA trimming,
 //!   register-file shrink, PC/BAR narrowing.
+//! * [`resilience`] — seeded soft-error campaigns on the batched ISS:
+//!   accuracy-vs-fault-rate curves, AVF breakdown by target class, and
+//!   stuck-at ROM probes per (model, core, precision).
 
 pub mod profile;
 pub mod reduction;
+pub mod resilience;

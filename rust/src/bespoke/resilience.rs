@@ -1,0 +1,586 @@
+//! Seeded soft-error campaigns on the batched ISS (the `pbsp faultsim`
+//! subcommand).
+//!
+//! Printed EGFET parts live with transient upsets and permanently weak
+//! cells; this module measures what those faults *do* to the deployed
+//! classifier instead of guessing.  For every selected (model, core,
+//! precision) configuration it:
+//!
+//! 1. runs a fault-free baseline over a fixed sample set to learn the
+//!    per-sample instruction and MAC-op horizons (and the reference
+//!    scores/predictions);
+//! 2. sweeps transient fault rates: `trials` Monte Carlo runs per rate,
+//!    each trial's [`FaultPlan`] a pure function of `(seed, trial
+//!    index)` (`sim::fault`), executed one trial per lane on the
+//!    batched lockstep engine — so a 200-trial campaign costs a few
+//!    batched dispatches, and the numbers are bit-identical at any
+//!    `PBSP_THREADS`;
+//! 3. classifies every trial against the baseline: **masked** (scores
+//!    bit-equal), **tolerated** (scores differ, prediction survives),
+//!    **SDC** (silent data corruption — the prediction flips),
+//!    **crash** (execution fault) or **hang** (fuel exhausted);
+//! 4. repeats the sweep restricted to one target class at a time
+//!    (register file / data RAM / MAC accumulators) at the largest
+//!    swept rate — the architectural-vulnerability breakdown;
+//! 5. probes `rom_trials` seeded stuck-at bits in the constant/weight
+//!    memory ([`sim::fault::rv32_with_stuck_rom`] /
+//!    [`sim::fault::tpisa_with_stuck_dmem`]) and ranks the critical
+//!    bits by how many sample predictions they break.
+//!
+//! Configurations fan out over the context's thread pool, one pool job
+//! per (model, core); results gather in job order, so the report text
+//! and JSON artifact are byte-identical at any thread count.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::dse::context::EvalContext;
+use crate::ml::codegen_rv32::Rv32Variant;
+use crate::ml::codegen_tpisa::TpVariant;
+use crate::ml::harness::{self, FaultOutcome};
+use crate::ml::model::Model;
+use crate::sim::fault::{self, FaultPlan, FaultSpec, MachineShape, RomStuck, Targets};
+use crate::sim::trace::FullProfile;
+use crate::util::json::Value;
+use crate::util::rng::Pcg32;
+
+/// Campaign parameters (the `faultsim` CLI flags).
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub seed: u64,
+    /// Monte Carlo trials per swept rate (and per AVF class).
+    pub trials: usize,
+    /// Test-set samples per configuration; trials cycle through them.
+    pub samples: usize,
+    /// Transient fault rates swept: expected register/RAM flips per
+    /// retired instruction (MAC flips use the same rate per MAC op).
+    pub rates: Vec<f64>,
+    /// Seeded stuck-at bits probed in the constant/weight memory.
+    pub rom_trials: usize,
+    /// Quantisation precision of the generated programs.
+    pub precision: u32,
+    /// Include the Zero-Riscy SIMD-MAC configurations.
+    pub zero_riscy: bool,
+    /// Include the TP-ISA MAC configurations.
+    pub tpisa: bool,
+    /// TP-ISA datapath width.
+    pub datapath: u32,
+    /// Restrict to these model names (empty = all).
+    pub models: Vec<String>,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig {
+            seed: 0xb10f,
+            trials: 200,
+            samples: 8,
+            rates: vec![0.0, 1e-7, 1e-6, 1e-5, 1e-4],
+            rom_trials: 32,
+            precision: 8,
+            zero_riscy: true,
+            tpisa: true,
+            datapath: 8,
+            models: Vec::new(),
+        }
+    }
+}
+
+/// Trial classification tallies for one (rate, target-class) sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OutcomeCounts {
+    /// Scores bit-equal to the fault-free baseline.
+    pub masked: usize,
+    /// Scores corrupted but the prediction survived.
+    pub tolerated: usize,
+    /// Silent data corruption: the prediction flipped.
+    pub sdc: usize,
+    /// Execution fault (wild PC after a flipped pointer, …).
+    pub crash: usize,
+    /// Fuel budget exhausted (corrupted loop state livelocked).
+    pub hang: usize,
+}
+
+impl OutcomeCounts {
+    pub fn total(&self) -> usize {
+        self.masked + self.tolerated + self.sdc + self.crash + self.hang
+    }
+
+    /// Tally one trial against its sample's baseline.  `predict` is the
+    /// model's prediction head (injected so the tally logic is testable
+    /// without artifacts).
+    pub fn classify(
+        &mut self,
+        outcome: &FaultOutcome,
+        base_scores: &[f64],
+        base_pred: i64,
+        predict: impl Fn(&[f64]) -> i64,
+    ) {
+        match outcome {
+            FaultOutcome::Scores(s) if s[..] == *base_scores => self.masked += 1,
+            FaultOutcome::Scores(s) => {
+                if predict(s) == base_pred {
+                    self.tolerated += 1;
+                } else {
+                    self.sdc += 1;
+                }
+            }
+            FaultOutcome::Crash(_) => self.crash += 1,
+            FaultOutcome::Hang => self.hang += 1,
+        }
+    }
+
+    /// Fraction of trials whose served prediction survived — the y axis
+    /// of the accuracy-vs-fault-rate curve (relative to the fault-free
+    /// baseline, so 1.0 means no accuracy lost to faults).
+    pub fn pred_survival(&self) -> f64 {
+        (self.masked + self.tolerated) as f64 / self.total().max(1) as f64
+    }
+}
+
+/// One probed stuck-at bit and the damage it did.
+#[derive(Debug, Clone, Copy)]
+pub struct RomTrialResult {
+    /// Offset into the constant/weight region (byte on RV32, word on
+    /// TP-ISA).
+    pub offset: u32,
+    pub bit: u8,
+    pub stuck_one: bool,
+    /// Sample predictions broken by this bit (crash/hang counts too).
+    pub mispredicts: usize,
+    pub samples: usize,
+}
+
+/// Campaign output for one (model, core, precision) configuration.
+#[derive(Debug, Clone)]
+pub struct ConfigResult {
+    pub model: String,
+    pub core: String,
+    pub precision: u32,
+    /// Fault-free instructions per sample (the transient-flip horizon).
+    pub instr_per_sample: u64,
+    /// Fault-free MAC accumulates per sample (the MAC-flip horizon).
+    pub mac_ops_per_sample: u64,
+    /// (rate, tallies) per swept rate, in `rates` order.
+    pub curve: Vec<(f64, OutcomeCounts)>,
+    /// Per-target-class tallies at the largest swept rate:
+    /// ("regs" | "ram" | "mac", tallies).
+    pub avf: Vec<(String, OutcomeCounts)>,
+    /// Stuck-at probes, worst (most broken predictions) first.
+    pub rom: Vec<RomTrialResult>,
+}
+
+/// Rendered campaign: human-readable text plus the JSON artifact the CI
+/// job uploads.
+#[derive(Debug, Clone)]
+pub struct ResilienceReport {
+    pub text: String,
+    pub json: Value,
+    pub configs: Vec<ConfigResult>,
+}
+
+/// Decorrelate per-configuration PCG streams: FNV-1a over the config
+/// label folded into the campaign seed, so two configurations with the
+/// same machine shape still draw independent fault sites.
+fn config_seed(seed: u64, label: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for b in label.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Run the campaign over every selected configuration (one pool job per
+/// (model, core) pair, gathered in job order).
+pub fn campaign(ctx: &EvalContext, cfg: &CampaignConfig) -> Result<ResilienceReport> {
+    let mut jobs: Vec<(usize, bool)> = Vec::new();
+    for (mi, m) in ctx.models.iter().enumerate() {
+        if !cfg.models.is_empty() && !cfg.models.iter().any(|n| n == &m.name) {
+            continue;
+        }
+        if cfg.zero_riscy {
+            jobs.push((mi, false));
+        }
+        if cfg.tpisa {
+            jobs.push((mi, true));
+        }
+    }
+    anyhow::ensure!(!jobs.is_empty(), "no (model, core) configurations selected");
+    let results: Vec<Result<Option<ConfigResult>>> = ctx.pool().par_map(jobs, |(mi, tp)| {
+        if tp {
+            run_config_tp(ctx, cfg, mi)
+        } else {
+            run_config_zr(ctx, cfg, mi).map(Some)
+        }
+    });
+    let mut configs = Vec::new();
+    for r in results {
+        if let Some(c) = r? {
+            configs.push(c);
+        }
+    }
+    Ok(render(cfg, configs))
+}
+
+fn run_config_zr(ctx: &EvalContext, cfg: &CampaignConfig, mi: usize) -> Result<ConfigResult> {
+    let model = &ctx.models[mi];
+    let prog = ctx.rv32_program(mi, Rv32Variant::Simd(cfg.precision))?;
+    let xs: Vec<Vec<f32>> =
+        ctx.test_sets[mi].x.iter().take(cfg.samples.max(1)).cloned().collect();
+    let base = harness::run_rv32_traced::<FullProfile>(model, &prog, &xs)?;
+    let shape = MachineShape::rv32(prog.prepared.ram_bytes, prog.prepared.mac);
+    let rom_len = prog.prepared.rom.len() as u64 - prog.prepared.data_base() as u64;
+    let exec = |txs: &[Vec<f32>],
+                plans: &[FaultPlan],
+                stuck: Option<RomStuck>,
+                fuel: u64|
+     -> Result<Vec<FaultOutcome>> {
+        let prepared = match stuck {
+            Some(s) => fault::rv32_with_stuck_rom(&prog.prepared, s),
+            None => Arc::clone(&prog.prepared),
+        };
+        harness::run_rv32_faulted(model, &prog, &prepared, txs, plans, harness::BATCH_LANES, fuel)
+    };
+    run_config(cfg, model, "zero-riscy", &xs, &base, &shape, rom_len, 8, exec)
+}
+
+/// TP-ISA configurations skip (return `None`) when codegen rejects the
+/// (model, datapath, precision) combination — the sweep's notion of an
+/// infeasible design point.
+fn run_config_tp(
+    ctx: &EvalContext,
+    cfg: &CampaignConfig,
+    mi: usize,
+) -> Result<Option<ConfigResult>> {
+    let model = &ctx.models[mi];
+    let Ok(prog) = ctx.tpisa_program(mi, cfg.datapath, TpVariant::Mac { precision: cfg.precision })
+    else {
+        return Ok(None);
+    };
+    let xs: Vec<Vec<f32>> =
+        ctx.test_sets[mi].x.iter().take(cfg.samples.max(1)).cloned().collect();
+    let base = harness::run_tpisa_traced::<FullProfile>(model, &prog, &xs)?;
+    let shape =
+        MachineShape::tpisa(prog.datapath, prog.prepared.init_dmem.len(), prog.prepared.mac);
+    let core = format!("tp-isa-d{}", cfg.datapath);
+    let exec = |txs: &[Vec<f32>],
+                plans: &[FaultPlan],
+                stuck: Option<RomStuck>,
+                fuel: u64|
+     -> Result<Vec<FaultOutcome>> {
+        let prepared = match stuck {
+            Some(s) => fault::tpisa_with_stuck_dmem(&prog.prepared, s),
+            None => Arc::clone(&prog.prepared),
+        };
+        harness::run_tpisa_faulted(model, &prog, &prepared, txs, plans, harness::BATCH_LANES, fuel)
+    };
+    let rom_len = prog.prepared.init_dmem.len() as u64;
+    run_config(cfg, model, &core, &xs, &base, &shape, rom_len, cfg.datapath as u64, exec)
+        .map(Some)
+}
+
+/// Core-agnostic campaign body: rate sweep, AVF breakdown, stuck-at
+/// probe.  `exec` runs one trial batch (one trial per lane); `rom_len` /
+/// `rom_bits` bound the stuck-at probe's offset and bit draws.
+#[allow(clippy::too_many_arguments)]
+fn run_config(
+    cfg: &CampaignConfig,
+    model: &Model,
+    core: &str,
+    xs: &[Vec<f32>],
+    base: &harness::BatchRun,
+    shape: &MachineShape,
+    rom_len: u64,
+    rom_bits: u64,
+    exec: impl Fn(&[Vec<f32>], &[FaultPlan], Option<RomStuck>, u64) -> Result<Vec<FaultOutcome>>,
+) -> Result<ConfigResult> {
+    let n = xs.len() as u64;
+    let instr_per_sample = (base.profile.instructions / n.max(1)).max(1);
+    let mac_ops_per_sample = (base.profile.mac_ops / n.max(1)).max(1);
+    // Hang horizon: well past the longest clean run, far below the
+    // production budget so livelocked trials classify quickly.
+    let fuel = (instr_per_sample * 8).max(10_000);
+    let label = format!("{}/{}/p{}", model.name, core, cfg.precision);
+    let seed = config_seed(cfg.seed, &label);
+    let trial_xs: Vec<Vec<f32>> =
+        (0..cfg.trials).map(|t| xs[t % xs.len()].clone()).collect();
+    let classify_all = |outcomes: &[FaultOutcome]| {
+        let mut c = OutcomeCounts::default();
+        for (t, o) in outcomes.iter().enumerate() {
+            let si = t % xs.len();
+            c.classify(o, &base.scores[si], base.predictions[si], |s| model.predict(s));
+        }
+        c
+    };
+    // Global trial counter: every sweep consumes a fresh index range,
+    // so no two trials anywhere in this configuration share a PCG
+    // stream.
+    let mut next_trial: u64 = 0;
+    let mut sweep = |rate: f64, targets: Targets| -> Result<OutcomeCounts> {
+        let spec = FaultSpec {
+            seed,
+            rate,
+            horizon: instr_per_sample,
+            mac_rate: rate,
+            mac_horizon: mac_ops_per_sample,
+            targets,
+        };
+        let plans: Vec<FaultPlan> = (0..cfg.trials)
+            .map(|t| FaultPlan::generate(&spec, shape, next_trial + t as u64))
+            .collect();
+        next_trial += cfg.trials as u64;
+        Ok(classify_all(&exec(&trial_xs, &plans, None, fuel)?))
+    };
+    let mut curve = Vec::new();
+    for &rate in &cfg.rates {
+        curve.push((rate, sweep(rate, Targets::ALL)?));
+    }
+    let probe_rate = cfg.rates.iter().copied().fold(0.0f64, f64::max);
+    let mut avf = Vec::new();
+    if probe_rate > 0.0 {
+        for (name, t) in
+            [("regs", Targets::REGS), ("ram", Targets::RAM), ("mac", Targets::MAC)]
+        {
+            avf.push((name.to_string(), sweep(probe_rate, t)?));
+        }
+    }
+    let mut rom = Vec::new();
+    if rom_len > 0 {
+        let mut rng = Pcg32::new(seed, 0x526f_6d42);
+        for _ in 0..cfg.rom_trials {
+            let s = RomStuck {
+                offset: rng.below(rom_len) as u32,
+                bit: rng.below(rom_bits.max(1)) as u8,
+                stuck_one: rng.bool(),
+            };
+            let outcomes = exec(xs, &[], Some(s), fuel)?;
+            let mispredicts = outcomes
+                .iter()
+                .enumerate()
+                .filter(|(i, o)| match o {
+                    FaultOutcome::Scores(sc) => model.predict(sc) != base.predictions[*i],
+                    _ => true,
+                })
+                .count();
+            rom.push(RomTrialResult {
+                offset: s.offset,
+                bit: s.bit,
+                stuck_one: s.stuck_one,
+                mispredicts,
+                samples: xs.len(),
+            });
+        }
+        rom.sort_by_key(|r| (std::cmp::Reverse(r.mispredicts), r.offset, r.bit));
+    }
+    Ok(ConfigResult {
+        model: model.name.clone(),
+        core: core.to_string(),
+        precision: cfg.precision,
+        instr_per_sample,
+        mac_ops_per_sample,
+        curve,
+        avf,
+        rom,
+    })
+}
+
+fn num(v: f64) -> Value {
+    Value::Num(v)
+}
+
+fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+fn counts_json(oc: &OutcomeCounts) -> Vec<(&'static str, Value)> {
+    vec![
+        ("masked", num(oc.masked as f64)),
+        ("tolerated", num(oc.tolerated as f64)),
+        ("sdc", num(oc.sdc as f64)),
+        ("crash", num(oc.crash as f64)),
+        ("hang", num(oc.hang as f64)),
+        ("survival", num(oc.pred_survival())),
+    ]
+}
+
+fn render(cfg: &CampaignConfig, configs: Vec<ConfigResult>) -> ResilienceReport {
+    use std::fmt::Write as _;
+    let mut text = String::new();
+    let _ = writeln!(
+        text,
+        "Fault-injection campaign: seed {:#x}, {} trials/rate, {} samples/config",
+        cfg.seed, cfg.trials, cfg.samples
+    );
+    for c in &configs {
+        let _ = writeln!(
+            text,
+            "\n== {} / {} p{} — {} instr, {} mac ops per sample ==",
+            c.model, c.core, c.precision, c.instr_per_sample, c.mac_ops_per_sample
+        );
+        let _ = writeln!(
+            text,
+            "{:>10}  {:>6} {:>9} {:>5} {:>5} {:>5}  {:>8}",
+            "rate", "masked", "tolerated", "sdc", "crash", "hang", "survive"
+        );
+        for (rate, oc) in &c.curve {
+            let _ = writeln!(
+                text,
+                "{:>10.1e}  {:>6} {:>9} {:>5} {:>5} {:>5}  {:>7.1}%",
+                rate,
+                oc.masked,
+                oc.tolerated,
+                oc.sdc,
+                oc.crash,
+                oc.hang,
+                oc.pred_survival() * 100.0
+            );
+        }
+        for (name, oc) in &c.avf {
+            let _ = writeln!(
+                text,
+                "AVF {:>4}: {:>5.1}% vulnerable (sdc {} crash {} hang {} / {})",
+                name,
+                (1.0 - oc.pred_survival()) * 100.0,
+                oc.sdc,
+                oc.crash,
+                oc.hang,
+                oc.total()
+            );
+        }
+        if !c.rom.is_empty() {
+            let critical = c.rom.iter().filter(|r| r.mispredicts > 0).count();
+            let _ = writeln!(
+                text,
+                "ROM stuck-at: {critical}/{} probed bits break at least one prediction",
+                c.rom.len()
+            );
+            for r in c.rom.iter().take(3) {
+                if r.mispredicts == 0 {
+                    break;
+                }
+                let _ = writeln!(
+                    text,
+                    "  critical: data+{:#x} bit {} stuck-{} -> {}/{} mispredict",
+                    r.offset,
+                    r.bit,
+                    u8::from(r.stuck_one),
+                    r.mispredicts,
+                    r.samples
+                );
+            }
+        }
+    }
+    let json = obj(vec![
+        ("seed", num(cfg.seed as f64)),
+        ("trials", num(cfg.trials as f64)),
+        ("samples", num(cfg.samples as f64)),
+        ("rates", Value::Arr(cfg.rates.iter().map(|r| num(*r)).collect())),
+        (
+            "configs",
+            Value::Arr(
+                configs
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("model", Value::Str(c.model.clone())),
+                            ("core", Value::Str(c.core.clone())),
+                            ("precision", num(c.precision as f64)),
+                            ("instr_per_sample", num(c.instr_per_sample as f64)),
+                            ("mac_ops_per_sample", num(c.mac_ops_per_sample as f64)),
+                            (
+                                "curve",
+                                Value::Arr(
+                                    c.curve
+                                        .iter()
+                                        .map(|(rate, oc)| {
+                                            let mut pairs = vec![("rate", num(*rate))];
+                                            pairs.extend(counts_json(oc));
+                                            obj(pairs)
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "avf",
+                                Value::Arr(
+                                    c.avf
+                                        .iter()
+                                        .map(|(name, oc)| {
+                                            let mut pairs =
+                                                vec![("class", Value::Str(name.clone()))];
+                                            pairs.extend(counts_json(oc));
+                                            obj(pairs)
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "rom",
+                                Value::Arr(
+                                    c.rom
+                                        .iter()
+                                        .map(|r| {
+                                            obj(vec![
+                                                ("offset", num(r.offset as f64)),
+                                                ("bit", num(r.bit as f64)),
+                                                ("stuck_one", Value::Bool(r.stuck_one)),
+                                                ("mispredicts", num(r.mispredicts as f64)),
+                                                ("samples", num(r.samples as f64)),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    ResilienceReport { text, json, configs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argmax(s: &[f64]) -> i64 {
+        s.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i as i64)
+            .unwrap_or(0)
+    }
+
+    #[test]
+    fn classification_covers_every_outcome() {
+        let base = vec![0.1, 0.9];
+        let mut c = OutcomeCounts::default();
+        c.classify(&FaultOutcome::Scores(vec![0.1, 0.9]), &base, 1, argmax);
+        c.classify(&FaultOutcome::Scores(vec![0.2, 0.8]), &base, 1, argmax);
+        c.classify(&FaultOutcome::Scores(vec![0.9, 0.1]), &base, 1, argmax);
+        c.classify(&FaultOutcome::Crash("pc".into()), &base, 1, argmax);
+        c.classify(&FaultOutcome::Hang, &base, 1, argmax);
+        assert_eq!(
+            c,
+            OutcomeCounts { masked: 1, tolerated: 1, sdc: 1, crash: 1, hang: 1 }
+        );
+        assert_eq!(c.total(), 5);
+        assert!((c.pred_survival() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_counts_survival_is_safe() {
+        assert_eq!(OutcomeCounts::default().pred_survival(), 0.0);
+    }
+
+    #[test]
+    fn config_seeds_decorrelate_labels() {
+        let a = config_seed(7, "mnist/zero-riscy/p8");
+        let b = config_seed(7, "mnist/tp-isa-d8/p8");
+        assert_ne!(a, b);
+        assert_eq!(a, config_seed(7, "mnist/zero-riscy/p8"));
+        assert_ne!(a, config_seed(8, "mnist/zero-riscy/p8"));
+    }
+}

@@ -58,6 +58,22 @@ pub struct ServiceConfig {
     /// quantised reference exactly; float (and p > 16) requests still
     /// go to PJRT.
     pub iss: bool,
+    /// Fraction of ISS batches routed through the redundant-execution
+    /// guard (0.0 disables it, 1.0 checks every batch).  A sampled
+    /// batch re-executes until two consecutive runs produce byte-equal
+    /// scores (bounded retries), and only the agreed scores are served
+    /// — so under soft-error injection the served results stay
+    /// bit-correct while `pbsp_dual_exec_mismatches_total` counts the
+    /// catches.
+    pub dual_exec: f64,
+    /// Test-only soft-error injector for the ISS backend: expected
+    /// MAC-accumulator bit flips per MAC op per lane (0.0 disables).
+    /// Accumulator flips corrupt scores but never control flow, so a
+    /// re-execution always has a chance to come back clean and the
+    /// guard converges.
+    pub fault_mac_rate: f64,
+    /// Seed of the injector's deterministic per-execution fault plans.
+    pub fault_seed: u64,
 }
 
 impl Default for ServiceConfig {
@@ -67,6 +83,9 @@ impl Default for ServiceConfig {
             linger_ms: 2,
             threads: threadpool::default_threads(),
             iss: false,
+            dual_exec: 0.0,
+            fault_mac_rate: 0.0,
+            fault_seed: 1,
         }
     }
 }
@@ -408,6 +427,37 @@ fn worker_loop(
         String,
         std::sync::Arc<crate::ml::codegen_rv32::Rv32Program>,
     > = std::collections::BTreeMap::new();
+    // Redundant-execution guard + injector state.  `dual_acc` samples
+    // batches at rate `cfg.dual_exec` (error-diffusion, so 0.25 checks
+    // exactly every 4th batch); `exec_counter` keys each ISS execution
+    // to its own deterministic fault plans; `mac_horizons` learns each
+    // program's MAC ops per sample from its first (uninjected) batch so
+    // the injector can aim inside the program's real MAC-op window.
+    let dual_tel = {
+        let t = telemetry::global();
+        (
+            t.counter(
+                "pbsp_dual_exec_checks_total",
+                "ISS batches re-executed by the redundant-execution guard",
+            ),
+            t.counter(
+                "pbsp_dual_exec_mismatches_total",
+                "score mismatches between redundant ISS executions of one batch",
+            ),
+            t.counter(
+                "pbsp_dual_exec_reruns_total",
+                "extra ISS executions performed by the redundant-execution guard",
+            ),
+            t.counter(
+                "pbsp_fault_plans_injected_total",
+                "non-empty fault plans armed by the test-only MAC injector",
+            ),
+        )
+    };
+    let mut dual_acc: f64 = 0.0;
+    let mut exec_counter: u64 = 0;
+    let mut mac_horizons: std::collections::BTreeMap<String, u64> =
+        std::collections::BTreeMap::new();
 
     let mut run_batch = |runtime: &mut Runtime,
                          key: &Key,
@@ -417,6 +467,7 @@ fn worker_loop(
             if let Some(p) = iss_precision(key) {
                 use crate::ml::codegen_rv32::{self, Rv32Variant};
                 use crate::ml::harness;
+                use crate::sim::fault::{FaultPlan, FaultSpec, MachineShape, Targets};
                 use crate::sim::trace::CyclesOnly;
                 let model = models
                     .iter()
@@ -430,15 +481,86 @@ fn worker_loop(
                             codegen_rv32::generate(model, Rv32Variant::Simd(p))
                                 .map_err(|e| format!("{e:#}"))?,
                         );
-                        iss_progs.insert(cache_key, std::sync::Arc::clone(&prog));
+                        iss_progs.insert(cache_key.clone(), std::sync::Arc::clone(&prog));
                         (prog, true)
                     }
                 };
                 let t0 = Instant::now();
                 // One lane per sample on the lockstep engine; the
                 // dynamic batcher's coalesced batch IS the lane batch.
-                let run = harness::run_rv32_traced::<CyclesOnly>(model, &prog, xs)
-                    .map_err(|e| format!("{e:#}"))?;
+                // Every execution gets its own injector plans (empty
+                // until a MAC-op horizon is learned), so redundant
+                // executions see *independent* transient faults —
+                // exactly the soft-error model the guard exists for.
+                let horizon = mac_horizons.get(&cache_key).copied().unwrap_or(0);
+                let exec_once = |exec_id: u64| -> Result<harness::BatchRun, String> {
+                    let plans: Vec<FaultPlan> = if cfg.fault_mac_rate > 0.0 && horizon > 0 {
+                        let shape =
+                            MachineShape::rv32(prog.prepared.ram_bytes, prog.prepared.mac);
+                        let spec = FaultSpec {
+                            seed: cfg.fault_seed,
+                            rate: 0.0,
+                            horizon: 1,
+                            mac_rate: cfg.fault_mac_rate,
+                            mac_horizon: horizon,
+                            targets: Targets::MAC,
+                        };
+                        let plans: Vec<FaultPlan> = (0..xs.len())
+                            .map(|lane| {
+                                FaultPlan::generate(&spec, &shape, exec_id * 4096 + lane as u64)
+                            })
+                            .collect();
+                        dual_tel.3.add(plans.iter().filter(|pl| !pl.is_empty()).count() as u64);
+                        plans
+                    } else {
+                        Vec::new()
+                    };
+                    harness::run_rv32_batched_with_plans::<CyclesOnly>(
+                        model,
+                        &prog,
+                        xs,
+                        harness::BATCH_LANES,
+                        &plans,
+                    )
+                    .map_err(|e| format!("{e:#}"))
+                };
+                exec_counter += 1;
+                let mut run = exec_once(exec_counter)?;
+                dual_acc += cfg.dual_exec;
+                if dual_acc >= 1.0 {
+                    dual_acc -= 1.0;
+                    dual_tel.0.add(1);
+                    // Re-execute until two consecutive runs agree
+                    // byte-for-byte; serve the agreed scores.  Under
+                    // MAC injection most plans are empty, so a pair of
+                    // clean runs arrives quickly; the cap turns a
+                    // fault storm into a served error, never silently
+                    // corrupted data.
+                    const MAX_RERUNS: u32 = 32;
+                    let mut agreed = false;
+                    for _ in 0..MAX_RERUNS {
+                        exec_counter += 1;
+                        let next = exec_once(exec_counter)?;
+                        dual_tel.2.add(1);
+                        let same = next.scores == run.scores;
+                        run = next;
+                        if same {
+                            agreed = true;
+                            break;
+                        }
+                        dual_tel.1.add(1);
+                    }
+                    if !agreed {
+                        return Err(format!(
+                            "redundant execution: no two consecutive runs of {} agreed after {MAX_RERUNS} retries",
+                            key.model
+                        ));
+                    }
+                }
+                let per_sample = run.profile.mac_ops / xs.len().max(1) as u64;
+                if per_sample > 0 {
+                    mac_horizons.insert(cache_key, per_sample);
+                }
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
                 let (blocks, fused, fallback, samples) = &iss_tel;
                 blocks.add(run.exec_stats.blocks);

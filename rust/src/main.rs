@@ -15,6 +15,10 @@
 //!              [--open-rps R] [--client-workers N] [--iss] [--verify]
 //!              [--trace-sample N] [--log-json FILE]
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
+//! pbsp faultsim [--core zero-riscy|tp-isa|both] [--models A,B]
+//!               [--precision N] [--datapath N] [--seed S] [--trials N]
+//!               [--samples N] [--rates R1,R2,..] [--rom-trials N]
+//!               [--out FILE]                    soft-error campaign
 //! ```
 //!
 //! Serving is reactor-based: `--http-threads` sizes the *compute* pool,
@@ -30,6 +34,18 @@
 //! in-process mode) replays every fleet record through direct
 //! `Service::scores` and requires bit-identical scores, then reconciles
 //! the fleet's counts against the server's `/metrics` counters.
+//!
+//! Resilience: `faultsim` runs the seeded soft-error campaign
+//! (`bespoke::resilience`) — accuracy-vs-fault-rate curves, an AVF
+//! breakdown by target class (registers / RAM / MAC accumulators), and
+//! stuck-at ROM probes; `--out FILE` writes the JSON artifact.  On the
+//! serving side, `--dual-exec F` (serve/loadgen, ISS mode) re-runs a
+//! fraction F of batches until two consecutive executions agree
+//! byte-for-byte and serves the agreed scores; `--fault-mac R`
+//! adversarially injects seeded MAC-accumulator flips (seed
+//! `--fault-seed`) into every execution so the guard has something to
+//! catch.  Counted in `/metrics` as `pbsp_dual_exec_{checks,mismatches,
+//! reruns}_total` and `pbsp_fault_plans_injected_total`.
 //!
 //! Observability: `--trace-sample N` emits a structured JSON span for
 //! every Nth request (accept → parse → queue → batch-cut → execute →
@@ -74,6 +90,7 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("crosscheck") => cmd_crosscheck(&args),
+        Some("faultsim") => cmd_faultsim(&args),
         Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
         None => {
             println!("{USAGE}");
@@ -83,7 +100,7 @@ fn run() -> Result<()> {
 }
 
 const USAGE: &str =
-    "usage: pbsp <synth|profile|report|eval|serve|loadgen|crosscheck> [options]";
+    "usage: pbsp <synth|profile|report|eval|serve|loadgen|crosscheck|faultsim> [options]";
 
 fn cmd_synth(args: &Args) -> Result<()> {
     let core = args.str_or("core", "zero-riscy");
@@ -216,9 +233,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace_log = args.opt_str("log-json").map(String::from);
     let stats_interval_s = args.parse_or("stats-interval-s", 0u64)?;
     let iss = args.flag("iss");
+    let dual_exec = args.parse_or("dual-exec", 0.0f64)?;
+    let fault_mac_rate = args.parse_or("fault-mac", 0.0f64)?;
+    let fault_seed = args.parse_or("fault-seed", 1u64)?;
     let threads = args.threads()?;
     args.finish()?;
-    let cfg = ServiceConfig { max_batch: batch, threads, iss, ..ServiceConfig::default() };
+    let cfg = ServiceConfig {
+        max_batch: batch,
+        threads,
+        iss,
+        dual_exec,
+        fault_mac_rate,
+        fault_seed,
+        ..ServiceConfig::default()
+    };
     let Some(addr) = addr else {
         // Legacy in-process demo loop (no network).
         let svc = Service::start(cfg)?;
@@ -313,6 +341,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let trace_log = args.opt_str("log-json").map(String::from);
     let iss = args.flag("iss");
     let verify = args.flag("verify");
+    let dual_exec = args.parse_or("dual-exec", 0.0f64)?;
+    let fault_mac_rate = args.parse_or("fault-mac", 0.0f64)?;
+    let fault_seed = args.parse_or("fault-seed", 1u64)?;
     let threads = args.threads()?;
     args.finish()?;
     // The loadgen holds one socket per device (plus the frontend's own
@@ -327,6 +358,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             if trace_sample > 0 || trace_log.is_some() {
                 bail!("--trace-sample/--log-json configure the in-process frontend (drop --addr, or pass them to the external `pbsp serve`)");
             }
+            if dual_exec > 0.0 || fault_mac_rate > 0.0 {
+                bail!("--dual-exec/--fault-mac configure the in-process frontend (drop --addr, or pass them to the external `pbsp serve`)");
+            }
             let target = a
                 .to_socket_addrs()
                 .with_context(|| format!("resolve {a:?}"))?
@@ -340,6 +374,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let svc = Arc::new(Service::start(ServiceConfig {
                 threads,
                 iss,
+                dual_exec,
+                fault_mac_rate,
+                fault_seed,
                 ..ServiceConfig::default()
             })?);
             // The reactor multiplexes every device on one thread — only
@@ -359,6 +396,18 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             if verify {
                 let checked = loadgen::verify(&svc, &report, cfg.precision)?;
                 println!("verify ok: {checked} records bit-identical to in-process scoring");
+            }
+            if dual_exec > 0.0 {
+                // One greppable line for the fault-smoke CI job: proves
+                // the guard actually caught injected corruption.
+                let g = printed_bespoke::util::telemetry::global();
+                println!(
+                    "dual-exec: checks {} mismatches {} reruns {} faulty-plans {}",
+                    g.counter("pbsp_dual_exec_checks_total", "").get(),
+                    g.counter("pbsp_dual_exec_mismatches_total", "").get(),
+                    g.counter("pbsp_dual_exec_reruns_total", "").get(),
+                    g.counter("pbsp_fault_plans_injected_total", "").get(),
+                );
             }
             report
         }
@@ -381,6 +430,53 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     if report.errors > 0 {
         bail!("loadgen saw {} errors", report.errors);
+    }
+    Ok(())
+}
+
+fn cmd_faultsim(args: &Args) -> Result<()> {
+    use printed_bespoke::bespoke::resilience::{campaign, CampaignConfig};
+    let core = args.str_or("core", "both");
+    let models: Vec<String> = args
+        .opt_str("models")
+        .map(|s| {
+            s.split(',')
+                .map(|m| m.trim().to_string())
+                .filter(|m| !m.is_empty())
+                .collect()
+        })
+        .unwrap_or_default();
+    let mut cfg = CampaignConfig { models, ..CampaignConfig::default() };
+    cfg.precision = args.parse_or("precision", cfg.precision)?;
+    cfg.datapath = args.parse_or("datapath", cfg.datapath)?;
+    cfg.seed = args.parse_or("seed", cfg.seed)?;
+    cfg.trials = args.parse_or("trials", cfg.trials)?;
+    cfg.samples = args.parse_or("samples", cfg.samples)?;
+    cfg.rom_trials = args.parse_or("rom-trials", cfg.rom_trials)?;
+    if let Some(rates) = args.opt_str("rates") {
+        cfg.rates = rates
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse::<f64>().with_context(|| format!("bad rate {s:?}")))
+            .collect::<Result<_>>()?;
+    }
+    match core.as_str() {
+        "both" => {}
+        "zero-riscy" | "zr" => cfg.tpisa = false,
+        "tp-isa" | "tp" => cfg.zero_riscy = false,
+        other => bail!("unknown core {other:?} (zero-riscy|tp-isa|both)"),
+    }
+    let out = args.opt_str("out").map(String::from);
+    let threads = args.threads()?;
+    args.finish()?;
+    let ctx = EvalContext::load_with_threads(cfg.samples.max(1), threads)?;
+    let report = campaign(&ctx, &cfg)?;
+    print!("{}", report.text);
+    if let Some(path) = out {
+        std::fs::write(&path, format!("{}\n", report.json))
+            .with_context(|| format!("writing {path}"))?;
+        println!("resilience report written to {path}");
     }
     Ok(())
 }

@@ -55,20 +55,28 @@
 //! pool (each shard runs as one lane batch); the sharded results
 //! merge in sample order, so they are interchangeable with the
 //! sequential [`run_rv32`] / [`run_tpisa`].
+//!
+//! The fault-injection surface rides the same batched engine:
+//! [`run_rv32_batched_with_plans`] / [`run_tpisa_batched_with_plans`]
+//! arm a per-sample [`FaultPlan`] on each lane (the serving guard's
+//! injection door), and [`run_rv32_faulted`] / [`run_tpisa_faulted`]
+//! classify per-trial outcomes to [`FaultOutcome`]s for the resilience
+//! campaign instead of failing the whole batch on the first fault.
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{Context, Result};
 
 use super::codegen_rv32::{InputFormat, Rv32Program, INPUT_OFF, SCORES_OFF};
 use super::codegen_tpisa::TpIsaProgram;
 use super::model::Model;
 use super::quant::{pack_vec, quantize};
 use crate::sim::batch::{BatchRv32, BatchTpIsa};
+use crate::sim::fault::{FaultPlan, FaultState};
 use crate::sim::tpisa::TpIsa;
-use crate::sim::trace::{FullProfile, Profile, TraceMode};
+use crate::sim::trace::{CyclesOnly, FullProfile, Profile, TraceMode};
 use crate::sim::zero_riscy::{Halt, ZeroRiscy};
-use crate::sim::ExecStats;
+use crate::sim::{ExecError, ExecStats, PreparedRv32, PreparedTpIsa};
 use crate::util::threadpool::ThreadPool;
 
 /// Default lane count of the batched lockstep engine: wide enough to
@@ -101,6 +109,42 @@ fn empty_run() -> BatchRun {
         cycles_per_sample: 0.0,
         exec_stats: ExecStats::default(),
     }
+}
+
+/// Typed mapping from a clean-run halt state to the error contract:
+/// running out of fuel is [`ExecError::FuelExhausted`] (so callers
+/// match the variant, not a message substring); any other non-`ebreak`
+/// stop keeps a descriptive message — no codegen program ever issues
+/// `ecall`.
+fn check_rv32_halt(halt: Halt) -> Result<()> {
+    match halt {
+        Halt::Break => Ok(()),
+        Halt::Fuel => Err(ExecError::FuelExhausted.into()),
+        other => Err(anyhow::anyhow!("program did not halt cleanly: {other:?}")),
+    }
+}
+
+/// TP-ISA twin of [`check_rv32_halt`].
+fn check_tpisa_halt(halt: crate::sim::tpisa::Halt) -> Result<()> {
+    match halt {
+        crate::sim::tpisa::Halt::Halted => Ok(()),
+        crate::sim::tpisa::Halt::Fuel => Err(ExecError::FuelExhausted.into()),
+    }
+}
+
+/// How one fault-injection trial ended (the resilience campaign's
+/// classification input — see `bespoke::resilience`).
+#[derive(Debug, Clone)]
+pub enum FaultOutcome {
+    /// The program halted normally; the (possibly corrupted) post-head
+    /// scores.
+    Scores(Vec<f64>),
+    /// Execution faulted — e.g. a flipped register sent the PC outside
+    /// the program image.  Carries the rendered error.
+    Crash(String),
+    /// The fuel budget ran out: the injected fault livelocked the
+    /// program (a corrupted loop counter that never reaches its bound).
+    Hang,
 }
 
 /// Quantise + lay out one input vector per the program's contract.
@@ -152,6 +196,23 @@ pub fn run_rv32_batched<M: TraceMode>(
     xs: &[Vec<f32>],
     lanes: usize,
 ) -> Result<BatchRun> {
+    run_rv32_batched_with_plans::<M>(model, prog, xs, lanes, &[])
+}
+
+/// [`run_rv32_batched`] with a per-sample [`FaultPlan`] armed on each
+/// lane before it executes: `plans[i]` rides sample `i`; an empty (or
+/// short) slice leaves the remaining lanes fault-free, and empty /
+/// zero-rate plans are bit-identical to the plain entry point
+/// (`tests/fault_identity.rs` pins that).  This is the injection door
+/// the serving guard (`coordinator::service`) uses to corrupt its own
+/// MAC results under test.
+pub fn run_rv32_batched_with_plans<M: TraceMode>(
+    model: &Model,
+    prog: &Rv32Program,
+    xs: &[Vec<f32>],
+    lanes: usize,
+    plans: &[FaultPlan],
+) -> Result<BatchRun> {
     if xs.is_empty() {
         return Ok(empty_run());
     }
@@ -166,13 +227,15 @@ pub fn run_rv32_batched<M: TraceMode>(
         for (i, x) in chunk.iter().enumerate() {
             let input = input_bytes_rv32(model, prog, x)?;
             batch.lane_mut(i).mem.write_ram(INPUT_OFF as usize, &input)?;
+            batch.lane_mut(i).fault =
+                plans.get(ci * lanes + i).and_then(|p| FaultState::armed(p.clone()));
         }
         let results = batch.run::<M>(chunk.len(), 50_000_000);
         // Readout scans lanes in sample order, so the first failing
         // sample surfaces the same error a scalar sweep would.
         for (i, res) in results.into_iter().enumerate() {
             let halt = res.context("ISS run")?;
-            ensure!(halt == Halt::Break, "program did not halt cleanly: {halt:?}");
+            check_rv32_halt(halt)?;
             let mut raw = Vec::with_capacity(prog.n_scores);
             {
                 let bytes = batch.lane(i).mem.read_ram(SCORES_OFF as usize, 4 * prog.n_scores)?;
@@ -216,7 +279,7 @@ pub fn run_rv32_scalar_traced<M: TraceMode>(
         let input = input_bytes_rv32(model, prog, x)?;
         sim.mem.write_ram(INPUT_OFF as usize, &input)?;
         let halt = sim.run_translated::<M>(50_000_000).context("ISS run")?;
-        ensure!(halt == Halt::Break, "program did not halt cleanly: {halt:?}");
+        check_rv32_halt(halt)?;
         let mut raw = Vec::with_capacity(prog.n_scores);
         {
             let bytes = sim.mem.read_ram(SCORES_OFF as usize, 4 * prog.n_scores)?;
@@ -274,6 +337,19 @@ pub fn run_tpisa_batched<M: TraceMode>(
     xs: &[Vec<f32>],
     lanes: usize,
 ) -> Result<BatchRun> {
+    run_tpisa_batched_with_plans::<M>(model, prog, xs, lanes, &[])
+}
+
+/// TP-ISA twin of [`run_rv32_batched_with_plans`]: `plans[i]` is armed
+/// on sample `i`'s lane; empty / zero-rate plans are bit-identical to
+/// [`run_tpisa_batched`].
+pub fn run_tpisa_batched_with_plans<M: TraceMode>(
+    model: &Model,
+    prog: &TpIsaProgram,
+    xs: &[Vec<f32>],
+    lanes: usize,
+    plans: &[FaultPlan],
+) -> Result<BatchRun> {
     if xs.is_empty() {
         return Ok(empty_run());
     }
@@ -290,11 +366,13 @@ pub fn run_tpisa_batched<M: TraceMode>(
         for (i, x) in chunk.iter().enumerate() {
             let words = input_words_tpisa(model, prog, x)?;
             batch.lane_mut(i).dmem.write_words(prog.input_base, &words)?;
+            batch.lane_mut(i).fault =
+                plans.get(ci * lanes + i).and_then(|p| FaultState::armed(p.clone()));
         }
         let results = batch.run::<M>(chunk.len(), 500_000_000);
         for (i, res) in results.into_iter().enumerate() {
             let halt = res.context("TP-ISA run")?;
-            ensure!(halt == crate::sim::tpisa::Halt::Halted, "did not halt: {halt:?}");
+            check_tpisa_halt(halt)?;
             // Scores: nacc d-bit chunks per output, little-endian.
             let mut raw = Vec::with_capacity(prog.n_scores);
             {
@@ -342,7 +420,7 @@ pub fn run_tpisa_scalar_traced<M: TraceMode>(
         let words = input_words_tpisa(model, prog, x)?;
         sim.dmem.write_words(prog.input_base, &words)?;
         let halt = sim.run_translated::<M>(500_000_000).context("TP-ISA run")?;
-        ensure!(halt == crate::sim::tpisa::Halt::Halted, "did not halt: {halt:?}");
+        check_tpisa_halt(halt)?;
         // Scores: nacc d-bit chunks per output, little-endian.
         let mut raw = Vec::with_capacity(prog.n_scores);
         {
@@ -364,6 +442,115 @@ pub fn run_tpisa_scalar_traced<M: TraceMode>(
     let profile = sim.profile;
     let cps = profile.cycles as f64 / xs.len() as f64;
     Ok(BatchRun { scores, predictions, profile, cycles_per_sample: cps, exec_stats })
+}
+
+/// One fault-injection trial per lane: sample `xs[i]` runs under
+/// `plans[i]` on `prepared` (normally `prog.prepared`; the stuck-at ROM
+/// sweep passes a patched image from
+/// [`crate::sim::fault::rv32_with_stuck_rom`]).  Unlike the clean
+/// runners, per-lane failures are *data*, not errors: every trial
+/// classifies to a [`FaultOutcome`], and `Err` is reserved for harness
+/// bugs (bad input layout).  `fuel` is caller-set so campaigns can
+/// tighten the hang horizon below the production 50M budget.
+pub fn run_rv32_faulted(
+    model: &Model,
+    prog: &Rv32Program,
+    prepared: &Arc<PreparedRv32>,
+    xs: &[Vec<f32>],
+    plans: &[FaultPlan],
+    lanes: usize,
+    fuel: u64,
+) -> Result<Vec<FaultOutcome>> {
+    if xs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let lanes = lanes.clamp(1, xs.len());
+    let mut out = Vec::with_capacity(xs.len());
+    let mut batch = BatchRv32::new(Arc::clone(prepared), lanes);
+    for (ci, chunk) in xs.chunks(lanes).enumerate() {
+        if ci > 0 {
+            batch.reset();
+        }
+        for (i, x) in chunk.iter().enumerate() {
+            let input = input_bytes_rv32(model, prog, x)?;
+            batch.lane_mut(i).mem.write_ram(INPUT_OFF as usize, &input)?;
+            batch.lane_mut(i).fault =
+                plans.get(ci * lanes + i).and_then(|p| FaultState::armed(p.clone()));
+        }
+        let results = batch.run::<CyclesOnly>(chunk.len(), fuel);
+        for (i, res) in results.into_iter().enumerate() {
+            out.push(match res {
+                Ok(Halt::Break) => {
+                    let mut raw = Vec::with_capacity(prog.n_scores);
+                    let bytes =
+                        batch.lane(i).mem.read_ram(SCORES_OFF as usize, 4 * prog.n_scores)?;
+                    for j in 0..prog.n_scores {
+                        let b = &bytes[4 * j..4 * j + 4];
+                        let acc = i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as i64;
+                        raw.push(acc as f64 / prog.score_scale);
+                    }
+                    FaultOutcome::Scores(model.head_scores(&raw))
+                }
+                Ok(Halt::Fuel) => FaultOutcome::Hang,
+                Ok(other) => FaultOutcome::Crash(format!("stopped on {other:?}, not ebreak")),
+                Err(e) => FaultOutcome::Crash(format!("{e:#}")),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// TP-ISA twin of [`run_rv32_faulted`] (patched images come from
+/// [`crate::sim::fault::tpisa_with_stuck_dmem`]).
+pub fn run_tpisa_faulted(
+    model: &Model,
+    prog: &TpIsaProgram,
+    prepared: &Arc<PreparedTpIsa>,
+    xs: &[Vec<f32>],
+    plans: &[FaultPlan],
+    lanes: usize,
+    fuel: u64,
+) -> Result<Vec<FaultOutcome>> {
+    if xs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let lanes = lanes.clamp(1, xs.len());
+    let nacc = (32 / prog.datapath).max(1) as usize;
+    let mut out = Vec::with_capacity(xs.len());
+    let mut batch = BatchTpIsa::new(Arc::clone(prepared), lanes);
+    for (ci, chunk) in xs.chunks(lanes).enumerate() {
+        if ci > 0 {
+            batch.reset();
+        }
+        for (i, x) in chunk.iter().enumerate() {
+            let words = input_words_tpisa(model, prog, x)?;
+            batch.lane_mut(i).dmem.write_words(prog.input_base, &words)?;
+            batch.lane_mut(i).fault =
+                plans.get(ci * lanes + i).and_then(|p| FaultState::armed(p.clone()));
+        }
+        let results = batch.run::<CyclesOnly>(chunk.len(), fuel);
+        for (i, res) in results.into_iter().enumerate() {
+            out.push(match res {
+                Ok(crate::sim::tpisa::Halt::Halted) => {
+                    let mut raw = Vec::with_capacity(prog.n_scores);
+                    let chunks =
+                        batch.lane(i).dmem.read_words(prog.score_base, prog.n_scores * nacc)?;
+                    for j in 0..prog.n_scores {
+                        let mut acc: u64 = 0;
+                        for (wi, &chunk) in chunks[j * nacc..(j + 1) * nacc].iter().enumerate() {
+                            acc |= chunk << (prog.datapath * wi as u32);
+                        }
+                        let acc = crate::sim::mac_model::sext(acc, 32);
+                        raw.push(acc as f64 / prog.score_scale);
+                    }
+                    FaultOutcome::Scores(model.head_scores(&raw))
+                }
+                Ok(crate::sim::tpisa::Halt::Fuel) => FaultOutcome::Hang,
+                Err(e) => FaultOutcome::Crash(format!("{e:#}")),
+            });
+        }
+    }
+    Ok(out)
 }
 
 /// Shard size for parallel batch runs: oversubscribe the pool 4x so

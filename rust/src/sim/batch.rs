@@ -234,6 +234,13 @@ impl BatchRv32 {
                         break;
                     }
                 }
+                // Per-lane fault clocks tick at the block boundary —
+                // the same point the scalar translated engine ticks, so
+                // an armed lane stays bit-identical to its scalar run.
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    self.lanes[i].fault_tick(need);
+                }
                 if M::LANE_PROFILE {
                     for mi in 0..self.members.len() {
                         let i = self.members[mi];
@@ -422,6 +429,12 @@ impl BatchTpIsa {
                     if self.members.is_empty() {
                         break;
                     }
+                }
+                // Per-lane fault clocks tick at the block boundary (see
+                // the RV32 twin above).
+                for mi in 0..self.members.len() {
+                    let i = self.members[mi];
+                    self.lanes[i].fault_tick(need);
                 }
                 if M::LANE_PROFILE {
                     for mi in 0..self.members.len() {
@@ -681,6 +694,40 @@ mod tests {
                 sref.exec_stats.fallback_instrs,
                 "lane {i}"
             );
+        }
+    }
+
+    #[test]
+    fn faulted_lane_matches_scalar_and_leaves_siblings_clean() {
+        use crate::sim::fault::{BitFlip, FaultPlan, FaultState, FlipTarget};
+        let prepared = countdown_rv32();
+        let plan = FaultPlan {
+            flips: vec![BitFlip { at_instr: 6, target: FlipTarget::Reg(6), bit: 3 }],
+            mac_flips: vec![],
+        };
+        let inputs = [5u32, 5, 5];
+        let mut batch = BatchRv32::new(Arc::clone(&prepared), inputs.len());
+        for (i, &n) in inputs.iter().enumerate() {
+            batch.lane_mut(i).mem.store_u32(RAM_BASE, n).unwrap();
+        }
+        // Arm the middle lane only.
+        batch.lane_mut(1).fault = FaultState::armed(plan.clone());
+        for r in batch.run::<FullProfile>(inputs.len(), 10_000) {
+            r.unwrap();
+        }
+        // The armed lane matches a scalar translated run with the same
+        // plan; its clean siblings match the clean scalar run.
+        let mut faulted = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+        faulted.mem.store_u32(RAM_BASE, 5).unwrap();
+        faulted.fault = FaultState::armed(plan);
+        faulted.run_translated::<FullProfile>(10_000).unwrap();
+        let (clean, _) = scalar_rv32(&prepared, 5, 10_000);
+        assert_eq!(batch.lane(1).regs, faulted.regs);
+        assert_eq!(batch.lane(1).mem.ram, faulted.mem.ram);
+        assert_ne!(batch.lane(1).regs, clean.regs, "flip was masked — pick a livelier site");
+        for i in [0, 2] {
+            assert_eq!(batch.lane(i).regs, clean.regs, "lane {i} perturbed by sibling fault");
+            assert_eq!(batch.lane(i).mem.ram, clean.mem.ram, "lane {i}");
         }
     }
 

@@ -1,0 +1,95 @@
+//! Typed execution errors shared by both ISS cores and the batched
+//! lockstep engine.
+//!
+//! The engines' run loops return `anyhow::Result`, but every
+//! execution fault they can raise is one of these variants, so
+//! consumers (`ml::harness`, the batch divergence drain, the
+//! fault-injection campaign classifier) match on
+//! `err.downcast_ref::<ExecError>()` instead of message substrings.
+//! `Display` is part of the bit-identity contract: the differential
+//! suites compare error *strings* across the interpreted, translated
+//! and batched paths, so a variant renders identically wherever it is
+//! constructed.
+
+use crate::isa::MacOp;
+
+/// Why an ISS execution failed (as opposed to halting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecError {
+    /// RV32 fetch outside the program image.
+    FetchFaultRv32 { pc: u32 },
+    /// TP-ISA fetch outside the program.
+    FetchFaultTpIsa { pc: i64, len: usize },
+    /// A MAC-extension op retired on a core synthesised without a MAC
+    /// unit.
+    MacUnavailable { op: MacOp },
+    /// The instruction budget ran out before the program halted — the
+    /// harness-level rendering of `Halt::Fuel` for callers that treat
+    /// non-completion as an error.
+    FuelExhausted,
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::FetchFaultRv32 { pc } => write!(f, "PC {pc:#010x} outside program"),
+            ExecError::FetchFaultTpIsa { pc, len } => {
+                write!(f, "PC {pc} outside program ({len} instrs)")
+            }
+            ExecError::MacUnavailable { op } => {
+                let name = match op {
+                    MacOp::Mac => "MAC instruction",
+                    MacOp::MacRd => "MACRD",
+                    MacOp::MacClr => "MACCL",
+                };
+                write!(f, "{name} on a core without a MAC unit")
+            }
+            ExecError::FuelExhausted => {
+                write!(f, "instruction budget exhausted before the program halted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The strings are load-bearing: the cross-engine differential
+    /// suites compare `e.to_string()` between paths, so pin them.
+    #[test]
+    fn display_strings_are_stable() {
+        assert_eq!(
+            ExecError::FetchFaultRv32 { pc: 0x40 }.to_string(),
+            "PC 0x00000040 outside program"
+        );
+        assert_eq!(
+            ExecError::FetchFaultTpIsa { pc: -1, len: 12 }.to_string(),
+            "PC -1 outside program (12 instrs)"
+        );
+        assert_eq!(
+            ExecError::MacUnavailable { op: MacOp::Mac }.to_string(),
+            "MAC instruction on a core without a MAC unit"
+        );
+        assert_eq!(
+            ExecError::MacUnavailable { op: MacOp::MacRd }.to_string(),
+            "MACRD on a core without a MAC unit"
+        );
+        assert_eq!(
+            ExecError::MacUnavailable { op: MacOp::MacClr }.to_string(),
+            "MACCL on a core without a MAC unit"
+        );
+    }
+
+    /// Variants survive an `anyhow` context chain (what the harness
+    /// wraps around engine errors) — the downcast consumers rely on it.
+    #[test]
+    fn downcasts_through_anyhow_context() {
+        use anyhow::Context;
+        let e: anyhow::Error = ExecError::FuelExhausted.into();
+        let chained = Err::<(), _>(e).context("ISS run").unwrap_err();
+        assert_eq!(chained.downcast_ref::<ExecError>(), Some(&ExecError::FuelExhausted));
+    }
+}

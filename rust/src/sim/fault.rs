@@ -1,0 +1,469 @@
+//! Deterministic soft-error injection for the ISS cores.
+//!
+//! Printed EGFET circuits are defined by extreme device variation and
+//! transient upsets; this module gives the fault-free simulators a
+//! reproducible error model so resilience can be *measured* (the
+//! `bespoke::resilience` campaigns, the serving-side dual-execution
+//! guard).  Everything is seeded PCG: a trial index maps to a
+//! [`FaultPlan`] through [`FaultPlan::generate`] with no other state,
+//! so campaigns are bit-reproducible regardless of `PBSP_THREADS` or
+//! execution order.
+//!
+//! Fault models:
+//!
+//! * **Transient bit flips** ([`BitFlip`]) in the register file or data
+//!   RAM, scheduled on a retired-instruction clock.  The interpreter
+//!   applies a due flip at the exact instruction; the translated and
+//!   batched engines apply it at the enclosing block boundary (the
+//!   clock ticks once per block) — deterministic *per engine*, and a
+//!   per-lane plan rides the batched engine's SoA lanes so a
+//!   thousand-trial Monte Carlo campaign costs one batched dispatch.
+//! * **MAC-result upsets** ([`MacFlip`]): accumulator bit flips on a
+//!   MAC-op clock, applied right after the accumulate on every engine
+//!   path — the model for a transient fault inside the SIMD MAC unit.
+//! * **Stuck-at ROM bits** ([`RomStuck`] + [`rv32_with_stuck_rom`] /
+//!   [`tpisa_with_stuck_dmem`]): a permanently wrong weight/constant
+//!   bit, realised by rebuilding the shared prepared image — one
+//!   patched image serves a whole batched accuracy sweep, which is what
+//!   makes the critical-bit ranking affordable.
+//!
+//! The contract pinned by `tests/fault_identity.rs`: an absent plan, an
+//! armed *empty* plan and a zero-rate generated plan are all
+//! bit-identical (scores, cycles, profiles) to the baseline engines.
+
+use std::sync::Arc;
+
+use crate::hw::mac_unit::MacConfig;
+use crate::util::rng::Pcg32;
+
+use super::prepared::{PreparedRv32, PreparedTpIsa};
+
+/// Where a transient [`BitFlip`] lands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlipTarget {
+    /// Register file entry (reduced modulo the machine's register
+    /// count; RV32 x0 flips are masked like the real hardwired zero).
+    Reg(u8),
+    /// Data RAM cell — a byte offset on RV32, a word index on TP-ISA
+    /// (reduced modulo the memory size).
+    Ram(u32),
+}
+
+/// One transient state upset, due once the retired-instruction clock
+/// passes `at_instr`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitFlip {
+    pub at_instr: u64,
+    pub target: FlipTarget,
+    /// Bit index, reduced modulo the target cell's width.
+    pub bit: u8,
+}
+
+/// One MAC accumulator upset, due once the MAC-op clock passes
+/// `at_mac_op`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacFlip {
+    pub at_mac_op: u64,
+    /// Accumulator register (reduced modulo the configured lane count).
+    pub lane: u8,
+    /// Bit index, reduced modulo the accumulator width.
+    pub bit: u8,
+}
+
+/// One permanently stuck ROM bit (a byte offset into the RV32 constant
+/// data region, or a word index into the TP-ISA initial data memory).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RomStuck {
+    pub offset: u32,
+    pub bit: u8,
+    pub stuck_one: bool,
+}
+
+/// A reproducible set of soft errors for one execution (one lane).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub flips: Vec<BitFlip>,
+    pub mac_flips: Vec<MacFlip>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.flips.is_empty() && self.mac_flips.is_empty()
+    }
+
+    /// Derive the plan for Monte Carlo trial `trial` of a campaign.
+    /// Pure function of `(spec.seed, trial)` — the PCG stream id is the
+    /// trial index — so shard boundaries and thread counts cannot
+    /// change any trial's faults.
+    ///
+    /// Event counts follow the expectation `rate × horizon`: the
+    /// integer part always happens, the fractional part happens with
+    /// matching probability.  Flip sites are uniform over the enabled
+    /// target classes weighted by their state-bit counts.
+    pub fn generate(spec: &FaultSpec, shape: &MachineShape, trial: u64) -> FaultPlan {
+        let mut rng = Pcg32::new(spec.seed, trial);
+        let mut plan = FaultPlan::default();
+
+        let reg_bits = if spec.targets.regs { shape.regs as u64 * shape.reg_bits as u64 } else { 0 };
+        let ram_bits =
+            if spec.targets.ram { shape.ram_cells as u64 * shape.cell_bits as u64 } else { 0 };
+        let state_bits = reg_bits + ram_bits;
+        let n = sample_count(&mut rng, spec.rate * spec.horizon as f64);
+        if state_bits > 0 && spec.horizon > 0 {
+            for _ in 0..n {
+                let at_instr = rng.below(spec.horizon);
+                let site = rng.below(state_bits);
+                let (target, bit) = if site < reg_bits {
+                    let r = (site / shape.reg_bits as u64) as u8;
+                    (FlipTarget::Reg(r), (site % shape.reg_bits as u64) as u8)
+                } else {
+                    let site = site - reg_bits;
+                    let cell = (site / shape.cell_bits as u64) as u32;
+                    (FlipTarget::Ram(cell), (site % shape.cell_bits as u64) as u8)
+                };
+                plan.flips.push(BitFlip { at_instr, target, bit });
+            }
+        }
+
+        let mac_bits = shape.mac_lanes as u64 * shape.mac_bits as u64;
+        let m = sample_count(&mut rng, spec.mac_rate * spec.mac_horizon as f64);
+        if spec.targets.mac && mac_bits > 0 && spec.mac_horizon > 0 {
+            for _ in 0..m {
+                let at_mac_op = rng.below(spec.mac_horizon);
+                let site = rng.below(mac_bits);
+                plan.mac_flips.push(MacFlip {
+                    at_mac_op,
+                    lane: (site / shape.mac_bits as u64) as u8,
+                    bit: (site % shape.mac_bits as u64) as u8,
+                });
+            }
+        }
+        plan
+    }
+}
+
+/// Expectation-preserving integer event count: `floor(expected)` plus a
+/// Bernoulli draw on the fractional part.  Always consumes exactly one
+/// uniform so the downstream draw sequence is independent of the rate.
+fn sample_count(rng: &mut Pcg32, expected: f64) -> u64 {
+    let expected = expected.max(0.0);
+    let base = expected.floor();
+    let extra = (rng.f64() < (expected - base)) as u64;
+    base as u64 + extra
+}
+
+/// Which state classes a generated plan may hit — restricting to one
+/// class is how the campaign measures per-class architectural
+/// vulnerability (AVF).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Targets {
+    pub regs: bool,
+    pub ram: bool,
+    pub mac: bool,
+}
+
+impl Targets {
+    pub const ALL: Targets = Targets { regs: true, ram: true, mac: true };
+    pub const REGS: Targets = Targets { regs: true, ram: false, mac: false };
+    pub const RAM: Targets = Targets { regs: false, ram: true, mac: false };
+    pub const MAC: Targets = Targets { regs: false, ram: false, mac: true };
+}
+
+/// Campaign-level fault description; one spec plus a trial index fully
+/// determines a [`FaultPlan`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    /// Expected transient register/RAM flips per retired instruction.
+    pub rate: f64,
+    /// Retired-instruction horizon the flips are spread over (a
+    /// per-sample instruction count from a baseline run).
+    pub horizon: u64,
+    /// Expected accumulator flips per MAC accumulate op.
+    pub mac_rate: f64,
+    pub mac_horizon: u64,
+    pub targets: Targets,
+}
+
+/// State-space geometry of one simulated machine — the denominator of
+/// the uniform fault-site distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MachineShape {
+    pub regs: u32,
+    pub reg_bits: u32,
+    pub ram_cells: u32,
+    /// Bits per RAM cell (8 on RV32's byte RAM, the datapath width on
+    /// TP-ISA's word memory).
+    pub cell_bits: u32,
+    pub mac_lanes: u32,
+    pub mac_bits: u32,
+}
+
+impl MachineShape {
+    pub fn rv32(ram_bytes: usize, mac: Option<MacConfig>) -> MachineShape {
+        let (mac_lanes, mac_bits) = mac_geometry(mac);
+        MachineShape {
+            regs: 32,
+            reg_bits: 32,
+            ram_cells: ram_bytes as u32,
+            cell_bits: 8,
+            mac_lanes,
+            mac_bits,
+        }
+    }
+
+    pub fn tpisa(width: u32, dmem_words: usize, mac: Option<MacConfig>) -> MachineShape {
+        let (mac_lanes, mac_bits) = mac_geometry(mac);
+        MachineShape {
+            regs: 8,
+            reg_bits: width,
+            ram_cells: dmem_words as u32,
+            cell_bits: width,
+            mac_lanes,
+            mac_bits,
+        }
+    }
+}
+
+/// Accumulator geometry matching `MacState`: one 64-bit register for
+/// p = 32, one 32-bit register per lane otherwise.
+fn mac_geometry(mac: Option<MacConfig>) -> (u32, u32) {
+    match mac {
+        None => (0, 0),
+        Some(cfg) if cfg.precision >= 32 => (1, 64),
+        Some(cfg) => (cfg.lanes(), 32),
+    }
+}
+
+/// A [`FaultPlan`] armed on one engine instance: events sorted by due
+/// time with cursors over the instruction and MAC-op clocks.  The
+/// engines hold it as `Option<Box<FaultState>>` so the fault-free fast
+/// path pays one null check.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    flips: Vec<BitFlip>,
+    mac_flips: Vec<MacFlip>,
+    instr_clock: u64,
+    next_flip: usize,
+    mac_clock: u64,
+    next_mac: usize,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan) -> Box<FaultState> {
+        let FaultPlan { mut flips, mut mac_flips } = plan;
+        flips.sort_by_key(|f| f.at_instr);
+        mac_flips.sort_by_key(|f| f.at_mac_op);
+        Box::new(FaultState {
+            flips,
+            mac_flips,
+            instr_clock: 0,
+            next_flip: 0,
+            mac_clock: 0,
+            next_mac: 0,
+        })
+    }
+
+    /// `Some(armed)` for a non-empty plan, `None` otherwise — the form
+    /// engine callers assign to their `fault` slot.
+    pub fn armed(plan: FaultPlan) -> Option<Box<FaultState>> {
+        if plan.is_empty() {
+            None
+        } else {
+            Some(FaultState::new(plan))
+        }
+    }
+
+    /// Reset both clocks so every event fires again — the engines'
+    /// `reset()` calls this, keeping plan lifetime aligned with sample
+    /// lifetime across batch lane reuse.
+    pub fn rearm(&mut self) {
+        self.instr_clock = 0;
+        self.next_flip = 0;
+        self.mac_clock = 0;
+        self.next_mac = 0;
+    }
+
+    /// Advance the instruction clock by `retired` and return the flips
+    /// that just became due (each fires exactly once per arming).
+    pub fn advance(&mut self, retired: u64) -> &[BitFlip] {
+        self.instr_clock += retired;
+        let start = self.next_flip;
+        while self.next_flip < self.flips.len()
+            && self.flips[self.next_flip].at_instr < self.instr_clock
+        {
+            self.next_flip += 1;
+        }
+        &self.flips[start..self.next_flip]
+    }
+
+    /// Advance the MAC-op clock by `ops` accumulates and return the
+    /// newly due accumulator flips.
+    pub fn advance_mac(&mut self, ops: u64) -> &[MacFlip] {
+        self.mac_clock += ops;
+        let start = self.next_mac;
+        while self.next_mac < self.mac_flips.len()
+            && self.mac_flips[self.next_mac].at_mac_op < self.mac_clock
+        {
+            self.next_mac += 1;
+        }
+        &self.mac_flips[start..self.next_mac]
+    }
+}
+
+/// Rebuild an RV32 prepared image with one constant-data ROM bit stuck.
+/// Only the data region is a target: execution fetches pre-decoded
+/// instructions, so a code-byte fault would be invisible — the weights
+/// and packed constants are the bits the paper's ROM actually spends
+/// area on.  `offset` is reduced modulo the data region size.
+pub fn rv32_with_stuck_rom(p: &PreparedRv32, s: RomStuck) -> Arc<PreparedRv32> {
+    let base = p.data_base() as usize;
+    let mut data: Vec<u8> = p.rom[base..].to_vec();
+    if data.is_empty() {
+        return Arc::new(p.clone());
+    }
+    let idx = (s.offset as usize) % data.len();
+    let m = 1u8 << (s.bit % 8);
+    if s.stuck_one {
+        data[idx] |= m;
+    } else {
+        data[idx] &= !m;
+    }
+    Arc::new(PreparedRv32::new(&p.code, &data, p.ram_bytes, p.mac))
+}
+
+/// Rebuild a TP-ISA prepared image with one initial data-memory bit
+/// stuck (`offset` is a word index, reduced modulo the memory size; the
+/// bit is reduced modulo the datapath width).
+pub fn tpisa_with_stuck_dmem(p: &PreparedTpIsa, s: RomStuck) -> Arc<PreparedTpIsa> {
+    let mut dmem = p.init_dmem.clone();
+    if dmem.is_empty() {
+        return Arc::new(p.clone());
+    }
+    let idx = (s.offset as usize) % dmem.len();
+    let m = 1u64 << (s.bit as u32 % p.width);
+    if s.stuck_one {
+        dmem[idx] |= m;
+    } else {
+        dmem[idx] &= !m;
+    }
+    Arc::new(PreparedTpIsa::new(p.width, &p.code, dmem, p.mac))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(seed: u64, rate: f64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            rate,
+            horizon: 10_000,
+            mac_rate: rate,
+            mac_horizon: 500,
+            targets: Targets::ALL,
+        }
+    }
+
+    fn shape() -> MachineShape {
+        MachineShape::rv32(1024, Some(MacConfig::new(32, 8)))
+    }
+
+    #[test]
+    fn generation_is_a_pure_function_of_seed_and_trial() {
+        let s = spec(42, 1e-3);
+        let a = FaultPlan::generate(&s, &shape(), 7);
+        let b = FaultPlan::generate(&s, &shape(), 7);
+        assert_eq!(a, b);
+        // Different trial or seed: (overwhelmingly) different plan.
+        assert_ne!(a, FaultPlan::generate(&s, &shape(), 8));
+        assert_ne!(a, FaultPlan::generate(&spec(43, 1e-3), &shape(), 7));
+    }
+
+    #[test]
+    fn zero_rate_generates_empty_plans() {
+        let s = spec(1, 0.0);
+        for trial in 0..64 {
+            assert!(FaultPlan::generate(&s, &shape(), trial).is_empty());
+        }
+    }
+
+    #[test]
+    fn event_count_tracks_expectation() {
+        // rate 2e-3 over a 10k-instruction horizon => 20 expected flips.
+        let s = spec(9, 2e-3);
+        let total: usize =
+            (0..200).map(|t| FaultPlan::generate(&s, &shape(), t).flips.len()).sum();
+        let mean = total as f64 / 200.0;
+        assert!((mean - 20.0).abs() < 1.0, "mean flips {mean}");
+    }
+
+    #[test]
+    fn class_restriction_is_respected() {
+        let mut s = spec(5, 1e-3);
+        s.targets = Targets::REGS;
+        for trial in 0..32 {
+            let plan = FaultPlan::generate(&s, &shape(), trial);
+            assert!(plan.flips.iter().all(|f| matches!(f.target, FlipTarget::Reg(_))));
+            assert!(plan.mac_flips.is_empty());
+        }
+        s.targets = Targets::MAC;
+        for trial in 0..32 {
+            let plan = FaultPlan::generate(&s, &shape(), trial);
+            assert!(plan.flips.is_empty());
+        }
+    }
+
+    #[test]
+    fn fault_state_fires_each_event_once_and_rearms() {
+        let plan = FaultPlan {
+            flips: vec![
+                BitFlip { at_instr: 5, target: FlipTarget::Reg(3), bit: 0 },
+                BitFlip { at_instr: 1, target: FlipTarget::Ram(7), bit: 2 },
+            ],
+            mac_flips: vec![MacFlip { at_mac_op: 0, lane: 0, bit: 4 }],
+        };
+        let mut st = FaultState::new(plan);
+        // Events sorted by due time; block-sized advances batch them.
+        assert_eq!(st.advance(2).len(), 1); // the at_instr=1 flip
+        assert_eq!(st.advance(10).len(), 1); // the at_instr=5 flip
+        assert_eq!(st.advance(100).len(), 0); // nothing left
+        assert_eq!(st.advance_mac(1).len(), 1);
+        assert_eq!(st.advance_mac(1).len(), 0);
+        st.rearm();
+        assert_eq!(st.advance(100).len(), 2);
+        assert_eq!(st.advance_mac(5).len(), 1);
+    }
+
+    #[test]
+    fn armed_empty_plan_is_none() {
+        assert!(FaultState::armed(FaultPlan::default()).is_none());
+        let plan =
+            FaultPlan { flips: vec![], mac_flips: vec![MacFlip { at_mac_op: 0, lane: 0, bit: 0 }] };
+        assert!(FaultState::armed(plan).is_some());
+    }
+
+    #[test]
+    fn rv32_stuck_rom_patches_one_data_bit() {
+        use crate::isa::rv32_asm::assemble;
+        let code = assemble("ebreak").unwrap();
+        let p = PreparedRv32::new(&code, &[0x00, 0xff], 64, None);
+        let stuck = rv32_with_stuck_rom(&p, RomStuck { offset: 0, bit: 3, stuck_one: true });
+        let base = p.data_base() as usize;
+        assert_eq!(stuck.rom[base], 0x08);
+        assert_eq!(stuck.rom[base + 1], 0xff);
+        // Code bytes untouched; idempotent on an already-set bit.
+        assert_eq!(stuck.rom[..base], p.rom[..base]);
+        let again = rv32_with_stuck_rom(&stuck, RomStuck { offset: 0, bit: 3, stuck_one: true });
+        assert_eq!(again.rom, stuck.rom);
+    }
+
+    #[test]
+    fn tpisa_stuck_dmem_masks_to_width() {
+        use crate::isa::tpisa;
+        let p = PreparedTpIsa::new(8, &[tpisa::Instr::Halt], vec![0x0f, 0xf0], None);
+        // bit 11 reduces mod width 8 -> bit 3.
+        let stuck = tpisa_with_stuck_dmem(&p, RomStuck { offset: 1, bit: 11, stuck_one: false });
+        assert_eq!(stuck.init_dmem, vec![0x0f, 0xf0 & !(1 << 3)]);
+    }
+}

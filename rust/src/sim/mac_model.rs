@@ -111,6 +111,29 @@ impl MacState {
         (acc >> (part * datapath)) & mask
     }
 
+    /// Number of physical accumulator registers (1 for p = 32, one per
+    /// lane otherwise) — the fault injector's target space.
+    pub fn acc_regs(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Flip one bit of one accumulator register — the soft-error model
+    /// for a transient upset in the MAC result path (`sim::fault`).
+    /// `lane` and `bit` are reduced modulo the physical state so any
+    /// (u8, u8) pair is a valid fault site.
+    pub fn flip_acc(&mut self, lane: usize, bit: u32) {
+        let n = self.acc.len();
+        let bits: u32 = if self.cfg.precision >= 32 { 64 } else { 32 };
+        let a = &mut self.acc[lane % n];
+        *a ^= 1i64 << (bit % bits);
+        if bits == 32 {
+            // p <= 16 accumulators are 32-bit registers stored
+            // sign-extended in i64; re-normalise so reads stay
+            // consistent with the `mac` write path.
+            *a = *a as i32 as i64;
+        }
+    }
+
     /// Sum of all lane accumulators (paper Eq. 1: acc_total), wrapping
     /// in 32 bits for p <= 16.
     pub fn total(&self) -> i64 {

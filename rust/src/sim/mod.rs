@@ -23,6 +23,12 @@
 //!   [`BatchTpIsa`]): N lanes over one shared prepared image, each
 //!   translated block fetched once and retired lane-parallel, with
 //!   divergent lanes drained on the scalar path and rejoined.
+//! * [`error`] — the typed [`ExecError`] every engine raises, so
+//!   consumers match variants instead of message substrings.
+//! * [`fault`] — deterministic soft-error injection: seeded
+//!   [`FaultPlan`]s (register/RAM/MAC bit flips, stuck-at ROM words)
+//!   armed per engine instance — per *lane* in the batched engine —
+//!   with zero-rate plans bit-identical to fault-free execution.
 //!
 //! Both cores expose two run loops over the same prepared image: the
 //! per-instruction `run_traced` (the reference interpreter) and the
@@ -33,6 +39,8 @@
 //! scalar engines by `tests/iss_batch_equivalence.rs`.
 
 pub mod batch;
+pub mod error;
+pub mod fault;
 pub mod mac_model;
 pub mod mem;
 pub mod prepared;
@@ -42,6 +50,8 @@ pub mod translate;
 pub mod zero_riscy;
 
 pub use batch::{BatchRv32, BatchTpIsa};
+pub use error::ExecError;
+pub use fault::{FaultPlan, FaultState};
 pub use prepared::{PreparedRv32, PreparedTpIsa};
 pub use trace::{CyclesOnly, FullProfile, TraceMode};
 pub use translate::ExecStats;

@@ -36,8 +36,10 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use super::error::ExecError;
+use super::fault::{BitFlip, FaultState, FlipTarget};
 use super::mac_model::MacState;
 use super::mem::WordMem;
 use super::prepared::PreparedTpIsa;
@@ -50,7 +52,13 @@ use crate::isa::MacOp;
 #[cold]
 #[inline(never)]
 fn pc_fault(pc: i64, len: usize) -> anyhow::Error {
-    anyhow::anyhow!("PC {pc} outside program ({len} instrs)")
+    ExecError::FetchFaultTpIsa { pc, len }.into()
+}
+
+#[cold]
+#[inline(never)]
+fn mac_unavailable(op: MacOp) -> anyhow::Error {
+    ExecError::MacUnavailable { op }.into()
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,6 +88,10 @@ pub struct TpIsa {
     /// Translated-engine counters (blocks dispatched, fallback steps).
     /// Accumulates across [`TpIsa::reset`], like the profile.
     pub exec_stats: ExecStats,
+    /// Armed soft-error plan (`sim::fault`).  `None` — the default —
+    /// costs one pointer-null check per retire; an armed empty plan is
+    /// bit-identical to `None` (pinned by `tests/fault_identity.rs`).
+    pub fault: Option<Box<FaultState>>,
 }
 
 impl TpIsa {
@@ -111,6 +123,7 @@ impl TpIsa {
             prepared,
             profile,
             exec_stats: ExecStats::default(),
+            fault: None,
         }
     }
 
@@ -130,6 +143,9 @@ impl TpIsa {
         self.dmem.restore(&self.prepared.init_dmem);
         if let Some(m) = &mut self.mac {
             m.clear();
+        }
+        if let Some(f) = &mut self.fault {
+            f.rearm();
         }
     }
 
@@ -395,31 +411,30 @@ impl TpIsa {
                                 self.profile.record_reg(r1);
                                 self.profile.record_reg(r2);
                             }
-                            let mac = self
-                                .mac
-                                .as_mut()
-                                .context("MAC instruction on a core without a MAC unit")?;
+                            let mac = match self.mac.as_mut() {
+                                Some(m) => m,
+                                None => return Err(mac_unavailable(op)),
+                            };
                             mac.mac(a, b);
                             self.profile.mac_ops += 1;
+                            self.fault_mac_tick();
                         }
                         MacOp::MacRd => {
                             // r2 *field* is an immediate chunk index
                             // into the adder-tree total `acc_total`
                             // (paper Fig. 2: the unit sums lanes in
                             // hardware; software reads d-bit pieces).
-                            let mac = self
-                                .mac
-                                .as_ref()
-                                .context("MACRD on a core without a MAC unit")?;
+                            let mac = match self.mac.as_ref() {
+                                Some(m) => m,
+                                None => return Err(mac_unavailable(op)),
+                            };
                             let v = mac.read_total_chunk(r2 as u32, width);
                             self.set::<M>(r1, v);
                         }
-                        MacOp::MacClr => {
-                            self.mac
-                                .as_mut()
-                                .context("MACCL on a core without a MAC unit")?
-                                .clear();
-                        }
+                        MacOp::MacClr => match self.mac.as_mut() {
+                            Some(m) => m.clear(),
+                            None => return Err(mac_unavailable(op)),
+                        },
                     }
                 }
                 Instr::Halt => {
@@ -429,6 +444,7 @@ impl TpIsa {
             }
             self.profile.cycles += cost;
             self.pc = next;
+            self.fault_tick(1);
         }
         Ok(None)
     }
@@ -470,6 +486,9 @@ impl TpIsa {
                     for u in b.uops.iter() {
                         self.exec_uop(u, mask, msb)?;
                     }
+                    // Block-granular fault clock — same boundary the
+                    // batched engine ticks (see the RV32 twin).
+                    self.fault_tick(b.n_instrs as u64);
                     self.apply_block::<M>(b);
                     if let Some(h) = self.apply_term(b) {
                         return Ok(h);
@@ -683,20 +702,25 @@ impl TpIsa {
             MacOp::Mac => {
                 let a = self.regs[r1 as usize];
                 let b = self.regs[r2 as usize];
-                let mac = self
-                    .mac
-                    .as_mut()
-                    .context("MAC instruction on a core without a MAC unit")?;
+                let mac = match self.mac.as_mut() {
+                    Some(m) => m,
+                    None => return Err(mac_unavailable(op)),
+                };
                 mac.mac(a, b);
+                self.fault_mac_tick();
             }
             MacOp::MacRd => {
-                let mac = self.mac.as_ref().context("MACRD on a core without a MAC unit")?;
+                let mac = match self.mac.as_ref() {
+                    Some(m) => m,
+                    None => return Err(mac_unavailable(op)),
+                };
                 let v = mac.read_total_chunk(r2 as u32, width);
                 self.regs[r1 as usize] = v & mask;
             }
-            MacOp::MacClr => {
-                self.mac.as_mut().context("MACCL on a core without a MAC unit")?.clear();
-            }
+            MacOp::MacClr => match self.mac.as_mut() {
+                Some(m) => m.clear(),
+                None => return Err(mac_unavailable(op)),
+            },
         }
         Ok(())
     }
@@ -734,6 +758,65 @@ impl TpIsa {
             }
         }
         Ok(())
+    }
+
+    /// Advance the soft-error instruction clock and apply newly due
+    /// register/dmem flips (see the RV32 twin `ZeroRiscy::fault_tick`
+    /// for the per-engine clock granularity contract).
+    #[inline(always)]
+    pub(crate) fn fault_tick(&mut self, retired: u64) {
+        if self.fault.is_some() {
+            self.fault_tick_slow(retired);
+        }
+    }
+
+    #[cold]
+    fn fault_tick_slow(&mut self, retired: u64) {
+        let mut f = self.fault.take().unwrap();
+        for flip in f.advance(retired) {
+            self.apply_flip(flip);
+        }
+        self.fault = Some(f);
+    }
+
+    fn apply_flip(&mut self, flip: &BitFlip) {
+        let mask = self.mask();
+        match flip.target {
+            FlipTarget::Reg(r) => {
+                let r = (r as usize) % 8;
+                self.regs[r] = (self.regs[r] ^ (1u64 << (flip.bit as u32 % self.width))) & mask;
+            }
+            FlipTarget::Ram(word) => {
+                let n = self.dmem.len();
+                if n > 0 {
+                    let addr = (word as usize % n) as i64;
+                    // In range by construction; `store` re-masks to the
+                    // datapath width.
+                    let v = self.dmem.load(addr).unwrap_or(0);
+                    let _ = self.dmem.store(addr, v ^ (1u64 << (flip.bit as u32 % self.width)));
+                }
+            }
+        }
+    }
+
+    /// Advance the MAC-op clock by one accumulate and apply any due
+    /// accumulator flips.
+    #[inline(always)]
+    fn fault_mac_tick(&mut self) {
+        if self.fault.is_some() {
+            self.fault_mac_slow();
+        }
+    }
+
+    #[cold]
+    fn fault_mac_slow(&mut self) {
+        let mut f = self.fault.take().unwrap();
+        if let Some(mac) = &mut self.mac {
+            for mf in f.advance_mac(1) {
+                mac.flip_acc(mf.lane as usize, mf.bit as u32);
+            }
+        }
+        self.fault = Some(f);
     }
 }
 

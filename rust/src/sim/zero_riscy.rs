@@ -39,8 +39,10 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use super::error::ExecError;
+use super::fault::{BitFlip, FaultState, FlipTarget};
 use super::mac_model::MacState;
 use super::mem::{Mem, RAM_BASE};
 use super::prepared::PreparedRv32;
@@ -53,7 +55,13 @@ use crate::isa::MacOp;
 #[cold]
 #[inline(never)]
 fn fetch_fault(pc: u32) -> anyhow::Error {
-    anyhow::anyhow!("PC {pc:#010x} outside program")
+    ExecError::FetchFaultRv32 { pc }.into()
+}
+
+#[cold]
+#[inline(never)]
+fn mac_unavailable(op: MacOp) -> anyhow::Error {
+    ExecError::MacUnavailable { op }.into()
 }
 
 /// Why execution stopped.
@@ -79,6 +87,10 @@ pub struct ZeroRiscy {
     /// Translated-engine counters (blocks dispatched, fallback steps).
     /// Accumulates across [`ZeroRiscy::reset`], like the profile.
     pub exec_stats: ExecStats,
+    /// Armed soft-error plan (`sim::fault`).  `None` — the default —
+    /// costs one pointer-null check per retire; an armed empty plan is
+    /// bit-identical to `None` (pinned by `tests/fault_identity.rs`).
+    pub fault: Option<Box<FaultState>>,
 }
 
 /// All mnemonics the decoder can produce — the universe against which
@@ -115,6 +127,7 @@ impl ZeroRiscy {
             prepared,
             profile,
             exec_stats: ExecStats::default(),
+            fault: None,
         }
     }
 
@@ -131,6 +144,9 @@ impl ZeroRiscy {
         self.mem.reset();
         if let Some(m) = &mut self.mac {
             m.clear();
+        }
+        if let Some(f) = &mut self.fault {
+            f.rearm();
         }
     }
 
@@ -312,10 +328,10 @@ impl ZeroRiscy {
                 }
                 Instr::Fence => {}
                 Instr::Mac { op, rd, rs1, rs2 } => {
-                    let mac = self
-                        .mac
-                        .as_mut()
-                        .context("MAC instruction on a core without a MAC unit")?;
+                    let mac = match self.mac.as_mut() {
+                        Some(m) => m,
+                        None => return Err(mac_unavailable(op)),
+                    };
                     match op {
                         MacOp::Mac => {
                             let a = self.regs[rs1 as usize];
@@ -326,6 +342,7 @@ impl ZeroRiscy {
                             }
                             mac.mac(a as u64, b as u64);
                             self.profile.mac_ops += 1;
+                            self.fault_mac_tick();
                         }
                         MacOp::MacRd => {
                             let v = mac.read(rs1 as usize);
@@ -337,6 +354,7 @@ impl ZeroRiscy {
             }
             self.profile.cycles += cost;
             self.pc = next_pc;
+            self.fault_tick(1);
         }
         Ok(None)
     }
@@ -377,6 +395,11 @@ impl ZeroRiscy {
                     for u in b.uops.iter() {
                         self.exec_uop(u)?;
                     }
+                    // Block-granular fault clock: flips due anywhere in
+                    // the block land at its boundary, before the
+                    // terminator resolves — the same point the batched
+                    // engine ticks, so translated == batched per lane.
+                    self.fault_tick(b.n_instrs as u64);
                     self.apply_block::<M>(b);
                     if let Some(h) = self.apply_term(b) {
                         return Ok(h);
@@ -526,12 +549,16 @@ impl ZeroRiscy {
     /// Execute one MAC-extension op (data effects only).
     #[inline(always)]
     fn exec_mac(&mut self, op: MacOp, rd: Reg, rs1: Reg, rs2: Reg) -> Result<()> {
-        let mac = self.mac.as_mut().context("MAC instruction on a core without a MAC unit")?;
+        let mac = match self.mac.as_mut() {
+            Some(m) => m,
+            None => return Err(mac_unavailable(op)),
+        };
         match op {
             MacOp::Mac => {
                 let a = self.regs[rs1 as usize];
                 let v = self.regs[rs2 as usize];
                 mac.mac(a as u64, v as u64);
+                self.fault_mac_tick();
             }
             MacOp::MacRd => {
                 let v = mac.read(rs1 as usize);
@@ -600,6 +627,69 @@ impl ZeroRiscy {
         if addr >= RAM_BASE {
             self.profile.max_ram_offset = self.profile.max_ram_offset.max(addr - RAM_BASE);
         }
+    }
+
+    /// Advance the soft-error instruction clock by `retired` retires and
+    /// apply any newly due register/RAM flips.  The interpreter ticks
+    /// per instruction; the translated and batched engines tick once per
+    /// block (`b.n_instrs`) at the block boundary, so a plan's landing
+    /// site is deterministic *per engine* — and an empty/absent plan is
+    /// one predictable branch.
+    #[inline(always)]
+    pub(crate) fn fault_tick(&mut self, retired: u64) {
+        if self.fault.is_some() {
+            self.fault_tick_slow(retired);
+        }
+    }
+
+    #[cold]
+    fn fault_tick_slow(&mut self, retired: u64) {
+        let mut f = self.fault.take().unwrap();
+        for flip in f.advance(retired) {
+            self.apply_flip(flip);
+        }
+        self.fault = Some(f);
+    }
+
+    fn apply_flip(&mut self, flip: &BitFlip) {
+        match flip.target {
+            FlipTarget::Reg(r) => {
+                // x0 is hardwired zero — an upset there is masked by
+                // construction, exactly like the real register file.
+                let r = (r as usize) % 32;
+                if r != 0 {
+                    self.regs[r] ^= 1u32 << (flip.bit % 32);
+                }
+            }
+            FlipTarget::Ram(off) => {
+                let n = self.mem.ram.len();
+                if n > 0 {
+                    self.mem.ram[(off as usize) % n] ^= 1u8 << (flip.bit % 8);
+                }
+            }
+        }
+    }
+
+    /// Advance the MAC-op clock by one accumulate and apply any due
+    /// accumulator flips (the transient-upset model for the SIMD MAC
+    /// result path).  Called right after every `mac` accumulate on
+    /// every engine path, so the clock is engine-invariant.
+    #[inline(always)]
+    fn fault_mac_tick(&mut self) {
+        if self.fault.is_some() {
+            self.fault_mac_slow();
+        }
+    }
+
+    #[cold]
+    fn fault_mac_slow(&mut self) {
+        let mut f = self.fault.take().unwrap();
+        if let Some(mac) = &mut self.mac {
+            for mf in f.advance_mac(1) {
+                mac.flip_acc(mf.lane as usize, mf.bit as u32);
+            }
+        }
+        self.fault = Some(f);
     }
 }
 
@@ -762,7 +852,11 @@ mod tests {
     fn mac_without_unit_errors() {
         let prog = assemble("mac a0, a1\nebreak").unwrap();
         let mut sim = ZeroRiscy::new(&prog, &[], 64, None);
-        assert!(sim.run(10).is_err());
+        let err = sim.run(10).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<ExecError>(),
+            Some(&ExecError::MacUnavailable { op: MacOp::Mac })
+        );
     }
 
     #[test]
@@ -963,7 +1057,13 @@ mod tests {
         let prepared = Arc::new(PreparedRv32::new(&prog, &[], 64, None));
         let mut sim = ZeroRiscy::from_prepared(prepared);
         let err = sim.run_translated::<FullProfile>(10).unwrap_err();
-        assert!(err.to_string().contains("MAC instruction"), "{err}");
+        assert!(
+            matches!(
+                err.downcast_ref::<ExecError>(),
+                Some(ExecError::MacUnavailable { op: MacOp::Mac })
+            ),
+            "{err}"
+        );
         assert!(sim.exec_stats.fallback_instrs > 0);
     }
 

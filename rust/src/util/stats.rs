@@ -193,6 +193,42 @@ impl Reservoir {
     pub fn samples(&self) -> &[f64] {
         &self.sample
     }
+
+    /// Fold another reservoir into this one (sharded collectors merging
+    /// into a global view).  Count, sum, min and max merge **exactly**.
+    /// The retained sample merges exactly too while both sides are
+    /// still complete (no value has been evicted) and the union fits in
+    /// `cap`; past that, each retained slot is drawn from one side with
+    /// probability proportional to how many values that side has seen —
+    /// an unbiased (with-replacement) estimate of the union stream.
+    /// All randomness comes from `self`'s own PCG stream, so merging
+    /// the same reservoirs in the same order is deterministic.
+    pub fn merge(&mut self, other: &Reservoir) {
+        if other.seen == 0 {
+            return;
+        }
+        let complete = self.seen == self.sample.len() as u64
+            && other.seen == other.sample.len() as u64
+            && self.sample.len() + other.sample.len() <= self.cap;
+        if complete {
+            self.sample.extend_from_slice(&other.sample);
+        } else {
+            let total = self.seen + other.seen;
+            let k = self.cap.min(self.sample.len() + other.sample.len());
+            let mut merged = Vec::with_capacity(k);
+            for _ in 0..k {
+                let from_self = !self.sample.is_empty()
+                    && (other.sample.is_empty() || self.rng.below(total) < self.seen);
+                let src = if from_self { &self.sample } else { &other.sample };
+                merged.push(src[self.rng.below(src.len() as u64) as usize]);
+            }
+            self.sample = merged;
+        }
+        self.seen += other.seen;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 #[cfg(test)]
@@ -296,6 +332,89 @@ mod tests {
         }
         let p50 = r.percentile(50.0);
         assert!((1.0..=n as f64).contains(&p50));
+    }
+
+    #[test]
+    fn reservoir_merge_is_exact_while_complete() {
+        // Neither side has evicted and the union fits: the merged
+        // sample is the exact union, so percentiles stay exact.
+        let mut a = Reservoir::new(8, 1);
+        let mut b = Reservoir::new(8, 2);
+        for v in [1.0, 5.0, 3.0] {
+            a.push(v);
+        }
+        for v in [4.0, 2.0] {
+            b.push(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.sum(), 15.0);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 5.0);
+        let mut s = a.samples().to_vec();
+        s.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(s, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(a.percentile(50.0), 3.0);
+    }
+
+    #[test]
+    fn reservoir_merge_keeps_exact_aggregates_past_overflow() {
+        let cap = 8;
+        let mut a = Reservoir::new(cap, 3);
+        let mut b = Reservoir::new(cap, 4);
+        for i in 1..=1000 {
+            a.push(i as f64);
+        }
+        for i in 1001..=1500 {
+            b.push(i as f64);
+        }
+        a.merge(&b);
+        // Aggregates are exact even though both samples were evicting.
+        assert_eq!(a.count(), 1500);
+        assert_eq!(a.sum(), (1500.0 + 1.0) * 1500.0 / 2.0);
+        assert_eq!(a.min(), 1.0);
+        assert_eq!(a.max(), 1500.0);
+        // The sample stays bounded and inside the union's range.
+        assert_eq!(a.samples().len(), cap);
+        for &v in a.samples() {
+            assert!((1.0..=1500.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn reservoir_merge_is_deterministic() {
+        let build = || {
+            let mut a = Reservoir::new(16, 7);
+            let mut b = Reservoir::new(16, 8);
+            for i in 0..500 {
+                a.push((i * 13 % 977) as f64);
+                b.push((i * 31 % 977) as f64);
+            }
+            a.merge(&b);
+            a
+        };
+        let (x, y) = (build(), build());
+        assert_eq!(x.samples(), y.samples());
+        assert_eq!(x.count(), y.count());
+        assert_eq!(x.sum(), y.sum());
+    }
+
+    #[test]
+    fn reservoir_merge_handles_empty_sides() {
+        let mut a = Reservoir::new(4, 1);
+        let b = Reservoir::new(4, 2);
+        a.merge(&b); // empty into empty: still empty
+        assert!(a.is_empty());
+        let mut c = Reservoir::new(4, 3);
+        for i in 0..100 {
+            c.push(i as f64);
+        }
+        a.merge(&c); // full into empty
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.samples().len(), 4);
+        let before = c.count();
+        c.merge(&Reservoir::new(4, 5)); // empty into full: no-op
+        assert_eq!(c.count(), before);
     }
 
     #[test]

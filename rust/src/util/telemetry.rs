@@ -461,6 +461,52 @@ mod tests {
     }
 
     #[test]
+    fn histogram_bucket_boundaries_are_exact() {
+        // Every finite bucket edge: 2^k - 1 is the last value of bucket
+        // k, 2^k the first of bucket k+1, up to the +Inf clamp.
+        let r = Registry::new();
+        for k in 1..=29usize {
+            let h = r.histogram(&format!("t_edge_{k}_us"), "edge");
+            h.observe((1u64 << k) - 1);
+            h.observe(1u64 << k);
+            let s = h.snapshot();
+            assert_eq!(s[k], 1, "2^{k}-1 must land in bucket {k}");
+            assert_eq!(s[k + 1], 1, "2^{k} must land in bucket {}", k + 1);
+        }
+        // The clamp: 2^30 - 1 is the last finite-bucketed value; 2^30
+        // and everything above (2^62, u64::MAX - 1, u64::MAX) share the
+        // +Inf bucket.
+        let h = r.histogram("t_clamp_us", "clamp");
+        h.observe((1u64 << 30) - 1);
+        h.observe(1u64 << 30);
+        h.observe(1u64 << 62);
+        h.observe(u64::MAX - 1);
+        h.observe(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s[HIST_BUCKETS - 2], 1, "2^30-1 fills the last finite bucket");
+        assert_eq!(s[HIST_BUCKETS - 1], 4, "everything >= 2^30 clamps to +Inf");
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn histogram_sum_wraps_on_extreme_values_but_count_stays_exact() {
+        // `sum` is a relaxed u64 fetch_add: two u64::MAX observations
+        // wrap.  Pin the wrapping semantics (the JSON/Prometheus sum is
+        // best-effort at these magnitudes) and that count/buckets stay
+        // exact regardless.
+        let r = Registry::new();
+        let h = r.histogram("t_wrap_us", "wrap");
+        h.observe(u64::MAX);
+        h.observe(u64::MAX);
+        h.observe(3);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), u64::MAX.wrapping_add(u64::MAX).wrapping_add(3));
+        let s = h.snapshot();
+        assert_eq!(s[HIST_BUCKETS - 1], 2);
+        assert_eq!(s[2], 1);
+    }
+
+    #[test]
     fn prometheus_rendering_is_well_formed() {
         let r = Registry::new();
         r.counter("t_reqs_total", "requests").add(7);

@@ -1,0 +1,409 @@
+//! Differential pins for the fault-injection subsystem.
+//!
+//! Four contracts:
+//!
+//! 1. **Zero-rate identity** — plans generated at rate 0 are empty, and
+//!    running every fixture model through the plan-carrying harness
+//!    entry points with them is bit-identical (scores, predictions,
+//!    full profile) to the un-instrumented baseline, on both cores.
+//! 2. **Armed-but-empty identity** — a forced `FaultState` holding an
+//!    empty plan exercises the fault-clock hooks on every engine
+//!    (interpreter, translated, batched) without perturbing a single
+//!    architectural or profile observable.
+//! 3. **Plan purity** — fault outcomes are a function of the plan set
+//!    alone: bit-identical across reruns and across batch lane widths
+//!    (lane grouping cannot leak between trials).
+//! 4. **Campaign determinism** — `bespoke::resilience::campaign`
+//!    renders byte-identical text and JSON at 1 and 8 worker threads
+//!    (CI re-runs this under `PBSP_THREADS={1,8}`), and its zero-rate
+//!    curve row is 100% masked.
+//!
+//! Runs against `make artifacts` output when present, else the
+//! checked-in `artifacts-fixture/`; skips only if both are missing
+//! (contract 2 always runs — it needs no artifacts).
+
+use std::sync::Arc;
+
+use printed_bespoke::bespoke::resilience::{campaign, CampaignConfig};
+use printed_bespoke::dse::context::EvalContext;
+use printed_bespoke::hw::mac_unit::MacConfig;
+use printed_bespoke::isa::rv32_asm::Asm;
+use printed_bespoke::isa::{tpisa, MacOp};
+use printed_bespoke::ml::codegen_rv32::{self, Rv32Variant};
+use printed_bespoke::ml::codegen_tpisa::{self, TpVariant};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::harness::{self, FaultOutcome};
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::ml::model::Model;
+use printed_bespoke::sim::batch::{BatchRv32, BatchTpIsa};
+use printed_bespoke::sim::fault::{FaultPlan, FaultSpec, FaultState, MachineShape, Targets};
+use printed_bespoke::sim::mem::RAM_BASE;
+use printed_bespoke::sim::tpisa::TpIsa;
+use printed_bespoke::sim::trace::{FullProfile, Profile};
+use printed_bespoke::sim::zero_riscy::ZeroRiscy;
+use printed_bespoke::sim::{PreparedRv32, PreparedTpIsa};
+use printed_bespoke::util::rng::Pcg32;
+
+fn load() -> Option<(Manifest, Vec<Model>)> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    let models = man.models.iter().map(|e| Model::load(&e.weights).unwrap()).collect();
+    Some((man, models))
+}
+
+fn random_samples(man: &Manifest, model: &Model, rng: &mut Pcg32, n: usize) -> Vec<Vec<f32>> {
+    let ds = Dataset::load(man.data_dir(), &model.dataset, "test").unwrap();
+    (0..n)
+        .map(|_| {
+            let a = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+            let b = &ds.x[rng.range_usize(0, ds.x.len() - 1)];
+            let t = rng.f64() as f32;
+            a.iter().zip(b).map(|(&va, &vb)| va + t * (vb - va)).collect()
+        })
+        .collect()
+}
+
+fn assert_scores_eq(a: &[Vec<f64>], b: &[Vec<f64>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: sample count");
+    for (i, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{what} sample {i}: score count");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{what} sample {i} score {j}: {va} vs {vb}");
+        }
+    }
+}
+
+fn assert_profiles_eq(a: &Profile, b: &Profile, what: &str) {
+    assert_eq!(a.instr_counts(), b.instr_counts(), "{what}: histogram");
+    assert_eq!(a.regs_used, b.regs_used, "{what}: regs_used");
+    assert_eq!(a.max_pc, b.max_pc, "{what}: max_pc");
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.instructions, b.instructions, "{what}: instructions");
+    assert_eq!(a.loads, b.loads, "{what}: loads");
+    assert_eq!(a.stores, b.stores, "{what}: stores");
+    assert_eq!(a.mul_ops, b.mul_ops, "{what}: mul_ops");
+    assert_eq!(a.mac_ops, b.mac_ops, "{what}: mac_ops");
+    assert_eq!(a.branches_taken, b.branches_taken, "{what}: branches_taken");
+    assert_eq!(a.max_ram_offset, b.max_ram_offset, "{what}: max_ram_offset");
+}
+
+fn zero_rate_spec(seed: u64) -> FaultSpec {
+    FaultSpec {
+        seed,
+        rate: 0.0,
+        horizon: 100_000,
+        mac_rate: 0.0,
+        mac_horizon: 100_000,
+        targets: Targets::ALL,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (1) Zero-rate identity: every fixture model, both cores.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_rate_plans_are_bit_identical_to_baseline() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg32::seeded(0xFA01_7001);
+    for model in &models {
+        let xs = random_samples(&man, model, &mut rng, 3);
+
+        // Zero-Riscy (SIMD-MAC p8).
+        let prog = codegen_rv32::generate(model, Rv32Variant::Simd(8)).unwrap();
+        let what = format!("{} zero-riscy", model.name);
+        let base = harness::run_rv32(model, &prog, &xs).unwrap();
+        let shape = MachineShape::rv32(prog.prepared.ram_bytes, prog.prepared.mac);
+        let spec = zero_rate_spec(0xb5);
+        let plans: Vec<FaultPlan> =
+            (0..xs.len()).map(|t| FaultPlan::generate(&spec, &shape, t as u64)).collect();
+        assert!(plans.iter().all(FaultPlan::is_empty), "{what}: zero-rate plan not empty");
+        let run = harness::run_rv32_batched_with_plans::<FullProfile>(
+            model,
+            &prog,
+            &xs,
+            harness::BATCH_LANES,
+            &plans,
+        )
+        .unwrap();
+        assert_scores_eq(&run.scores, &base.scores, &what);
+        assert_eq!(run.predictions, base.predictions, "{what}: predictions");
+        assert_profiles_eq(&run.profile, &base.profile, &what);
+        // The campaign entry point too: zero-rate outcomes are all
+        // Scores, each bit-equal to the baseline sample.
+        let outs =
+            harness::run_rv32_faulted(model, &prog, &prog.prepared, &xs, &plans, 64, 50_000_000)
+                .unwrap();
+        for (i, o) in outs.iter().enumerate() {
+            match o {
+                FaultOutcome::Scores(s) => {
+                    assert_scores_eq(
+                        std::slice::from_ref(s),
+                        std::slice::from_ref(&base.scores[i]),
+                        &what,
+                    );
+                }
+                other => panic!("{what} sample {i}: zero-rate outcome {other:?}"),
+            }
+        }
+
+        // TP-ISA (d32 MAC p8 — feasible for every fixture model).
+        let tprog = codegen_tpisa::generate(model, 32, TpVariant::Mac { precision: 8 }).unwrap();
+        let what = format!("{} tp-isa", model.name);
+        let tbase = harness::run_tpisa(model, &tprog, &xs).unwrap();
+        let tshape =
+            MachineShape::tpisa(tprog.datapath, tprog.prepared.init_dmem.len(), tprog.prepared.mac);
+        let tplans: Vec<FaultPlan> =
+            (0..xs.len()).map(|t| FaultPlan::generate(&spec, &tshape, t as u64)).collect();
+        assert!(tplans.iter().all(FaultPlan::is_empty), "{what}: zero-rate plan not empty");
+        let trun = harness::run_tpisa_batched_with_plans::<FullProfile>(
+            model,
+            &tprog,
+            &xs,
+            harness::BATCH_LANES,
+            &tplans,
+        )
+        .unwrap();
+        assert_scores_eq(&trun.scores, &tbase.scores, &what);
+        assert_eq!(trun.predictions, tbase.predictions, "{what}: predictions");
+        assert_profiles_eq(&trun.profile, &tbase.profile, &what);
+        let touts =
+            harness::run_tpisa_faulted(model, &tprog, &tprog.prepared, &xs, &tplans, 64, 500_000_000)
+                .unwrap();
+        for (i, o) in touts.iter().enumerate() {
+            match o {
+                FaultOutcome::Scores(s) => {
+                    assert_scores_eq(
+                        std::slice::from_ref(s),
+                        std::slice::from_ref(&tbase.scores[i]),
+                        &what,
+                    );
+                }
+                other => panic!("{what} sample {i}: zero-rate outcome {other:?}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (2) Armed-but-empty FaultState: hooks tick, nothing changes.
+// ---------------------------------------------------------------------------
+
+fn small_rv32_program() -> Vec<printed_bespoke::isa::rv32::Instr> {
+    // Loads, stores, a MAC accumulate and a counted loop: touches every
+    // fault-clock site (instruction tick in interpreter and per-block
+    // paths, MAC tick after each accumulate).
+    let mut a = Asm::new();
+    a.li(8, RAM_BASE as i32);
+    a.li(5, 3);
+    a.li(6, 4);
+    a.sw(5, 8, 0);
+    a.sw(6, 8, 4);
+    a.maccl();
+    a.li(10, 5); // loop counter
+    a.label("loop");
+    a.lw(5, 8, 0);
+    a.lw(6, 8, 4);
+    a.mac(5, 6);
+    a.addi(10, 10, -1);
+    a.branch(printed_bespoke::isa::rv32::BranchOp::Bne, 10, 0, "loop");
+    a.macrd(11, 0);
+    a.sw(11, 8, 8);
+    a.ebreak();
+    a.finish().unwrap()
+}
+
+#[test]
+fn armed_empty_fault_state_is_inert_on_every_rv32_engine() {
+    let code = small_rv32_program();
+    let prepared = Arc::new(PreparedRv32::new(&code, &[], 0x400, Some(MacConfig::new(32, 32))));
+
+    // Interpreter.
+    let mut clean = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    let hc = clean.run_traced::<FullProfile>(10_000).unwrap();
+    let mut armed = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    armed.fault = Some(FaultState::new(FaultPlan::default()));
+    let ha = armed.run_traced::<FullProfile>(10_000).unwrap();
+    assert_eq!(hc, ha, "interp: halt");
+    assert_eq!(clean.regs, armed.regs, "interp: regs");
+    assert_eq!(clean.pc, armed.pc, "interp: pc");
+    assert_eq!(clean.mem.ram, armed.mem.ram, "interp: ram");
+    assert_profiles_eq(&clean.profile, &armed.profile, "interp");
+
+    // Translated engine.
+    let mut clean = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    let hc = clean.run_translated::<FullProfile>(10_000).unwrap();
+    let mut armed = ZeroRiscy::from_prepared(Arc::clone(&prepared));
+    armed.fault = Some(FaultState::new(FaultPlan::default()));
+    let ha = armed.run_translated::<FullProfile>(10_000).unwrap();
+    assert_eq!(hc, ha, "translated: halt");
+    assert_eq!(clean.regs, armed.regs, "translated: regs");
+    assert_eq!(clean.mem.ram, armed.mem.ram, "translated: ram");
+    assert_profiles_eq(&clean.profile, &armed.profile, "translated");
+
+    // Batched engine: arm some lanes, leave others bare.
+    let mut clean = BatchRv32::new(Arc::clone(&prepared), 4);
+    let rc = clean.run::<FullProfile>(4, 10_000);
+    let mut armed = BatchRv32::new(prepared, 4);
+    armed.lane_mut(1).fault = Some(FaultState::new(FaultPlan::default()));
+    armed.lane_mut(3).fault = Some(FaultState::new(FaultPlan::default()));
+    let ra = armed.run::<FullProfile>(4, 10_000);
+    for i in 0..4 {
+        let what = format!("batch lane {i}");
+        assert_eq!(
+            rc[i].as_ref().unwrap(),
+            ra[i].as_ref().unwrap(),
+            "{what}: halt"
+        );
+        assert_eq!(clean.lane(i).regs, armed.lane(i).regs, "{what}: regs");
+        assert_eq!(clean.lane(i).mem.ram, armed.lane(i).mem.ram, "{what}: ram");
+        assert_profiles_eq(&clean.lane(i).profile, &armed.lane(i).profile, &what);
+    }
+}
+
+#[test]
+fn armed_empty_fault_state_is_inert_on_every_tpisa_engine() {
+    use tpisa::Instr;
+    let code = vec![
+        Instr::Ldi { r1: 0, imm: 3 },
+        Instr::Ldi { r1: 1, imm: 4 },
+        Instr::St { r1: 0, r2: 1, imm: 2 },
+        Instr::Mac { op: MacOp::MacClr, r1: 0, r2: 0 },
+        Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 },
+        Instr::Mac { op: MacOp::Mac, r1: 0, r2: 1 },
+        Instr::Mac { op: MacOp::MacRd, r1: 2, r2: 0 },
+        Instr::Ld { r1: 3, r2: 1, imm: 2 },
+        Instr::Halt,
+    ];
+    let prepared = Arc::new(PreparedTpIsa::with_zero_dmem(8, &code, 64, Some(MacConfig::new(8, 8))));
+
+    let mut clean = TpIsa::from_prepared(Arc::clone(&prepared));
+    let hc = clean.run_traced::<FullProfile>(1_000).unwrap();
+    let mut armed = TpIsa::from_prepared(Arc::clone(&prepared));
+    armed.fault = Some(FaultState::new(FaultPlan::default()));
+    let ha = armed.run_traced::<FullProfile>(1_000).unwrap();
+    assert_eq!(hc, ha, "tp interp: halt");
+    assert_eq!(clean.regs, armed.regs, "tp interp: regs");
+    let n = clean.dmem.len();
+    assert_eq!(
+        clean.dmem.read_words(0, n).unwrap(),
+        armed.dmem.read_words(0, n).unwrap(),
+        "tp interp: dmem"
+    );
+    assert_profiles_eq(&clean.profile, &armed.profile, "tp interp");
+
+    let mut clean = TpIsa::from_prepared(Arc::clone(&prepared));
+    let hc = clean.run_translated::<FullProfile>(1_000).unwrap();
+    let mut armed = TpIsa::from_prepared(Arc::clone(&prepared));
+    armed.fault = Some(FaultState::new(FaultPlan::default()));
+    let ha = armed.run_translated::<FullProfile>(1_000).unwrap();
+    assert_eq!(hc, ha, "tp translated: halt");
+    assert_eq!(clean.regs, armed.regs, "tp translated: regs");
+    assert_profiles_eq(&clean.profile, &armed.profile, "tp translated");
+
+    let mut clean = BatchTpIsa::new(Arc::clone(&prepared), 3);
+    let rc = clean.run::<FullProfile>(3, 1_000);
+    let mut armed = BatchTpIsa::new(prepared, 3);
+    armed.lane_mut(0).fault = Some(FaultState::new(FaultPlan::default()));
+    armed.lane_mut(2).fault = Some(FaultState::new(FaultPlan::default()));
+    let ra = armed.run::<FullProfile>(3, 1_000);
+    for i in 0..3 {
+        let what = format!("tp batch lane {i}");
+        assert_eq!(rc[i].as_ref().unwrap(), ra[i].as_ref().unwrap(), "{what}: halt");
+        assert_eq!(clean.lane(i).regs, armed.lane(i).regs, "{what}: regs");
+        assert_profiles_eq(&clean.lane(i).profile, &armed.lane(i).profile, &what);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// (3) Plan purity: outcomes depend on the plans, not lane grouping or
+// rerun order.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_outcomes_are_lane_width_independent_and_rerun_stable() {
+    let Some((man, models)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let model = &models[0];
+    let mut rng = Pcg32::seeded(0xFA01_7003);
+    let xs = random_samples(&man, model, &mut rng, 6);
+    let prog = codegen_rv32::generate(model, Rv32Variant::Simd(8)).unwrap();
+    let base = harness::run_rv32(model, &prog, &xs).unwrap();
+    let horizon = (base.profile.instructions / xs.len() as u64).max(1);
+    let mac_horizon = (base.profile.mac_ops / xs.len() as u64).max(1);
+    let shape = MachineShape::rv32(prog.prepared.ram_bytes, prog.prepared.mac);
+    let spec = FaultSpec {
+        seed: 0xb5,
+        rate: 1e-3,
+        horizon,
+        mac_rate: 1e-3,
+        mac_horizon,
+        targets: Targets::ALL,
+    };
+    let plans: Vec<FaultPlan> =
+        (0..xs.len()).map(|t| FaultPlan::generate(&spec, &shape, t as u64)).collect();
+    assert!(plans.iter().any(|p| !p.is_empty()), "rate 1e-3 produced no faults at all");
+    let fuel = (horizon * 8).max(10_000);
+    let wide =
+        harness::run_rv32_faulted(model, &prog, &prog.prepared, &xs, &plans, 64, fuel).unwrap();
+    let narrow =
+        harness::run_rv32_faulted(model, &prog, &prog.prepared, &xs, &plans, 2, fuel).unwrap();
+    let again =
+        harness::run_rv32_faulted(model, &prog, &prog.prepared, &xs, &plans, 64, fuel).unwrap();
+    assert_eq!(format!("{wide:?}"), format!("{narrow:?}"), "lane width changed outcomes");
+    assert_eq!(format!("{wide:?}"), format!("{again:?}"), "rerun changed outcomes");
+    // Regenerating the plans from the same spec gives the same plans.
+    let replans: Vec<FaultPlan> =
+        (0..xs.len()).map(|t| FaultPlan::generate(&spec, &shape, t as u64)).collect();
+    assert_eq!(plans, replans, "plan generation not reproducible");
+}
+
+// ---------------------------------------------------------------------------
+// (4) Campaign determinism across worker-thread counts.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn campaign_report_is_thread_count_invariant() {
+    let ctx1 = match EvalContext::load_with_threads(2, 1) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping: artifacts not built ({e:#})");
+            return;
+        }
+    };
+    let ctx8 = EvalContext::load_with_threads(2, 8).unwrap();
+    let cfg = CampaignConfig {
+        trials: 8,
+        samples: 2,
+        rates: vec![0.0, 1e-4],
+        rom_trials: 2,
+        models: vec![ctx1.models[0].name.clone()],
+        ..CampaignConfig::default()
+    };
+    let r1 = campaign(&ctx1, &cfg).unwrap();
+    let r8 = campaign(&ctx8, &cfg).unwrap();
+    assert_eq!(r1.text, r8.text, "campaign text differs across thread counts");
+    assert_eq!(
+        r1.json.to_string(),
+        r8.json.to_string(),
+        "campaign JSON differs across thread counts"
+    );
+    // The zero-rate row is the baseline: every trial must be masked.
+    assert!(!r1.configs.is_empty(), "campaign produced no configurations");
+    for c in &r1.configs {
+        let (rate, oc) = &c.curve[0];
+        assert_eq!(*rate, 0.0, "{}/{}: first swept rate", c.model, c.core);
+        assert_eq!(
+            oc.masked,
+            oc.total(),
+            "{}/{}: zero-rate trials not all masked",
+            c.model,
+            c.core
+        );
+    }
+}
