@@ -90,6 +90,12 @@ impl Default for ServiceConfig {
     }
 }
 
+/// Sentinel error a streaming reply carries when the request's deadline
+/// expired while it sat in the dynamic batcher.  The serving layer
+/// matches on this exact string to map the shed to a `504` (the reply
+/// channel is `Result<_, String>`, so a sentinel value is the contract).
+pub const ERR_DEADLINE: &str = "deadline exceeded in batcher";
+
 /// The precision a key must score at for the ISS backend to take it
 /// (SIMD-MAC codegen variants exist for p ≤ 16).
 fn iss_precision(key: &Key) -> Option<u32> {
@@ -115,7 +121,7 @@ pub struct Scored {
 
 enum Job {
     Bulk { key: Key, xs: Vec<Vec<f32>>, reply: Sender<Result<Scores, String>> },
-    One { key: Key, x: Vec<f32>, reply: Sender<Result<Scored, String>> },
+    One { key: Key, x: Vec<f32>, deadline: Option<Instant>, reply: Sender<Result<Scored, String>> },
     Shutdown,
 }
 
@@ -187,8 +193,23 @@ impl Service {
 
     /// Submit one streaming request; returns the reply receiver.
     pub fn submit(&self, key: Key, x: Vec<f32>) -> Result<Receiver<Result<Scored, String>>> {
+        self.submit_with_deadline(key, x, None)
+    }
+
+    /// [`Service::submit`] with an absolute deadline: if it passes while
+    /// the request waits in the dynamic batcher, the request is shed
+    /// with [`ERR_DEADLINE`] *before* execution — its batch siblings
+    /// score without it instead of paying for work nobody awaits.
+    pub fn submit_with_deadline(
+        &self,
+        key: Key,
+        x: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Scored, String>>> {
         let (rtx, rrx) = channel();
-        self.tx.send(Job::One { key, x, reply: rtx }).map_err(|_| anyhow!("worker gone"))?;
+        self.tx
+            .send(Job::One { key, x, deadline, reply: rtx })
+            .map_err(|_| anyhow!("worker gone"))?;
         Ok(rrx)
     }
 
@@ -351,6 +372,8 @@ pub struct EvalResult {
 
 struct StreamReq {
     x: Vec<f32>,
+    /// Absolute point past which nobody is waiting for the reply.
+    deadline: Option<Instant>,
     reply: Sender<Result<Scored, String>>,
 }
 
@@ -360,6 +383,7 @@ struct StreamReq {
 /// per batch.
 struct WorkerTel {
     occupancy: std::sync::Arc<telemetry::Gauge>,
+    deadline_shed: std::sync::Arc<telemetry::Counter>,
     requests: std::collections::BTreeMap<String, std::sync::Arc<telemetry::Counter>>,
 }
 
@@ -368,6 +392,10 @@ impl WorkerTel {
         WorkerTel {
             occupancy: telemetry::global()
                 .gauge("pbsp_batcher_occupancy", "streaming requests waiting in the dynamic batcher"),
+            deadline_shed: telemetry::global().counter(
+                "pbsp_coordinator_deadline_shed_total",
+                "streaming requests shed at batch dispatch because their deadline had passed",
+            ),
             requests: std::collections::BTreeMap::new(),
         }
     }
@@ -600,15 +628,15 @@ fn worker_loop(
                 let r = run_batch(&mut runtime, &key, &xs);
                 let _ = reply.send(r);
             }
-            Ok(Job::One { key, x, reply }) => {
+            Ok(Job::One { key, x, deadline, reply }) => {
                 tel.occupancy.add(1);
-                router.enqueue(key, StreamReq { x, reply });
+                router.enqueue(key, StreamReq { x, deadline, reply });
                 // Opportunistically drain everything already queued.
                 while let Ok(job) = rx.try_recv() {
                     match job {
-                        Job::One { key, x, reply } => {
+                        Job::One { key, x, deadline, reply } => {
                             tel.occupancy.add(1);
-                            router.enqueue(key, StreamReq { x, reply })
+                            router.enqueue(key, StreamReq { x, deadline, reply })
                         }
                         Job::Bulk { key, xs, reply } => {
                             let r = run_batch(&mut runtime, &key, &xs);
@@ -649,8 +677,26 @@ fn dispatch(
     shared: &metrics::Shared,
     tel: &mut WorkerTel,
 ) {
-    // Streaming queueing delay (enqueue -> dispatch), per request.
     let now = Instant::now();
+    tel.occupancy.sub(batch.len() as i64);
+    // Shed requests whose deadline passed while they waited: nobody is
+    // listening for those replies any more, and executing them would
+    // only tax their batch siblings.  The shed happens *before* the
+    // batch is built, so siblings score exactly as if the dead request
+    // had never arrived.
+    let (batch, dead): (Vec<_>, Vec<_>) = batch
+        .into_iter()
+        .partition(|p| p.payload.deadline.map(|d| now < d).unwrap_or(true));
+    if !dead.is_empty() {
+        tel.deadline_shed.add(dead.len() as u64);
+        for p in dead {
+            let _ = p.payload.reply.send(Err(ERR_DEADLINE.to_string()));
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+    // Streaming queueing delay (enqueue -> dispatch), per request.
     let queue_us: Vec<u64> = batch
         .iter()
         .map(|p| now.duration_since(p.enqueued).as_micros() as u64)
@@ -661,7 +707,6 @@ fn dispatch(
             m.record_queue_ms(*us as f64 / 1e3);
         }
     }
-    tel.occupancy.sub(batch.len() as i64);
     tel.requests_for(key).add(batch.len() as u64);
     let xs: Vec<Vec<f32>> = batch.iter().map(|p| p.payload.x.clone()).collect();
     let t0 = Instant::now();

@@ -10,10 +10,14 @@
 //! pbsp serve --addr HOST:PORT [--http-threads N] [--duration-s N]
 //!            [--max-conns N] [--max-queued N]   HTTP inference frontend
 //!            [--trace-sample N] [--log-json FILE] [--stats-interval-s S]
+//!            [--default-deadline-ms D] [--brownout-high N] [--brownout-low N]
 //! pbsp loadgen --fleet N [--requests N] [--seed S] [--think-ms T]
 //!              [--addr HOST:PORT] [--out FILE]   device-fleet load test
 //!              [--open-rps R] [--client-workers N] [--iss] [--verify]
 //!              [--trace-sample N] [--log-json FILE]
+//!              [--deadline-ms D] [--attempts N]
+//!              [--chaos-seed S] [--chaos-profile P]
+//!              [--default-deadline-ms D] [--brownout-high N] [--brownout-low N]
 //! pbsp crosscheck [--samples N]                 ISS vs PJRT bit-exactness
 //! pbsp faultsim [--core zero-riscy|tp-isa|both] [--models A,B]
 //!               [--precision N] [--datapath N] [--seed S] [--trials N]
@@ -28,6 +32,26 @@
 //! closed-loop to an open-loop arrival schedule at R requests/s
 //! fleet-wide; `--client-workers` bounds the loadgen's own threads
 //! (devices are sharded, so 10k-device fleets don't need 10k threads).
+//!
+//! Overload handling: requests carry `X-Deadline-Ms` (loadgen:
+//! `--deadline-ms`; server fallback: `--default-deadline-ms`) and are
+//! shed with a `504` once the budget — counted from the request's first
+//! byte — is spent, before they waste compute.  `--brownout-high N` /
+//! `--brownout-low N` set the in-flight watermarks of the brownout
+//! controller: between them, eligible requests are served at the
+//! next-lower precision variant (response carries `degraded: true` and
+//! the variant actually served) instead of being 503-shed.
+//! `GET /readyz` answers 503 (naming the reason) while draining, over
+//! capacity, or in brownout — `GET /healthz` stays pure liveness.
+//!
+//! Chaos: `--chaos-seed S` mounts a seeded fault-injecting TCP proxy
+//! (`server::chaos`) between the fleet and the frontend —
+//! `--chaos-profile` picks from clean|latency|drip|resets|truncate|
+//! blackhole|mix; every behaviour is a pure function of
+//! (seed, connection ordinal), so a chaos run is exactly reproducible.
+//! Under chaos the loadgen retries transport faults and 503s with
+//! seeded decorrelated-jitter backoff (`--attempts` bounds tries) and
+//! its report counts deadline misses, degraded serves and retries.
 //!
 //! `--iss` scores quantised (`p ≤ 16`) requests on the batched lockstep
 //! ISS (`sim::batch`) instead of the PJRT runtime; `--verify` (loadgen,
@@ -69,6 +93,7 @@ use printed_bespoke::coordinator::service::{Service, ServiceConfig};
 use printed_bespoke::dse::{context::EvalContext, report};
 use printed_bespoke::hw::egfet::egfet;
 use printed_bespoke::hw::synth::{synthesize, tpisa, zero_riscy};
+use printed_bespoke::server::chaos::{ChaosProxy, Profile};
 use printed_bespoke::server::{loadgen, Server, ServerConfig};
 use printed_bespoke::sim::trace::CyclesOnly;
 use printed_bespoke::util::cli::Args;
@@ -232,6 +257,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let trace_sample = args.parse_or("trace-sample", 0u64)?;
     let trace_log = args.opt_str("log-json").map(String::from);
     let stats_interval_s = args.parse_or("stats-interval-s", 0u64)?;
+    let default_deadline_ms = args.parse_or("default-deadline-ms", 0u64)?;
+    let brownout_high = args.parse_or("brownout-high", 0usize)?;
+    let brownout_low = args.parse_or("brownout-low", 0usize)?;
     let iss = args.flag("iss");
     let dual_exec = args.parse_or("dual-exec", 0.0f64)?;
     let fault_mac_rate = args.parse_or("fault-mac", 0.0f64)?;
@@ -258,8 +286,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // The reactor owns every connection socket; --http-threads only
     // sizes the compute pool, so the default is fine for big fleets.
     let svc = Arc::new(Service::start(cfg)?);
-    let mut scfg =
-        ServerConfig { addr, trace_sample, trace_log, ..ServerConfig::default() };
+    let mut scfg = ServerConfig {
+        addr,
+        trace_sample,
+        trace_log,
+        default_deadline_ms,
+        brownout_high,
+        brownout_low,
+        ..ServerConfig::default()
+    };
     if let Some(t) = http_threads {
         scfg.http_threads = t;
     }
@@ -334,6 +369,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         precision: args.parse_or("precision", 8u32)?,
         open_rps: args.parse_or("open-rps", 0.0f64)?,
         client_workers: args.parse_or("client-workers", 0usize)?,
+        deadline_ms: args.parse_or("deadline-ms", 0u64)?,
+        attempts: args.parse_or("attempts", 3usize)?,
     };
     let addr = args.opt_str("addr").map(String::from);
     let out = args.opt_str("out").map(String::from);
@@ -344,11 +381,52 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let dual_exec = args.parse_or("dual-exec", 0.0f64)?;
     let fault_mac_rate = args.parse_or("fault-mac", 0.0f64)?;
     let fault_seed = args.parse_or("fault-seed", 1u64)?;
+    let chaos_seed = args.opt_parse::<u64>("chaos-seed")?;
+    let chaos_profile: Profile = args.str_or("chaos-profile", "mix").parse()?;
+    let default_deadline_ms = args.parse_or("default-deadline-ms", 0u64)?;
+    let brownout_high = args.parse_or("brownout-high", 0usize)?;
+    let brownout_low = args.parse_or("brownout-low", 0usize)?;
     let threads = args.threads()?;
     args.finish()?;
     // The loadgen holds one socket per device (plus the frontend's own
     // in the self-contained mode) — raise the fd budget up front.
     printed_bespoke::util::poll::raise_nofile_limit(cfg.fleet as u64 * 2 + 512);
+    // Mounts the seeded chaos proxy (when asked) between fleet and
+    // frontend, runs the fleet through it, then re-scrapes `/metrics`
+    // off the *direct* address — the run's own scrape rode the proxy
+    // and may itself have been faulted.
+    let run_chaos = |target: std::net::SocketAddr,
+                     cfg: &loadgen::LoadgenConfig|
+     -> Result<loadgen::Report> {
+        let Some(seed) = chaos_seed else {
+            return loadgen::run(target, cfg);
+        };
+        let mut proxy = ChaosProxy::start(target, seed, chaos_profile)?;
+        println!(
+            "chaos: proxy {} -> {} (seed {seed}, profile {chaos_profile:?})",
+            proxy.addr(),
+            target
+        );
+        let mut report = loadgen::run(proxy.addr(), cfg)?;
+        report.server_metrics = loadgen::scrape_metrics(target);
+        let s = proxy.stats();
+        let c = |a: &std::sync::atomic::AtomicU64| a.load(std::sync::atomic::Ordering::Relaxed);
+        // One greppable line for the chaos-smoke CI job.
+        println!(
+            "chaos: conns {} clean {} faulted {} (resets {} truncations {} blackholes {} \
+             delayed {} dripped {})",
+            c(&s.conns),
+            c(&s.clean),
+            s.faulted(),
+            c(&s.resets),
+            c(&s.truncations),
+            c(&s.blackholes),
+            c(&s.delayed),
+            c(&s.dripped),
+        );
+        proxy.shutdown();
+        Ok(report)
+    };
     let report = match addr {
         // Drive an already-running external frontend.
         Some(a) => {
@@ -361,12 +439,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             if dual_exec > 0.0 || fault_mac_rate > 0.0 {
                 bail!("--dual-exec/--fault-mac configure the in-process frontend (drop --addr, or pass them to the external `pbsp serve`)");
             }
+            if default_deadline_ms > 0 || brownout_high > 0 || brownout_low > 0 {
+                bail!("--default-deadline-ms/--brownout-* configure the in-process frontend (drop --addr, or pass them to the external `pbsp serve`)");
+            }
             let target = a
                 .to_socket_addrs()
                 .with_context(|| format!("resolve {a:?}"))?
                 .next()
                 .with_context(|| format!("{a:?} resolved to no address"))?;
-            loadgen::run(target, &cfg)?
+            run_chaos(target, &cfg)?
         }
         // Self-contained: spin up service + frontend on an ephemeral
         // port, run the fleet, shut down (the CI smoke path).
@@ -381,20 +462,23 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             })?);
             // The reactor multiplexes every device on one thread — only
             // the admission cap needs fleet-size headroom (reconnect
-            // churn from think-time reaping included).
+            // churn from think-time reaping and chaos retries included).
             let scfg = ServerConfig {
                 max_connections: cfg.fleet + 16,
                 trace_sample,
                 trace_log,
+                default_deadline_ms,
+                brownout_high,
+                brownout_low,
                 ..ServerConfig::default()
             };
             let mut server = Server::start(Arc::clone(&svc), scfg)?;
             println!("loadgen: in-process frontend on http://{}", server.addr());
-            let report = loadgen::run(server.addr(), &cfg)?;
+            let report = run_chaos(server.addr(), &cfg)?;
             server.shutdown();
             println!("coordinator: {}", svc.metrics.lock().unwrap().summary());
             if verify {
-                let checked = loadgen::verify(&svc, &report, cfg.precision)?;
+                let checked = loadgen::verify(&svc, &report)?;
                 println!("verify ok: {checked} records bit-identical to in-process scoring");
             }
             if dual_exec > 0.0 {
@@ -429,7 +513,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         bail!("loadgen completed zero requests");
     }
     if report.errors > 0 {
-        bail!("loadgen saw {} errors", report.errors);
+        // Under chaos, residual errors are the *point* — faults that
+        // outlast the retry budget.  Every successful response was
+        // still (optionally) verified bit-identical above; a clean run
+        // keeps the hard zero-error gate.
+        if chaos_seed.is_some() {
+            println!("loadgen: {} errors tolerated under chaos injection", report.errors);
+        } else {
+            bail!("loadgen saw {} errors", report.errors);
+        }
     }
     Ok(())
 }

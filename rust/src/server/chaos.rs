@@ -1,0 +1,718 @@
+//! Seeded fault-injecting TCP proxy (offline substitute for toxiproxy):
+//! sits between a device fleet and the serving frontend and injects the
+//! network pathologies the robustness layer claims to survive —
+//! connection resets mid-body, byte-drip throttling, response
+//! truncation, blackhole stalls, and added latency.
+//!
+//! Determinism is the point: every behaviour is a pure PCG function of
+//! `(seed, connection ordinal, profile)` ([`plan_for`]), so a CI chaos
+//! run with `--chaos-seed 7` draws exactly the same fault plans every
+//! time and the loadgen's end-to-end counters are reproducible (the
+//! accept *order* under concurrency may vary, but the multiset of plans
+//! over N connections cannot).
+//!
+//! One thread, `util::poll` readiness — the same substrate as the
+//! serving reactor — so a 1k-device fleet costs the proxy two fds per
+//! connection and no threads.  Each proxied connection is a [`Pipe`]:
+//! two non-blocking sockets and two bounded buffers pumped according to
+//! the connection's [`Plan`].
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::poll::{fd_of, poll, PollFd};
+use crate::util::rng::Pcg32;
+
+/// Event-loop tick: poll timeout and drip replenishment interval.
+const TICK: Duration = Duration::from_millis(5);
+/// Per-direction buffer cap; reads pause (TCP backpressure) when full.
+const BUF_CAP: usize = 64 * 1024;
+/// How long a blackholed connection is held open before the proxy
+/// closes it — long enough that a correctly-bounded client times out
+/// first, short enough that CI runs don't accumulate zombies.
+const BLACKHOLE_HOLD: Duration = Duration::from_secs(3);
+/// Safety net: no proxied connection outlives this, whatever its plan.
+const MAX_CONN_AGE: Duration = Duration::from_secs(60);
+
+/// Which pathology family a run injects.  `Mix` keeps a majority of
+/// connections clean so retries converge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    /// Pass-through (baseline / control runs).
+    Clean,
+    /// RST the client side mid-response on a fraction of connections.
+    Resets,
+    /// Throttle both directions to a few bytes per tick.
+    Drip,
+    /// Swallow the response entirely and stall (the blackhole the
+    /// client read-timeout satellite exists for).
+    Stall,
+    /// Close the client side cleanly partway through the response.
+    Truncate,
+    /// Delay response bytes by a few tens of milliseconds.
+    Latency,
+    /// A weighted blend of all of the above, majority clean.
+    Mix,
+}
+
+impl std::str::FromStr for Profile {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Profile> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "clean" => Profile::Clean,
+            "resets" | "reset" => Profile::Resets,
+            "drip" => Profile::Drip,
+            "stall" | "blackhole" => Profile::Stall,
+            "truncate" => Profile::Truncate,
+            "latency" => Profile::Latency,
+            "mix" => Profile::Mix,
+            other => bail!(
+                "unknown chaos profile {other:?} \
+                 (want clean|resets|drip|stall|truncate|latency|mix)"
+            ),
+        })
+    }
+}
+
+/// The fault plan for one proxied connection — drawn once at accept
+/// time by [`plan_for`] and never mutated, so the connection's whole
+/// behaviour is fixed by `(seed, conn, profile)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Plan {
+    /// Hold response bytes this long after they first arrive.
+    pub delay: Option<Duration>,
+    /// Forward at most this many bytes per [`TICK`], both directions.
+    pub drip: Option<usize>,
+    /// RST the client after forwarding this many response bytes.
+    pub reset_after: Option<u64>,
+    /// FIN the client after forwarding this many response bytes.
+    pub truncate_after: Option<u64>,
+    /// Never forward the response; hold, then close.
+    pub blackhole: bool,
+}
+
+impl Plan {
+    pub const CLEAN: Plan =
+        Plan { delay: None, drip: None, reset_after: None, truncate_after: None, blackhole: false };
+
+    pub fn is_clean(&self) -> bool {
+        *self == Plan::CLEAN
+    }
+}
+
+/// Draw the fault plan for connection ordinal `conn` — a pure function:
+/// no global state, no wall clock, one dedicated PCG stream per
+/// connection.
+pub fn plan_for(seed: u64, conn: u64, profile: Profile) -> Plan {
+    let mut rng = Pcg32::new(seed, conn);
+    // Response-byte thresholds land mid-body: the smallest score
+    // response is ~130 bytes of head plus a JSON body.
+    let reset = |rng: &mut Pcg32| Plan {
+        reset_after: Some(rng.range_i64(40, 200) as u64),
+        ..Plan::CLEAN
+    };
+    let truncate = |rng: &mut Pcg32| Plan {
+        truncate_after: Some(rng.range_i64(40, 200) as u64),
+        ..Plan::CLEAN
+    };
+    let drip = |rng: &mut Pcg32| Plan { drip: Some(rng.range_usize(8, 64)), ..Plan::CLEAN };
+    let latency = |rng: &mut Pcg32| Plan {
+        delay: Some(Duration::from_millis(rng.range_i64(20, 150) as u64)),
+        ..Plan::CLEAN
+    };
+    match profile {
+        Profile::Clean => Plan::CLEAN,
+        Profile::Resets => {
+            if rng.f64() < 0.6 {
+                reset(&mut rng)
+            } else {
+                Plan::CLEAN
+            }
+        }
+        Profile::Truncate => {
+            if rng.f64() < 0.6 {
+                truncate(&mut rng)
+            } else {
+                Plan::CLEAN
+            }
+        }
+        Profile::Drip => drip(&mut rng),
+        Profile::Latency => latency(&mut rng),
+        Profile::Stall => {
+            if rng.f64() < 0.5 {
+                Plan { blackhole: true, ..Plan::CLEAN }
+            } else {
+                Plan::CLEAN
+            }
+        }
+        Profile::Mix => {
+            let roll = rng.f64();
+            if roll < 0.55 {
+                Plan::CLEAN
+            } else if roll < 0.65 {
+                latency(&mut rng)
+            } else if roll < 0.78 {
+                drip(&mut rng)
+            } else if roll < 0.88 {
+                reset(&mut rng)
+            } else if roll < 0.95 {
+                truncate(&mut rng)
+            } else {
+                Plan { blackhole: true, ..Plan::CLEAN }
+            }
+        }
+    }
+}
+
+/// What the proxy did, for reports and test assertions.
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    pub conns: AtomicU64,
+    pub clean: AtomicU64,
+    pub resets: AtomicU64,
+    pub truncations: AtomicU64,
+    pub blackholes: AtomicU64,
+    pub delayed: AtomicU64,
+    pub dripped: AtomicU64,
+}
+
+impl ChaosStats {
+    pub fn faulted(&self) -> u64 {
+        self.resets.load(Ordering::Relaxed)
+            + self.truncations.load(Ordering::Relaxed)
+            + self.blackholes.load(Ordering::Relaxed)
+    }
+}
+
+/// One proxied connection: client-side socket, upstream socket, the two
+/// forwarding buffers and the plan's progress state.
+struct Pipe {
+    client: TcpStream,
+    upstream: TcpStream,
+    plan: Plan,
+    opened: Instant,
+    /// client → upstream bytes awaiting forwarding.
+    c2u: Vec<u8>,
+    /// upstream → client bytes awaiting forwarding.
+    u2c: Vec<u8>,
+    /// Response bytes already forwarded to the client (the reset /
+    /// truncate trigger input).
+    u2c_forwarded: u64,
+    /// When the first (not-yet-released) response byte arrived — the
+    /// latency plan holds forwarding until `first_resp + delay`.
+    first_resp: Option<Instant>,
+    /// Shared drip budget for this tick, both directions.
+    drip_budget: usize,
+    client_eof: bool,
+    upstream_eof: bool,
+    /// Terminal action decided; sockets are dropped after this tick.
+    done: bool,
+}
+
+impl Pipe {
+    fn new(client: TcpStream, upstream: TcpStream, plan: Plan) -> Pipe {
+        Pipe {
+            client,
+            upstream,
+            plan,
+            opened: Instant::now(),
+            c2u: Vec::new(),
+            u2c: Vec::new(),
+            u2c_forwarded: 0,
+            first_resp: None,
+            drip_budget: 0,
+            client_eof: false,
+            upstream_eof: false,
+            done: false,
+        }
+    }
+
+    /// May the response side release bytes this tick?
+    fn response_released(&self, now: Instant) -> bool {
+        match (self.plan.delay, self.first_resp) {
+            (Some(d), Some(t0)) => now.duration_since(t0) >= d,
+            _ => true,
+        }
+    }
+
+    /// Bytes this direction may forward right now under the drip plan.
+    fn budget(&self, want: usize) -> usize {
+        match self.plan.drip {
+            Some(_) => want.min(self.drip_budget),
+            None => want,
+        }
+    }
+}
+
+/// Read as much as fits into `buf` (up to `BUF_CAP`) without blocking.
+/// Returns whether the peer reached EOF.
+fn pump_in(src: &mut TcpStream, buf: &mut Vec<u8>) -> Result<bool> {
+    let mut tmp = [0u8; 4096];
+    while buf.len() < BUF_CAP {
+        match src.read(&mut tmp) {
+            Ok(0) => return Ok(true),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("chaos read"),
+        }
+    }
+    Ok(false)
+}
+
+/// Write up to `limit` bytes of `buf` without blocking; drains what was
+/// accepted.  Returns bytes written.
+fn pump_out(dst: &mut TcpStream, buf: &mut Vec<u8>, limit: usize) -> Result<usize> {
+    let mut wrote = 0usize;
+    while wrote < limit && wrote < buf.len() {
+        let end = limit.min(buf.len());
+        match dst.write(&buf[wrote..end]) {
+            Ok(0) => bail!("chaos write returned zero"),
+            Ok(n) => wrote += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("chaos write"),
+        }
+    }
+    buf.drain(..wrote);
+    Ok(wrote)
+}
+
+#[cfg(unix)]
+mod sys {
+    //! `setsockopt(SO_LINGER, {1, 0})` so dropping the socket emits RST
+    //! instead of FIN — std's `TcpStream::set_linger` is unstable, so
+    //! the one constant pair per platform is declared by hand, in the
+    //! same spirit as `util::poll`.
+
+    #[repr(C)]
+    struct Linger {
+        l_onoff: i32,
+        l_linger: i32,
+    }
+
+    #[cfg(target_os = "macos")]
+    const SOL_SOCKET: i32 = 0xffff;
+    #[cfg(not(target_os = "macos"))]
+    const SOL_SOCKET: i32 = 1;
+    #[cfg(target_os = "macos")]
+    const SO_LINGER: i32 = 0x0080;
+    #[cfg(not(target_os = "macos"))]
+    const SO_LINGER: i32 = 13;
+
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            optname: i32,
+            optval: *const core::ffi::c_void,
+            optlen: u32,
+        ) -> i32;
+    }
+
+    /// Arm the socket so the coming `drop` sends RST (best-effort).
+    pub fn arm_reset(stream: &std::net::TcpStream) {
+        use std::os::fd::AsRawFd;
+        let lg = Linger { l_onoff: 1, l_linger: 0 };
+        unsafe {
+            setsockopt(
+                stream.as_raw_fd(),
+                SOL_SOCKET,
+                SO_LINGER,
+                &lg as *const Linger as *const core::ffi::c_void,
+                std::mem::size_of::<Linger>() as u32,
+            );
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    /// Non-unix fallback: a clean close stands in for the RST.
+    pub fn arm_reset(_stream: &std::net::TcpStream) {}
+}
+
+/// The running proxy: a listener thread pumping [`Pipe`]s until
+/// shutdown.  `Drop` shuts it down.
+pub struct ChaosProxy {
+    addr: SocketAddr,
+    stats: Arc<ChaosStats>,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ChaosProxy {
+    /// Bind an ephemeral local port and start proxying to `upstream`
+    /// with faults drawn from `(seed, profile)`.
+    pub fn start(upstream: SocketAddr, seed: u64, profile: Profile) -> Result<ChaosProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("chaos bind")?;
+        let addr = listener.local_addr().context("chaos local_addr")?;
+        listener.set_nonblocking(true).context("chaos listener nonblocking")?;
+        let stats = Arc::new(ChaosStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stats = Arc::clone(&stats);
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("pbsp-chaos".into())
+                .spawn(move || run_loop(listener, upstream, seed, profile, &stats, &shutdown))
+                .context("spawn chaos thread")?
+        };
+        Ok(ChaosProxy { addr, stats, shutdown, handle: Some(handle) })
+    }
+
+    /// Where the fleet should connect.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &ChaosStats {
+        &self.stats
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ChaosProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_loop(
+    listener: TcpListener,
+    upstream: SocketAddr,
+    seed: u64,
+    profile: Profile,
+    stats: &ChaosStats,
+    shutdown: &AtomicBool,
+) {
+    let mut pipes: Vec<Pipe> = Vec::new();
+    let mut conn_ordinal = 0u64;
+    while !shutdown.load(Ordering::SeqCst) {
+        // Accept everything pending; each accept draws the next plan.
+        loop {
+            match listener.accept() {
+                Ok((client, _)) => {
+                    let plan = plan_for(seed, conn_ordinal, profile);
+                    conn_ordinal += 1;
+                    stats.conns.fetch_add(1, Ordering::Relaxed);
+                    if plan.is_clean() {
+                        stats.clean.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if plan.delay.is_some() {
+                        stats.delayed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if plan.drip.is_some() {
+                        stats.dripped.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // The upstream is local and live; a bounded connect
+                    // keeps a dead upstream from wedging the loop.
+                    let up = match TcpStream::connect_timeout(&upstream, Duration::from_secs(2)) {
+                        Ok(s) => s,
+                        Err(_) => continue, // drop the client; it will retry
+                    };
+                    if client.set_nonblocking(true).is_err() || up.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = client.set_nodelay(true);
+                    let _ = up.set_nodelay(true);
+                    pipes.push(Pipe::new(client, up, plan));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+
+        // Poll: listener + both fds of every pipe.
+        let mut fds = Vec::with_capacity(1 + pipes.len() * 2);
+        fds.push(PollFd::new(fd_of(&listener), true, false));
+        for p in &pipes {
+            let budget_open = p.plan.drip.is_none() || p.drip_budget > 0;
+            let release = p.response_released(Instant::now());
+            fds.push(PollFd::new(
+                fd_of(&p.client),
+                !p.client_eof && p.c2u.len() < BUF_CAP,
+                !p.u2c.is_empty() && budget_open && release && !p.plan.blackhole,
+            ));
+            fds.push(PollFd::new(
+                fd_of(&p.upstream),
+                !p.upstream_eof && p.u2c.len() < BUF_CAP,
+                !p.c2u.is_empty() && budget_open,
+            ));
+        }
+        let _ = poll(&mut fds, TICK);
+
+        let now = Instant::now();
+        for p in pipes.iter_mut() {
+            // Replenish the drip budget once per tick.
+            if let Some(d) = p.plan.drip {
+                p.drip_budget = d;
+            }
+            if drive(p, now, stats).is_err() {
+                p.done = true;
+            }
+        }
+        pipes.retain(|p| !p.done);
+    }
+    // Shutdown: drop every pipe (blackholes close here at the latest).
+}
+
+/// Advance one pipe one tick.  Any io error tears the pipe down.
+fn drive(p: &mut Pipe, now: Instant, stats: &ChaosStats) -> Result<()> {
+    if now.duration_since(p.opened) > MAX_CONN_AGE {
+        p.done = true;
+        return Ok(());
+    }
+
+    // Ingest both directions (bounded by BUF_CAP).
+    if !p.client_eof {
+        p.client_eof = pump_in(&mut p.client, &mut p.c2u)?;
+    }
+    if !p.upstream_eof {
+        let had = p.u2c.len();
+        p.upstream_eof = pump_in(&mut p.upstream, &mut p.u2c)?;
+        if p.u2c.len() > had && p.first_resp.is_none() {
+            p.first_resp = Some(now);
+        }
+    }
+
+    // Blackhole: the request flows upstream, the response never comes
+    // back; hold (so the client's own timeout is what ends the wait),
+    // then close.
+    if p.plan.blackhole {
+        p.u2c.clear();
+        let limit = p.budget(p.c2u.len());
+        pump_out(&mut p.upstream, &mut p.c2u, limit)?;
+        if p.first_resp.map(|t| now.duration_since(t) >= BLACKHOLE_HOLD).unwrap_or(false)
+            || p.client_eof
+        {
+            stats.blackholes.fetch_add(1, Ordering::Relaxed);
+            p.done = true;
+        }
+        return Ok(());
+    }
+
+    // Request direction (client → upstream).
+    let limit = p.budget(p.c2u.len());
+    let wrote = pump_out(&mut p.upstream, &mut p.c2u, limit)?;
+    if p.plan.drip.is_some() {
+        p.drip_budget -= wrote.min(p.drip_budget);
+    }
+    if p.client_eof && p.c2u.is_empty() {
+        let _ = p.upstream.shutdown(std::net::Shutdown::Write);
+    }
+
+    // Response direction (upstream → client), where the mid-body
+    // triggers live.
+    if p.response_released(now) && !p.u2c.is_empty() {
+        let mut limit = p.budget(p.u2c.len());
+        // Stop exactly at the reset/truncate threshold so the fault
+        // lands mid-body, not at a message boundary.
+        for threshold in [p.plan.reset_after, p.plan.truncate_after].into_iter().flatten() {
+            let left = threshold.saturating_sub(p.u2c_forwarded) as usize;
+            limit = limit.min(left);
+        }
+        let wrote = pump_out(&mut p.client, &mut p.u2c, limit)?;
+        p.u2c_forwarded += wrote as u64;
+        if p.plan.drip.is_some() {
+            p.drip_budget -= wrote.min(p.drip_budget);
+        }
+        if let Some(t) = p.plan.reset_after {
+            if p.u2c_forwarded >= t {
+                // Dropping the pipe closes the socket; SO_LINGER{1,0}
+                // turns that close into an RST mid-body.
+                sys::arm_reset(&p.client);
+                stats.resets.fetch_add(1, Ordering::Relaxed);
+                p.done = true;
+                return Ok(());
+            }
+        }
+        if let Some(t) = p.plan.truncate_after {
+            if p.u2c_forwarded >= t {
+                stats.truncations.fetch_add(1, Ordering::Relaxed);
+                p.done = true;
+                return Ok(());
+            }
+        }
+    }
+
+    // Natural end: both sides quiesced.
+    if p.upstream_eof && p.u2c.is_empty() {
+        p.done = true;
+    }
+    if p.client_eof && p.c2u.is_empty() && p.u2c.is_empty() {
+        p.done = true;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    /// A trivial upstream: accepts one connection at a time, reads one
+    /// line-sized request chunk, answers with `reply` bytes.
+    fn one_shot_upstream(reply: Vec<u8>, times: usize) -> SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for _ in 0..times {
+                let Ok((mut s, _)) = listener.accept() else { return };
+                let mut buf = [0u8; 1024];
+                let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
+                let _ = s.read(&mut buf);
+                let _ = s.write_all(&reply);
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn plans_are_pure_functions_of_seed_and_conn() {
+        for profile in [Profile::Mix, Profile::Resets, Profile::Drip, Profile::Stall] {
+            for conn in 0..64 {
+                assert_eq!(
+                    plan_for(7, conn, profile),
+                    plan_for(7, conn, profile),
+                    "plan must be deterministic"
+                );
+            }
+        }
+        // Different seeds draw different plan sequences (mix profile).
+        let a: Vec<Plan> = (0..64).map(|c| plan_for(1, c, Profile::Mix)).collect();
+        let b: Vec<Plan> = (0..64).map(|c| plan_for(2, c, Profile::Mix)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn mix_profile_keeps_a_clean_majority_but_draws_every_fault() {
+        let plans: Vec<Plan> = (0..1000).map(|c| plan_for(7, c, Profile::Mix)).collect();
+        let clean = plans.iter().filter(|p| p.is_clean()).count();
+        assert!(clean > 400 && clean < 700, "clean {clean}/1000");
+        assert!(plans.iter().any(|p| p.reset_after.is_some()));
+        assert!(plans.iter().any(|p| p.truncate_after.is_some()));
+        assert!(plans.iter().any(|p| p.drip.is_some()));
+        assert!(plans.iter().any(|p| p.delay.is_some()));
+        assert!(plans.iter().any(|p| p.blackhole));
+    }
+
+    #[test]
+    fn profile_parses_and_rejects() {
+        assert_eq!("mix".parse::<Profile>().unwrap(), Profile::Mix);
+        assert_eq!("RESETS".parse::<Profile>().unwrap(), Profile::Resets);
+        assert_eq!("blackhole".parse::<Profile>().unwrap(), Profile::Stall);
+        assert!("tornado".parse::<Profile>().is_err());
+    }
+
+    #[test]
+    fn clean_profile_passes_bytes_through_unchanged() {
+        let reply = b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\n\r\nok".to_vec();
+        let upstream = one_shot_upstream(reply.clone(), 1);
+        let mut proxy = ChaosProxy::start(upstream, 7, Profile::Clean).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+        c.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < reply.len() && Instant::now() < deadline {
+            let mut tmp = [0u8; 256];
+            match c.read(&mut tmp) {
+                Ok(0) => break,
+                Ok(n) => got.extend_from_slice(&tmp[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {}
+                Err(e) => panic!("clean read failed: {e}"),
+            }
+        }
+        assert_eq!(got, reply, "clean profile must not alter bytes");
+        assert_eq!(proxy.stats().faulted(), 0);
+        proxy.shutdown();
+    }
+
+    /// A plan with `reset_after`/`truncate_after` kills the connection
+    /// partway: the client sees an error or EOF before the full reply.
+    #[test]
+    fn faulting_profiles_cut_responses_short() {
+        // A reply comfortably larger than any mid-body threshold.
+        let reply = vec![b'z'; 4096];
+        // Find a conn ordinal whose Resets plan actually resets, then
+        // drive exactly that many connections so the last one faults.
+        let seed = 7u64;
+        let target =
+            (0..64).find(|&c| plan_for(seed, c, Profile::Resets).reset_after.is_some()).unwrap();
+        let upstream = one_shot_upstream(reply.clone(), target as usize + 1);
+        let mut proxy = ChaosProxy::start(upstream, seed, Profile::Resets).unwrap();
+        let mut cut_short = false;
+        for _ in 0..=target {
+            let mut c = TcpStream::connect(proxy.addr()).unwrap();
+            c.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+            c.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+            let mut got = 0usize;
+            let deadline = Instant::now() + Duration::from_secs(5);
+            loop {
+                let mut tmp = [0u8; 1024];
+                match c.read(&mut tmp) {
+                    Ok(0) => break,
+                    Ok(n) => got += n,
+                    Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                        if Instant::now() > deadline {
+                            break;
+                        }
+                    }
+                    Err(_) => break, // RST shows up as ECONNRESET
+                }
+            }
+            if got < reply.len() {
+                cut_short = true;
+            }
+        }
+        assert!(cut_short, "at least the faulting connection must be cut short");
+        assert!(proxy.stats().resets.load(Ordering::Relaxed) > 0, "reset must be counted");
+        proxy.shutdown();
+    }
+
+    /// Blackhole: request forwarded, response swallowed — a bounded
+    /// client errors out in its own time; the proxy survives.
+    #[test]
+    fn blackhole_swallows_the_response() {
+        let reply = b"HTTP/1.1 200 OK\r\ncontent-length: 0\r\n\r\n".to_vec();
+        let seed = 7u64;
+        let target = (0..64).find(|&c| plan_for(seed, c, Profile::Stall).blackhole).unwrap();
+        let upstream = one_shot_upstream(reply, target as usize + 1);
+        let mut proxy = ChaosProxy::start(upstream, seed, Profile::Stall).unwrap();
+        // Burn the non-blackhole ordinals.
+        for _ in 0..target {
+            let mut c = TcpStream::connect(proxy.addr()).unwrap();
+            c.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+            let _ = c.write_all(b"GET / HTTP/1.1\r\n\r\n");
+            let mut tmp = [0u8; 256];
+            let _ = c.read(&mut tmp);
+        }
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        c.set_read_timeout(Some(Duration::from_millis(150))).unwrap();
+        c.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let t0 = Instant::now();
+        let mut tmp = [0u8; 256];
+        let r = c.read(&mut tmp);
+        let bounded = t0.elapsed() < Duration::from_secs(2);
+        let starved = matches!(r, Err(ref e)
+            if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut))
+            || matches!(r, Ok(0));
+        assert!(bounded && starved, "blackholed read must starve within its timeout: {r:?}");
+        proxy.shutdown();
+    }
+}

@@ -464,6 +464,7 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
+        504 => "Gateway Timeout",
         _ => "Status",
     }
 }
@@ -472,21 +473,51 @@ fn reason(status: u16) -> &'static str {
 // Client (the device side: loadgen, tests, examples)
 // ---------------------------------------------------------------------------
 
+/// Socket budgets for [`Client`].  Every phase of a request — connect,
+/// write, response wait — is bounded, so a blackholed or stalled server
+/// costs the caller a bounded error, never a hang (ISSUE 10: the
+/// pre-existing `TcpStream::connect` call and the hard-coded response
+/// wait were the last unbounded client operations).
+#[derive(Debug, Clone, Copy)]
+pub struct ClientConfig {
+    pub connect_timeout: Duration,
+    /// Budget from request written to response framed; also the
+    /// mid-message deadline for a response that starts arriving and
+    /// then stalls.
+    pub response_timeout: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> ClientConfig {
+        ClientConfig {
+            connect_timeout: Duration::from_secs(3),
+            response_timeout: Duration::from_secs(15),
+        }
+    }
+}
+
 /// A minimal keep-alive HTTP client over one connection.
 pub struct Client {
     conn: HttpConn,
+    response_timeout: Duration,
 }
 
 impl Client {
     pub fn connect(addr: SocketAddr) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    pub fn connect_with(addr: SocketAddr, cfg: ClientConfig) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(&addr, cfg.connect_timeout)
+            .with_context(|| format!("connect {addr}"))?;
         stream.set_nodelay(true).context("set_nodelay")?;
-        stream.set_write_timeout(Some(MID_MESSAGE_DEADLINE)).context("set_write_timeout")?;
-        let conn = HttpConn::new(stream);
+        stream.set_write_timeout(Some(cfg.response_timeout)).context("set_write_timeout")?;
+        let mut conn = HttpConn::new(stream);
+        conn.set_msg_deadline(cfg.response_timeout);
         // Per-read tick; request() keeps waiting while a response is
-        // outstanding, so the effective budget is MID_MESSAGE_DEADLINE.
+        // outstanding, so the effective budget is `response_timeout`.
         conn.set_read_timeout(Duration::from_millis(100))?;
-        Ok(Client { conn })
+        Ok(Client { conn, response_timeout: cfg.response_timeout })
     }
 
     pub fn get(&mut self, path: &str) -> Result<(u16, String)> {
@@ -504,11 +535,29 @@ impl Client {
         path: &str,
         body: Option<&str>,
     ) -> Result<(u16, String)> {
+        let (status, _, text) = self.request_meta(method, path, body, &[])?;
+        Ok((status, text))
+    }
+
+    /// [`Client::request`] exposing the response headers (retry logic
+    /// needs `Retry-After`) and taking extra request headers (deadline
+    /// propagation sends `X-Deadline-Ms`).
+    pub fn request_meta(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        extra_headers: &[(&str, String)],
+    ) -> Result<(u16, BTreeMap<String, String>, String)> {
         let body = body.unwrap_or("");
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nhost: pbsp\r\ncontent-length: {}\r\n\r\n",
-            body.len()
-        );
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: pbsp\r\n");
+        for (k, v) in extra_headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
         self.conn.write_all(head.as_bytes())?;
         self.conn.write_all(body.as_bytes())?;
         let started = Instant::now();
@@ -522,12 +571,12 @@ impl Client {
                         .and_then(|s| s.parse::<u16>().ok())
                         .ok_or_else(|| anyhow!("bad status line {:?}", m.start_line))?;
                     let text = String::from_utf8(m.body).context("non-UTF-8 response body")?;
-                    return Ok((status, text));
+                    return Ok((status, m.headers, text));
                 }
                 Outcome::Closed => bail!("server closed the connection"),
                 Outcome::Idle => {
-                    if started.elapsed() > MID_MESSAGE_DEADLINE {
-                        bail!("no response within {MID_MESSAGE_DEADLINE:?}");
+                    if started.elapsed() > self.response_timeout {
+                        bail!("no response within {:?}", self.response_timeout);
                     }
                 }
             }
@@ -729,6 +778,61 @@ mod tests {
         assert!(m.start_line.contains("503"));
         assert_eq!(m.headers["retry-after"], "2");
         assert_eq!(m.headers["connection"], "close");
+    }
+
+    /// Satellite (ISSUE 10): a server that accepts and then never
+    /// responds (blackhole) costs the client a bounded error, not a
+    /// hang.  The listener never accepts — the connection sits in the
+    /// backlog, the write buffers, and the response wait must trip.
+    #[test]
+    fn client_response_timeout_bounds_a_blackholed_server() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = ClientConfig {
+            connect_timeout: Duration::from_secs(2),
+            response_timeout: Duration::from_millis(200),
+        };
+        let mut c = Client::connect_with(addr, cfg).unwrap();
+        let t0 = Instant::now();
+        let err = c.get("/healthz").expect_err("blackholed server must time out");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timeout must trip near the configured budget, waited {:?}",
+            t0.elapsed()
+        );
+        assert!(err.to_string().contains("no response"), "unexpected error: {err:#}");
+        drop(listener);
+    }
+
+    /// Extra request headers go out on the wire; response headers come
+    /// back through `request_meta`.
+    #[test]
+    fn request_meta_carries_headers_both_ways() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            stream.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+            let mut conn = HttpConn::new(stream);
+            let m = loop {
+                match conn.read_message().unwrap() {
+                    Outcome::Message(m) => break m,
+                    Outcome::Idle => continue,
+                    Outcome::Closed => panic!("unexpected close"),
+                }
+            };
+            assert_eq!(m.headers["x-deadline-ms"], "250");
+            let mut r = Response::error(503, "busy");
+            r.retry_after = Some(7);
+            r.write_to(&mut conn, true).unwrap();
+        });
+        let mut c = Client::connect(addr).unwrap();
+        let (status, headers, _body) = c
+            .request_meta("POST", "/x", Some("{}"), &[("x-deadline-ms", "250".to_string())])
+            .unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(headers["retry-after"], "7");
+        server.join().unwrap();
     }
 
     /// The configurable mid-message deadline trips on a stalled drip.

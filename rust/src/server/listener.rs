@@ -63,6 +63,16 @@ pub struct ServerConfig {
     pub trace_sample: u64,
     /// Where sampled spans go as JSON lines; `None` writes to stderr.
     pub trace_log: Option<String>,
+    /// Deadline budget applied to requests that carry no `X-Deadline-Ms`
+    /// header (0 = no default; only the header arms a deadline).
+    pub default_deadline_ms: u64,
+    /// Brownout high watermark on in-flight requests: at or above it the
+    /// router downshifts eligible score requests to the next-lower
+    /// precision variant (0 disables brownout).
+    pub brownout_high: usize,
+    /// Brownout low watermark: brownout clears once in-flight falls to
+    /// or below it (defaults to `brownout_high / 2` when 0).
+    pub brownout_low: usize,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +87,9 @@ impl Default for ServerConfig {
             write_stall_ms: 10_000,
             trace_sample: 0,
             trace_log: None,
+            default_deadline_ms: 0,
+            brownout_high: 0,
+            brownout_low: 0,
         }
     }
 }
@@ -113,6 +126,29 @@ pub struct ServerMetrics {
     /// Connections evicted because a pending response made no write
     /// progress for `write_stall_ms` (peer stopped reading).
     pub evicted_write: AtomicU64,
+    /// Requests shed with 504 at pool pickup: their deadline had already
+    /// passed before the handler ran (no compute was spent).
+    pub deadline_shed: AtomicU64,
+    /// Requests shed with 504 inside the coordinator's dynamic batcher
+    /// (their deadline passed while they waited to be batched).
+    pub deadline_shed_batch: AtomicU64,
+    /// Score responses served at a lower precision than requested
+    /// because the server was in brownout.
+    pub degraded: AtomicU64,
+    /// Transitions into brownout (hysteresis: high watermark crossed).
+    pub brownout_entered: AtomicU64,
+    /// State: currently above the brownout watermarks (drives the
+    /// degradation router and `/readyz`).
+    pub brownout: AtomicBool,
+    /// State: shutdown drain has begun (`/readyz` turns 503).
+    pub draining: AtomicBool,
+    /// Gauge: requests currently on (or queued for) the compute pool,
+    /// published by the reactor once per loop round.
+    pub inflight: AtomicU64,
+    /// The configured `max_connections` / `max_queued`, published by
+    /// `Server::start` so `/readyz` can judge over-capacity.
+    pub limit_connections: AtomicU64,
+    pub limit_queued: AtomicU64,
 }
 
 impl ServerMetrics {
@@ -149,6 +185,13 @@ impl ServerMetrics {
             ("evicted_idle", get(&self.evicted_idle)),
             ("evicted_read", get(&self.evicted_read)),
             ("evicted_write", get(&self.evicted_write)),
+            ("deadline_shed", get(&self.deadline_shed)),
+            ("deadline_shed_batch", get(&self.deadline_shed_batch)),
+            ("degraded", get(&self.degraded)),
+            ("brownout_entered", get(&self.brownout_entered)),
+            ("brownout", Value::from(self.brownout.load(Ordering::Relaxed))),
+            ("draining", Value::from(self.draining.load(Ordering::Relaxed))),
+            ("inflight", get(&self.inflight)),
         ])
     }
 }
@@ -174,6 +217,8 @@ impl Server {
         let addr = listener.local_addr().context("local_addr")?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(ServerMetrics::default());
+        metrics.limit_connections.store(cfg.max_connections.max(1) as u64, Ordering::Relaxed);
+        metrics.limit_queued.store(cfg.max_queued.max(1) as u64, Ordering::Relaxed);
         let pool = Arc::new(ThreadPool::new(cfg.http_threads.max(1)));
         let shared = Arc::new(ReactorShared::new()?);
         let rcfg = ReactorConfig {
@@ -184,6 +229,13 @@ impl Server {
             max_queued: cfg.max_queued.max(1),
             shutdown_grace: SHUTDOWN_GRACE,
             trace_sample: cfg.trace_sample,
+            default_deadline_ms: cfg.default_deadline_ms,
+            brownout_high: cfg.brownout_high,
+            brownout_low: if cfg.brownout_low == 0 && cfg.brownout_high > 0 {
+                cfg.brownout_high / 2
+            } else {
+                cfg.brownout_low
+            },
         };
         let sink = if cfg.trace_sample > 0 {
             Some(Arc::new(TraceSink::open(cfg.trace_log.as_deref())?))
@@ -273,6 +325,13 @@ mod tests {
             "evicted_idle",
             "evicted_read",
             "evicted_write",
+            "deadline_shed",
+            "deadline_shed_batch",
+            "degraded",
+            "brownout_entered",
+            "brownout",
+            "draining",
+            "inflight",
         ] {
             assert!(v.opt(key).is_some(), "metrics JSON must carry {key}");
         }

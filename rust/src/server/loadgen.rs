@@ -4,13 +4,16 @@
 //! sockets.
 //!
 //! Deterministic by construction: device `d` draws its model mix and
-//! sample indices from its own PCG stream `Pcg32::new(seed, d)`, and
+//! sample indices from its own PCG stream `Pcg32::new(seed, d)`,
 //! think-times from a *separate* stream (`Pcg32::new(seed, fleet + d)`)
-//! so the request sequence depends only on
+//! and retry-backoff jitter from a third (`Pcg32::new(seed,
+//! 2*fleet + d)`) so the request sequence depends only on
 //! (seed, fleet, requests_per_device) — never on think_ms, arrival
-//! mode, worker sharding or response timing.  The e2e test replays
-//! every recorded request through direct `Service::submit` and asserts
-//! bit-identical scores ([`verify`]).
+//! mode, worker sharding, retries or response timing.  The e2e test
+//! replays every recorded request through direct `Service::submit` and
+//! asserts bit-identical scores ([`verify`]) — each record at the
+//! precision it was *actually served* at, so a brownout-degraded
+//! response verifies against the lower-precision variant it claims.
 //!
 //! Two arrival modes:
 //!
@@ -65,6 +68,13 @@ pub struct LoadgenConfig {
     /// Client worker threads the devices are sharded onto
     /// (0 = `min(fleet, 64)`).
     pub client_workers: usize,
+    /// Per-request deadline sent as `X-Deadline-Ms` (0 = none).  A 504
+    /// back is counted as a deadline miss, not an error.
+    pub deadline_ms: u64,
+    /// Total tries per request (first attempt + retries).  Transport
+    /// failures and 503 backpressure retry with seeded backoff; any
+    /// other non-200 fails immediately.
+    pub attempts: usize,
 }
 
 impl Default for LoadgenConfig {
@@ -77,6 +87,8 @@ impl Default for LoadgenConfig {
             precision: 8,
             open_rps: 0.0,
             client_workers: 0,
+            deadline_ms: 0,
+            attempts: 3,
         }
     }
 }
@@ -102,6 +114,12 @@ pub struct DeviceRecord {
     pub sample: usize,
     pub scores: Vec<f64>,
     pub latency_ms: f64,
+    /// Precision the server says it served (may be lower than requested
+    /// under brownout) — [`verify`] replays against this, so a lying
+    /// label fails the bit-compare.
+    pub precision: u32,
+    /// Whether the server flagged this response as brownout-degraded.
+    pub degraded: bool,
 }
 
 /// Aggregate fleet results.
@@ -113,6 +131,13 @@ pub struct Report {
     /// an all-fail run names its cause instead of reporting bare
     /// counts.
     pub first_error: Option<String>,
+    /// Requests the server 504'd past their deadline — an overload
+    /// outcome, not an error.
+    pub deadline_misses: usize,
+    /// Successful responses served at a lower precision under brownout.
+    pub degraded: usize,
+    /// Extra attempts spent on transport failures and 503 backpressure.
+    pub retries: usize,
     pub wall_s: f64,
     pub rps: f64,
     pub p50_ms: f64,
@@ -130,6 +155,8 @@ impl Report {
         records: Vec<DeviceRecord>,
         errors: usize,
         first_error: Option<String>,
+        deadline_misses: usize,
+        retries: usize,
         wall_s: f64,
         cfg: &LoadgenConfig,
     ) -> Report {
@@ -144,9 +171,12 @@ impl Report {
             p50_ms: pct(50.0),
             p90_ms: pct(90.0),
             p99_ms: pct(99.0),
+            degraded: records.iter().filter(|r| r.degraded).count(),
             records,
             errors,
             first_error,
+            deadline_misses,
+            retries,
             wall_s,
             server_metrics: None,
             cfg: cfg.clone(),
@@ -154,9 +184,11 @@ impl Report {
     }
 
     pub fn summary(&self) -> String {
+        let attempted = self.records.len() + self.errors + self.deadline_misses;
         let mut s = format!(
             "loadgen: fleet {} x {} requests ({}) -> {} ok, errors {}, wall {:.3}s, {:.0} req/s\n\
-             latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+             latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms\n\
+             overload: deadline misses {} ({:.1}%)  degraded serves {}  retries {}",
             self.cfg.fleet,
             self.cfg.requests_per_device,
             self.mode(),
@@ -166,7 +198,11 @@ impl Report {
             self.rps,
             self.p50_ms,
             self.p90_ms,
-            self.p99_ms
+            self.p99_ms,
+            self.deadline_misses,
+            100.0 * self.deadline_misses as f64 / attempted.max(1) as f64,
+            self.degraded,
+            self.retries
         );
         if let Some(e) = &self.first_error {
             s.push_str(&format!("\nfirst error: {e}"));
@@ -196,6 +232,9 @@ impl Report {
             ("mode", Value::from(self.mode().as_str())),
             ("ok", Value::from(self.records.len())),
             ("errors", Value::from(self.errors)),
+            ("deadline_misses", Value::from(self.deadline_misses)),
+            ("degraded", Value::from(self.degraded)),
+            ("retries", Value::from(self.retries)),
             (
                 "first_error",
                 match &self.first_error {
@@ -268,12 +307,15 @@ struct DeviceState {
     device: usize,
     rng: Pcg32,
     think_rng: Pcg32,
+    backoff: Backoff,
     client: Option<Client>,
     seq: usize,
     /// Earliest time the next request may launch.
     next_at: Instant,
     records: Vec<DeviceRecord>,
     errors: usize,
+    deadline_misses: usize,
+    retries: usize,
     first_error: Option<String>,
 }
 
@@ -321,27 +363,47 @@ pub fn run(addr: SocketAddr, cfg: &LoadgenConfig) -> Result<Report> {
         .collect::<Result<_>>()?;
     let mut records = Vec::with_capacity(cfg.fleet * cfg.requests_per_device);
     let mut errors = 0usize;
+    let mut deadline_misses = 0usize;
+    let mut retries = 0usize;
     let mut first_error: Option<String> = None;
     for h in handles {
-        let (recs, errs, first) = h.join().map_err(|_| anyhow!("loadgen worker panicked"))?;
-        records.extend(recs);
-        errors += errs;
+        let t = h.join().map_err(|_| anyhow!("loadgen worker panicked"))?;
+        records.extend(t.records);
+        errors += t.errors;
+        deadline_misses += t.deadline_misses;
+        retries += t.retries;
         if first_error.is_none() {
-            first_error = first;
+            first_error = t.first_error;
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();
     records.sort_by_key(|r: &DeviceRecord| (r.device, r.seq));
-    let mut report = Report::new(records, errors, first_error, wall_s, cfg);
+    let mut report = Report::new(records, errors, first_error, deadline_misses, retries, wall_s, cfg);
     // Scrape the frontend's /metrics while it is still listening so the
     // JSON artifact carries the server-side view of the run (`verify`
     // reconciles it against the fleet's own counts).  Best-effort: a
     // failed scrape leaves the field null, it never fails a done run.
-    report.server_metrics = Client::connect(addr)
+    report.server_metrics = scrape_metrics(addr);
+    Ok(report)
+}
+
+/// Best-effort `/metrics` scrape (`None` on any failure).  Exposed so a
+/// chaos-proxied run can re-scrape the *direct* server address — the
+/// fleet's own scrape would ride the proxy and might get faulted.
+pub fn scrape_metrics(addr: SocketAddr) -> Option<Value> {
+    Client::connect(addr)
         .and_then(|mut c| c.get("/metrics"))
         .ok()
-        .and_then(|(status, text)| if status == 200 { Value::parse(&text).ok() } else { None });
-    Ok(report)
+        .and_then(|(status, text)| if status == 200 { Value::parse(&text).ok() } else { None })
+}
+
+/// What one worker hands back when it joins.
+struct WorkerTotals {
+    records: Vec<DeviceRecord>,
+    errors: usize,
+    deadline_misses: usize,
+    retries: usize,
+    first_error: Option<String>,
 }
 
 /// One worker: interleave its devices by `next_at` schedule, running
@@ -353,7 +415,7 @@ fn worker_loop(
     names: &[String],
     datasets: &[Dataset],
     cfg: &LoadgenConfig,
-) -> (Vec<DeviceRecord>, usize, Option<String>) {
+) -> WorkerTotals {
     // Open-loop: the fleet-wide schedule is `open_rps` evenly spaced,
     // device-interleaved — device d launches at t0 + (d + k*fleet)/rate.
     let interval = if cfg.open_rps > 0.0 {
@@ -367,6 +429,7 @@ fn worker_loop(
             device: d,
             rng: Pcg32::new(cfg.seed, d as u64),
             think_rng: Pcg32::new(cfg.seed, (cfg.fleet + d) as u64),
+            backoff: Backoff::new(Pcg32::new(cfg.seed, (2 * cfg.fleet + d) as u64)),
             client: None,
             seq: 0,
             next_at: match interval {
@@ -375,6 +438,8 @@ fn worker_loop(
             },
             records: Vec::with_capacity(cfg.requests_per_device),
             errors: 0,
+            deadline_misses: 0,
+            retries: 0,
             first_error: None,
         })
         .collect();
@@ -417,17 +482,23 @@ fn worker_loop(
             }
         }
     }
-    let mut records = Vec::new();
-    let mut errors = 0usize;
-    let mut first_error: Option<String> = None;
+    let mut totals = WorkerTotals {
+        records: Vec::new(),
+        errors: 0,
+        deadline_misses: 0,
+        retries: 0,
+        first_error: None,
+    };
     for dev in states {
-        records.extend(dev.records);
-        errors += dev.errors;
-        if first_error.is_none() {
-            first_error = dev.first_error;
+        totals.records.extend(dev.records);
+        totals.errors += dev.errors;
+        totals.deadline_misses += dev.deadline_misses;
+        totals.retries += dev.retries;
+        if totals.first_error.is_none() {
+            totals.first_error = dev.first_error;
         }
     }
-    (records, errors, first_error)
+    totals
 }
 
 /// Execute one request for one device.  Open-loop latency is measured
@@ -444,19 +515,38 @@ fn run_one(
     let (model, sample) = draw_request(&mut dev.rng, datasets);
     let path = format!("/v1/score/{}/p{}", names[model], cfg.precision);
     let body = score_body(&datasets[model].x[sample]);
+    let mut headers: Vec<(&str, String)> = Vec::new();
+    if cfg.deadline_ms > 0 {
+        headers.push(("x-deadline-ms", cfg.deadline_ms.to_string()));
+    }
     let t_start = if cfg.open_rps > 0.0 { dev.next_at } else { Instant::now() };
-    match post_with_retry(&mut dev.client, addr, &path, &body) {
-        Ok(text) => match parse_scores(&text) {
-            Ok(scores) => dev.records.push(DeviceRecord {
+    let outcome = post_with_retry(
+        &mut dev.client,
+        addr,
+        &path,
+        &body,
+        &headers,
+        cfg.attempts.max(1),
+        &mut dev.backoff,
+        &mut dev.retries,
+    );
+    match outcome {
+        Ok(PostOutcome::Ok(text)) => match parse_response(&text) {
+            Ok((scores, precision, degraded)) => dev.records.push(DeviceRecord {
                 device: dev.device,
                 seq,
                 model,
                 sample,
                 scores,
                 latency_ms: t_start.elapsed().as_secs_f64() * 1e3,
+                precision,
+                degraded,
             }),
             Err(e) => dev.fail(format!("device {}: bad response: {e:#}", dev.device)),
         },
+        // The server shed the request past its deadline: an overload
+        // outcome the report counts separately, not a device error.
+        Ok(PostOutcome::DeadlineMiss) => dev.deadline_misses += 1,
         Err(e) => dev.fail(format!("device {}: {e:#}", dev.device)),
     }
 }
@@ -479,23 +569,70 @@ fn draw_request(rng: &mut Pcg32, datasets: &[Dataset]) -> (usize, usize) {
     (model, sample)
 }
 
-/// POST with transport-failure retries that each *consume an attempt* —
-/// including a failed reconnect (`Client::connect` refusals during
-/// server churn must not abort the whole device loop).  The server
-/// reaps idle keep-alive connections (think-time fleets), so a device
-/// whose connection was reaped reconnects and repeats — safe because
-/// scoring is read-only.  HTTP-level failures (including the server's
-/// 503 backpressure refusals) are deterministic and surface as errors
-/// immediately.
+/// Capped decorrelated-jitter backoff: each delay is drawn uniformly
+/// from `[base, 3 * previous]`, clamped to `cap`, with the server's
+/// `Retry-After` (seconds, also clamped to `cap`) as a floor.  The
+/// draws come from the device's *third* PCG stream, so retry timing
+/// never perturbs the request draws — the fleet's request sequence
+/// stays a pure function of (seed, fleet, requests_per_device) even
+/// under chaos.
+struct Backoff {
+    rng: Pcg32,
+    prev: Duration,
+}
+
+impl Backoff {
+    const BASE: Duration = Duration::from_millis(10);
+    const CAP: Duration = Duration::from_millis(500);
+
+    fn new(rng: Pcg32) -> Backoff {
+        Backoff { rng, prev: Self::BASE }
+    }
+
+    fn next_delay(&mut self, retry_after_s: Option<u64>) -> Duration {
+        let hi = (self.prev * 3).min(Self::CAP).max(Self::BASE);
+        let span_ms = (hi.as_millis() as u64).saturating_sub(Self::BASE.as_millis() as u64);
+        let jitter = Duration::from_millis(if span_ms == 0 { 0 } else { self.rng.below(span_ms + 1) });
+        let mut delay = (Self::BASE + jitter).min(Self::CAP);
+        if let Some(s) = retry_after_s {
+            delay = delay.max(Duration::from_secs(s).min(Self::CAP));
+        }
+        self.prev = delay;
+        delay
+    }
+}
+
+/// How one POST resolved, retries included.
+enum PostOutcome {
+    /// 200 with its body.
+    Ok(String),
+    /// The server 504'd: the request's deadline expired before (or in)
+    /// the compute pool.  Never retried — the budget is already spent.
+    DeadlineMiss,
+}
+
+/// POST with retries that each *consume an attempt* — transport
+/// failures (including a failed reconnect during server churn; safe
+/// because scoring is read-only) and the server's 503 backpressure
+/// refusals, which back off with seeded decorrelated jitter honouring
+/// `Retry-After`.  504 resolves immediately as a deadline miss; any
+/// other non-200 is a deterministic failure and surfaces at once.
+#[allow(clippy::too_many_arguments)]
 fn post_with_retry(
     client: &mut Option<Client>,
     addr: SocketAddr,
     path: &str,
     body: &str,
-) -> Result<String> {
-    const ATTEMPTS: usize = 2;
+    headers: &[(&str, String)],
+    attempts: usize,
+    backoff: &mut Backoff,
+    retries: &mut usize,
+) -> Result<PostOutcome> {
     let mut last: Option<anyhow::Error> = None;
-    for _attempt in 0..ATTEMPTS {
+    for attempt in 0..attempts {
+        if attempt > 0 {
+            *retries += 1;
+        }
         if client.is_none() {
             match Client::connect(addr) {
                 Ok(c) => *client = Some(c),
@@ -503,23 +640,35 @@ fn post_with_retry(
                     // A transient connect failure consumes this attempt
                     // instead of propagating out of the retry loop.
                     last = Some(e);
+                    std::thread::sleep(backoff.next_delay(None));
                     continue;
                 }
             }
         }
         let c = client.as_mut().expect("client just connected");
-        match c.post(path, body) {
-            Ok((200, text)) => return Ok(text),
-            Ok((status, text)) => bail!("HTTP {status}: {text}"),
+        match c.request_meta("POST", path, Some(body), headers) {
+            Ok((200, _h, text)) => return Ok(PostOutcome::Ok(text)),
+            Ok((504, _h, _text)) => return Ok(PostOutcome::DeadlineMiss),
+            Ok((503, h, text)) => {
+                // Backpressure: retry after the server's hint (if any).
+                // The rejected-busy 503 closes the connection server-side;
+                // a dead keep-alive surfaces as a transport error on the
+                // next attempt and reconnects there.
+                last = Some(anyhow!("HTTP 503: {text}"));
+                let ra = h.get("retry-after").and_then(|v| v.trim().parse::<u64>().ok());
+                std::thread::sleep(backoff.next_delay(ra));
+            }
+            Ok((status, _h, text)) => bail!("HTTP {status}: {text}"),
             Err(e) => {
                 last = Some(e);
                 *client = None; // dead connection: reconnect next attempt
+                std::thread::sleep(backoff.next_delay(None));
             }
         }
     }
     match last {
-        Some(e) => Err(e.context(format!("request failed after {ATTEMPTS} attempts"))),
-        None => bail!("request failed after {ATTEMPTS} attempts"),
+        Some(e) => Err(e.context(format!("request failed after {attempts} attempts"))),
+        None => bail!("request failed after {attempts} attempts"),
     }
 }
 
@@ -528,28 +677,44 @@ fn score_body(x: &[f32]) -> String {
     Value::obj(vec![("x", row)]).to_string()
 }
 
-fn parse_scores(text: &str) -> Result<Vec<f64>> {
-    Value::parse(text)?.get("scores")?.as_f64_vec()
+/// Decode a 200 score response: (scores, served precision, degraded).
+/// The served precision comes from the response's `variant` label —
+/// under brownout it may be lower than the requested one, and `verify`
+/// replays against it.
+fn parse_response(text: &str) -> Result<(Vec<f64>, u32, bool)> {
+    let v = Value::parse(text)?;
+    let scores = v.get("scores")?.as_f64_vec()?;
+    let variant = v.get("variant")?.as_str()?;
+    let precision = variant
+        .strip_prefix('p')
+        .and_then(|d| d.parse::<u32>().ok())
+        .ok_or_else(|| anyhow!("unparseable served variant {variant:?}"))?;
+    let degraded = match v.opt("degraded") {
+        Some(b) => b.as_bool()?,
+        None => false,
+    };
+    Ok((scores, precision, degraded))
 }
 
 /// Replay every fleet record through in-process [`Service::scores`] and
 /// require the HTTP-served scores to be bit-identical (the fleet JSON
-/// round-trips f64 exactly, so any drift is a real divergence).  With
-/// an ISS-backed service this pins the whole chain — HTTP frontend →
-/// reactor → dynamic batcher → batched lockstep ISS — against a direct
-/// in-process run.
-pub fn verify(svc: &Service, report: &Report, precision: u32) -> Result<usize> {
+/// round-trips f64 exactly, so any drift is a real divergence).  Each
+/// record replays at the precision the server *claimed* to serve it at
+/// — a brownout-degraded response must match the lower variant exactly,
+/// so a mislabelled degradation fails here.  With an ISS-backed service
+/// this pins the whole chain — HTTP frontend → reactor → dynamic
+/// batcher → batched lockstep ISS — against a direct in-process run.
+pub fn verify(svc: &Service, report: &Report) -> Result<usize> {
     use crate::coordinator::router::Key;
-    // Group records per model so each replay is one bulk batch.
-    let mut by_model: Vec<Vec<&DeviceRecord>> = vec![Vec::new(); svc.models.len()];
+    use std::collections::BTreeMap;
+    // Group records per (model, served precision) so each replay is one
+    // bulk batch at the right variant.
+    let mut groups: BTreeMap<(usize, u32), Vec<&DeviceRecord>> = BTreeMap::new();
     for r in &report.records {
-        by_model[r.model].push(r);
+        groups.entry((r.model, r.precision)).or_default().push(r);
     }
     let mut checked = 0usize;
-    for (mi, recs) in by_model.iter().enumerate() {
-        if recs.is_empty() {
-            continue;
-        }
+    for (&(mi, precision), recs) in &groups {
         let model = &svc.models[mi];
         let ds = Dataset::load(svc.manifest.data_dir(), &model.dataset, "test")?;
         let xs: Vec<Vec<f32>> = recs.iter().map(|r| ds.x[r.sample].clone()).collect();
@@ -557,11 +722,13 @@ pub fn verify(svc: &Service, report: &Report, precision: u32) -> Result<usize> {
         for (r, g) in recs.iter().zip(&got) {
             if &r.scores != g {
                 bail!(
-                    "verify: device {} seq {} ({} sample {}): served {:?} vs in-process {:?}",
+                    "verify: device {} seq {} ({} sample {} p{}{}): served {:?} vs in-process {:?}",
                     r.device,
                     r.seq,
                     model.name,
                     r.sample,
+                    precision,
+                    if r.degraded { ", degraded" } else { "" },
                     r.scores,
                     g
                 );
@@ -572,14 +739,36 @@ pub fn verify(svc: &Service, report: &Report, precision: u32) -> Result<usize> {
     // Counter reconciliation: every successful fleet record rode one
     // HTTP request, so the server must have counted at least that many
     // (keep-alive probes, retries and the /metrics scrape itself only
-    // push the server-side count higher).
+    // push the server-side count higher).  Same direction for the
+    // overload counters: each client-observed degraded serve / 504 was
+    // counted server-side, and the server may have seen more (responses
+    // the chaos proxy cut off before the client read them).
     if let Some(sm) = &report.server_metrics {
-        let served = sm.get("server")?.get("http_requests")?.as_i64()?;
+        let server = sm.get("server")?;
+        let served = server.get("http_requests")?.as_i64()?;
         if (served as usize) < report.records.len() {
             bail!(
                 "verify: server counted {served} http requests but the fleet recorded {} \
                  successes — counters do not reconcile",
                 report.records.len()
+            );
+        }
+        if let Ok(d) = server.get("degraded").and_then(|v| v.as_i64()) {
+            if (d as usize) < report.degraded {
+                bail!(
+                    "verify: server counted {d} degraded serves but the fleet recorded {} \
+                     — counters do not reconcile",
+                    report.degraded
+                );
+            }
+        }
+        let shed = server.get("deadline_shed").and_then(|v| v.as_i64()).unwrap_or(0)
+            + server.get("deadline_shed_batch").and_then(|v| v.as_i64()).unwrap_or(0);
+        if (shed as usize) < report.deadline_misses {
+            bail!(
+                "verify: server counted {shed} deadline sheds but the fleet saw {} 504s \
+                 — counters do not reconcile",
+                report.deadline_misses
             );
         }
     }
@@ -592,7 +781,7 @@ mod tests {
     use crate::util::stats::percentile_nearest;
 
     fn empty_report(cfg: &LoadgenConfig) -> Report {
-        Report::new(Vec::new(), 7, Some("device 0: connect refused".into()), 0.25, cfg)
+        Report::new(Vec::new(), 7, Some("device 0: connect refused".into()), 0, 0, 0.25, cfg)
     }
 
     #[test]
@@ -651,13 +840,65 @@ mod tests {
             l.local_addr().unwrap()
         };
         let mut client: Option<Client> = None;
-        let err = post_with_retry(&mut client, addr, "/v1/score/m/p8", "{}").unwrap_err();
+        let mut backoff = Backoff::new(Pcg32::new(1, 0));
+        let mut retries = 0usize;
+        let err = post_with_retry(
+            &mut client,
+            addr,
+            "/v1/score/m/p8",
+            "{}",
+            &[],
+            2,
+            &mut backoff,
+            &mut retries,
+        )
+        .unwrap_err();
         let msg = format!("{err:#}");
         assert!(
             msg.contains("after 2 attempts"),
             "connect refusal must burn through the retry budget, got: {msg}"
         );
         assert!(client.is_none());
+        assert_eq!(retries, 1, "two attempts = one counted retry");
+    }
+
+    /// Backoff is a pure function of its PCG stream: same seed, same
+    /// delays; always within [base, cap]; `Retry-After` floors the
+    /// delay (clamped to the cap so a hostile hint can't stall a
+    /// device).
+    #[test]
+    fn backoff_is_seeded_capped_and_honours_retry_after() {
+        let seq = |seed: u64| {
+            let mut b = Backoff::new(Pcg32::new(seed, 5));
+            (0..8).map(|_| b.next_delay(None).as_millis() as u64).collect::<Vec<_>>()
+        };
+        assert_eq!(seq(3), seq(3), "backoff must be deterministic per seed");
+        assert_ne!(seq(3), seq(4), "distinct seeds should jitter differently");
+        for ms in seq(3) {
+            assert!((10..=500).contains(&ms), "delay {ms}ms outside [base, cap]");
+        }
+        let mut b = Backoff::new(Pcg32::new(1, 1));
+        // Retry-After of 1s exceeds the 500ms cap -> clamped exactly.
+        assert_eq!(b.next_delay(Some(1)).as_millis(), 500);
+    }
+
+    #[test]
+    fn response_decode_reads_served_precision_and_degraded() {
+        let plain = r#"{"model":"m","variant":"p8","scores":[1.5,2.0],"prediction":1}"#;
+        let (scores, precision, degraded) = parse_response(plain).unwrap();
+        assert_eq!(scores, vec![1.5, 2.0]);
+        assert_eq!(precision, 8);
+        assert!(!degraded);
+
+        let browned =
+            r#"{"model":"m","variant":"p4","degraded":true,"requested":"p8","scores":[1.0]}"#;
+        let (_, precision, degraded) = parse_response(browned).unwrap();
+        assert_eq!(precision, 4, "must record the precision actually served");
+        assert!(degraded);
+
+        // float is never served by the fleet path; an unparseable
+        // variant label is a hard error, not a silent p-default.
+        assert!(parse_response(r#"{"variant":"float","scores":[1.0]}"#).is_err());
     }
 
     /// The request draw stream is independent of arrival mode and
@@ -684,6 +925,8 @@ mod tests {
                 sample: i,
                 scores: vec![0.0],
                 latency_ms: (i + 1) as f64,
+                precision: 8,
+                degraded: false,
             })
             .collect();
         let lat: Vec<f64> = records.iter().map(|r| r.latency_ms).collect();
@@ -695,6 +938,9 @@ mod tests {
             records,
             errors: 0,
             first_error: None,
+            deadline_misses: 0,
+            degraded: 0,
+            retries: 0,
             wall_s: 1.0,
             server_metrics: None,
             cfg,

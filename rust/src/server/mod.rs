@@ -21,7 +21,10 @@
 //!   shared metrics around the reactor;
 //! * [`loadgen`] — a deterministic (PCG-per-device) fleet simulator
 //!   (closed-loop or open-loop arrivals) with nearest-rank latency
-//!   percentiles.
+//!   percentiles;
+//! * [`chaos`] — a seeded fault-injecting TCP proxy (resets, byte-drip,
+//!   truncation, blackholes, latency) that sits between the fleet and
+//!   the server so every robustness claim is exercised deterministically.
 //!
 //! Scoring rides the coordinator's *streaming* `Service::submit` path,
 //! so concurrent connections coalesce in the dynamic batcher into real
@@ -29,6 +32,7 @@
 //! `submit` of the same sample (`tests/serve_http.rs` enforces this
 //! over real sockets).
 
+pub mod chaos;
 pub mod http;
 pub mod listener;
 pub mod loadgen;

@@ -77,6 +77,13 @@ pub(crate) struct ReactorConfig {
     pub shutdown_grace: Duration,
     /// Trace every Nth pool-dispatched request (0 = tracing off).
     pub trace_sample: u64,
+    /// Deadline budget for requests without an `X-Deadline-Ms` header
+    /// (0 = only the header arms a deadline).
+    pub default_deadline_ms: u64,
+    /// Brownout watermarks on in-flight requests (hysteresis band);
+    /// `brownout_high == 0` disables the controller.
+    pub brownout_high: usize,
+    pub brownout_low: usize,
 }
 
 /// Where sampled trace spans go, one JSON line per span.  Shared with
@@ -220,6 +227,7 @@ pub(crate) fn run(
         let round_t0 = Instant::now();
         if shutdown.load(Ordering::SeqCst) && drain_deadline.is_none() {
             drain_deadline = Some(Instant::now() + cfg.shutdown_grace);
+            metrics.draining.store(true, Ordering::Relaxed);
         }
         let ctx = Ctx {
             svc: &svc,
@@ -271,6 +279,25 @@ pub(crate) fn run(
         // 3. Deadline sweeps (cheap: one pass over the map per tick).
         sweep_deadlines(&mut conns, &ctx);
         metrics.open_connections.store(conns.len() as u64, Ordering::Relaxed);
+
+        // 3b. Brownout controller: a hysteresis band on the in-flight
+        // gauge (the compute-side occupancy signal).  Above the high
+        // watermark the routing layer starts downshifting eligible
+        // score requests to lower-precision variants; the state clears
+        // only once occupancy falls to the low watermark, so the flag
+        // cannot flap at the boundary.  Runs once per loop round, which
+        // bounds controller lag to one poll tick.
+        let inflight = shared.inflight.load(Ordering::SeqCst);
+        metrics.inflight.store(inflight, Ordering::Relaxed);
+        if cfg.brownout_high > 0 {
+            let browned = metrics.brownout.load(Ordering::Relaxed);
+            if !browned && inflight >= cfg.brownout_high as u64 {
+                metrics.brownout.store(true, Ordering::Relaxed);
+                metrics.brownout_entered.fetch_add(1, Ordering::Relaxed);
+            } else if browned && inflight <= cfg.brownout_low as u64 {
+                metrics.brownout.store(false, Ordering::Relaxed);
+            }
+        }
 
         // 4. Build the interest set.
         let mut fds: Vec<PollFd> = Vec::with_capacity(conns.len() + 2);
@@ -491,16 +518,42 @@ fn dispatch(token: u64, conn: &mut Conn, msg: Message, ctx: &Ctx<'_>) {
     let metrics = Arc::clone(ctx.metrics);
     let shared = Arc::clone(ctx.shared);
     let enqueued = Instant::now();
+    // Deadline stamp: the budget counts from the request's *first byte*
+    // (`read_age` spans first byte → complete frame), so a slowly
+    // dripped upload spends its own budget, not the server's.  The
+    // header overrides the configured default; 0/absent means none.
+    let deadline = {
+        let ms = msg
+            .headers
+            .get("x-deadline-ms")
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(ctx.cfg.default_deadline_ms);
+        (ms > 0).then(|| {
+            let arrival = enqueued - msg.read_age.unwrap_or(Duration::ZERO);
+            arrival + Duration::from_millis(ms)
+        })
+    };
     ctx.pool.execute(move || {
         let mut ht = if sampled { Some(HandlerTrace::default()) } else { None };
         if let Some(t) = ht.as_mut() {
             t.queue_us = enqueued.elapsed().as_micros() as u64;
         }
-        // Panics become a 500 so a handler bug can neither kill the
-        // worker nor leak the in-flight slot (or the connection).
-        let (resp, close) =
-            catch_unwind(AssertUnwindSafe(|| routes::respond(&svc, &metrics, msg, ht.as_mut())))
-                .unwrap_or_else(|_| (Response::error(500, "handler panicked"), true));
+        // Shed already-expired work before spending any compute on it:
+        // the client has given up, so execution would only add queueing
+        // delay for everyone else.  Counted separately from handler
+        // responses so `/metrics` can tell sheds from slow backends.
+        let expired = deadline.map(|d| Instant::now() >= d).unwrap_or(false);
+        let (resp, close) = if expired {
+            metrics.deadline_shed.fetch_add(1, Ordering::Relaxed);
+            (Response::error(504, "deadline expired before execution"), false)
+        } else {
+            // Panics become a 500 so a handler bug can neither kill the
+            // worker nor leak the in-flight slot (or the connection).
+            catch_unwind(AssertUnwindSafe(|| {
+                routes::respond(&svc, &metrics, msg, deadline, ht.as_mut())
+            }))
+            .unwrap_or_else(|_| (Response::error(500, "handler panicked"), true))
+        };
         // Publish the completion BEFORE dropping the in-flight slot:
         // shutdown exits once inflight hits 0 with nothing pending, so
         // the reverse order could drop a finished response on the

@@ -3,6 +3,7 @@
 //! | endpoint | method | body | backed by |
 //! |---|---|---|---|
 //! | `/healthz` | GET | — | service liveness |
+//! | `/readyz` | GET | — | readiness: 503 while draining, over capacity, or in brownout |
 //! | `/v1/models` | GET | — | the artifact manifest |
 //! | `/metrics` | GET | — | coordinator + server counters (JSON; `?format=prometheus` for text exposition) |
 //! | `/v1/score/{model}/{precision}` | POST | `{"x": [...]}` or `{"xs": [[...], ...]}` | `Service::submit` (streaming path) |
@@ -21,7 +22,7 @@ use anyhow::{anyhow, bail, Result};
 use super::http::{Message, Request, Response};
 use super::listener::ServerMetrics;
 use crate::coordinator::router::Key;
-use crate::coordinator::service::Service;
+use crate::coordinator::service::{Service, ERR_DEADLINE};
 use crate::util::json::Value;
 use crate::util::stats::Reservoir;
 use crate::util::telemetry::{self, prom_counter, prom_gauge};
@@ -51,17 +52,22 @@ pub struct HandlerTrace {
 /// The reactor's pool-job entry point: parse a framed message into a
 /// request, route it, and report whether the connection should close
 /// afterwards (client `Connection: close`, or an unparseable request).
+/// `deadline` is the request's absolute compute deadline (from
+/// `X-Deadline-Ms` or the server default), propagated into the
+/// coordinator so the dynamic batcher can shed the request at dispatch
+/// instead of penalising its batch siblings.
 /// `trace` is `Some` when the request was sampled for a trace span.
 pub fn respond(
     svc: &Service,
     metrics: &ServerMetrics,
     msg: Message,
+    deadline: Option<Instant>,
     mut trace: Option<&mut HandlerTrace>,
 ) -> (Response, bool) {
     let (resp, close) = match Request::from_message(msg) {
         Ok(req) => {
             let close = req.wants_close();
-            (route(svc, metrics, &req, trace.as_deref_mut()), close)
+            (route(svc, metrics, &req, deadline, trace.as_deref_mut()), close)
         }
         Err(e) => (Response::error(400, &format!("{e:#}")), true),
     };
@@ -76,6 +82,7 @@ pub fn route(
     svc: &Service,
     metrics: &ServerMetrics,
     req: &Request,
+    deadline: Option<Instant>,
     trace: Option<&mut HandlerTrace>,
 ) -> Response {
     // The query string only selects representations (`/metrics`), so
@@ -86,19 +93,20 @@ pub fn route(
     };
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => healthz(svc),
+        ("GET", "/readyz") => readyz(metrics),
         ("GET", "/v1/models") => models(svc),
         ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => {
             metrics_prometheus(svc, metrics)
         }
         ("GET", "/metrics") => metrics_snapshot(svc, metrics),
-        (_, "/healthz") | (_, "/v1/models") | (_, "/metrics") => {
+        (_, "/healthz") | (_, "/readyz") | (_, "/v1/models") | (_, "/metrics") => {
             Response::error(405, &format!("{path} expects GET"))
         }
         (method, path) if path.starts_with("/v1/score/") => {
             if method != "POST" {
                 return Response::error(405, "scoring expects POST");
             }
-            match score(svc, metrics, req, path, trace) {
+            match score(svc, metrics, req, path, deadline, trace) {
                 Ok(resp) => resp,
                 Err(e) => e,
             }
@@ -115,6 +123,39 @@ fn healthz(svc: &Service) -> Response {
             ("models", Value::from(svc.models.len())),
         ]),
     )
+}
+
+/// Readiness is distinct from liveness: the process can be healthy yet
+/// unwilling to take traffic.  503s here tell a load balancer to route
+/// around this instance; the body says which gate tripped.
+fn readyz(metrics: &ServerMetrics) -> Response {
+    let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    let mut reasons: Vec<&str> = Vec::new();
+    if metrics.draining.load(Ordering::Relaxed) {
+        reasons.push("draining");
+    }
+    let conn_limit = g(&metrics.limit_connections);
+    if conn_limit > 0 && g(&metrics.open_connections) >= conn_limit {
+        reasons.push("connections at capacity");
+    }
+    let queue_limit = g(&metrics.limit_queued);
+    if queue_limit > 0 && g(&metrics.inflight) >= queue_limit {
+        reasons.push("compute queue full");
+    }
+    if metrics.brownout.load(Ordering::Relaxed) {
+        reasons.push("brownout");
+    }
+    if reasons.is_empty() {
+        Response::json(200, &Value::obj(vec![("status", Value::from("ready"))]))
+    } else {
+        Response::json(
+            503,
+            &Value::obj(vec![
+                ("status", Value::from("not ready")),
+                ("reasons", Value::Arr(reasons.into_iter().map(Value::from).collect())),
+            ]),
+        )
+    }
 }
 
 fn models(svc: &Service) -> Response {
@@ -191,6 +232,13 @@ fn metrics_prometheus(svc: &Service, server: &ServerMetrics) -> Response {
     prom_counter(&mut out, "pbsp_server_evicted_idle_total", "connections reaped past their keep-alive budget", c(&server.evicted_idle));
     prom_counter(&mut out, "pbsp_server_evicted_read_total", "connections cut off mid-message past the slow-loris deadline", c(&server.evicted_read));
     prom_counter(&mut out, "pbsp_server_evicted_write_total", "connections evicted for a stalled response write", c(&server.evicted_write));
+    prom_counter(&mut out, "pbsp_server_deadline_shed_total", "requests shed at pool pickup, already past their deadline", c(&server.deadline_shed));
+    prom_counter(&mut out, "pbsp_server_deadline_shed_batch_total", "requests shed inside the dynamic batcher past their deadline", c(&server.deadline_shed_batch));
+    prom_counter(&mut out, "pbsp_server_degraded_total", "requests served at a lower precision under brownout", c(&server.degraded));
+    prom_counter(&mut out, "pbsp_server_brownout_entered_total", "times the brownout controller tripped its high watermark", c(&server.brownout_entered));
+    prom_gauge(&mut out, "pbsp_server_brownout", "1 while precision degradation is active", server.brownout.load(Ordering::Relaxed) as u8 as f64);
+    prom_gauge(&mut out, "pbsp_server_draining", "1 once graceful shutdown has begun", server.draining.load(Ordering::Relaxed) as u8 as f64);
+    prom_gauge(&mut out, "pbsp_server_inflight", "requests queued or executing in the compute pool", c(&server.inflight) as f64);
     let m = svc.metrics.lock().unwrap().clone();
     prom_counter(&mut out, "pbsp_coordinator_batches_total", "dynamic batches executed", m.batches);
     prom_counter(&mut out, "pbsp_coordinator_compiles_total", "executable compiles (PJRT loads + ISS codegens)", m.compiles);
@@ -248,6 +296,19 @@ pub fn parse_score_path(path: &str) -> Result<(String, String)> {
     Ok((model.to_string(), variant))
 }
 
+/// The precision ladder the brownout controller walks, highest cost
+/// first.  `float` is never degraded (it is the reference
+/// representation a caller asked for explicitly), and `p4` is the floor.
+const PRECISION_LADDER: [&str; 4] = ["p32", "p16", "p8", "p4"];
+
+/// Under brownout, map a requested variant to the next-lower precision
+/// variant the model actually ships.  `None` means the request is not
+/// eligible: float, already at the floor, or no lower variant exists.
+fn downshift_variant(requested: &str, has: impl Fn(&str) -> bool) -> Option<&'static str> {
+    let pos = PRECISION_LADDER.iter().position(|&v| v == requested)?;
+    PRECISION_LADDER[pos + 1..].iter().copied().find(|v| has(v))
+}
+
 /// Errors are returned as ready-to-send responses so `route` can stay
 /// a total function.
 fn score(
@@ -255,6 +316,7 @@ fn score(
     metrics: &ServerMetrics,
     req: &Request,
     path: &str,
+    deadline: Option<Instant>,
     mut trace: Option<&mut HandlerTrace>,
 ) -> Result<Response, Response> {
     let t_parse = Instant::now();
@@ -270,6 +332,18 @@ fn score(
             &format!("model {model_name:?} has no variant {variant:?}"),
         ));
     }
+    // Brownout downshift: while the controller has the flag up, serve
+    // eligible requests at the next-lower precision the model ships.
+    // The response is labelled with the precision actually served, so a
+    // caller verifying bit-identity replays against the served variant.
+    let served = if metrics.brownout.load(Ordering::Relaxed) {
+        downshift_variant(&variant, |v| entry.hlo.contains_key(v))
+            .map(str::to_string)
+            .unwrap_or_else(|| variant.clone())
+    } else {
+        variant.clone()
+    };
+    let degraded = served != variant;
     let body = req.body_str().map_err(|e| Response::error(400, &format!("{e:#}")))?;
     let v = Value::parse(body).map_err(|e| Response::error(400, &format!("bad JSON: {e:#}")))?;
     let (rows, single) = parse_rows(&v).map_err(|e| Response::error(400, &format!("{e:#}")))?;
@@ -285,15 +359,17 @@ fn score(
     if let Some(t) = trace.as_deref_mut() {
         t.parse_us = t_parse.elapsed().as_micros() as u64;
         t.model = model_name.clone();
-        t.variant = variant.clone();
+        t.variant = served.clone();
     }
     // Streaming path: submit every sample, then gather — concurrent
-    // connections coalesce in the dynamic batcher meanwhile.
-    let key = Key::new(&model_name, &variant);
+    // connections coalesce in the dynamic batcher meanwhile.  The
+    // deadline rides along so the batcher can shed this request at
+    // dispatch without holding up its batch siblings.
+    let key = Key::new(&model_name, &served);
     let mut pending = Vec::with_capacity(rows.len());
     for row in rows {
         let rx = svc
-            .submit(key.clone(), row)
+            .submit_with_deadline(key.clone(), row, deadline)
             .map_err(|e| Response::error(500, &format!("{e:#}")))?;
         pending.push(rx);
     }
@@ -308,17 +384,35 @@ fn score(
                 }
                 scores.push(s.scores);
             }
+            Ok(Err(e)) if e == ERR_DEADLINE => {
+                metrics.deadline_shed_batch.fetch_add(1, Ordering::Relaxed);
+                return Err(Response::error(504, ERR_DEADLINE));
+            }
             Ok(Err(e)) => return Err(Response::error(500, &e)),
             Err(_) => return Err(Response::error(500, "runtime worker gone")),
         }
     }
     metrics.add_scored(scores.len() as u64);
+    if degraded {
+        metrics.degraded.fetch_add(1, Ordering::Relaxed);
+        telemetry::global()
+            .counter_with(
+                "pbsp_brownout_degraded_total",
+                &[("model", &model_name)],
+                "requests served at a lower precision under brownout",
+            )
+            .inc();
+    }
     let model = svc.model(&model_name).map_err(|e| Response::error(500, &format!("{e:#}")))?;
     let preds: Vec<i64> = scores.iter().map(|s| model.predict(s)).collect();
-    let common = vec![
+    let mut common = vec![
         ("model", Value::from(model_name.as_str())),
-        ("variant", Value::from(variant.as_str())),
+        ("variant", Value::from(served.as_str())),
     ];
+    if degraded {
+        common.push(("degraded", Value::Bool(true)));
+        common.push(("requested", Value::from(variant.as_str())));
+    }
     let resp = if single {
         let mut pairs = common;
         pairs.push(("scores", Value::arr_f64(&scores[0])));
@@ -393,6 +487,23 @@ mod tests {
 
         assert!(parse_rows(&Value::parse(r#"{"xs": []}"#).unwrap()).is_err());
         assert!(parse_rows(&Value::parse(r#"{"y": [1]}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn downshift_walks_the_ladder() {
+        let all = |v: &str| ["p32", "p16", "p8", "p4"].contains(&v);
+        assert_eq!(downshift_variant("p32", all), Some("p16"));
+        assert_eq!(downshift_variant("p16", all), Some("p8"));
+        assert_eq!(downshift_variant("p8", all), Some("p4"));
+        // The floor and the reference representation are not eligible.
+        assert_eq!(downshift_variant("p4", all), None);
+        assert_eq!(downshift_variant("float", all), None);
+        // Holes in the ladder are skipped, not served blindly.
+        let sparse = |v: &str| v == "p32" || v == "p4";
+        assert_eq!(downshift_variant("p32", sparse), Some("p4"));
+        // No lower variant shipped at all -> not eligible.
+        let only32 = |v: &str| v == "p32";
+        assert_eq!(downshift_variant("p32", only32), None);
     }
 
     #[test]

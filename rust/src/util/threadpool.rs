@@ -47,6 +47,7 @@ pub struct ThreadPool {
     /// process shares them; see `util::telemetry`).
     depth: Arc<Gauge>,
     helped: Arc<Counter>,
+    panics: Arc<Counter>,
 }
 
 /// Worker count used when no explicit `--threads` is given: the
@@ -102,6 +103,10 @@ impl ThreadPool {
             "pbsp_pool_help_runs_total",
             "jobs run by gathering threads helping drain the queue (par_map)",
         );
+        let panics = reg.counter(
+            "pbsp_pool_job_panics_total",
+            "pool jobs that panicked and were contained (worker survived)",
+        );
         let (tx, rx) = channel::<Job>();
         let queue = Arc::new(Mutex::new(rx));
         let workers = (0..threads)
@@ -109,6 +114,7 @@ impl ThreadPool {
                 let queue = Arc::clone(&queue);
                 let depth = Arc::clone(&depth);
                 let jobs = Arc::clone(&jobs);
+                let panics = Arc::clone(&panics);
                 std::thread::Builder::new()
                     .name(format!("pbsp-worker-{i}"))
                     .spawn(move || loop {
@@ -116,7 +122,16 @@ impl ThreadPool {
                         match job {
                             Ok(job) => {
                                 depth.sub(1);
-                                job();
+                                // Contain handler panics: a panicking job
+                                // must not take the worker thread (and the
+                                // pool's capacity) down with it.  `par_map`
+                                // jobs carry their own catch_unwind and
+                                // report panics through their result
+                                // channel; this outer catch only sees
+                                // panics from bare `execute` jobs.
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panics.inc();
+                                }
                                 jobs.inc();
                             }
                             Err(_) => break, // sender dropped: shut down
@@ -125,7 +140,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), queue, workers, depth, helped }
+        ThreadPool { tx: Some(tx), queue, workers, depth, helped, panics }
     }
 
     /// Pool sized to the machine (at least 2).
@@ -160,7 +175,9 @@ impl ThreadPool {
         match job {
             Some(job) => {
                 self.depth.sub(1);
-                job();
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    self.panics.inc();
+                }
                 self.helped.inc();
                 true
             }
@@ -352,6 +369,37 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.par_map((0..20).collect::<Vec<u64>>(), |i| i * i);
         assert_eq!(out, (0..20).map(|i| i * i).collect::<Vec<u64>>());
+    }
+
+    /// Satellite (ISSUE 10): a panicking `execute` job is contained by
+    /// the worker — the pool keeps serving subsequent jobs at full
+    /// capacity.  One worker makes the regression sharp: before the
+    /// catch_unwind the panic killed the only worker and the follow-up
+    /// jobs hung forever.
+    #[test]
+    fn execute_survives_panicking_job() {
+        let pool = ThreadPool::new(1);
+        let before = telemetry::global()
+            .counter("pbsp_pool_job_panics_total", "")
+            .get();
+        pool.execute(|| panic!("handler blew up"));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = channel();
+        for _ in 0..16 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        drop(tx);
+        for _ in rx {}
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        let after = telemetry::global()
+            .counter("pbsp_pool_job_panics_total", "")
+            .get();
+        assert!(after > before, "contained panic must be counted");
     }
 
     #[test]

@@ -1,0 +1,172 @@
+//! Overload-surface tests (ISSUE 10): the split health endpoints
+//! (`/healthz` liveness vs `/readyz` readiness with reasons), the
+//! server-side default deadline and its per-request header override,
+//! and the coordinator-level guarantee that a deadline-shed request
+//! never penalizes its batch siblings.
+//!
+//! Skips cleanly when no artifact tree matches the compiled backend
+//! (same policy as `serve_http.rs`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use printed_bespoke::coordinator::router::Key;
+use printed_bespoke::coordinator::service::{Service, ServiceConfig, ERR_DEADLINE};
+use printed_bespoke::ml::dataset::Dataset;
+use printed_bespoke::ml::manifest::Manifest;
+use printed_bespoke::runtime::pjrt::Runtime;
+use printed_bespoke::server::http::Client;
+use printed_bespoke::server::{Server, ServerConfig};
+use printed_bespoke::util::json::Value;
+
+fn manifest() -> Option<Manifest> {
+    let dir = printed_bespoke::artifacts_dir().ok()?;
+    let man = Manifest::load(&dir).ok()?;
+    if Runtime::is_stub() != printed_bespoke::ml::fixtures::manifest_is_stub(&man) {
+        eprintln!("skipping: artifact tree does not match the compiled runtime backend");
+        return None;
+    }
+    Some(man)
+}
+
+fn start_with(svc_cfg: ServiceConfig, scfg: ServerConfig) -> (Arc<Service>, Server) {
+    let svc = Arc::new(Service::start(svc_cfg).unwrap());
+    let server = Server::start(Arc::clone(&svc), scfg).unwrap();
+    (svc, server)
+}
+
+/// `/healthz` answers "is the process alive", `/readyz` answers "should
+/// a balancer send traffic here" — at the connection cap they diverge:
+/// liveness stays 200 while readiness turns 503 and names the reason.
+#[test]
+fn readyz_reports_connection_capacity() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (_svc, mut server) =
+        start_with(ServiceConfig::default(), ServerConfig { max_connections: 1, ..ServerConfig::default() });
+    let mut c = Client::connect(server.addr()).unwrap();
+    // This client *is* the capacity: open == limit == 1.
+    assert_eq!(c.get("/healthz").unwrap().0, 200, "liveness must not care about capacity");
+    let (status, body) = c.get("/readyz").unwrap();
+    assert_eq!(status, 503, "at the connection cap readiness must fail: {body}");
+    assert!(body.contains("connections at capacity"), "reason missing: {body}");
+    // Readiness is a GET-only resource.
+    let (status, _, body) = c.request_meta("POST", "/readyz", Some("{}"), &[]).unwrap();
+    assert_eq!(status, 405, "POST /readyz must be rejected: {body}");
+    server.shutdown();
+}
+
+/// Draining flips readiness off (with the reason) without touching
+/// liveness, and readiness recovers when the flag clears.  The flag is
+/// driven directly because a real drain stops reading new requests —
+/// this exercises the `/readyz` decision itself.
+#[test]
+fn readyz_flags_draining_and_recovers() {
+    if manifest().is_none() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (_svc, mut server) = start_with(ServiceConfig::default(), ServerConfig::default());
+    let mut c = Client::connect(server.addr()).unwrap();
+    let (status, body) = c.get("/readyz").unwrap();
+    assert_eq!(status, 200, "fresh server must be ready: {body}");
+    assert!(body.contains("ready"), "body: {body}");
+
+    server.metrics.draining.store(true, Ordering::Relaxed);
+    let (status, body) = c.get("/readyz").unwrap();
+    assert_eq!(status, 503);
+    assert!(body.contains("draining"), "reason missing: {body}");
+    assert_eq!(c.get("/healthz").unwrap().0, 200, "liveness must survive a drain");
+
+    server.metrics.draining.store(false, Ordering::Relaxed);
+    let (status, _) = c.get("/readyz").unwrap();
+    assert_eq!(status, 200, "readiness must recover once the drain flag clears");
+    server.shutdown();
+}
+
+/// The coordinator contract behind the 504 path: a request whose
+/// deadline passes in the dynamic batcher is shed with `ERR_DEADLINE`
+/// *before* execution, and its batch sibling scores exactly as if the
+/// dead request had never been enqueued.
+#[test]
+fn batcher_shed_spares_batch_siblings() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let svc =
+        Service::start(ServiceConfig { linger_ms: 200, ..ServiceConfig::default() }).unwrap();
+    let model = man.models[0].name.clone();
+    let ds = Dataset::load(man.data_dir(), &man.models[0].dataset, "test").unwrap();
+    let key = Key::precision(&model, 8);
+
+    // Already-expired deadline: dead on arrival at batch dispatch.
+    let rx_dead = svc
+        .submit_with_deadline(key.clone(), ds.x[0].clone(), Some(Instant::now()))
+        .unwrap();
+    // Sibling lands in the same linger window, same batch.
+    let rx_live = svc.submit(key.clone(), ds.x[1].clone()).unwrap();
+
+    let dead = rx_dead.recv().unwrap();
+    assert_eq!(dead.unwrap_err(), ERR_DEADLINE);
+    let live = rx_live.recv().unwrap().unwrap();
+    assert_eq!(live.batch, 1, "dead sibling must leave the batch before execution");
+    let direct = svc.scores(&key, &[ds.x[1].clone()]).unwrap();
+    assert_eq!(live.scores, direct[0], "sibling scores must be untouched by the shed");
+}
+
+/// `--default-deadline-ms` stamps a budget on header-less requests, and
+/// an explicit `X-Deadline-Ms` overrides it: a generous header rides
+/// out a pool stall that kills the server-default request behind it.
+#[test]
+fn server_default_deadline_applies_and_header_overrides() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // One pool thread + a long linger: the first request occupies the
+    // pool deterministically while the second waits, expired, behind it.
+    let (_svc, mut server) = start_with(
+        ServiceConfig { linger_ms: 300, ..ServiceConfig::default() },
+        ServerConfig { http_threads: 1, default_deadline_ms: 50, ..ServerConfig::default() },
+    );
+    let model = man.models[0].name.clone();
+    let ds = Dataset::load(man.data_dir(), &man.models[0].dataset, "test").unwrap();
+    let body = {
+        let row = Value::Arr(ds.x[0].iter().map(|&f| Value::Num(f as f64)).collect());
+        Value::obj(vec![("x", row)]).to_string()
+    };
+    let addr = server.addr();
+    let path = format!("/v1/score/{model}/p8");
+
+    // Blocker: explicit 10s header beats the 50 ms server default, so
+    // it survives its own ~300 ms linger on the single pool thread.
+    let blocker = {
+        let (path, body) = (path.clone(), body.clone());
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            let (status, _, text) = c
+                .request_meta("POST", &path, Some(&body), &[("x-deadline-ms", "10000".to_string())])
+                .unwrap();
+            (status, text)
+        })
+    };
+    std::thread::sleep(Duration::from_millis(100));
+
+    // No header: the server default (50 ms) applies, and the pool stays
+    // busy for ~200 ms more — expired at pickup, shed with a 504.
+    let mut c = Client::connect(addr).unwrap();
+    let (status, _, text) = c.request_meta("POST", &path, Some(&body), &[]).unwrap();
+    assert_eq!(status, 504, "server-default deadline must shed: {text}");
+    assert!(text.contains("deadline"), "504 body must name the deadline: {text}");
+    assert!(server.metrics.deadline_shed.load(Ordering::Relaxed) >= 1);
+
+    let (status, text) = blocker.join().unwrap();
+    assert_eq!(status, 200, "header override must outlive the stall: {text}");
+    // The shed kept the connection: same client keeps working.
+    assert_eq!(c.get("/healthz").unwrap().0, 200);
+    server.shutdown();
+}

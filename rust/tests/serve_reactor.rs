@@ -2,7 +2,9 @@
 //! beyond the compute pool, non-blocking refusals, pipelining and
 //! byte-dripped uploads through the readiness loop, slow-loris
 //! eviction, queue-level backpressure, drain-on-shutdown, and the
-//! fleet-1k bit-identity gate via `loadgen::verify`.
+//! fleet-1k bit-identity gate via `loadgen::verify`; plus the ISSUE 10
+//! overload surface — deadline shedding before compute and the
+//! brownout precision-downshift hysteresis.
 //!
 //! Skips cleanly when no artifact tree matches the compiled backend
 //! (same policy as `serve_http.rs`), and the fd-hungry fleet tests skip
@@ -374,7 +376,7 @@ fn fleet_1k_bit_identical_via_loadgen_verify() {
     let report = loadgen::run(server.addr(), &cfg).unwrap();
     assert_eq!(report.errors, 0, "fleet saw errors: {}", report.summary());
     assert_eq!(report.records.len(), FLEET);
-    let checked = loadgen::verify(&svc, &report, cfg.precision).unwrap();
+    let checked = loadgen::verify(&svc, &report).unwrap();
     assert_eq!(checked, FLEET, "verify must cover every served request");
 
     // Open-loop arrivals through the same frontend: identical draws,
@@ -389,7 +391,165 @@ fn fleet_1k_bit_identical_via_loadgen_verify() {
     let report = loadgen::run(server.addr(), &open).unwrap();
     assert_eq!(report.errors, 0, "open-loop fleet saw errors: {}", report.summary());
     assert_eq!(report.records.len(), 64 * 4);
-    let checked = loadgen::verify(&svc, &report, open.precision).unwrap();
+    let checked = loadgen::verify(&svc, &report).unwrap();
     assert_eq!(checked, 64 * 4);
+    server.shutdown();
+}
+
+/// Deadline shedding (ISSUE 10): a request whose `X-Deadline-Ms`
+/// budget is spent while it waits for the compute pool is 504'd at
+/// pickup — before it ever reaches the coordinator — and the
+/// connection survives.
+#[test]
+fn expired_deadline_is_shed_before_compute() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // One pool thread + a long batcher linger: the blocker occupies the
+    // lone thread long enough that the doomed request's 1 ms budget is
+    // certainly spent by the time it is picked up.
+    let svc_cfg = ServiceConfig { linger_ms: 300, ..ServiceConfig::default() };
+    let scfg = ServerConfig { http_threads: 1, ..ServerConfig::default() };
+    let (svc, mut server) = start_with(svc_cfg, scfg);
+    let model = man.models[0].name.clone();
+    let ds = Dataset::load(man.data_dir(), &man.models[0].dataset, "test").unwrap();
+    let body = {
+        let row = Value::Arr(ds.x[0].iter().map(|&f| Value::Num(f as f64)).collect());
+        Value::obj(vec![("x", row)]).to_string()
+    };
+    let addr = server.addr();
+    let requests_before = svc.metrics.lock().unwrap().requests;
+
+    let blocker = {
+        let path = format!("/v1/score/{model}/p8");
+        let body = body.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr).unwrap();
+            c.post(&path, &body).unwrap().0
+        })
+    };
+    // Let the blocker reach the pool before the doomed request arrives.
+    std::thread::sleep(Duration::from_millis(50));
+
+    let mut c = Client::connect(addr).unwrap();
+    let (status, _headers, text) = c
+        .request_meta(
+            "POST",
+            &format!("/v1/score/{model}/p8"),
+            Some(&body),
+            &[("x-deadline-ms", "1".to_string())],
+        )
+        .unwrap();
+    assert_eq!(status, 504, "expired request must be shed: {text}");
+    assert!(text.contains("deadline"), "504 names its cause: {text}");
+    assert!(relaxed(&server.metrics.deadline_shed) >= 1);
+
+    assert_eq!(blocker.join().unwrap(), 200, "the in-budget request is unaffected");
+    // The shed request never touched the coordinator: only the blocker
+    // was submitted.
+    let requests_after = svc.metrics.lock().unwrap().requests;
+    assert_eq!(
+        requests_after,
+        requests_before + 1,
+        "a shed request must not reach the compute path"
+    );
+    // A 504 is the request's failure, not the connection's.
+    assert_eq!(c.get("/healthz").unwrap().0, 200, "connection must survive the 504");
+    server.shutdown();
+}
+
+/// Brownout (ISSUE 10): past the high watermark of in-flight requests
+/// the router serves the next-lower precision — labelled, counted, and
+/// bit-identical to a direct low-precision score — and recovers at the
+/// low watermark (hysteresis), after which the same request is served
+/// at full precision again.
+#[test]
+fn brownout_downshifts_precision_with_hysteresis() {
+    let Some(man) = manifest() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use printed_bespoke::coordinator::router::Key;
+    // A long linger keeps each scoring request in flight ~500 ms, so 5
+    // barrier-synchronized posts hold the gauge over the watermark long
+    // enough to probe the browned-out window deterministically.
+    let svc_cfg = ServiceConfig { linger_ms: 500, max_batch: 1_000, ..ServiceConfig::default() };
+    let scfg = ServerConfig {
+        http_threads: 8,
+        brownout_high: 3,
+        brownout_low: 1,
+        ..ServerConfig::default()
+    };
+    let (svc, mut server) = start_with(svc_cfg, scfg);
+    let model = man.models[0].name.clone();
+    let ds = Dataset::load(man.data_dir(), &man.models[0].dataset, "test").unwrap();
+    let body = {
+        let row = Value::Arr(ds.x[0].iter().map(|&f| Value::Num(f as f64)).collect());
+        Value::obj(vec![("x", row)]).to_string()
+    };
+    let addr = server.addr();
+    let barrier = Arc::new(Barrier::new(5));
+    let blockers: Vec<_> = (0..5)
+        .map(|_| {
+            let barrier = Arc::clone(&barrier);
+            let path = format!("/v1/score/{model}/p8");
+            let body = body.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                barrier.wait();
+                c.post(&path, &body).unwrap().0
+            })
+        })
+        .collect();
+    // The reactor's controller trips within a poll round of the gauge
+    // crossing the high watermark.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !server.metrics.brownout.load(std::sync::atomic::Ordering::Relaxed) {
+        assert!(
+            Instant::now() < deadline,
+            "brownout never tripped (inflight {})",
+            relaxed(&server.metrics.inflight)
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(relaxed(&server.metrics.brownout_entered) >= 1);
+
+    let mut probe = Client::connect(addr).unwrap();
+    // Readiness reflects the brownout (liveness stays green).
+    let (s, text) = probe.get("/readyz").unwrap();
+    assert_eq!(s, 503, "readyz must refuse under brownout: {text}");
+    assert!(text.contains("brownout"), "readyz names its reason: {text}");
+    assert_eq!(probe.get("/healthz").unwrap().0, 200);
+
+    // A p8 request is downshifted to p4 — labelled with both variants,
+    // and bit-identical to scoring the same sample at p4 directly.
+    let (status, text) = probe.post(&format!("/v1/score/{model}/p8"), &body).unwrap();
+    assert_eq!(status, 200, "degraded serve still succeeds: {text}");
+    let v = Value::parse(&text).unwrap();
+    assert_eq!(v.get("variant").unwrap().as_str().unwrap(), "p4");
+    assert!(v.get("degraded").unwrap().as_bool().unwrap());
+    assert_eq!(v.get("requested").unwrap().as_str().unwrap(), "p8");
+    let served = v.get("scores").unwrap().as_f64_vec().unwrap();
+    let direct = svc.scores(&Key::precision(&model, 4), &[ds.x[0].clone()]).unwrap();
+    assert_eq!(served, direct[0], "degraded response must be bit-identical to the p4 variant");
+    assert!(relaxed(&server.metrics.degraded) >= 1);
+
+    for b in blockers {
+        assert_eq!(b.join().unwrap(), 200, "browned-out siblings still succeed at p8");
+    }
+    // Hysteresis: the flag clears once in-flight falls to the low
+    // watermark — and the same request is full-precision again.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics.brownout.load(std::sync::atomic::Ordering::Relaxed) {
+        assert!(Instant::now() < deadline, "brownout never cleared after drain");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (status, text) = probe.post(&format!("/v1/score/{model}/p8"), &body).unwrap();
+    assert_eq!(status, 200);
+    let v = Value::parse(&text).unwrap();
+    assert_eq!(v.get("variant").unwrap().as_str().unwrap(), "p8");
+    assert!(v.opt("degraded").is_none(), "undegraded responses must not carry the flag");
+    assert_eq!(probe.get("/readyz").unwrap().0, 200, "readyz recovers with the flag");
     server.shutdown();
 }
